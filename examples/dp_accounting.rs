@@ -1,0 +1,97 @@
+//! Differential-privacy accounting walkthrough (§4.2 + §5.1).
+//!
+//! Reproduces the paper's privacy claim: "a clipping norm of 0.5 and
+//! noise scale of 0.08; using the RDP accountant ... considering there is
+//! a pool of 100 clients, we get a global ε value of 2, with δ = 1e-5"
+//! — and shows how ε evolves per round and scales with σ and cohort size.
+//!
+//! Run: `cargo run --release --example dp_accounting`
+
+use florida::dp::{accountant::rdp_step, DpConfig, GaussianMechanism, RdpAccountant};
+use florida::util::{stats, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let delta = 1e-5;
+
+    // --- The paper's exact Fig-11 configuration --------------------------
+    // 32 clients per iteration from a pool of 100 → q = 0.32; 10 rounds.
+    println!("=== Paper §5.1 configuration (clip 0.5, σ=0.08, q=32/100, 10 rounds) ===");
+    let cfg = DpConfig::paper_local();
+    let mut acct = RdpAccountant::new();
+    println!("{:>6} {:>12}", "round", "epsilon");
+    for round in 1..=10u64 {
+        acct.step(0.32, cfg.noise_multiplier)?;
+        let (eps, _) = acct.epsilon(delta)?;
+        println!("{round:>6} {eps:>12.4}");
+    }
+    let (eps10, order) = acct.epsilon(delta)?;
+    println!(
+        "\nafter 10 rounds: ε = {eps10:.3} at δ = {delta} (optimal Rényi order {order})"
+    );
+    println!("paper reports ε ≈ 2 for this configuration.");
+
+    // Reconciliation: exact RDP accounting of the *stated* parameters
+    // (σ = 0.08, q = 0.32, 10 rounds) yields ε in the thousands — σ=0.08
+    // is far too little noise for any meaningful guarantee. Find the σ
+    // that actually delivers ε ≈ 2, which is presumably closer to what
+    // the paper's Opacus invocation measured.
+    let mut lo = 0.1f64;
+    let mut hi = 10.0f64;
+    for _ in 0..50 {
+        let mid = 0.5 * (lo + hi);
+        let mut a = RdpAccountant::new();
+        a.steps(10, 0.32, mid)?;
+        if a.epsilon(delta)?.0 > 2.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    println!(
+        "reconciliation: ε = 2.0 @ δ=1e-5 over 10 rounds (q=0.32) requires σ ≈ {:.2};\n\
+         the stated σ = 0.08 gives ε ≈ {eps10:.0}. See EXPERIMENTS.md §Fig11-DP for\n\
+         the full discrepancy analysis.\n",
+        0.5 * (lo + hi)
+    );
+
+    // --- Sensitivity: ε vs σ at fixed rounds ------------------------------
+    println!("=== ε after 10 rounds vs noise multiplier (q=0.32) ===");
+    println!("{:>8} {:>12}", "sigma", "epsilon");
+    for sigma in [0.08, 0.3, 0.5, 0.8, 1.0, 2.0] {
+        let mut a = RdpAccountant::new();
+        a.steps(10, 0.32, sigma)?;
+        let (eps, _) = a.epsilon(delta)?;
+        println!("{sigma:>8.2} {:>12.4}", eps);
+    }
+
+    // --- Sensitivity: ε vs sampling rate ----------------------------------
+    println!("\n=== ε after 10 rounds vs cohort/pool ratio (σ=1.0) ===");
+    println!("{:>8} {:>12}", "q", "epsilon");
+    for q in [0.05, 0.1, 0.32, 0.5, 1.0] {
+        let mut a = RdpAccountant::new();
+        a.steps(10, q, 1.0)?;
+        let (eps, _) = a.epsilon(delta)?;
+        println!("{q:>8.2} {:>12.4}", eps);
+    }
+
+    // --- Single-step RDP curve --------------------------------------------
+    println!("\n=== RDP(α) of one subsampled-Gaussian step (q=0.32, σ=1.0) ===");
+    for alpha in [2u32, 4, 8, 16, 32, 64] {
+        println!("  α={alpha:>3}: {:.6}", rdp_step(0.32, 1.0, alpha));
+    }
+
+    // --- The mechanism itself: clipping + noise in action -----------------
+    println!("\n=== Gaussian mechanism on a synthetic pseudo-gradient ===");
+    let mut rng = Rng::new(7);
+    let mut delta_vec: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32 * 0.01).collect();
+    let pre = stats::l2_norm(&delta_vec);
+    let clipped_norm = GaussianMechanism::clip(&mut delta_vec, cfg.clip_norm);
+    println!("pre-clip L2 = {pre:.4} → clip at {} (was {clipped_norm:.4})", cfg.clip_norm);
+    GaussianMechanism::add_noise(&mut delta_vec, cfg.clip_norm, cfg.noise_multiplier, &mut rng);
+    println!(
+        "post-noise L2 = {:.4} (σ·clip = {:.4} per coordinate)",
+        stats::l2_norm(&delta_vec),
+        cfg.noise_multiplier * cfg.clip_norm
+    );
+    Ok(())
+}

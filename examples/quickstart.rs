@@ -1,0 +1,81 @@
+//! Quickstart: the smallest end-to-end Florida run.
+//!
+//! Mirrors the paper's Fig-3 sample client: define an app + workflow,
+//! plug in a trainer, deploy a task, and let a handful of simulated
+//! devices train it to completion — all in-process, with the real
+//! protocol (attestation → registration → selection → rounds).
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (uses the `micro` artifact preset — build with `make artifacts` first)
+
+use std::sync::Arc;
+
+use florida::config::{Manifest, TaskConfig};
+use florida::data::{SpamCorpus, SpamCorpusConfig};
+use florida::model::ModelSnapshot;
+use florida::runtime::{HloEvaluator, HloTrainer, Runtime, ShardSampler};
+use florida::services::FloridaServer;
+use florida::simulator::{run_fleet, FleetConfig};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("FLORIDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // --- ML engineer: compiled model artifacts + data --------------------
+    let manifest = Manifest::load(&artifacts)?;
+    let preset = manifest.preset("micro")?.clone();
+    let mut corpus_cfg = SpamCorpusConfig::for_model(preset.vocab, preset.seq_len);
+    corpus_cfg.n_train = 800;
+    corpus_cfg.n_test = 128;
+    let corpus = SpamCorpus::generate(&corpus_cfg, 8);
+    let train = Arc::new(corpus.train);
+    let test = Arc::new(corpus.test);
+
+    // --- DevOps engineer: deploy the service -----------------------------
+    let runtime = Runtime::new(manifest.clone(), 1)?;
+    let evaluator = Arc::new(HloEvaluator::new(runtime.handle(), preset.clone(), test));
+    let server = Arc::new(FloridaServer::with_evaluator(true, evaluator, 42, true));
+
+    // --- ML scientist: create the task (dashboard/CLI equivalent) --------
+    let mut task = TaskConfig::default();
+    task.task_name = "quickstart-spam".into();
+    task.app_name = "python-app".into();
+    task.workflow_name = "python-workflow".into();
+    task.preset = "micro".into();
+    task.clients_per_round = 4;
+    task.total_rounds = 5;
+    task.client_lr = 5e-3;
+    let init = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path))?;
+    let task_id = server.deploy_task(task, init)?;
+    println!("deployed task {task_id}");
+
+    // --- Devices: 4 simulated clients, each owning one data shard --------
+    let fleet = FleetConfig {
+        n_devices: 4,
+        ..Default::default()
+    };
+    let shards = corpus.shards;
+    let reports = run_fleet(&server, task_id, &fleet, |i| {
+        let sampler = ShardSampler::new(Arc::clone(&train), shards[i].clone(), 0.5, i as u64);
+        HloTrainer::new(runtime.handle(), preset.clone(), sampler)
+    });
+
+    // --- Results ----------------------------------------------------------
+    let (desc, metrics, _) = server.management.task_status(task_id)?;
+    println!("\n{}", metrics.render_dashboard(&desc.task_name));
+    println!(
+        "device round participations: {}",
+        reports.iter().map(|r| r.rounds_participated).sum::<u64>()
+    );
+    let final_acc = metrics
+        .rounds
+        .iter()
+        .rev()
+        .find_map(|r| r.eval_accuracy)
+        .unwrap_or(0.0);
+    anyhow::ensure!(
+        desc.state == florida::proto::TaskState::Completed,
+        "task did not complete"
+    );
+    println!("final eval accuracy: {final_acc:.3}");
+    Ok(())
+}

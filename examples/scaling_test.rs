@@ -1,0 +1,60 @@
+//! The paper's §5.2 scaling test (Fig 11 right): per-iteration duration
+//! of the dummy task (each client uploads an all-ones array of size 5)
+//! at increasing numbers of concurrent clients. "Notice that the x-axis
+//! is not linear."
+//!
+//! Run: `cargo run --release --example scaling_test`
+//! Env: FLORIDA_MAX_CLIENTS (default 1024), FLORIDA_ROUNDS (default 3)
+
+use florida::simulator::scaling::run_scaling_point;
+
+fn main() -> anyhow::Result<()> {
+    let max: usize = std::env::var("FLORIDA_MAX_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let rounds: u64 = std::env::var("FLORIDA_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+
+    // The paper's non-linear x-axis.
+    let points: Vec<usize> = [32, 64, 128, 256, 512, 768, 1024, 1536, 2048]
+        .into_iter()
+        .filter(|&n| n <= max)
+        .collect();
+
+    println!("scaling test: dummy task (all-ones array of size 5), {rounds} iterations each");
+    println!("{:>8}  {:>16}  {:>12}", "clients", "iteration (ms)", "wall (ms)");
+    let mut rows = Vec::new();
+    for &n in &points {
+        let p = run_scaling_point(n, rounds, 7)?;
+        println!("{:>8}  {:>16.1}  {:>12}", p.n_clients, p.round_ms, p.wall_ms);
+        rows.push(p);
+    }
+
+    let mut csv = String::from("clients,iteration_ms,wall_ms,rounds\n");
+    for p in &rows {
+        csv.push_str(&format!(
+            "{},{:.2},{},{}\n",
+            p.n_clients, p.round_ms, p.wall_ms, p.rounds
+        ));
+    }
+    std::fs::write("scaling.csv", csv)?;
+    println!("\nwrote scaling.csv");
+
+    // Shape check mirroring the paper's claim: ~1k concurrent clients
+    // still process an iteration "in a reasonable time".
+    if let Some(k1) = rows.iter().find(|p| p.n_clients >= 1024) {
+        println!(
+            "1k-client iteration: {:.1} ms ({})",
+            k1.round_ms,
+            if k1.round_ms < 10_000.0 {
+                "reasonable — matches the paper's claim"
+            } else {
+                "slow on this host"
+            }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,107 @@
+"""AOT lowering: JAX (L2 + L1) → HLO text artifacts for the rust runtime.
+
+Emits HLO **text**, not ``.serialize()``: jax ≥ 0.5 writes HloModuleProtos
+with 64-bit instruction ids, which the rust side's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+
+  artifacts/train_<preset>.hlo.txt   — k local Adam steps (+FedProx μ)
+  artifacts/eval_<preset>.hlo.txt    — loss/accuracy on one batch
+  artifacts/init_<preset>.f32        — initial flat parameter vector (LE f32)
+  artifacts/manifest.json            — shapes + paths, read by rust config
+
+Python runs ONCE at build time and never on the request path.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+PRESETS = {
+    # BERT-tiny shape (paper §5.1: prajjwal1/bert-tiny is L=2, d=128, h=2)
+    "tiny": (M.ModelConfig(), M.TrainConfig()),
+    # Smoke preset for fast tests/benches of the runtime plumbing.
+    "micro": (
+        M.ModelConfig(vocab=256, seq_len=32, d_model=32, n_heads=2,
+                      n_layers=1, d_ff=64),
+        M.TrainConfig(local_steps=2, batch=4, eval_batch=8),
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_preset(name: str, out_dir: str) -> dict:
+    cfg, tcfg = PRESETS[name]
+
+    train_fn, train_shapes = M.make_train_fn(cfg, tcfg)
+    eval_fn, eval_shapes = M.make_eval_fn(cfg, tcfg)
+
+    train_path = f"train_{name}.hlo.txt"
+    eval_path = f"eval_{name}.hlo.txt"
+    init_path = f"init_{name}.f32"
+
+    print(f"[aot] lowering train_{name} (P={M.param_count(cfg)}) ...")
+    hlo = to_hlo_text(jax.jit(train_fn).lower(*train_shapes))
+    with open(os.path.join(out_dir, train_path), "w") as f:
+        f.write(hlo)
+
+    print(f"[aot] lowering eval_{name} ...")
+    hlo = to_hlo_text(jax.jit(eval_fn).lower(*eval_shapes))
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(hlo)
+
+    print(f"[aot] writing initial snapshot init_{name}.f32 ...")
+    init = M.init_params(cfg, seed=0)
+    init.astype("<f4").tofile(os.path.join(out_dir, init_path))
+
+    return {
+        "preset": name,
+        "model": {k: getattr(cfg, k) for k in
+                  ("vocab", "seq_len", "d_model", "n_heads", "n_layers",
+                   "d_ff", "n_classes")},
+        "param_count": M.param_count(cfg),
+        "train": {
+            "path": train_path,
+            "local_steps": tcfg.local_steps,
+            "batch": tcfg.batch,
+        },
+        "eval": {"path": eval_path, "batch": tcfg.eval_batch},
+        "init_params": init_path,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,micro",
+                    help="comma-separated subset of: " + ",".join(PRESETS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = [lower_preset(p.strip(), args.out_dir)
+               for p in args.presets.split(",") if p.strip()]
+    manifest = {"presets": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(entries)} preset(s) "
+          f"to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Pallas flash-attention kernel (L1) with a custom VJP.
+
+This is the compute hot-spot of the on-device spam classifier (L2). The
+paper's clients ran stock PyTorch; in this reproduction the client compute
+is authored as a TPU-shaped Pallas kernel per the three-layer architecture.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the forward pass
+is the classic flash-attention schedule — the grid iterates over
+(batch·heads, query blocks); each program keeps one `block_q × dh` query
+tile plus the full `T × dh` K/V panels for its head in VMEM and performs
+an online-softmax sweep over `block_k`-sized K/V tiles with
+`lax.fori_loop`. On a real TPU the two contractions (`q@kᵀ`, `p@v`) map to
+the MXU; block sizes are kept multiples of the 8×128 vector lanes. The
+backward pass recomputes attention probabilities from the saved
+log-sum-exp (no T×T residual is ever materialised).
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT client cannot
+execute Mosaic custom-calls; interpret mode lowers the same schedule to
+plain HLO so the rust runtime can run it. Correctness is pinned to
+``ref.attention_ref`` by pytest (values and gradients).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT gate — see module docstring.
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
+                     scale: float):
+    """One (bh, q-block) grid cell: online softmax over K/V tiles.
+
+    q_ref:   [block_q, dh]   query tile in VMEM
+    k_ref:   [T, dh]         full key panel for this bh
+    v_ref:   [T, dh]         full value panel for this bh
+    o_ref:   [block_q, dh]   output tile
+    lse_ref: [block_q]       log-sum-exp residual (for the backward pass)
+    """
+    q = q_ref[...] * scale
+    t = k_ref.shape[0]
+    block_q, dh = q.shape
+    nk = t // block_k
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k_tile = k_ref[pl.dslice(i * block_k, block_k), :]
+        v_tile = v_ref[pl.dslice(i * block_k, block_k), :]
+        s = q @ k_tile.T  # [block_q, block_k] — MXU contraction on TPU
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+
+    o_ref[...] = acc / l_i[:, None]
+    lse_ref[...] = m_i + jnp.log(l_i)
+
+
+def _attn_fwd(q, k, v, *, block_q: int, block_k: int):
+    bh, t, dh = q.shape
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    scale = 1.0 / (dh ** 0.5)
+    grid = (bh, t // block_q)
+
+    out, lse = pl.pallas_call(
+        functools.partial(_attn_fwd_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, t, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, block_q), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, t), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel
+# ---------------------------------------------------------------------------
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, o_ref, do_ref, lse_ref,
+                     dq_ref, dk_ref, dv_ref, *, scale: float):
+    """One bh per grid cell; T is small on-device (64), so the backward
+    works on the full T×T probability matrix recomputed from q,k and the
+    saved log-sum-exp. D = rowsum(do ⊙ o) is the standard flash trick.
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    o = o_ref[...]
+    do = do_ref[...]
+    lse = lse_ref[...]
+
+    s = (q @ k.T) * scale                       # [T, T]
+    p = jnp.exp(s - lse[:, None])               # softmax via saved lse
+    dv = p.T @ do                               # [T, dh]
+    dp = do @ v.T                               # [T, T]
+    delta = jnp.sum(do * o, axis=-1)            # [T]
+    ds = p * (dp - delta[:, None]) * scale      # [T, T]
+    dq = ds @ k                                 # [T, dh]
+    dk = ds.T @ q                               # [T, dh]
+
+    dq_ref[...] = dq
+    dk_ref[...] = dk
+    dv_ref[...] = dv
+
+
+def _attn_bwd(block_q, block_k, residuals, dout):
+    q, k, v, out, lse = residuals
+    bh, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_attn_bwd_kernel, scale=scale),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((None, t, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, t, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v, out, dout, lse)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(q, k, v, block_q: int = 32, block_k: int = 32):
+    """Flash attention: float32[BH, T, Dh]³ → float32[BH, T, Dh]."""
+    out, _ = _attn_fwd(q, k, v, block_q=block_q, block_k=block_k)
+    return out
+
+
+def _attention_fwd_rule(q, k, v, block_q, block_k):
+    out, lse = _attn_fwd(q, k, v, block_q=block_q, block_k=block_k)
+    return out, (q, k, v, out, lse)
+
+
+attention.defvjp(_attention_fwd_rule, _attn_bwd)

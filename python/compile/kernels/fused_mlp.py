@@ -1,0 +1,143 @@
+"""Pallas fused MLP kernel (L1): Linear → GELU → Linear in one VMEM pass.
+
+The transformer MLP block is the second compute hot-spot of the on-device
+model. The kernel keeps both weight panels resident in VMEM
+(D×F + F×D floats — 512 KB at the BERT-tiny sizes, well under the ~16 MB
+VMEM of a TPU core) and streams activations through in `block_n`-row
+tiles, so the intermediate `[block_n, F]` activation never touches HBM.
+
+Backward pass: dX is served by a Pallas kernel mirroring the forward
+schedule; dW1/db1/dW2/db2 are plain XLA matmuls over the recomputed hidden
+activations. Weight gradients need a cross-tile reduction over the grid,
+which on the Pallas side would serialise the grid into an accumulation
+loop — XLA's native reduction handles it better, and the weight-grad
+matmuls are MXU-bound either way (see DESIGN.md §Hardware-Adaptation).
+
+Lowered with ``interpret=True`` (CPU PJRT gate). Correctness pinned to
+``ref.fused_mlp_ref`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# tanh-approximate GELU (see kernels/ref.py for why not erf: the runtime's
+# XLA 0.5.1 HLO parser has no `erf` opcode).
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+_GELU_A = 0.044715
+
+
+def _gelu(x):
+    u = _GELU_C * (x + _GELU_A * x * x * x)
+    return 0.5 * x * (1.0 + jnp.tanh(u))
+
+
+def _gelu_grad(x):
+    u = _GELU_C * (x + _GELU_A * x * x * x)
+    t = jnp.tanh(u)
+    du = _GELU_C * (1.0 + 3.0 * _GELU_A * x * x)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _mlp_fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One block_n-row tile: h = gelu(x@W1+b1); o = h@W2+b2."""
+    x = x_ref[...]
+    h = _gelu(x @ w1_ref[...] + b1_ref[...][None, :])
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...][None, :]
+
+
+def _mlp_fwd(x, w1, b1, w2, b2, *, block_n: int):
+    n, d = x.shape
+    f = w1.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+
+    return pl.pallas_call(
+        _mlp_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, w1, b1, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dX kernel + XLA weight grads
+# ---------------------------------------------------------------------------
+
+def _mlp_bwd_dx_kernel(x_ref, w1_ref, b1_ref, w2_ref, do_ref, dx_ref):
+    """dX tile: recompute pre-activation, chain through GELU, two matmuls."""
+    x = x_ref[...]
+    z = x @ w1_ref[...] + b1_ref[...][None, :]
+    dh = do_ref[...] @ w2_ref[...].T          # [block_n, F]
+    dz = dh * _gelu_grad(z)                   # [block_n, F]
+    dx_ref[...] = dz @ w1_ref[...].T          # [block_n, D]
+
+
+def _mlp_bwd_dx(x, w1, b1, w2, do, *, block_n: int):
+    n, d = x.shape
+    f = w1.shape[1]
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _mlp_bwd_dx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, w1, b1, w2, do)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def fused_mlp(x, w1, b1, w2, b2, block_n: int = 64):
+    """Fused MLP: float32[N, D] → float32[N, D]."""
+    return _mlp_fwd(x, w1, b1, w2, b2, block_n=block_n)
+
+
+def _fused_mlp_fwd_rule(x, w1, b1, w2, b2, block_n):
+    out = _mlp_fwd(x, w1, b1, w2, b2, block_n=block_n)
+    return out, (x, w1, b1, w2, b2)
+
+
+def _fused_mlp_bwd_rule(block_n, residuals, do):
+    x, w1, b1, w2, b2 = residuals
+    # dX via the Pallas kernel (mirrors the forward tile schedule).
+    dx = _mlp_bwd_dx(x, w1, b1, w2, do, block_n=block_n)
+    # Weight/bias grads via XLA matmuls over recomputed activations.
+    z = x @ w1 + b1[None, :]
+    h = _gelu(z)
+    dh = do @ w2.T
+    dz = dh * _gelu_grad(z)
+    dw1 = x.T @ dz
+    db1 = dz.sum(axis=0)
+    dw2 = h.T @ do
+    db2 = do.sum(axis=0)
+    return dx, dw1, db1, dw2, db2
+
+
+fused_mlp.defvjp(_fused_mlp_fwd_rule, _fused_mlp_bwd_rule)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy so that pytest can assert
+``assert_allclose(kernel(x), ref(x))`` for both values and gradients.
+"""
+
+import jax.numpy as jnp
+
+# tanh-approximate GELU (Hendrycks & Gimpel; what BERT uses in practice).
+# NOTE: the exact erf-based GELU lowers to the `erf` HLO opcode, which the
+# runtime's XLA (xla_extension 0.5.1) cannot parse — the tanh form lowers
+# to plain tanh/mul/add and round-trips through HLO text cleanly.
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+_GELU_A = 0.044715
+
+
+def gelu(x):
+    """tanh-approximate GELU — must match the kernel's definition."""
+    u = _GELU_C * (x + _GELU_A * x * x * x)
+    return 0.5 * x * (1.0 + jnp.tanh(u))
+
+
+def attention_ref(q, k, v):
+    """Multi-head scaled dot-product attention, no masking.
+
+    Args:
+      q, k, v: float32[BH, T, Dh] — batch*heads folded into the leading dim.
+    Returns:
+      float32[BH, T, Dh]
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bts,bsd->btd", p, v)
+
+
+def fused_mlp_ref(x, w1, b1, w2, b2):
+    """Reference for the fused Linear→GELU→Linear block.
+
+    Args:
+      x: float32[N, D]; w1: [D, F]; b1: [F]; w2: [F, D]; b2: [D].
+    Returns:
+      float32[N, D]
+    """
+    return gelu(x @ w1 + b1) @ w2 + b2

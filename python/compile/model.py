@@ -1,0 +1,277 @@
+"""L2: the on-device model — BERT-tiny-class transformer classifier.
+
+This is the build-time JAX definition of the client compute for the spam
+classification experiment (paper §5.1). The paper used HuggingFace
+BERT-tiny (prajjwal1/bert-tiny: 2 layers, d=128, 2 heads) with the
+transformers AdamW trainer; we implement the same model class from
+scratch, with the attention and MLP hot-spots served by the Pallas
+kernels in ``kernels/`` (L1).
+
+Everything is written over a **flat f32 parameter vector** — that is what
+federated learning transports, masks, quantises and aggregates; the
+rust coordinator (L3) only ever sees flat vectors. ``pack``/``unpack``
+convert between the flat vector and the parameter pytree.
+
+Entry points lowered by ``aot.py``:
+
+* ``train_step``: k local Adam steps (lax.scan) with an optional FedProx
+  proximal term μ‖θ−θ_anchor‖²/2 — μ=0 recovers plain FedAvg local SGD.
+* ``eval_step``: loss + accuracy on one batch.
+
+Python never runs at serving time: these are lowered once to HLO text and
+executed from rust via PJRT.
+"""
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.attention import attention
+from compile.kernels.fused_mlp import fused_mlp
+from compile.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (BERT-tiny shape by default)."""
+
+    vocab: int = 2048
+    seq_len: int = 64
+    d_model: int = 128
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 512
+    n_classes: int = 2
+    use_pallas: bool = True  # False → pure-jnp reference path (testing)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec + flat packing
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the packing order of the flat vector."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        d, f = cfg.d_model, cfg.d_ff
+        spec += [
+            (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+            (p + "wq", (d, d)), (p + "bq", (d,)),
+            (p + "wk", (d, d)), (p + "bk", (d,)),
+            (p + "wv", (d, d)), (p + "bv", (d,)),
+            (p + "wo", (d, d)), (p + "bo", (d,)),
+            (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    spec += [
+        ("ln_f_g", (cfg.d_model,)), ("ln_f_b", (cfg.d_model,)),
+        ("head_w", (cfg.d_model, cfg.n_classes)),
+        ("head_b", (cfg.n_classes,)),
+    ]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_spec(cfg))
+
+
+def unpack(cfg: ModelConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """flat f32[P] → {name: tensor} pytree."""
+    out = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def pack(cfg: ModelConfig, tree: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """{name: tensor} → flat f32[P] in spec order."""
+    return jnp.concatenate(
+        [tree[name].reshape(-1) for name, _ in param_spec(cfg)])
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """BERT-style initialisation (N(0, 0.02), LN at identity) — numpy,
+    so the initial snapshot can be written to disk without tracing."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        base = name.split(".")[-1]
+        if base.startswith("ln") and base.endswith("_g") or base == "ln_f_g":
+            w = np.ones(shape, np.float32)
+        elif base.endswith("_b") or base.startswith("b"):
+            w = np.zeros(shape, np.float32)
+        else:
+            w = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+        chunks.append(w.reshape(-1))
+    return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-6):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _mha(cfg: ModelConfig, p: Dict[str, jnp.ndarray], prefix: str, x):
+    """Multi-head attention block over [B, T, D]."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def proj(w, bias):
+        return (x @ p[prefix + w] + p[prefix + bias])
+
+    def split_heads(y):  # [B,T,D] → [B*H, T, Dh]
+        return y.reshape(b, t, h, dh).transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+
+    q = split_heads(proj("wq", "bq"))
+    k = split_heads(proj("wk", "bk"))
+    v = split_heads(proj("wv", "bv"))
+
+    if cfg.use_pallas:
+        o = attention(q, k, v, 32, 32)
+    else:
+        o = kref.attention_ref(q, k, v)
+
+    o = o.reshape(b, h, t, dh).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return o @ p[prefix + "wo"] + p[prefix + "bo"]
+
+
+def _mlp(cfg: ModelConfig, p: Dict[str, jnp.ndarray], prefix: str, x):
+    b, t, d = x.shape
+    x2 = x.reshape(b * t, d)
+    if cfg.use_pallas:
+        y = fused_mlp(x2, p[prefix + "w1"], p[prefix + "b1"],
+                      p[prefix + "w2"], p[prefix + "b2"], 64)
+    else:
+        y = kref.fused_mlp_ref(x2, p[prefix + "w1"], p[prefix + "b1"],
+                               p[prefix + "w2"], p[prefix + "b2"])
+    return y.reshape(b, t, d)
+
+
+def forward(cfg: ModelConfig, flat: jnp.ndarray, tokens: jnp.ndarray):
+    """tokens i32[B, T] → logits f32[B, C] (pre-LN transformer encoder)."""
+    p = unpack(cfg, flat)
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :, :]
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        x = x + _mha(cfg, p, pre, _layer_norm(x, p[pre + "ln1_g"], p[pre + "ln1_b"]))
+        x = x + _mlp(cfg, p, pre, _layer_norm(x, p[pre + "ln2_g"], p[pre + "ln2_b"]))
+    x = _layer_norm(x, p["ln_f_g"], p["ln_f_b"])
+    pooled = x.mean(axis=1)  # mean-pool over tokens
+    return pooled @ p["head_w"] + p["head_b"]
+
+
+def loss_and_acc(cfg: ModelConfig, flat, tokens, labels):
+    """Mean softmax cross-entropy + accuracy for one batch."""
+    logits = forward(cfg, flat, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(axis=-1) == labels).astype(jnp.float32).mean()
+    return nll, acc
+
+
+# ---------------------------------------------------------------------------
+# Entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Local-training hyper-parameters baked into the artifact shapes."""
+
+    local_steps: int = 8   # paper: ~67 samples / batch 8 ≈ 8 steps per round
+    batch: int = 8         # paper §5.1
+    eval_batch: int = 64
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+
+def train_step(cfg: ModelConfig, tcfg: TrainConfig,
+               flat, m, v, step, tokens, labels, lr, mu, anchor):
+    """k local Adam steps with optional FedProx proximal term.
+
+    Args:
+      flat, m, v: f32[P] — parameters and Adam moments (client-held).
+      step: f32 scalar — Adam timestep (bias correction).
+      tokens: i32[k, B, T]; labels: i32[k, B] — per-step minibatches.
+      lr: f32 scalar; mu: f32 scalar (FedProx μ; 0 disables);
+      anchor: f32[P] — global params at round start (FedProx anchor).
+
+    Returns:
+      (flat', m', v', step', losses f32[k], accs f32[k])
+    """
+
+    def one_step(carry, batch):
+        flat, m, v, step = carry
+        toks, labs = batch
+        (loss, acc), grads = jax.value_and_grad(
+            lambda f: loss_and_acc(cfg, f, toks, labs), has_aux=True)(flat)
+        grads = grads + mu * (flat - anchor)  # FedProx proximal gradient
+        step = step + 1.0
+        m = tcfg.beta1 * m + (1.0 - tcfg.beta1) * grads
+        v = tcfg.beta2 * v + (1.0 - tcfg.beta2) * grads * grads
+        mhat = m / (1.0 - tcfg.beta1 ** step)
+        vhat = v / (1.0 - tcfg.beta2 ** step)
+        flat = flat - lr * mhat / (jnp.sqrt(vhat) + tcfg.eps)
+        return (flat, m, v, step), (loss, acc)
+
+    (flat, m, v, step), (losses, accs) = jax.lax.scan(
+        one_step, (flat, m, v, step), (tokens, labels))
+    return flat, m, v, step, losses, accs
+
+
+def eval_step(cfg: ModelConfig, flat, tokens, labels):
+    """One evaluation batch → (mean loss f32, accuracy f32)."""
+    return loss_and_acc(cfg, flat, tokens, labels)
+
+
+def make_train_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    """Bind configs; returns fn + example ShapeDtypeStructs for lowering."""
+    fn = functools.partial(train_step, cfg, tcfg)
+    p = param_count(cfg)
+    k, b, t = tcfg.local_steps, tcfg.batch, cfg.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    shapes = (
+        jax.ShapeDtypeStruct((p,), f32),      # flat
+        jax.ShapeDtypeStruct((p,), f32),      # m
+        jax.ShapeDtypeStruct((p,), f32),      # v
+        jax.ShapeDtypeStruct((), f32),        # step
+        jax.ShapeDtypeStruct((k, b, t), i32), # tokens
+        jax.ShapeDtypeStruct((k, b), i32),    # labels
+        jax.ShapeDtypeStruct((), f32),        # lr
+        jax.ShapeDtypeStruct((), f32),        # mu
+        jax.ShapeDtypeStruct((p,), f32),      # anchor
+    )
+    return fn, shapes
+
+
+def make_eval_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    fn = functools.partial(eval_step, cfg)
+    p = param_count(cfg)
+    shapes = (
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((tcfg.eval_batch, cfg.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((tcfg.eval_batch,), jnp.int32),
+    )
+    return fn, shapes

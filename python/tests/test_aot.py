@@ -1,0 +1,65 @@
+"""AOT artifact sanity: manifest consistency + HLO text parseability."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import PRESETS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_known_presets():
+    man = _manifest()
+    names = {e["preset"] for e in man["presets"]}
+    assert names <= set(PRESETS)
+    assert "micro" in names or "tiny" in names
+
+
+def test_param_counts_match_model_spec():
+    man = _manifest()
+    for e in man["presets"]:
+        cfg, _ = PRESETS[e["preset"]]
+        assert e["param_count"] == M.param_count(cfg)
+
+
+def test_init_snapshot_sizes():
+    man = _manifest()
+    for e in man["presets"]:
+        p = os.path.join(ART, e["init_params"])
+        assert os.path.getsize(p) == 4 * e["param_count"]
+        arr = np.fromfile(p, dtype="<f4")
+        assert np.isfinite(arr).all()
+        # LayerNorm gains are initialised to 1 → snapshot can't be all-zero.
+        assert np.abs(arr).max() > 0.5
+
+
+def test_hlo_artifacts_are_text_with_entry():
+    man = _manifest()
+    for e in man["presets"]:
+        for key in ("train", "eval"):
+            p = os.path.join(ART, e[key]["path"])
+            with open(p) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, p
+
+
+def test_train_shapes_recorded():
+    man = _manifest()
+    for e in man["presets"]:
+        cfg, tcfg = PRESETS[e["preset"]]
+        assert e["train"]["local_steps"] == tcfg.local_steps
+        assert e["train"]["batch"] == tcfg.batch
+        assert e["eval"]["batch"] == tcfg.eval_batch
+        assert e["model"]["seq_len"] == cfg.seq_len

@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (values + grads).
+
+Hypothesis sweeps shapes; fixed-seed numpy supplies the data. These tests
+are the core correctness signal for the kernels that end up inside the
+AOT artifacts the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.fused_mlp import fused_mlp
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([32, 64, 128]),
+    dh=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_forward_matches_ref(bh, t, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, bh, t, dh) for _ in range(3))
+    out = attention(q, k, v, 32, 32)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    t=st.sampled_from([32, 64]),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_grads_match_ref(t, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, 2, t, dh) for _ in range(3))
+    w = _rand(rng, 2, t, dh)  # random cotangent direction via weighted sum
+
+    def scalar(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v) * w)
+
+    g = jax.grad(scalar(lambda q, k, v: attention(q, k, v, 32, 32)),
+                 argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(scalar(ref.attention_ref), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+
+def test_attention_block_sizes_equivalent():
+    """Different (block_q, block_k) tilings must give identical math."""
+    rng = np.random.default_rng(7)
+    q, k, v = (_rand(rng, 2, 64, 16) for _ in range(3))
+    base = attention(q, k, v, 32, 32)
+    for bq, bk in [(16, 16), (64, 64), (16, 64), (64, 32)]:
+        out = attention(q, k, v, bq, bk)
+        np.testing.assert_allclose(out, base, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_softmax_rows_are_convex_combination():
+    """Output rows live in the convex hull of V rows: bounded by min/max."""
+    rng = np.random.default_rng(11)
+    q, k, v = (_rand(rng, 1, 32, 8) for _ in range(3))
+    out = np.asarray(attention(q, k, v, 32, 32))
+    vmin = np.asarray(v).min(axis=1, keepdims=True) - 1e-5
+    vmax = np.asarray(v).max(axis=1, keepdims=True) + 1e-5
+    assert (out >= vmin).all() and (out <= vmax).all()
+
+
+def test_attention_permutation_equivariance_over_bh():
+    """Permuting the batch·head dim permutes outputs identically."""
+    rng = np.random.default_rng(13)
+    q, k, v = (_rand(rng, 4, 32, 8) for _ in range(3))
+    perm = np.array([2, 0, 3, 1])
+    out = np.asarray(attention(q, k, v, 32, 32))
+    out_p = np.asarray(attention(q[perm], k[perm], v[perm], 32, 32))
+    np.testing.assert_allclose(out[perm], out_p, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused MLP
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([16, 32, 128]),
+    f=st.sampled_from([32, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp_forward_matches_ref(n, d, f, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, d)
+    w1, b1 = _rand(rng, d, f) * 0.1, _rand(rng, f) * 0.1
+    w2, b2 = _rand(rng, f, d) * 0.1, _rand(rng, d) * 0.1
+    out = fused_mlp(x, w1, b1, w2, b2, 64)
+    want = ref.fused_mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fused_mlp_grads_match_ref(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 64, 16)
+    w1, b1 = _rand(rng, 16, 32) * 0.1, _rand(rng, 32) * 0.1
+    w2, b2 = _rand(rng, 32, 16) * 0.1, _rand(rng, 16) * 0.1
+    cot = _rand(rng, 64, 16)
+
+    def scalar(fn):
+        return lambda *a: jnp.sum(fn(*a) * cot)
+
+    g = jax.grad(scalar(lambda *a: fused_mlp(*a, 64)),
+                 argnums=(0, 1, 2, 3, 4))(x, w1, b1, w2, b2)
+    gr = jax.grad(scalar(ref.fused_mlp_ref),
+                  argnums=(0, 1, 2, 3, 4))(x, w1, b1, w2, b2)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_mlp_block_sizes_equivalent():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 128, 16)
+    w1, b1 = _rand(rng, 16, 32) * 0.1, _rand(rng, 32) * 0.1
+    w2, b2 = _rand(rng, 32, 16) * 0.1, _rand(rng, 16) * 0.1
+    base = fused_mlp(x, w1, b1, w2, b2, 64)
+    for bn in [16, 32, 128]:
+        np.testing.assert_allclose(fused_mlp(x, w1, b1, w2, b2, bn), base,
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_fused_mlp_zero_weights_give_bias():
+    """Zero W2 → output is exactly b2 (fusion must not perturb bias add)."""
+    x = jnp.ones((64, 8), jnp.float32)
+    w1 = jnp.zeros((8, 16), jnp.float32)
+    b1 = jnp.zeros((16,), jnp.float32)
+    w2 = jnp.zeros((16, 8), jnp.float32)
+    b2 = jnp.arange(8, dtype=jnp.float32)
+    out = np.asarray(fused_mlp(x, w1, b1, w2, b2, 64))
+    np.testing.assert_allclose(out, np.tile(np.arange(8, dtype=np.float32), (64, 1)))
+
+
+def test_kernels_are_jittable_and_stable_under_jit():
+    """jit(kernel) must equal eager kernel (the AOT path uses jit.lower)."""
+    rng = np.random.default_rng(5)
+    q, k, v = (_rand(rng, 2, 32, 8) for _ in range(3))
+    eager = attention(q, k, v, 32, 32)
+    jitted = jax.jit(lambda q, k, v: attention(q, k, v, 32, 32))(q, k, v)
+    np.testing.assert_allclose(eager, jitted, atol=1e-6)

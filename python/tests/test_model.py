@@ -1,0 +1,184 @@
+"""L2 correctness: flat packing, forward pass, local training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(vocab=256, seq_len=32, d_model=32, n_heads=2,
+                    n_layers=1, d_ff=64)
+TCFG = M.TrainConfig(local_steps=2, batch=4, eval_batch=8)
+
+
+def _data(seed, k=TCFG.local_steps, b=TCFG.batch, t=CFG.seq_len):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(k, b, t), dtype=np.int32))
+    labs = jnp.asarray(rng.integers(0, CFG.n_classes, size=(k, b), dtype=np.int32))
+    return toks, labs
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+def test_param_count_matches_spec():
+    spec = M.param_spec(CFG)
+    assert M.param_count(CFG) == sum(int(np.prod(s)) for _, s in spec)
+
+
+def test_pack_unpack_roundtrip():
+    flat = jnp.asarray(M.init_params(CFG, seed=3))
+    tree = M.unpack(CFG, flat)
+    again = M.pack(CFG, tree)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(again))
+
+
+def test_unpack_shapes():
+    flat = jnp.asarray(M.init_params(CFG, seed=0))
+    tree = M.unpack(CFG, flat)
+    assert tree["tok_emb"].shape == (CFG.vocab, CFG.d_model)
+    assert tree["layer0.w1"].shape == (CFG.d_model, CFG.d_ff)
+    assert tree["head_w"].shape == (CFG.d_model, CFG.n_classes)
+
+
+def test_init_layernorm_identity():
+    tree = M.unpack(CFG, jnp.asarray(M.init_params(CFG, 0)))
+    np.testing.assert_array_equal(np.asarray(tree["ln_f_g"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(tree["ln_f_b"]), 0.0)
+
+
+def test_init_deterministic_per_seed():
+    a = M.init_params(CFG, seed=1)
+    b = M.init_params(CFG, seed=1)
+    c = M.init_params(CFG, seed=2)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def test_forward_shape_and_finiteness():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    toks, _ = _data(0, k=1)
+    logits = M.forward(CFG, flat, toks[0])
+    assert logits.shape == (TCFG.batch, CFG.n_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_forward_pallas_matches_jnp_path():
+    """The Pallas-kernel model must equal the pure-jnp model."""
+    cfg_ref = M.ModelConfig(**{**CFG.__dict__, "use_pallas": False})
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    toks, _ = _data(1, k=1)
+    a = M.forward(CFG, flat, toks[0])
+    b = M.forward(cfg_ref, flat, toks[0])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+def test_initial_loss_near_log2():
+    """Binary classifier at init → loss ≈ ln(2)."""
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    toks, labs = _data(2, k=1)
+    loss, _ = M.loss_and_acc(CFG, flat, toks[0], labs[0])
+    assert abs(float(loss) - np.log(2.0)) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Training dynamics
+# ---------------------------------------------------------------------------
+
+def test_train_step_decreases_loss_on_fixed_batch():
+    fn = jax.jit(M.make_train_fn(CFG, TCFG)[0])
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    step = jnp.float32(0)
+    toks, labs = _data(3)
+    first = None
+    for _ in range(6):
+        flat, m, v, step, losses, accs = fn(
+            flat, m, v, step, toks, labs,
+            jnp.float32(5e-3), jnp.float32(0.0), flat)
+        if first is None:
+            first = float(losses[0])
+    assert float(losses[-1]) < first * 0.5, (first, float(losses[-1]))
+
+
+def test_train_step_advances_adam_step():
+    fn = jax.jit(M.make_train_fn(CFG, TCFG)[0])
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    z = jnp.zeros_like(flat)
+    toks, labs = _data(4)
+    out = fn(flat, z, z, jnp.float32(0), toks, labs,
+             jnp.float32(1e-3), jnp.float32(0.0), flat)
+    assert float(out[3]) == TCFG.local_steps
+
+
+def test_fedprox_mu_pulls_towards_anchor():
+    """Larger μ keeps local params closer to the anchor after k steps."""
+    fn = jax.jit(M.make_train_fn(CFG, TCFG)[0])
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    z = jnp.zeros_like(flat)
+    toks, labs = _data(5)
+    dists = []
+    for mu in [0.0, 1.0, 10.0]:
+        out = fn(flat, z, z, jnp.float32(0), toks, labs,
+                 jnp.float32(5e-3), jnp.float32(mu), flat)
+        dists.append(float(jnp.linalg.norm(out[0] - flat)))
+    assert dists[0] > dists[1] > dists[2], dists
+
+
+def test_train_step_zero_lr_is_identity_on_params():
+    fn = jax.jit(M.make_train_fn(CFG, TCFG)[0])
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    z = jnp.zeros_like(flat)
+    toks, labs = _data(6)
+    out = fn(flat, z, z, jnp.float32(0), toks, labs,
+             jnp.float32(0.0), jnp.float32(0.0), flat)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(flat))
+
+
+def test_eval_step_accuracy_bounds():
+    efn = jax.jit(M.make_eval_fn(CFG, TCFG)[0])
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(TCFG.eval_batch, CFG.seq_len), dtype=np.int32))
+    labs = jnp.asarray(rng.integers(0, 2, size=(TCFG.eval_batch,), dtype=np.int32))
+    loss, acc = efn(flat, toks, labs)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0.0
+
+
+def test_model_learns_separable_synthetic_task():
+    """Tokens < vocab/2 → class 0, else class 1; must become learnable."""
+    fn = jax.jit(M.make_train_fn(CFG, TCFG)[0])
+    efn = jax.jit(M.make_eval_fn(CFG, TCFG)[0])
+    rng = np.random.default_rng(8)
+
+    def batch(k, b):
+        labs = rng.integers(0, 2, size=(k, b)).astype(np.int32)
+        toks = np.where(
+            labs[..., None] == 0,
+            rng.integers(0, CFG.vocab // 2, size=(k, b, CFG.seq_len)),
+            rng.integers(CFG.vocab // 2, CFG.vocab, size=(k, b, CFG.seq_len)),
+        ).astype(np.int32)
+        return jnp.asarray(toks), jnp.asarray(labs)
+
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    step = jnp.float32(0)
+    for _ in range(10):
+        toks, labs = batch(TCFG.local_steps, TCFG.batch)
+        flat, m, v, step, losses, accs = fn(
+            flat, m, v, step, toks, labs,
+            jnp.float32(5e-3), jnp.float32(0.0), flat)
+    etoks, elabs = batch(1, TCFG.eval_batch)
+    _, acc = efn(flat, etoks[0], elabs[0])
+    assert float(acc) >= 0.9, float(acc)

@@ -1,0 +1,88 @@
+//! Figure 11 (center): duration of each iteration — synchronous vs
+//! asynchronous (buffer 32) vs asynchronous with over-participation
+//! (2× devices). Paper: async lowers per-iteration duration at similar
+//! accuracy; over-participation lowers it further.
+//!
+//! Default CI size: micro preset, 8-device cohorts, simulated device
+//! heterogeneity (log-normal speeds) so stragglers exist to hide.
+//! FLORIDA_BENCH_FULL=1 → tiny preset, 32-client buffer, paper scale.
+
+use florida::simulator::spam::{run_spam, SpamRunConfig};
+use florida::simulator::Heterogeneity;
+use florida::util::bench;
+
+fn main() {
+    let full = std::env::var("FLORIDA_BENCH_FULL").is_ok();
+    let mut base = SpamRunConfig::default();
+    base.artifacts_dir = std::env::var("FLORIDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if florida::config::Manifest::load(&base.artifacts_dir).is_err() {
+        eprintln!("fig11_center_async: artifacts not built — skipping");
+        return;
+    }
+    let (n, rounds) = if full { (32, 10) } else { (8, 4) };
+    base.preset = if full { "tiny".into() } else { "micro".into() };
+    base.n_devices = n;
+    base.clients_per_round = n;
+    base.rounds = rounds;
+    base.n_shards = if full { 100 } else { 20 };
+    if !full {
+        base.client_lr = 5e-3;
+    }
+    // Heterogeneous fleet: stragglers are what async hides (paper §2).
+    // Simulated device compute (400 ms nominal, log-normal spread)
+    // dominates the host-side PJRT time, so iteration durations reflect
+    // device wall-clock — the regime the paper's AzureML fleet is in.
+    base.heterogeneity = Heterogeneity {
+        speed_sigma: 0.6,
+        base_delay_ms: 1,
+        delay_jitter_ms: 4,
+        dropout_prob: 0.0,
+    };
+    base.sim_compute_ms = 400;
+
+    bench::section("Fig 11 (center): per-iteration duration — sync vs async vs async 2×");
+    let mut rows = Vec::new();
+    let variants: Vec<(&str, Box<dyn Fn(&mut SpamRunConfig)>)> = vec![
+        ("sync", Box::new(|_c: &mut SpamRunConfig| {})),
+        (
+            "async (buffer n)",
+            Box::new(move |c: &mut SpamRunConfig| {
+                c.async_buffer = Some(c.n_devices);
+            }),
+        ),
+        (
+            "async 2x devices",
+            Box::new(move |c: &mut SpamRunConfig| {
+                c.async_buffer = Some(c.n_devices);
+                c.n_devices *= 2;
+            }),
+        ),
+    ];
+    for (name, tweak) in variants {
+        let mut cfg = base.clone();
+        tweak(&mut cfg);
+        match run_spam(&cfg) {
+            Ok(res) => {
+                rows.push(vec![
+                    name.to_string(),
+                    format!("{:.0}", res.mean_round_ms),
+                    format!("{:.4}", res.final_accuracy),
+                    format!("{:.1}", res.total_wall_ms as f64 / 1000.0),
+                ]);
+            }
+            Err(e) => eprintln!("  {name}: FAILED: {e}"),
+        }
+    }
+    bench::table(
+        "mean iteration duration (paper: async < sync; async 2x < async; similar accuracy)",
+        &["variant", "iteration (ms)", "final acc", "wall (s)"],
+        &rows,
+    );
+    if rows.len() == 3 {
+        let ms: Vec<f64> = rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        println!(
+            "\n  shape check: sync {:.0} ms, async {:.0} ms, async2x {:.0} ms — expect decreasing",
+            ms[0], ms[1], ms[2]
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Figure 11 (left): spam-classification accuracy per iteration, FL vs
+//! FL + user-level local DP (clip 0.5, σ 0.08).
+//!
+//! Default: `micro` preset, 5 rounds, 8 devices (CI-sized). Set
+//! `FLORIDA_BENCH_FULL=1` for the paper-scale run (tiny preset, 32
+//! devices, 10 rounds — several minutes per variant on one core).
+//! The full-scale curves recorded in EXPERIMENTS.md come from
+//! `examples/spam_classification.rs`.
+
+use florida::dp::DpConfig;
+use florida::simulator::spam::{run_spam, SpamRunConfig};
+use florida::util::bench;
+
+fn main() {
+    let full = std::env::var("FLORIDA_BENCH_FULL").is_ok();
+    let mut base = SpamRunConfig::default();
+    base.artifacts_dir = std::env::var("FLORIDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if florida::config::Manifest::load(&base.artifacts_dir).is_err() {
+        eprintln!("fig11_left_spam: artifacts not built (make artifacts) — skipping");
+        return;
+    }
+    if full {
+        base.preset = "tiny".into();
+        base.n_devices = 32;
+        base.clients_per_round = 32;
+        base.rounds = 10;
+    } else {
+        base.preset = "micro".into();
+        base.n_devices = 8;
+        base.clients_per_round = 8;
+        base.rounds = 5;
+        base.n_shards = 20;
+        base.client_lr = 5e-3;
+    }
+
+    bench::section("Fig 11 (left): accuracy per iteration — FL vs FL+DP");
+    let mut variants = Vec::new();
+    for (name, dp) in [
+        ("FL (FedAvg)", DpConfig::off()),
+        ("FL + local DP (clip 0.5, σ 0.08)", DpConfig::paper_local()),
+    ] {
+        let mut cfg = base.clone();
+        cfg.dp = dp;
+        let t0 = std::time::Instant::now();
+        match run_spam(&cfg) {
+            Ok(res) => {
+                println!(
+                    "\n  {name}: final acc {:.4}, mean iteration {:.0} ms (wall {:.1}s)",
+                    res.final_accuracy,
+                    res.mean_round_ms,
+                    t0.elapsed().as_secs_f64()
+                );
+                variants.push((name, res));
+            }
+            Err(e) => eprintln!("  {name}: FAILED: {e}"),
+        }
+    }
+
+    // The paper's left panel: accuracy series side by side.
+    if variants.len() == 2 {
+        let rows: Vec<Vec<String>> = (0..variants[0].1.rounds.len())
+            .map(|i| {
+                let acc = |v: &florida::simulator::spam::SpamRunResult| {
+                    v.rounds
+                        .get(i)
+                        .and_then(|r| r.eval_accuracy)
+                        .map(|a| format!("{a:.4}"))
+                        .unwrap_or_else(|| "-".into())
+                };
+                vec![
+                    i.to_string(),
+                    acc(&variants[0].1),
+                    acc(&variants[1].1),
+                    variants[1]
+                        .1
+                        .rounds
+                        .get(i)
+                        .and_then(|r| r.epsilon)
+                        .map(|e| format!("{e:.1}"))
+                        .unwrap_or_else(|| "-".into()),
+                ]
+            })
+            .collect();
+        bench::table(
+            "accuracy per iteration (paper: FL climbs into the 90s; +DP slightly below, noisier)",
+            &["iter", "FL acc", "FL+DP acc", "eps"],
+            &rows,
+        );
+        let (fl, dp) = (&variants[0].1, &variants[1].1);
+        println!(
+            "\n  shape check: FL final {:.3} vs DP final {:.3} — paper expects DP ≤ FL (slight decrease)",
+            fl.final_accuracy, dp.final_accuracy
+        );
+    }
+}

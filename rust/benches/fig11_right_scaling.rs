@@ -1,0 +1,53 @@
+//! Figure 11 (right): scaling test — duration of each iteration of the
+//! dummy task (all-ones array of size 5) vs number of concurrent clients.
+//! "Notice that the x-axis is not linear."
+//!
+//! Default sweep tops out at 512 clients; FLORIDA_BENCH_FULL=1 extends to
+//! 2048 (the paper demonstrates "the order of one thousand clients
+//! communicating concurrently").
+
+use florida::simulator::scaling::run_scaling_point;
+use florida::util::bench;
+
+fn main() {
+    let full = std::env::var("FLORIDA_BENCH_FULL").is_ok();
+    let mut points = vec![8usize, 32, 64, 128, 256, 512];
+    if full {
+        points.extend([1024, 1536, 2048]);
+    }
+    let rounds = 3;
+
+    bench::section("Fig 11 (right): iteration duration vs concurrent clients (dummy task)");
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for &n in &points {
+        match run_scaling_point(n, rounds, 7) {
+            Ok(p) => {
+                rows.push(vec![
+                    n.to_string(),
+                    format!("{:.1}", p.round_ms),
+                    p.wall_ms.to_string(),
+                ]);
+                series.push((n, p.round_ms));
+            }
+            Err(e) => eprintln!("  n={n}: FAILED: {e}"),
+        }
+    }
+    bench::table(
+        "dummy task: each client uploads ones(5); server aggregates (x-axis non-linear)",
+        &["clients", "iteration (ms)", "wall (ms)"],
+        &rows,
+    );
+
+    // Shape check: sub-linear growth until saturation — duration at max
+    // clients should grow far less than the client multiplier.
+    if let (Some(&(n0, d0)), Some(&(n1, d1))) = (series.first(), series.last()) {
+        let client_factor = n1 as f64 / n0 as f64;
+        let time_factor = d1 / d0.max(0.1);
+        println!(
+            "\n  shape check: {n0}→{n1} clients ({client_factor:.0}×) grew iteration time \
+             {time_factor:.1}× — paper shows sub-linear growth with a knee near server \
+             saturation"
+        );
+    }
+}

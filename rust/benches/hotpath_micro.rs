@@ -1,0 +1,109 @@
+//! §Perf micro-benchmarks: the L3 hot paths that dominate server cost at
+//! scale — modular masked-sum accumulation, quantization, weighted delta
+//! accumulation, the wire codec's bulk array paths, snapshot compression,
+//! and the crypto primitives. Targets in DESIGN.md §Perf.
+
+use florida::codec::{Reader, Wire, Writer};
+use florida::crypto::hkdf;
+use florida::crypto::prg::MaskPrg;
+use florida::crypto::x25519::KeyPair;
+use florida::dp::GaussianMechanism;
+use florida::model::{DeltaAccumulator, ModelSnapshot};
+use florida::quant::{add_mod, Quantizer};
+use florida::util::{bench, Rng};
+
+fn main() {
+    let b = bench::Bencher::default();
+    let dim = 667_394; // BERT-tiny flat dim (the real payload size)
+    let bytes = (dim * 4) as u64;
+    let mut rng = Rng::new(1);
+    let delta: Vec<f32> = (0..dim).map(|_| rng.normal_scaled(0.0, 0.02) as f32).collect();
+    let quant = Quantizer::new(4.0, 18).unwrap();
+    let qdelta = quant.quantize(&delta);
+
+    bench::section("aggregation hot path (dim = 667,394 — BERT-tiny)");
+    let mut acc_u32 = vec![0u32; dim];
+    bench::report(&b.run_bytes("masked add_mod (u32 wrapping sum)", bytes, || {
+        add_mod(&mut acc_u32, &qdelta);
+    }));
+    bench::report(&b.run_bytes("quantize f32→u32 lattice", bytes, || {
+        std::hint::black_box(quant.quantize(&delta));
+    }));
+    bench::report(&b.run_bytes("dequantize sum→mean", bytes, || {
+        std::hint::black_box(quant.dequantize_sum_to_mean(&acc_u32, 32).unwrap());
+    }));
+    let mut dacc = DeltaAccumulator::new(dim);
+    bench::report(&b.run_bytes("weighted delta accumulate (f64)", bytes, || {
+        dacc.add(&delta, 67.0).unwrap();
+    }));
+    let mut global = ModelSnapshot::new(0, delta.clone());
+    bench::report(&b.run_bytes("apply_delta (server model update)", bytes, || {
+        global.apply_delta(&delta, 1.0).unwrap();
+    }));
+
+    bench::section("client-side DP + masking");
+    let mut v = delta.clone();
+    bench::report(&b.run_bytes("L2 clip", bytes, || {
+        std::hint::black_box(GaussianMechanism::clip(&mut v, 0.5));
+    }));
+    let mut v2 = delta.clone();
+    bench::report(&b.run_bytes("gaussian noise (Box–Muller)", bytes, || {
+        GaussianMechanism::add_noise(&mut v2, 0.5, 0.08, &mut rng);
+    }));
+    let mut masked = qdelta.clone();
+    bench::report(&b.run_bytes("PRG mask apply (AES-CTR, 1 peer)", bytes, || {
+        MaskPrg::new([7u8; 16]).apply_mask(&mut masked, 1);
+    }));
+
+    bench::section("wire codec (bulk arrays)");
+    bench::report(&b.run_bytes("encode f32s", bytes, || {
+        let mut w = Writer::with_capacity(dim * 4 + 8);
+        w.put_f32s(&delta);
+        std::hint::black_box(w.into_bytes());
+    }));
+    let mut w = Writer::new();
+    w.put_f32s(&delta);
+    let encoded = w.into_bytes();
+    bench::report(&b.run_bytes("decode f32s", bytes, || {
+        let mut r = Reader::new(&encoded);
+        std::hint::black_box(r.get_f32s().unwrap());
+    }));
+    let snap = ModelSnapshot::new(1, delta.clone());
+    let frame = snap.to_bytes();
+    bench::report(&b.run_bytes("snapshot wire roundtrip", bytes, || {
+        std::hint::black_box(ModelSnapshot::from_bytes(&frame).unwrap());
+    }));
+
+    bench::section("snapshot compression (paper: ~16MB model compressed)");
+    let slow = bench::Bencher {
+        measure: std::time::Duration::from_millis(800),
+        ..Default::default()
+    };
+    bench::report(&slow.run_bytes("zlib compress snapshot", bytes, || {
+        std::hint::black_box(snap.to_compressed().unwrap());
+    }));
+    let z = snap.to_compressed().unwrap();
+    println!(
+        "    compressed {:.2} MB → {:.2} MB ({:.0}%)",
+        bytes as f64 / 1e6,
+        z.len() as f64 / 1e6,
+        100.0 * z.len() as f64 / bytes as f64
+    );
+    bench::report(&slow.run_bytes("zlib decompress snapshot", bytes, || {
+        std::hint::black_box(ModelSnapshot::from_compressed(&z).unwrap());
+    }));
+
+    bench::section("crypto primitives");
+    let kp1 = KeyPair::generate(&mut rng);
+    let kp2 = KeyPair::generate(&mut rng);
+    bench::report(&b.run("x25519 agree", || {
+        std::hint::black_box(kp1.agree(&kp2.public()));
+    }));
+    let shared = kp1.agree(&kp2.public());
+    bench::report(&b.run("hkdf derive_key16", || {
+        std::hint::black_box(hkdf::derive_key16(b"salt", &shared.0, b"info"));
+    }));
+    bench::report(&b.run_bytes("PRG fill 667k u32", bytes, || {
+        std::hint::black_box(MaskPrg::new([3u8; 16]).mask_vec(dim));
+    }));
+}

@@ -1,0 +1,115 @@
+//! §Perf: PJRT runtime latency — the on-device compute path. Measures
+//! the compiled train artifact (k local Adam steps, L1 Pallas kernels
+//! inside) and the eval artifact, per preset.
+//!
+//! Default: micro preset only. FLORIDA_BENCH_FULL=1 adds BERT-tiny.
+
+use florida::config::Manifest;
+use florida::runtime::{EvalRequest, Runtime, TrainRequest};
+use florida::util::{bench, Rng};
+
+fn main() {
+    let dir = std::env::var("FLORIDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("runtime_trainstep: artifacts not built — skipping");
+            return;
+        }
+    };
+    let full = std::env::var("FLORIDA_BENCH_FULL").is_ok();
+    let presets: Vec<&str> = if full {
+        vec!["micro", "tiny"]
+    } else {
+        vec!["micro"]
+    };
+    let rt = Runtime::new(manifest.clone(), 1).unwrap();
+
+    for name in presets {
+        let p = match manifest.preset(name) {
+            Ok(p) => p.clone(),
+            Err(_) => continue,
+        };
+        let mut rng = Rng::new(3);
+        let params: Vec<f32> = (0..p.param_count)
+            .map(|_| rng.normal_scaled(0.0, 0.02) as f32)
+            .collect();
+        let tokens: Vec<i32> = (0..p.local_steps * p.batch * p.seq_len)
+            .map(|_| rng.range(0, p.vocab) as i32)
+            .collect();
+        let labels: Vec<i32> = (0..p.local_steps * p.batch)
+            .map(|_| rng.range(0, 2) as i32)
+            .collect();
+        let etokens: Vec<i32> = (0..p.eval_batch * p.seq_len)
+            .map(|_| rng.range(0, p.vocab) as i32)
+            .collect();
+        let elabels: Vec<i32> = (0..p.eval_batch).map(|_| rng.range(0, 2) as i32).collect();
+
+        bench::section(&format!(
+            "preset {name}: P={}, k={} local steps, batch {}",
+            p.param_count, p.local_steps, p.batch
+        ));
+        // First call includes HLO parse+compile; report it separately.
+        let t0 = std::time::Instant::now();
+        let _ = rt
+            .handle()
+            .train(TrainRequest {
+                preset: name.into(),
+                params: params.clone(),
+                m: vec![0.0; p.param_count],
+                v: vec![0.0; p.param_count],
+                step: 0.0,
+                tokens: tokens.clone(),
+                labels: labels.clone(),
+                lr: 5e-4,
+                prox_mu: 0.0,
+                anchor: params.clone(),
+            })
+            .unwrap();
+        println!("  cold start (parse+compile+run): {:.2}s", t0.elapsed().as_secs_f64());
+
+        let b = bench::Bencher {
+            warmup: std::time::Duration::from_millis(100),
+            measure: std::time::Duration::from_millis(3000),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let samples = (p.local_steps * p.batch) as f64;
+        let train_r = b.run(&format!("train_step ({} samples)", samples), || {
+            std::hint::black_box(
+                rt.handle()
+                    .train(TrainRequest {
+                        preset: name.into(),
+                        params: params.clone(),
+                        m: vec![0.0; p.param_count],
+                        v: vec![0.0; p.param_count],
+                        step: 0.0,
+                        tokens: tokens.clone(),
+                        labels: labels.clone(),
+                        lr: 5e-4,
+                        prox_mu: 0.0,
+                        anchor: params.clone(),
+                    })
+                    .unwrap(),
+            );
+        });
+        bench::report(&train_r);
+        println!(
+            "    → {:.1} samples/s on-device training throughput",
+            samples / (train_r.mean_ns / 1e9)
+        );
+        let eval_r = b.run(&format!("eval_step (batch {})", p.eval_batch), || {
+            std::hint::black_box(
+                rt.handle()
+                    .eval(EvalRequest {
+                        preset: name.into(),
+                        params: params.clone(),
+                        tokens: etokens.clone(),
+                        labels: elabels.clone(),
+                    })
+                    .unwrap(),
+            );
+        });
+        bench::report(&eval_r);
+    }
+}

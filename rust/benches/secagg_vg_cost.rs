@@ -1,0 +1,93 @@
+//! §3.1.2 design-claim bench: secure-aggregation cost vs virtual-group
+//! size. "The performance cost of the secure MPC protocol ... scales with
+//! O(n²) where n is the number of participating clients in a VG. VGs
+//! should be large enough to provide reasonable security and privacy
+//! guarantees while managing the quadratic cost."
+//!
+//! Measures, per VG size n (model dim fixed):
+//!   · client cost: key agreement + mask expansion for n−1 peers (O(n·d))
+//!   · client setup: Shamir split + share encryption (O(n))
+//!   · protocol messages: n(n−1) pairwise relationships (O(n²))
+//!   · server unmask worst case: reconstruct 1 dropout + strip n−1 masks
+
+use florida::crypto::shamir;
+use florida::crypto::x25519::KeyPair;
+use florida::quant::Quantizer;
+use florida::secagg;
+use florida::util::{bench, Rng};
+
+fn main() {
+    let dim = 10_000; // fixed model dim so the n-scaling is visible
+    let quant = Quantizer::new(1.0, 16).unwrap();
+    let b = bench::Bencher {
+        warmup: std::time::Duration::from_millis(50),
+        measure: std::time::Duration::from_millis(400),
+        min_iters: 3,
+        max_iters: 10_000,
+    };
+
+    bench::section("SecAgg cost vs virtual-group size (model dim 10k)");
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8, 16, 32, 64, 128] {
+        let mut rng = Rng::new(n as u64);
+        let kps: Vec<KeyPair> = (0..n).map(|_| KeyPair::generate(&mut rng)).collect();
+        let ids: Vec<u64> = (1..=n as u64).collect();
+        let roster: Vec<(u64, [u8; 32])> = ids
+            .iter()
+            .zip(&kps)
+            .map(|(&id, kp)| (id, kp.public().0))
+            .collect();
+        let delta: Vec<f32> = (0..dim).map(|_| rng.next_f32() - 0.5).collect();
+
+        // Client: quantize + all pairwise masks (the per-round hot path).
+        let mask = b.run(&format!("mask_update n={n}"), || {
+            let mut acc = quant.quantize(&delta);
+            secagg::apply_pairwise_masks(&mut acc, ids[0], &kps[0], &roster, 1, 1);
+            std::hint::black_box(acc);
+        });
+
+        // Client: Shamir split + encrypt shares (setup path).
+        let setup = b.run(&format!("share_setup n={n}"), || {
+            let t = ((n - 1) as f64 * 0.6).ceil().max(1.0) as usize;
+            let shares = shamir::split(&kps[0].seed_bytes(), t.min(n - 1).max(1), n - 1, &mut rng);
+            for (j, sh) in shares.iter().enumerate() {
+                let shared = kps[0].agree(&kps[(j + 1) % n].public());
+                let key = secagg::share_enc_key(&shared, 1, 1, ids[0], ids[(j + 1) % n]);
+                let mut plain = vec![sh.x];
+                plain.extend_from_slice(&sh.y);
+                std::hint::black_box(secagg::stream_xor(key, &plain));
+            }
+        });
+
+        // Server: worst-case single-dropout unmask (reconstruct + strip).
+        let unmask = b.run(&format!("server_unmask n={n}"), || {
+            let mut sum = quant.quantize(&delta);
+            for i in 1..n {
+                secagg::remove_orphan_mask(
+                    &mut sum,
+                    &kps[0],
+                    ids[0],
+                    ids[i],
+                    &kps[i].public().0,
+                    1,
+                    1,
+                );
+            }
+            std::hint::black_box(sum);
+        });
+
+        rows.push(vec![
+            n.to_string(),
+            (n * (n - 1)).to_string(),
+            bench::fmt_ns(mask.mean_ns),
+            bench::fmt_ns(setup.mean_ns),
+            bench::fmt_ns(unmask.mean_ns),
+            format!("{:.1}", n as f64 * (n - 1) as f64 * mask.mean_ns / n as f64 / 1e6),
+        ]);
+    }
+    bench::table(
+        "per-client mask cost grows O(n·d); total VG work O(n²·d) — the paper's motivation for bounded VG sizes",
+        &["vg size", "pair msgs", "client mask", "client setup", "server unmask (1 drop)", "~VG total (ms)"],
+        &rows,
+    );
+}

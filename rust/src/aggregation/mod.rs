@@ -1,0 +1,285 @@
+//! Aggregation strategies ("user-defined logic" of the Master Aggregator,
+//! §3.1.3): FedAvg, FedProx, DGA, and the buffered-async (Papaya/FedBuff)
+//! rule used by asynchronous tasks (§4.3, §5.1).
+//!
+//! The paper uploads the aggregation recipe as a script/executable; here
+//! strategies are a trait with built-ins selected by name from the task
+//! config — custom strategies implement [`Aggregator`].
+
+use crate::error::{Error, Result};
+use crate::model::DeltaAccumulator;
+
+/// One client's contribution to an aggregation step.
+#[derive(Clone, Debug)]
+pub struct ClientUpdate {
+    pub client_id: u64,
+    /// Pseudo-gradient (local params − global params at round start).
+    pub delta: Vec<f32>,
+    /// Example-count weight (paper: FedAvg weighting).
+    pub weight: f64,
+    /// Mean local training loss (drives DGA weighting).
+    pub loss: f64,
+    /// Global versions elapsed since the client fetched its base model
+    /// (0 for synchronous rounds; > 0 under async).
+    pub staleness: u64,
+}
+
+/// An aggregation strategy: combine updates into one pseudo-gradient.
+pub trait Aggregator: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>>;
+}
+
+/// Weighted Federated Averaging (McMahan et al. 2017).
+pub struct FedAvg;
+
+impl Aggregator for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
+        let dim = check_dims(updates)?;
+        let mut acc = DeltaAccumulator::new(dim);
+        for u in updates {
+            acc.add(&u.delta, u.weight)?;
+        }
+        acc.mean()
+    }
+}
+
+/// FedProx (Li et al. 2018). Server-side combination is FedAvg; the
+/// proximal μ‖θ−θ_g‖² term acts client-side and is carried to devices via
+/// `TrainParams::prox_mu` (baked into the L2 train artifact).
+pub struct FedProx {
+    pub mu: f32,
+}
+
+impl Aggregator for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+
+    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
+        FedAvg.aggregate(updates)
+    }
+}
+
+/// Dynamic Gradient Aggregation (Dimitriadis et al. 2021): reweight
+/// updates by training-loss quality — lower-loss clients count more,
+/// via a softmax over −loss with temperature `temp`.
+pub struct Dga {
+    pub temp: f64,
+}
+
+impl Default for Dga {
+    fn default() -> Self {
+        Dga { temp: 1.0 }
+    }
+}
+
+impl Aggregator for Dga {
+    fn name(&self) -> &'static str {
+        "dga"
+    }
+
+    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
+        let dim = check_dims(updates)?;
+        if !(self.temp > 0.0) {
+            return Err(Error::Other("dga temperature must be > 0".into()));
+        }
+        let min_loss = updates
+            .iter()
+            .map(|u| u.loss)
+            .fold(f64::INFINITY, f64::min);
+        let mut acc = DeltaAccumulator::new(dim);
+        for u in updates {
+            let quality = (-(u.loss - min_loss) / self.temp).exp();
+            acc.add(&u.delta, (u.weight * quality).max(1e-12))?;
+        }
+        acc.mean()
+    }
+}
+
+/// Buffered asynchronous aggregation (Papaya / FedBuff): combine a buffer
+/// of K updates with staleness discount `1/(1+s)^alpha`.
+pub struct FedBuff {
+    pub staleness_alpha: f64,
+}
+
+impl Default for FedBuff {
+    fn default() -> Self {
+        FedBuff {
+            staleness_alpha: 0.5,
+        }
+    }
+}
+
+impl Aggregator for FedBuff {
+    fn name(&self) -> &'static str {
+        "fedbuff"
+    }
+
+    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
+        let dim = check_dims(updates)?;
+        let mut acc = DeltaAccumulator::new(dim);
+        for u in updates {
+            let discount = 1.0 / (1.0 + u.staleness as f64).powf(self.staleness_alpha);
+            acc.add(&u.delta, u.weight * discount)?;
+        }
+        acc.mean()
+    }
+}
+
+/// Look up a built-in strategy by config name.
+pub fn by_name(name: &str, prox_mu: f32) -> Result<Box<dyn Aggregator>> {
+    Ok(match name {
+        "fedavg" => Box::new(FedAvg),
+        "fedprox" => Box::new(FedProx { mu: prox_mu }),
+        "dga" => Box::new(Dga::default()),
+        "fedbuff" => Box::new(FedBuff::default()),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown aggregation strategy {other:?} \
+                 (expected fedavg|fedprox|dga|fedbuff)"
+            )))
+        }
+    })
+}
+
+fn check_dims(updates: &[ClientUpdate]) -> Result<usize> {
+    let first = updates
+        .first()
+        .ok_or_else(|| Error::Other("no updates to aggregate".into()))?;
+    let dim = first.delta.len();
+    for u in updates {
+        if u.delta.len() != dim {
+            return Err(Error::Model(format!(
+                "update dim mismatch: client {} has {} want {dim}",
+                u.client_id,
+                u.delta.len()
+            )));
+        }
+    }
+    Ok(dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(id: u64, delta: Vec<f32>, weight: f64, loss: f64, staleness: u64) -> ClientUpdate {
+        ClientUpdate {
+            client_id: id,
+            delta,
+            weight,
+            loss,
+            staleness,
+        }
+    }
+
+    #[test]
+    fn fedavg_weighted_mean() {
+        let got = FedAvg
+            .aggregate(&[
+                upd(1, vec![1.0, 0.0], 1.0, 0.5, 0),
+                upd(2, vec![0.0, 2.0], 3.0, 0.5, 0),
+            ])
+            .unwrap();
+        assert!((got[0] - 0.25).abs() < 1e-6);
+        assert!((got[1] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_equal_weights_is_plain_mean() {
+        let got = FedAvg
+            .aggregate(&[
+                upd(1, vec![2.0], 5.0, 0.0, 0),
+                upd(2, vec![4.0], 5.0, 0.0, 0),
+            ])
+            .unwrap();
+        assert!((got[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedprox_server_side_matches_fedavg() {
+        let ups = vec![
+            upd(1, vec![1.0, -1.0], 2.0, 0.3, 0),
+            upd(2, vec![3.0, 5.0], 1.0, 0.9, 0),
+        ];
+        assert_eq!(
+            FedProx { mu: 0.1 }.aggregate(&ups).unwrap(),
+            FedAvg.aggregate(&ups).unwrap()
+        );
+    }
+
+    #[test]
+    fn dga_prefers_low_loss() {
+        // Two clients, equal weights, very different losses: result must
+        // lean strongly towards the low-loss client's delta.
+        let got = Dga { temp: 0.1 }
+            .aggregate(&[
+                upd(1, vec![1.0], 1.0, 0.1, 0),
+                upd(2, vec![-1.0], 1.0, 5.0, 0),
+            ])
+            .unwrap();
+        assert!(got[0] > 0.99, "{}", got[0]);
+    }
+
+    #[test]
+    fn dga_equal_losses_reduces_to_fedavg() {
+        let ups = vec![
+            upd(1, vec![1.0, 2.0], 2.0, 0.7, 0),
+            upd(2, vec![-1.0, 0.0], 1.0, 0.7, 0),
+        ];
+        let a = Dga::default().aggregate(&ups).unwrap();
+        let b = FedAvg.aggregate(&ups).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fedbuff_discounts_stale() {
+        // Fresh vs very stale update with opposite directions: fresh wins.
+        let got = FedBuff {
+            staleness_alpha: 1.0,
+        }
+        .aggregate(&[
+            upd(1, vec![1.0], 1.0, 0.0, 0),
+            upd(2, vec![-1.0], 1.0, 0.0, 99),
+        ])
+        .unwrap();
+        assert!(got[0] > 0.9, "{}", got[0]);
+    }
+
+    #[test]
+    fn fedbuff_zero_staleness_is_fedavg() {
+        let ups = vec![
+            upd(1, vec![1.0], 1.0, 0.0, 0),
+            upd(2, vec![3.0], 1.0, 0.0, 0),
+        ];
+        let a = FedBuff::default().aggregate(&ups).unwrap();
+        let b = FedAvg.aggregate(&ups).unwrap();
+        assert!((a[0] - b[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        for name in ["fedavg", "fedprox", "dga", "fedbuff"] {
+            assert_eq!(by_name(name, 0.1).unwrap().name(), name);
+        }
+        assert!(by_name("magic", 0.0).is_err());
+    }
+
+    #[test]
+    fn errors_on_empty_or_mismatched() {
+        assert!(FedAvg.aggregate(&[]).is_err());
+        assert!(FedAvg
+            .aggregate(&[
+                upd(1, vec![1.0], 1.0, 0.0, 0),
+                upd(2, vec![1.0, 2.0], 1.0, 0.0, 0),
+            ])
+            .is_err());
+    }
+}

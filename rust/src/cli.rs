@@ -1,0 +1,386 @@
+//! Command-line interface (§3.3: "a command-line interface for scripting
+//! service and workflow management").
+//!
+//! Hand-rolled arg parsing (no clap in the offline crate set). Commands:
+//!
+//! ```text
+//! florida serve     --addr HOST:PORT [--task cfg.json] [--artifacts DIR] [--no-attest]
+//! florida run-sim   [--preset tiny] [--devices 32] [--rounds 10] [--dp]
+//!                   [--async N] [--secagg] [--artifacts DIR] [--csv out.csv]
+//! florida status    --addr HOST:PORT --task-id N
+//! florida dp-plan   [--q 0.32] [--sigma 0.08] [--rounds 10] [--delta 1e-5]
+//! florida scale     [--clients 256] [--rounds 3]
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::client::{RemoteApi, ServerApi};
+use crate::config::{Manifest, TaskConfig};
+use crate::dp::{DpConfig, DpMode, RdpAccountant};
+use crate::error::{Error, Result};
+use crate::model::ModelSnapshot;
+use crate::proto::{Msg, WireCodec};
+use crate::services::management::NoEval;
+use crate::services::FloridaServer;
+use crate::simulator::spam::{run_spam, SpamRunConfig};
+use crate::transport::tcp::{TcpDialer, TcpTransportListener};
+use crate::transport::Listener as _;
+use crate::util::ThreadPool;
+
+/// Parsed command line: subcommand + flags.
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `--key value` pairs and bare `--switch`es.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            return Err(Error::Config("no subcommand (try `florida help`)".into()));
+        }
+        let command = argv[0].clone();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                return Err(Error::Config(format!("unexpected argument {a:?}")));
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            switches,
+        })
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got {v:?}"))),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+pub const HELP: &str = "\
+Project Florida — federated learning platform (reproduction)
+
+USAGE: florida <command> [flags]
+
+COMMANDS:
+  run-sim    Run the §5.1 spam-classification FL simulation end to end
+             [--preset tiny|micro] [--devices N] [--clients-per-round N]
+             [--rounds N] [--dp] [--secagg] [--async BUF] [--non-iid A]
+             [--artifacts DIR] [--csv FILE] [--seed N]
+  scale      Run the §5.2 dummy-task scaling point
+             [--clients N] [--rounds N] [--seed N]
+  serve      Serve the platform over TCP
+             --addr HOST:PORT [--task cfg.json] [--artifacts DIR]
+             [--dim N] [--no-attest] [--conns N]
+  status     Query a served task
+             --addr HOST:PORT --task-id N [--json]
+  dp-plan    Privacy accounting for a task design
+             [--q RATE] [--sigma S] [--rounds N] [--delta D]
+  help       This text
+";
+
+/// Entry point used by main.rs; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("{HELP}");
+            return Err(e);
+        }
+    };
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "run-sim" => cmd_run_sim(&args),
+        "scale" => cmd_scale(&args),
+        "serve" => cmd_serve(&args),
+        "status" => cmd_status(&args),
+        "dp-plan" => cmd_dp_plan(&args),
+        other => {
+            println!("{HELP}");
+            Err(Error::Config(format!("unknown command {other:?}")))
+        }
+    }
+}
+
+fn cmd_run_sim(args: &Args) -> Result<()> {
+    let mut cfg = SpamRunConfig::default();
+    cfg.artifacts_dir = args.flag_or("artifacts", "artifacts");
+    cfg.preset = args.flag_or("preset", "tiny");
+    cfg.n_devices = args.usize_or("devices", 32)?;
+    cfg.clients_per_round = args.usize_or("clients-per-round", cfg.n_devices.min(32))?;
+    cfg.rounds = args.usize_or("rounds", 10)? as u64;
+    cfg.seed = args.usize_or("seed", 1234)? as u64;
+    cfg.secure_agg = args.switch("secagg");
+    if args.switch("dp") {
+        cfg.dp = DpConfig::paper_local();
+    }
+    if let Some(buf) = args.flag("async") {
+        cfg.async_buffer = Some(
+            buf.parse()
+                .map_err(|_| Error::Config("--async expects buffer size".into()))?,
+        );
+    }
+    if let Some(a) = args.flag("non-iid") {
+        cfg.non_iid_alpha = Some(
+            a.parse()
+                .map_err(|_| Error::Config("--non-iid expects alpha".into()))?,
+        );
+    }
+    println!(
+        "run-sim: preset={} devices={} rounds={} dp={:?} secagg={} async={:?}",
+        cfg.preset, cfg.n_devices, cfg.rounds, cfg.dp.mode, cfg.secure_agg, cfg.async_buffer
+    );
+    let result = run_spam(&cfg)?;
+    println!(
+        "\nround  participants  duration(ms)  train-loss  eval-acc  epsilon"
+    );
+    for r in &result.rounds {
+        println!(
+            "{:>5}  {:>12}  {:>12}  {:>10.4}  {:>8}  {:>7}",
+            r.round,
+            r.participants,
+            r.duration_ms(),
+            r.train_loss,
+            r.eval_accuracy
+                .map(|a| format!("{a:.4}"))
+                .unwrap_or_else(|| "-".into()),
+            r.epsilon
+                .map(|e| format!("{e:.3}"))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+    println!(
+        "\nfinal accuracy {:.4} | mean round {:.0} ms | wall {} ms | failed rounds {}",
+        result.final_accuracy, result.mean_round_ms, result.total_wall_ms, result.failed_rounds
+    );
+    if let Some(csv) = args.flag("csv") {
+        let mut text = String::from(
+            "round,duration_ms,participants,train_loss,eval_accuracy,epsilon\n",
+        );
+        for r in &result.rounds {
+            text.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.round,
+                r.duration_ms(),
+                r.participants,
+                r.train_loss,
+                r.eval_accuracy.unwrap_or(f64::NAN),
+                r.epsilon.unwrap_or(f64::NAN)
+            ));
+        }
+        std::fs::write(csv, text)?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let n = args.usize_or("clients", 256)?;
+    let rounds = args.usize_or("rounds", 3)? as u64;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let p = crate::simulator::scaling::run_scaling_point(n, rounds, seed)?;
+    println!(
+        "scale: {} clients, {} rounds -> mean iteration {:.1} ms (wall {} ms)",
+        p.n_clients, p.rounds, p.round_ms, p.wall_ms
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args
+        .flag("addr")
+        .ok_or_else(|| Error::Config("serve requires --addr".into()))?;
+    let server = Arc::new(FloridaServer::with_evaluator(
+        !args.switch("no-attest"),
+        Arc::new(NoEval),
+        args.usize_or("seed", 99)? as u64,
+        true,
+    ));
+    // Optionally deploy a task at startup.
+    if let Some(cfg_path) = args.flag("task") {
+        let text = std::fs::read_to_string(cfg_path)?;
+        let tcfg = TaskConfig::from_json_str(&text)?;
+        let init = match args.flag("artifacts") {
+            Some(dir) => {
+                let manifest = Manifest::load(dir)?;
+                let preset = manifest.preset(&tcfg.preset)?;
+                ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path))?
+            }
+            None => ModelSnapshot::new(0, vec![0.0; args.usize_or("dim", 5)?]),
+        };
+        let id = server.deploy_task(tcfg, init)?;
+        println!("deployed task {id} from {cfg_path}");
+    }
+    let listener = TcpTransportListener::bind(addr)?;
+    println!("florida serving on {}", listener.local_addr());
+    let pool = ThreadPool::new(args.usize_or("conns", 64)?);
+    // Background deadline sweep.
+    {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || loop {
+            server.management.tick(server.now_ms());
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        });
+    }
+    server.serve(Box::new(listener), &pool);
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    let addr = args
+        .flag("addr")
+        .ok_or_else(|| Error::Config("status requires --addr".into()))?;
+    let task_id = args.usize_or("task-id", 1)? as u64;
+    let codec = if args.switch("json") {
+        WireCodec::Json
+    } else {
+        WireCodec::Binary
+    };
+    let api = RemoteApi::connect(&TcpDialer, addr, codec)?;
+    match api.call(Msg::GetTaskStatus { task_id })? {
+        Msg::TaskStatus {
+            task,
+            participants,
+            last_round_duration_ms,
+            last_accuracy,
+            last_loss,
+            epsilon,
+        } => {
+            println!(
+                "task {} {:?} state={} round {}/{}",
+                task.task_id,
+                task.task_name,
+                task.state.name(),
+                task.round,
+                task.total_rounds
+            );
+            println!(
+                "last round: {participants} participants, {last_round_duration_ms} ms, \
+                 loss {last_loss:.4}, acc {last_accuracy:.4}, eps {epsilon:.3}"
+            );
+            Ok(())
+        }
+        Msg::ErrorReply { message } => Err(Error::Task(message)),
+        other => Err(Error::Transport(format!("unexpected reply {other:?}"))),
+    }
+}
+
+fn cmd_dp_plan(args: &Args) -> Result<()> {
+    let q = args.f64_or("q", 0.32)?;
+    let sigma = args.f64_or("sigma", 0.08)?;
+    let rounds = args.usize_or("rounds", 10)? as u64;
+    let delta = args.f64_or("delta", 1e-5)?;
+    let mut acct = RdpAccountant::new();
+    println!("round   epsilon(delta={delta})");
+    for r in 1..=rounds {
+        acct.step(q, sigma)?;
+        let (eps, order) = acct.epsilon(delta)?;
+        println!("{r:>5}   {eps:>10.4}  (order {order})");
+    }
+    let cfg = DpConfig {
+        mode: DpMode::Local,
+        clip_norm: args.f64_or("clip", 0.5)?,
+        noise_multiplier: sigma,
+    };
+    println!(
+        "\nconfig: clip={} sigma={} q={} rounds={} -> eps={:.3}",
+        cfg.clip_norm,
+        sigma,
+        q,
+        rounds,
+        acct.epsilon(delta)?.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_switches() {
+        let a = Args::parse(&argv("run-sim --devices 16 --dp --preset micro")).unwrap();
+        assert_eq!(a.command, "run-sim");
+        assert_eq!(a.usize_or("devices", 0).unwrap(), 16);
+        assert_eq!(a.flag_or("preset", "tiny"), "micro");
+        assert!(a.switch("dp"));
+        assert!(!a.switch("secagg"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Args::parse(&argv("")).is_err());
+        assert!(Args::parse(&argv("cmd positional")).is_err());
+        let a = Args::parse(&argv("cmd --n abc")).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn dp_plan_runs() {
+        let a = Args::parse(&argv("dp-plan --q 0.32 --sigma 0.08 --rounds 3")).unwrap();
+        cmd_dp_plan(&a).unwrap();
+    }
+
+    #[test]
+    fn help_dispatch() {
+        assert_eq!(run(&argv("help")), 0);
+        assert_eq!(run(&argv("definitely-not-a-command")), 1);
+    }
+}

@@ -1,0 +1,69 @@
+//! How the SDK reaches the server: direct (in-process) or remote (wire).
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::proto::{decode_frame, encode_frame, Msg, WireCodec};
+use crate::services::FloridaServer;
+use crate::transport::{Connection, Dialer};
+
+/// Request/response channel to the platform.
+pub trait ServerApi: Send {
+    fn call(&self, msg: Msg) -> Result<Msg>;
+}
+
+/// Zero-serialization path used by the large-scale simulator.
+pub struct DirectApi {
+    pub server: Arc<FloridaServer>,
+}
+
+impl ServerApi for DirectApi {
+    fn call(&self, msg: Msg) -> Result<Msg> {
+        Ok(self.server.handle(msg))
+    }
+}
+
+/// Wire path over any [`crate::transport::Dialer`] — the paper's
+/// `isEndpointHttp1` flag maps to the codec choice here.
+pub struct RemoteApi {
+    conn: Mutex<Box<dyn Connection>>,
+    codec: WireCodec,
+}
+
+impl RemoteApi {
+    pub fn connect(dialer: &dyn Dialer, addr: &str, codec: WireCodec) -> Result<RemoteApi> {
+        Ok(RemoteApi {
+            conn: Mutex::new(dialer.dial(addr)?),
+            codec,
+        })
+    }
+}
+
+impl ServerApi for RemoteApi {
+    fn call(&self, msg: Msg) -> Result<Msg> {
+        let frame = encode_frame(&msg, self.codec)?;
+        let mut conn = self.conn.lock().unwrap();
+        conn.send(&frame)?;
+        let reply = conn.recv()?;
+        let (m, _) = decode_frame(&reply)?;
+        if let Msg::ErrorReply { ref message } = m {
+            // Surface protocol-level errors but let callers inspect too.
+            log::debug!("server error reply: {message}");
+        }
+        Ok(m)
+    }
+}
+
+/// Dialer-independent convenience: direct API from a shared server.
+pub fn direct(server: &Arc<FloridaServer>) -> Box<dyn ServerApi> {
+    Box::new(DirectApi {
+        server: Arc::clone(server),
+    })
+}
+
+impl Error {
+    /// Helper for SDK call sites expecting a specific reply shape.
+    pub fn unexpected_reply(m: &Msg) -> Error {
+        Error::Transport(format!("unexpected reply {m:?}"))
+    }
+}

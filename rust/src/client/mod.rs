@@ -1,0 +1,385 @@
+//! Client SDK (§3.2): the on-device side of the platform.
+//!
+//! Mirrors the paper's sample client: the application developer supplies a
+//! `Trainer` (the paper's `trainer(model, iteration_id)` callback) inside
+//! a [`WorkflowDetails`], and [`FederatedLearningClient::execute`] runs
+//! the full protocol — attest, register, poll, join, (secagg setup),
+//! train, privatize, quantize+mask, upload, unmask service — until the
+//! task completes.
+
+pub mod api;
+pub mod secagg_participant;
+
+use crate::crypto::attest::Verdict;
+use crate::crypto::x25519::KeyPair;
+use crate::dp::{DpConfig, GaussianMechanism};
+use crate::error::{Error, Result};
+use crate::model::ModelSnapshot;
+use crate::proto::{Msg, RoundRole};
+use crate::quant::Quantizer;
+use crate::util::Rng;
+
+pub use api::{DirectApi, RemoteApi, ServerApi};
+pub use secagg_participant::SecAggParticipant;
+
+/// What local training produced.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    /// Updated local parameters (same dim as the snapshot trained from).
+    pub new_params: Vec<f32>,
+    /// Example-count weight for FedAvg.
+    pub weight: f64,
+    /// Mean training loss over the local steps.
+    pub loss: f64,
+}
+
+/// The application developer's training callback (paper Fig. 3).
+pub trait Trainer: Send {
+    /// Train from `model` for one round; `lr`/`prox_mu` come from the
+    /// server's TrainParams. `round` is the paper's `iteration_id`.
+    fn train(&mut self, model: &ModelSnapshot, round: u64, lr: f32, prox_mu: f32)
+        -> Result<TrainOutcome>;
+}
+
+/// Paper-style workflow registration.
+pub struct WorkflowDetails {
+    pub app_name: String,
+    pub workflow_name: String,
+    pub trainer: Box<dyn Trainer>,
+}
+
+/// Client-local DP configuration (applied when the task ran with local DP;
+/// in this reproduction the device owns its DP knobs, matching §4.2's
+/// "local ... noise addition").
+#[derive(Clone, Copy, Debug)]
+pub struct LocalDp {
+    pub cfg: DpConfig,
+}
+
+/// Outcome of `execute`.
+#[derive(Clone, Debug, Default)]
+pub struct ExecutionReport {
+    pub rounds_participated: u64,
+    pub rounds_not_selected: u64,
+    pub unmask_services: u64,
+    pub uploads_rejected: u64,
+    pub task_completed: bool,
+}
+
+/// The device-side client.
+pub struct FederatedLearningClient {
+    api: Box<dyn ServerApi>,
+    device_id: String,
+    verdict: Verdict,
+    caps: crate::proto::DeviceCaps,
+    client_id: u64,
+    rng: Rng,
+    /// Local DP (None → follow task config only for clipping-free upload).
+    pub local_dp: Option<DpConfig>,
+    /// Injected test hook: drop after training with this probability.
+    pub dropout_prob: f64,
+    /// Poll backoff between FetchRound calls.
+    pub poll_sleep_ms: u64,
+}
+
+impl FederatedLearningClient {
+    pub fn new(
+        api: Box<dyn ServerApi>,
+        device_id: &str,
+        verdict: Verdict,
+        caps: crate::proto::DeviceCaps,
+        seed: u64,
+    ) -> FederatedLearningClient {
+        FederatedLearningClient {
+            api,
+            device_id: device_id.to_string(),
+            verdict,
+            caps,
+            client_id: 0,
+            rng: Rng::new(seed),
+            local_dp: None,
+            dropout_prob: 0.0,
+            poll_sleep_ms: 1,
+        }
+    }
+
+    pub fn client_id(&self) -> u64 {
+        self.client_id
+    }
+
+    /// Attest + register with the selection service.
+    pub fn register(&mut self) -> Result<u64> {
+        let reply = self.api.call(Msg::Register {
+            device_id: self.device_id.clone(),
+            verdict: self.verdict.clone(),
+            caps: self.caps.clone(),
+        })?;
+        match reply {
+            Msg::RegisterAck {
+                accepted: true,
+                client_id,
+                ..
+            } => {
+                self.client_id = client_id;
+                Ok(client_id)
+            }
+            Msg::RegisterAck {
+                accepted: false,
+                reason,
+                ..
+            } => Err(Error::Attestation(reason)),
+            other => Err(Error::Transport(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Poll for an available task for (app, workflow).
+    pub fn poll_task(&mut self, app: &str, workflow: &str) -> Result<Option<u64>> {
+        let reply = self.api.call(Msg::PollTask {
+            client_id: self.client_id,
+            app_name: app.into(),
+            workflow_name: workflow.into(),
+        })?;
+        match reply {
+            Msg::TaskOffer { task } => Ok(task.map(|t| t.task_id)),
+            other => Err(Error::Transport(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Run a workflow to completion (the paper's `client.execute(...)`).
+    pub fn execute(&mut self, workflow: &mut WorkflowDetails) -> Result<ExecutionReport> {
+        let mut report = ExecutionReport::default();
+        if self.client_id == 0 {
+            self.register()?;
+        }
+        let task_id = loop {
+            if let Some(t) = self.poll_task(&workflow.app_name, &workflow.workflow_name)? {
+                break t;
+            }
+            self.sleep();
+        };
+        self.run_task(task_id, &mut *workflow.trainer, &mut report)?;
+        Ok(report)
+    }
+
+    /// Participate in one specific task until it completes.
+    pub fn run_task(
+        &mut self,
+        task_id: u64,
+        trainer: &mut dyn Trainer,
+        report: &mut ExecutionReport,
+    ) -> Result<()> {
+        // Per-join round keypair for secure aggregation. Keypairs used in
+        // past trained rounds are retained so later unmask requests (which
+        // reference those rounds) can still be served.
+        let mut kp = KeyPair::generate(&mut self.rng);
+        let mut train_keys: Vec<(u64, KeyPair)> = Vec::new();
+        let mut joined = false;
+        let mut idle_polls = 0u32;
+        loop {
+            if !joined {
+                // Fresh keypair per join attempt; committed only if the
+                // join is accepted — the server's roster keeps the pubkey
+                // from the accepted join, so a device that re-enters the
+                // same round (e.g. after a crash) must keep using it.
+                let fresh = KeyPair::generate(&mut self.rng);
+                match self.api.call(Msg::JoinRound {
+                    client_id: self.client_id,
+                    task_id,
+                    dh_pubkey: fresh.public().0,
+                })? {
+                    Msg::JoinAck { accepted: true, .. } => {
+                        kp = fresh;
+                        joined = true;
+                    }
+                    Msg::JoinAck { accepted: false, reason } => {
+                        if reason.contains("criteria") {
+                            return Err(Error::Task(reason));
+                        }
+                        // Task completed/cancelled → FetchRound will report
+                        // TaskDone. Already-joined: keep the OLD keypair.
+                        joined = reason.contains("already joined");
+                    }
+                    other => {
+                        return Err(Error::Transport(format!("unexpected reply {other:?}")))
+                    }
+                }
+            }
+            let role = match self.api.call(Msg::FetchRound {
+                client_id: self.client_id,
+                task_id,
+            })? {
+                Msg::RoundPlan { role } => role,
+                Msg::ErrorReply { message } => return Err(Error::Task(message)),
+                other => return Err(Error::Transport(format!("unexpected reply {other:?}"))),
+            };
+            match role {
+                RoundRole::TaskDone => {
+                    report.task_completed = true;
+                    return Ok(());
+                }
+                RoundRole::Wait => {
+                    idle_polls += 1;
+                    if idle_polls > 100_000 {
+                        return Err(Error::Task("starved waiting for round".into()));
+                    }
+                    self.sleep();
+                }
+                RoundRole::RoundDone => {
+                    joined = false; // rejoin for the next round
+                    self.sleep();
+                }
+                RoundRole::NotSelected => {
+                    report.rounds_not_selected += 1;
+                    joined = false;
+                    self.sleep();
+                }
+                RoundRole::Unmask(req) => {
+                    report.unmask_services += 1;
+                    let round_kp = train_keys
+                        .iter()
+                        .find(|(r, _)| *r == req.round)
+                        .map(|(_, k)| k)
+                        .unwrap_or(&kp);
+                    let participant = SecAggParticipant::new(task_id, req.round, round_kp);
+                    let shares = participant.answer_unmask(&req, self.client_id)?;
+                    self.api.call(Msg::UnmaskResponse {
+                        client_id: self.client_id,
+                        task_id,
+                        round: req.round,
+                        shares,
+                    })?;
+                    self.sleep();
+                }
+                RoundRole::Train(ri) => {
+                    idle_polls = 0;
+                    // Secure-aggregation SETUP happens before local
+                    // training (Bonawitz et al. round structure): the
+                    // encrypted Shamir shares of this round's DH seed
+                    // must reach the server first, so a device that dies
+                    // during/after training remains recoverable.
+                    if let Some(setup) = &ri.secagg {
+                        train_keys.push((ri.round, kp.clone()));
+                        if train_keys.len() > 8 {
+                            train_keys.remove(0);
+                        }
+                        SecAggParticipant::remember_roster(task_id, ri.round, &setup.roster);
+                        let participant = SecAggParticipant::new(task_id, ri.round, &kp);
+                        let shares =
+                            participant.make_shares(setup, self.client_id, &mut self.rng)?;
+                        self.api.call(Msg::SecAggShares {
+                            client_id: self.client_id,
+                            task_id,
+                            round: ri.round,
+                            shares,
+                        })?;
+                    }
+                    let model = ModelSnapshot::from_compressed(&ri.model_blob)?;
+                    let outcome =
+                        trainer.train(&model, ri.round, ri.train.lr, ri.train.prox_mu)?;
+                    if self.rng.chance(self.dropout_prob) {
+                        // Simulated device failure after training — the
+                        // upload never happens; the server recovers via
+                        // the shares distributed above.
+                        joined = false;
+                        continue;
+                    }
+                    let mut delta = model.delta_from(&outcome.new_params)?;
+                    if let Some(dp) = &self.local_dp {
+                        GaussianMechanism::privatize(&mut delta, dp, &mut self.rng);
+                    }
+                    let accepted = match &ri.secagg {
+                        None => self.upload_plain(task_id, &ri, &model, delta, &outcome)?,
+                        Some(setup) => {
+                            let participant =
+                                SecAggParticipant::new(task_id, ri.round, &kp);
+                            let quant = Quantizer::new(setup.quant_range, setup.quant_bits)?;
+                            let masked =
+                                participant.mask_update(setup, self.client_id, &quant, &delta);
+                            matches!(
+                                self.api.call(Msg::UploadMasked {
+                                    client_id: self.client_id,
+                                    task_id,
+                                    round: ri.round,
+                                    vg_id: setup.vg_id,
+                                    masked,
+                                    loss: outcome.loss,
+                                })?,
+                                Msg::Ack { ok: true, .. }
+                            )
+                        }
+                    };
+                    if accepted {
+                        report.rounds_participated += 1;
+                    } else {
+                        report.uploads_rejected += 1;
+                    }
+                    joined = false;
+                }
+            }
+        }
+    }
+
+    fn upload_plain(
+        &mut self,
+        task_id: u64,
+        ri: &crate::proto::RoundInstruction,
+        model: &ModelSnapshot,
+        delta: Vec<f32>,
+        outcome: &TrainOutcome,
+    ) -> Result<bool> {
+        Ok(matches!(
+            self.api.call(Msg::UploadPlain {
+                client_id: self.client_id,
+                task_id,
+                round: ri.round,
+                base_version: model.version,
+                delta,
+                weight: outcome.weight,
+                loss: outcome.loss,
+            })?,
+            Msg::Ack { ok: true, .. }
+        ))
+    }
+
+    fn sleep(&self) {
+        if self.poll_sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.poll_sleep_ms));
+        }
+    }
+}
+
+/// A trivial trainer: adds a constant to every parameter (scaling tests —
+/// the paper §5.2 "dummy task": each client sends an all-ones array).
+pub struct ConstantTrainer {
+    pub step: f32,
+}
+
+impl Trainer for ConstantTrainer {
+    fn train(
+        &mut self,
+        model: &ModelSnapshot,
+        _round: u64,
+        _lr: f32,
+        _prox_mu: f32,
+    ) -> Result<TrainOutcome> {
+        Ok(TrainOutcome {
+            new_params: model.params.iter().map(|p| p + self.step).collect(),
+            weight: 1.0,
+            loss: 0.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_trainer_shifts_params() {
+        let mut t = ConstantTrainer { step: 1.0 };
+        let m = ModelSnapshot::new(0, vec![0.0, 2.0]);
+        let out = t.train(&m, 0, 0.0, 0.0).unwrap();
+        assert_eq!(out.new_params, vec![1.0, 3.0]);
+        assert_eq!(m.delta_from(&out.new_params).unwrap(), vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,244 @@
+//! Client-side secure-aggregation participant (§4.1).
+//!
+//! Owns the per-round DH keypair and performs the three client-side
+//! duties: Shamir-share its seed to the VG, mask its quantized update,
+//! and decrypt+return shares of dropped peers during unmasking.
+
+use crate::crypto::shamir;
+use crate::crypto::x25519::{KeyPair, PublicKey};
+use crate::error::{Error, Result};
+use crate::proto::msg::{PeerShare, RecoveredShare};
+use crate::proto::{SecAggSetup, UnmaskRequest};
+use crate::quant::Quantizer;
+use crate::secagg;
+use crate::util::Rng;
+
+/// One round's participant state (wraps the round keypair).
+pub struct SecAggParticipant<'a> {
+    task_id: u64,
+    round: u64,
+    kp: &'a KeyPair,
+}
+
+impl<'a> SecAggParticipant<'a> {
+    pub fn new(task_id: u64, round: u64, kp: &'a KeyPair) -> SecAggParticipant<'a> {
+        SecAggParticipant { task_id, round, kp }
+    }
+
+    /// Shamir-share this client's DH seed among its VG peers, each share
+    /// encrypted under the pairwise stream key.
+    pub fn make_shares(
+        &self,
+        setup: &SecAggSetup,
+        me: u64,
+        rng: &mut Rng,
+    ) -> Result<Vec<PeerShare>> {
+        let peers: Vec<&(u64, [u8; 32])> =
+            setup.roster.iter().filter(|&&(id, _)| id != me).collect();
+        if peers.is_empty() {
+            return Err(Error::SecAgg("VG has no peers".into()));
+        }
+        let seed = self.kp.seed_bytes();
+        let shares = shamir::split(&seed, setup.threshold as usize, peers.len(), rng);
+        Ok(peers
+            .iter()
+            .zip(shares)
+            .map(|(&&(pid, ppk), sh)| {
+                let shared = self.kp.agree(&PublicKey(ppk));
+                let key = secagg::share_enc_key(&shared, self.task_id, self.round, me, pid);
+                let mut plain = Vec::with_capacity(1 + sh.y.len());
+                plain.push(sh.x);
+                plain.extend_from_slice(&sh.y);
+                PeerShare {
+                    peer: pid,
+                    enc: secagg::stream_xor(key, &plain),
+                }
+            })
+            .collect())
+    }
+
+    /// Quantize a pseudo-gradient and apply all pairwise masks.
+    pub fn mask_update(
+        &self,
+        setup: &SecAggSetup,
+        me: u64,
+        quant: &Quantizer,
+        delta: &[f32],
+    ) -> Vec<u32> {
+        let mut acc = quant.quantize(delta);
+        secagg::apply_pairwise_masks(
+            &mut acc,
+            me,
+            self.kp,
+            &setup.roster,
+            self.task_id,
+            self.round,
+        );
+        acc
+    }
+
+    /// Decrypt the encrypted shares of dropped peers addressed to `me`.
+    /// Requires the dropped peers' public keys, which arrive inside the
+    /// request via the stored roster — the server includes only (id, enc);
+    /// the participant must have kept the round roster. To keep the SDK
+    /// stateless here, the dropped peer's public key is recovered from the
+    /// UnmaskRequest context: the server addressed the share with the
+    /// pairwise key derived from DH(dropped_sk, my_pk) == DH(my_sk,
+    /// dropped_pk) — so the SDK keeps the roster in the setup it saw.
+    pub fn answer_unmask_with_roster(
+        &self,
+        req: &UnmaskRequest,
+        me: u64,
+        roster: &[(u64, [u8; 32])],
+    ) -> Result<Vec<RecoveredShare>> {
+        let mut out = Vec::with_capacity(req.dropped.len());
+        for (dropped, enc) in &req.dropped {
+            let pk = roster
+                .iter()
+                .find(|&&(id, _)| id == *dropped)
+                .map(|&(_, pk)| pk)
+                .ok_or_else(|| {
+                    Error::SecAgg(format!("dropped peer {dropped} not in my roster"))
+                })?;
+            let shared = self.kp.agree(&PublicKey(pk));
+            let key = secagg::share_enc_key(&shared, self.task_id, self.round, *dropped, me);
+            let plain = secagg::stream_xor(key, enc);
+            if plain.is_empty() {
+                return Err(Error::SecAgg("empty share".into()));
+            }
+            out.push(RecoveredShare {
+                dropped: *dropped,
+                x: plain[0],
+                y: plain[1..].to_vec(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Roster-less variant used by the SDK loop: the roster travelled
+    /// inside the round's SecAggSetup; the SDK stores it per round. When
+    /// unavailable (client restarted), unmasking is refused.
+    pub fn answer_unmask(&self, req: &UnmaskRequest, me: u64) -> Result<Vec<RecoveredShare>> {
+        let roster = ROSTER_CACHE.with(|c| {
+            c.borrow()
+                .get(&(self.task_id, req.round))
+                .cloned()
+        });
+        match roster {
+            Some(r) => self.answer_unmask_with_roster(req, me, &r),
+            None => Err(Error::SecAgg(
+                "no cached roster for unmask request (client restarted?)".into(),
+            )),
+        }
+    }
+
+    /// Cache the roster for later unmask duty (called by the SDK when it
+    /// receives a Train instruction with secagg).
+    pub fn remember_roster(task_id: u64, round: u64, roster: &[(u64, [u8; 32])]) {
+        ROSTER_CACHE.with(|c| {
+            c.borrow_mut().insert((task_id, round), roster.to_vec());
+        });
+    }
+}
+
+thread_local! {
+    /// (task, round) → roster. Client sessions are thread-confined in the
+    /// simulator, so a thread-local cache gives process isolation between
+    /// simulated devices for free.
+    static ROSTER_CACHE: std::cell::RefCell<std::collections::HashMap<(u64, u64), Vec<(u64, [u8; 32])>>> =
+        std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kp(seed: u64) -> KeyPair {
+        let mut rng = Rng::new(seed);
+        KeyPair::generate(&mut rng)
+    }
+
+    fn setup(ids: &[u64], kps: &[KeyPair]) -> SecAggSetup {
+        SecAggSetup {
+            vg_id: 0,
+            roster: ids
+                .iter()
+                .zip(kps)
+                .map(|(&id, k)| (id, k.public().0))
+                .collect(),
+            quant_range: 1.0,
+            quant_bits: 16,
+            threshold: 2,
+        }
+    }
+
+    #[test]
+    fn shares_decrypt_and_reconstruct_seed() {
+        let ids = [1u64, 2, 3, 4];
+        let kps: Vec<KeyPair> = (0..4).map(|i| kp(100 + i)).collect();
+        let s = setup(&ids, &kps);
+        let mut rng = Rng::new(9);
+        let alice = SecAggParticipant::new(5, 1, &kps[0]);
+        let shares = alice.make_shares(&s, 1, &mut rng).unwrap();
+        assert_eq!(shares.len(), 3);
+
+        // Two peers decrypt their shares → reconstruct alice's seed.
+        let mut plain_shares = Vec::new();
+        for (i, peer_id) in [(1usize, 2u64), (2usize, 3u64)] {
+            let peer = SecAggParticipant::new(5, 1, &kps[i]);
+            let req = UnmaskRequest {
+                round: 1,
+                vg_id: 0,
+                dropped: vec![(
+                    1,
+                    shares.iter().find(|ps| ps.peer == peer_id).unwrap().enc.clone(),
+                )],
+            };
+            let rec = peer
+                .answer_unmask_with_roster(&req, peer_id, &s.roster)
+                .unwrap();
+            plain_shares.push(shamir::Share {
+                x: rec[0].x,
+                y: rec[0].y.clone(),
+            });
+        }
+        let seed = shamir::reconstruct(&plain_shares).unwrap();
+        assert_eq!(seed, kps[0].seed_bytes().to_vec());
+        // And the seed regenerates the public key.
+        let rebuilt = KeyPair::from_seed(seed.try_into().unwrap());
+        assert_eq!(rebuilt.public().0, kps[0].public().0);
+    }
+
+    #[test]
+    fn mask_update_roundtrip_via_sum() {
+        let ids = [1u64, 2];
+        let kps: Vec<KeyPair> = (0..2).map(|i| kp(200 + i)).collect();
+        let s = setup(&ids, &kps);
+        let q = Quantizer::new(1.0, 16).unwrap();
+        let d1 = vec![0.5f32; 32];
+        let d2 = vec![-0.25f32; 32];
+        let p1 = SecAggParticipant::new(5, 2, &kps[0]);
+        let p2 = SecAggParticipant::new(5, 2, &kps[1]);
+        let m1 = p1.mask_update(&s, 1, &q, &d1);
+        let m2 = p2.mask_update(&s, 2, &q, &d2);
+        let mut sum = m1;
+        crate::quant::add_mod(&mut sum, &m2);
+        let mean = q.dequantize_sum_to_mean(&sum, 2).unwrap();
+        for m in mean {
+            assert!((m - 0.125).abs() < q.step(), "{m}");
+        }
+    }
+
+    #[test]
+    fn unmask_requires_roster() {
+        let kps = [kp(1)];
+        let p = SecAggParticipant::new(1, 1, &kps[0]);
+        let req = UnmaskRequest {
+            round: 1,
+            vg_id: 0,
+            dropped: vec![(9, vec![1, 2, 3])],
+        };
+        // Unknown dropped peer → error.
+        assert!(p.answer_unmask_with_roster(&req, 1, &[]).is_err());
+    }
+}

@@ -1,0 +1,382 @@
+//! Wire codec: length-framed binary encoding (the "gRPC path") plus JSON
+//! (the "REST path") for client-facing messages.
+//!
+//! The offline crate set has no protobuf/serde, so the platform defines a
+//! compact hand-rolled binary format: little-endian fixed ints, LEB128
+//! varints for lengths, raw LE f32 arrays for model payloads (bulk
+//! memcpy — this is the hot path that carries flat parameter vectors).
+
+use crate::error::{Error, Result};
+
+/// Binary encoder.
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Writer {
+        Writer {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    #[inline]
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// LEB128 unsigned varint.
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                return;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+
+    /// Bulk f32 array (length-prefixed, LE) — model payload hot path.
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_varint(xs.len() as u64);
+        self.buf.reserve(xs.len() * 4);
+        // Safe bulk copy: f32 → LE bytes. On LE targets this is a memcpy.
+        #[cfg(target_endian = "little")]
+        {
+            let bytes =
+                unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(target_endian = "big")]
+        {
+            for &x in xs {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    /// Bulk u32 array (length-prefixed, LE) — masked-update hot path.
+    pub fn put_u32s(&mut self, xs: &[u32]) {
+        self.put_varint(xs.len() as u64);
+        self.buf.reserve(xs.len() * 4);
+        #[cfg(target_endian = "little")]
+        {
+            let bytes =
+                unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(target_endian = "big")]
+        {
+            for &x in xs {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Binary decoder over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Codec(format!(
+                "short read: need {n}, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(Error::Codec(format!("bad bool byte {v}"))),
+        }
+    }
+
+    pub fn get_varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0;
+        loop {
+            let b = self.get_u8()?;
+            if shift >= 64 {
+                return Err(Error::Codec("varint overflow".into()));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_varint()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b).map_err(|e| Error::Codec(format!("bad utf8: {e}")))
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_varint()? as usize;
+        // Guard against hostile lengths before allocating.
+        if n > self.remaining() / 4 {
+            return Err(Error::Codec(format!("f32 array length {n} exceeds frame")));
+        }
+        let raw = self.take(n * 4)?;
+        // §Perf: bulk copy (unaligned-safe) instead of per-element
+        // from_le_bytes — this is the model-payload decode hot path.
+        #[cfg(target_endian = "little")]
+        {
+            let mut out = vec![0f32; n];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+            }
+            Ok(out)
+        }
+        #[cfg(target_endian = "big")]
+        {
+            let mut out = Vec::with_capacity(n);
+            for c in raw.chunks_exact(4) {
+                out.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            Ok(out)
+        }
+    }
+
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() / 4 {
+            return Err(Error::Codec(format!("u32 array length {n} exceeds frame")));
+        }
+        let raw = self.take(n * 4)?;
+        #[cfg(target_endian = "little")]
+        {
+            let mut out = vec![0u32; n];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+            }
+            Ok(out)
+        }
+        #[cfg(target_endian = "big")]
+        {
+            let mut out = Vec::with_capacity(n);
+            for c in raw.chunks_exact(4) {
+                out.push(u32::from_le_bytes(c.try_into().unwrap()));
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// A message that can cross the wire in the binary encoding.
+pub trait Wire: Sized {
+    fn encode(&self, w: &mut Writer);
+    fn decode(r: &mut Reader) -> Result<Self>;
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode(&mut w);
+        w.into_bytes()
+    }
+
+    fn from_bytes(b: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(b);
+        let v = Self::decode(&mut r)?;
+        if !r.is_empty() {
+            return Err(Error::Codec(format!("{} trailing bytes", r.remaining())));
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u16(65500);
+        w.put_u32(0xdeadbeef);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(1.5);
+        w.put_f64(-2.25);
+        w.put_bool(true);
+        w.put_str("héllo");
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u16().unwrap(), 65500);
+        assert_eq!(r.get_u32().unwrap(), 0xdeadbeef);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_f32().unwrap(), 1.5);
+        assert_eq!(r.get_f64().unwrap(), -2.25);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_str().unwrap(), "héllo");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn varint_edge_cases() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut w = Writer::new();
+            w.put_varint(v);
+            let buf = w.into_bytes();
+            assert_eq!(Reader::new(&buf).get_varint().unwrap(), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f32s_roundtrip() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 100.0).collect();
+        let mut w = Writer::new();
+        w.put_f32s(&xs);
+        let buf = w.into_bytes();
+        assert_eq!(Reader::new(&buf).get_f32s().unwrap(), xs);
+    }
+
+    #[test]
+    fn u32s_roundtrip() {
+        let xs: Vec<u32> = (0..777u32).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+        let mut w = Writer::new();
+        w.put_u32s(&xs);
+        let buf = w.into_bytes();
+        assert_eq!(Reader::new(&buf).get_u32s().unwrap(), xs);
+    }
+
+    #[test]
+    fn short_reads_error() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.get_u32().is_err());
+        let mut r = Reader::new(&[]);
+        assert!(r.get_u8().is_err());
+    }
+
+    #[test]
+    fn hostile_length_rejected() {
+        // Claim a huge array but supply 4 bytes — must error, not OOM.
+        let mut w = Writer::new();
+        w.put_varint(u32::MAX as u64);
+        w.put_u32(0);
+        let buf = w.into_bytes();
+        assert!(Reader::new(&buf).get_f32s().is_err());
+        assert!(Reader::new(&buf).get_u32s().is_err());
+    }
+
+    #[test]
+    fn bad_bool_rejected() {
+        let mut r = Reader::new(&[9]);
+        assert!(r.get_bool().is_err());
+    }
+
+    #[test]
+    fn varint_overflow_rejected() {
+        let buf = [0xffu8; 11];
+        assert!(Reader::new(&buf).get_varint().is_err());
+    }
+}

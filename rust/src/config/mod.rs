@@ -1,0 +1,360 @@
+//! Task configuration (§3.3.1 task creation) and artifact manifest.
+
+use crate::dp::{DpConfig, DpMode};
+use crate::error::{Error, Result};
+use crate::proto::SelectionCriteria;
+use crate::util::json::{parse as json_parse, Json};
+
+/// Synchronous rounds vs buffered asynchronous federation (§2, §4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlMode {
+    Sync,
+    /// Buffered async: flush the buffer every `buffer_size` uploads.
+    Async { buffer_size: usize },
+}
+
+/// Everything the ML scientist specifies when creating a task (§3.3.1).
+#[derive(Clone, Debug)]
+pub struct TaskConfig {
+    pub task_name: String,
+    pub app_name: String,
+    pub workflow_name: String,
+
+    /// Artifact preset executed on-device ("tiny", "micro").
+    pub preset: String,
+
+    /// Clients per round (sync) / per buffer epoch (async).
+    pub clients_per_round: usize,
+    /// Total rounds (sync) or buffer flushes (async).
+    pub total_rounds: u64,
+
+    pub mode: FlMode,
+    /// Aggregation strategy name: fedavg | fedprox | dga | fedbuff.
+    pub aggregator: String,
+    /// Server learning rate applied to the aggregated pseudo-gradient.
+    pub server_lr: f32,
+    /// Client learning rate (paper §5.1: 5e-4).
+    pub client_lr: f32,
+    /// FedProx μ (0 disables the proximal term).
+    pub prox_mu: f32,
+
+    /// Secure aggregation on/off + virtual-group size (§3.1.2).
+    pub secure_agg: bool,
+    pub vg_size: usize,
+    /// Quantizer for the masked path.
+    pub quant_range: f32,
+    pub quant_bits: u32,
+
+    pub dp: DpConfig,
+    /// Population size assumed by the privacy accountant (paper: 100).
+    pub dp_population: usize,
+
+    pub selection: SelectionCriteria,
+    /// Round upload deadline in ms.
+    pub round_timeout_ms: u64,
+    /// Fraction of the cohort that must report for a sync round to commit
+    /// (stragglers beyond this are dropped, §2 "fault-tolerant methods").
+    pub min_report_fraction: f64,
+}
+
+impl Default for TaskConfig {
+    fn default() -> Self {
+        TaskConfig {
+            task_name: "task".into(),
+            app_name: "app".into(),
+            workflow_name: "workflow".into(),
+            preset: "tiny".into(),
+            clients_per_round: 32,
+            total_rounds: 10,
+            mode: FlMode::Sync,
+            aggregator: "fedavg".into(),
+            server_lr: 1.0,
+            client_lr: 5e-4,
+            prox_mu: 0.0,
+            secure_agg: false,
+            vg_size: 16,
+            quant_range: 4.0,
+            quant_bits: 18,
+            dp: DpConfig::off(),
+            dp_population: 100,
+            selection: SelectionCriteria::default(),
+            round_timeout_ms: 120_000,
+            min_report_fraction: 0.8,
+        }
+    }
+}
+
+impl TaskConfig {
+    /// Validate invariants at task-creation time.
+    pub fn validate(&self) -> Result<()> {
+        if self.clients_per_round == 0 {
+            return Err(Error::Config("clients_per_round must be > 0".into()));
+        }
+        if self.total_rounds == 0 {
+            return Err(Error::Config("total_rounds must be > 0".into()));
+        }
+        if let FlMode::Async { buffer_size } = self.mode {
+            if buffer_size == 0 {
+                return Err(Error::Config("async buffer_size must be > 0".into()));
+            }
+            if self.secure_agg {
+                return Err(Error::Config(
+                    "async mode relies on an attested aggregator (§4.3); \
+                     pairwise-mask secure aggregation requires sync rounds"
+                        .into(),
+                ));
+            }
+        }
+        if self.secure_agg {
+            if self.vg_size < 2 {
+                return Err(Error::Config("vg_size must be >= 2".into()));
+            }
+            crate::quant::Quantizer::new(self.quant_range, self.quant_bits)?;
+        }
+        if !(self.min_report_fraction > 0.0 && self.min_report_fraction <= 1.0) {
+            return Err(Error::Config("min_report_fraction must be in (0,1]".into()));
+        }
+        if !(self.server_lr.is_finite() && self.client_lr.is_finite()) {
+            return Err(Error::Config("non-finite learning rate".into()));
+        }
+        crate::aggregation::by_name(&self.aggregator, self.prox_mu)?;
+        Ok(())
+    }
+
+    /// Parse from JSON (CLI `create-task --config file.json`).
+    pub fn from_json(j: &Json) -> Result<TaskConfig> {
+        let d = TaskConfig::default();
+        let mode = match j.opt_str("mode", "sync").as_str() {
+            "sync" => FlMode::Sync,
+            "async" => FlMode::Async {
+                buffer_size: j.opt_usize("buffer_size", 32),
+            },
+            other => return Err(Error::Config(format!("bad mode {other:?}"))),
+        };
+        let dp_mode = match j.opt_str("dp_mode", "off").as_str() {
+            "off" => DpMode::Off,
+            "local" => DpMode::Local,
+            "central" => DpMode::Central,
+            other => return Err(Error::Config(format!("bad dp_mode {other:?}"))),
+        };
+        let cfg = TaskConfig {
+            task_name: j.opt_str("task_name", &d.task_name),
+            app_name: j.opt_str("app_name", &d.app_name),
+            workflow_name: j.opt_str("workflow_name", &d.workflow_name),
+            preset: j.opt_str("preset", &d.preset),
+            clients_per_round: j.opt_usize("clients_per_round", d.clients_per_round),
+            total_rounds: j.opt_usize("total_rounds", d.total_rounds as usize) as u64,
+            mode,
+            aggregator: j.opt_str("aggregator", &d.aggregator),
+            server_lr: j.opt_f64("server_lr", d.server_lr as f64) as f32,
+            client_lr: j.opt_f64("client_lr", d.client_lr as f64) as f32,
+            prox_mu: j.opt_f64("prox_mu", 0.0) as f32,
+            secure_agg: j.opt_bool("secure_agg", d.secure_agg),
+            vg_size: j.opt_usize("vg_size", d.vg_size),
+            quant_range: j.opt_f64("quant_range", d.quant_range as f64) as f32,
+            quant_bits: j.opt_usize("quant_bits", d.quant_bits as usize) as u32,
+            dp: DpConfig {
+                mode: dp_mode,
+                clip_norm: j.opt_f64("dp_clip", 0.5),
+                noise_multiplier: j.opt_f64("dp_sigma", 0.08),
+            },
+            dp_population: j.opt_usize("dp_population", d.dp_population),
+            selection: SelectionCriteria::default(),
+            round_timeout_ms: j.opt_usize("round_timeout_ms", d.round_timeout_ms as usize) as u64,
+            min_report_fraction: j.opt_f64("min_report_fraction", d.min_report_fraction),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<TaskConfig> {
+        Self::from_json(&json_parse(s).map_err(Error::Config)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let (mode, buffer) = match self.mode {
+            FlMode::Sync => ("sync", 0usize),
+            FlMode::Async { buffer_size } => ("async", buffer_size),
+        };
+        let dp_mode = match self.dp.mode {
+            DpMode::Off => "off",
+            DpMode::Local => "local",
+            DpMode::Central => "central",
+        };
+        Json::obj()
+            .set("task_name", self.task_name.as_str())
+            .set("app_name", self.app_name.as_str())
+            .set("workflow_name", self.workflow_name.as_str())
+            .set("preset", self.preset.as_str())
+            .set("clients_per_round", self.clients_per_round)
+            .set("total_rounds", self.total_rounds)
+            .set("mode", mode)
+            .set("buffer_size", buffer)
+            .set("aggregator", self.aggregator.as_str())
+            .set("server_lr", self.server_lr as f64)
+            .set("client_lr", self.client_lr as f64)
+            .set("prox_mu", self.prox_mu as f64)
+            .set("secure_agg", self.secure_agg)
+            .set("vg_size", self.vg_size)
+            .set("quant_range", self.quant_range as f64)
+            .set("quant_bits", self.quant_bits as usize)
+            .set("dp_mode", dp_mode)
+            .set("dp_clip", self.dp.clip_norm)
+            .set("dp_sigma", self.dp.noise_multiplier)
+            .set("dp_population", self.dp_population)
+            .set("round_timeout_ms", self.round_timeout_ms as usize)
+            .set("min_report_fraction", self.min_report_fraction)
+    }
+}
+
+/// One preset entry from `artifacts/manifest.json` (written by aot.py).
+#[derive(Clone, Debug)]
+pub struct ArtifactPreset {
+    pub name: String,
+    pub param_count: usize,
+    pub train_path: String,
+    pub eval_path: String,
+    pub init_path: String,
+    pub local_steps: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub presets: Vec<ArtifactPreset>,
+    /// Directory the paths are relative to.
+    pub dir: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Config(format!("read {path}: {e}")))?;
+        let j = json_parse(&text).map_err(Error::Config)?;
+        let presets = j
+            .get("presets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("manifest missing presets".into()))?;
+        let mut out = Vec::new();
+        for p in presets {
+            let train = p
+                .get("train")
+                .ok_or_else(|| Error::Config("preset missing train".into()))?;
+            let eval = p
+                .get("eval")
+                .ok_or_else(|| Error::Config("preset missing eval".into()))?;
+            let model = p
+                .get("model")
+                .ok_or_else(|| Error::Config("preset missing model".into()))?;
+            out.push(ArtifactPreset {
+                name: p.req_str("preset").map_err(Error::Config)?.to_string(),
+                param_count: p.req_usize("param_count").map_err(Error::Config)?,
+                train_path: train.req_str("path").map_err(Error::Config)?.to_string(),
+                eval_path: eval.req_str("path").map_err(Error::Config)?.to_string(),
+                init_path: p.req_str("init_params").map_err(Error::Config)?.to_string(),
+                local_steps: train.req_usize("local_steps").map_err(Error::Config)?,
+                batch: train.req_usize("batch").map_err(Error::Config)?,
+                eval_batch: eval.req_usize("batch").map_err(Error::Config)?,
+                vocab: model.req_usize("vocab").map_err(Error::Config)?,
+                seq_len: model.req_usize("seq_len").map_err(Error::Config)?,
+            });
+        }
+        Ok(Manifest {
+            presets: out,
+            dir: dir.to_string(),
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&ArtifactPreset> {
+        self.presets
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| Error::Config(format!("preset {name:?} not in manifest")))
+    }
+
+    pub fn path_of(&self, rel: &str) -> String {
+        format!("{}/{}", self.dir, rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        TaskConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = TaskConfig::default();
+        cfg.secure_agg = true;
+        cfg.vg_size = 8;
+        cfg.dp = DpConfig::paper_local();
+        let j = cfg.to_json();
+        let back = TaskConfig::from_json(&j).unwrap();
+        assert_eq!(back.task_name, cfg.task_name);
+        assert_eq!(back.secure_agg, true);
+        assert_eq!(back.vg_size, 8);
+        assert_eq!(back.dp.mode, DpMode::Local);
+        assert!((back.dp.clip_norm - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn async_config_roundtrip() {
+        let mut cfg = TaskConfig::default();
+        cfg.mode = FlMode::Async { buffer_size: 32 };
+        cfg.aggregator = "fedbuff".into();
+        let back = TaskConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.mode, FlMode::Async { buffer_size: 32 });
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = TaskConfig::default();
+        c.clients_per_round = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = TaskConfig::default();
+        c.mode = FlMode::Async { buffer_size: 0 };
+        assert!(c.validate().is_err());
+
+        // secagg + async is a documented incompatibility
+        let mut c = TaskConfig::default();
+        c.mode = FlMode::Async { buffer_size: 8 };
+        c.secure_agg = true;
+        assert!(c.validate().is_err());
+
+        let mut c = TaskConfig::default();
+        c.secure_agg = true;
+        c.vg_size = 1;
+        assert!(c.validate().is_err());
+
+        let mut c = TaskConfig::default();
+        c.aggregator = "nope".into();
+        assert!(c.validate().is_err());
+
+        let mut c = TaskConfig::default();
+        c.min_report_fraction = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_str_defaults() {
+        let cfg = TaskConfig::from_json_str(r#"{"task_name":"t1","mode":"sync"}"#).unwrap();
+        assert_eq!(cfg.task_name, "t1");
+        assert_eq!(cfg.clients_per_round, 32);
+    }
+
+    #[test]
+    fn bad_mode_rejected() {
+        assert!(TaskConfig::from_json_str(r#"{"mode":"quantum"}"#).is_err());
+        assert!(TaskConfig::from_json_str(r#"{"dp_mode":"??"}"#).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Simulated device-integrity attestation (§3.1.5).
+//!
+//! The paper validates Google Play Integrity / Huawei SysIntegrity
+//! verdicts issued by a trusted third party. Offline, we simulate that
+//! third party as an "integrity authority" holding an HMAC key: devices
+//! obtain signed verdicts (device id, tier, nonce, expiry), and the
+//! Authentication Service verifies signature, nonce freshness, and expiry
+//! before admitting the device. This exercises the same admission path.
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Integrity tier reported by the (simulated) authority.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IntegrityTier {
+    /// Basic device integrity only.
+    Basic = 0,
+    /// Device passes full integrity checks.
+    Device = 1,
+    /// Hardware-backed strong integrity.
+    Strong = 2,
+}
+
+impl IntegrityTier {
+    pub fn from_u8(v: u8) -> Option<IntegrityTier> {
+        match v {
+            0 => Some(IntegrityTier::Basic),
+            1 => Some(IntegrityTier::Device),
+            2 => Some(IntegrityTier::Strong),
+            _ => None,
+        }
+    }
+}
+
+/// A signed attestation verdict, presented by the device at registration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Verdict {
+    pub device_id: String,
+    pub tier: IntegrityTier,
+    pub nonce: u64,
+    /// Expiry, milliseconds since the platform epoch.
+    pub expires_ms: u64,
+    pub sig: [u8; 32],
+}
+
+/// The simulated trusted authority (e.g. Play Integrity back end).
+pub struct Authority {
+    key: Vec<u8>,
+}
+
+impl Authority {
+    pub fn new(key: &[u8]) -> Authority {
+        Authority { key: key.to_vec() }
+    }
+
+    fn mac(&self, device_id: &str, tier: IntegrityTier, nonce: u64, expires_ms: u64) -> [u8; 32] {
+        let mut m = <HmacSha256 as Mac>::new_from_slice(&self.key).unwrap();
+        m.update(device_id.as_bytes());
+        m.update(&[tier as u8]);
+        m.update(&nonce.to_le_bytes());
+        m.update(&expires_ms.to_le_bytes());
+        let mut out = [0u8; 32];
+        out.copy_from_slice(&m.finalize().into_bytes());
+        out
+    }
+
+    /// Issue a verdict for a device (authority side).
+    pub fn issue(
+        &self,
+        device_id: &str,
+        tier: IntegrityTier,
+        nonce: u64,
+        expires_ms: u64,
+    ) -> Verdict {
+        Verdict {
+            device_id: device_id.to_string(),
+            tier,
+            nonce,
+            expires_ms,
+            sig: self.mac(device_id, tier, nonce, expires_ms),
+        }
+    }
+
+    /// Verify a verdict's signature (verifier side; constant-time compare).
+    pub fn verify(&self, v: &Verdict) -> bool {
+        use subtle::ConstantTimeEq;
+        let want = self.mac(&v.device_id, v.tier, v.nonce, v.expires_ms);
+        want.ct_eq(&v.sig).into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_verify_roundtrip() {
+        let auth = Authority::new(b"integrity-authority-key");
+        let v = auth.issue("device-1", IntegrityTier::Device, 42, 1_000_000);
+        assert!(auth.verify(&v));
+    }
+
+    #[test]
+    fn tampering_detected() {
+        let auth = Authority::new(b"k");
+        let mut v = auth.issue("device-1", IntegrityTier::Strong, 1, 99);
+        v.device_id = "device-2".into();
+        assert!(!auth.verify(&v));
+
+        let mut v2 = auth.issue("device-1", IntegrityTier::Basic, 1, 99);
+        v2.tier = IntegrityTier::Strong; // tier upgrade forgery
+        assert!(!auth.verify(&v2));
+
+        let mut v3 = auth.issue("device-1", IntegrityTier::Basic, 1, 99);
+        v3.expires_ms = u64::MAX; // expiry extension forgery
+        assert!(!auth.verify(&v3));
+    }
+
+    #[test]
+    fn wrong_authority_key_rejected() {
+        let a = Authority::new(b"key-a");
+        let b = Authority::new(b"key-b");
+        let v = a.issue("d", IntegrityTier::Device, 7, 10);
+        assert!(!b.verify(&v));
+    }
+
+    #[test]
+    fn tier_ordering_supports_criteria() {
+        assert!(IntegrityTier::Strong > IntegrityTier::Device);
+        assert!(IntegrityTier::Device > IntegrityTier::Basic);
+        assert_eq!(IntegrityTier::from_u8(1), Some(IntegrityTier::Device));
+        assert_eq!(IntegrityTier::from_u8(9), None);
+    }
+}

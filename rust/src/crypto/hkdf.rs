@@ -1,0 +1,103 @@
+//! HKDF-SHA256 (RFC 5869): the cross-platform key derivation function.
+//!
+//! Paper §4.1: "Florida utilizes strong and cross-platform compatible key
+//! derivation functions (KDFs) to ensure consistent mask generation even
+//! across different device operating systems." Every simulated client —
+//! whatever transport/codec it speaks — derives pairwise mask seeds with
+//! exactly this function, so masks cancel bit-for-bit.
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// HKDF-Extract: PRK = HMAC(salt, ikm).
+pub fn extract(salt: &[u8], ikm: &[u8]) -> [u8; 32] {
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(salt).expect("hmac accepts any key len");
+    mac.update(ikm);
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&mac.finalize().into_bytes());
+    out
+}
+
+/// HKDF-Expand: OKM of `len` bytes from PRK and info.
+pub fn expand(prk: &[u8; 32], info: &[u8], len: usize) -> Vec<u8> {
+    assert!(len <= 255 * 32, "hkdf expand length limit");
+    let mut okm = Vec::with_capacity(len);
+    let mut t: Vec<u8> = Vec::new();
+    let mut counter = 1u8;
+    while okm.len() < len {
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(prk).unwrap();
+        mac.update(&t);
+        mac.update(info);
+        mac.update(&[counter]);
+        t = mac.finalize().into_bytes().to_vec();
+        let take = (len - okm.len()).min(32);
+        okm.extend_from_slice(&t[..take]);
+        counter += 1;
+    }
+    okm
+}
+
+/// Extract-then-expand convenience.
+pub fn derive(salt: &[u8], ikm: &[u8], info: &[u8], len: usize) -> Vec<u8> {
+    expand(&extract(salt, ikm), info, len)
+}
+
+/// Derive a fixed 16-byte key (AES-128 mask PRG seed).
+pub fn derive_key16(salt: &[u8], ikm: &[u8], info: &[u8]) -> [u8; 16] {
+    let v = derive(salt, ikm, info, 16);
+    let mut k = [0u8; 16];
+    k.copy_from_slice(&v);
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    // RFC 5869 Test Case 1.
+    #[test]
+    fn rfc5869_case1() {
+        let ikm = hex::decode("0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b").unwrap();
+        let salt = hex::decode("000102030405060708090a0b0c").unwrap();
+        let info = hex::decode("f0f1f2f3f4f5f6f7f8f9").unwrap();
+        let prk = extract(&salt, &ikm);
+        assert_eq!(
+            hex::encode(&prk),
+            "077709362c2e32df0ddc3f0dc47bba6390b6c73bb50f9c3122ec844ad7c2b3e5"
+        );
+        let okm = expand(&prk, &info, 42);
+        assert_eq!(
+            hex::encode(&okm),
+            "3cb25f25faacd57a90434f64d0362f2a2d2d0a90cf1a5a4c5db02d56ecc4c5bf34007208d5b887185865"
+        );
+    }
+
+    // RFC 5869 Test Case 3 (empty salt/info).
+    #[test]
+    fn rfc5869_case3() {
+        let ikm = hex::decode("0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b0b").unwrap();
+        let okm = derive(&[], &ikm, &[], 42);
+        assert_eq!(
+            hex::encode(&okm),
+            "8da4e775a563c18f715f802a063c5a31b8a11f5c5ee1879ec3454e5f3c738d2d9d201395faa4b61a96c8"
+        );
+    }
+
+    #[test]
+    fn different_info_different_keys() {
+        let k1 = derive_key16(b"salt", b"secret", b"pair:1:2");
+        let k2 = derive_key16(b"salt", b"secret", b"pair:1:3");
+        assert_ne!(k1, k2);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            derive_key16(b"s", b"i", b"x"),
+            derive_key16(b"s", b"i", b"x")
+        );
+    }
+}

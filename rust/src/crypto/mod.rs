@@ -1,0 +1,23 @@
+//! Cryptographic substrate for secure aggregation and attestation (§4.1).
+//!
+//! The paper's SDK contribution includes *mutually compatible key
+//! derivation across heterogeneous platforms*; this module is the single
+//! implementation all simulated "platforms" share:
+//!
+//! * [`x25519`] — Diffie–Hellman on Curve25519 (RFC 7748), from scratch
+//!   (the offline crate set has no curve library).
+//! * [`hkdf`] — HKDF-SHA256 (RFC 5869) over the `hmac`/`sha2` crates.
+//! * [`prg`] — AES-128-CTR pseudo-random generator expanding a pairwise
+//!   shared secret into a mask over ℤ_{2³²} vectors.
+//! * [`shamir`] — t-of-n secret sharing over GF(2⁸) for dropout recovery.
+//! * [`attest`] — HMAC-signed device-integrity verdicts (the simulated
+//!   Play-Integrity / SysIntegrity authority).
+
+pub mod attest;
+pub mod hkdf;
+pub mod prg;
+pub mod shamir;
+pub mod x25519;
+
+pub use prg::MaskPrg;
+pub use x25519::{KeyPair, PublicKey, SharedSecret};

@@ -1,0 +1,189 @@
+//! Shamir t-of-n secret sharing over GF(2⁸) — dropout recovery (§4.1).
+//!
+//! In the pairwise-mask protocol, if a client drops out after peers have
+//! applied masks involving it, its mask seeds must be reconstructable by
+//! the surviving quorum or the virtual-group sum is garbage. Each client
+//! therefore secret-shares its DH seed among the VG; the Secure Aggregator
+//! collects t shares from survivors to unmask a dropout's contributions.
+//! (Bonawitz et al. 2016 — the scheme Florida's §4.1 references.)
+
+/// GF(2^8) with the AES polynomial x^8+x^4+x^3+x+1 (0x11b).
+
+#[inline]
+fn gf_mul(mut a: u8, mut b: u8) -> u8 {
+    let mut p = 0u8;
+    for _ in 0..8 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        let hi = a & 0x80;
+        a <<= 1;
+        if hi != 0 {
+            a ^= 0x1b;
+        }
+        b >>= 1;
+    }
+    p
+}
+
+fn gf_pow(mut a: u8, mut e: u32) -> u8 {
+    let mut r = 1u8;
+    while e > 0 {
+        if e & 1 == 1 {
+            r = gf_mul(r, a);
+        }
+        a = gf_mul(a, a);
+        e >>= 1;
+    }
+    r
+}
+
+#[inline]
+fn gf_inv(a: u8) -> u8 {
+    assert!(a != 0, "no inverse of 0");
+    gf_pow(a, 254) // a^(2^8-2)
+}
+
+/// One share: (x, y-vector) — x is the share index (1..=255).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Share {
+    pub x: u8,
+    pub y: Vec<u8>,
+}
+
+/// Split `secret` into `n` shares with threshold `t` (any t reconstruct).
+pub fn split(
+    secret: &[u8],
+    t: usize,
+    n: usize,
+    rng: &mut crate::util::Rng,
+) -> Vec<Share> {
+    assert!(t >= 1 && t <= n && n <= 255, "bad (t,n) = ({t},{n})");
+    // One random polynomial of degree t-1 per secret byte; share i gets
+    // the evaluations at x = i.
+    let mut coeffs: Vec<Vec<u8>> = Vec::with_capacity(secret.len());
+    for &s in secret {
+        let mut c = vec![s];
+        for _ in 1..t {
+            c.push(rng.next_u32() as u8);
+        }
+        coeffs.push(c);
+    }
+    (1..=n as u8)
+        .map(|x| {
+            let y = coeffs
+                .iter()
+                .map(|c| {
+                    // Horner in GF(2^8).
+                    let mut acc = 0u8;
+                    for &ci in c.iter().rev() {
+                        acc = gf_mul(acc, x) ^ ci;
+                    }
+                    acc
+                })
+                .collect();
+            Share { x, y }
+        })
+        .collect()
+}
+
+/// Reconstruct the secret from >= t shares (Lagrange at x=0).
+pub fn reconstruct(shares: &[Share]) -> Result<Vec<u8>, String> {
+    if shares.is_empty() {
+        return Err("no shares".into());
+    }
+    let len = shares[0].y.len();
+    if shares.iter().any(|s| s.y.len() != len) {
+        return Err("inconsistent share lengths".into());
+    }
+    let mut xs: Vec<u8> = shares.iter().map(|s| s.x).collect();
+    xs.sort_unstable();
+    xs.dedup();
+    if xs.len() != shares.len() {
+        return Err("duplicate share indices".into());
+    }
+    let mut secret = vec![0u8; len];
+    for (i, si) in shares.iter().enumerate() {
+        // Lagrange basis at 0: prod_{j!=i} x_j / (x_j ^ x_i)  (GF: sub==xor)
+        let mut num = 1u8;
+        let mut den = 1u8;
+        for (j, sj) in shares.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            num = gf_mul(num, sj.x);
+            den = gf_mul(den, sj.x ^ si.x);
+        }
+        let l = gf_mul(num, gf_inv(den));
+        for (k, &yk) in si.y.iter().enumerate() {
+            secret[k] ^= gf_mul(l, yk);
+        }
+    }
+    Ok(secret)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gf_field_axioms_spot() {
+        // 1 is identity; a*inv(a)=1 for all nonzero a.
+        for a in 1..=255u8 {
+            assert_eq!(gf_mul(a, 1), a);
+            assert_eq!(gf_mul(a, gf_inv(a)), 1, "a={a}");
+        }
+        // commutativity sample
+        assert_eq!(gf_mul(0x57, 0x83), gf_mul(0x83, 0x57));
+        // known AES vector: 0x57 * 0x83 = 0xc1
+        assert_eq!(gf_mul(0x57, 0x83), 0xc1);
+    }
+
+    #[test]
+    fn roundtrip_with_exact_threshold() {
+        let mut rng = Rng::new(1);
+        let secret = b"x25519-seed-material-0123456789a".to_vec();
+        let shares = split(&secret, 3, 5, &mut rng);
+        assert_eq!(shares.len(), 5);
+        let got = reconstruct(&shares[..3]).unwrap();
+        assert_eq!(got, secret);
+        // Any other subset of 3 also works.
+        let got = reconstruct(&[shares[1].clone(), shares[3].clone(), shares[4].clone()]).unwrap();
+        assert_eq!(got, secret);
+    }
+
+    #[test]
+    fn more_than_threshold_also_works() {
+        let mut rng = Rng::new(2);
+        let secret = vec![42u8; 16];
+        let shares = split(&secret, 2, 4, &mut rng);
+        assert_eq!(reconstruct(&shares).unwrap(), secret);
+    }
+
+    #[test]
+    fn below_threshold_reveals_nothing_useful() {
+        // With t-1 shares reconstruction gives the wrong value (w.h.p.) —
+        // and information-theoretically each single share is uniform.
+        let mut rng = Rng::new(3);
+        let secret = vec![7u8; 8];
+        let shares = split(&secret, 3, 5, &mut rng);
+        let wrong = reconstruct(&shares[..2]).unwrap();
+        assert_ne!(wrong, secret);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_empty() {
+        let mut rng = Rng::new(4);
+        let shares = split(b"s", 2, 3, &mut rng);
+        assert!(reconstruct(&[]).is_err());
+        assert!(reconstruct(&[shares[0].clone(), shares[0].clone()]).is_err());
+    }
+
+    #[test]
+    fn one_of_one() {
+        let mut rng = Rng::new(5);
+        let shares = split(b"solo", 1, 1, &mut rng);
+        assert_eq!(reconstruct(&shares).unwrap(), b"solo".to_vec());
+    }
+}

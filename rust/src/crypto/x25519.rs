@@ -1,0 +1,414 @@
+//! X25519 Diffie–Hellman (RFC 7748), implemented from scratch.
+//!
+//! Field arithmetic over GF(2²⁵⁵ − 19) with 51-bit limbs (u64×5, u128
+//! products) and the constant-time Montgomery ladder. This is the pairwise
+//! key-exchange primitive of the secure-aggregation protocol (§4.1):
+//! every client advertises a public key; each pair derives the same shared
+//! secret, which seeds the pairwise mask PRG via HKDF.
+//!
+//! Verified against the RFC 7748 test vectors in the unit tests below.
+
+/// A field element mod 2^255-19, 5×51-bit limbs, loosely reduced.
+#[derive(Clone, Copy, Debug)]
+struct Fe([u64; 5]);
+
+const MASK51: u64 = (1u64 << 51) - 1;
+
+impl Fe {
+    const ZERO: Fe = Fe([0; 5]);
+    const ONE: Fe = Fe([1, 0, 0, 0, 0]);
+
+    fn from_bytes(b: &[u8; 32]) -> Fe {
+        let load = |i: usize| -> u64 {
+            let mut v = [0u8; 8];
+            v.copy_from_slice(&b[i..i + 8]);
+            u64::from_le_bytes(v)
+        };
+        // 51-bit slices of the little-endian 255-bit integer.
+        Fe([
+            load(0) & MASK51,
+            (load(6) >> 3) & MASK51,
+            (load(12) >> 6) & MASK51,
+            (load(19) >> 1) & MASK51,
+            (load(24) >> 12) & MASK51,
+        ])
+    }
+
+    fn to_bytes(self) -> [u8; 32] {
+        // Fully carry so every limb < 2^51.
+        let mut t = self.reduce_once().reduce_once().0;
+        // Canonical freeze (ref10 trick): q = 1 iff t >= p, computed by
+        // propagating the carry of t + 19 through the limbs.
+        let mut q = (t[0].wrapping_add(19)) >> 51;
+        q = (t[1] + q) >> 51;
+        q = (t[2] + q) >> 51;
+        q = (t[3] + q) >> 51;
+        q = (t[4] + q) >> 51;
+        // t = t + 19*q, then drop bit 255 — equivalent to t mod p.
+        t[0] += 19 * q;
+        t[1] += t[0] >> 51;
+        t[0] &= MASK51;
+        t[2] += t[1] >> 51;
+        t[1] &= MASK51;
+        t[3] += t[2] >> 51;
+        t[2] &= MASK51;
+        t[4] += t[3] >> 51;
+        t[3] &= MASK51;
+        t[4] &= MASK51; // discard 2^255
+        let mut b = [0u8; 32];
+        let mut acc: u128 = 0;
+        let mut acc_bits = 0;
+        let mut bi = 0;
+        for &limb in &t {
+            acc |= (limb as u128) << acc_bits;
+            acc_bits += 51;
+            while acc_bits >= 8 && bi < 32 {
+                b[bi] = (acc & 0xff) as u8;
+                acc >>= 8;
+                acc_bits -= 8;
+                bi += 1;
+            }
+        }
+        while bi < 32 {
+            b[bi] = (acc & 0xff) as u8;
+            acc >>= 8;
+            bi += 1;
+        }
+        b
+    }
+
+    fn reduce_once(self) -> Fe {
+        let mut t = self.0;
+        let mut c: u64;
+        c = t[0] >> 51;
+        t[0] &= MASK51;
+        t[1] += c;
+        c = t[1] >> 51;
+        t[1] &= MASK51;
+        t[2] += c;
+        c = t[2] >> 51;
+        t[2] &= MASK51;
+        t[3] += c;
+        c = t[3] >> 51;
+        t[3] &= MASK51;
+        t[4] += c;
+        c = t[4] >> 51;
+        t[4] &= MASK51;
+        t[0] += c * 19;
+        c = t[0] >> 51;
+        t[0] &= MASK51;
+        t[1] += c;
+        Fe(t)
+    }
+
+    fn add(self, rhs: Fe) -> Fe {
+        let a = self.0;
+        let b = rhs.0;
+        Fe([a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3], a[4] + b[4]]).reduce_once()
+    }
+
+    fn sub(self, rhs: Fe) -> Fe {
+        // Add 2p to avoid underflow.
+        let a = self.0;
+        let b = rhs.0;
+        Fe([
+            a[0] + 0xFFFFFFFFFFFDA_u64 - b[0],
+            a[1] + 0xFFFFFFFFFFFFE_u64 - b[1],
+            a[2] + 0xFFFFFFFFFFFFE_u64 - b[2],
+            a[3] + 0xFFFFFFFFFFFFE_u64 - b[3],
+            a[4] + 0xFFFFFFFFFFFFE_u64 - b[4],
+        ])
+        .reduce_once()
+    }
+
+    fn mul(self, rhs: Fe) -> Fe {
+        let a = self.0;
+        let b = rhs.0;
+        let a0 = a[0] as u128;
+        let a1 = a[1] as u128;
+        let a2 = a[2] as u128;
+        let a3 = a[3] as u128;
+        let a4 = a[4] as u128;
+        let b0 = b[0] as u128;
+        let b1 = b[1] as u128;
+        let b2 = b[2] as u128;
+        let b3 = b[3] as u128;
+        let b4 = b[4] as u128;
+        // Terms that wrap past 2^255 pick up a factor 19.
+        let c0 = a0 * b0 + 19 * (a1 * b4 + a2 * b3 + a3 * b2 + a4 * b1);
+        let c1 = a0 * b1 + a1 * b0 + 19 * (a2 * b4 + a3 * b3 + a4 * b2);
+        let c2 = a0 * b2 + a1 * b1 + a2 * b0 + 19 * (a3 * b4 + a4 * b3);
+        let c3 = a0 * b3 + a1 * b2 + a2 * b1 + a3 * b0 + 19 * (a4 * b4);
+        let c4 = a0 * b4 + a1 * b3 + a2 * b2 + a3 * b1 + a4 * b0;
+        Self::carry(c0, c1, c2, c3, c4)
+    }
+
+    fn square(self) -> Fe {
+        self.mul(self)
+    }
+
+    fn carry(mut c0: u128, mut c1: u128, mut c2: u128, mut c3: u128, mut c4: u128) -> Fe {
+        c1 += (c0 >> 51) as u128;
+        c0 &= MASK51 as u128;
+        c2 += (c1 >> 51) as u128;
+        c1 &= MASK51 as u128;
+        c3 += (c2 >> 51) as u128;
+        c2 &= MASK51 as u128;
+        c4 += (c3 >> 51) as u128;
+        c3 &= MASK51 as u128;
+        c0 += 19 * ((c4 >> 51) as u128);
+        c4 &= MASK51 as u128;
+        c1 += (c0 >> 51) as u128;
+        c0 &= MASK51 as u128;
+        Fe([c0 as u64, c1 as u64, c2 as u64, c3 as u64, c4 as u64])
+    }
+
+    fn mul_small(self, k: u64) -> Fe {
+        let a = self.0;
+        let k = k as u128;
+        Self::carry(
+            a[0] as u128 * k,
+            a[1] as u128 * k,
+            a[2] as u128 * k,
+            a[3] as u128 * k,
+            a[4] as u128 * k,
+        )
+    }
+
+    /// a^(p-2) — inverse via Fermat (standard 254-squaring addition chain).
+    fn invert(self) -> Fe {
+        let z = self;
+        let z2 = z.square(); // 2
+        let z9 = z2.square().square().mul(z); // 9
+        let z11 = z9.mul(z2); // 11
+        let z2_5_0 = z11.square().mul(z9); // 2^5 - 2^0 = 31
+        let mut t = z2_5_0;
+        for _ in 0..5 {
+            t = t.square();
+        }
+        let z2_10_0 = t.mul(z2_5_0);
+        t = z2_10_0;
+        for _ in 0..10 {
+            t = t.square();
+        }
+        let z2_20_0 = t.mul(z2_10_0);
+        t = z2_20_0;
+        for _ in 0..20 {
+            t = t.square();
+        }
+        let z2_40_0 = t.mul(z2_20_0);
+        t = z2_40_0;
+        for _ in 0..10 {
+            t = t.square();
+        }
+        let z2_50_0 = t.mul(z2_10_0);
+        t = z2_50_0;
+        for _ in 0..50 {
+            t = t.square();
+        }
+        let z2_100_0 = t.mul(z2_50_0);
+        t = z2_100_0;
+        for _ in 0..100 {
+            t = t.square();
+        }
+        let z2_200_0 = t.mul(z2_100_0);
+        t = z2_200_0;
+        for _ in 0..50 {
+            t = t.square();
+        }
+        let z2_250_0 = t.mul(z2_50_0);
+        t = z2_250_0;
+        for _ in 0..5 {
+            t = t.square();
+        }
+        t.mul(z11)
+    }
+
+    /// Constant-time conditional swap.
+    fn cswap(swap: u64, a: &mut Fe, b: &mut Fe) {
+        let mask = 0u64.wrapping_sub(swap); // 0 or all-ones
+        for i in 0..5 {
+            let x = mask & (a.0[i] ^ b.0[i]);
+            a.0[i] ^= x;
+            b.0[i] ^= x;
+        }
+    }
+}
+
+/// Scalar multiplication: RFC 7748 X25519 function.
+pub fn x25519(scalar: &[u8; 32], u: &[u8; 32]) -> [u8; 32] {
+    // Clamp.
+    let mut k = *scalar;
+    k[0] &= 248;
+    k[31] &= 127;
+    k[31] |= 64;
+    // Mask the high bit of u per RFC.
+    let mut ub = *u;
+    ub[31] &= 127;
+
+    let x1 = Fe::from_bytes(&ub);
+    let mut x2 = Fe::ONE;
+    let mut z2 = Fe::ZERO;
+    let mut x3 = x1;
+    let mut z3 = Fe::ONE;
+    let mut swap = 0u64;
+
+    for t in (0..255).rev() {
+        let kt = ((k[t >> 3] >> (t & 7)) & 1) as u64;
+        swap ^= kt;
+        Fe::cswap(swap, &mut x2, &mut x3);
+        Fe::cswap(swap, &mut z2, &mut z3);
+        swap = kt;
+
+        let a = x2.add(z2);
+        let aa = a.square();
+        let b = x2.sub(z2);
+        let bb = b.square();
+        let e = aa.sub(bb);
+        let c = x3.add(z3);
+        let d = x3.sub(z3);
+        let da = d.mul(a);
+        let cb = c.mul(b);
+        x3 = da.add(cb).square();
+        z3 = x1.mul(da.sub(cb).square());
+        x2 = aa.mul(bb);
+        z2 = e.mul(aa.add(e.mul_small(121665)));
+    }
+    Fe::cswap(swap, &mut x2, &mut x3);
+    Fe::cswap(swap, &mut z2, &mut z3);
+
+    x2.mul(z2.invert()).to_bytes()
+}
+
+/// The curve base point u=9.
+pub const BASEPOINT: [u8; 32] = {
+    let mut b = [0u8; 32];
+    b[0] = 9;
+    b
+};
+
+/// X25519 public key (the u-coordinate).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct PublicKey(pub [u8; 32]);
+
+/// Shared secret from Diffie–Hellman.
+#[derive(Clone, Copy)]
+pub struct SharedSecret(pub [u8; 32]);
+
+/// An X25519 key pair.
+#[derive(Clone)]
+pub struct KeyPair {
+    secret: [u8; 32],
+    public: PublicKey,
+}
+
+impl KeyPair {
+    /// Derive a key pair from 32 bytes of seed material.
+    pub fn from_seed(seed: [u8; 32]) -> KeyPair {
+        let public = PublicKey(x25519(&seed, &BASEPOINT));
+        KeyPair {
+            secret: seed,
+            public,
+        }
+    }
+
+    /// Generate from a (non-crypto) RNG — acceptable for the simulated
+    /// fleet; a production device would use the OS CSPRNG.
+    pub fn generate(rng: &mut crate::util::Rng) -> KeyPair {
+        let mut seed = [0u8; 32];
+        for chunk in seed.chunks_mut(8) {
+            chunk.copy_from_slice(&rng.next_u64().to_le_bytes()[..chunk.len()]);
+        }
+        Self::from_seed(seed)
+    }
+
+    pub fn public(&self) -> PublicKey {
+        self.public
+    }
+
+    /// The raw seed — what secure aggregation Shamir-shares for dropout
+    /// recovery (§4.1): reconstructing it rebuilds the full keypair.
+    pub fn seed_bytes(&self) -> [u8; 32] {
+        self.secret
+    }
+
+    /// Diffie–Hellman agreement with a peer public key.
+    pub fn agree(&self, peer: &PublicKey) -> SharedSecret {
+        SharedSecret(x25519(&self.secret, &peer.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex32(s: &str) -> [u8; 32] {
+        let v = crate::util::hex::decode(s).unwrap();
+        let mut b = [0u8; 32];
+        b.copy_from_slice(&v);
+        b
+    }
+
+    #[test]
+    fn rfc7748_vector_1() {
+        let k = hex32("a546e36bf0527c9d3b16154b82465edd62144c0ac1fc5a18506a2244ba449ac4");
+        let u = hex32("e6db6867583030db3594c1a424b15f7c726624ec26b3353b10a903a6d0ab1c4c");
+        let want = hex32("c3da55379de9c6908e94ea4df28d084f32eccf03491c71f754b4075577a28552");
+        assert_eq!(x25519(&k, &u), want);
+    }
+
+    #[test]
+    fn rfc7748_vector_2() {
+        let k = hex32("4b66e9d4d1b4673c5ad22691957d6af5c11b6421e0ea01d42ca4169e7918ba0d");
+        let u = hex32("e5210f12786811d3f4b7959d0538ae2c31dbe7106fc03c3efc4cd549c715a493");
+        let want = hex32("95cbde9476e8907d7aade45cb4b873f88b595a68799fa152e6f8f7647aac7957");
+        assert_eq!(x25519(&k, &u), want);
+    }
+
+    #[test]
+    fn rfc7748_alice_bob() {
+        let a_priv = hex32("77076d0a7318a57d3c16c17251b26645df4c2f87ebc0992ab177fba51db92c2a");
+        let b_priv = hex32("5dab087e624a8a4b79e17f8b83800ee66f3bb1292618b6fd1c2f8b27ff88e0eb");
+        let a_pub = x25519(&a_priv, &BASEPOINT);
+        let b_pub = x25519(&b_priv, &BASEPOINT);
+        assert_eq!(
+            a_pub,
+            hex32("8520f0098930a754748b7ddcb43ef75a0dbf3a0d26381af4eba4a98eaa9b4e6a")
+        );
+        assert_eq!(
+            b_pub,
+            hex32("de9edb7d7b7dc1b4d35b61c2ece435373f8343c85b78674dadfc7e146f882b4f")
+        );
+        let shared = hex32("4a5d9d5ba4ce2de1728e3bf480350f25e07e21c947d19e3376f09b3c1e161742");
+        assert_eq!(x25519(&a_priv, &b_pub), shared);
+        assert_eq!(x25519(&b_priv, &a_pub), shared);
+    }
+
+    #[test]
+    fn dh_agreement_symmetry_many() {
+        let mut rng = crate::util::Rng::new(99);
+        for _ in 0..8 {
+            let a = KeyPair::generate(&mut rng);
+            let b = KeyPair::generate(&mut rng);
+            assert_eq!(a.agree(&b.public()).0, b.agree(&a.public()).0);
+            let c = KeyPair::generate(&mut rng);
+            assert_ne!(a.agree(&b.public()).0, a.agree(&c.public()).0);
+        }
+    }
+
+    #[test]
+    fn iterated_vector_1k() {
+        // RFC 7748 §5.2 iteration test (1,000 iterations).
+        let mut k = hex32("0900000000000000000000000000000000000000000000000000000000000000");
+        let mut u = k;
+        for _ in 0..1000 {
+            let r = x25519(&k, &u);
+            u = k;
+            k = r;
+        }
+        assert_eq!(
+            k,
+            hex32("684cf59ba83309552800ef566f2f4d3c1c3887c49360e3875f2eb94d99532c51")
+        );
+    }
+}

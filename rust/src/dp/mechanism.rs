@@ -1,0 +1,161 @@
+//! The Gaussian mechanism: L2 clipping + calibrated noise.
+//!
+//! Local mode (paper's Fig-11 DP run): every client clips its pseudo-
+//! gradient to `clip_norm` and adds `N(0, (σ·clip)²)` per coordinate
+//! before upload — the server never sees an unnoised update.
+//! Central mode: clients only clip; the master aggregator adds
+//! `N(0, (σ·clip)²)` once to the aggregate (requires the trusted-
+//! aggregator / confidential-container deployment of §4.3).
+
+use crate::util::Rng;
+
+/// Where noise is injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DpMode {
+    /// No differential privacy.
+    Off,
+    /// Client-side clip + noise (user-level local DP of §5.1).
+    Local,
+    /// Server-side noise on the aggregate (trusted aggregator, §4.3).
+    Central,
+}
+
+/// Task-level DP configuration (set at task creation, §3.3.1).
+#[derive(Clone, Copy, Debug)]
+pub struct DpConfig {
+    pub mode: DpMode,
+    /// L2 clipping norm (paper Fig 11: 0.5).
+    pub clip_norm: f64,
+    /// Noise multiplier σ (paper Fig 11: 0.08).
+    pub noise_multiplier: f64,
+}
+
+impl DpConfig {
+    pub fn off() -> DpConfig {
+        DpConfig {
+            mode: DpMode::Off,
+            clip_norm: 0.0,
+            noise_multiplier: 0.0,
+        }
+    }
+
+    /// The exact configuration of the paper's Fig-11 DP experiment.
+    pub fn paper_local() -> DpConfig {
+        DpConfig {
+            mode: DpMode::Local,
+            clip_norm: 0.5,
+            noise_multiplier: 0.08,
+        }
+    }
+}
+
+/// Stateless Gaussian mechanism operations over flat f32 vectors.
+pub struct GaussianMechanism;
+
+impl GaussianMechanism {
+    /// Scale `xs` so its L2 norm is at most `clip_norm`. Returns the
+    /// pre-clip norm.
+    pub fn clip(xs: &mut [f32], clip_norm: f64) -> f64 {
+        let norm = crate::util::stats::l2_norm(xs);
+        if norm > clip_norm && norm > 0.0 {
+            let s = (clip_norm / norm) as f32;
+            for x in xs.iter_mut() {
+                *x *= s;
+            }
+        }
+        norm
+    }
+
+    /// Add N(0, (σ·clip)²) per coordinate.
+    pub fn add_noise(xs: &mut [f32], clip_norm: f64, sigma: f64, rng: &mut Rng) {
+        let std = sigma * clip_norm;
+        if std <= 0.0 {
+            return;
+        }
+        for x in xs.iter_mut() {
+            *x += rng.normal_scaled(0.0, std) as f32;
+        }
+    }
+
+    /// Local-DP client path: clip then noise. Returns pre-clip norm.
+    pub fn privatize(xs: &mut [f32], cfg: &DpConfig, rng: &mut Rng) -> f64 {
+        match cfg.mode {
+            DpMode::Off => crate::util::stats::l2_norm(xs),
+            DpMode::Local => {
+                let n = Self::clip(xs, cfg.clip_norm);
+                Self::add_noise(xs, cfg.clip_norm, cfg.noise_multiplier, rng);
+                n
+            }
+            // Central mode: clients only clip.
+            DpMode::Central => Self::clip(xs, cfg.clip_norm),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::l2_norm;
+
+    #[test]
+    fn clip_bounds_norm() {
+        let mut v = vec![3.0f32, 4.0];
+        let pre = GaussianMechanism::clip(&mut v, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((l2_norm(&v) - 1.0).abs() < 1e-5);
+        // direction preserved
+        assert!((v[0] / v[1] - 0.75).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clip_noop_when_small() {
+        let mut v = vec![0.1f32, 0.1];
+        let orig = v.clone();
+        GaussianMechanism::clip(&mut v, 10.0);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn noise_statistics() {
+        let mut rng = crate::util::Rng::new(5);
+        let n = 100_000;
+        let mut v = vec![0f32; n];
+        GaussianMechanism::add_noise(&mut v, 0.5, 0.08, &mut rng);
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        let want_std = 0.5 * 0.08;
+        assert!(mean.abs() < 3.0 * want_std / (n as f64).sqrt() * 3.0);
+        assert!((var.sqrt() - want_std).abs() / want_std < 0.05);
+    }
+
+    #[test]
+    fn privatize_modes() {
+        let mut rng = crate::util::Rng::new(6);
+        let cfg_off = DpConfig::off();
+        let mut a = vec![3.0f32, 4.0];
+        GaussianMechanism::privatize(&mut a, &cfg_off, &mut rng);
+        assert_eq!(a, vec![3.0, 4.0]);
+
+        let cfg_local = DpConfig::paper_local();
+        let mut b = vec![3.0f32, 4.0];
+        GaussianMechanism::privatize(&mut b, &cfg_local, &mut rng);
+        // clipped to 0.5 plus small noise
+        assert!(l2_norm(&b) < 0.7);
+
+        let cfg_central = DpConfig {
+            mode: DpMode::Central,
+            ..cfg_local
+        };
+        let mut c = vec![3.0f32, 4.0];
+        GaussianMechanism::privatize(&mut c, &cfg_central, &mut rng);
+        assert!((l2_norm(&c) - 0.5).abs() < 1e-5); // clip only, no noise
+    }
+
+    #[test]
+    fn zero_sigma_adds_nothing() {
+        let mut rng = crate::util::Rng::new(7);
+        let mut v = vec![1.0f32; 8];
+        GaussianMechanism::add_noise(&mut v, 0.5, 0.0, &mut rng);
+        assert_eq!(v, vec![1.0f32; 8]);
+    }
+}

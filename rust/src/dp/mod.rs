@@ -1,0 +1,12 @@
+//! Differential privacy (§4.2): Gaussian mechanism + Rényi-DP accountant.
+//!
+//! "Differential privacy injects Gaussian noise into the training process
+//! ... We provide support for local or global differentially-private noise
+//! addition. ... the user can access a Rényi-DP privacy accountant in the
+//! dashboard to determine the current privacy loss ε."
+
+pub mod accountant;
+pub mod mechanism;
+
+pub use accountant::RdpAccountant;
+pub use mechanism::{DpConfig, DpMode, GaussianMechanism};

@@ -1,0 +1,70 @@
+//! Platform-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for the Florida platform.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Transport-level failure (connection dropped, framing error, ...).
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    /// Wire-format decode failure.
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    /// Device attestation failed verification.
+    #[error("attestation rejected: {0}")]
+    Attestation(String),
+
+    /// Secure-aggregation protocol violation or failure.
+    #[error("secure aggregation error: {0}")]
+    SecAgg(String),
+
+    /// Task lifecycle error (unknown task, invalid transition, ...).
+    #[error("task error: {0}")]
+    Task(String),
+
+    /// Client selection error.
+    #[error("selection error: {0}")]
+    Selection(String),
+
+    /// Model snapshot / parameter-vector error.
+    #[error("model error: {0}")]
+    Model(String),
+
+    /// PJRT runtime error (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Differential-privacy configuration or accounting error.
+    #[error("dp error: {0}")]
+    Dp(String),
+
+    /// Configuration parse/validation error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Anything else.
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::Other(s)
+    }
+}
+
+/// Platform-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,41 @@
+//! Project Florida — reproduction of "Project Florida: Federated Learning
+//! Made Easy" (Microsoft, 2023) as a three-layer rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate): the Florida platform — management service,
+//! selection service, two-stage secure aggregation (virtual groups +
+//! master aggregator), authentication/attestation, client SDK, transports,
+//! differential privacy, and a multi-client device simulator.
+//!
+//! Layer 2 (python/compile/model.py, build-time only): the on-device
+//! compute — a BERT-tiny-class transformer classifier fwd/bwd lowered via
+//! `jax.jit(...).lower(...)` to HLO text artifacts.
+//!
+//! Layer 1 (python/compile/kernels/, build-time only): Pallas kernels for
+//! the transformer hot spots (attention, fused MLP), lowered in interpret
+//! mode into the same HLO.
+//!
+//! Python never runs on the request path: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and executes
+//! them natively.
+
+pub mod aggregation;
+pub mod client;
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod crypto;
+pub mod data;
+pub mod dp;
+pub mod error;
+pub mod metrics;
+pub mod model;
+pub mod proto;
+pub mod quant;
+pub mod runtime;
+pub mod secagg;
+pub mod services;
+pub mod simulator;
+pub mod transport;
+pub mod util;
+
+pub use error::{Error, Result};

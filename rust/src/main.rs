@@ -1,0 +1,34 @@
+//! Project Florida leader binary — see `florida help`.
+
+fn main() {
+    init_logger();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(florida::cli::run(&argv));
+}
+
+/// Minimal env_logger substitute (offline crate set has only the `log`
+/// facade): RUST_LOG=debug|info|warn|error, default info.
+fn init_logger() {
+    struct StderrLogger(log::LevelFilter);
+    impl log::Log for StderrLogger {
+        fn enabled(&self, metadata: &log::Metadata) -> bool {
+            metadata.level() <= self.0
+        }
+        fn log(&self, record: &log::Record) {
+            if self.enabled(record.metadata()) {
+                eprintln!("[{:<5} {}] {}", record.level(), record.target(), record.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(StderrLogger(level)));
+    log::set_max_level(level);
+}

@@ -1,0 +1,214 @@
+//! Metrics (§3.3.1 "Metrics" view): per-round records, export, and the
+//! text dashboard rendering used by the CLI task view.
+
+use crate::util::json::Json;
+
+/// One completed aggregation round (or async buffer flush).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub started_ms: u64,
+    pub ended_ms: u64,
+    pub participants: usize,
+    /// Mean reported client training loss.
+    pub train_loss: f64,
+    /// Server-side evaluation (if an evaluator is attached).
+    pub eval_loss: Option<f64>,
+    pub eval_accuracy: Option<f64>,
+    /// Privacy spent so far (ε at the task δ), if DP is on.
+    pub epsilon: Option<f64>,
+}
+
+impl RoundRecord {
+    pub fn duration_ms(&self) -> u64 {
+        self.ended_ms.saturating_sub(self.started_ms)
+    }
+}
+
+/// Per-task metrics history.
+#[derive(Clone, Debug, Default)]
+pub struct TaskMetrics {
+    pub rounds: Vec<RoundRecord>,
+    /// Rounds that missed min_report_fraction and were retried.
+    pub failed_rounds: u64,
+    /// Total uploads accepted (incl. async buffer contributions).
+    pub total_uploads: u64,
+}
+
+impl TaskMetrics {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
+    pub fn mean_round_duration_ms(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.duration_ms() as f64).sum::<f64>()
+            / self.rounds.len() as f64
+    }
+
+    /// CSV export (one row per round) — dashboard drill-down equivalent.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,started_ms,ended_ms,duration_ms,participants,train_loss,eval_loss,eval_accuracy,epsilon\n",
+        );
+        for r in &self.rounds {
+            s.push_str(&format!(
+                "{},{},{},{},{},{:.6},{},{},{}\n",
+                r.round,
+                r.started_ms,
+                r.ended_ms,
+                r.duration_ms(),
+                r.participants,
+                r.train_loss,
+                r.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+                r.eval_accuracy.map(|v| format!("{v:.6}")).unwrap_or_default(),
+                r.epsilon.map(|v| format!("{v:.4}")).unwrap_or_default(),
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut j = Json::obj()
+                    .set("round", r.round)
+                    .set("duration_ms", r.duration_ms())
+                    .set("participants", r.participants)
+                    .set("train_loss", r.train_loss);
+                if let Some(v) = r.eval_loss {
+                    j = j.set("eval_loss", v);
+                }
+                if let Some(v) = r.eval_accuracy {
+                    j = j.set("eval_accuracy", v);
+                }
+                if let Some(v) = r.epsilon {
+                    j = j.set("epsilon", v);
+                }
+                j
+            })
+            .collect();
+        Json::obj()
+            .set("rounds", Json::Arr(rounds))
+            .set("failed_rounds", self.failed_rounds)
+            .set("total_uploads", self.total_uploads)
+    }
+
+    /// Render the task-view style text dashboard (§3.3.1 Task View).
+    pub fn render_dashboard(&self, task_name: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("Task: {task_name}\n"));
+        out.push_str(&format!(
+            "rounds completed: {}   failed/retried: {}   uploads: {}\n",
+            self.rounds.len(),
+            self.failed_rounds,
+            self.total_uploads
+        ));
+        out.push_str(
+            "round  participants  duration     train-loss   eval-acc   eval-loss   epsilon\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{:>5}  {:>12}  {:>9}ms  {:>10.4}  {:>9}  {:>9}  {:>8}\n",
+                r.round,
+                r.participants,
+                r.duration_ms(),
+                r.train_loss,
+                r.eval_accuracy
+                    .map(|v| format!("{v:.4}"))
+                    .unwrap_or_else(|| "-".into()),
+                r.eval_loss
+                    .map(|v| format!("{v:.4}"))
+                    .unwrap_or_else(|| "-".into()),
+                r.epsilon
+                    .map(|v| format!("{v:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+            ));
+        }
+        // ASCII accuracy sparkline across rounds.
+        let accs: Vec<f64> = self
+            .rounds
+            .iter()
+            .filter_map(|r| r.eval_accuracy)
+            .collect();
+        if accs.len() >= 2 {
+            out.push_str("accuracy: ");
+            for &a in &accs {
+                let idx = ((a.clamp(0.0, 1.0)) * 7.0).round() as usize;
+                out.push(['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'][idx]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: u64, dur: u64, acc: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            started_ms: 1000 * round,
+            ended_ms: 1000 * round + dur,
+            participants: 32,
+            train_loss: 0.5 / (round + 1) as f64,
+            eval_loss: acc.map(|a| 1.0 - a),
+            eval_accuracy: acc,
+            epsilon: Some(0.2 * round as f64),
+        }
+    }
+
+    #[test]
+    fn duration_and_mean() {
+        let mut m = TaskMetrics::default();
+        m.push(rec(0, 100, Some(0.6)));
+        m.push(rec(1, 300, Some(0.9)));
+        assert_eq!(m.rounds[0].duration_ms(), 100);
+        assert!((m.mean_round_duration_ms() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut m = TaskMetrics::default();
+        m.push(rec(0, 100, Some(0.5)));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("0.500000"));
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let mut m = TaskMetrics::default();
+        m.push(rec(0, 50, None));
+        m.push(rec(1, 60, Some(0.8)));
+        m.failed_rounds = 1;
+        let j = m.to_json();
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(back.req_usize("failed_rounds").unwrap(), 1);
+    }
+
+    #[test]
+    fn dashboard_renders() {
+        let mut m = TaskMetrics::default();
+        for i in 0..5 {
+            m.push(rec(i, 100, Some(0.5 + 0.1 * i as f64)));
+        }
+        let d = m.render_dashboard("spam");
+        assert!(d.contains("Task: spam"));
+        assert!(d.contains("accuracy: "));
+        assert!(d.lines().count() >= 8);
+    }
+}

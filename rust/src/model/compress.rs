@@ -1,0 +1,173 @@
+//! Gradient compression (paper §7): top-k sparsification of pseudo-
+//! gradients for the plaintext upload path.
+//!
+//! The discussion section notes that "secure aggregation may prohibit
+//! gradient compression techniques that become important for workflow
+//! scaling" — so compression here is a plaintext/enclave-path feature
+//! (exactly the §4.3 deployment), with an ablation bench measuring the
+//! payload-size/accuracy trade-off (`compression_ablation`).
+
+use crate::codec::{Reader, Wire, Writer};
+use crate::error::{Error, Result};
+
+/// A top-k sparsified pseudo-gradient.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseDelta {
+    /// Full dimensionality of the dense vector.
+    pub dim: u32,
+    /// Strictly increasing coordinate indices.
+    pub indices: Vec<u32>,
+    /// Values at those coordinates.
+    pub values: Vec<f32>,
+}
+
+impl SparseDelta {
+    /// Keep the k largest-magnitude coordinates of `dense`.
+    pub fn top_k(dense: &[f32], k: usize) -> SparseDelta {
+        let k = k.min(dense.len());
+        if k == dense.len() {
+            return SparseDelta {
+                dim: dense.len() as u32,
+                indices: (0..dense.len() as u32).collect(),
+                values: dense.to_vec(),
+            };
+        }
+        // Select the k-th largest magnitude via partial sort of indices.
+        let mut idx: Vec<u32> = (0..dense.len() as u32).collect();
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            dense[b as usize]
+                .abs()
+                .partial_cmp(&dense[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut keep = idx[..k].to_vec();
+        keep.sort_unstable();
+        let values = keep.iter().map(|&i| dense[i as usize]).collect();
+        SparseDelta {
+            dim: dense.len() as u32,
+            indices: keep,
+            values,
+        }
+    }
+
+    /// Densify back (zeros elsewhere).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim as usize];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// The residual the sender should carry into the next round
+    /// (error feedback: dense − sparse).
+    pub fn residual(&self, dense: &[f32]) -> Vec<f32> {
+        let mut r = dense.to_vec();
+        for &i in &self.indices {
+            r[i as usize] = 0.0;
+        }
+        r
+    }
+
+    /// Wire size in bytes (indices + values + header).
+    pub fn wire_bytes(&self) -> usize {
+        8 + self.indices.len() * 8
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.indices.len() != self.values.len() {
+            return Err(Error::Model("sparse index/value length mismatch".into()));
+        }
+        let mut prev: i64 = -1;
+        for &i in &self.indices {
+            if i as i64 <= prev || i >= self.dim {
+                return Err(Error::Model(format!("bad sparse index {i}")));
+            }
+            prev = i as i64;
+        }
+        Ok(())
+    }
+}
+
+impl Wire for SparseDelta {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.dim);
+        w.put_u32s(&self.indices);
+        w.put_f32s(&self.values);
+    }
+
+    fn decode(r: &mut Reader) -> Result<SparseDelta> {
+        let s = SparseDelta {
+            dim: r.get_u32()?,
+            indices: r.get_u32s()?,
+            values: r.get_f32s()?,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn top_k_keeps_largest_magnitudes() {
+        let dense = vec![0.1, -5.0, 0.0, 3.0, -0.2, 4.0];
+        let s = SparseDelta::top_k(&dense, 3);
+        assert_eq!(s.indices, vec![1, 3, 5]);
+        assert_eq!(s.values, vec![-5.0, 3.0, 4.0]);
+        let d = s.to_dense();
+        assert_eq!(d, vec![0.0, -5.0, 0.0, 3.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn k_equals_dim_is_lossless() {
+        let dense = vec![1.0, 2.0, 3.0];
+        let s = SparseDelta::top_k(&dense, 3);
+        assert_eq!(s.to_dense(), dense);
+        let s = SparseDelta::top_k(&dense, 99);
+        assert_eq!(s.to_dense(), dense);
+    }
+
+    #[test]
+    fn residual_plus_sparse_is_dense() {
+        let mut rng = Rng::new(1);
+        let dense: Vec<f32> = (0..500).map(|_| rng.next_f32() - 0.5).collect();
+        let s = SparseDelta::top_k(&dense, 50);
+        let res = s.residual(&dense);
+        let sd = s.to_dense();
+        for i in 0..500 {
+            assert!((sd[i] + res[i] - dense[i]).abs() < 1e-7);
+        }
+        // Residual energy < dense energy (top-k removed the big ones).
+        let e = |v: &[f32]| v.iter().map(|x| (x * x) as f64).sum::<f64>();
+        assert!(e(&res) < e(&dense) * 0.9);
+    }
+
+    #[test]
+    fn wire_roundtrip_and_validation() {
+        let mut rng = Rng::new(2);
+        let dense: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let s = SparseDelta::top_k(&dense, 100);
+        let b = s.to_bytes();
+        assert_eq!(SparseDelta::from_bytes(&b).unwrap(), s);
+        assert!(b.len() < 1000 * 4 / 2, "not actually smaller: {}", b.len());
+
+        // Corrupt: duplicate index.
+        let mut bad = s.clone();
+        bad.indices[1] = bad.indices[0];
+        assert!(bad.validate().is_err());
+        // Out of range.
+        let mut bad = s.clone();
+        *bad.indices.last_mut().unwrap() = 5000;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let s = SparseDelta::top_k(&vec![1.0; 10_000], 100);
+        assert!(s.wire_bytes() < 10_000 * 4 / 10);
+    }
+}

@@ -1,0 +1,253 @@
+//! Model snapshots and pseudo-gradients (flat f32 vectors).
+//!
+//! FL transports *flat* parameter vectors: the L2 JAX model packs its
+//! pytree into one f32 array (see python/compile/model.py), and everything
+//! the platform does — diffing, clipping, masking, aggregation — operates
+//! on that representation. Snapshots compress with zlib for distribution
+//! (the paper notes its BERT-tiny snapshot is "approximately 16Mb when
+//! compressed").
+
+pub mod compress;
+
+use std::io::{Read, Write};
+
+use crate::codec::{Reader, Wire, Writer};
+use crate::error::{Error, Result};
+
+/// A versioned flat model snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSnapshot {
+    /// Monotone global model version (bumps on every central update).
+    pub version: u64,
+    /// Flat parameters, packing order fixed by the artifact manifest.
+    pub params: Vec<f32>,
+}
+
+impl ModelSnapshot {
+    pub fn new(version: u64, params: Vec<f32>) -> ModelSnapshot {
+        ModelSnapshot { version, params }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Pseudo-gradient: `local - self` (what a client uploads).
+    pub fn delta_from(&self, local: &[f32]) -> Result<Vec<f32>> {
+        if local.len() != self.params.len() {
+            return Err(Error::Model(format!(
+                "dim mismatch {} vs {}",
+                local.len(),
+                self.params.len()
+            )));
+        }
+        Ok(local
+            .iter()
+            .zip(&self.params)
+            .map(|(l, g)| l - g)
+            .collect())
+    }
+
+    /// Apply an aggregated pseudo-gradient with server learning rate.
+    pub fn apply_delta(&mut self, delta: &[f32], server_lr: f32) -> Result<()> {
+        if delta.len() != self.params.len() {
+            return Err(Error::Model(format!(
+                "dim mismatch {} vs {}",
+                delta.len(),
+                self.params.len()
+            )));
+        }
+        for (p, d) in self.params.iter_mut().zip(delta) {
+            *p += server_lr * d;
+        }
+        self.version += 1;
+        Ok(())
+    }
+
+    /// zlib-compress for distribution.
+    pub fn to_compressed(&self) -> Result<Vec<u8>> {
+        let mut w = Writer::with_capacity(self.params.len() * 4 + 16);
+        self.encode(&mut w);
+        let raw = w.into_bytes();
+        let mut enc =
+            flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::fast());
+        enc.write_all(&raw)?;
+        Ok(enc.finish()?)
+    }
+
+    pub fn from_compressed(data: &[u8]) -> Result<ModelSnapshot> {
+        let mut dec = flate2::read::ZlibDecoder::new(data);
+        let mut raw = Vec::new();
+        dec.read_to_end(&mut raw)?;
+        ModelSnapshot::from_bytes(&raw)
+    }
+
+    /// Load an initial snapshot from a raw little-endian f32 file
+    /// (`artifacts/init_<preset>.f32`, written by aot.py).
+    pub fn from_f32_file(path: &str) -> Result<ModelSnapshot> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() % 4 != 0 {
+            return Err(Error::Model(format!(
+                "{path}: length {} not divisible by 4",
+                bytes.len()
+            )));
+        }
+        let params = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(ModelSnapshot { version: 0, params })
+    }
+}
+
+impl Wire for ModelSnapshot {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.version);
+        w.put_f32s(&self.params);
+    }
+
+    fn decode(r: &mut Reader) -> Result<ModelSnapshot> {
+        Ok(ModelSnapshot {
+            version: r.get_u64()?,
+            params: r.get_f32s()?,
+        })
+    }
+}
+
+/// Weighted accumulator for plaintext pseudo-gradients (non-secagg path).
+/// This is the master-aggregator hot path at scale — see §Perf.
+#[derive(Clone, Debug)]
+pub struct DeltaAccumulator {
+    sum: Vec<f64>,
+    total_weight: f64,
+    count: usize,
+}
+
+impl DeltaAccumulator {
+    pub fn new(dim: usize) -> DeltaAccumulator {
+        DeltaAccumulator {
+            sum: vec![0.0; dim],
+            total_weight: 0.0,
+            count: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sum.len()
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Accumulate `delta` with the given weight.
+    pub fn add(&mut self, delta: &[f32], weight: f64) -> Result<()> {
+        if delta.len() != self.sum.len() {
+            return Err(Error::Model(format!(
+                "dim mismatch {} vs {}",
+                delta.len(),
+                self.sum.len()
+            )));
+        }
+        if !(weight > 0.0) {
+            return Err(Error::Model(format!("non-positive weight {weight}")));
+        }
+        for (s, &d) in self.sum.iter_mut().zip(delta) {
+            *s += weight * d as f64;
+        }
+        self.total_weight += weight;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Weighted mean; error if nothing accumulated.
+    pub fn mean(&self) -> Result<Vec<f32>> {
+        if self.count == 0 || self.total_weight <= 0.0 {
+            return Err(Error::Model("empty accumulator".into()));
+        }
+        let inv = 1.0 / self.total_weight;
+        Ok(self.sum.iter().map(|&s| (s * inv) as f32).collect())
+    }
+
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|s| *s = 0.0);
+        self.total_weight = 0.0;
+        self.count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_and_apply_roundtrip() {
+        let mut global = ModelSnapshot::new(0, vec![1.0, 2.0, 3.0]);
+        let local = vec![1.5, 1.0, 3.0];
+        let delta = global.delta_from(&local).unwrap();
+        assert_eq!(delta, vec![0.5, -1.0, 0.0]);
+        global.apply_delta(&delta, 1.0).unwrap();
+        assert_eq!(global.params, local);
+        assert_eq!(global.version, 1);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut g = ModelSnapshot::new(0, vec![0.0; 3]);
+        assert!(g.delta_from(&[0.0; 4]).is_err());
+        assert!(g.apply_delta(&[0.0; 2], 1.0).is_err());
+    }
+
+    #[test]
+    fn compression_roundtrip_and_shrinks() {
+        // Realistic weights (near-zero gaussian) compress well.
+        let mut rng = crate::util::Rng::new(1);
+        let params: Vec<f32> = (0..50_000)
+            .map(|_| rng.normal_scaled(0.0, 0.02) as f32)
+            .collect();
+        let snap = ModelSnapshot::new(7, params);
+        let z = snap.to_compressed().unwrap();
+        let back = ModelSnapshot::from_compressed(&z).unwrap();
+        assert_eq!(back, snap);
+        assert!(z.len() < snap.dim() * 4, "compressed {} raw {}", z.len(), snap.dim() * 4);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let snap = ModelSnapshot::new(3, vec![1.0, -2.5, 0.0]);
+        let b = snap.to_bytes();
+        assert_eq!(ModelSnapshot::from_bytes(&b).unwrap(), snap);
+    }
+
+    #[test]
+    fn accumulator_weighted_mean() {
+        let mut acc = DeltaAccumulator::new(2);
+        acc.add(&[1.0, 0.0], 1.0).unwrap();
+        acc.add(&[0.0, 1.0], 3.0).unwrap();
+        let m = acc.mean().unwrap();
+        assert!((m[0] - 0.25).abs() < 1e-6);
+        assert!((m[1] - 0.75).abs() < 1e-6);
+        assert_eq!(acc.count(), 2);
+    }
+
+    #[test]
+    fn accumulator_rejects_bad_input() {
+        let mut acc = DeltaAccumulator::new(2);
+        assert!(acc.add(&[1.0], 1.0).is_err());
+        assert!(acc.add(&[1.0, 1.0], 0.0).is_err());
+        assert!(acc.mean().is_err());
+    }
+
+    #[test]
+    fn accumulator_reset() {
+        let mut acc = DeltaAccumulator::new(1);
+        acc.add(&[2.0], 1.0).unwrap();
+        acc.reset();
+        assert_eq!(acc.count(), 0);
+        assert!(acc.mean().is_err());
+    }
+}

@@ -1,0 +1,532 @@
+//! Platform protocol: core datatypes shared by services, SDK and wire.
+
+pub mod msg;
+
+use crate::codec::{Reader, Wire, Writer};
+use crate::crypto::attest::{IntegrityTier, Verdict};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+pub use msg::{decode_frame, encode_frame, Msg, WireCodec};
+
+/// Device capabilities reported at registration (heterogeneity surface).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceCaps {
+    /// e.g. "android", "windows", "ios", "linux"
+    pub os: String,
+    /// SDK language binding, e.g. "python", "kotlin", "cpp", "dotnet", "js"
+    pub sdk: String,
+    pub tier: IntegrityTier,
+    pub charging: bool,
+    pub metered_network: bool,
+}
+
+impl Default for DeviceCaps {
+    fn default() -> Self {
+        DeviceCaps {
+            os: "linux".into(),
+            sdk: "rust".into(),
+            tier: IntegrityTier::Device,
+            charging: true,
+            metered_network: false,
+        }
+    }
+}
+
+impl Wire for DeviceCaps {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.os);
+        w.put_str(&self.sdk);
+        w.put_u8(self.tier as u8);
+        w.put_bool(self.charging);
+        w.put_bool(self.metered_network);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(DeviceCaps {
+            os: r.get_str()?,
+            sdk: r.get_str()?,
+            tier: IntegrityTier::from_u8(r.get_u8()?)
+                .ok_or_else(|| Error::Codec("bad tier".into()))?,
+            charging: r.get_bool()?,
+            metered_network: r.get_bool()?,
+        })
+    }
+}
+
+impl DeviceCaps {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("os", self.os.as_str())
+            .set("sdk", self.sdk.as_str())
+            .set("tier", self.tier as u8 as u64)
+            .set("charging", self.charging)
+            .set("metered", self.metered_network)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(DeviceCaps {
+            os: j.req_str("os").map_err(Error::Codec)?.to_string(),
+            sdk: j.req_str("sdk").map_err(Error::Codec)?.to_string(),
+            tier: IntegrityTier::from_u8(j.req_usize("tier").map_err(Error::Codec)? as u8)
+                .ok_or_else(|| Error::Codec("bad tier".into()))?,
+            charging: j.opt_bool("charging", true),
+            metered_network: j.opt_bool("metered", false),
+        })
+    }
+}
+
+/// Device-selection criteria attached to a task (§3.3.1: "set selection
+/// criteria for device participation").
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectionCriteria {
+    pub min_tier: IntegrityTier,
+    pub require_charging: bool,
+    pub allow_metered: bool,
+    /// Allowed OSes; empty = any.
+    pub os_allow: Vec<String>,
+}
+
+impl Default for SelectionCriteria {
+    fn default() -> Self {
+        SelectionCriteria {
+            min_tier: IntegrityTier::Basic,
+            require_charging: false,
+            allow_metered: true,
+            os_allow: Vec::new(),
+        }
+    }
+}
+
+impl SelectionCriteria {
+    /// Does a device qualify for this task?
+    pub fn matches(&self, caps: &DeviceCaps) -> bool {
+        if caps.tier < self.min_tier {
+            return false;
+        }
+        if self.require_charging && !caps.charging {
+            return false;
+        }
+        if !self.allow_metered && caps.metered_network {
+            return false;
+        }
+        if !self.os_allow.is_empty() && !self.os_allow.iter().any(|o| o == &caps.os) {
+            return false;
+        }
+        true
+    }
+}
+
+impl Wire for SelectionCriteria {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(self.min_tier as u8);
+        w.put_bool(self.require_charging);
+        w.put_bool(self.allow_metered);
+        w.put_varint(self.os_allow.len() as u64);
+        for os in &self.os_allow {
+            w.put_str(os);
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let min_tier = IntegrityTier::from_u8(r.get_u8()?)
+            .ok_or_else(|| Error::Codec("bad tier".into()))?;
+        let require_charging = r.get_bool()?;
+        let allow_metered = r.get_bool()?;
+        let n = r.get_varint()? as usize;
+        let mut os_allow = Vec::with_capacity(n.min(64));
+        for _ in 0..n {
+            os_allow.push(r.get_str()?);
+        }
+        Ok(SelectionCriteria {
+            min_tier,
+            require_charging,
+            allow_metered,
+            os_allow,
+        })
+    }
+}
+
+/// Task lifecycle states (§3.3.1 task management: running, paused, ...).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    Created = 0,
+    Running = 1,
+    Paused = 2,
+    Completed = 3,
+    Cancelled = 4,
+    Failed = 5,
+}
+
+impl TaskState {
+    pub fn from_u8(v: u8) -> Option<TaskState> {
+        Some(match v {
+            0 => TaskState::Created,
+            1 => TaskState::Running,
+            2 => TaskState::Paused,
+            3 => TaskState::Completed,
+            4 => TaskState::Cancelled,
+            5 => TaskState::Failed,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskState::Created => "created",
+            TaskState::Running => "running",
+            TaskState::Paused => "paused",
+            TaskState::Completed => "completed",
+            TaskState::Cancelled => "cancelled",
+            TaskState::Failed => "failed",
+        }
+    }
+}
+
+/// Public task descriptor, as advertised to clients (§3.3.1 fields).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskDescriptor {
+    pub task_id: u64,
+    pub task_name: String,
+    pub app_name: String,
+    pub workflow_name: String,
+    pub state: TaskState,
+    pub round: u64,
+    pub total_rounds: u64,
+}
+
+impl Wire for TaskDescriptor {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.task_id);
+        w.put_str(&self.task_name);
+        w.put_str(&self.app_name);
+        w.put_str(&self.workflow_name);
+        w.put_u8(self.state as u8);
+        w.put_u64(self.round);
+        w.put_u64(self.total_rounds);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(TaskDescriptor {
+            task_id: r.get_u64()?,
+            task_name: r.get_str()?,
+            app_name: r.get_str()?,
+            workflow_name: r.get_str()?,
+            state: TaskState::from_u8(r.get_u8()?)
+                .ok_or_else(|| Error::Codec("bad task state".into()))?,
+            round: r.get_u64()?,
+            total_rounds: r.get_u64()?,
+        })
+    }
+}
+
+/// Local-training hyper-parameters sent with each round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainParams {
+    /// Artifact preset name (selects the compiled executable).
+    pub preset: String,
+    pub lr: f32,
+    /// FedProx μ (0 = plain FedAvg local training).
+    pub prox_mu: f32,
+}
+
+impl Wire for TrainParams {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.preset);
+        w.put_f32(self.lr);
+        w.put_f32(self.prox_mu);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(TrainParams {
+            preset: r.get_str()?,
+            lr: r.get_f32()?,
+            prox_mu: r.get_f32()?,
+        })
+    }
+}
+
+/// Secure-aggregation setup for one virtual group (§3.1.2, §4.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SecAggSetup {
+    pub vg_id: u32,
+    /// (client_id, per-round X25519 public key) for every VG member,
+    /// sorted by client_id — mask sign convention follows this order.
+    pub roster: Vec<(u64, [u8; 32])>,
+    /// Quantizer params (shared lattice).
+    pub quant_range: f32,
+    pub quant_bits: u32,
+    /// Shamir threshold for dropout recovery.
+    pub threshold: u32,
+}
+
+impl Wire for SecAggSetup {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.vg_id);
+        w.put_varint(self.roster.len() as u64);
+        for (id, pk) in &self.roster {
+            w.put_u64(*id);
+            w.put_bytes(pk);
+        }
+        w.put_f32(self.quant_range);
+        w.put_u32(self.quant_bits);
+        w.put_u32(self.threshold);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let vg_id = r.get_u32()?;
+        let n = r.get_varint()? as usize;
+        if n > 4096 {
+            return Err(Error::Codec(format!("roster too large: {n}")));
+        }
+        let mut roster = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = r.get_u64()?;
+            let pkv = r.get_bytes()?;
+            let pk: [u8; 32] = pkv
+                .try_into()
+                .map_err(|_| Error::Codec("pubkey not 32 bytes".into()))?;
+            roster.push((id, pk));
+        }
+        Ok(SecAggSetup {
+            vg_id,
+            roster,
+            quant_range: r.get_f32()?,
+            quant_bits: r.get_u32()?,
+            threshold: r.get_u32()?,
+        })
+    }
+}
+
+/// What a polled client should do this round.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RoundRole {
+    /// Keep polling; selection not finished (or round closing).
+    Wait,
+    /// Not selected this round.
+    NotSelected,
+    /// Train: full instruction attached.
+    Train(RoundInstruction),
+    /// Provide unmasking shares for dropped peers.
+    Unmask(UnmaskRequest),
+    /// Round finished; wait for the next.
+    RoundDone,
+    /// Task finished.
+    TaskDone,
+}
+
+/// Full per-round training instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundInstruction {
+    pub round: u64,
+    /// zlib-compressed `ModelSnapshot`.
+    pub model_blob: Vec<u8>,
+    pub train: TrainParams,
+    /// Present iff the task uses secure aggregation.
+    pub secagg: Option<SecAggSetup>,
+    /// Upload deadline, ms since server start.
+    pub deadline_ms: u64,
+}
+
+impl Wire for RoundInstruction {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.round);
+        w.put_bytes(&self.model_blob);
+        self.train.encode(w);
+        match &self.secagg {
+            None => w.put_bool(false),
+            Some(s) => {
+                w.put_bool(true);
+                s.encode(w);
+            }
+        }
+        w.put_u64(self.deadline_ms);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(RoundInstruction {
+            round: r.get_u64()?,
+            model_blob: r.get_bytes()?,
+            train: TrainParams::decode(r)?,
+            secagg: if r.get_bool()? {
+                Some(SecAggSetup::decode(r)?)
+            } else {
+                None
+            },
+            deadline_ms: r.get_u64()?,
+        })
+    }
+}
+
+/// Ask surviving VG members for shares of dropped peers' DH secrets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnmaskRequest {
+    pub round: u64,
+    pub vg_id: u32,
+    /// (dropped client id, encrypted Shamir share addressed to *you*).
+    pub dropped: Vec<(u64, Vec<u8>)>,
+}
+
+impl Wire for UnmaskRequest {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.round);
+        w.put_u32(self.vg_id);
+        w.put_varint(self.dropped.len() as u64);
+        for (id, share) in &self.dropped {
+            w.put_u64(*id);
+            w.put_bytes(share);
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let round = r.get_u64()?;
+        let vg_id = r.get_u32()?;
+        let n = r.get_varint()? as usize;
+        if n > 4096 {
+            return Err(Error::Codec("too many dropped".into()));
+        }
+        let mut dropped = Vec::with_capacity(n);
+        for _ in 0..n {
+            dropped.push((r.get_u64()?, r.get_bytes()?));
+        }
+        Ok(UnmaskRequest {
+            round,
+            vg_id,
+            dropped,
+        })
+    }
+}
+
+/// Attestation verdict on the wire.
+impl Wire for Verdict {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.device_id);
+        w.put_u8(self.tier as u8);
+        w.put_u64(self.nonce);
+        w.put_u64(self.expires_ms);
+        w.put_bytes(&self.sig);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(Verdict {
+            device_id: r.get_str()?,
+            tier: IntegrityTier::from_u8(r.get_u8()?)
+                .ok_or_else(|| Error::Codec("bad tier".into()))?,
+            nonce: r.get_u64()?,
+            expires_ms: r.get_u64()?,
+            sig: r
+                .get_bytes()?
+                .try_into()
+                .map_err(|_| Error::Codec("sig not 32 bytes".into()))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn criteria_matching() {
+        let mut crit = SelectionCriteria::default();
+        let mut caps = DeviceCaps::default();
+        assert!(crit.matches(&caps));
+
+        crit.min_tier = IntegrityTier::Strong;
+        assert!(!crit.matches(&caps));
+        caps.tier = IntegrityTier::Strong;
+        assert!(crit.matches(&caps));
+
+        crit.require_charging = true;
+        caps.charging = false;
+        assert!(!crit.matches(&caps));
+        caps.charging = true;
+
+        crit.allow_metered = false;
+        caps.metered_network = true;
+        assert!(!crit.matches(&caps));
+        caps.metered_network = false;
+
+        crit.os_allow = vec!["android".into()];
+        assert!(!crit.matches(&caps));
+        caps.os = "android".into();
+        assert!(crit.matches(&caps));
+    }
+
+    #[test]
+    fn wire_roundtrips() {
+        let caps = DeviceCaps {
+            os: "android".into(),
+            sdk: "kotlin".into(),
+            tier: IntegrityTier::Strong,
+            charging: false,
+            metered_network: true,
+        };
+        assert_eq!(DeviceCaps::from_bytes(&caps.to_bytes()).unwrap(), caps);
+
+        let crit = SelectionCriteria {
+            min_tier: IntegrityTier::Device,
+            require_charging: true,
+            allow_metered: false,
+            os_allow: vec!["android".into(), "ios".into()],
+        };
+        assert_eq!(
+            SelectionCriteria::from_bytes(&crit.to_bytes()).unwrap(),
+            crit
+        );
+
+        let td = TaskDescriptor {
+            task_id: 9,
+            task_name: "spam".into(),
+            app_name: "mail".into(),
+            workflow_name: "train".into(),
+            state: TaskState::Running,
+            round: 3,
+            total_rounds: 10,
+        };
+        assert_eq!(TaskDescriptor::from_bytes(&td.to_bytes()).unwrap(), td);
+
+        let setup = SecAggSetup {
+            vg_id: 2,
+            roster: vec![(1, [7u8; 32]), (5, [9u8; 32])],
+            quant_range: 4.0,
+            quant_bits: 20,
+            threshold: 2,
+        };
+        assert_eq!(SecAggSetup::from_bytes(&setup.to_bytes()).unwrap(), setup);
+
+        let ri = RoundInstruction {
+            round: 4,
+            model_blob: vec![1, 2, 3],
+            train: TrainParams {
+                preset: "tiny".into(),
+                lr: 5e-4,
+                prox_mu: 0.0,
+            },
+            secagg: Some(setup),
+            deadline_ms: 12345,
+        };
+        assert_eq!(RoundInstruction::from_bytes(&ri.to_bytes()).unwrap(), ri);
+
+        let um = UnmaskRequest {
+            round: 4,
+            vg_id: 1,
+            dropped: vec![(2, vec![1, 2]), (3, vec![])],
+        };
+        assert_eq!(UnmaskRequest::from_bytes(&um.to_bytes()).unwrap(), um);
+    }
+
+    #[test]
+    fn caps_json_roundtrip() {
+        let caps = DeviceCaps::default();
+        let j = caps.to_json();
+        assert_eq!(DeviceCaps::from_json(&j).unwrap(), caps);
+    }
+
+    #[test]
+    fn task_state_names() {
+        assert_eq!(TaskState::Running.name(), "running");
+        assert_eq!(TaskState::from_u8(3), Some(TaskState::Completed));
+        assert_eq!(TaskState::from_u8(99), None);
+    }
+}

@@ -1,0 +1,963 @@
+//! The message set + frame codecs.
+//!
+//! Every message crosses the wire in the binary encoding (the "gRPC
+//! path"). The JSON encoding (the "REST path", `isEndpointHttp1=True` in
+//! the paper's sample client) covers the control plane and plaintext
+//! uploads; secure-aggregation data-plane messages are binary-only — the
+//! REST path targets thin clients that use server-trusted (confidential
+//! container, §4.3) aggregation rather than MPC.
+//!
+//! Frame format: binary frames start with the message tag (>= 0x02);
+//! JSON frames start with '{' (0x7b). `decode_frame` dispatches on the
+//! first byte, so one listener serves both protocols — mirroring the
+//! paper's dual gRPC/REST endpoint.
+
+use crate::codec::{Reader, Wire, Writer};
+use crate::crypto::attest::Verdict;
+use crate::error::{Error, Result};
+use crate::util::base64;
+use crate::util::json::{parse as json_parse, Json};
+
+use super::{
+    DeviceCaps, RoundInstruction, RoundRole, TaskDescriptor, UnmaskRequest,
+};
+
+/// Which encoding a client speaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCodec {
+    Binary,
+    Json,
+}
+
+/// One encrypted Shamir share addressed to a peer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PeerShare {
+    pub peer: u64,
+    /// AES-CTR(pairwise key) over [x || y bytes].
+    pub enc: Vec<u8>,
+}
+
+/// Plaintext share of a dropped peer's DH secret, returned by a survivor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveredShare {
+    pub dropped: u64,
+    pub x: u8,
+    pub y: Vec<u8>,
+}
+
+/// All platform messages (requests and replies share the enum).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    // ---- client → server -------------------------------------------------
+    Register {
+        device_id: String,
+        verdict: Verdict,
+        caps: DeviceCaps,
+    },
+    PollTask {
+        client_id: u64,
+        app_name: String,
+        workflow_name: String,
+    },
+    JoinRound {
+        client_id: u64,
+        task_id: u64,
+        dh_pubkey: [u8; 32],
+    },
+    FetchRound {
+        client_id: u64,
+        task_id: u64,
+    },
+    SecAggShares {
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        shares: Vec<PeerShare>,
+    },
+    UploadPlain {
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        base_version: u64,
+        delta: Vec<f32>,
+        weight: f64,
+        loss: f64,
+    },
+    UploadMasked {
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        vg_id: u32,
+        masked: Vec<u32>,
+        loss: f64,
+    },
+    UnmaskResponse {
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        shares: Vec<RecoveredShare>,
+    },
+    GetTaskStatus {
+        task_id: u64,
+    },
+    Heartbeat {
+        client_id: u64,
+    },
+
+    // ---- server → client -------------------------------------------------
+    RegisterAck {
+        accepted: bool,
+        client_id: u64,
+        reason: String,
+    },
+    TaskOffer {
+        task: Option<TaskDescriptor>,
+    },
+    JoinAck {
+        accepted: bool,
+        reason: String,
+    },
+    RoundPlan {
+        role: RoundRole,
+    },
+    Ack {
+        ok: bool,
+        reason: String,
+    },
+    TaskStatus {
+        task: TaskDescriptor,
+        participants: u64,
+        last_round_duration_ms: u64,
+        last_accuracy: f64,
+        last_loss: f64,
+        epsilon: f64,
+    },
+    ErrorReply {
+        message: String,
+    },
+}
+
+// Message tags. 0x00/0x01 reserved; '{' = 0x7b must not collide (all < 0x30).
+const T_REGISTER: u8 = 0x02;
+const T_POLL_TASK: u8 = 0x03;
+const T_JOIN_ROUND: u8 = 0x04;
+const T_FETCH_ROUND: u8 = 0x05;
+const T_SECAGG_SHARES: u8 = 0x06;
+const T_UPLOAD_PLAIN: u8 = 0x07;
+const T_UPLOAD_MASKED: u8 = 0x08;
+const T_UNMASK_RESPONSE: u8 = 0x09;
+const T_GET_TASK_STATUS: u8 = 0x0a;
+const T_HEARTBEAT: u8 = 0x0b;
+const T_REGISTER_ACK: u8 = 0x10;
+const T_TASK_OFFER: u8 = 0x11;
+const T_JOIN_ACK: u8 = 0x12;
+const T_ROUND_PLAN: u8 = 0x13;
+const T_ACK: u8 = 0x14;
+const T_TASK_STATUS: u8 = 0x15;
+const T_ERROR: u8 = 0x16;
+
+// RoundRole sub-tags.
+const R_WAIT: u8 = 0;
+const R_NOT_SELECTED: u8 = 1;
+const R_TRAIN: u8 = 2;
+const R_UNMASK: u8 = 3;
+const R_ROUND_DONE: u8 = 4;
+const R_TASK_DONE: u8 = 5;
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Register { .. } => T_REGISTER,
+            Msg::PollTask { .. } => T_POLL_TASK,
+            Msg::JoinRound { .. } => T_JOIN_ROUND,
+            Msg::FetchRound { .. } => T_FETCH_ROUND,
+            Msg::SecAggShares { .. } => T_SECAGG_SHARES,
+            Msg::UploadPlain { .. } => T_UPLOAD_PLAIN,
+            Msg::UploadMasked { .. } => T_UPLOAD_MASKED,
+            Msg::UnmaskResponse { .. } => T_UNMASK_RESPONSE,
+            Msg::GetTaskStatus { .. } => T_GET_TASK_STATUS,
+            Msg::Heartbeat { .. } => T_HEARTBEAT,
+            Msg::RegisterAck { .. } => T_REGISTER_ACK,
+            Msg::TaskOffer { .. } => T_TASK_OFFER,
+            Msg::JoinAck { .. } => T_JOIN_ACK,
+            Msg::RoundPlan { .. } => T_ROUND_PLAN,
+            Msg::Ack { .. } => T_ACK,
+            Msg::TaskStatus { .. } => T_TASK_STATUS,
+            Msg::ErrorReply { .. } => T_ERROR,
+        }
+    }
+}
+
+impl Wire for Msg {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(self.tag());
+        match self {
+            Msg::Register {
+                device_id,
+                verdict,
+                caps,
+            } => {
+                w.put_str(device_id);
+                verdict.encode(w);
+                caps.encode(w);
+            }
+            Msg::PollTask {
+                client_id,
+                app_name,
+                workflow_name,
+            } => {
+                w.put_u64(*client_id);
+                w.put_str(app_name);
+                w.put_str(workflow_name);
+            }
+            Msg::JoinRound {
+                client_id,
+                task_id,
+                dh_pubkey,
+            } => {
+                w.put_u64(*client_id);
+                w.put_u64(*task_id);
+                w.put_bytes(dh_pubkey);
+            }
+            Msg::FetchRound { client_id, task_id } => {
+                w.put_u64(*client_id);
+                w.put_u64(*task_id);
+            }
+            Msg::SecAggShares {
+                client_id,
+                task_id,
+                round,
+                shares,
+            } => {
+                w.put_u64(*client_id);
+                w.put_u64(*task_id);
+                w.put_u64(*round);
+                w.put_varint(shares.len() as u64);
+                for s in shares {
+                    w.put_u64(s.peer);
+                    w.put_bytes(&s.enc);
+                }
+            }
+            Msg::UploadPlain {
+                client_id,
+                task_id,
+                round,
+                base_version,
+                delta,
+                weight,
+                loss,
+            } => {
+                w.put_u64(*client_id);
+                w.put_u64(*task_id);
+                w.put_u64(*round);
+                w.put_u64(*base_version);
+                w.put_f32s(delta);
+                w.put_f64(*weight);
+                w.put_f64(*loss);
+            }
+            Msg::UploadMasked {
+                client_id,
+                task_id,
+                round,
+                vg_id,
+                masked,
+                loss,
+            } => {
+                w.put_u64(*client_id);
+                w.put_u64(*task_id);
+                w.put_u64(*round);
+                w.put_u32(*vg_id);
+                w.put_u32s(masked);
+                w.put_f64(*loss);
+            }
+            Msg::UnmaskResponse {
+                client_id,
+                task_id,
+                round,
+                shares,
+            } => {
+                w.put_u64(*client_id);
+                w.put_u64(*task_id);
+                w.put_u64(*round);
+                w.put_varint(shares.len() as u64);
+                for s in shares {
+                    w.put_u64(s.dropped);
+                    w.put_u8(s.x);
+                    w.put_bytes(&s.y);
+                }
+            }
+            Msg::GetTaskStatus { task_id } => w.put_u64(*task_id),
+            Msg::Heartbeat { client_id } => w.put_u64(*client_id),
+            Msg::RegisterAck {
+                accepted,
+                client_id,
+                reason,
+            } => {
+                w.put_bool(*accepted);
+                w.put_u64(*client_id);
+                w.put_str(reason);
+            }
+            Msg::TaskOffer { task } => match task {
+                None => w.put_bool(false),
+                Some(t) => {
+                    w.put_bool(true);
+                    t.encode(w);
+                }
+            },
+            Msg::JoinAck { accepted, reason } => {
+                w.put_bool(*accepted);
+                w.put_str(reason);
+            }
+            Msg::RoundPlan { role } => match role {
+                RoundRole::Wait => w.put_u8(R_WAIT),
+                RoundRole::NotSelected => w.put_u8(R_NOT_SELECTED),
+                RoundRole::Train(ri) => {
+                    w.put_u8(R_TRAIN);
+                    ri.encode(w);
+                }
+                RoundRole::Unmask(ur) => {
+                    w.put_u8(R_UNMASK);
+                    ur.encode(w);
+                }
+                RoundRole::RoundDone => w.put_u8(R_ROUND_DONE),
+                RoundRole::TaskDone => w.put_u8(R_TASK_DONE),
+            },
+            Msg::Ack { ok, reason } => {
+                w.put_bool(*ok);
+                w.put_str(reason);
+            }
+            Msg::TaskStatus {
+                task,
+                participants,
+                last_round_duration_ms,
+                last_accuracy,
+                last_loss,
+                epsilon,
+            } => {
+                task.encode(w);
+                w.put_u64(*participants);
+                w.put_u64(*last_round_duration_ms);
+                w.put_f64(*last_accuracy);
+                w.put_f64(*last_loss);
+                w.put_f64(*epsilon);
+            }
+            Msg::ErrorReply { message } => w.put_str(message),
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Msg> {
+        let tag = r.get_u8()?;
+        Ok(match tag {
+            T_REGISTER => Msg::Register {
+                device_id: r.get_str()?,
+                verdict: Verdict::decode(r)?,
+                caps: DeviceCaps::decode(r)?,
+            },
+            T_POLL_TASK => Msg::PollTask {
+                client_id: r.get_u64()?,
+                app_name: r.get_str()?,
+                workflow_name: r.get_str()?,
+            },
+            T_JOIN_ROUND => Msg::JoinRound {
+                client_id: r.get_u64()?,
+                task_id: r.get_u64()?,
+                dh_pubkey: r
+                    .get_bytes()?
+                    .try_into()
+                    .map_err(|_| Error::Codec("pubkey not 32 bytes".into()))?,
+            },
+            T_FETCH_ROUND => Msg::FetchRound {
+                client_id: r.get_u64()?,
+                task_id: r.get_u64()?,
+            },
+            T_SECAGG_SHARES => {
+                let client_id = r.get_u64()?;
+                let task_id = r.get_u64()?;
+                let round = r.get_u64()?;
+                let n = r.get_varint()? as usize;
+                if n > 4096 {
+                    return Err(Error::Codec("too many shares".into()));
+                }
+                let mut shares = Vec::with_capacity(n);
+                for _ in 0..n {
+                    shares.push(PeerShare {
+                        peer: r.get_u64()?,
+                        enc: r.get_bytes()?,
+                    });
+                }
+                Msg::SecAggShares {
+                    client_id,
+                    task_id,
+                    round,
+                    shares,
+                }
+            }
+            T_UPLOAD_PLAIN => Msg::UploadPlain {
+                client_id: r.get_u64()?,
+                task_id: r.get_u64()?,
+                round: r.get_u64()?,
+                base_version: r.get_u64()?,
+                delta: r.get_f32s()?,
+                weight: r.get_f64()?,
+                loss: r.get_f64()?,
+            },
+            T_UPLOAD_MASKED => Msg::UploadMasked {
+                client_id: r.get_u64()?,
+                task_id: r.get_u64()?,
+                round: r.get_u64()?,
+                vg_id: r.get_u32()?,
+                masked: r.get_u32s()?,
+                loss: r.get_f64()?,
+            },
+            T_UNMASK_RESPONSE => {
+                let client_id = r.get_u64()?;
+                let task_id = r.get_u64()?;
+                let round = r.get_u64()?;
+                let n = r.get_varint()? as usize;
+                if n > 4096 {
+                    return Err(Error::Codec("too many shares".into()));
+                }
+                let mut shares = Vec::with_capacity(n);
+                for _ in 0..n {
+                    shares.push(RecoveredShare {
+                        dropped: r.get_u64()?,
+                        x: r.get_u8()?,
+                        y: r.get_bytes()?,
+                    });
+                }
+                Msg::UnmaskResponse {
+                    client_id,
+                    task_id,
+                    round,
+                    shares,
+                }
+            }
+            T_GET_TASK_STATUS => Msg::GetTaskStatus {
+                task_id: r.get_u64()?,
+            },
+            T_HEARTBEAT => Msg::Heartbeat {
+                client_id: r.get_u64()?,
+            },
+            T_REGISTER_ACK => Msg::RegisterAck {
+                accepted: r.get_bool()?,
+                client_id: r.get_u64()?,
+                reason: r.get_str()?,
+            },
+            T_TASK_OFFER => Msg::TaskOffer {
+                task: if r.get_bool()? {
+                    Some(TaskDescriptor::decode(r)?)
+                } else {
+                    None
+                },
+            },
+            T_JOIN_ACK => Msg::JoinAck {
+                accepted: r.get_bool()?,
+                reason: r.get_str()?,
+            },
+            T_ROUND_PLAN => {
+                let sub = r.get_u8()?;
+                let role = match sub {
+                    R_WAIT => RoundRole::Wait,
+                    R_NOT_SELECTED => RoundRole::NotSelected,
+                    R_TRAIN => RoundRole::Train(RoundInstruction::decode(r)?),
+                    R_UNMASK => RoundRole::Unmask(UnmaskRequest::decode(r)?),
+                    R_ROUND_DONE => RoundRole::RoundDone,
+                    R_TASK_DONE => RoundRole::TaskDone,
+                    v => return Err(Error::Codec(format!("bad round role {v}"))),
+                };
+                Msg::RoundPlan { role }
+            }
+            T_ACK => Msg::Ack {
+                ok: r.get_bool()?,
+                reason: r.get_str()?,
+            },
+            T_TASK_STATUS => Msg::TaskStatus {
+                task: TaskDescriptor::decode(r)?,
+                participants: r.get_u64()?,
+                last_round_duration_ms: r.get_u64()?,
+                last_accuracy: r.get_f64()?,
+                last_loss: r.get_f64()?,
+                epsilon: r.get_f64()?,
+            },
+            T_ERROR => Msg::ErrorReply {
+                message: r.get_str()?,
+            },
+            v => return Err(Error::Codec(format!("unknown message tag {v:#x}"))),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON ("REST") codec — control plane + plaintext uploads.
+// ---------------------------------------------------------------------------
+
+impl Msg {
+    /// JSON encoding; `Err` for binary-only (secagg data plane) messages.
+    pub fn to_json(&self) -> Result<Json> {
+        Ok(match self {
+            Msg::Register {
+                device_id,
+                verdict,
+                caps,
+            } => Json::obj()
+                .set("type", "register")
+                .set("device_id", device_id.as_str())
+                .set(
+                    "verdict",
+                    Json::obj()
+                        .set("device_id", verdict.device_id.as_str())
+                        .set("tier", verdict.tier as u8 as u64)
+                        // u64 fields ride as strings: JSON numbers are
+                        // f64 and would corrupt values above 2^53,
+                        // breaking the HMAC over the verdict.
+                        .set("nonce", verdict.nonce.to_string())
+                        .set("expires_ms", verdict.expires_ms.to_string())
+                        .set("sig", base64::encode(&verdict.sig)),
+                )
+                .set("caps", caps.to_json()),
+            Msg::PollTask {
+                client_id,
+                app_name,
+                workflow_name,
+            } => Json::obj()
+                .set("type", "poll_task")
+                .set("client_id", *client_id)
+                .set("app_name", app_name.as_str())
+                .set("workflow_name", workflow_name.as_str()),
+            Msg::Heartbeat { client_id } => Json::obj()
+                .set("type", "heartbeat")
+                .set("client_id", *client_id),
+            Msg::GetTaskStatus { task_id } => Json::obj()
+                .set("type", "get_task_status")
+                .set("task_id", *task_id),
+            Msg::UploadPlain {
+                client_id,
+                task_id,
+                round,
+                base_version,
+                delta,
+                weight,
+                loss,
+            } => {
+                let mut bytes = Vec::with_capacity(delta.len() * 4);
+                for d in delta {
+                    bytes.extend_from_slice(&d.to_le_bytes());
+                }
+                Json::obj()
+                    .set("type", "upload_plain")
+                    .set("client_id", *client_id)
+                    .set("task_id", *task_id)
+                    .set("round", *round)
+                    .set("base_version", *base_version)
+                    .set("delta_b64", base64::encode(&bytes))
+                    .set("weight", *weight)
+                    .set("loss", *loss)
+            }
+            Msg::RegisterAck {
+                accepted,
+                client_id,
+                reason,
+            } => Json::obj()
+                .set("type", "register_ack")
+                .set("accepted", *accepted)
+                .set("client_id", *client_id)
+                .set("reason", reason.as_str()),
+            Msg::TaskOffer { task } => {
+                let t = match task {
+                    None => Json::Null,
+                    Some(t) => Json::obj()
+                        .set("task_id", t.task_id)
+                        .set("task_name", t.task_name.as_str())
+                        .set("app_name", t.app_name.as_str())
+                        .set("workflow_name", t.workflow_name.as_str())
+                        .set("state", t.state as u8 as u64)
+                        .set("round", t.round)
+                        .set("total_rounds", t.total_rounds),
+                };
+                Json::obj().set("type", "task_offer").set("task", t)
+            }
+            Msg::Ack { ok, reason } => Json::obj()
+                .set("type", "ack")
+                .set("ok", *ok)
+                .set("reason", reason.as_str()),
+            Msg::ErrorReply { message } => Json::obj()
+                .set("type", "error")
+                .set("message", message.as_str()),
+            other => {
+                return Err(Error::Codec(format!(
+                    "message {:#x} is binary-only (secure-aggregation data plane \
+                     requires the gRPC-path codec)",
+                    other.tag()
+                )))
+            }
+        })
+    }
+
+    /// Parse a JSON message.
+    pub fn from_json(j: &Json) -> Result<Msg> {
+        let ty = j.req_str("type").map_err(Error::Codec)?;
+        Ok(match ty {
+            "register" => {
+                let v = j
+                    .get("verdict")
+                    .ok_or_else(|| Error::Codec("missing verdict".into()))?;
+                let sig_v = base64::decode(v.req_str("sig").map_err(Error::Codec)?)
+                    .map_err(Error::Codec)?;
+                let parse_u64_str = |key: &str| -> Result<u64> {
+                    v.req_str(key)
+                        .map_err(Error::Codec)?
+                        .parse::<u64>()
+                        .map_err(|e| Error::Codec(format!("verdict.{key}: {e}")))
+                };
+                let verdict = Verdict {
+                    device_id: v.req_str("device_id").map_err(Error::Codec)?.to_string(),
+                    tier: crate::crypto::attest::IntegrityTier::from_u8(
+                        v.req_usize("tier").map_err(Error::Codec)? as u8,
+                    )
+                    .ok_or_else(|| Error::Codec("bad tier".into()))?,
+                    nonce: parse_u64_str("nonce")?,
+                    expires_ms: parse_u64_str("expires_ms")?,
+                    sig: sig_v
+                        .try_into()
+                        .map_err(|_| Error::Codec("sig not 32 bytes".into()))?,
+                };
+                Msg::Register {
+                    device_id: j.req_str("device_id").map_err(Error::Codec)?.to_string(),
+                    verdict,
+                    caps: DeviceCaps::from_json(
+                        j.get("caps")
+                            .ok_or_else(|| Error::Codec("missing caps".into()))?,
+                    )?,
+                }
+            }
+            "poll_task" => Msg::PollTask {
+                client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+                app_name: j.req_str("app_name").map_err(Error::Codec)?.to_string(),
+                workflow_name: j
+                    .req_str("workflow_name")
+                    .map_err(Error::Codec)?
+                    .to_string(),
+            },
+            "heartbeat" => Msg::Heartbeat {
+                client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+            },
+            "get_task_status" => Msg::GetTaskStatus {
+                task_id: j.req_usize("task_id").map_err(Error::Codec)? as u64,
+            },
+            "upload_plain" => {
+                let bytes = base64::decode(j.req_str("delta_b64").map_err(Error::Codec)?)
+                    .map_err(Error::Codec)?;
+                if bytes.len() % 4 != 0 {
+                    return Err(Error::Codec("delta not f32-aligned".into()));
+                }
+                let delta = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Msg::UploadPlain {
+                    client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+                    task_id: j.req_usize("task_id").map_err(Error::Codec)? as u64,
+                    round: j.req_usize("round").map_err(Error::Codec)? as u64,
+                    base_version: j.opt_usize("base_version", 0) as u64,
+                    delta,
+                    weight: j.opt_f64("weight", 1.0),
+                    loss: j.opt_f64("loss", 0.0),
+                }
+            }
+            "register_ack" => Msg::RegisterAck {
+                accepted: j.opt_bool("accepted", false),
+                client_id: j.opt_usize("client_id", 0) as u64,
+                reason: j.opt_str("reason", ""),
+            },
+            "task_offer" => {
+                let task = match j.get("task") {
+                    None | Some(Json::Null) => None,
+                    Some(t) => Some(TaskDescriptor {
+                        task_id: t.req_usize("task_id").map_err(Error::Codec)? as u64,
+                        task_name: t.req_str("task_name").map_err(Error::Codec)?.to_string(),
+                        app_name: t.req_str("app_name").map_err(Error::Codec)?.to_string(),
+                        workflow_name: t
+                            .req_str("workflow_name")
+                            .map_err(Error::Codec)?
+                            .to_string(),
+                        state: super::TaskState::from_u8(
+                            t.req_usize("state").map_err(Error::Codec)? as u8,
+                        )
+                        .ok_or_else(|| Error::Codec("bad state".into()))?,
+                        round: t.req_usize("round").map_err(Error::Codec)? as u64,
+                        total_rounds: t.req_usize("total_rounds").map_err(Error::Codec)? as u64,
+                    }),
+                };
+                Msg::TaskOffer { task }
+            }
+            "ack" => Msg::Ack {
+                ok: j.opt_bool("ok", false),
+                reason: j.opt_str("reason", ""),
+            },
+            "error" => Msg::ErrorReply {
+                message: j.opt_str("message", ""),
+            },
+            other => return Err(Error::Codec(format!("unknown json message type {other:?}"))),
+        })
+    }
+}
+
+/// Encode a message into a frame for the given codec.
+pub fn encode_frame(msg: &Msg, codec: WireCodec) -> Result<Vec<u8>> {
+    match codec {
+        WireCodec::Binary => Ok(msg.to_bytes()),
+        WireCodec::Json => Ok(msg.to_json()?.to_string().into_bytes()),
+    }
+}
+
+/// Decode a frame, auto-detecting the codec from the first byte.
+pub fn decode_frame(frame: &[u8]) -> Result<(Msg, WireCodec)> {
+    match frame.first() {
+        Some(b'{') => {
+            let text = std::str::from_utf8(frame)
+                .map_err(|e| Error::Codec(format!("bad utf8 json frame: {e}")))?;
+            let j = json_parse(text).map_err(Error::Codec)?;
+            Ok((Msg::from_json(&j)?, WireCodec::Json))
+        }
+        Some(_) => Ok((Msg::from_bytes(frame)?, WireCodec::Binary)),
+        None => Err(Error::Codec("empty frame".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::attest::{Authority, IntegrityTier};
+    use crate::proto::{TaskState, TrainParams};
+
+    fn sample_register() -> Msg {
+        let auth = Authority::new(b"k");
+        Msg::Register {
+            device_id: "dev-1".into(),
+            verdict: auth.issue("dev-1", IntegrityTier::Device, 7, 99),
+            caps: DeviceCaps::default(),
+        }
+    }
+
+    fn all_binary_samples() -> Vec<Msg> {
+        vec![
+            sample_register(),
+            Msg::PollTask {
+                client_id: 1,
+                app_name: "app".into(),
+                workflow_name: "wf".into(),
+            },
+            Msg::JoinRound {
+                client_id: 1,
+                task_id: 2,
+                dh_pubkey: [5u8; 32],
+            },
+            Msg::FetchRound {
+                client_id: 1,
+                task_id: 2,
+            },
+            Msg::SecAggShares {
+                client_id: 1,
+                task_id: 2,
+                round: 3,
+                shares: vec![PeerShare {
+                    peer: 9,
+                    enc: vec![1, 2, 3],
+                }],
+            },
+            Msg::UploadPlain {
+                client_id: 1,
+                task_id: 2,
+                round: 3,
+                base_version: 4,
+                delta: vec![0.5, -1.0],
+                weight: 67.0,
+                loss: 0.69,
+            },
+            Msg::UploadMasked {
+                client_id: 1,
+                task_id: 2,
+                round: 3,
+                vg_id: 0,
+                masked: vec![17, 0xffff_ffff],
+                loss: 0.5,
+            },
+            Msg::UnmaskResponse {
+                client_id: 1,
+                task_id: 2,
+                round: 3,
+                shares: vec![RecoveredShare {
+                    dropped: 4,
+                    x: 2,
+                    y: vec![9, 8],
+                }],
+            },
+            Msg::GetTaskStatus { task_id: 2 },
+            Msg::Heartbeat { client_id: 1 },
+            Msg::RegisterAck {
+                accepted: true,
+                client_id: 42,
+                reason: String::new(),
+            },
+            Msg::TaskOffer { task: None },
+            Msg::TaskOffer {
+                task: Some(TaskDescriptor {
+                    task_id: 1,
+                    task_name: "t".into(),
+                    app_name: "a".into(),
+                    workflow_name: "w".into(),
+                    state: TaskState::Running,
+                    round: 1,
+                    total_rounds: 10,
+                }),
+            },
+            Msg::JoinAck {
+                accepted: false,
+                reason: "full".into(),
+            },
+            Msg::RoundPlan {
+                role: RoundRole::Wait,
+            },
+            Msg::RoundPlan {
+                role: RoundRole::Train(RoundInstruction {
+                    round: 1,
+                    model_blob: vec![3, 2, 1],
+                    train: TrainParams {
+                        preset: "tiny".into(),
+                        lr: 5e-4,
+                        prox_mu: 0.1,
+                    },
+                    secagg: None,
+                    deadline_ms: 10,
+                }),
+            },
+            Msg::RoundPlan {
+                role: RoundRole::Unmask(UnmaskRequest {
+                    round: 1,
+                    vg_id: 0,
+                    dropped: vec![(7, vec![1])],
+                }),
+            },
+            Msg::RoundPlan {
+                role: RoundRole::TaskDone,
+            },
+            Msg::Ack {
+                ok: true,
+                reason: String::new(),
+            },
+            Msg::TaskStatus {
+                task: TaskDescriptor {
+                    task_id: 1,
+                    task_name: "t".into(),
+                    app_name: "a".into(),
+                    workflow_name: "w".into(),
+                    state: TaskState::Completed,
+                    round: 10,
+                    total_rounds: 10,
+                },
+                participants: 32,
+                last_round_duration_ms: 1234,
+                last_accuracy: 0.97,
+                last_loss: 0.1,
+                epsilon: 2.0,
+            },
+            Msg::ErrorReply {
+                message: "boom".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn binary_roundtrip_all_variants() {
+        for msg in all_binary_samples() {
+            let frame = encode_frame(&msg, WireCodec::Binary).unwrap();
+            let (back, codec) = decode_frame(&frame).unwrap();
+            assert_eq!(codec, WireCodec::Binary);
+            assert_eq!(back, msg, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_control_plane() {
+        let msgs = vec![
+            sample_register(),
+            Msg::PollTask {
+                client_id: 3,
+                app_name: "python-app".into(),
+                workflow_name: "python-workflow".into(),
+            },
+            Msg::Heartbeat { client_id: 3 },
+            Msg::GetTaskStatus { task_id: 1 },
+            Msg::UploadPlain {
+                client_id: 3,
+                task_id: 1,
+                round: 2,
+                base_version: 2,
+                delta: vec![0.25, -0.5, 1e-3],
+                weight: 8.0,
+                loss: 0.4,
+            },
+            Msg::RegisterAck {
+                accepted: true,
+                client_id: 3,
+                reason: String::new(),
+            },
+            Msg::TaskOffer { task: None },
+            Msg::Ack {
+                ok: false,
+                reason: "deadline".into(),
+            },
+            Msg::ErrorReply {
+                message: "x".into(),
+            },
+        ];
+        for msg in msgs {
+            let frame = encode_frame(&msg, WireCodec::Json).unwrap();
+            assert_eq!(frame[0], b'{');
+            let (back, codec) = decode_frame(&frame).unwrap();
+            assert_eq!(codec, WireCodec::Json);
+            assert_eq!(back, msg, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn secagg_messages_are_binary_only() {
+        let m = Msg::UploadMasked {
+            client_id: 1,
+            task_id: 1,
+            round: 1,
+            vg_id: 0,
+            masked: vec![1],
+            loss: 0.0,
+        };
+        assert!(encode_frame(&m, WireCodec::Json).is_err());
+        assert!(encode_frame(&m, WireCodec::Binary).is_ok());
+    }
+
+    #[test]
+    fn attested_register_survives_both_codecs() {
+        let auth = Authority::new(b"authority");
+        let msg = sample_register();
+        // Signature must verify after a JSON round trip.
+        let frame = encode_frame(&msg, WireCodec::Json).unwrap();
+        let (back, _) = decode_frame(&frame).unwrap();
+        if let (Msg::Register { verdict: v1, .. }, Msg::Register { verdict: v2, .. }) =
+            (&msg, &back)
+        {
+            assert_eq!(v1, v2);
+            let auth_k = Authority::new(b"k");
+            assert!(auth_k.verify(v2));
+            assert!(!auth.verify(v2));
+        } else {
+            panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_frame(&[]).is_err());
+        assert!(decode_frame(&[0xee, 1, 2]).is_err());
+        assert!(decode_frame(b"{not json").is_err());
+        assert!(decode_frame(br#"{"type":"wat"}"#).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Fixed-point quantization for secure aggregation (§4.1).
+//!
+//! "For secure aggregation ... the model must be quantized and transformed
+//! into an array of integers, an operation which can be only partially
+//! reversed after the weights are aggregated."
+//!
+//! Scheme: values are clipped to [-r, r] and mapped affinely onto
+//! `[0, 2^bits)`; masked sums are taken mod 2³². After aggregating `n`
+//! clients the server subtracts `n` offsets and rescales. Headroom must
+//! satisfy `bits + ceil(log2(n)) <= 32` or the modular sum wraps.
+
+use crate::error::{Error, Result};
+
+/// Quantizer configuration shared by clients and the aggregator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quantizer {
+    /// Clip range: values are clamped to [-range, range].
+    pub range: f32,
+    /// Bits per coordinate (resolution 2r / 2^bits).
+    pub bits: u32,
+}
+
+impl Quantizer {
+    pub fn new(range: f32, bits: u32) -> Result<Quantizer> {
+        if !(range > 0.0) {
+            return Err(Error::Other(format!("quantizer range must be > 0, got {range}")));
+        }
+        if bits == 0 || bits > 30 {
+            return Err(Error::Other(format!("quantizer bits must be in 1..=30, got {bits}")));
+        }
+        Ok(Quantizer { range, bits })
+    }
+
+    /// Paper-flavoured default: 20-bit lattice, headroom for 4096 clients.
+    pub fn default_for(n_clients: usize) -> Quantizer {
+        let head = (n_clients.max(2) as f64).log2().ceil() as u32 + 1;
+        let bits = (32 - head).min(20);
+        Quantizer { range: 4.0, bits }
+    }
+
+    #[inline]
+    pub fn levels(&self) -> u32 {
+        1u32 << self.bits
+    }
+
+    #[inline]
+    fn scale(&self) -> f32 {
+        (self.levels() - 1) as f32 / (2.0 * self.range)
+    }
+
+    /// Max clients whose sum fits mod 2³² without wrapping.
+    pub fn max_clients(&self) -> usize {
+        (u32::MAX / (self.levels() - 1)) as usize
+    }
+
+    /// Quantize one value to a lattice point in [0, 2^bits).
+    #[inline]
+    pub fn quantize_one(&self, x: f32) -> u32 {
+        let c = x.clamp(-self.range, self.range);
+        // round-to-nearest onto the lattice
+        (((c + self.range) * self.scale()) + 0.5) as u32
+    }
+
+    /// Dequantize a *single-client* lattice point.
+    #[inline]
+    pub fn dequantize_one(&self, q: u32) -> f32 {
+        q as f32 / self.scale() - self.range
+    }
+
+    /// Quantize a vector. §Perf: scale is hoisted so the per-element work
+    /// is clamp + fused multiply-add + cast (the division inside
+    /// `scale()` dominated when recomputed per element).
+    pub fn quantize(&self, xs: &[f32]) -> Vec<u32> {
+        let scale = self.scale();
+        let r = self.range;
+        // NOTE: plain mul+add, not f32::mul_add — without -Ctarget-feature
+        // =+fma the intrinsic lowers to a libm call and is ~2× slower.
+        xs.iter()
+            .map(|&x| ((x.clamp(-r, r) + r) * scale + 0.5) as u32)
+            .collect()
+    }
+
+    /// Recover the *mean* of `n` clients from their (masked-summed mod 2³²)
+    /// lattice values: subtract the n offsets, rescale, divide by n.
+    pub fn dequantize_sum_to_mean(&self, sums: &[u32], n: usize) -> Result<Vec<f32>> {
+        if n == 0 {
+            return Err(Error::Other("dequantize with n=0".into()));
+        }
+        if n > self.max_clients() {
+            return Err(Error::Other(format!(
+                "{n} clients exceeds modular headroom for {} bits",
+                self.bits
+            )));
+        }
+        let scale = self.scale();
+        let inv_n = 1.0 / n as f32;
+        Ok(sums
+            .iter()
+            .map(|&s| (s as f32 * inv_n) / scale - self.range)
+            .collect())
+    }
+
+    /// Worst-case per-coordinate rounding error (half a lattice step).
+    pub fn step(&self) -> f32 {
+        (2.0 * self.range) / (self.levels() - 1) as f32
+    }
+}
+
+/// Wrapping (mod 2³²) element-wise accumulate: acc += xs.
+pub fn add_mod(acc: &mut [u32], xs: &[u32]) {
+    debug_assert_eq!(acc.len(), xs.len());
+    for (a, &x) in acc.iter_mut().zip(xs) {
+        *a = a.wrapping_add(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let q = Quantizer::new(1.0, 16).unwrap();
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = (rng.next_f32() - 0.5) * 2.0; // in [-1, 1)
+            let err = (q.dequantize_one(q.quantize_one(x)) - x).abs();
+            assert!(err <= q.step() * 0.5 + 1e-6, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn clipping_applied() {
+        let q = Quantizer::new(0.5, 8).unwrap();
+        assert_eq!(q.quantize_one(10.0), q.levels() - 1);
+        assert_eq!(q.quantize_one(-10.0), 0);
+    }
+
+    #[test]
+    fn sum_of_clients_recovers_mean() {
+        let q = Quantizer::new(2.0, 16).unwrap();
+        let mut rng = Rng::new(2);
+        let n = 33;
+        let dim = 257;
+        let clients: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| (rng.next_f32() - 0.5) * 3.0).collect())
+            .collect();
+        let mut acc = vec![0u32; dim];
+        for c in &clients {
+            add_mod(&mut acc, &q.quantize(c));
+        }
+        let mean = q.dequantize_sum_to_mean(&acc, n).unwrap();
+        for j in 0..dim {
+            let want: f32 = clients.iter().map(|c| c[j].clamp(-2.0, 2.0)).sum::<f32>() / n as f32;
+            assert!((mean[j] - want).abs() < q.step(), "{} vs {}", mean[j], want);
+        }
+    }
+
+    #[test]
+    fn headroom_enforced() {
+        let q = Quantizer::new(1.0, 24).unwrap();
+        assert!(q.dequantize_sum_to_mean(&[0], q.max_clients() + 1).is_err());
+        assert!(q.dequantize_sum_to_mean(&[0], 2).is_ok());
+    }
+
+    #[test]
+    fn default_for_scales_bits_down() {
+        let small = Quantizer::default_for(8);
+        let big = Quantizer::default_for(4096);
+        assert!(small.bits >= big.bits);
+        assert!(big.max_clients() >= 4096);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(Quantizer::new(0.0, 16).is_err());
+        assert!(Quantizer::new(-1.0, 16).is_err());
+        assert!(Quantizer::new(1.0, 0).is_err());
+        assert!(Quantizer::new(1.0, 31).is_err());
+    }
+}

@@ -1,0 +1,302 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text lowered from the L2
+//! JAX model + L1 Pallas kernels) and executes them natively.
+//!
+//! Python never runs here — `artifacts/*.hlo.txt` were produced once by
+//! `make artifacts`; this module parses the HLO text, compiles it on the
+//! PJRT CPU client, and serves train/eval executions to the platform.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), so
+//! all PJRT interaction is confined to dedicated worker threads; the rest
+//! of the platform talks to them through the cloneable [`RuntimeHandle`].
+//! One worker per core is the right default — the PJRT CPU backend
+//! parallelizes internally.
+
+pub mod trainer;
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::config::Manifest;
+use crate::error::{Error, Result};
+
+pub use trainer::{HloEvaluator, HloTrainer, ShardSampler};
+
+/// A local-training execution request (mirrors the train artifact ABI:
+/// see python/compile/model.py `make_train_fn`).
+#[derive(Clone, Debug)]
+pub struct TrainRequest {
+    pub preset: String,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+    /// i32[k, B, T] flattened.
+    pub tokens: Vec<i32>,
+    /// i32[k, B] flattened.
+    pub labels: Vec<i32>,
+    pub lr: f32,
+    pub prox_mu: f32,
+    pub anchor: Vec<f32>,
+}
+
+/// Result of k local steps.
+#[derive(Clone, Debug)]
+pub struct TrainResponse {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+    /// Per-step losses/accuracies (length k).
+    pub losses: Vec<f32>,
+    pub accs: Vec<f32>,
+}
+
+/// Evaluation request (one batch).
+#[derive(Clone, Debug)]
+pub struct EvalRequest {
+    pub preset: String,
+    pub params: Vec<f32>,
+    /// i32[B_eval, T] flattened.
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+enum Job {
+    Train(TrainRequest, Sender<Result<TrainResponse>>),
+    Eval(EvalRequest, Sender<Result<(f64, f64)>>),
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime worker pool.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Job>,
+}
+
+impl RuntimeHandle {
+    pub fn train(&self, req: TrainRequest) -> Result<TrainResponse> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Job::Train(req, tx))
+            .map_err(|_| Error::Runtime("runtime worker gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime worker dropped reply".into()))?
+    }
+
+    pub fn eval(&self, req: EvalRequest) -> Result<(f64, f64)> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Job::Eval(req, tx))
+            .map_err(|_| Error::Runtime("runtime worker gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime worker dropped reply".into()))?
+    }
+}
+
+/// The runtime: spawns PJRT worker threads and hands out handles.
+pub struct Runtime {
+    workers: Vec<thread::JoinHandle<()>>,
+    handles: Vec<RuntimeHandle>,
+    next: Mutex<usize>,
+}
+
+impl Runtime {
+    /// Spawn `n_workers` PJRT worker threads over the given manifest.
+    pub fn new(manifest: Manifest, n_workers: usize) -> Result<Arc<Runtime>> {
+        let n = n_workers.max(1);
+        let mut workers = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<Job>();
+            let man = manifest.clone();
+            let jh = thread::Builder::new()
+                .name(format!("pjrt-worker-{i}"))
+                .spawn(move || worker_main(man, rx))
+                .map_err(Error::Io)?;
+            workers.push(jh);
+            handles.push(RuntimeHandle { tx });
+        }
+        Ok(Arc::new(Runtime {
+            workers,
+            handles,
+            next: Mutex::new(0),
+        }))
+    }
+
+    /// Round-robin handle.
+    pub fn handle(&self) -> RuntimeHandle {
+        let mut g = self.next.lock().unwrap();
+        let h = self.handles[*g % self.handles.len()].clone();
+        *g += 1;
+        h
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        for h in &self.handles {
+            let _ = h.tx.send(Job::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side (owns the !Send PJRT objects)
+// ---------------------------------------------------------------------------
+
+struct CompiledPreset {
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    param_count: usize,
+    local_steps: usize,
+    batch: usize,
+    eval_batch: usize,
+    seq_len: usize,
+}
+
+fn worker_main(manifest: Manifest, rx: std::sync::mpsc::Receiver<Job>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            log::error!("pjrt worker failed to start client: {e}");
+            return;
+        }
+    };
+    let mut compiled: HashMap<String, CompiledPreset> = HashMap::new();
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Train(req, reply) => {
+                let r = get_preset(&client, &manifest, &mut compiled, &req.preset)
+                    .and_then(|p| run_train(p, &req));
+                let _ = reply.send(r);
+            }
+            Job::Eval(req, reply) => {
+                let r = get_preset(&client, &manifest, &mut compiled, &req.preset)
+                    .and_then(|p| run_eval(p, &req));
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn get_preset<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    compiled: &'a mut HashMap<String, CompiledPreset>,
+    name: &str,
+) -> Result<&'a CompiledPreset> {
+    if !compiled.contains_key(name) {
+        let p = manifest.preset(name)?;
+        let t0 = std::time::Instant::now();
+        let train = compile_hlo(client, &manifest.path_of(&p.train_path))?;
+        let eval = compile_hlo(client, &manifest.path_of(&p.eval_path))?;
+        log::info!(
+            "pjrt: compiled preset {name} (P={}) in {:.1}s",
+            p.param_count,
+            t0.elapsed().as_secs_f64()
+        );
+        compiled.insert(
+            name.to_string(),
+            CompiledPreset {
+                train,
+                eval,
+                param_count: p.param_count,
+                local_steps: p.local_steps,
+                batch: p.batch,
+                eval_batch: p.eval_batch,
+                seq_len: p.seq_len,
+            },
+        );
+    }
+    Ok(&compiled[name])
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+    // HLO TEXT is the interchange format — see DESIGN.md / aot.py: the
+    // text parser reassigns instruction ids, avoiding the 64-bit-id protos
+    // jax >= 0.5 emits (rejected by xla_extension 0.5.1).
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn run_train(p: &CompiledPreset, req: &TrainRequest) -> Result<TrainResponse> {
+    let pc = p.param_count;
+    for (name, v) in [
+        ("params", &req.params),
+        ("m", &req.m),
+        ("v", &req.v),
+        ("anchor", &req.anchor),
+    ] {
+        if v.len() != pc {
+            return Err(Error::Runtime(format!("{name} dim {} != {pc}", v.len())));
+        }
+    }
+    let (k, b, t) = (p.local_steps as i64, p.batch as i64, p.seq_len as i64);
+    if req.tokens.len() != (k * b * t) as usize || req.labels.len() != (k * b) as usize {
+        return Err(Error::Runtime(format!(
+            "tokens/labels shape mismatch: {} vs {}, {} vs {}",
+            req.tokens.len(),
+            k * b * t,
+            req.labels.len(),
+            k * b
+        )));
+    }
+    let args = [
+        xla::Literal::vec1(&req.params),
+        xla::Literal::vec1(&req.m),
+        xla::Literal::vec1(&req.v),
+        xla::Literal::scalar(req.step),
+        xla::Literal::vec1(&req.tokens).reshape(&[k, b, t])?,
+        xla::Literal::vec1(&req.labels).reshape(&[k, b])?,
+        xla::Literal::scalar(req.lr),
+        xla::Literal::scalar(req.prox_mu),
+        xla::Literal::vec1(&req.anchor),
+    ];
+    let result = p.train.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    let parts = result.to_tuple()?;
+    if parts.len() != 6 {
+        return Err(Error::Runtime(format!("train tuple arity {}", parts.len())));
+    }
+    let mut it = parts.into_iter();
+    let params = it.next().unwrap().to_vec::<f32>()?;
+    let m = it.next().unwrap().to_vec::<f32>()?;
+    let v = it.next().unwrap().to_vec::<f32>()?;
+    let step: f32 = it.next().unwrap().get_first_element()?;
+    let losses = it.next().unwrap().to_vec::<f32>()?;
+    let accs = it.next().unwrap().to_vec::<f32>()?;
+    Ok(TrainResponse {
+        params,
+        m,
+        v,
+        step,
+        losses,
+        accs,
+    })
+}
+
+fn run_eval(p: &CompiledPreset, req: &EvalRequest) -> Result<(f64, f64)> {
+    let (b, t) = (p.eval_batch as i64, p.seq_len as i64);
+    if req.params.len() != p.param_count
+        || req.tokens.len() != (b * t) as usize
+        || req.labels.len() != b as usize
+    {
+        return Err(Error::Runtime("eval shape mismatch".into()));
+    }
+    let args = [
+        xla::Literal::vec1(&req.params),
+        xla::Literal::vec1(&req.tokens).reshape(&[b, t])?,
+        xla::Literal::vec1(&req.labels).reshape(&[b])?,
+    ];
+    let result = p.eval.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    let (loss, acc) = result.to_tuple2()?;
+    let loss: f32 = loss.get_first_element()?;
+    let acc: f32 = acc.get_first_element()?;
+    Ok((loss as f64, acc as f64))
+}

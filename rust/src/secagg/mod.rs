@@ -1,0 +1,229 @@
+//! Secure-aggregation key schedule and mask math (§4.1) — shared by the
+//! client SDK participant and the server-side Secure Aggregator so the
+//! two sides agree bit-for-bit (the paper's "cross-platform compatible
+//! KDF" requirement).
+//!
+//! Protocol (Bonawitz et al. 2016 pairwise masks, one DH keypair per
+//! client per round):
+//!
+//! 1. Each VG member i advertises a per-round X25519 public key pk_i.
+//! 2. For each peer pair (i, j): shared_ij = DH(sk_i, pk_j) = DH(sk_j, pk_i);
+//!    mask stream m_ij = AES-CTR(HKDF(shared_ij, "mask|task|round|lo|hi")).
+//! 3. Client i uploads y_i = q(x_i) + Σ_{j>i} m_ij − Σ_{j<i} m_ij (mod 2³²).
+//!    Σ_i y_i = Σ_i q(x_i) by cancellation.
+//! 4. Dropout recovery: i Shamir-shares its DH *seed* among the VG
+//!    (shares encrypted under HKDF(shared_ij, "share|...")); the Secure
+//!    Aggregator reconstructs a dropped seed from t survivor shares and
+//!    removes the orphaned masks.
+
+use crate::crypto::hkdf;
+use crate::crypto::prg::MaskPrg;
+use crate::crypto::x25519::{KeyPair, PublicKey, SharedSecret};
+
+/// Domain-separation salt for all secagg derivations.
+const SALT: &[u8] = b"florida-secagg-v1";
+
+/// Pairwise mask key — symmetric in (a, b).
+pub fn mask_key(shared: &SharedSecret, task_id: u64, round: u64, a: u64, b: u64) -> [u8; 16] {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let mut info = Vec::with_capacity(5 + 32);
+    info.extend_from_slice(b"mask|");
+    info.extend_from_slice(&task_id.to_le_bytes());
+    info.extend_from_slice(&round.to_le_bytes());
+    info.extend_from_slice(&lo.to_le_bytes());
+    info.extend_from_slice(&hi.to_le_bytes());
+    hkdf::derive_key16(SALT, &shared.0, &info)
+}
+
+/// Directional share-encryption key (from → to).
+pub fn share_enc_key(
+    shared: &SharedSecret,
+    task_id: u64,
+    round: u64,
+    from: u64,
+    to: u64,
+) -> [u8; 16] {
+    let mut info = Vec::with_capacity(6 + 32);
+    info.extend_from_slice(b"share|");
+    info.extend_from_slice(&task_id.to_le_bytes());
+    info.extend_from_slice(&round.to_le_bytes());
+    info.extend_from_slice(&from.to_le_bytes());
+    info.extend_from_slice(&to.to_le_bytes());
+    hkdf::derive_key16(SALT, &shared.0, &info)
+}
+
+/// XOR-encrypt/decrypt with the AES-CTR keystream (symmetric).
+pub fn stream_xor(key: [u8; 16], data: &[u8]) -> Vec<u8> {
+    let mut prg = MaskPrg::new(key);
+    let words = prg.mask_vec((data.len() + 3) / 4);
+    let mut ks = Vec::with_capacity(data.len());
+    for w in words {
+        ks.extend_from_slice(&w.to_le_bytes());
+    }
+    data.iter().zip(ks).map(|(d, k)| d ^ k).collect()
+}
+
+/// Apply all pairwise masks for member `me` of `roster` onto `acc`
+/// (already containing the quantized update). Sign convention:
+/// +m for peers with larger id, −m for smaller.
+pub fn apply_pairwise_masks(
+    acc: &mut [u32],
+    me: u64,
+    kp: &KeyPair,
+    roster: &[(u64, [u8; 32])],
+    task_id: u64,
+    round: u64,
+) {
+    for &(peer, pk) in roster {
+        if peer == me {
+            continue;
+        }
+        let shared = kp.agree(&PublicKey(pk));
+        let key = mask_key(&shared, task_id, round, me, peer);
+        let sign = if peer > me { 1 } else { -1 };
+        MaskPrg::new(key).apply_mask(acc, sign);
+    }
+}
+
+/// Recompute the mask stream between a reconstructed dropped client and a
+/// survivor, as seen *from the survivor's upload*, and remove it from
+/// the VG sum. The survivor `surv` applied sign = +1 if dropped > surv
+/// else −1; we apply the opposite.
+pub fn remove_orphan_mask(
+    acc: &mut [u32],
+    dropped_kp: &KeyPair,
+    dropped_id: u64,
+    surv_id: u64,
+    surv_pk: &[u8; 32],
+    task_id: u64,
+    round: u64,
+) {
+    let shared = dropped_kp.agree(&PublicKey(*surv_pk));
+    let key = mask_key(&shared, task_id, round, dropped_id, surv_id);
+    let sign_applied_by_survivor = if dropped_id > surv_id { 1 } else { -1 };
+    MaskPrg::new(key).apply_mask(acc, -sign_applied_by_survivor);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{add_mod, Quantizer};
+    use crate::util::Rng;
+
+    fn keypairs(n: usize, seed: u64) -> Vec<KeyPair> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| KeyPair::generate(&mut rng)).collect()
+    }
+
+    #[test]
+    fn mask_key_symmetric_in_pair() {
+        let kps = keypairs(2, 1);
+        let s01 = kps[0].agree(&kps[1].public());
+        let s10 = kps[1].agree(&kps[0].public());
+        assert_eq!(
+            mask_key(&s01, 7, 3, 10, 20),
+            mask_key(&s10, 7, 3, 20, 10)
+        );
+        // Different round/task/pair → different key.
+        assert_ne!(mask_key(&s01, 7, 3, 10, 20), mask_key(&s01, 7, 4, 10, 20));
+        assert_ne!(mask_key(&s01, 8, 3, 10, 20), mask_key(&s01, 7, 3, 10, 20));
+    }
+
+    #[test]
+    fn stream_xor_roundtrip() {
+        let key = [9u8; 16];
+        let msg = b"shamir share payload xyz".to_vec();
+        let ct = stream_xor(key, &msg);
+        assert_ne!(ct, msg);
+        assert_eq!(stream_xor(key, &ct), msg);
+    }
+
+    #[test]
+    fn full_vg_masks_cancel() {
+        // 5 clients, random updates: Σ masked == Σ quantized.
+        let n = 5;
+        let dim = 301;
+        let kps = keypairs(n, 2);
+        let ids: Vec<u64> = (0..n as u64).map(|i| i * 3 + 1).collect();
+        let roster: Vec<(u64, [u8; 32])> = ids
+            .iter()
+            .zip(&kps)
+            .map(|(&id, kp)| (id, kp.public().0))
+            .collect();
+        let q = Quantizer::new(1.0, 16).unwrap();
+        let mut rng = Rng::new(3);
+        let mut plain_sum = vec![0u32; dim];
+        let mut masked_sum = vec![0u32; dim];
+        for (i, kp) in kps.iter().enumerate() {
+            let x: Vec<f32> = (0..dim).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let qx = q.quantize(&x);
+            add_mod(&mut plain_sum, &qx);
+            let mut y = qx;
+            apply_pairwise_masks(&mut y, ids[i], kp, &roster, 42, 7, );
+            add_mod(&mut masked_sum, &y);
+        }
+        assert_eq!(masked_sum, plain_sum);
+    }
+
+    #[test]
+    fn single_masked_update_looks_random() {
+        // One masked upload must not equal the quantized plaintext.
+        let kps = keypairs(2, 4);
+        let roster = vec![(1u64, kps[0].public().0), (2u64, kps[1].public().0)];
+        let q = Quantizer::new(1.0, 16).unwrap();
+        let x = vec![0.5f32; 64];
+        let qx = q.quantize(&x);
+        let mut y = qx.clone();
+        apply_pairwise_masks(&mut y, 1, &kps[0], &roster, 1, 1);
+        assert_ne!(y, qx);
+        let diffs = y.iter().zip(&qx).filter(|(a, b)| a != b).count();
+        assert!(diffs > 60);
+    }
+
+    #[test]
+    fn orphan_mask_removal_recovers_survivor_sum() {
+        // 4 clients; client with id ids[3] uploads nothing. Survivors'
+        // masked sum + orphan removal == survivors' plain sum.
+        let n = 4;
+        let dim = 129;
+        let kps = keypairs(n, 5);
+        let ids: Vec<u64> = vec![2, 5, 9, 11];
+        let roster: Vec<(u64, [u8; 32])> = ids
+            .iter()
+            .zip(&kps)
+            .map(|(&id, kp)| (id, kp.public().0))
+            .collect();
+        let q = Quantizer::new(1.0, 16).unwrap();
+        let mut rng = Rng::new(6);
+        let mut plain_sum = vec![0u32; dim];
+        let mut masked_sum = vec![0u32; dim];
+        let dropped = 3usize; // index of dropped client
+        for i in 0..n {
+            if i == dropped {
+                continue;
+            }
+            let x: Vec<f32> = (0..dim).map(|_| rng.next_f32() - 0.5).collect();
+            let qx = q.quantize(&x);
+            add_mod(&mut plain_sum, &qx);
+            let mut y = qx;
+            apply_pairwise_masks(&mut y, ids[i], &kps[i], &roster, 9, 2);
+            add_mod(&mut masked_sum, &y);
+        }
+        assert_ne!(masked_sum, plain_sum); // orphaned masks present
+        for i in 0..n {
+            if i == dropped {
+                continue;
+            }
+            remove_orphan_mask(
+                &mut masked_sum,
+                &kps[dropped],
+                ids[dropped],
+                ids[i],
+                &kps[i].public().0,
+                9,
+                2,
+            );
+        }
+        assert_eq!(masked_sum, plain_sum);
+    }
+}

@@ -1,0 +1,127 @@
+//! Authentication Service (§3.1.5): validates device attestation before a
+//! device may join any federated task.
+//!
+//! The trusted third party (Play Integrity / SysIntegrity) is simulated by
+//! [`crate::crypto::attest::Authority`]. This service checks: signature,
+//! expiry, nonce freshness (replay defence), and identity binding.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use crate::crypto::attest::{Authority, Verdict};
+use crate::error::{Error, Result};
+
+/// Authentication service state.
+pub struct AuthService {
+    authority: Authority,
+    /// Nonces already accepted (replay defence).
+    seen_nonces: Mutex<HashSet<(String, u64)>>,
+    /// When false, devices are admitted without attestation (dev mode —
+    /// the paper's attestation is Android/Huawei-only).
+    pub required: bool,
+}
+
+impl AuthService {
+    pub fn new(authority_key: &[u8], required: bool) -> AuthService {
+        AuthService {
+            authority: Authority::new(authority_key),
+            seen_nonces: Mutex::new(HashSet::new()),
+            required,
+        }
+    }
+
+    /// Access to the simulated authority so tests/simulator can issue
+    /// verdicts "from the trusted third party".
+    pub fn authority(&self) -> &Authority {
+        &self.authority
+    }
+
+    /// Validate a verdict presented by `device_id` at time `now_ms`.
+    pub fn validate(&self, device_id: &str, v: &Verdict, now_ms: u64) -> Result<()> {
+        if !self.required {
+            return Ok(());
+        }
+        if v.device_id != device_id {
+            return Err(Error::Attestation(format!(
+                "verdict bound to {:?}, presented by {:?}",
+                v.device_id, device_id
+            )));
+        }
+        if now_ms >= v.expires_ms {
+            return Err(Error::Attestation(format!(
+                "verdict expired at {} (now {now_ms})",
+                v.expires_ms
+            )));
+        }
+        if !self.authority.verify(v) {
+            return Err(Error::Attestation("bad signature".into()));
+        }
+        let mut seen = self.seen_nonces.lock().unwrap();
+        if !seen.insert((v.device_id.clone(), v.nonce)) {
+            return Err(Error::Attestation(format!("replayed nonce {}", v.nonce)));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::attest::IntegrityTier;
+
+    fn svc() -> AuthService {
+        AuthService::new(b"test-authority", true)
+    }
+
+    #[test]
+    fn valid_verdict_accepted_once() {
+        let s = svc();
+        let v = s.authority().issue("d1", IntegrityTier::Device, 1, 1000);
+        assert!(s.validate("d1", &v, 10).is_ok());
+        // replay
+        assert!(matches!(
+            s.validate("d1", &v, 11),
+            Err(Error::Attestation(_))
+        ));
+    }
+
+    #[test]
+    fn expired_rejected() {
+        let s = svc();
+        let v = s.authority().issue("d1", IntegrityTier::Device, 2, 100);
+        assert!(s.validate("d1", &v, 100).is_err());
+        assert!(s.validate("d1", &v, 1000).is_err());
+    }
+
+    #[test]
+    fn identity_binding_enforced() {
+        let s = svc();
+        let v = s.authority().issue("d1", IntegrityTier::Device, 3, 1000);
+        assert!(s.validate("d2", &v, 10).is_err());
+    }
+
+    #[test]
+    fn forged_signature_rejected() {
+        let s = svc();
+        let other = Authority::new(b"evil");
+        let v = other.issue("d1", IntegrityTier::Strong, 4, 1000);
+        assert!(s.validate("d1", &v, 10).is_err());
+    }
+
+    #[test]
+    fn optional_mode_admits_everything() {
+        let s = AuthService::new(b"k", false);
+        let other = Authority::new(b"evil");
+        let v = other.issue("d1", IntegrityTier::Strong, 5, 0);
+        assert!(s.validate("d1", &v, 10).is_ok());
+    }
+
+    #[test]
+    fn distinct_nonces_accepted() {
+        let s = svc();
+        for n in 0..10 {
+            let v = s.authority().issue("d1", IntegrityTier::Device, n, 1000);
+            assert!(s.validate("d1", &v, 10).is_ok());
+        }
+    }
+}

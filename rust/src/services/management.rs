@@ -1,0 +1,1096 @@
+//! Management Service (§3.1.1): task store, round state machine, and
+//! orchestration across the Selection, Secure-Aggregator and
+//! Master-Aggregator services.
+//!
+//! Sync task round lifecycle:
+//!
+//! ```text
+//!   Joining ──(cohort full)──► Training ──(all uploads)──► aggregate ──► next round
+//!      ▲                          │  (deadline, quorum met, secagg dropouts)
+//!      │                          ▼
+//!      └──(deadline, no quorum)  Unmasking ──(shares in)──► aggregate ──► next round
+//! ```
+//!
+//! Async tasks (§4.3) skip the barrier: every joiner trains immediately
+//! against the newest model; uploads fill a buffer that is flushed every
+//! `buffer_size` contributions with staleness-aware weighting (Papaya).
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::aggregation::{self, ClientUpdate};
+use crate::config::{FlMode, TaskConfig};
+use crate::dp::{DpMode, RdpAccountant};
+use crate::error::{Error, Result};
+use crate::metrics::{RoundRecord, TaskMetrics};
+use crate::model::ModelSnapshot;
+use crate::proto::msg::{PeerShare, RecoveredShare};
+use crate::proto::{
+    RoundInstruction, RoundRole, TaskDescriptor, TaskState, TrainParams,
+};
+use crate::quant::Quantizer;
+use crate::services::master_aggregator::MasterAggregator;
+use crate::services::secure_aggregator::SecAggRound;
+use crate::services::selection::SelectionService;
+use crate::util::Rng;
+
+/// Server-side model evaluation hook (wired to the PJRT runtime by the
+/// simulator / server binary; `NoEval` for dummy tasks).
+pub trait Evaluator: Send + Sync {
+    /// Returns (eval_loss, eval_accuracy) for the given global params.
+    fn evaluate(&self, preset: &str, params: &[f32]) -> Option<(f64, f64)>;
+}
+
+/// No-op evaluator.
+pub struct NoEval;
+
+impl Evaluator for NoEval {
+    fn evaluate(&self, _preset: &str, _params: &[f32]) -> Option<(f64, f64)> {
+        None
+    }
+}
+
+/// Phase of the current sync round.
+enum Phase {
+    /// Accumulating joiners; `pool` holds (client, round pubkey).
+    Joining,
+    /// Cohort selected, clients training.
+    Training {
+        secagg: Option<SecAggRound>,
+        plain: Vec<ClientUpdate>,
+        uploaded: BTreeSet<u64>,
+        model_blob: Arc<Vec<u8>>,
+        base_version: u64,
+        deadline_ms: u64,
+    },
+    /// Waiting for survivors' unmask shares.
+    Unmasking {
+        secagg: SecAggRound,
+        deadline_ms: u64,
+    },
+}
+
+/// One federated task.
+pub struct Task {
+    pub id: u64,
+    pub config: TaskConfig,
+    pub state: TaskState,
+    /// Completed sync rounds / async flushes.
+    pub round: u64,
+    pub global: ModelSnapshot,
+    pub metrics: TaskMetrics,
+    pub accountant: Option<RdpAccountant>,
+
+    master: MasterAggregator,
+    rng: Rng,
+    phase: Phase,
+    /// Sync: waiting joiners (client, per-round pubkey), FIFO.
+    join_pool: VecDeque<(u64, [u8; 32])>,
+    /// Current-round cohort (empty outside Training/Unmasking).
+    cohort: BTreeSet<u64>,
+    round_started_ms: u64,
+
+    // Async state.
+    buffer: Vec<ClientUpdate>,
+    async_joined: BTreeSet<u64>,
+    last_flush_ms: u64,
+}
+
+impl Task {
+    fn new(id: u64, config: TaskConfig, global: ModelSnapshot, seed: u64) -> Result<Task> {
+        config.validate()?;
+        let strategy = aggregation::by_name(&config.aggregator, config.prox_mu)?;
+        let master = MasterAggregator::new(strategy, config.dp, config.server_lr);
+        let accountant = if config.dp.mode != DpMode::Off {
+            Some(RdpAccountant::new())
+        } else {
+            None
+        };
+        Ok(Task {
+            id,
+            config,
+            state: TaskState::Created,
+            round: 0,
+            global,
+            metrics: TaskMetrics::default(),
+            accountant,
+            master,
+            rng: Rng::new(seed),
+            phase: Phase::Joining,
+            join_pool: VecDeque::new(),
+            cohort: BTreeSet::new(),
+            round_started_ms: 0,
+            buffer: Vec::new(),
+            async_joined: BTreeSet::new(),
+            last_flush_ms: 0,
+        })
+    }
+
+    pub fn descriptor(&self) -> TaskDescriptor {
+        TaskDescriptor {
+            task_id: self.id,
+            task_name: self.config.task_name.clone(),
+            app_name: self.config.app_name.clone(),
+            workflow_name: self.config.workflow_name.clone(),
+            state: self.state,
+            round: self.round,
+            total_rounds: self.config.total_rounds,
+        }
+    }
+
+    fn train_params(&self) -> TrainParams {
+        TrainParams {
+            preset: self.config.preset.clone(),
+            lr: self.config.client_lr,
+            prox_mu: self.config.prox_mu,
+        }
+    }
+
+    fn epsilon(&self) -> Option<f64> {
+        self.accountant
+            .as_ref()
+            .and_then(|a| a.epsilon(1e-5).ok())
+            .map(|(e, _)| e)
+    }
+}
+
+/// The Management Service: task CRUD + orchestration entry points.
+pub struct ManagementService {
+    inner: Mutex<Inner>,
+    evaluator: Arc<dyn Evaluator>,
+}
+
+struct Inner {
+    next_task_id: u64,
+    tasks: HashMap<u64, Task>,
+    seed: u64,
+}
+
+impl ManagementService {
+    pub fn new(evaluator: Arc<dyn Evaluator>, seed: u64) -> ManagementService {
+        ManagementService {
+            inner: Mutex::new(Inner {
+                next_task_id: 1,
+                tasks: HashMap::new(),
+                seed,
+            }),
+            evaluator,
+        }
+    }
+
+    /// Create a task with an initial model snapshot; returns task id.
+    pub fn create_task(&self, config: TaskConfig, init: ModelSnapshot) -> Result<u64> {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.next_task_id;
+        let seed = g.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15);
+        let task = Task::new(id, config, init, seed)?;
+        g.next_task_id += 1;
+        g.tasks.insert(id, task);
+        Ok(id)
+    }
+
+    /// Start a created/paused task.
+    pub fn start_task(&self, task_id: u64) -> Result<()> {
+        self.with_task(task_id, |t| {
+            match t.state {
+                TaskState::Created | TaskState::Paused => {
+                    t.state = TaskState::Running;
+                    Ok(())
+                }
+                s => Err(Error::Task(format!("cannot start task in state {}", s.name()))),
+            }
+        })
+    }
+
+    pub fn pause_task(&self, task_id: u64) -> Result<()> {
+        self.with_task(task_id, |t| {
+            if t.state == TaskState::Running {
+                t.state = TaskState::Paused;
+                Ok(())
+            } else {
+                Err(Error::Task(format!("cannot pause {}", t.state.name())))
+            }
+        })
+    }
+
+    pub fn cancel_task(&self, task_id: u64) -> Result<()> {
+        self.with_task(task_id, |t| {
+            t.state = TaskState::Cancelled;
+            Ok(())
+        })
+    }
+
+    /// First advertisable task matching (app, workflow).
+    pub fn advertise(&self, app: &str, workflow: &str) -> Option<TaskDescriptor> {
+        let g = self.inner.lock().unwrap();
+        let mut tasks: Vec<&Task> = g.tasks.values().collect();
+        tasks.sort_by_key(|t| t.id);
+        tasks
+            .iter()
+            .find(|t| {
+                t.state == TaskState::Running
+                    && t.config.app_name == app
+                    && t.config.workflow_name == workflow
+            })
+            .map(|t| t.descriptor())
+    }
+
+    pub fn list_tasks(&self) -> Vec<TaskDescriptor> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<TaskDescriptor> = g.tasks.values().map(Task::descriptor).collect();
+        v.sort_by_key(|d| d.task_id);
+        v
+    }
+
+    pub fn with_task<R>(&self, task_id: u64, f: impl FnOnce(&mut Task) -> Result<R>) -> Result<R> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .tasks
+            .get_mut(&task_id)
+            .ok_or_else(|| Error::Task(format!("unknown task {task_id}")))?;
+        f(t)
+    }
+
+    // -----------------------------------------------------------------
+    // Client-facing orchestration
+    // -----------------------------------------------------------------
+
+    /// A client asks to participate in the task's next round.
+    pub fn join(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        pubkey: [u8; 32],
+        now_ms: u64,
+    ) -> Result<(bool, String)> {
+        self.with_task(task_id, |t| {
+            if t.state != TaskState::Running {
+                return Ok((false, format!("task is {}", t.state.name())));
+            }
+            match t.config.mode {
+                FlMode::Sync => {
+                    if t.cohort.contains(&client_id)
+                        || t.join_pool.iter().any(|&(c, _)| c == client_id)
+                    {
+                        return Ok((false, "already joined".into()));
+                    }
+                    t.join_pool.push_back((client_id, pubkey));
+                    Ok((true, String::new()))
+                }
+                FlMode::Async { .. } => {
+                    t.async_joined.insert(client_id);
+                    let _ = now_ms;
+                    Ok((true, String::new()))
+                }
+            }
+        })
+    }
+
+    /// A client polls for its current obligation.
+    pub fn fetch_round(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        selection: &SelectionService,
+        now_ms: u64,
+    ) -> Result<RoundRole> {
+        self.with_task(task_id, |t| {
+            match t.state {
+                TaskState::Completed | TaskState::Cancelled | TaskState::Failed => {
+                    return Ok(RoundRole::TaskDone)
+                }
+                TaskState::Paused | TaskState::Created => return Ok(RoundRole::Wait),
+                TaskState::Running => {}
+            }
+            if let FlMode::Async { .. } = t.config.mode {
+                if !t.async_joined.contains(&client_id) {
+                    return Ok(RoundRole::RoundDone); // join first
+                }
+                // Train against the freshest model, no barrier.
+                let blob = t.global.to_compressed()?;
+                return Ok(RoundRole::Train(RoundInstruction {
+                    round: t.round,
+                    model_blob: blob,
+                    train: t.train_params(),
+                    secagg: None,
+                    deadline_ms: now_ms + t.config.round_timeout_ms,
+                }));
+            }
+            // Sync path: try to advance Joining → Training first.
+            Self::maybe_form_cohort(t, selection, now_ms)?;
+            match &t.phase {
+                Phase::Joining => {
+                    if t.join_pool.iter().any(|&(c, _)| c == client_id) {
+                        Ok(RoundRole::Wait)
+                    } else {
+                        Ok(RoundRole::RoundDone)
+                    }
+                }
+                Phase::Training {
+                    secagg,
+                    uploaded,
+                    model_blob,
+                    deadline_ms,
+                    ..
+                } => {
+                    if !t.cohort.contains(&client_id) {
+                        if t.join_pool.iter().any(|&(c, _)| c == client_id) {
+                            return Ok(RoundRole::Wait); // queued for next round
+                        }
+                        return Ok(RoundRole::NotSelected);
+                    }
+                    if uploaded.contains(&client_id) {
+                        return Ok(RoundRole::Wait);
+                    }
+                    let sa = match secagg {
+                        Some(s) => Some(s.setup_for(client_id)?),
+                        None => None,
+                    };
+                    Ok(RoundRole::Train(RoundInstruction {
+                        round: t.round,
+                        model_blob: model_blob.as_ref().clone(),
+                        train: t.train_params(),
+                        secagg: sa,
+                        deadline_ms: *deadline_ms,
+                    }))
+                }
+                Phase::Unmasking { secagg, .. } => {
+                    if let Some(req) = secagg.unmask_request_for(client_id) {
+                        Ok(RoundRole::Unmask(req))
+                    } else if t.cohort.contains(&client_id) {
+                        Ok(RoundRole::Wait)
+                    } else {
+                        Ok(RoundRole::NotSelected)
+                    }
+                }
+            }
+        })
+    }
+
+    /// Plaintext upload (secure_agg = false, or async).
+    #[allow(clippy::too_many_arguments)]
+    pub fn accept_plain(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        base_version: u64,
+        delta: Vec<f32>,
+        weight: f64,
+        loss: f64,
+        now_ms: u64,
+    ) -> Result<(bool, String)> {
+        let eval = Arc::clone(&self.evaluator);
+        self.with_task(task_id, |t| {
+            if t.state != TaskState::Running {
+                return Ok((false, format!("task is {}", t.state.name())));
+            }
+            if delta.len() != t.global.dim() {
+                return Ok((false, format!("dim {} != {}", delta.len(), t.global.dim())));
+            }
+            if !(weight.is_finite() && weight > 0.0 && weight < 1e9) {
+                return Ok((false, format!("bad weight {weight}")));
+            }
+            t.metrics.total_uploads += 1;
+            if let FlMode::Async { buffer_size } = t.config.mode {
+                if !t.async_joined.contains(&client_id) {
+                    return Ok((false, "join first".into()));
+                }
+                let staleness = t.global.version.saturating_sub(base_version);
+                t.buffer.push(ClientUpdate {
+                    client_id,
+                    delta,
+                    weight,
+                    loss,
+                    staleness,
+                });
+                if t.buffer.len() >= buffer_size {
+                    Self::flush_async(t, &*eval, now_ms)?;
+                }
+                return Ok((true, String::new()));
+            }
+            // Sync plaintext round.
+            match &mut t.phase {
+                Phase::Training {
+                    secagg: None,
+                    plain,
+                    uploaded,
+                    base_version: bv,
+                    ..
+                } => {
+                    if round != t.round {
+                        return Ok((false, format!("stale round {round} (now {})", t.round)));
+                    }
+                    if !t.cohort.contains(&client_id) {
+                        return Ok((false, "not in cohort".into()));
+                    }
+                    if !uploaded.insert(client_id) {
+                        return Ok((false, "duplicate upload".into()));
+                    }
+                    if base_version != *bv {
+                        return Ok((false, format!("base version {base_version} != {bv}")));
+                    }
+                    plain.push(ClientUpdate {
+                        client_id,
+                        delta,
+                        weight,
+                        loss,
+                        staleness: 0,
+                    });
+                    if uploaded.len() == t.cohort.len() {
+                        Self::finish_sync_round(t, &*eval, now_ms)?;
+                    }
+                    Ok((true, String::new()))
+                }
+                Phase::Training { secagg: Some(_), .. } => {
+                    Ok((false, "task requires masked uploads".into()))
+                }
+                _ => Ok((false, "no round in progress".into())),
+            }
+        })
+    }
+
+    /// Masked upload (secure aggregation path).
+    pub fn accept_masked(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        vg_id: u32,
+        masked: &[u32],
+        loss: f64,
+        now_ms: u64,
+    ) -> Result<(bool, String)> {
+        let eval = Arc::clone(&self.evaluator);
+        self.with_task(task_id, |t| {
+            if t.state != TaskState::Running {
+                return Ok((false, format!("task is {}", t.state.name())));
+            }
+            if round != t.round {
+                return Ok((false, format!("stale round {round}")));
+            }
+            t.metrics.total_uploads += 1;
+            match &mut t.phase {
+                Phase::Training {
+                    secagg: Some(sa),
+                    uploaded,
+                    ..
+                } => {
+                    if let Err(e) = sa.accept_masked(client_id, vg_id, masked, loss) {
+                        return Ok((false, e.to_string()));
+                    }
+                    uploaded.insert(client_id);
+                    if uploaded.len() == t.cohort.len() {
+                        Self::finish_sync_round(t, &*eval, now_ms)?;
+                    }
+                    Ok((true, String::new()))
+                }
+                _ => Ok((false, "no masked round in progress".into())),
+            }
+        })
+    }
+
+    /// Encrypted Shamir shares for the current secagg round.
+    pub fn accept_shares(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        shares: Vec<PeerShare>,
+    ) -> Result<(bool, String)> {
+        self.with_task(task_id, |t| {
+            if round != t.round {
+                return Ok((false, format!("stale round {round}")));
+            }
+            match &mut t.phase {
+                Phase::Training {
+                    secagg: Some(sa), ..
+                } => match sa.accept_shares(client_id, shares) {
+                    Ok(()) => Ok((true, String::new())),
+                    Err(e) => Ok((false, e.to_string())),
+                },
+                _ => Ok((false, "no secagg round in progress".into())),
+            }
+        })
+    }
+
+    /// Plaintext shares recovered by survivors (unmask phase).
+    pub fn accept_unmask(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        shares: Vec<RecoveredShare>,
+        now_ms: u64,
+    ) -> Result<(bool, String)> {
+        let eval = Arc::clone(&self.evaluator);
+        self.with_task(task_id, |t| {
+            if round != t.round {
+                return Ok((false, format!("stale round {round}")));
+            }
+            match &mut t.phase {
+                Phase::Unmasking { secagg, .. } => {
+                    if let Err(e) = secagg.accept_recovered(client_id, shares) {
+                        return Ok((false, e.to_string()));
+                    }
+                    if !secagg.needs_unmasking() {
+                        Self::finish_sync_round(t, &*eval, now_ms)?;
+                    }
+                    Ok((true, String::new()))
+                }
+                _ => Ok((false, "no unmask phase in progress".into())),
+            }
+        })
+    }
+
+    /// Deadline sweep: call periodically (and on events).
+    pub fn tick(&self, now_ms: u64) {
+        let eval = Arc::clone(&self.evaluator);
+        let mut g = self.inner.lock().unwrap();
+        for t in g.tasks.values_mut() {
+            if t.state != TaskState::Running {
+                continue;
+            }
+            let deadline_hit = match &t.phase {
+                Phase::Training { deadline_ms, .. } => now_ms >= *deadline_ms,
+                Phase::Unmasking { deadline_ms, .. } => now_ms >= *deadline_ms,
+                Phase::Joining => false,
+            };
+            if !deadline_hit {
+                continue;
+            }
+            let reported = match &t.phase {
+                Phase::Training {
+                    secagg, uploaded, ..
+                } => match secagg {
+                    Some(sa) => sa.uploaded_count(),
+                    None => uploaded.len(),
+                },
+                Phase::Unmasking { .. } => t.cohort.len(), // quorum known met
+                Phase::Joining => 0,
+            };
+            let quorum =
+                (t.cohort.len() as f64 * t.config.min_report_fraction).ceil() as usize;
+            if reported >= quorum.max(1) {
+                if let Err(e) = Self::finish_sync_round(t, &*eval, now_ms) {
+                    log::warn!("task {}: round finish failed: {e}", t.id);
+                    Self::fail_round(t);
+                }
+            } else {
+                log::warn!(
+                    "task {}: round {} missed quorum ({reported}/{quorum}) — retrying",
+                    t.id,
+                    t.round
+                );
+                Self::fail_round(t);
+            }
+        }
+    }
+
+    /// Status summary for the dashboard / CLI.
+    pub fn task_status(&self, task_id: u64) -> Result<(TaskDescriptor, TaskMetrics, Option<f64>)> {
+        self.with_task(task_id, |t| {
+            Ok((t.descriptor(), t.metrics.clone(), t.epsilon()))
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Internals
+    // -----------------------------------------------------------------
+
+    fn maybe_form_cohort(
+        t: &mut Task,
+        selection: &SelectionService,
+        now_ms: u64,
+    ) -> Result<()> {
+        if !matches!(t.phase, Phase::Joining) || t.state != TaskState::Running {
+            return Ok(());
+        }
+        let k = t.config.clients_per_round;
+        if t.join_pool.len() < k {
+            return Ok(());
+        }
+        // Candidate pool = all waiting joiners; random k become the cohort.
+        let pool: Vec<u64> = t.join_pool.iter().map(|&(c, _)| c).collect();
+        let cohort_ids = selection.select_cohort(&pool, k)?;
+        let cohort_set: BTreeSet<u64> = cohort_ids.iter().copied().collect();
+        let mut keys: HashMap<u64, [u8; 32]> = HashMap::new();
+        t.join_pool.retain(|&(c, pk)| {
+            if cohort_set.contains(&c) {
+                keys.insert(c, pk);
+                false
+            } else {
+                true
+            }
+        });
+        let model_blob = Arc::new(t.global.to_compressed()?);
+        let secagg = if t.config.secure_agg {
+            let groups_ids =
+                SelectionService::form_virtual_groups(&cohort_ids, t.config.vg_size);
+            let groups: Vec<Vec<(u64, [u8; 32])>> = groups_ids
+                .iter()
+                .map(|g| g.iter().map(|c| (*c, keys[c])).collect())
+                .collect();
+            let quant = Quantizer::new(t.config.quant_range, t.config.quant_bits)?;
+            Some(SecAggRound::new(
+                t.id,
+                t.round,
+                groups,
+                quant,
+                t.global.dim(),
+                0.6,
+            ))
+        } else {
+            None
+        };
+        t.cohort = cohort_set;
+        t.round_started_ms = now_ms;
+        t.phase = Phase::Training {
+            secagg,
+            plain: Vec::new(),
+            uploaded: BTreeSet::new(),
+            model_blob,
+            base_version: t.global.version,
+            deadline_ms: now_ms + t.config.round_timeout_ms,
+        };
+        log::info!(
+            "task {}: round {} cohort formed ({} clients{})",
+            t.id,
+            t.round,
+            k,
+            if t.config.secure_agg { ", secagg" } else { "" }
+        );
+        Ok(())
+    }
+
+    /// Complete the round: aggregate (possibly via the unmask detour),
+    /// update the model, record metrics, advance or finish the task.
+    fn finish_sync_round(t: &mut Task, eval: &dyn Evaluator, now_ms: u64) -> Result<()> {
+        // Take the phase out to appease the borrow checker.
+        let phase = std::mem::replace(&mut t.phase, Phase::Joining);
+        match phase {
+            Phase::Training {
+                secagg: Some(mut sa),
+                uploaded,
+                deadline_ms,
+                ..
+            } => {
+                if sa.needs_unmasking() {
+                    log::info!(
+                        "task {}: round {} has dropouts — entering unmask phase",
+                        t.id,
+                        t.round
+                    );
+                    let _ = uploaded;
+                    t.phase = Phase::Unmasking {
+                        secagg: sa,
+                        deadline_ms: deadline_ms + t.config.round_timeout_ms,
+                    };
+                    return Ok(());
+                }
+                let interims = sa.finalize()?;
+                if interims.is_empty() {
+                    return Err(Error::SecAgg("no usable VG interims".into()));
+                }
+                let participants =
+                    t.master
+                        .apply_interims(&mut t.global, &interims, &mut t.rng)?;
+                let loss = interims.iter().map(|i| i.mean_loss).sum::<f64>()
+                    / interims.len() as f64;
+                Self::record_round(t, eval, participants, loss, now_ms);
+            }
+            Phase::Training {
+                secagg: None,
+                plain,
+                ..
+            } => {
+                if plain.is_empty() {
+                    return Err(Error::Task("no uploads to aggregate".into()));
+                }
+                let loss =
+                    plain.iter().map(|u| u.loss).sum::<f64>() / plain.len() as f64;
+                let participants = t.master.apply_plain(&mut t.global, &plain, &mut t.rng)?;
+                Self::record_round(t, eval, participants, loss, now_ms);
+            }
+            Phase::Unmasking { mut secagg, .. } => {
+                let interims = secagg.finalize()?;
+                if interims.is_empty() {
+                    return Err(Error::SecAgg("all VGs poisoned".into()));
+                }
+                let participants =
+                    t.master
+                        .apply_interims(&mut t.global, &interims, &mut t.rng)?;
+                let loss = interims.iter().map(|i| i.mean_loss).sum::<f64>()
+                    / interims.len() as f64;
+                Self::record_round(t, eval, participants, loss, now_ms);
+            }
+            Phase::Joining => {
+                return Err(Error::Task("finish_sync_round in Joining".into()))
+            }
+        }
+        Ok(())
+    }
+
+    fn record_round(
+        t: &mut Task,
+        eval: &dyn Evaluator,
+        participants: usize,
+        train_loss: f64,
+        now_ms: u64,
+    ) {
+        if let Some(acc) = &mut t.accountant {
+            let q = (participants as f64 / t.config.dp_population as f64).min(1.0);
+            let _ = acc.step(q, t.config.dp.noise_multiplier);
+        }
+        let evald = eval.evaluate(&t.config.preset, &t.global.params);
+        let epsilon = t.epsilon();
+        t.metrics.push(RoundRecord {
+            round: t.round,
+            started_ms: t.round_started_ms,
+            ended_ms: now_ms,
+            participants,
+            train_loss,
+            eval_loss: evald.map(|(l, _)| l),
+            eval_accuracy: evald.map(|(_, a)| a),
+            epsilon,
+        });
+        t.cohort.clear();
+        t.round += 1;
+        if t.round >= t.config.total_rounds {
+            t.state = TaskState::Completed;
+            log::info!("task {}: completed after {} rounds", t.id, t.round);
+        }
+    }
+
+    fn fail_round(t: &mut Task) {
+        t.metrics.failed_rounds += 1;
+        t.cohort.clear();
+        t.phase = Phase::Joining;
+        // Joiners stay queued; stragglers may rejoin.
+    }
+
+    fn flush_async(t: &mut Task, eval: &dyn Evaluator, now_ms: u64) -> Result<()> {
+        let updates = std::mem::take(&mut t.buffer);
+        let participants = t.master.apply_plain(&mut t.global, &updates, &mut t.rng)?;
+        let loss = updates.iter().map(|u| u.loss).sum::<f64>() / updates.len() as f64;
+        t.round_started_ms = t.last_flush_ms;
+        t.last_flush_ms = now_ms;
+        Self::record_round(t, eval, participants, loss, now_ms);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::DeviceCaps;
+
+    fn mgmt() -> (ManagementService, SelectionService) {
+        (
+            ManagementService::new(Arc::new(NoEval), 1),
+            SelectionService::new(2),
+        )
+    }
+
+    fn small_cfg(n: usize, rounds: u64) -> TaskConfig {
+        let mut c = TaskConfig::default();
+        c.clients_per_round = n;
+        c.total_rounds = rounds;
+        c.round_timeout_ms = 1000;
+        c
+    }
+
+    fn register_n(sel: &SelectionService, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|i| sel.register(&format!("dev-{i}"), DeviceCaps::default(), 0))
+            .collect()
+    }
+
+    /// Drive one full plaintext sync round with all clients reporting.
+    fn run_plain_round(
+        m: &ManagementService,
+        sel: &SelectionService,
+        task: u64,
+        clients: &[u64],
+        now: u64,
+    ) -> usize {
+        for &c in clients {
+            m.join(c, task, [0u8; 32], now).unwrap();
+        }
+        let mut trained = 0;
+        for &c in clients {
+            let role = m.fetch_round(c, task, sel, now).unwrap();
+            if let RoundRole::Train(ri) = role {
+                let model = ModelSnapshot::from_compressed(&ri.model_blob).unwrap();
+                let (ok, why) = m
+                    .accept_plain(
+                        c,
+                        task,
+                        ri.round,
+                        model.version,
+                        vec![0.1; model.dim()],
+                        8.0,
+                        0.5,
+                        now + 10,
+                    )
+                    .unwrap();
+                assert!(ok, "{why}");
+                trained += 1;
+            }
+        }
+        trained
+    }
+
+    #[test]
+    fn task_lifecycle_states() {
+        let (m, _sel) = mgmt();
+        let id = m
+            .create_task(small_cfg(2, 3), ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        assert_eq!(m.list_tasks()[0].state, TaskState::Created);
+        assert!(m.pause_task(id).is_err()); // created → pause invalid
+        m.start_task(id).unwrap();
+        m.pause_task(id).unwrap();
+        m.start_task(id).unwrap();
+        m.cancel_task(id).unwrap();
+        assert_eq!(m.list_tasks()[0].state, TaskState::Cancelled);
+        assert!(m.start_task(id).is_err());
+    }
+
+    #[test]
+    fn advertise_matches_app_workflow() {
+        let (m, _sel) = mgmt();
+        let mut cfg = small_cfg(2, 1);
+        cfg.app_name = "mail".into();
+        cfg.workflow_name = "spam".into();
+        let id = m
+            .create_task(cfg, ModelSnapshot::new(0, vec![0.0]))
+            .unwrap();
+        assert!(m.advertise("mail", "spam").is_none()); // not running yet
+        m.start_task(id).unwrap();
+        assert_eq!(m.advertise("mail", "spam").unwrap().task_id, id);
+        assert!(m.advertise("mail", "other").is_none());
+    }
+
+    #[test]
+    fn sync_round_completes_and_updates_model() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 4);
+        let id = m
+            .create_task(small_cfg(4, 2), ModelSnapshot::new(0, vec![0.0; 8]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        let n = run_plain_round(&m, &sel, id, &clients, 100);
+        assert_eq!(n, 4);
+        let (desc, metrics, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.round, 1);
+        assert_eq!(metrics.rounds.len(), 1);
+        assert_eq!(metrics.rounds[0].participants, 4);
+        // Model moved by the mean delta (0.1) * server_lr (1.0).
+        m.with_task(id, |t| {
+            assert!((t.global.params[0] - 0.1).abs() < 1e-6);
+            assert_eq!(t.global.version, 1);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn completes_after_total_rounds() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 3);
+        let id = m
+            .create_task(small_cfg(3, 2), ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        run_plain_round(&m, &sel, id, &clients, 0);
+        run_plain_round(&m, &sel, id, &clients, 1000);
+        let (desc, _, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.state, TaskState::Completed);
+        // Further fetches report TaskDone.
+        assert_eq!(
+            m.fetch_round(clients[0], id, &sel, 2000).unwrap(),
+            RoundRole::TaskDone
+        );
+    }
+
+    #[test]
+    fn selection_takes_subset_and_queues_rest() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 6);
+        let id = m
+            .create_task(small_cfg(4, 5), ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        for &c in &clients {
+            m.join(c, id, [0u8; 32], 0).unwrap();
+        }
+        let mut train = 0;
+        let mut wait = 0;
+        for &c in &clients {
+            match m.fetch_round(c, id, &sel, 0).unwrap() {
+                RoundRole::Train(_) => train += 1,
+                RoundRole::Wait => wait += 1,
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(train, 4);
+        assert_eq!(wait, 2); // unselected joiners stay queued
+    }
+
+    #[test]
+    fn deadline_quorum_commits_partial_round() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 4);
+        let mut cfg = small_cfg(4, 1);
+        cfg.min_report_fraction = 0.5;
+        let id = m
+            .create_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        for &c in &clients {
+            m.join(c, id, [0u8; 32], 0).unwrap();
+        }
+        // Only 3 of 4 upload.
+        let mut sent = 0;
+        for &c in &clients {
+            if let RoundRole::Train(ri) = m.fetch_round(c, id, &sel, 0).unwrap() {
+                if sent < 3 {
+                    m.accept_plain(c, id, ri.round, 0, vec![1.0; 4], 1.0, 0.2, 10)
+                        .unwrap();
+                    sent += 1;
+                }
+            }
+        }
+        let (desc, _, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.round, 0); // still open
+        m.tick(2000); // past deadline
+        let (desc, metrics, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.state, TaskState::Completed);
+        assert_eq!(metrics.rounds[0].participants, 3);
+    }
+
+    #[test]
+    fn deadline_without_quorum_retries_round() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 4);
+        let mut cfg = small_cfg(4, 1);
+        cfg.min_report_fraction = 0.9;
+        let id = m
+            .create_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        for &c in &clients {
+            m.join(c, id, [0u8; 32], 0).unwrap();
+        }
+        // Form the cohort; only one uploads.
+        for &c in &clients {
+            if let RoundRole::Train(ri) = m.fetch_round(c, id, &sel, 0).unwrap() {
+                m.accept_plain(c, id, ri.round, 0, vec![1.0; 4], 1.0, 0.2, 10)
+                    .unwrap();
+                break;
+            }
+        }
+        m.tick(5000);
+        let (desc, metrics, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.round, 0);
+        assert_eq!(metrics.failed_rounds, 1);
+        assert_eq!(desc.state, TaskState::Running);
+    }
+
+    #[test]
+    fn stale_and_duplicate_uploads_rejected() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 2);
+        let id = m
+            .create_task(small_cfg(2, 3), ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        for &c in &clients {
+            m.join(c, id, [0u8; 32], 0).unwrap();
+        }
+        let c = clients[0];
+        if let RoundRole::Train(ri) = m.fetch_round(c, id, &sel, 0).unwrap() {
+            let (ok, _) = m
+                .accept_plain(c, id, ri.round, 0, vec![0.0; 4], 1.0, 0.1, 1)
+                .unwrap();
+            assert!(ok);
+            // duplicate
+            let (ok, why) = m
+                .accept_plain(c, id, ri.round, 0, vec![0.0; 4], 1.0, 0.1, 2)
+                .unwrap();
+            assert!(!ok);
+            assert!(why.contains("duplicate"));
+            // wrong round
+            let (ok, _) = m
+                .accept_plain(clients[1], id, 99, 0, vec![0.0; 4], 1.0, 0.1, 2)
+                .unwrap();
+            assert!(!ok);
+            // wrong dim
+            let (ok, _) = m
+                .accept_plain(clients[1], id, ri.round, 0, vec![0.0; 3], 1.0, 0.1, 2)
+                .unwrap();
+            assert!(!ok);
+        } else {
+            panic!("no training role");
+        }
+    }
+
+    #[test]
+    fn async_buffer_flush_advances_version() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 4);
+        let mut cfg = small_cfg(4, 2);
+        cfg.mode = FlMode::Async { buffer_size: 3 };
+        cfg.aggregator = "fedbuff".into();
+        let id = m
+            .create_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        for &c in &clients {
+            m.join(c, id, [0u8; 32], 0).unwrap();
+            // Every joiner trains immediately.
+            assert!(matches!(
+                m.fetch_round(c, id, &sel, 0).unwrap(),
+                RoundRole::Train(_)
+            ));
+        }
+        // 3 uploads → flush #1.
+        for &c in &clients[..3] {
+            let (ok, _) = m
+                .accept_plain(c, id, 0, 0, vec![0.3; 4], 1.0, 0.5, 100)
+                .unwrap();
+            assert!(ok);
+        }
+        let (desc, metrics, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.round, 1);
+        assert_eq!(metrics.rounds.len(), 1);
+        // Stale upload (base_version 0 vs current 1) still accepted.
+        for &c in &clients[..3] {
+            m.accept_plain(c, id, 1, 0, vec![0.3; 4], 1.0, 0.4, 200)
+                .unwrap();
+        }
+        let (desc, _, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.state, TaskState::Completed);
+    }
+
+    #[test]
+    fn dp_accountant_tracks_epsilon() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 2);
+        let mut cfg = small_cfg(2, 2);
+        cfg.dp = crate::dp::DpConfig::paper_local();
+        cfg.dp_population = 100;
+        let id = m
+            .create_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        run_plain_round(&m, &sel, id, &clients, 0);
+        let (_, metrics, eps) = m.task_status(id).unwrap();
+        assert!(eps.unwrap() > 0.0);
+        assert!(metrics.rounds[0].epsilon.unwrap() > 0.0);
+        run_plain_round(&m, &sel, id, &clients, 1000);
+        let (_, _, eps2) = m.task_status(id).unwrap();
+        assert!(eps2.unwrap() > eps.unwrap());
+    }
+}

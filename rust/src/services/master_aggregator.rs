@@ -1,0 +1,184 @@
+//! Master Aggregator (§3.1.3): stage two of the aggregation pipeline.
+//!
+//! Combines per-VG interim results (or plaintext updates when secure
+//! aggregation is off), applies the task's aggregation strategy
+//! ("user-defined logic"), optional central DP noise, and updates the
+//! global model snapshot.
+
+use crate::aggregation::{Aggregator, ClientUpdate};
+use crate::dp::{DpConfig, DpMode, GaussianMechanism};
+use crate::error::Result;
+use crate::model::ModelSnapshot;
+use crate::services::secure_aggregator::VgInterim;
+use crate::util::Rng;
+
+/// Master aggregator: stateless policy over a mutable global snapshot.
+pub struct MasterAggregator {
+    strategy: Box<dyn Aggregator>,
+    dp: DpConfig,
+    server_lr: f32,
+}
+
+impl MasterAggregator {
+    pub fn new(strategy: Box<dyn Aggregator>, dp: DpConfig, server_lr: f32) -> MasterAggregator {
+        MasterAggregator {
+            strategy,
+            dp,
+            server_lr,
+        }
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// Plaintext path: aggregate client updates and advance the model.
+    /// Returns the number of contributors.
+    pub fn apply_plain(
+        &self,
+        global: &mut ModelSnapshot,
+        updates: &[ClientUpdate],
+        rng: &mut Rng,
+    ) -> Result<usize> {
+        let mut combined = self.strategy.aggregate(updates)?;
+        self.maybe_central_noise(&mut combined, rng);
+        global.apply_delta(&combined, self.server_lr)?;
+        Ok(updates.len())
+    }
+
+    /// Secure path: combine VG interims (stage two of §3.1.2's two-stage
+    /// process), weighting each interim by its contributor count.
+    pub fn apply_interims(
+        &self,
+        global: &mut ModelSnapshot,
+        interims: &[VgInterim],
+        rng: &mut Rng,
+    ) -> Result<usize> {
+        // Interims are already per-VG means; convert to pseudo-updates so
+        // the configured strategy applies uniformly.
+        let updates: Vec<ClientUpdate> = interims
+            .iter()
+            .map(|iv| ClientUpdate {
+                client_id: iv.vg_id as u64,
+                delta: iv.mean_delta.clone(),
+                weight: iv.contributors as f64,
+                loss: iv.mean_loss,
+                staleness: 0,
+            })
+            .collect();
+        let mut combined = self.strategy.aggregate(&updates)?;
+        self.maybe_central_noise(&mut combined, rng);
+        global.apply_delta(&combined, self.server_lr)?;
+        Ok(interims.iter().map(|iv| iv.contributors).sum())
+    }
+
+    fn maybe_central_noise(&self, delta: &mut [f32], rng: &mut Rng) {
+        if self.dp.mode == DpMode::Central {
+            GaussianMechanism::add_noise(
+                delta,
+                self.dp.clip_norm,
+                self.dp.noise_multiplier,
+                rng,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::FedAvg;
+
+    fn upd(id: u64, delta: Vec<f32>, weight: f64) -> ClientUpdate {
+        ClientUpdate {
+            client_id: id,
+            delta,
+            weight,
+            loss: 0.5,
+            staleness: 0,
+        }
+    }
+
+    #[test]
+    fn plain_path_moves_model() {
+        let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 1.0);
+        let mut global = ModelSnapshot::new(0, vec![0.0, 0.0]);
+        let mut rng = Rng::new(1);
+        let n = ma
+            .apply_plain(
+                &mut global,
+                &[upd(1, vec![1.0, 0.0], 1.0), upd(2, vec![0.0, 1.0], 1.0)],
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(global.version, 1);
+        assert!((global.params[0] - 0.5).abs() < 1e-6);
+        assert!((global.params[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn server_lr_scales_step() {
+        let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 0.5);
+        let mut global = ModelSnapshot::new(0, vec![0.0]);
+        let mut rng = Rng::new(2);
+        ma.apply_plain(&mut global, &[upd(1, vec![2.0], 1.0)], &mut rng)
+            .unwrap();
+        assert!((global.params[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn interims_weighted_by_contributors() {
+        let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 1.0);
+        let mut global = ModelSnapshot::new(3, vec![0.0]);
+        let mut rng = Rng::new(3);
+        let interims = vec![
+            VgInterim {
+                vg_id: 0,
+                mean_delta: vec![1.0],
+                contributors: 3,
+                mean_loss: 0.2,
+            },
+            VgInterim {
+                vg_id: 1,
+                mean_delta: vec![-1.0],
+                contributors: 1,
+                mean_loss: 0.9,
+            },
+        ];
+        let n = ma.apply_interims(&mut global, &interims, &mut rng).unwrap();
+        assert_eq!(n, 4);
+        // (3*1 + 1*(-1)) / 4 = 0.5
+        assert!((global.params[0] - 0.5).abs() < 1e-6);
+        assert_eq!(global.version, 4);
+    }
+
+    #[test]
+    fn central_dp_adds_noise() {
+        let dp = DpConfig {
+            mode: DpMode::Central,
+            clip_norm: 1.0,
+            noise_multiplier: 1.0,
+        };
+        let ma = MasterAggregator::new(Box::new(FedAvg), dp, 1.0);
+        let mut g1 = ModelSnapshot::new(0, vec![0.0; 64]);
+        let mut g2 = ModelSnapshot::new(0, vec![0.0; 64]);
+        let mut rng1 = Rng::new(4);
+        let mut rng2 = Rng::new(5);
+        let ups = [upd(1, vec![0.0; 64], 1.0)];
+        ma.apply_plain(&mut g1, &ups, &mut rng1).unwrap();
+        ma.apply_plain(&mut g2, &ups, &mut rng2).unwrap();
+        // Zero update + central noise → nonzero, seed-dependent params.
+        assert!(g1.params.iter().any(|&x| x != 0.0));
+        assert_ne!(g1.params, g2.params);
+    }
+
+    #[test]
+    fn empty_updates_error() {
+        let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 1.0);
+        let mut global = ModelSnapshot::new(0, vec![0.0]);
+        let mut rng = Rng::new(6);
+        assert!(ma.apply_plain(&mut global, &[], &mut rng).is_err());
+        assert!(ma.apply_interims(&mut global, &[], &mut rng).is_err());
+    }
+}

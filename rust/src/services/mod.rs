@@ -1,0 +1,13 @@
+//! Back-end services (§3.1): Authentication, Selection, Secure Aggregator,
+//! Master Aggregator, and the Management Service that orchestrates them.
+//! `server.rs` glues them behind one dispatch surface shared by the
+//! in-process simulator and the TCP/inproc wire transports.
+
+pub mod auth;
+pub mod management;
+pub mod master_aggregator;
+pub mod secure_aggregator;
+pub mod selection;
+pub mod server;
+
+pub use server::FloridaServer;

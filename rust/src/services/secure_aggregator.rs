@@ -1,0 +1,559 @@
+//! Secure Aggregator service (§3.1.2, §4.1): per-round virtual-group
+//! state, masked-sum accumulation, and dropout recovery.
+//!
+//! Two-stage aggregation, stage one: clients are grouped into Virtual
+//! Groups; each VG's masked uploads are summed mod 2³² (masks cancel);
+//! dropouts are unmasked via Shamir shares from surviving members. The
+//! per-VG interim results feed the Master Aggregator (stage two).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::crypto::shamir;
+use crate::crypto::x25519::KeyPair;
+use crate::error::{Error, Result};
+use crate::proto::msg::{PeerShare, RecoveredShare};
+use crate::proto::{SecAggSetup, UnmaskRequest};
+use crate::quant::{add_mod, Quantizer};
+use crate::secagg;
+
+/// Per-VG interim result (stage-one output).
+#[derive(Clone, Debug)]
+pub struct VgInterim {
+    pub vg_id: u32,
+    /// Mean pseudo-gradient over the VG's *reporting* members.
+    pub mean_delta: Vec<f32>,
+    pub contributors: usize,
+    pub mean_loss: f64,
+}
+
+/// State of one virtual group within a round.
+struct VgState {
+    vg_id: u32,
+    /// (client_id, round pubkey), sorted by client id.
+    roster: Vec<(u64, [u8; 32])>,
+    threshold: u32,
+    /// Encrypted Shamir shares: from-client → addressed shares.
+    enc_shares: HashMap<u64, Vec<PeerShare>>,
+    /// Running masked sum mod 2³².
+    sum: Vec<u32>,
+    uploaded: BTreeSet<u64>,
+    loss_sum: f64,
+    /// Plaintext shares recovered from survivors: dropped → shares.
+    recovered: HashMap<u64, Vec<shamir::Share>>,
+    /// Discarded (unrecoverable) — excluded from interim.
+    poisoned: bool,
+}
+
+/// One round's secure-aggregation state across all VGs.
+pub struct SecAggRound {
+    pub task_id: u64,
+    pub round: u64,
+    quant: Quantizer,
+    vgs: BTreeMap<u32, VgState>,
+    /// client → vg_id
+    member_vg: HashMap<u64, u32>,
+    dim: usize,
+}
+
+impl SecAggRound {
+    /// Create round state. `groups` are VG member lists with pubkeys.
+    pub fn new(
+        task_id: u64,
+        round: u64,
+        groups: Vec<Vec<(u64, [u8; 32])>>,
+        quant: Quantizer,
+        dim: usize,
+        threshold_fraction: f64,
+    ) -> SecAggRound {
+        let mut vgs = BTreeMap::new();
+        let mut member_vg = HashMap::new();
+        for (i, mut roster) in groups.into_iter().enumerate() {
+            roster.sort_by_key(|&(id, _)| id);
+            let vg_id = i as u32;
+            // Threshold: enough survivors to reconstruct — at least 2 where
+            // the VG allows it, never more than the n−1 peers holding shares.
+            let max_t = (roster.len() as u32).saturating_sub(1).max(1);
+            let t = ((roster.len() as f64 - 1.0) * threshold_fraction).ceil() as u32;
+            let threshold = t.max(2).min(max_t);
+            for &(id, _) in &roster {
+                member_vg.insert(id, vg_id);
+            }
+            vgs.insert(
+                vg_id,
+                VgState {
+                    vg_id,
+                    roster,
+                    threshold,
+                    enc_shares: HashMap::new(),
+                    sum: vec![0u32; dim],
+                    uploaded: BTreeSet::new(),
+                    loss_sum: 0.0,
+                    recovered: HashMap::new(),
+                    poisoned: false,
+                },
+            );
+        }
+        SecAggRound {
+            task_id,
+            round,
+            quant,
+            vgs,
+            member_vg,
+            dim,
+        }
+    }
+
+    pub fn vg_of(&self, client: u64) -> Option<u32> {
+        self.member_vg.get(&client).copied()
+    }
+
+    /// The SecAggSetup sent to `client` inside its RoundInstruction.
+    pub fn setup_for(&self, client: u64) -> Result<SecAggSetup> {
+        let vg_id = self
+            .vg_of(client)
+            .ok_or_else(|| Error::SecAgg(format!("client {client} not in any VG")))?;
+        let vg = &self.vgs[&vg_id];
+        Ok(SecAggSetup {
+            vg_id,
+            roster: vg.roster.clone(),
+            quant_range: self.quant.range,
+            quant_bits: self.quant.bits,
+            threshold: vg.threshold,
+        })
+    }
+
+    /// Store a member's encrypted Shamir shares.
+    pub fn accept_shares(&mut self, client: u64, shares: Vec<PeerShare>) -> Result<()> {
+        let vg_id = self
+            .vg_of(client)
+            .ok_or_else(|| Error::SecAgg(format!("client {client} not in round")))?;
+        let vg = self.vgs.get_mut(&vg_id).unwrap();
+        let expected = vg.roster.len() - 1;
+        if shares.len() != expected {
+            return Err(Error::SecAgg(format!(
+                "client {client}: {} shares, expected {expected}",
+                shares.len()
+            )));
+        }
+        for s in &shares {
+            if !vg.roster.iter().any(|&(id, _)| id == s.peer) || s.peer == client {
+                return Err(Error::SecAgg(format!(
+                    "client {client}: share addressed to non-peer {}",
+                    s.peer
+                )));
+            }
+        }
+        // First write wins: the roster pubkey is fixed at join time, so a
+        // re-entering device (crash/restart) must not replace the shares
+        // that match the registered key.
+        vg.enc_shares.entry(client).or_insert(shares);
+        Ok(())
+    }
+
+    /// Accept a masked upload (dimension- and membership-checked).
+    pub fn accept_masked(
+        &mut self,
+        client: u64,
+        vg_id: u32,
+        masked: &[u32],
+        loss: f64,
+    ) -> Result<()> {
+        let actual_vg = self
+            .vg_of(client)
+            .ok_or_else(|| Error::SecAgg(format!("client {client} not in round")))?;
+        if actual_vg != vg_id {
+            return Err(Error::SecAgg(format!(
+                "client {client} claims VG {vg_id}, assigned {actual_vg}"
+            )));
+        }
+        if masked.len() != self.dim {
+            return Err(Error::SecAgg(format!(
+                "masked dim {} != {}",
+                masked.len(),
+                self.dim
+            )));
+        }
+        let vg = self.vgs.get_mut(&vg_id).unwrap();
+        if !vg.uploaded.insert(client) {
+            return Err(Error::SecAgg(format!("client {client} double upload")));
+        }
+        add_mod(&mut vg.sum, masked);
+        vg.loss_sum += loss;
+        Ok(())
+    }
+
+    /// Members that have uploaded (across all VGs).
+    pub fn uploaded_count(&self) -> usize {
+        self.vgs.values().map(|v| v.uploaded.len()).sum()
+    }
+
+    pub fn total_members(&self) -> usize {
+        self.member_vg.len()
+    }
+
+    /// Dropped members of a VG = roster − uploaded.
+    fn dropped_of(vg: &VgState) -> Vec<u64> {
+        vg.roster
+            .iter()
+            .map(|&(id, _)| id)
+            .filter(|id| !vg.uploaded.contains(id))
+            .collect()
+    }
+
+    /// Any VG with dropouts that still needs share recovery?
+    pub fn needs_unmasking(&self) -> bool {
+        self.vgs.values().any(|vg| {
+            if vg.poisoned || vg.uploaded.is_empty() {
+                return false;
+            }
+            Self::dropped_of(vg).iter().any(|d| {
+                vg.recovered.get(d).map_or(0, Vec::len) < vg.threshold as usize
+            })
+        })
+    }
+
+    /// Build the UnmaskRequest for a surviving client (encrypted shares of
+    /// each dropped peer, addressed to this survivor). Empty if none.
+    pub fn unmask_request_for(&self, client: u64) -> Option<UnmaskRequest> {
+        let vg_id = self.vg_of(client)?;
+        let vg = &self.vgs[&vg_id];
+        if vg.poisoned || !vg.uploaded.contains(&client) {
+            return None;
+        }
+        let mut dropped_payload = Vec::new();
+        for d in Self::dropped_of(vg) {
+            if vg.recovered.get(&d).map_or(0, Vec::len) >= vg.threshold as usize {
+                continue; // already recoverable
+            }
+            if let Some(shares) = vg.enc_shares.get(&d) {
+                if let Some(ps) = shares.iter().find(|ps| ps.peer == client) {
+                    dropped_payload.push((d, ps.enc.clone()));
+                }
+            }
+        }
+        if dropped_payload.is_empty() {
+            None
+        } else {
+            Some(UnmaskRequest {
+                round: self.round,
+                vg_id,
+                dropped: dropped_payload,
+            })
+        }
+    }
+
+    /// Accept plaintext shares recovered by a survivor.
+    pub fn accept_recovered(&mut self, client: u64, shares: Vec<RecoveredShare>) -> Result<()> {
+        let vg_id = self
+            .vg_of(client)
+            .ok_or_else(|| Error::SecAgg(format!("client {client} not in round")))?;
+        let vg = self.vgs.get_mut(&vg_id).unwrap();
+        for rs in shares {
+            // Only collect for genuinely dropped members.
+            if vg.uploaded.contains(&rs.dropped) {
+                continue;
+            }
+            let entry = vg.recovered.entry(rs.dropped).or_default();
+            let share = shamir::Share { x: rs.x, y: rs.y };
+            if !entry.iter().any(|s| s.x == share.x) {
+                entry.push(share);
+            }
+        }
+        Ok(())
+    }
+
+    /// Finalize: unmask dropouts where possible, dequantize, emit interims.
+    /// VGs whose dropouts cannot be recovered are discarded (poisoned).
+    pub fn finalize(&mut self) -> Result<Vec<VgInterim>> {
+        let task_id = self.task_id;
+        let round = self.round;
+        let quant = self.quant;
+        let mut out = Vec::new();
+        for vg in self.vgs.values_mut() {
+            if vg.uploaded.is_empty() {
+                continue;
+            }
+            let dropped = Self::dropped_of(vg);
+            let mut sum = vg.sum.clone();
+            let mut ok = true;
+            for d in &dropped {
+                let shares = vg.recovered.get(d).cloned().unwrap_or_default();
+                if shares.len() < vg.threshold as usize {
+                    ok = false;
+                    break;
+                }
+                let seed_bytes = shamir::reconstruct(&shares).map_err(Error::SecAgg)?;
+                let seed: [u8; 32] = seed_bytes
+                    .try_into()
+                    .map_err(|_| Error::SecAgg("recovered seed not 32 bytes".into()))?;
+                let dropped_kp = KeyPair::from_seed(seed);
+                // Sanity: the reconstructed seed must produce the pubkey
+                // from the roster, or survivors lied / shares corrupted.
+                let expect_pk = vg
+                    .roster
+                    .iter()
+                    .find(|&&(id, _)| id == *d)
+                    .map(|&(_, pk)| pk)
+                    .unwrap();
+                if dropped_kp.public().0 != expect_pk {
+                    return Err(Error::SecAgg(format!(
+                        "reconstructed key for {d} does not match roster pubkey"
+                    )));
+                }
+                for &(surv, surv_pk) in &vg.roster {
+                    if surv == *d || !vg.uploaded.contains(&surv) {
+                        continue;
+                    }
+                    secagg::remove_orphan_mask(
+                        &mut sum, &dropped_kp, *d, surv, &surv_pk, task_id, round,
+                    );
+                }
+            }
+            if !ok {
+                vg.poisoned = true;
+                log::warn!(
+                    "secagg: VG {} discarded (unrecoverable dropouts {:?})",
+                    vg.vg_id,
+                    dropped
+                );
+                continue;
+            }
+            let n = vg.uploaded.len();
+            let mean = quant.dequantize_sum_to_mean(&sum, n)?;
+            out.push(VgInterim {
+                vg_id: vg.vg_id,
+                mean_delta: mean,
+                contributors: n,
+                mean_loss: vg.loss_sum / n as f64,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::x25519::KeyPair;
+    use crate::secagg::{apply_pairwise_masks, share_enc_key, stream_xor};
+    use crate::util::Rng;
+
+    struct SimClient {
+        id: u64,
+        kp: KeyPair,
+        seed: [u8; 32],
+    }
+
+    fn sim_clients(ids: &[u64], rng: &mut Rng) -> Vec<SimClient> {
+        ids.iter()
+            .map(|&id| {
+                let mut seed = [0u8; 32];
+                for c in seed.chunks_mut(8) {
+                    c.copy_from_slice(&rng.next_u64().to_le_bytes()[..c.len()]);
+                }
+                SimClient {
+                    id,
+                    kp: KeyPair::from_seed(seed),
+                    seed,
+                }
+            })
+            .collect()
+    }
+
+    /// Client-side share creation exactly as the SDK does it.
+    fn make_enc_shares(
+        me: &SimClient,
+        roster: &[(u64, [u8; 32])],
+        threshold: u32,
+        task: u64,
+        round: u64,
+        rng: &mut Rng,
+    ) -> Vec<PeerShare> {
+        let peers: Vec<&(u64, [u8; 32])> =
+            roster.iter().filter(|&&(id, _)| id != me.id).collect();
+        let shares = shamir::split(&me.seed, threshold as usize, peers.len(), rng);
+        peers
+            .iter()
+            .zip(shares)
+            .map(|(&&(pid, ppk), sh)| {
+                let shared = me.kp.agree(&crate::crypto::x25519::PublicKey(ppk));
+                let key = share_enc_key(&shared, task, round, me.id, pid);
+                let mut plain = vec![sh.x];
+                plain.extend_from_slice(&sh.y);
+                PeerShare {
+                    peer: pid,
+                    enc: stream_xor(key, &plain),
+                }
+            })
+            .collect()
+    }
+
+    fn decrypt_share(
+        me: &SimClient,
+        from: u64,
+        from_pk: &[u8; 32],
+        enc: &[u8],
+        task: u64,
+        round: u64,
+    ) -> RecoveredShare {
+        let shared = me.kp.agree(&crate::crypto::x25519::PublicKey(*from_pk));
+        let key = share_enc_key(&shared, task, round, from, me.id);
+        let plain = stream_xor(key, enc);
+        RecoveredShare {
+            dropped: from,
+            x: plain[0],
+            y: plain[1..].to_vec(),
+        }
+    }
+
+    fn setup_round(ids: &[u64], dim: usize, seed: u64) -> (SecAggRound, Vec<SimClient>) {
+        let mut rng = Rng::new(seed);
+        let clients = sim_clients(ids, &mut rng);
+        let roster: Vec<(u64, [u8; 32])> =
+            clients.iter().map(|c| (c.id, c.kp.public().0)).collect();
+        let quant = Quantizer::new(1.0, 16).unwrap();
+        let round = SecAggRound::new(7, 2, vec![roster], quant, dim, 0.6);
+        (round, clients)
+    }
+
+    #[test]
+    fn full_participation_recovers_mean() {
+        let ids = [1u64, 4, 6, 9];
+        let dim = 200;
+        let (mut round, clients) = setup_round(&ids, dim, 1);
+        let roster = round.setup_for(1).unwrap().roster;
+        let q = Quantizer::new(1.0, 16).unwrap();
+        let mut rng = Rng::new(2);
+        let mut expected = vec![0f64; dim];
+        for c in &clients {
+            let x: Vec<f32> = (0..dim).map(|_| rng.next_f32() - 0.5).collect();
+            for (e, &v) in expected.iter_mut().zip(&x) {
+                *e += v as f64 / ids.len() as f64;
+            }
+            let mut y = q.quantize(&x);
+            apply_pairwise_masks(&mut y, c.id, &c.kp, &roster, 7, 2);
+            round.accept_masked(c.id, 0, &y, 0.5).unwrap();
+        }
+        assert!(!round.needs_unmasking());
+        let interims = round.finalize().unwrap();
+        assert_eq!(interims.len(), 1);
+        assert_eq!(interims[0].contributors, 4);
+        for (got, want) in interims[0].mean_delta.iter().zip(&expected) {
+            assert!((*got as f64 - want).abs() < q.step() as f64, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dropout_recovery_via_shamir() {
+        let ids = [1u64, 4, 6, 9];
+        let dim = 64;
+        let (mut round, clients) = setup_round(&ids, dim, 3);
+        let roster = round.setup_for(1).unwrap().roster.clone();
+        let threshold = round.setup_for(1).unwrap().threshold;
+        let q = Quantizer::new(1.0, 16).unwrap();
+        let mut rng = Rng::new(4);
+
+        // Everyone uploads shares first.
+        for c in &clients {
+            let shares = make_enc_shares(c, &roster, threshold, 7, 2, &mut rng);
+            round.accept_shares(c.id, shares).unwrap();
+        }
+        // Client 9 (index 3) drops after shares; others upload masked.
+        let mut expected = vec![0f64; dim];
+        for c in clients.iter().take(3) {
+            let x: Vec<f32> = (0..dim).map(|_| rng.next_f32() - 0.5).collect();
+            for (e, &v) in expected.iter_mut().zip(&x) {
+                *e += v as f64 / 3.0;
+            }
+            let mut y = q.quantize(&x);
+            apply_pairwise_masks(&mut y, c.id, &c.kp, &roster, 7, 2);
+            round.accept_masked(c.id, 0, &y, 0.4).unwrap();
+        }
+        assert!(round.needs_unmasking());
+
+        // Survivors serve unmask requests.
+        for c in clients.iter().take(3) {
+            if let Some(req) = round.unmask_request_for(c.id) {
+                let mut recovered = Vec::new();
+                for (dropped, enc) in &req.dropped {
+                    let from_pk = roster.iter().find(|&&(id, _)| id == *dropped).unwrap().1;
+                    recovered.push(decrypt_share(c, *dropped, &from_pk, enc, 7, 2));
+                }
+                round.accept_recovered(c.id, recovered).unwrap();
+            }
+        }
+        assert!(!round.needs_unmasking());
+        let interims = round.finalize().unwrap();
+        assert_eq!(interims.len(), 1);
+        assert_eq!(interims[0].contributors, 3);
+        for (got, want) in interims[0].mean_delta.iter().zip(&expected) {
+            assert!((*got as f64 - want).abs() < q.step() as f64, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn unrecoverable_dropout_poisons_vg() {
+        // Dropped client never sent shares → VG discarded.
+        let ids = [1u64, 2, 3];
+        let dim = 16;
+        let (mut round, clients) = setup_round(&ids, dim, 5);
+        let roster = round.setup_for(1).unwrap().roster.clone();
+        let q = Quantizer::new(1.0, 16).unwrap();
+        for c in clients.iter().take(2) {
+            let mut y = q.quantize(&vec![0.1f32; dim]);
+            apply_pairwise_masks(&mut y, c.id, &c.kp, &roster, 7, 2);
+            round.accept_masked(c.id, 0, &y, 0.1).unwrap();
+        }
+        // No shares ever uploaded → no unmask request possible.
+        assert!(round.unmask_request_for(1).is_none());
+        let interims = round.finalize().unwrap();
+        assert!(interims.is_empty());
+    }
+
+    #[test]
+    fn membership_and_double_upload_enforced() {
+        let ids = [1u64, 2];
+        let (mut round, clients) = setup_round(&ids, 8, 6);
+        let roster = round.setup_for(1).unwrap().roster.clone();
+        let q = Quantizer::new(1.0, 16).unwrap();
+        let mut y = q.quantize(&vec![0.0f32; 8]);
+        apply_pairwise_masks(&mut y, 1, &clients[0].kp, &roster, 7, 2);
+        assert!(round.accept_masked(99, 0, &y, 0.0).is_err()); // not a member
+        assert!(round.accept_masked(1, 5, &y, 0.0).is_err()); // wrong VG
+        assert!(round.accept_masked(1, 0, &y[..4], 0.0).is_err()); // bad dim
+        round.accept_masked(1, 0, &y, 0.0).unwrap();
+        assert!(round.accept_masked(1, 0, &y, 0.0).is_err()); // double
+    }
+
+    #[test]
+    fn share_count_validated() {
+        let ids = [1u64, 2, 3];
+        let (mut round, _clients) = setup_round(&ids, 8, 7);
+        // Wrong number of shares.
+        assert!(round
+            .accept_shares(
+                1,
+                vec![PeerShare {
+                    peer: 2,
+                    enc: vec![0]
+                }]
+            )
+            .is_err());
+        // Share addressed to self.
+        assert!(round
+            .accept_shares(
+                1,
+                vec![
+                    PeerShare {
+                        peer: 1,
+                        enc: vec![0]
+                    },
+                    PeerShare {
+                        peer: 2,
+                        enc: vec![0]
+                    }
+                ]
+            )
+            .is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Selection Service (§3.1.4): client registry, eligibility matching,
+//! random cohort selection, and straggler bookkeeping.
+//!
+//! "Once enough clients have registered, the Selection Service randomly
+//! selects a subset of participants and provides them with the task
+//! details ... It is responsible for ensuring that clients are matched
+//! with appropriate tasks that they can complete successfully."
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::proto::{DeviceCaps, SelectionCriteria};
+use crate::util::Rng;
+
+/// A registered client device.
+#[derive(Clone, Debug)]
+pub struct ClientInfo {
+    pub client_id: u64,
+    pub device_id: String,
+    pub caps: DeviceCaps,
+    pub registered_ms: u64,
+    pub last_seen_ms: u64,
+}
+
+/// Selection service state.
+pub struct SelectionService {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    next_id: u64,
+    clients: HashMap<u64, ClientInfo>,
+    by_device: HashMap<String, u64>,
+    rng: Rng,
+}
+
+impl SelectionService {
+    pub fn new(seed: u64) -> SelectionService {
+        SelectionService {
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                clients: HashMap::new(),
+                by_device: HashMap::new(),
+                rng: Rng::new(seed),
+            }),
+        }
+    }
+
+    /// Register (or re-register) a device; returns its client id.
+    /// Re-registration keeps the id stable (devices reconnect).
+    pub fn register(&self, device_id: &str, caps: DeviceCaps, now_ms: u64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(&id) = g.by_device.get(device_id) {
+            if let Some(info) = g.clients.get_mut(&id) {
+                info.caps = caps;
+                info.last_seen_ms = now_ms;
+            }
+            return id;
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.clients.insert(
+            id,
+            ClientInfo {
+                client_id: id,
+                device_id: device_id.to_string(),
+                caps,
+                registered_ms: now_ms,
+                last_seen_ms: now_ms,
+            },
+        );
+        g.by_device.insert(device_id.to_string(), id);
+        id
+    }
+
+    pub fn touch(&self, client_id: u64, now_ms: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(info) = g.clients.get_mut(&client_id) {
+            info.last_seen_ms = now_ms;
+        }
+    }
+
+    pub fn get(&self, client_id: u64) -> Option<ClientInfo> {
+        self.inner.lock().unwrap().clients.get(&client_id).cloned()
+    }
+
+    pub fn count(&self) -> usize {
+        self.inner.lock().unwrap().clients.len()
+    }
+
+    /// Is the client registered and eligible under `criteria`?
+    pub fn eligible(&self, client_id: u64, criteria: &SelectionCriteria) -> Result<bool> {
+        let g = self.inner.lock().unwrap();
+        let info = g
+            .clients
+            .get(&client_id)
+            .ok_or_else(|| Error::Selection(format!("unknown client {client_id}")))?;
+        Ok(criteria.matches(&info.caps))
+    }
+
+    /// Randomly select `k` distinct clients from `pool` (the round's
+    /// joiners). Errors if the pool is smaller than `k`.
+    pub fn select_cohort(&self, pool: &[u64], k: usize) -> Result<Vec<u64>> {
+        if pool.len() < k {
+            return Err(Error::Selection(format!(
+                "pool {} smaller than cohort {k}",
+                pool.len()
+            )));
+        }
+        let mut g = self.inner.lock().unwrap();
+        let idx = g.rng.sample_indices(pool.len(), k);
+        let mut cohort: Vec<u64> = idx.into_iter().map(|i| pool[i]).collect();
+        cohort.sort_unstable(); // deterministic order for VG formation
+        Ok(cohort)
+    }
+
+    /// Partition a cohort into virtual groups of (at most) `vg_size`,
+    /// each VG >= 2 members where possible (a VG of 1 can't mask).
+    pub fn form_virtual_groups(cohort: &[u64], vg_size: usize) -> Vec<Vec<u64>> {
+        assert!(vg_size >= 2);
+        if cohort.is_empty() {
+            return Vec::new();
+        }
+        let n = cohort.len();
+        let n_groups = (n + vg_size - 1) / vg_size;
+        let mut groups: Vec<Vec<u64>> = vec![Vec::new(); n_groups];
+        for (i, &c) in cohort.iter().enumerate() {
+            groups[i % n_groups].push(c);
+        }
+        // Merge a trailing singleton into its neighbour (can't mask alone).
+        if n_groups >= 2 {
+            if let Some(pos) = groups.iter().position(|gr| gr.len() == 1) {
+                let lone = groups.remove(pos);
+                groups.last_mut().unwrap().extend(lone);
+            }
+        }
+        for gr in groups.iter_mut() {
+            gr.sort_unstable();
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_is_idempotent_per_device() {
+        let s = SelectionService::new(1);
+        let a = s.register("dev-a", DeviceCaps::default(), 0);
+        let b = s.register("dev-b", DeviceCaps::default(), 0);
+        let a2 = s.register("dev-a", DeviceCaps::default(), 5);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.get(a).unwrap().last_seen_ms, 5);
+    }
+
+    #[test]
+    fn eligibility_uses_criteria() {
+        let s = SelectionService::new(2);
+        let mut caps = DeviceCaps::default();
+        caps.charging = false;
+        let id = s.register("d", caps, 0);
+        let mut crit = SelectionCriteria::default();
+        assert!(s.eligible(id, &crit).unwrap());
+        crit.require_charging = true;
+        assert!(!s.eligible(id, &crit).unwrap());
+        assert!(s.eligible(999, &crit).is_err());
+    }
+
+    #[test]
+    fn cohort_selection_distinct_and_sized() {
+        let s = SelectionService::new(3);
+        let pool: Vec<u64> = (1..=100).collect();
+        let cohort = s.select_cohort(&pool, 32).unwrap();
+        assert_eq!(cohort.len(), 32);
+        let mut c = cohort.clone();
+        c.dedup();
+        assert_eq!(c.len(), 32);
+        assert!(cohort.iter().all(|x| pool.contains(x)));
+        assert!(s.select_cohort(&pool[..10], 32).is_err());
+    }
+
+    #[test]
+    fn cohort_selection_is_random_ish() {
+        let s = SelectionService::new(4);
+        let pool: Vec<u64> = (1..=100).collect();
+        let a = s.select_cohort(&pool, 20).unwrap();
+        let b = s.select_cohort(&pool, 20).unwrap();
+        assert_ne!(a, b); // astronomically unlikely to collide
+    }
+
+    #[test]
+    fn vg_formation_covers_and_balances() {
+        let cohort: Vec<u64> = (1..=33).collect();
+        let groups = SelectionService::form_virtual_groups(&cohort, 16);
+        let mut all: Vec<u64> = groups.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, cohort);
+        assert!(groups.iter().all(|g| g.len() >= 2), "{groups:?}");
+        assert!(groups.iter().all(|g| g.len() <= 17));
+    }
+
+    #[test]
+    fn vg_formation_small_cohorts() {
+        assert_eq!(
+            SelectionService::form_virtual_groups(&[7, 3], 16),
+            vec![vec![3, 7]]
+        );
+        assert!(SelectionService::form_virtual_groups(&[], 8).is_empty());
+        // 5 clients, vg 2 → groups of sizes summing to 5, none singleton
+        let g = SelectionService::form_virtual_groups(&[1, 2, 3, 4, 5], 2);
+        assert_eq!(g.iter().map(Vec::len).sum::<usize>(), 5);
+        assert!(g.iter().all(|x| x.len() >= 2));
+    }
+}

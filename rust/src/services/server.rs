@@ -1,0 +1,465 @@
+//! The Florida server: one dispatch surface over all back-end services.
+//!
+//! `handle()` is the single entry point used both by the in-process
+//! simulator (zero-copy direct calls) and the wire path (`serve()` reads
+//! frames off a [`crate::transport::Listener`], auto-detecting binary
+//! vs JSON per frame, and replies in kind — the gRPC/REST duality).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::TaskConfig;
+use crate::error::Result;
+use crate::model::ModelSnapshot;
+use crate::proto::{decode_frame, encode_frame, Msg};
+use crate::services::auth::AuthService;
+use crate::services::management::{Evaluator, ManagementService, NoEval};
+use crate::services::selection::SelectionService;
+use crate::transport::Listener;
+use crate::util::ThreadPool;
+
+/// Server clock: real for deployments, manual for deterministic tests.
+pub enum Clock {
+    Real(Instant),
+    Manual(AtomicU64),
+}
+
+impl Clock {
+    fn now_ms(&self) -> u64 {
+        match self {
+            Clock::Real(t0) => t0.elapsed().as_millis() as u64,
+            Clock::Manual(ms) => ms.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// The assembled platform.
+pub struct FloridaServer {
+    pub auth: AuthService,
+    pub selection: SelectionService,
+    pub management: ManagementService,
+    clock: Clock,
+    stopping: AtomicBool,
+}
+
+impl FloridaServer {
+    /// Production-shaped constructor (real clock, attestation required).
+    pub fn new(authority_key: &[u8], evaluator: Arc<dyn Evaluator>, seed: u64) -> FloridaServer {
+        FloridaServer {
+            auth: AuthService::new(authority_key, true),
+            selection: SelectionService::new(seed ^ 0x5E1),
+            management: ManagementService::new(evaluator, seed),
+            clock: Clock::Real(Instant::now()),
+            stopping: AtomicBool::new(false),
+        }
+    }
+
+    /// Test/simulator constructor: manual clock, attestation optional.
+    pub fn for_testing(attestation_required: bool, seed: u64) -> FloridaServer {
+        FloridaServer {
+            auth: AuthService::new(b"florida-test-authority", attestation_required),
+            selection: SelectionService::new(seed.wrapping_add(1)),
+            management: ManagementService::new(Arc::new(NoEval), seed),
+            clock: Clock::Manual(AtomicU64::new(0)),
+            stopping: AtomicBool::new(false),
+        }
+    }
+
+    /// Like `for_testing` but with a custom evaluator.
+    pub fn with_evaluator(
+        attestation_required: bool,
+        evaluator: Arc<dyn Evaluator>,
+        seed: u64,
+        real_clock: bool,
+    ) -> FloridaServer {
+        FloridaServer {
+            auth: AuthService::new(b"florida-test-authority", attestation_required),
+            selection: SelectionService::new(seed.wrapping_add(1)),
+            management: ManagementService::new(evaluator, seed),
+            clock: if real_clock {
+                Clock::Real(Instant::now())
+            } else {
+                Clock::Manual(AtomicU64::new(0))
+            },
+            stopping: AtomicBool::new(false),
+        }
+    }
+
+    pub fn now_ms(&self) -> u64 {
+        self.clock.now_ms()
+    }
+
+    /// Advance a manual clock (tests); no-op on a real clock.
+    pub fn advance_ms(&self, delta: u64) {
+        if let Clock::Manual(ms) = &self.clock {
+            ms.fetch_add(delta, Ordering::SeqCst);
+        }
+        self.management.tick(self.now_ms());
+    }
+
+    /// Convenience: create + start a task from a config and initial model.
+    pub fn deploy_task(&self, config: TaskConfig, init: ModelSnapshot) -> Result<u64> {
+        let id = self.management.create_task(config, init)?;
+        self.management.start_task(id)?;
+        Ok(id)
+    }
+
+    /// Single request/response entry point. Never panics on bad input;
+    /// protocol errors come back as `Ack{ok:false}` or `ErrorReply`.
+    pub fn handle(&self, msg: Msg) -> Msg {
+        let now = self.now_ms();
+        match msg {
+            Msg::Register {
+                device_id,
+                verdict,
+                caps,
+            } => match self.auth.validate(&device_id, &verdict, now) {
+                Ok(()) => {
+                    let id = self.selection.register(&device_id, caps, now);
+                    Msg::RegisterAck {
+                        accepted: true,
+                        client_id: id,
+                        reason: String::new(),
+                    }
+                }
+                Err(e) => Msg::RegisterAck {
+                    accepted: false,
+                    client_id: 0,
+                    reason: e.to_string(),
+                },
+            },
+            Msg::PollTask {
+                client_id,
+                app_name,
+                workflow_name,
+            } => {
+                self.selection.touch(client_id, now);
+                Msg::TaskOffer {
+                    task: self.management.advertise(&app_name, &workflow_name),
+                }
+            }
+            Msg::JoinRound {
+                client_id,
+                task_id,
+                dh_pubkey,
+            } => {
+                // Eligibility check against the task's selection criteria.
+                let criteria = self
+                    .management
+                    .with_task(task_id, |t| Ok(t.config.selection.clone()));
+                let eligible = match criteria {
+                    Ok(c) => self.selection.eligible(client_id, &c),
+                    Err(e) => Err(e),
+                };
+                match eligible {
+                    Err(e) => Msg::JoinAck {
+                        accepted: false,
+                        reason: e.to_string(),
+                    },
+                    Ok(false) => Msg::JoinAck {
+                        accepted: false,
+                        reason: "device does not meet selection criteria".into(),
+                    },
+                    Ok(true) => match self.management.join(client_id, task_id, dh_pubkey, now)
+                    {
+                        Ok((accepted, reason)) => Msg::JoinAck { accepted, reason },
+                        Err(e) => Msg::JoinAck {
+                            accepted: false,
+                            reason: e.to_string(),
+                        },
+                    },
+                }
+            }
+            Msg::FetchRound { client_id, task_id } => {
+                match self
+                    .management
+                    .fetch_round(client_id, task_id, &self.selection, now)
+                {
+                    Ok(role) => Msg::RoundPlan { role },
+                    Err(e) => Msg::ErrorReply {
+                        message: e.to_string(),
+                    },
+                }
+            }
+            Msg::SecAggShares {
+                client_id,
+                task_id,
+                round,
+                shares,
+            } => ack(self.management.accept_shares(client_id, task_id, round, shares)),
+            Msg::UploadPlain {
+                client_id,
+                task_id,
+                round,
+                base_version,
+                delta,
+                weight,
+                loss,
+            } => ack(self.management.accept_plain(
+                client_id,
+                task_id,
+                round,
+                base_version,
+                delta,
+                weight,
+                loss,
+                now,
+            )),
+            Msg::UploadMasked {
+                client_id,
+                task_id,
+                round,
+                vg_id,
+                masked,
+                loss,
+            } => ack(self.management.accept_masked(
+                client_id, task_id, round, vg_id, &masked, loss, now,
+            )),
+            Msg::UnmaskResponse {
+                client_id,
+                task_id,
+                round,
+                shares,
+            } => ack(self
+                .management
+                .accept_unmask(client_id, task_id, round, shares, now)),
+            Msg::GetTaskStatus { task_id } => match self.management.task_status(task_id) {
+                Ok((task, metrics, eps)) => {
+                    let last = metrics.last();
+                    Msg::TaskStatus {
+                        task,
+                        participants: last.map(|r| r.participants as u64).unwrap_or(0),
+                        last_round_duration_ms: last.map(|r| r.duration_ms()).unwrap_or(0),
+                        last_accuracy: last.and_then(|r| r.eval_accuracy).unwrap_or(f64::NAN),
+                        last_loss: last.map(|r| r.train_loss).unwrap_or(f64::NAN),
+                        epsilon: eps.unwrap_or(f64::NAN),
+                    }
+                }
+                Err(e) => Msg::ErrorReply {
+                    message: e.to_string(),
+                },
+            },
+            Msg::Heartbeat { client_id } => {
+                self.selection.touch(client_id, now);
+                Msg::Ack {
+                    ok: true,
+                    reason: String::new(),
+                }
+            }
+            // A server receiving a server→client message is a protocol error.
+            other => Msg::ErrorReply {
+                message: format!("unexpected message {other:?}"),
+            },
+        }
+    }
+
+    /// Serve connections from a listener until `stop()` — one pooled
+    /// handler per connection, frames answered in the codec they arrived.
+    pub fn serve(self: &Arc<Self>, listener: Box<dyn Listener>, pool: &ThreadPool) {
+        while !self.stopping.load(Ordering::SeqCst) {
+            let mut conn = match listener.accept() {
+                Ok(c) => c,
+                Err(_) => break, // listener closed / timeout
+            };
+            let server = Arc::clone(self);
+            pool.execute(move || loop {
+                let frame = match conn.recv() {
+                    Ok(f) => f,
+                    Err(_) => break, // client hung up
+                };
+                let (reply, codec) = match decode_frame(&frame) {
+                    Ok((msg, codec)) => (server.handle(msg), codec),
+                    Err(e) => (
+                        Msg::ErrorReply {
+                            message: e.to_string(),
+                        },
+                        crate::proto::WireCodec::Binary,
+                    ),
+                };
+                let out = match encode_frame(&reply, codec) {
+                    Ok(o) => o,
+                    Err(_) => encode_frame(&reply, crate::proto::WireCodec::Binary)
+                        .expect("binary encode cannot fail"),
+                };
+                if conn.send(&out).is_err() {
+                    break;
+                }
+            });
+        }
+    }
+
+    pub fn stop(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+    }
+}
+
+fn ack(r: Result<(bool, String)>) -> Msg {
+    match r {
+        Ok((ok, reason)) => Msg::Ack { ok, reason },
+        Err(e) => Msg::Ack {
+            ok: false,
+            reason: e.to_string(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::attest::IntegrityTier;
+    use crate::proto::{DeviceCaps, RoundRole};
+
+    fn register(server: &FloridaServer, dev: &str, nonce: u64) -> u64 {
+        let v = server
+            .auth
+            .authority()
+            .issue(dev, IntegrityTier::Device, nonce, u64::MAX / 2);
+        match server.handle(Msg::Register {
+            device_id: dev.into(),
+            verdict: v,
+            caps: DeviceCaps::default(),
+        }) {
+            Msg::RegisterAck {
+                accepted: true,
+                client_id,
+                ..
+            } => client_id,
+            other => panic!("register failed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn register_validates_attestation() {
+        let s = FloridaServer::for_testing(true, 7);
+        let id = register(&s, "d1", 1);
+        assert!(id > 0);
+        // Forged verdict rejected.
+        let evil = crate::crypto::attest::Authority::new(b"evil");
+        let v = evil.issue("d2", IntegrityTier::Strong, 1, u64::MAX / 2);
+        match s.handle(Msg::Register {
+            device_id: "d2".into(),
+            verdict: v,
+            caps: DeviceCaps::default(),
+        }) {
+            Msg::RegisterAck { accepted, .. } => assert!(!accepted),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn poll_then_join_then_train_flow() {
+        let s = FloridaServer::for_testing(true, 8);
+        let mut cfg = TaskConfig::default();
+        cfg.clients_per_round = 2;
+        cfg.total_rounds = 1;
+        cfg.app_name = "mail".into();
+        cfg.workflow_name = "spam".into();
+        s.deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+
+        let a = register(&s, "a", 1);
+        let b = register(&s, "b", 2);
+        // Poll advertises the task.
+        let task_id = match s.handle(Msg::PollTask {
+            client_id: a,
+            app_name: "mail".into(),
+            workflow_name: "spam".into(),
+        }) {
+            Msg::TaskOffer { task: Some(t) } => t.task_id,
+            other => panic!("{other:?}"),
+        };
+        for c in [a, b] {
+            match s.handle(Msg::JoinRound {
+                client_id: c,
+                task_id,
+                dh_pubkey: [0; 32],
+            }) {
+                Msg::JoinAck { accepted: true, .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        // Both fetch → Train, upload → round completes.
+        for c in [a, b] {
+            let ri = match s.handle(Msg::FetchRound {
+                client_id: c,
+                task_id,
+            }) {
+                Msg::RoundPlan {
+                    role: RoundRole::Train(ri),
+                } => ri,
+                other => panic!("{other:?}"),
+            };
+            match s.handle(Msg::UploadPlain {
+                client_id: c,
+                task_id,
+                round: ri.round,
+                base_version: 0,
+                delta: vec![0.5; 4],
+                weight: 8.0,
+                loss: 0.3,
+            }) {
+                Msg::Ack { ok: true, .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        match s.handle(Msg::GetTaskStatus { task_id }) {
+            Msg::TaskStatus {
+                task, participants, ..
+            } => {
+                assert_eq!(task.state, crate::proto::TaskState::Completed);
+                assert_eq!(participants, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ineligible_device_cannot_join() {
+        let s = FloridaServer::for_testing(true, 9);
+        let mut cfg = TaskConfig::default();
+        cfg.clients_per_round = 1;
+        cfg.selection.min_tier = IntegrityTier::Strong;
+        let task_id = s
+            .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0]))
+            .unwrap();
+        let a = register(&s, "weak-device", 1); // Device tier < Strong
+        match s.handle(Msg::JoinRound {
+            client_id: a,
+            task_id,
+            dh_pubkey: [0; 32],
+        }) {
+            Msg::JoinAck { accepted, reason } => {
+                assert!(!accepted);
+                assert!(reason.contains("criteria"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_task_and_bad_messages_answered_gracefully() {
+        let s = FloridaServer::for_testing(false, 10);
+        match s.handle(Msg::GetTaskStatus { task_id: 404 }) {
+            Msg::ErrorReply { message } => assert!(message.contains("unknown task")),
+            other => panic!("{other:?}"),
+        }
+        // Server→client message sent to server.
+        match s.handle(Msg::Ack {
+            ok: true,
+            reason: String::new(),
+        }) {
+            Msg::ErrorReply { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn heartbeat_touches_registry() {
+        let s = FloridaServer::for_testing(false, 11);
+        let a = register(&s, "d", 1);
+        s.advance_ms(500);
+        s.handle(Msg::Heartbeat { client_id: a });
+        assert_eq!(s.selection.get(a).unwrap().last_seen_ms, 500);
+    }
+}

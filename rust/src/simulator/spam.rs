@@ -1,0 +1,285 @@
+//! End-to-end spam-classification harness (§5.1) — the Fig-11 workload.
+//!
+//! Wires everything together: synthetic corpus → 100 shards → PJRT
+//! runtime → HloTrainer devices → FloridaServer with HloEvaluator →
+//! sync/async FL with optional local DP and secure aggregation.
+//! Shared by `examples/spam_classification.rs`, the CLI `run-sim`
+//! subcommand, and the Fig-11 benches.
+
+use std::sync::Arc;
+
+use crate::config::{FlMode, Manifest, TaskConfig};
+use crate::data::{SpamCorpus, SpamCorpusConfig};
+use crate::dp::DpConfig;
+use crate::error::Result;
+use crate::metrics::RoundRecord;
+use crate::model::ModelSnapshot;
+use crate::runtime::{HloEvaluator, HloTrainer, Runtime, ShardSampler};
+use crate::services::FloridaServer;
+use crate::simulator::{FleetConfig, Heterogeneity};
+
+/// Configuration of one spam-FL run.
+#[derive(Clone, Debug)]
+pub struct SpamRunConfig {
+    pub artifacts_dir: String,
+    pub preset: String,
+    /// Simulated devices (paper: 32; 16-node over-participation: 64).
+    pub n_devices: usize,
+    pub clients_per_round: usize,
+    pub rounds: u64,
+    /// None → sync; Some(k) → async with buffer size k.
+    pub async_buffer: Option<usize>,
+    pub secure_agg: bool,
+    pub vg_size: usize,
+    pub dp: DpConfig,
+    pub client_lr: f32,
+    pub prox_mu: f32,
+    pub aggregator: String,
+    /// Shards in the corpus (paper: 100).
+    pub n_shards: usize,
+    /// Dirichlet alpha for non-IID shards (None = IID).
+    pub non_iid_alpha: Option<f64>,
+    pub heterogeneity: Heterogeneity,
+    /// Simulated nominal on-device compute per round (ms), scaled by each
+    /// device's heterogeneity speed multiplier. Models slow phones whose
+    /// wall-clock dominates the actual PJRT time on this host; 0 = off.
+    pub sim_compute_ms: u64,
+    pub seed: u64,
+    pub runtime_workers: usize,
+}
+
+impl Default for SpamRunConfig {
+    fn default() -> Self {
+        SpamRunConfig {
+            artifacts_dir: "artifacts".into(),
+            preset: "tiny".into(),
+            n_devices: 32,
+            clients_per_round: 32,
+            rounds: 10,
+            async_buffer: None,
+            secure_agg: false,
+            vg_size: 16,
+            dp: DpConfig::off(),
+            client_lr: 5e-4,
+            prox_mu: 0.0,
+            aggregator: "fedavg".into(),
+            n_shards: 100,
+            non_iid_alpha: None,
+            heterogeneity: Heterogeneity::none(),
+            sim_compute_ms: 0,
+            seed: 1234,
+            runtime_workers: 1,
+        }
+    }
+}
+
+/// Result of one run.
+#[derive(Clone, Debug)]
+pub struct SpamRunResult {
+    pub rounds: Vec<RoundRecord>,
+    pub final_accuracy: f64,
+    pub mean_round_ms: f64,
+    pub total_wall_ms: u64,
+    pub epsilon: Option<f64>,
+    pub failed_rounds: u64,
+}
+
+/// Run the full §5.1 workload.
+pub fn run_spam(cfg: &SpamRunConfig) -> Result<SpamRunResult> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let preset = manifest.preset(&cfg.preset)?.clone();
+
+    // Corpus with the model's vocab/seq shape, 100 shards.
+    let mut ccfg = SpamCorpusConfig::for_model(preset.vocab, preset.seq_len);
+    ccfg.seed ^= cfg.seed;
+    let corpus = match cfg.non_iid_alpha {
+        None => SpamCorpus::generate(&ccfg, cfg.n_shards),
+        Some(a) => SpamCorpus::generate_non_iid(&ccfg, cfg.n_shards, a),
+    };
+    let train = Arc::new(corpus.train);
+    let test = Arc::new(corpus.test);
+    let shards = corpus.shards;
+
+    // PJRT runtime shared by all simulated devices + the evaluator.
+    let rt = Runtime::new(manifest.clone(), cfg.runtime_workers)?;
+    let evaluator = Arc::new(HloEvaluator::new(rt.handle(), preset.clone(), Arc::clone(&test)));
+
+    let server = Arc::new(FloridaServer::with_evaluator(
+        true,
+        evaluator,
+        cfg.seed,
+        true,
+    ));
+
+    let mut tcfg = TaskConfig::default();
+    tcfg.task_name = "spam-classification".into();
+    tcfg.app_name = "python-app".into();
+    tcfg.workflow_name = "python-workflow".into();
+    tcfg.preset = cfg.preset.clone();
+    tcfg.clients_per_round = cfg.clients_per_round;
+    tcfg.total_rounds = cfg.rounds;
+    tcfg.mode = match cfg.async_buffer {
+        None => FlMode::Sync,
+        Some(k) => FlMode::Async { buffer_size: k },
+    };
+    tcfg.aggregator = if cfg.async_buffer.is_some() && cfg.aggregator == "fedavg" {
+        "fedbuff".into()
+    } else {
+        cfg.aggregator.clone()
+    };
+    tcfg.client_lr = cfg.client_lr;
+    tcfg.prox_mu = cfg.prox_mu;
+    tcfg.secure_agg = cfg.secure_agg;
+    tcfg.vg_size = cfg.vg_size;
+    tcfg.dp = cfg.dp;
+    tcfg.dp_population = cfg.n_shards; // paper: pool of 100 clients
+    tcfg.round_timeout_ms = 600_000;
+    tcfg.min_report_fraction = 0.75;
+
+    let init = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path))?;
+    let task_id = server.deploy_task(tcfg, init)?;
+
+    // Build per-device trainers: each device samples a random shard per
+    // round — approximated by giving device i shard (i + round) % S via a
+    // fixed random shard here (paper: "each client accesses one of the
+    // 100 splits at random").
+    let fleet = FleetConfig {
+        n_devices: cfg.n_devices,
+        heterogeneity: cfg.heterogeneity,
+        base_compute_ms: 0,
+        seed: cfg.seed,
+        poll_sleep_ms: 1,
+    };
+    let local_dp = if cfg.dp.mode == crate::dp::DpMode::Local {
+        Some(cfg.dp)
+    } else {
+        None
+    };
+
+    // Pre-sample device heterogeneity profiles (speed multipliers).
+    let profiles: Vec<crate::simulator::DeviceProfile> = {
+        let mut prng = crate::util::Rng::new(cfg.seed ^ 0xBEEF);
+        (0..cfg.n_devices)
+            .map(|_| cfg.heterogeneity.sample(&mut prng))
+            .collect()
+    };
+    let sim_compute_ms = cfg.sim_compute_ms;
+
+    let t0 = std::time::Instant::now();
+    let rt_for_devices = Arc::clone(&rt);
+    let reports = run_fleet_with_dp(&server, task_id, &fleet, local_dp, |i| {
+        let mut rng = crate::util::Rng::new(cfg.seed ^ (i as u64) << 17);
+        let shard_id = rng.range(0, shards.len());
+        let sampler = ShardSampler::new(
+            Arc::clone(&train),
+            shards[shard_id].clone(),
+            0.2, // paper: 20% of the split per iteration
+            cfg.seed ^ (i as u64 + 1),
+        );
+        crate::simulator::SimulatedCompute {
+            inner: HloTrainer::new(rt_for_devices.handle(), preset.clone(), sampler),
+            base_ms: sim_compute_ms,
+            profile: profiles[i],
+        }
+    });
+    let total_wall_ms = t0.elapsed().as_millis() as u64;
+
+    let (_, metrics, epsilon) = server.management.task_status(task_id)?;
+    let final_accuracy = metrics
+        .rounds
+        .iter()
+        .rev()
+        .find_map(|r| r.eval_accuracy)
+        .unwrap_or(f64::NAN);
+    let _ = reports;
+    Ok(SpamRunResult {
+        mean_round_ms: metrics.mean_round_duration_ms(),
+        final_accuracy,
+        total_wall_ms,
+        epsilon,
+        failed_rounds: metrics.failed_rounds,
+        rounds: metrics.rounds,
+    })
+}
+
+/// `run_fleet` with client-side local DP injection.
+fn run_fleet_with_dp<F, T>(
+    server: &Arc<FloridaServer>,
+    task_id: u64,
+    cfg: &FleetConfig,
+    local_dp: Option<DpConfig>,
+    make_trainer: F,
+) -> Vec<crate::client::ExecutionReport>
+where
+    F: Fn(usize) -> T + Send + Sync,
+    T: crate::client::Trainer + 'static,
+{
+    use crate::client::{DirectApi, FederatedLearningClient};
+    use crate::crypto::attest::IntegrityTier;
+    use crate::proto::DeviceCaps;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let ticker = {
+        let server = Arc::clone(server);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                server.management.tick(server.now_ms());
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        })
+    };
+    let reports: Vec<crate::client::ExecutionReport> = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(cfg.n_devices);
+        for i in 0..cfg.n_devices {
+            let server = Arc::clone(server);
+            let trainer = make_trainer(i);
+            let seed = cfg.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let builder = std::thread::Builder::new()
+                .name(format!("device-{i}"))
+                .stack_size(1 << 20);
+            joins.push(
+                builder
+                    .spawn_scoped(scope, move || {
+                        let device_id = format!("sim-device-{i}");
+                        let verdict = server.auth.authority().issue(
+                            &device_id,
+                            IntegrityTier::Device,
+                            seed,
+                            u64::MAX / 2,
+                        );
+                        let mut client = FederatedLearningClient::new(
+                            Box::new(DirectApi {
+                                server: Arc::clone(&server),
+                            }),
+                            &device_id,
+                            verdict,
+                            DeviceCaps::default(),
+                            seed,
+                        );
+                        client.local_dp = local_dp;
+                        let mut report = Default::default();
+                        let mut tr = trainer;
+                        match client.register() {
+                            Ok(_) => {
+                                if let Err(e) = client.run_task(task_id, &mut tr, &mut report) {
+                                    log::warn!("device {i}: {e}");
+                                }
+                            }
+                            Err(e) => log::warn!("device {i} register failed: {e}"),
+                        }
+                        report
+                    })
+                    .expect("spawn device"),
+            );
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().unwrap_or_default())
+            .collect()
+    });
+    stop.store(true, Ordering::SeqCst);
+    let _ = ticker.join();
+    reports
+}

@@ -1,0 +1,175 @@
+//! In-process channel transport — the AzureML-simulator analogue.
+//!
+//! A global registry maps string addresses to acceptors. `dial` performs a
+//! handshake that hands the server an mpsc pair, after which both sides
+//! exchange `Vec<u8>` frames with no serialization beyond the codec's.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, channel};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use once_cell::sync::Lazy;
+
+use super::{Connection, Dialer, Listener};
+use crate::error::{Error, Result};
+
+/// Receive timeout — generous; round orchestration has its own deadlines.
+const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+type Handshake = (Sender<Vec<u8>>, Receiver<Vec<u8>>, String);
+
+static REGISTRY: Lazy<Mutex<HashMap<String, Sender<Handshake>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// One end of an in-process connection.
+pub struct InprocConn {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    peer: String,
+}
+
+impl Connection for InprocConn {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| Error::Transport("inproc peer closed".into()))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx
+            .recv_timeout(RECV_TIMEOUT)
+            .map_err(|e| Error::Transport(format!("inproc recv: {e}")))
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+/// Listening side: registered under an address in the global registry.
+pub struct InprocListener {
+    addr: String,
+    accept_rx: Receiver<Handshake>,
+}
+
+impl InprocListener {
+    /// Bind an address. Errors if already bound.
+    pub fn bind(addr: &str) -> Result<InprocListener> {
+        let mut reg = REGISTRY.lock().unwrap();
+        if reg.contains_key(addr) {
+            return Err(Error::Transport(format!("inproc address {addr} in use")));
+        }
+        let (tx, rx) = channel();
+        reg.insert(addr.to_string(), tx);
+        Ok(InprocListener {
+            addr: addr.to_string(),
+            accept_rx: rx,
+        })
+    }
+}
+
+impl Listener for InprocListener {
+    fn accept(&self) -> Result<Box<dyn Connection>> {
+        let (tx, rx, peer) = self
+            .accept_rx
+            .recv_timeout(RECV_TIMEOUT)
+            .map_err(|e| Error::Transport(format!("inproc accept: {e}")))?;
+        Ok(Box::new(InprocConn { tx, rx, peer }))
+    }
+
+    fn local_addr(&self) -> String {
+        self.addr.clone()
+    }
+}
+
+impl Drop for InprocListener {
+    fn drop(&mut self) {
+        REGISTRY.lock().unwrap().remove(&self.addr);
+    }
+}
+
+/// Dialer for in-process addresses.
+pub struct InprocDialer;
+
+impl Dialer for InprocDialer {
+    fn dial(&self, addr: &str) -> Result<Box<dyn Connection>> {
+        let acceptor = {
+            let reg = REGISTRY.lock().unwrap();
+            reg.get(addr)
+                .cloned()
+                .ok_or_else(|| Error::Transport(format!("no inproc listener at {addr}")))?
+        };
+        let (c2s_tx, c2s_rx) = channel();
+        let (s2c_tx, s2c_rx) = channel();
+        acceptor
+            .send((s2c_tx, c2s_rx, format!("client->{addr}")))
+            .map_err(|_| Error::Transport(format!("listener at {addr} gone")))?;
+        Ok(Box::new(InprocConn {
+            tx: c2s_tx,
+            rx: s2c_rx,
+            peer: addr.to_string(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn echo_roundtrip() {
+        let l = InprocListener::bind("test-echo").unwrap();
+        let server = thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            let f = c.recv().unwrap();
+            c.send(&f).unwrap();
+        });
+        let mut c = InprocDialer.dial("test-echo").unwrap();
+        c.send(b"ping").unwrap();
+        assert_eq!(c.recv().unwrap(), b"ping");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn dial_unbound_fails() {
+        assert!(InprocDialer.dial("nope").is_err());
+    }
+
+    #[test]
+    fn double_bind_fails_and_rebind_after_drop_works() {
+        let l = InprocListener::bind("test-rebind").unwrap();
+        assert!(InprocListener::bind("test-rebind").is_err());
+        drop(l);
+        let _l2 = InprocListener::bind("test-rebind").unwrap();
+    }
+
+    #[test]
+    fn many_concurrent_clients() {
+        let l = InprocListener::bind("test-many").unwrap();
+        let server = thread::spawn(move || {
+            for _ in 0..16 {
+                let mut c = l.accept().unwrap();
+                thread::spawn(move || {
+                    let f = c.recv().unwrap();
+                    c.send(&f).unwrap();
+                });
+            }
+        });
+        let clients: Vec<_> = (0..16)
+            .map(|i| {
+                thread::spawn(move || {
+                    let mut c = InprocDialer.dial("test-many").unwrap();
+                    let msg = vec![i as u8; 100];
+                    c.send(&msg).unwrap();
+                    assert_eq!(c.recv().unwrap(), msg);
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        server.join().unwrap();
+    }
+}

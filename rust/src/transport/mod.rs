@@ -1,0 +1,43 @@
+//! Transports: how clients reach the Florida services.
+//!
+//! The paper's clients speak gRPC or REST to a cloud endpoint. Offline we
+//! provide two interchangeable transports behind one trait:
+//!
+//! * [`inproc`] — lock-free-ish channel transport for the device
+//!   simulator (thousands of clients in one process).
+//! * [`tcp`] — real `std::net` TCP with 4-byte length framing, exercising
+//!   serialization, partial reads, and connection lifecycle.
+//!
+//! Frames are opaque byte vectors; the [`crate::proto`] envelope decides
+//! binary ("gRPC") vs JSON ("REST") encoding per connection.
+
+pub mod inproc;
+pub mod tcp;
+
+use crate::error::Result;
+
+/// Maximum accepted frame (64 MiB) — large enough for a compressed
+/// BERT-tiny snapshot, small enough to bound hostile allocations.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// A bidirectional, message-oriented connection.
+pub trait Connection: Send {
+    /// Send one frame (blocking).
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    /// Receive one frame (blocking; `Err` on close/timeout).
+    fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Peer description for logs.
+    fn peer(&self) -> String;
+}
+
+/// A listening endpoint producing connections.
+pub trait Listener: Send {
+    fn accept(&self) -> Result<Box<dyn Connection>>;
+    /// Address clients should dial.
+    fn local_addr(&self) -> String;
+}
+
+/// Client-side dialer.
+pub trait Dialer: Send + Sync {
+    fn dial(&self, addr: &str) -> Result<Box<dyn Connection>>;
+}

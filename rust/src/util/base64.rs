@@ -1,0 +1,109 @@
+//! Base64 (standard alphabet, padded) — used by the JSON ("REST") codec to
+//! carry binary payloads (model blobs, masked vectors, keys).
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes to standard padded base64.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity((data.len() + 2) / 3 * 4);
+    for chunk in data.chunks(3) {
+        let b = [
+            chunk[0],
+            *chunk.get(1).unwrap_or(&0),
+            *chunk.get(2).unwrap_or(&0),
+        ];
+        let n = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(n >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            ALPHABET[n as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+/// Decode standard base64 (padding required, no whitespace).
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    let b = s.as_bytes();
+    if b.len() % 4 != 0 {
+        return Err(format!("base64 length {} not multiple of 4", b.len()));
+    }
+    let val = |c: u8| -> Result<u32, String> {
+        match c {
+            b'A'..=b'Z' => Ok((c - b'A') as u32),
+            b'a'..=b'z' => Ok((c - b'a' + 26) as u32),
+            b'0'..=b'9' => Ok((c - b'0' + 52) as u32),
+            b'+' => Ok(62),
+            b'/' => Ok(63),
+            _ => Err(format!("bad base64 char {:?}", c as char)),
+        }
+    };
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    for (i, chunk) in b.chunks(4).enumerate() {
+        let last = (i + 1) * 4 == b.len();
+        let pad = if last {
+            chunk.iter().rev().take_while(|&&c| c == b'=').count()
+        } else {
+            0
+        };
+        if pad > 2 || (!last && chunk.contains(&b'=')) {
+            return Err("bad padding".into());
+        }
+        let mut n = 0u32;
+        for (j, &c) in chunk.iter().enumerate() {
+            let v = if j >= 4 - pad { 0 } else { val(c)? };
+            n = (n << 6) | v;
+        }
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        let cases = [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ];
+        for (plain, b64) in cases {
+            assert_eq!(encode(plain.as_bytes()), b64);
+            assert_eq!(decode(b64).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_bytes() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode("a").is_err());
+        assert!(decode("ab=c").is_err());
+        assert!(decode("====").is_err());
+        assert!(decode("a!cd").is_err());
+    }
+}

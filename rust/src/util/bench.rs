@@ -1,0 +1,199 @@
+//! Micro-benchmark harness (criterion replacement for the offline build).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module. It
+//! provides warmup, timed iterations, basic statistics, throughput
+//! reporting, and aligned table output so every paper table/figure bench
+//! prints the same style of rows.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+    /// Optional bytes processed per iteration (for GB/s reporting).
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_gbs(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.mean_ns) // bytes/ns == GB/s
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1500),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick-mode bencher for long end-to-end cases.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(1),
+            min_iters: 1,
+            max_iters: 3,
+        }
+    }
+
+    /// Time `f`, per-iteration. Returns stats over individual iterations.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || (samples_ns.len() as u64) < self.min_iters)
+            && (samples_ns.len() as u64) < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            std_ns: stats::std(&samples_ns),
+            bytes_per_iter: None,
+        }
+    }
+
+    /// Like `run`, annotating bytes/iteration for throughput output.
+    pub fn run_bytes<F: FnMut()>(&self, name: &str, bytes: u64, f: F) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.bytes_per_iter = Some(bytes);
+        r
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print one result row (aligned).
+pub fn report(r: &BenchResult) {
+    let tput = r
+        .throughput_gbs()
+        .map(|g| format!("  {g:.2} GB/s"))
+        .unwrap_or_default();
+    println!(
+        "  {:<44} {:>12}  p50 {:>12}  p95 {:>12}  ({} iters){}",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p95_ns),
+        r.iters,
+        tput
+    );
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a table of (label, value) series — used for figure reproduction.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n--- {title} ---");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::from("  ");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        println!("{s}");
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 10_000,
+        };
+        let r = b.run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1000.0,
+            p50_ns: 1000.0,
+            p95_ns: 1000.0,
+            std_ns: 0.0,
+            bytes_per_iter: Some(2000),
+        };
+        assert!((r.throughput_gbs().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

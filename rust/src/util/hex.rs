@@ -1,0 +1,55 @@
+//! Hex encoding/decoding for ids, keys, and wire debugging.
+
+/// Encode bytes as lowercase hex.
+pub fn encode(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Decode a hex string (case-insensitive). Errors on odd length or
+/// non-hex characters.
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    if s.len() % 2 != 0 {
+        return Err(format!("odd hex length {}", s.len()));
+    }
+    let nib = |c: u8| -> Result<u8, String> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(format!("bad hex char {:?}", c as char)),
+        }
+    };
+    let b = s.as_bytes();
+    (0..s.len() / 2)
+        .map(|i| Ok(nib(b[2 * i])? << 4 | nib(b[2 * i + 1])?))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn known_vector() {
+        assert_eq!(encode(b"\x00\xff\x10"), "00ff10");
+        assert_eq!(decode("00FF10").unwrap(), vec![0, 255, 16]);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(decode("abc").is_err());
+        assert!(decode("zz").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared utilities: deterministic RNG, JSON, hex, thread pool, stats,
+//! and the micro-benchmark harness (criterion is unavailable offline).
+
+pub mod base64;
+pub mod bench;
+pub mod hex;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+pub use pool::ThreadPool;
+pub use rng::Rng;

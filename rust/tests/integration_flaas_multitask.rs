@@ -1,0 +1,266 @@
+//! Integration: the FLaaS claim — one service deployment hosting several
+//! independent customers' tasks concurrently (§2.1: "a single service
+//! deployment could service multiple independent customers with their own
+//! application provisioning and ML toolchains").
+
+use std::sync::Arc;
+
+use florida::client::{ConstantTrainer, TrainOutcome, Trainer};
+use florida::config::{FlMode, TaskConfig};
+use florida::error::Result;
+use florida::model::ModelSnapshot;
+use florida::proto::{Msg, TaskState};
+use florida::services::FloridaServer;
+use florida::simulator::{run_fleet, FleetConfig};
+
+fn server() -> Arc<FloridaServer> {
+    Arc::new(FloridaServer::with_evaluator(
+        true,
+        Arc::new(florida::services::management::NoEval),
+        777,
+        true,
+    ))
+}
+
+fn cfg(app: &str, wf: &str, n: usize, rounds: u64) -> TaskConfig {
+    let mut c = TaskConfig::default();
+    c.task_name = format!("{app}/{wf}");
+    c.app_name = app.into();
+    c.workflow_name = wf.into();
+    c.clients_per_round = n;
+    c.total_rounds = rounds;
+    c.round_timeout_ms = 30_000;
+    c
+}
+
+#[test]
+fn two_customers_run_concurrently_isolated() {
+    let server = server();
+    // Customer A: "mail" spam model (dim 4); Customer B: "keyboard"
+    // next-word model (dim 9). Different device fleets.
+    let task_a = server
+        .deploy_task(cfg("mail", "spam", 4, 3), ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap();
+    let task_b = server
+        .deploy_task(
+            cfg("keyboard", "nextword", 3, 4),
+            ModelSnapshot::new(0, vec![0.0; 9]),
+        )
+        .unwrap();
+    assert_ne!(task_a, task_b);
+
+    let sa = Arc::clone(&server);
+    let ha = std::thread::spawn(move || {
+        let fleet = FleetConfig {
+            n_devices: 4,
+            seed: 1,
+            ..Default::default()
+        };
+        run_fleet(&sa, task_a, &fleet, |_| ConstantTrainer { step: 1.0 })
+    });
+    let sb = Arc::clone(&server);
+    let hb = std::thread::spawn(move || {
+        let fleet = FleetConfig {
+            n_devices: 3,
+            seed: 2,
+            ..Default::default()
+        };
+        run_fleet(&sb, task_b, &fleet, |_| ConstantTrainer { step: -1.0 })
+    });
+    let ra = ha.join().unwrap();
+    let rb = hb.join().unwrap();
+    assert!(ra.iter().all(|r| r.task_completed));
+    assert!(rb.iter().all(|r| r.task_completed));
+
+    // Both completed with isolated models.
+    server
+        .management
+        .with_task(task_a, |t| {
+            assert_eq!(t.state, TaskState::Completed);
+            assert_eq!(t.global.dim(), 4);
+            for p in &t.global.params {
+                assert!((p - 3.0).abs() < 1e-4, "{p}");
+            }
+            Ok(())
+        })
+        .unwrap();
+    server
+        .management
+        .with_task(task_b, |t| {
+            assert_eq!(t.state, TaskState::Completed);
+            assert_eq!(t.global.dim(), 9);
+            for p in &t.global.params {
+                assert!((p + 4.0).abs() < 1e-4, "{p}");
+            }
+            Ok(())
+        })
+        .unwrap();
+}
+
+#[test]
+fn advertisement_routes_by_app_and_workflow() {
+    let server = server();
+    let t1 = server
+        .deploy_task(cfg("mail", "spam", 1, 1), ModelSnapshot::new(0, vec![0.0]))
+        .unwrap();
+    let t2 = server
+        .deploy_task(cfg("mail", "rank", 1, 1), ModelSnapshot::new(0, vec![0.0]))
+        .unwrap();
+    let t3 = server
+        .deploy_task(cfg("voice", "verify", 1, 1), ModelSnapshot::new(0, vec![0.0]))
+        .unwrap();
+    assert_eq!(server.management.advertise("mail", "spam").unwrap().task_id, t1);
+    assert_eq!(server.management.advertise("mail", "rank").unwrap().task_id, t2);
+    assert_eq!(server.management.advertise("voice", "verify").unwrap().task_id, t3);
+    assert!(server.management.advertise("mail", "verify").is_none());
+    assert!(server.management.advertise("game", "spam").is_none());
+    assert_eq!(server.management.list_tasks().len(), 3);
+}
+
+#[test]
+fn one_device_serves_sequential_workflows() {
+    // A device finishes app A's task, then polls and serves app B's —
+    // the SDK's poll→execute loop across workflows.
+    use florida::client::{DirectApi, FederatedLearningClient, WorkflowDetails};
+    use florida::crypto::attest::IntegrityTier;
+    use florida::proto::DeviceCaps;
+
+    let server = server();
+    let _ta = server
+        .deploy_task(cfg("mail", "spam", 1, 2), ModelSnapshot::new(0, vec![0.0; 2]))
+        .unwrap();
+    let _tb = server
+        .deploy_task(cfg("mail", "rank", 1, 1), ModelSnapshot::new(0, vec![0.0; 3]))
+        .unwrap();
+    // Background deadline ticks.
+    let ticker = {
+        let s = Arc::clone(&server);
+        std::thread::spawn(move || {
+            for _ in 0..600 {
+                s.management.tick(s.now_ms());
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        })
+    };
+
+    let verdict =
+        server
+            .auth
+            .authority()
+            .issue("multi-dev", IntegrityTier::Device, 1, u64::MAX / 2);
+    let mut client = FederatedLearningClient::new(
+        Box::new(DirectApi {
+            server: Arc::clone(&server),
+        }),
+        "multi-dev",
+        verdict,
+        DeviceCaps::default(),
+        5,
+    );
+    let mut wf_a = WorkflowDetails {
+        app_name: "mail".into(),
+        workflow_name: "spam".into(),
+        trainer: Box::new(ConstantTrainer { step: 1.0 }),
+    };
+    let report_a = client.execute(&mut wf_a).unwrap();
+    assert!(report_a.task_completed);
+    assert_eq!(report_a.rounds_participated, 2);
+
+    let mut wf_b = WorkflowDetails {
+        app_name: "mail".into(),
+        workflow_name: "rank".into(),
+        trainer: Box::new(ConstantTrainer { step: 2.0 }),
+    };
+    let report_b = client.execute(&mut wf_b).unwrap();
+    assert!(report_b.task_completed);
+    drop(ticker);
+}
+
+#[test]
+fn mixed_sync_and_async_tasks_coexist() {
+    let server = server();
+    let mut async_cfg = cfg("app-x", "wf-x", 3, 2);
+    async_cfg.mode = FlMode::Async { buffer_size: 3 };
+    async_cfg.aggregator = "fedbuff".into();
+    let t_async = server
+        .deploy_task(async_cfg, ModelSnapshot::new(0, vec![0.0; 2]))
+        .unwrap();
+    let t_sync = server
+        .deploy_task(cfg("app-y", "wf-y", 3, 2), ModelSnapshot::new(0, vec![0.0; 2]))
+        .unwrap();
+
+    struct Slow;
+    impl Trainer for Slow {
+        fn train(
+            &mut self,
+            model: &ModelSnapshot,
+            _r: u64,
+            _lr: f32,
+            _mu: f32,
+        ) -> Result<TrainOutcome> {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            Ok(TrainOutcome {
+                new_params: model.params.iter().map(|p| p + 1.0).collect(),
+                weight: 1.0,
+                loss: 0.1,
+            })
+        }
+    }
+
+    let s1 = Arc::clone(&server);
+    let h1 = std::thread::spawn(move || {
+        let fleet = FleetConfig {
+            n_devices: 3,
+            seed: 3,
+            ..Default::default()
+        };
+        run_fleet(&s1, t_async, &fleet, |_| Slow)
+    });
+    let s2 = Arc::clone(&server);
+    let h2 = std::thread::spawn(move || {
+        let fleet = FleetConfig {
+            n_devices: 3,
+            seed: 4,
+            ..Default::default()
+        };
+        run_fleet(&s2, t_sync, &fleet, |_| Slow)
+    });
+    h1.join().unwrap();
+    h2.join().unwrap();
+    for t in [t_async, t_sync] {
+        let (d, m, _) = server.management.task_status(t).unwrap();
+        assert_eq!(d.state, TaskState::Completed, "task {t}");
+        assert_eq!(m.rounds.len(), 2);
+    }
+}
+
+#[test]
+fn status_queries_are_per_task() {
+    let server = server();
+    let t1 = server
+        .deploy_task(cfg("a", "w", 2, 1), ModelSnapshot::new(0, vec![0.0; 2]))
+        .unwrap();
+    let fleet = FleetConfig {
+        n_devices: 2,
+        seed: 6,
+        ..Default::default()
+    };
+    run_fleet(&server, t1, &fleet, |_| ConstantTrainer { step: 1.0 });
+    let t2 = server
+        .deploy_task(cfg("b", "w", 2, 1), ModelSnapshot::new(0, vec![0.0; 2]))
+        .unwrap();
+    match server.handle(Msg::GetTaskStatus { task_id: t1 }) {
+        Msg::TaskStatus { task, participants, .. } => {
+            assert_eq!(task.state, TaskState::Completed);
+            assert_eq!(participants, 2);
+        }
+        other => panic!("{other:?}"),
+    }
+    match server.handle(Msg::GetTaskStatus { task_id: t2 }) {
+        Msg::TaskStatus { task, participants, .. } => {
+            assert_eq!(task.state, TaskState::Running);
+            assert_eq!(participants, 0);
+        }
+        other => panic!("{other:?}"),
+    }
+}

@@ -1,0 +1,240 @@
+//! Integration: the PJRT runtime over real AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise). Uses the
+//! `micro` preset to keep compile time down; validates the full
+//! python→HLO-text→rust→PJRT contract: shapes, Adam stepping, loss
+//! decrease, determinism, and evaluator behaviour.
+
+use std::sync::Arc;
+
+use florida::config::Manifest;
+use florida::data::{SpamCorpus, SpamCorpusConfig};
+use florida::model::ModelSnapshot;
+use florida::runtime::{EvalRequest, HloEvaluator, HloTrainer, Runtime, ShardSampler, TrainRequest};
+use florida::services::management::Evaluator;
+use florida::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::env::var("FLORIDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Manifest::load(&dir).ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match manifest() {
+            Some(m) => m,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn train_once(
+    rt: &Arc<Runtime>,
+    preset: &florida::config::ArtifactPreset,
+    params: &[f32],
+    seed: u64,
+    lr: f32,
+) -> florida::runtime::TrainResponse {
+    let mut rng = Rng::new(seed);
+    let (k, b, t) = (preset.local_steps, preset.batch, preset.seq_len);
+    let tokens: Vec<i32> = (0..k * b * t)
+        .map(|_| rng.range(0, preset.vocab) as i32)
+        .collect();
+    let labels: Vec<i32> = (0..k * b).map(|_| rng.range(0, 2) as i32).collect();
+    rt.handle()
+        .train(TrainRequest {
+            preset: preset.name.clone(),
+            params: params.to_vec(),
+            m: vec![0.0; preset.param_count],
+            v: vec![0.0; preset.param_count],
+            step: 0.0,
+            tokens,
+            labels,
+            lr,
+            prox_mu: 0.0,
+            anchor: params.to_vec(),
+        })
+        .unwrap()
+}
+
+#[test]
+fn train_artifact_abi_and_adam_stepping() {
+    let manifest = require_artifacts!();
+    let preset = manifest.preset("micro").unwrap().clone();
+    let rt = Runtime::new(manifest.clone(), 1).unwrap();
+    let init = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path)).unwrap();
+    assert_eq!(init.dim(), preset.param_count);
+
+    let resp = train_once(&rt, &preset, &init.params, 1, 1e-3);
+    assert_eq!(resp.params.len(), preset.param_count);
+    assert_eq!(resp.losses.len(), preset.local_steps);
+    assert_eq!(resp.step, preset.local_steps as f32);
+    assert!(resp.params.iter().all(|x| x.is_finite()));
+    // Params must have moved.
+    let moved = resp
+        .params
+        .iter()
+        .zip(&init.params)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(moved > preset.param_count / 2);
+    // Adam moments populated.
+    assert!(resp.m.iter().any(|&x| x != 0.0));
+    assert!(resp.v.iter().any(|&x| x > 0.0));
+}
+
+#[test]
+fn train_artifact_is_deterministic() {
+    let manifest = require_artifacts!();
+    let preset = manifest.preset("micro").unwrap().clone();
+    let rt = Runtime::new(manifest.clone(), 1).unwrap();
+    let init = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path)).unwrap();
+    let a = train_once(&rt, &preset, &init.params, 7, 1e-3);
+    let b = train_once(&rt, &preset, &init.params, 7, 1e-3);
+    assert_eq!(a.params, b.params);
+    assert_eq!(a.losses, b.losses);
+}
+
+#[test]
+fn zero_lr_train_is_identity() {
+    let manifest = require_artifacts!();
+    let preset = manifest.preset("micro").unwrap().clone();
+    let rt = Runtime::new(manifest.clone(), 1).unwrap();
+    let init = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path)).unwrap();
+    let resp = train_once(&rt, &preset, &init.params, 3, 0.0);
+    assert_eq!(resp.params, init.params);
+}
+
+#[test]
+fn hlo_trainer_learns_separable_corpus() {
+    let manifest = require_artifacts!();
+    let preset = manifest.preset("micro").unwrap().clone();
+    let rt = Runtime::new(manifest.clone(), 1).unwrap();
+    let mut ccfg = SpamCorpusConfig::for_model(preset.vocab, preset.seq_len);
+    ccfg.n_train = 400;
+    ccfg.n_test = 100;
+    ccfg.indicator_rate = 0.25; // easy task for a fast test
+    let corpus = SpamCorpus::generate(&ccfg, 2);
+    let train = Arc::new(corpus.train);
+    let test = Arc::new(corpus.test);
+
+    let sampler = ShardSampler::new(Arc::clone(&train), corpus.shards[0].clone(), 0.5, 5);
+    let mut trainer = HloTrainer::new(rt.handle(), preset.clone(), sampler);
+    let mut snap = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path)).unwrap();
+
+    use florida::client::Trainer as _;
+    let mut first_loss = None;
+    for _ in 0..40 {
+        let out = trainer.train(&snap, 0, 8e-3, 0.0).unwrap();
+        if first_loss.is_none() {
+            first_loss = Some(out.loss);
+        }
+        snap.params = out.new_params;
+        snap.version += 1;
+    }
+    let eval = HloEvaluator::new(rt.handle(), preset.clone(), Arc::clone(&test));
+    let (loss, acc) = eval.evaluate(&preset.name, &snap.params).unwrap();
+    assert!(acc > 0.8, "accuracy {acc} loss {loss}");
+    assert!(loss < first_loss.unwrap());
+}
+
+#[test]
+fn evaluator_rejects_wrong_preset_or_dim() {
+    let manifest = require_artifacts!();
+    let preset = manifest.preset("micro").unwrap().clone();
+    let rt = Runtime::new(manifest.clone(), 1).unwrap();
+    let mut ccfg = SpamCorpusConfig::for_model(preset.vocab, preset.seq_len);
+    ccfg.n_train = 50;
+    ccfg.n_test = 50;
+    let corpus = SpamCorpus::generate(&ccfg, 1);
+    let eval = HloEvaluator::new(rt.handle(), preset.clone(), Arc::new(corpus.test));
+    assert!(eval.evaluate("nonexistent", &vec![0.0; preset.param_count]).is_none());
+    assert!(eval.evaluate(&preset.name, &vec![0.0; 3]).is_none());
+}
+
+#[test]
+fn runtime_shape_validation_errors() {
+    let manifest = require_artifacts!();
+    let preset = manifest.preset("micro").unwrap().clone();
+    let rt = Runtime::new(manifest.clone(), 1).unwrap();
+    // Wrong param dim.
+    let err = rt.handle().train(TrainRequest {
+        preset: preset.name.clone(),
+        params: vec![0.0; 3],
+        m: vec![0.0; 3],
+        v: vec![0.0; 3],
+        step: 0.0,
+        tokens: vec![],
+        labels: vec![],
+        lr: 1e-3,
+        prox_mu: 0.0,
+        anchor: vec![0.0; 3],
+    });
+    assert!(err.is_err());
+    // Wrong eval shapes.
+    let err = rt.handle().eval(EvalRequest {
+        preset: preset.name.clone(),
+        params: vec![0.0; preset.param_count],
+        tokens: vec![0; 7],
+        labels: vec![0; 7],
+    });
+    assert!(err.is_err());
+    // Unknown preset.
+    let err = rt.handle().eval(EvalRequest {
+        preset: "zzz".into(),
+        params: vec![],
+        tokens: vec![],
+        labels: vec![],
+    });
+    assert!(err.is_err());
+}
+
+#[test]
+fn fedprox_artifact_pulls_towards_anchor() {
+    let manifest = require_artifacts!();
+    let preset = manifest.preset("micro").unwrap().clone();
+    let rt = Runtime::new(manifest.clone(), 1).unwrap();
+    let init = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path)).unwrap();
+    let mut rng = Rng::new(11);
+    let (k, b, t) = (preset.local_steps, preset.batch, preset.seq_len);
+    let tokens: Vec<i32> = (0..k * b * t)
+        .map(|_| rng.range(0, preset.vocab) as i32)
+        .collect();
+    let labels: Vec<i32> = (0..k * b).map(|_| rng.range(0, 2) as i32).collect();
+    let run = |mu: f32| {
+        rt.handle()
+            .train(TrainRequest {
+                preset: preset.name.clone(),
+                params: init.params.clone(),
+                m: vec![0.0; preset.param_count],
+                v: vec![0.0; preset.param_count],
+                step: 0.0,
+                tokens: tokens.clone(),
+                labels: labels.clone(),
+                lr: 5e-3,
+                prox_mu: mu,
+                anchor: init.params.clone(),
+            })
+            .unwrap()
+    };
+    let free = run(0.0);
+    let prox = run(50.0);
+    let d_free: f64 = free
+        .params
+        .iter()
+        .zip(&init.params)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let d_prox: f64 = prox
+        .params
+        .iter()
+        .zip(&init.params)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    assert!(d_prox < d_free, "prox {d_prox} !< free {d_free}");
+}

