@@ -3,13 +3,19 @@
 //! accumulation, the wire codec's bulk array paths, snapshot compression,
 //! and the crypto primitives. Targets in DESIGN.md §Perf.
 
+use std::sync::Arc;
+
+use florida::client::FloridaClient;
 use florida::codec::{Reader, Wire, Writer};
+use florida::crypto::attest::IntegrityTier;
 use florida::crypto::hkdf;
 use florida::crypto::prg::MaskPrg;
 use florida::crypto::x25519::KeyPair;
 use florida::dp::GaussianMechanism;
 use florida::model::{DeltaAccumulator, ModelSnapshot};
+use florida::proto::Msg;
 use florida::quant::{add_mod, Quantizer};
+use florida::services::FloridaServer;
 use florida::util::{bench, Rng};
 
 fn main() {
@@ -91,6 +97,30 @@ fn main() {
     );
     bench::report(&slow.run_bytes("zlib decompress snapshot", bytes, || {
         std::hint::black_box(ModelSnapshot::from_compressed(&z).unwrap());
+    }));
+
+    bench::section("router_dispatch (typed stub vs direct service call)");
+    // How much the interceptor chain + typed-stub conversions cost on the
+    // hot path, against the bare service body (selection.touch) baseline.
+    let server = Arc::new(FloridaServer::for_testing(false, 1));
+    let stub = FloridaClient::direct(&server);
+    let verdict =
+        server
+            .auth
+            .authority()
+            .issue("bench-dev", IntegrityTier::Device, 1, u64::MAX / 2);
+    let cid = stub
+        .register("bench-dev", verdict, Default::default())
+        .expect("register")
+        .client_id;
+    bench::report(&b.run("service body only (selection.touch)", || {
+        server.selection.touch(cid, 0);
+    }));
+    bench::report(&b.run("handle() → router + interceptor chain", || {
+        std::hint::black_box(server.handle(Msg::Heartbeat { client_id: cid }));
+    }));
+    bench::report(&b.run("typed stub heartbeat (stub + router)", || {
+        stub.heartbeat(cid).expect("heartbeat");
     }));
 
     bench::section("crypto primitives");

@@ -15,12 +15,12 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::client::{RemoteApi, ServerApi};
+use crate::client::FloridaClient;
 use crate::config::{Manifest, TaskConfig};
 use crate::dp::{DpConfig, DpMode, RdpAccountant};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
-use crate::proto::{Msg, WireCodec};
+use crate::proto::WireCodec;
 use crate::services::management::NoEval;
 use crate::services::FloridaServer;
 use crate::simulator::spam::{run_spam, SpamRunConfig};
@@ -289,33 +289,22 @@ fn cmd_status(args: &Args) -> Result<()> {
     } else {
         WireCodec::Binary
     };
-    let api = RemoteApi::connect(&TcpDialer, addr, codec)?;
-    match api.call(Msg::GetTaskStatus { task_id })? {
-        Msg::TaskStatus {
-            task,
-            participants,
-            last_round_duration_ms,
-            last_accuracy,
-            last_loss,
-            epsilon,
-        } => {
-            println!(
-                "task {} {:?} state={} round {}/{}",
-                task.task_id,
-                task.task_name,
-                task.state.name(),
-                task.round,
-                task.total_rounds
-            );
-            println!(
-                "last round: {participants} participants, {last_round_duration_ms} ms, \
-                 loss {last_loss:.4}, acc {last_accuracy:.4}, eps {epsilon:.3}"
-            );
-            Ok(())
-        }
-        Msg::ErrorReply { message } => Err(Error::Task(message)),
-        other => Err(Error::Transport(format!("unexpected reply {other:?}"))),
-    }
+    // Typed stub: a protocol ErrorReply surfaces as Err(Error::Server).
+    let client = FloridaClient::connect(&TcpDialer, addr, codec)?;
+    let st = client.task_status(task_id)?;
+    println!(
+        "task {} {:?} state={} round {}/{}",
+        st.task.task_id,
+        st.task.task_name,
+        st.task.state.name(),
+        st.task.round,
+        st.task.total_rounds
+    );
+    println!(
+        "last round: {} participants, {} ms, loss {:.4}, acc {:.4}, eps {:.3}",
+        st.participants, st.last_round_duration_ms, st.last_loss, st.last_accuracy, st.epsilon
+    );
+    Ok(())
 }
 
 fn cmd_dp_plan(args: &Args) -> Result<()> {

@@ -1,8 +1,14 @@
 //! How the SDK reaches the server: direct (in-process) or remote (wire).
+//!
+//! `ServerApi` is the transport-shaped seam — one `Msg` in, one `Msg`
+//! out. It deliberately does NOT interpret replies: protocol errors
+//! (`ErrorReply`, negative acks) are surfaced as `Err(Error::Server)` by
+//! the typed stub layer ([`crate::client::FloridaClient`]) sitting on
+//! top of any `ServerApi`.
 
 use std::sync::{Arc, Mutex};
 
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::proto::{decode_frame, encode_frame, Msg, WireCodec};
 use crate::services::FloridaServer;
 use crate::transport::{Connection, Dialer};
@@ -46,10 +52,8 @@ impl ServerApi for RemoteApi {
         conn.send(&frame)?;
         let reply = conn.recv()?;
         let (m, _) = decode_frame(&reply)?;
-        if let Msg::ErrorReply { ref message } = m {
-            // Surface protocol-level errors but let callers inspect too.
-            log::debug!("server error reply: {message}");
-        }
+        // An `ErrorReply` passes through untouched: the stub layer turns
+        // it into `Err(Error::Server)`. Transport stays interpretation-free.
         Ok(m)
     }
 }
@@ -59,11 +63,4 @@ pub fn direct(server: &Arc<FloridaServer>) -> Box<dyn ServerApi> {
     Box::new(DirectApi {
         server: Arc::clone(server),
     })
-}
-
-impl Error {
-    /// Helper for SDK call sites expecting a specific reply shape.
-    pub fn unexpected_reply(m: &Msg) -> Error {
-        Error::Transport(format!("unexpected reply {m:?}"))
-    }
 }

@@ -9,18 +9,20 @@
 
 pub mod api;
 pub mod secagg_participant;
+pub mod stub;
 
 use crate::crypto::attest::Verdict;
 use crate::crypto::x25519::KeyPair;
 use crate::dp::{DpConfig, GaussianMechanism};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
-use crate::proto::{Msg, RoundRole};
+use crate::proto::{rpc, RoundRole};
 use crate::quant::Quantizer;
 use crate::util::Rng;
 
 pub use api::{DirectApi, RemoteApi, ServerApi};
 pub use secagg_participant::SecAggParticipant;
+pub use stub::FloridaClient;
 
 /// What local training produced.
 #[derive(Clone, Debug)]
@@ -68,7 +70,7 @@ pub struct ExecutionReport {
 
 /// The device-side client.
 pub struct FederatedLearningClient {
-    api: Box<dyn ServerApi>,
+    stub: FloridaClient,
     device_id: String,
     verdict: Verdict,
     caps: crate::proto::DeviceCaps,
@@ -91,7 +93,7 @@ impl FederatedLearningClient {
         seed: u64,
     ) -> FederatedLearningClient {
         FederatedLearningClient {
-            api,
+            stub: FloridaClient::new(api),
             device_id: device_id.to_string(),
             verdict,
             caps,
@@ -109,40 +111,23 @@ impl FederatedLearningClient {
 
     /// Attest + register with the selection service.
     pub fn register(&mut self) -> Result<u64> {
-        let reply = self.api.call(Msg::Register {
-            device_id: self.device_id.clone(),
-            verdict: self.verdict.clone(),
-            caps: self.caps.clone(),
-        })?;
-        match reply {
-            Msg::RegisterAck {
-                accepted: true,
-                client_id,
-                ..
-            } => {
-                self.client_id = client_id;
-                Ok(client_id)
-            }
-            Msg::RegisterAck {
-                accepted: false,
-                reason,
-                ..
-            } => Err(Error::Attestation(reason)),
-            other => Err(Error::Transport(format!("unexpected reply {other:?}"))),
+        let ack =
+            self.stub
+                .register(&self.device_id, self.verdict.clone(), self.caps.clone())?;
+        if ack.accepted {
+            self.client_id = ack.client_id;
+            Ok(ack.client_id)
+        } else {
+            Err(Error::Attestation(ack.reason))
         }
     }
 
     /// Poll for an available task for (app, workflow).
     pub fn poll_task(&mut self, app: &str, workflow: &str) -> Result<Option<u64>> {
-        let reply = self.api.call(Msg::PollTask {
-            client_id: self.client_id,
-            app_name: app.into(),
-            workflow_name: workflow.into(),
-        })?;
-        match reply {
-            Msg::TaskOffer { task } => Ok(task.map(|t| t.task_id)),
-            other => Err(Error::Transport(format!("unexpected reply {other:?}"))),
-        }
+        Ok(self
+            .stub
+            .poll_task(self.client_id, app, workflow)?
+            .map(|t| t.task_id))
     }
 
     /// Run a workflow to completion (the paper's `client.execute(...)`).
@@ -182,35 +167,26 @@ impl FederatedLearningClient {
                 // from the accepted join, so a device that re-enters the
                 // same round (e.g. after a crash) must keep using it.
                 let fresh = KeyPair::generate(&mut self.rng);
-                match self.api.call(Msg::JoinRound {
-                    client_id: self.client_id,
-                    task_id,
-                    dh_pubkey: fresh.public().0,
-                })? {
-                    Msg::JoinAck { accepted: true, .. } => {
-                        kp = fresh;
-                        joined = true;
+                let ack = self
+                    .stub
+                    .join_round(self.client_id, task_id, fresh.public().0)?;
+                if ack.accepted {
+                    kp = fresh;
+                    joined = true;
+                } else {
+                    if ack.reason.contains("criteria") {
+                        return Err(Error::Task(ack.reason));
                     }
-                    Msg::JoinAck { accepted: false, reason } => {
-                        if reason.contains("criteria") {
-                            return Err(Error::Task(reason));
-                        }
-                        // Task completed/cancelled → FetchRound will report
-                        // TaskDone. Already-joined: keep the OLD keypair.
-                        joined = reason.contains("already joined");
-                    }
-                    other => {
-                        return Err(Error::Transport(format!("unexpected reply {other:?}")))
-                    }
+                    // Task completed/cancelled → FetchRound will report
+                    // TaskDone. Already-joined: keep the OLD keypair.
+                    joined = ack.reason.contains("already joined");
                 }
             }
-            let role = match self.api.call(Msg::FetchRound {
-                client_id: self.client_id,
-                task_id,
-            })? {
-                Msg::RoundPlan { role } => role,
-                Msg::ErrorReply { message } => return Err(Error::Task(message)),
-                other => return Err(Error::Transport(format!("unexpected reply {other:?}"))),
+            let role = match self.stub.fetch_round(self.client_id, task_id) {
+                Ok(role) => role,
+                // Protocol-level refusal (unknown task, …) is a task error.
+                Err(Error::Server(message)) => return Err(Error::Task(message)),
+                Err(e) => return Err(e),
             };
             match role {
                 RoundRole::TaskDone => {
@@ -242,12 +218,11 @@ impl FederatedLearningClient {
                         .unwrap_or(&kp);
                     let participant = SecAggParticipant::new(task_id, req.round, round_kp);
                     let shares = participant.answer_unmask(&req, self.client_id)?;
-                    self.api.call(Msg::UnmaskResponse {
-                        client_id: self.client_id,
-                        task_id,
-                        round: req.round,
-                        shares,
-                    })?;
+                    tolerate_rejection(
+                        self.stub
+                            .unmask_response(self.client_id, task_id, req.round, shares),
+                        "unmask response",
+                    )?;
                     self.sleep();
                 }
                 RoundRole::Train(ri) => {
@@ -266,12 +241,11 @@ impl FederatedLearningClient {
                         let participant = SecAggParticipant::new(task_id, ri.round, &kp);
                         let shares =
                             participant.make_shares(setup, self.client_id, &mut self.rng)?;
-                        self.api.call(Msg::SecAggShares {
-                            client_id: self.client_id,
-                            task_id,
-                            round: ri.round,
-                            shares,
-                        })?;
+                        tolerate_rejection(
+                            self.stub
+                                .secagg_shares(self.client_id, task_id, ri.round, shares),
+                            "secagg shares",
+                        )?;
                     }
                     let model = ModelSnapshot::from_compressed(&ri.model_blob)?;
                     let outcome =
@@ -295,17 +269,14 @@ impl FederatedLearningClient {
                             let quant = Quantizer::new(setup.quant_range, setup.quant_bits)?;
                             let masked =
                                 participant.mask_update(setup, self.client_id, &quant, &delta);
-                            matches!(
-                                self.api.call(Msg::UploadMasked {
-                                    client_id: self.client_id,
-                                    task_id,
-                                    round: ri.round,
-                                    vg_id: setup.vg_id,
-                                    masked,
-                                    loss: outcome.loss,
-                                })?,
-                                Msg::Ack { ok: true, .. }
-                            )
+                            upload_outcome(self.stub.upload_masked(rpc::UploadMasked {
+                                client_id: self.client_id,
+                                task_id,
+                                round: ri.round,
+                                vg_id: setup.vg_id,
+                                masked,
+                                loss: outcome.loss,
+                            }))?
                         }
                     };
                     if accepted {
@@ -327,24 +298,49 @@ impl FederatedLearningClient {
         delta: Vec<f32>,
         outcome: &TrainOutcome,
     ) -> Result<bool> {
-        Ok(matches!(
-            self.api.call(Msg::UploadPlain {
-                client_id: self.client_id,
-                task_id,
-                round: ri.round,
-                base_version: model.version,
-                delta,
-                weight: outcome.weight,
-                loss: outcome.loss,
-            })?,
-            Msg::Ack { ok: true, .. }
-        ))
+        upload_outcome(self.stub.upload_plain(rpc::UploadPlain {
+            client_id: self.client_id,
+            task_id,
+            round: ri.round,
+            base_version: model.version,
+            delta,
+            weight: outcome.weight,
+            loss: outcome.loss,
+        }))
     }
 
     fn sleep(&self) {
         if self.poll_sleep_ms > 0 {
             std::thread::sleep(std::time::Duration::from_millis(self.poll_sleep_ms));
         }
+    }
+}
+
+/// Map an upload result: accepted → `true`, server-side rejection
+/// (stale round, deadline missed, …) → `false` so the protocol loop can
+/// record it and move on; transport failures stay fatal.
+fn upload_outcome(r: Result<()>) -> Result<bool> {
+    match r {
+        Ok(()) => Ok(true),
+        Err(Error::Server(reason)) => {
+            log::debug!("upload rejected: {reason}");
+            Ok(false)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Best-effort protocol steps (share deposit, unmask duty): a server
+/// rejection means the round moved on without us — log and continue;
+/// transport failures stay fatal.
+fn tolerate_rejection(r: Result<()>, what: &str) -> Result<()> {
+    match r {
+        Ok(()) => Ok(()),
+        Err(Error::Server(reason)) => {
+            log::debug!("{what} rejected: {reason}");
+            Ok(())
+        }
+        Err(e) => Err(e),
     }
 }
 

@@ -1,0 +1,144 @@
+//! Typed client stubs over any [`ServerApi`].
+//!
+//! `FloridaClient` is the generated-stub equivalent of the paper's
+//! gRPC surface: one method per RPC, typed request in, typed reply out.
+//! Protocol errors are never silently dropped — an `ErrorReply` or a
+//! negative `Ack` surfaces as [`Error::Server`] from every method.
+
+use std::sync::Arc;
+
+use crate::crypto::attest::Verdict;
+use crate::error::Result;
+use crate::proto::msg::{PeerShare, RecoveredShare};
+use crate::proto::rpc::{self, Reply, Rpc};
+use crate::proto::{DeviceCaps, RoundRole, TaskDescriptor, WireCodec};
+use crate::services::FloridaServer;
+use crate::transport::Dialer;
+
+use super::api::{DirectApi, RemoteApi, ServerApi};
+
+/// Typed stub layer over a transport-shaped [`ServerApi`].
+pub struct FloridaClient {
+    api: Box<dyn ServerApi>,
+}
+
+impl FloridaClient {
+    /// Wrap an existing transport (direct, remote, or a test double).
+    pub fn new(api: Box<dyn ServerApi>) -> FloridaClient {
+        FloridaClient { api }
+    }
+
+    /// Zero-serialization stub for an in-process server.
+    pub fn direct(server: &Arc<FloridaServer>) -> FloridaClient {
+        FloridaClient::new(Box::new(DirectApi {
+            server: Arc::clone(server),
+        }))
+    }
+
+    /// Dial a served platform over any transport/codec.
+    pub fn connect(dialer: &dyn Dialer, addr: &str, codec: WireCodec) -> Result<FloridaClient> {
+        Ok(FloridaClient::new(Box::new(RemoteApi::connect(
+            dialer, addr, codec,
+        )?)))
+    }
+
+    /// Generic typed call: any [`Rpc`] request to its typed reply.
+    pub fn call<R: Rpc>(&self, req: R) -> Result<R::Reply> {
+        R::Reply::from_msg(self.api.call(req.into_msg())?)
+    }
+
+    // ---- one stub method per RPC -----------------------------------------
+
+    pub fn register(
+        &self,
+        device_id: &str,
+        verdict: Verdict,
+        caps: DeviceCaps,
+    ) -> Result<rpc::RegisterAck> {
+        self.call(rpc::Register {
+            device_id: device_id.to_string(),
+            verdict,
+            caps,
+        })
+    }
+
+    pub fn poll_task(
+        &self,
+        client_id: u64,
+        app_name: &str,
+        workflow_name: &str,
+    ) -> Result<Option<TaskDescriptor>> {
+        Ok(self
+            .call(rpc::PollTask {
+                client_id,
+                app_name: app_name.to_string(),
+                workflow_name: workflow_name.to_string(),
+            })?
+            .task)
+    }
+
+    pub fn join_round(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        dh_pubkey: [u8; 32],
+    ) -> Result<rpc::JoinAck> {
+        self.call(rpc::JoinRound {
+            client_id,
+            task_id,
+            dh_pubkey,
+        })
+    }
+
+    pub fn fetch_round(&self, client_id: u64, task_id: u64) -> Result<RoundRole> {
+        self.call(rpc::FetchRound { client_id, task_id })
+    }
+
+    pub fn secagg_shares(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        shares: Vec<PeerShare>,
+    ) -> Result<()> {
+        self.call(rpc::SecAggShares {
+            client_id,
+            task_id,
+            round,
+            shares,
+        })
+        .map(|_| ())
+    }
+
+    pub fn upload_plain(&self, req: rpc::UploadPlain) -> Result<()> {
+        self.call(req).map(|_| ())
+    }
+
+    pub fn upload_masked(&self, req: rpc::UploadMasked) -> Result<()> {
+        self.call(req).map(|_| ())
+    }
+
+    pub fn unmask_response(
+        &self,
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        shares: Vec<RecoveredShare>,
+    ) -> Result<()> {
+        self.call(rpc::UnmaskResponse {
+            client_id,
+            task_id,
+            round,
+            shares,
+        })
+        .map(|_| ())
+    }
+
+    pub fn task_status(&self, task_id: u64) -> Result<rpc::TaskStatus> {
+        self.call(rpc::GetTaskStatus { task_id })
+    }
+
+    pub fn heartbeat(&self, client_id: u64) -> Result<()> {
+        self.call(rpc::Heartbeat { client_id }).map(|_| ())
+    }
+}

@@ -9,6 +9,12 @@ pub enum Error {
     #[error("transport error: {0}")]
     Transport(String),
 
+    /// The server answered with a protocol-level error (`ErrorReply`) or
+    /// a negative acknowledgement (`Ack { ok: false }`). Raised by the
+    /// typed stub layer so protocol errors are never silently dropped.
+    #[error("server error: {0}")]
+    Server(String),
+
     /// Wire-format decode failure.
     #[error("codec error: {0}")]
     Codec(String),
@@ -63,6 +69,13 @@ impl From<xla::Error> for Error {
 impl From<String> for Error {
     fn from(s: String) -> Self {
         Error::Other(s)
+    }
+}
+
+impl Error {
+    /// Helper for stub call sites expecting a specific reply shape.
+    pub fn unexpected_reply(m: &crate::proto::Msg) -> Error {
+        Error::Transport(format!("unexpected reply {m:?}"))
     }
 }
 

@@ -1,10 +1,19 @@
 //! Project Florida — reproduction of "Project Florida: Federated Learning
 //! Made Easy" (Microsoft, 2023) as a three-layer rust + JAX + Pallas stack.
 //!
-//! Layer 3 (this crate): the Florida platform — management service,
-//! selection service, two-stage secure aggregation (virtual groups +
-//! master aggregator), authentication/attestation, client SDK, transports,
-//! differential privacy, and a multi-client device simulator.
+//! Layer 3 (this crate): the Florida platform, organised FLaaS-style
+//! around a typed service router (`services::router`): four services —
+//! registration, task orchestration, aggregation ingest, admin — are
+//! dispatched through an ordered interceptor chain (auth → per-RPC
+//! metrics → backpressure), and clients talk to them through typed
+//! stubs (`client::FloridaClient`) generated over the `proto::rpc`
+//! request/reply pairs, so protocol errors surface as `Err(Error::
+//! Server)` instead of raw `Msg` pattern matches. Beneath the router:
+//! the management service, selection service, two-stage secure
+//! aggregation (virtual groups + master aggregator), authentication/
+//! attestation, the client SDK, transports, differential privacy, and
+//! a multi-client device simulator. See `docs/architecture.md` for the
+//! topology and client round state machine.
 //!
 //! Layer 2 (python/compile/model.py, build-time only): the on-device
 //! compute — a BERT-tiny-class transformer classifier fwd/bwd lowered via

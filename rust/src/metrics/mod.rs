@@ -1,5 +1,10 @@
-//! Metrics (§3.3.1 "Metrics" view): per-round records, export, and the
-//! text dashboard rendering used by the CLI task view.
+//! Metrics (§3.3.1 "Metrics" view): per-round records, export, the
+//! text dashboard rendering used by the CLI task view, and per-RPC
+//! service counters fed by the router's interceptor chain ([`rpc`]).
+
+pub mod rpc;
+
+pub use rpc::{RpcMetrics, RpcStat};
 
 use crate::util::json::Json;
 

@@ -1,0 +1,145 @@
+//! Per-RPC server metrics, fed by the router's `MetricsInterceptor`
+//! (§3.3.1 "Metrics" view, service-level drill-down): call counts,
+//! error counts, and latency per wire method.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Aggregate statistics for one RPC method.
+#[derive(Clone, Debug, Default)]
+pub struct RpcStat {
+    /// Requests that reached the metrics interceptor (admitted by auth).
+    pub calls: u64,
+    /// Replies that were protocol errors (`ErrorReply`, negative acks).
+    pub errors: u64,
+    pub total_ns: u128,
+    pub max_ns: u128,
+}
+
+impl RpcStat {
+    pub fn mean_ns(&self) -> f64 {
+        if self.calls == 0 {
+            return 0.0;
+        }
+        self.total_ns as f64 / self.calls as f64
+    }
+}
+
+/// Thread-safe per-method RPC counters. One instance per server,
+/// shared with the router's interceptor chain.
+#[derive(Debug, Default)]
+pub struct RpcMetrics {
+    inner: Mutex<HashMap<&'static str, RpcStat>>,
+}
+
+impl RpcMetrics {
+    /// Record one completed dispatch for `method`.
+    pub fn record(&self, method: &'static str, elapsed: Duration, error: bool) {
+        let ns = elapsed.as_nanos();
+        let mut g = self.inner.lock().unwrap();
+        let s = g.entry(method).or_default();
+        s.calls += 1;
+        if error {
+            s.errors += 1;
+        }
+        s.total_ns += ns;
+        s.max_ns = s.max_ns.max(ns);
+    }
+
+    /// Snapshot of one method's counters (`None` if never called).
+    pub fn get(&self, method: &str) -> Option<RpcStat> {
+        self.inner.lock().unwrap().get(method).cloned()
+    }
+
+    /// Total calls across all methods.
+    pub fn total_calls(&self) -> u64 {
+        self.inner.lock().unwrap().values().map(|s| s.calls).sum()
+    }
+
+    /// Sorted (method, stat) snapshot for dashboards/exports.
+    pub fn snapshot(&self) -> Vec<(&'static str, RpcStat)> {
+        let mut v: Vec<(&'static str, RpcStat)> = self
+            .inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (*k, s.clone()))
+            .collect();
+        v.sort_by_key(|(k, _)| *k);
+        v
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (method, s) in self.snapshot() {
+            obj = obj.set(
+                method,
+                Json::obj()
+                    .set("calls", s.calls)
+                    .set("errors", s.errors)
+                    .set("mean_us", s.mean_ns() / 1e3)
+                    .set("max_us", s.max_ns as f64 / 1e3),
+            );
+        }
+        obj
+    }
+
+    /// Aligned text table (CLI service view).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "method            calls   errors   mean(us)    max(us)\n",
+        );
+        for (method, s) in self.snapshot() {
+            out.push_str(&format!(
+                "{:<16} {:>6}  {:>7}  {:>9.1}  {:>9.1}\n",
+                method,
+                s.calls,
+                s.errors,
+                s.mean_ns() / 1e3,
+                s.max_ns as f64 / 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_counts_errors_and_latency() {
+        let m = RpcMetrics::default();
+        m.record("poll_task", Duration::from_micros(10), false);
+        m.record("poll_task", Duration::from_micros(30), true);
+        m.record("register", Duration::from_micros(5), false);
+        let s = m.get("poll_task").unwrap();
+        assert_eq!(s.calls, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.max_ns, 30_000);
+        assert!((s.mean_ns() - 20_000.0).abs() < 1.0);
+        assert_eq!(m.total_calls(), 3);
+        assert!(m.get("fetch_round").is_none());
+    }
+
+    #[test]
+    fn snapshot_sorted_and_renders() {
+        let m = RpcMetrics::default();
+        m.record("upload_plain", Duration::from_micros(1), false);
+        m.record("register", Duration::from_micros(1), false);
+        let snap = m.snapshot();
+        assert_eq!(snap[0].0, "register");
+        assert_eq!(snap[1].0, "upload_plain");
+        let text = m.render();
+        assert!(text.contains("upload_plain"));
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("register").unwrap().req_usize("calls").unwrap(),
+            1
+        );
+    }
+}

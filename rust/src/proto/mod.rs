@@ -1,6 +1,7 @@
 //! Platform protocol: core datatypes shared by services, SDK and wire.
 
 pub mod msg;
+pub mod rpc;
 
 use crate::codec::{Reader, Wire, Writer};
 use crate::crypto::attest::{IntegrityTier, Verdict};

@@ -1,0 +1,459 @@
+//! Typed RPC layer over the [`Msg`] wire enum.
+//!
+//! Each client→server request variant is paired with its typed reply
+//! (`Register → RegisterAck`, `PollTask → TaskOffer`, …) through the
+//! [`Rpc`] trait. Conversions typed → [`Msg`] are infallible in both
+//! directions; extraction of a typed reply from a wire message is where
+//! protocol errors surface: [`Reply::from_msg`] turns `ErrorReply` and
+//! `Ack { ok: false }` into [`Error::Server`], so a server-side failure
+//! can never be silently dropped by a caller again.
+//!
+//! The router ([`crate::services::router`]) uses [`method_of`] /
+//! [`client_id_of`] to name and authenticate requests without decoding
+//! them twice; the client stubs ([`crate::client::FloridaClient`]) use
+//! `Rpc::into_msg` + `Reply::from_msg` to expose a typed API over any
+//! [`crate::client::ServerApi`].
+
+use crate::crypto::attest::Verdict;
+use crate::error::{Error, Result};
+
+use super::msg::{Msg, PeerShare, RecoveredShare};
+use super::{DeviceCaps, RoundRole, TaskDescriptor};
+
+/// A typed server→client reply.
+pub trait Reply: Sized + Send {
+    /// Infallible conversion back onto the wire enum.
+    fn into_msg(self) -> Msg;
+    /// Extract the typed reply. `ErrorReply` becomes
+    /// [`Error::Server`]; any other variant is a transport-level
+    /// protocol violation.
+    fn from_msg(m: Msg) -> Result<Self>;
+}
+
+/// A typed client→server request, paired with its reply type.
+pub trait Rpc: Sized + Send {
+    type Reply: Reply;
+    /// Wire method name (per-RPC metrics, routing, logs).
+    const METHOD: &'static str;
+    /// Infallible conversion onto the wire enum.
+    fn into_msg(self) -> Msg;
+    /// Recover the typed request from a wire message (`None` when the
+    /// message is a different variant).
+    fn from_msg(m: Msg) -> Option<Self>;
+}
+
+fn reply_err(m: Msg) -> Error {
+    match m {
+        Msg::ErrorReply { message } => Error::Server(message),
+        other => Error::unexpected_reply(&other),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+macro_rules! request {
+    ($(#[$doc:meta])* $req:ident { $($f:ident : $t:ty),* $(,)? } => $reply:ty, $method:literal) => {
+        $(#[$doc])*
+        #[derive(Clone, Debug, PartialEq)]
+        pub struct $req {
+            $(pub $f: $t),*
+        }
+
+        impl Rpc for $req {
+            type Reply = $reply;
+            const METHOD: &'static str = $method;
+
+            fn into_msg(self) -> Msg {
+                Msg::$req { $($f: self.$f),* }
+            }
+
+            fn from_msg(m: Msg) -> Option<Self> {
+                match m {
+                    Msg::$req { $($f),* } => Some($req { $($f),* }),
+                    _ => None,
+                }
+            }
+        }
+
+        impl From<$req> for Msg {
+            fn from(r: $req) -> Msg {
+                r.into_msg()
+            }
+        }
+    };
+}
+
+request!(
+    /// Attest + register a device with the selection service.
+    Register {
+        device_id: String,
+        verdict: Verdict,
+        caps: DeviceCaps,
+    } => RegisterAck,
+    "register"
+);
+
+request!(
+    /// Ask for an available task for (app, workflow).
+    PollTask {
+        client_id: u64,
+        app_name: String,
+        workflow_name: String,
+    } => TaskOffer,
+    "poll_task"
+);
+
+request!(
+    /// Volunteer for the task's next round with a per-round DH pubkey.
+    JoinRound {
+        client_id: u64,
+        task_id: u64,
+        dh_pubkey: [u8; 32],
+    } => JoinAck,
+    "join_round"
+);
+
+request!(
+    /// Poll the current round obligation.
+    FetchRound {
+        client_id: u64,
+        task_id: u64,
+    } => RoundRole,
+    "fetch_round"
+);
+
+request!(
+    /// Deposit encrypted Shamir shares for the virtual group.
+    SecAggShares {
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        shares: Vec<PeerShare>,
+    } => Ack,
+    "secagg_shares"
+);
+
+request!(
+    /// Plaintext model-delta upload.
+    UploadPlain {
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        base_version: u64,
+        delta: Vec<f32>,
+        weight: f64,
+        loss: f64,
+    } => Ack,
+    "upload_plain"
+);
+
+request!(
+    /// Masked (secure-aggregation) upload.
+    UploadMasked {
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        vg_id: u32,
+        masked: Vec<u32>,
+        loss: f64,
+    } => Ack,
+    "upload_masked"
+);
+
+request!(
+    /// Return recovered shares of dropped peers.
+    UnmaskResponse {
+        client_id: u64,
+        task_id: u64,
+        round: u64,
+        shares: Vec<RecoveredShare>,
+    } => Ack,
+    "unmask_response"
+);
+
+request!(
+    /// Admin/status query for a task.
+    GetTaskStatus { task_id: u64 } => TaskStatus,
+    "get_task_status"
+);
+
+request!(
+    /// Liveness ping keeping the device's registry entry fresh.
+    Heartbeat { client_id: u64 } => Ack,
+    "heartbeat"
+);
+
+// ---------------------------------------------------------------------------
+// Replies
+// ---------------------------------------------------------------------------
+
+/// Registration outcome. `accepted: false` keeps the structured reason
+/// (the SDK maps it to `Error::Attestation`); only `ErrorReply` is an
+/// `Err` at this layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegisterAck {
+    pub accepted: bool,
+    pub client_id: u64,
+    pub reason: String,
+}
+
+impl Reply for RegisterAck {
+    fn into_msg(self) -> Msg {
+        Msg::RegisterAck {
+            accepted: self.accepted,
+            client_id: self.client_id,
+            reason: self.reason,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::RegisterAck {
+                accepted,
+                client_id,
+                reason,
+            } => Ok(RegisterAck {
+                accepted,
+                client_id,
+                reason,
+            }),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+/// The advertised task, if any matched the poll.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskOffer {
+    pub task: Option<TaskDescriptor>,
+}
+
+impl Reply for TaskOffer {
+    fn into_msg(self) -> Msg {
+        Msg::TaskOffer { task: self.task }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::TaskOffer { task } => Ok(TaskOffer { task }),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+/// Join outcome. Like [`RegisterAck`], a structured refusal is data the
+/// SDK inspects ("already joined", criteria failures), not an `Err`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JoinAck {
+    pub accepted: bool,
+    pub reason: String,
+}
+
+impl Reply for JoinAck {
+    fn into_msg(self) -> Msg {
+        Msg::JoinAck {
+            accepted: self.accepted,
+            reason: self.reason,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::JoinAck { accepted, reason } => Ok(JoinAck { accepted, reason }),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+impl Reply for RoundRole {
+    fn into_msg(self) -> Msg {
+        Msg::RoundPlan { role: self }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::RoundPlan { role } => Ok(role),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+/// Positive acknowledgement. A wire `Ack { ok: false }` never reaches
+/// callers as a value — `from_msg` converts it to [`Error::Server`], so
+/// a rejected upload/share/unmask is always an observable `Err`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ack {
+    pub reason: String,
+}
+
+impl Reply for Ack {
+    fn into_msg(self) -> Msg {
+        Msg::Ack {
+            ok: true,
+            reason: self.reason,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::Ack { ok: true, reason } => Ok(Ack { reason }),
+            Msg::Ack { ok: false, reason } => Err(Error::Server(reason)),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+/// Task status snapshot (admin surface).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskStatus {
+    pub task: TaskDescriptor,
+    pub participants: u64,
+    pub last_round_duration_ms: u64,
+    pub last_accuracy: f64,
+    pub last_loss: f64,
+    pub epsilon: f64,
+}
+
+impl Reply for TaskStatus {
+    fn into_msg(self) -> Msg {
+        Msg::TaskStatus {
+            task: self.task,
+            participants: self.participants,
+            last_round_duration_ms: self.last_round_duration_ms,
+            last_accuracy: self.last_accuracy,
+            last_loss: self.last_loss,
+            epsilon: self.epsilon,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::TaskStatus {
+                task,
+                participants,
+                last_round_duration_ms,
+                last_accuracy,
+                last_loss,
+                epsilon,
+            } => Ok(TaskStatus {
+                task,
+                participants,
+                last_round_duration_ms,
+                last_accuracy,
+                last_loss,
+                epsilon,
+            }),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire-message introspection used by the router
+// ---------------------------------------------------------------------------
+
+/// Wire method name of a client→server request; `None` for server→client
+/// replies (which no service handles).
+pub fn method_of(m: &Msg) -> Option<&'static str> {
+    Some(match m {
+        Msg::Register { .. } => Register::METHOD,
+        Msg::PollTask { .. } => PollTask::METHOD,
+        Msg::JoinRound { .. } => JoinRound::METHOD,
+        Msg::FetchRound { .. } => FetchRound::METHOD,
+        Msg::SecAggShares { .. } => SecAggShares::METHOD,
+        Msg::UploadPlain { .. } => UploadPlain::METHOD,
+        Msg::UploadMasked { .. } => UploadMasked::METHOD,
+        Msg::UnmaskResponse { .. } => UnmaskResponse::METHOD,
+        Msg::GetTaskStatus { .. } => GetTaskStatus::METHOD,
+        Msg::Heartbeat { .. } => Heartbeat::METHOD,
+        _ => return None,
+    })
+}
+
+/// The registered client a request claims to act as. `None` for
+/// pre-registration (`Register`) and admin (`GetTaskStatus`) requests,
+/// and for server→client messages.
+pub fn client_id_of(m: &Msg) -> Option<u64> {
+    match m {
+        Msg::PollTask { client_id, .. }
+        | Msg::JoinRound { client_id, .. }
+        | Msg::FetchRound { client_id, .. }
+        | Msg::SecAggShares { client_id, .. }
+        | Msg::UploadPlain { client_id, .. }
+        | Msg::UploadMasked { client_id, .. }
+        | Msg::UnmaskResponse { client_id, .. }
+        | Msg::Heartbeat { client_id } => Some(*client_id),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips_through_msg() {
+        let req = FetchRound {
+            client_id: 7,
+            task_id: 3,
+        };
+        let msg = req.clone().into_msg();
+        assert_eq!(method_of(&msg), Some("fetch_round"));
+        assert_eq!(client_id_of(&msg), Some(7));
+        assert_eq!(FetchRound::from_msg(msg), Some(req));
+    }
+
+    #[test]
+    fn reply_extraction_is_typed() {
+        let role = RoundRole::Wait;
+        let msg = role.clone().into_msg();
+        assert_eq!(RoundRole::from_msg(msg).unwrap(), RoundRole::Wait);
+        // Wrong variant → transport error, not a panic.
+        assert!(RoundRole::from_msg(Msg::TaskOffer { task: None }).is_err());
+    }
+
+    #[test]
+    fn error_reply_becomes_err_server() {
+        let e = Ack::from_msg(Msg::ErrorReply {
+            message: "boom".into(),
+        })
+        .unwrap_err();
+        assert!(matches!(e, Error::Server(ref m) if m == "boom"));
+    }
+
+    #[test]
+    fn negative_ack_becomes_err_server() {
+        let e = Ack::from_msg(Msg::Ack {
+            ok: false,
+            reason: "stale round".into(),
+        })
+        .unwrap_err();
+        assert!(matches!(e, Error::Server(ref m) if m == "stale round"));
+        assert!(Ack::from_msg(Msg::Ack {
+            ok: true,
+            reason: String::new(),
+        })
+        .is_ok());
+    }
+
+    #[test]
+    fn server_to_client_messages_have_no_method() {
+        assert_eq!(method_of(&Msg::TaskOffer { task: None }), None);
+        assert_eq!(client_id_of(&Msg::GetTaskStatus { task_id: 1 }), None);
+        assert_eq!(
+            client_id_of(&Msg::Register {
+                device_id: "d".into(),
+                verdict: crate::crypto::attest::Authority::new(b"k").issue(
+                    "d",
+                    crate::crypto::attest::IntegrityTier::Device,
+                    1,
+                    2
+                ),
+                caps: DeviceCaps::default(),
+            }),
+            None
+        );
+    }
+}

@@ -1,11 +1,15 @@
 //! Back-end services (§3.1): Authentication, Selection, Secure Aggregator,
 //! Master Aggregator, and the Management Service that orchestrates them.
-//! `server.rs` glues them behind one dispatch surface shared by the
-//! in-process simulator and the TCP/inproc wire transports.
+//! `router.rs` exposes them as four FLaaS-style [`router::Service`]s
+//! behind an ordered interceptor chain (auth → metrics → backpressure);
+//! `server.rs` assembles the platform and keeps `handle()` as a thin
+//! shim over the router, shared by the in-process simulator and the
+//! TCP/inproc wire transports.
 
 pub mod auth;
 pub mod management;
 pub mod master_aggregator;
+pub mod router;
 pub mod secure_aggregator;
 pub mod selection;
 pub mod server;

@@ -1,0 +1,633 @@
+//! Typed service router: the FLaaS dispatch plane.
+//!
+//! Splits the old monolithic `FloridaServer::handle()` match into four
+//! [`Service`] implementations — registration, task orchestration,
+//! aggregation ingest, and admin — dispatched through an ordered
+//! [`Interceptor`] chain:
+//!
+//! 1. [`AuthInterceptor`] — rejects requests that claim an unregistered
+//!    client principal before any service sees them.
+//! 2. [`MetricsInterceptor`] — per-RPC call/error/latency counters into
+//!    [`crate::metrics::RpcMetrics`].
+//! 3. [`BackpressureInterceptor`] — bounds in-flight requests per
+//!    service so one hot surface (e.g. aggregation ingest at scale)
+//!    cannot starve the others.
+//!
+//! Every request — in-process simulator, TCP, inproc — flows through
+//! [`Router::dispatch`]; there is no side door around the chain.
+//! `FloridaServer::handle()` is a thin compatibility shim over it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::metrics::RpcMetrics;
+use crate::proto::{rpc, Msg};
+use crate::services::FloridaServer;
+
+/// Which back-end service owns a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceKind {
+    Registration = 0,
+    Task = 1,
+    AggregationIngest = 2,
+    Admin = 3,
+}
+
+pub const SERVICE_COUNT: usize = 4;
+
+impl ServiceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceKind::Registration => "registration",
+            ServiceKind::Task => "task",
+            ServiceKind::AggregationIngest => "aggregation_ingest",
+            ServiceKind::Admin => "admin",
+        }
+    }
+}
+
+/// Route a request to its owning service; `None` for messages no
+/// service handles (server→client replies bounced back at the server).
+pub fn route(msg: &Msg) -> Option<ServiceKind> {
+    Some(match msg {
+        Msg::Register { .. } | Msg::Heartbeat { .. } => ServiceKind::Registration,
+        Msg::PollTask { .. } | Msg::JoinRound { .. } | Msg::FetchRound { .. } => {
+            ServiceKind::Task
+        }
+        Msg::SecAggShares { .. }
+        | Msg::UploadPlain { .. }
+        | Msg::UploadMasked { .. }
+        | Msg::UnmaskResponse { .. } => ServiceKind::AggregationIngest,
+        Msg::GetTaskStatus { .. } => ServiceKind::Admin,
+        _ => return None,
+    })
+}
+
+/// Per-request context threaded through the interceptor chain.
+pub struct RequestCtx {
+    pub now_ms: u64,
+    pub service: ServiceKind,
+    pub method: &'static str,
+    /// Authenticated client principal, set by [`AuthInterceptor`].
+    pub principal: Option<u64>,
+}
+
+/// One back-end service behind the interceptor chain.
+pub trait Service: Send + Sync {
+    fn kind(&self) -> ServiceKind;
+    /// Handle a routed request. Never panics on bad input; protocol
+    /// errors come back as `Ack { ok: false }` or `ErrorReply`.
+    fn call(&self, srv: &FloridaServer, ctx: &RequestCtx, msg: Msg) -> Msg;
+}
+
+/// A cross-cutting concern wrapped around every service dispatch.
+pub trait Interceptor: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Runs before dispatch, in chain order. `Err` short-circuits: the
+    /// request never reaches the service (nor later interceptors), and
+    /// the error text becomes the `ErrorReply` sent to the client.
+    fn before(&self, srv: &FloridaServer, ctx: &mut RequestCtx, msg: &Msg) -> Result<()>;
+    /// Runs after the reply is produced (or an interceptor rejected),
+    /// in reverse order, only for interceptors whose `before` admitted
+    /// the request — so paired acquire/release stays balanced.
+    fn after(&self, srv: &FloridaServer, ctx: &RequestCtx, reply: &Msg, elapsed: Duration);
+}
+
+// ---------------------------------------------------------------------------
+// Interceptors
+// ---------------------------------------------------------------------------
+
+/// Rejects requests acting as a client principal the selection registry
+/// has never seen. Pre-registration (`Register`) and admin
+/// (`GetTaskStatus`) requests carry no principal and pass through —
+/// their own services validate attestation / task identity.
+pub struct AuthInterceptor;
+
+impl Interceptor for AuthInterceptor {
+    fn name(&self) -> &'static str {
+        "auth"
+    }
+
+    fn before(&self, srv: &FloridaServer, ctx: &mut RequestCtx, msg: &Msg) -> Result<()> {
+        match rpc::client_id_of(msg) {
+            None => Ok(()),
+            Some(id) => {
+                if srv.selection.get(id).is_some() {
+                    ctx.principal = Some(id);
+                    Ok(())
+                } else {
+                    Err(Error::Attestation(format!("unauthenticated client {id}")))
+                }
+            }
+        }
+    }
+
+    fn after(&self, _: &FloridaServer, _: &RequestCtx, _: &Msg, _: Duration) {}
+}
+
+/// Per-RPC call/error/latency accounting.
+pub struct MetricsInterceptor {
+    metrics: Arc<RpcMetrics>,
+}
+
+impl MetricsInterceptor {
+    pub fn new(metrics: Arc<RpcMetrics>) -> MetricsInterceptor {
+        MetricsInterceptor { metrics }
+    }
+}
+
+/// Is this reply a protocol-level failure? Matches the typed-stub
+/// taxonomy: `ErrorReply` and negative `Ack`s are errors; structured
+/// refusals (`RegisterAck`/`JoinAck` with `accepted: false`, e.g.
+/// "already joined") are protocol data, not failures.
+fn is_error_reply(m: &Msg) -> bool {
+    matches!(m, Msg::ErrorReply { .. } | Msg::Ack { ok: false, .. })
+}
+
+impl Interceptor for MetricsInterceptor {
+    fn name(&self) -> &'static str {
+        "metrics"
+    }
+
+    fn before(&self, _: &FloridaServer, _: &mut RequestCtx, _: &Msg) -> Result<()> {
+        Ok(())
+    }
+
+    fn after(&self, _: &FloridaServer, ctx: &RequestCtx, reply: &Msg, elapsed: Duration) {
+        self.metrics.record(ctx.method, elapsed, is_error_reply(reply));
+    }
+}
+
+/// Bounds concurrent in-flight requests per service. Admission happens
+/// in `before`, release in `after`; the router guarantees the pair runs
+/// even when the service or a later rejection produced the reply.
+pub struct BackpressureInterceptor {
+    limit: usize,
+    in_flight: [AtomicUsize; SERVICE_COUNT],
+}
+
+impl BackpressureInterceptor {
+    pub fn new(limit: usize) -> BackpressureInterceptor {
+        BackpressureInterceptor {
+            limit,
+            in_flight: Default::default(),
+        }
+    }
+
+    pub fn in_flight(&self, kind: ServiceKind) -> usize {
+        self.in_flight[kind as usize].load(Ordering::SeqCst)
+    }
+}
+
+impl Interceptor for BackpressureInterceptor {
+    fn name(&self) -> &'static str {
+        "backpressure"
+    }
+
+    fn before(&self, _: &FloridaServer, ctx: &mut RequestCtx, _: &Msg) -> Result<()> {
+        let slot = &self.in_flight[ctx.service as usize];
+        let prev = slot.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.limit {
+            slot.fetch_sub(1, Ordering::SeqCst);
+            return Err(Error::Server(format!(
+                "{} service over capacity ({} in flight)",
+                ctx.service.name(),
+                prev
+            )));
+        }
+        Ok(())
+    }
+
+    fn after(&self, _: &FloridaServer, ctx: &RequestCtx, _: &Msg, _: Duration) {
+        self.in_flight[ctx.service as usize].fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Services
+// ---------------------------------------------------------------------------
+
+fn ack(r: Result<(bool, String)>) -> Msg {
+    match r {
+        Ok((ok, reason)) => Msg::Ack { ok, reason },
+        Err(e) => Msg::Ack {
+            ok: false,
+            reason: e.to_string(),
+        },
+    }
+}
+
+fn unhandled(kind: ServiceKind, msg: &Msg) -> Msg {
+    Msg::ErrorReply {
+        message: format!("{} service cannot handle {msg:?}", kind.name()),
+    }
+}
+
+/// Device registration + liveness (§3.1.5 Authentication, registry side
+/// of §3.1.4 Selection).
+pub struct RegistrationService;
+
+impl Service for RegistrationService {
+    fn kind(&self) -> ServiceKind {
+        ServiceKind::Registration
+    }
+
+    fn call(&self, srv: &FloridaServer, ctx: &RequestCtx, msg: Msg) -> Msg {
+        match msg {
+            Msg::Register {
+                device_id,
+                verdict,
+                caps,
+            } => match srv.auth.validate(&device_id, &verdict, ctx.now_ms) {
+                Ok(()) => {
+                    let id = srv.selection.register(&device_id, caps, ctx.now_ms);
+                    Msg::RegisterAck {
+                        accepted: true,
+                        client_id: id,
+                        reason: String::new(),
+                    }
+                }
+                Err(e) => Msg::RegisterAck {
+                    accepted: false,
+                    client_id: 0,
+                    reason: e.to_string(),
+                },
+            },
+            Msg::Heartbeat { client_id } => {
+                srv.selection.touch(client_id, ctx.now_ms);
+                Msg::Ack {
+                    ok: true,
+                    reason: String::new(),
+                }
+            }
+            other => unhandled(self.kind(), &other),
+        }
+    }
+}
+
+/// Task discovery and round orchestration (§3.1.1 Management front end,
+/// §3.1.4 Selection).
+pub struct TaskService;
+
+impl Service for TaskService {
+    fn kind(&self) -> ServiceKind {
+        ServiceKind::Task
+    }
+
+    fn call(&self, srv: &FloridaServer, ctx: &RequestCtx, msg: Msg) -> Msg {
+        match msg {
+            Msg::PollTask {
+                client_id,
+                app_name,
+                workflow_name,
+            } => {
+                srv.selection.touch(client_id, ctx.now_ms);
+                Msg::TaskOffer {
+                    task: srv.management.advertise(&app_name, &workflow_name),
+                }
+            }
+            Msg::JoinRound {
+                client_id,
+                task_id,
+                dh_pubkey,
+            } => {
+                // Eligibility check against the task's selection criteria.
+                let criteria = srv
+                    .management
+                    .with_task(task_id, |t| Ok(t.config.selection.clone()));
+                let eligible = match criteria {
+                    Ok(c) => srv.selection.eligible(client_id, &c),
+                    Err(e) => Err(e),
+                };
+                match eligible {
+                    Err(e) => Msg::JoinAck {
+                        accepted: false,
+                        reason: e.to_string(),
+                    },
+                    Ok(false) => Msg::JoinAck {
+                        accepted: false,
+                        reason: "device does not meet selection criteria".into(),
+                    },
+                    Ok(true) => {
+                        match srv.management.join(client_id, task_id, dh_pubkey, ctx.now_ms) {
+                            Ok((accepted, reason)) => Msg::JoinAck { accepted, reason },
+                            Err(e) => Msg::JoinAck {
+                                accepted: false,
+                                reason: e.to_string(),
+                            },
+                        }
+                    }
+                }
+            }
+            Msg::FetchRound { client_id, task_id } => {
+                match srv
+                    .management
+                    .fetch_round(client_id, task_id, &srv.selection, ctx.now_ms)
+                {
+                    Ok(role) => Msg::RoundPlan { role },
+                    Err(e) => Msg::ErrorReply {
+                        message: e.to_string(),
+                    },
+                }
+            }
+            other => unhandled(self.kind(), &other),
+        }
+    }
+}
+
+/// Upload ingest: Shamir shares, plaintext and masked deltas, unmask
+/// responses (§3.1.2 Secure Aggregator, §3.1.3 Master Aggregator).
+pub struct AggregationIngest;
+
+impl Service for AggregationIngest {
+    fn kind(&self) -> ServiceKind {
+        ServiceKind::AggregationIngest
+    }
+
+    fn call(&self, srv: &FloridaServer, ctx: &RequestCtx, msg: Msg) -> Msg {
+        match msg {
+            Msg::SecAggShares {
+                client_id,
+                task_id,
+                round,
+                shares,
+            } => ack(srv.management.accept_shares(client_id, task_id, round, shares)),
+            Msg::UploadPlain {
+                client_id,
+                task_id,
+                round,
+                base_version,
+                delta,
+                weight,
+                loss,
+            } => ack(srv.management.accept_plain(
+                client_id,
+                task_id,
+                round,
+                base_version,
+                delta,
+                weight,
+                loss,
+                ctx.now_ms,
+            )),
+            Msg::UploadMasked {
+                client_id,
+                task_id,
+                round,
+                vg_id,
+                masked,
+                loss,
+            } => ack(srv.management.accept_masked(
+                client_id, task_id, round, vg_id, &masked, loss, ctx.now_ms,
+            )),
+            Msg::UnmaskResponse {
+                client_id,
+                task_id,
+                round,
+                shares,
+            } => ack(srv
+                .management
+                .accept_unmask(client_id, task_id, round, shares, ctx.now_ms)),
+            other => unhandled(self.kind(), &other),
+        }
+    }
+}
+
+/// Operator-facing surface: task status (§3.3 dashboard/CLI backing).
+pub struct AdminService;
+
+impl Service for AdminService {
+    fn kind(&self) -> ServiceKind {
+        ServiceKind::Admin
+    }
+
+    fn call(&self, srv: &FloridaServer, _ctx: &RequestCtx, msg: Msg) -> Msg {
+        match msg {
+            Msg::GetTaskStatus { task_id } => match srv.management.task_status(task_id) {
+                Ok((task, metrics, eps)) => {
+                    let last = metrics.last();
+                    Msg::TaskStatus {
+                        task,
+                        participants: last.map(|r| r.participants as u64).unwrap_or(0),
+                        last_round_duration_ms: last.map(|r| r.duration_ms()).unwrap_or(0),
+                        last_accuracy: last.and_then(|r| r.eval_accuracy).unwrap_or(f64::NAN),
+                        last_loss: last.map(|r| r.train_loss).unwrap_or(f64::NAN),
+                        epsilon: eps.unwrap_or(f64::NAN),
+                    }
+                }
+                Err(e) => Msg::ErrorReply {
+                    message: e.to_string(),
+                },
+            },
+            other => unhandled(self.kind(), &other),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// The assembled dispatch plane: four services behind one ordered
+/// interceptor chain.
+pub struct Router {
+    services: [Box<dyn Service>; SERVICE_COUNT],
+    interceptors: Vec<Box<dyn Interceptor>>,
+}
+
+impl Router {
+    /// The production chain: auth → metrics → backpressure.
+    pub fn standard(metrics: Arc<RpcMetrics>, inflight_limit: usize) -> Router {
+        Router {
+            services: [
+                Box::new(RegistrationService),
+                Box::new(TaskService),
+                Box::new(AggregationIngest),
+                Box::new(AdminService),
+            ],
+            interceptors: vec![
+                Box::new(AuthInterceptor),
+                Box::new(MetricsInterceptor::new(metrics)),
+                Box::new(BackpressureInterceptor::new(inflight_limit)),
+            ],
+        }
+    }
+
+    /// Dispatch one request through the full chain. Never panics on bad
+    /// input; unroutable messages get an `ErrorReply`.
+    pub fn dispatch(&self, srv: &FloridaServer, msg: Msg) -> Msg {
+        let service = match route(&msg) {
+            Some(s) => s,
+            None => {
+                return Msg::ErrorReply {
+                    message: format!("unexpected message {msg:?}"),
+                }
+            }
+        };
+        let mut ctx = RequestCtx {
+            now_ms: srv.now_ms(),
+            service,
+            method: rpc::method_of(&msg).unwrap_or("unknown"),
+            principal: None,
+        };
+        let t0 = Instant::now();
+        let mut admitted = 0;
+        let mut rejection = None;
+        for ic in &self.interceptors {
+            match ic.before(srv, &mut ctx, &msg) {
+                Ok(()) => admitted += 1,
+                Err(e) => {
+                    rejection = Some(Msg::ErrorReply {
+                        message: e.to_string(),
+                    });
+                    break;
+                }
+            }
+        }
+        let reply = match rejection {
+            Some(r) => r,
+            None => {
+                debug_assert_eq!(self.services[service as usize].kind(), service);
+                self.services[service as usize].call(srv, &ctx, msg)
+            }
+        };
+        let elapsed = t0.elapsed();
+        for ic in self.interceptors[..admitted].iter().rev() {
+            ic.after(srv, &ctx, &reply, elapsed);
+        }
+        reply
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(service: ServiceKind) -> RequestCtx {
+        RequestCtx {
+            now_ms: 0,
+            service,
+            method: "test",
+            principal: None,
+        }
+    }
+
+    #[test]
+    fn routing_table_covers_all_requests() {
+        assert_eq!(
+            route(&Msg::Heartbeat { client_id: 1 }),
+            Some(ServiceKind::Registration)
+        );
+        assert_eq!(
+            route(&Msg::FetchRound {
+                client_id: 1,
+                task_id: 1
+            }),
+            Some(ServiceKind::Task)
+        );
+        assert_eq!(
+            route(&Msg::UploadMasked {
+                client_id: 1,
+                task_id: 1,
+                round: 0,
+                vg_id: 0,
+                masked: vec![],
+                loss: 0.0
+            }),
+            Some(ServiceKind::AggregationIngest)
+        );
+        assert_eq!(
+            route(&Msg::GetTaskStatus { task_id: 1 }),
+            Some(ServiceKind::Admin)
+        );
+        // Server→client replies are unroutable.
+        assert_eq!(route(&Msg::TaskOffer { task: None }), None);
+        assert_eq!(
+            route(&Msg::ErrorReply {
+                message: String::new()
+            }),
+            None
+        );
+    }
+
+    #[test]
+    fn backpressure_admits_up_to_limit_and_releases() {
+        let srv = FloridaServer::for_testing(false, 1);
+        let bp = BackpressureInterceptor::new(2);
+        let probe = Msg::Heartbeat { client_id: 1 };
+        let mut c1 = ctx(ServiceKind::Registration);
+        let mut c2 = ctx(ServiceKind::Registration);
+        let mut c3 = ctx(ServiceKind::Registration);
+        assert!(bp.before(&srv, &mut c1, &probe).is_ok());
+        assert!(bp.before(&srv, &mut c2, &probe).is_ok());
+        // Third concurrent request to the same service is shed…
+        assert!(bp.before(&srv, &mut c3, &probe).is_err());
+        assert_eq!(bp.in_flight(ServiceKind::Registration), 2);
+        // …but a different service still has capacity.
+        let mut c4 = ctx(ServiceKind::Admin);
+        assert!(bp.before(&srv, &mut c4, &probe).is_ok());
+        // Releases restore capacity.
+        let reply = Msg::Ack {
+            ok: true,
+            reason: String::new(),
+        };
+        bp.after(&srv, &c1, &reply, Duration::ZERO);
+        bp.after(&srv, &c2, &reply, Duration::ZERO);
+        assert_eq!(bp.in_flight(ServiceKind::Registration), 0);
+        assert!(bp.before(&srv, &mut c3, &probe).is_ok());
+    }
+
+    #[test]
+    fn auth_rejects_unknown_principal_and_admits_register() {
+        let srv = FloridaServer::for_testing(false, 2);
+        let mut c = ctx(ServiceKind::Task);
+        let err = AuthInterceptor
+            .before(
+                &srv,
+                &mut c,
+                &Msg::PollTask {
+                    client_id: 99,
+                    app_name: "a".into(),
+                    workflow_name: "w".into(),
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("unauthenticated"));
+        assert_eq!(c.principal, None);
+        // Register carries no principal → admitted.
+        let v = srv
+            .auth
+            .authority()
+            .issue("d", crate::crypto::attest::IntegrityTier::Device, 1, 10);
+        let mut c2 = ctx(ServiceKind::Registration);
+        assert!(AuthInterceptor
+            .before(
+                &srv,
+                &mut c2,
+                &Msg::Register {
+                    device_id: "d".into(),
+                    verdict: v,
+                    caps: Default::default(),
+                }
+            )
+            .is_ok());
+    }
+
+    #[test]
+    fn error_reply_classification() {
+        assert!(is_error_reply(&Msg::ErrorReply {
+            message: "x".into()
+        }));
+        assert!(is_error_reply(&Msg::Ack {
+            ok: false,
+            reason: "r".into()
+        }));
+        assert!(!is_error_reply(&Msg::Ack {
+            ok: true,
+            reason: String::new()
+        }));
+        assert!(!is_error_reply(&Msg::TaskOffer { task: None }));
+    }
+}

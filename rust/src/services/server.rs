@@ -1,9 +1,14 @@
-//! The Florida server: one dispatch surface over all back-end services.
+//! The Florida server: the assembled platform behind one dispatch
+//! surface.
 //!
-//! `handle()` is the single entry point used both by the in-process
-//! simulator (zero-copy direct calls) and the wire path (`serve()` reads
+//! All request handling lives in the typed router
+//! ([`crate::services::router`]): four services dispatched through the
+//! auth → metrics → backpressure interceptor chain. `handle()` is a
+//! thin compatibility shim over [`Router::dispatch`] kept for the
+//! zero-copy in-process simulator path; the wire path (`serve()` reads
 //! frames off a [`crate::transport::Listener`], auto-detecting binary
-//! vs JSON per frame, and replies in kind — the gRPC/REST duality).
+//! vs JSON per frame, and replies in kind — the gRPC/REST duality)
+//! funnels into the same router.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -11,13 +16,18 @@ use std::time::Instant;
 
 use crate::config::TaskConfig;
 use crate::error::Result;
+use crate::metrics::RpcMetrics;
 use crate::model::ModelSnapshot;
 use crate::proto::{decode_frame, encode_frame, Msg};
 use crate::services::auth::AuthService;
 use crate::services::management::{Evaluator, ManagementService, NoEval};
+use crate::services::router::Router;
 use crate::services::selection::SelectionService;
 use crate::transport::Listener;
 use crate::util::ThreadPool;
+
+/// Default bound on concurrent in-flight requests per service.
+pub const DEFAULT_INFLIGHT_LIMIT: usize = 4096;
 
 /// Server clock: real for deployments, manual for deterministic tests.
 pub enum Clock {
@@ -39,31 +49,50 @@ pub struct FloridaServer {
     pub auth: AuthService,
     pub selection: SelectionService,
     pub management: ManagementService,
+    /// Per-RPC counters fed by the router's `MetricsInterceptor`.
+    pub rpc_metrics: Arc<RpcMetrics>,
+    router: Router,
     clock: Clock,
     stopping: AtomicBool,
 }
 
 impl FloridaServer {
-    /// Production-shaped constructor (real clock, attestation required).
-    pub fn new(authority_key: &[u8], evaluator: Arc<dyn Evaluator>, seed: u64) -> FloridaServer {
+    fn assemble(
+        auth: AuthService,
+        selection: SelectionService,
+        management: ManagementService,
+        clock: Clock,
+    ) -> FloridaServer {
+        let rpc_metrics = Arc::new(RpcMetrics::default());
         FloridaServer {
-            auth: AuthService::new(authority_key, true),
-            selection: SelectionService::new(seed ^ 0x5E1),
-            management: ManagementService::new(evaluator, seed),
-            clock: Clock::Real(Instant::now()),
+            router: Router::standard(Arc::clone(&rpc_metrics), DEFAULT_INFLIGHT_LIMIT),
+            auth,
+            selection,
+            management,
+            rpc_metrics,
+            clock,
             stopping: AtomicBool::new(false),
         }
     }
 
+    /// Production-shaped constructor (real clock, attestation required).
+    pub fn new(authority_key: &[u8], evaluator: Arc<dyn Evaluator>, seed: u64) -> FloridaServer {
+        Self::assemble(
+            AuthService::new(authority_key, true),
+            SelectionService::new(seed ^ 0x5E1),
+            ManagementService::new(evaluator, seed),
+            Clock::Real(Instant::now()),
+        )
+    }
+
     /// Test/simulator constructor: manual clock, attestation optional.
     pub fn for_testing(attestation_required: bool, seed: u64) -> FloridaServer {
-        FloridaServer {
-            auth: AuthService::new(b"florida-test-authority", attestation_required),
-            selection: SelectionService::new(seed.wrapping_add(1)),
-            management: ManagementService::new(Arc::new(NoEval), seed),
-            clock: Clock::Manual(AtomicU64::new(0)),
-            stopping: AtomicBool::new(false),
-        }
+        Self::assemble(
+            AuthService::new(b"florida-test-authority", attestation_required),
+            SelectionService::new(seed.wrapping_add(1)),
+            ManagementService::new(Arc::new(NoEval), seed),
+            Clock::Manual(AtomicU64::new(0)),
+        )
     }
 
     /// Like `for_testing` but with a custom evaluator.
@@ -73,17 +102,16 @@ impl FloridaServer {
         seed: u64,
         real_clock: bool,
     ) -> FloridaServer {
-        FloridaServer {
-            auth: AuthService::new(b"florida-test-authority", attestation_required),
-            selection: SelectionService::new(seed.wrapping_add(1)),
-            management: ManagementService::new(evaluator, seed),
-            clock: if real_clock {
+        Self::assemble(
+            AuthService::new(b"florida-test-authority", attestation_required),
+            SelectionService::new(seed.wrapping_add(1)),
+            ManagementService::new(evaluator, seed),
+            if real_clock {
                 Clock::Real(Instant::now())
             } else {
                 Clock::Manual(AtomicU64::new(0))
             },
-            stopping: AtomicBool::new(false),
-        }
+        )
     }
 
     pub fn now_ms(&self) -> u64 {
@@ -105,153 +133,12 @@ impl FloridaServer {
         Ok(id)
     }
 
-    /// Single request/response entry point. Never panics on bad input;
+    /// Single request/response entry point — a thin compatibility shim
+    /// over the typed router, kept so the zero-copy simulator path and
+    /// the wire path share one surface. Never panics on bad input;
     /// protocol errors come back as `Ack{ok:false}` or `ErrorReply`.
     pub fn handle(&self, msg: Msg) -> Msg {
-        let now = self.now_ms();
-        match msg {
-            Msg::Register {
-                device_id,
-                verdict,
-                caps,
-            } => match self.auth.validate(&device_id, &verdict, now) {
-                Ok(()) => {
-                    let id = self.selection.register(&device_id, caps, now);
-                    Msg::RegisterAck {
-                        accepted: true,
-                        client_id: id,
-                        reason: String::new(),
-                    }
-                }
-                Err(e) => Msg::RegisterAck {
-                    accepted: false,
-                    client_id: 0,
-                    reason: e.to_string(),
-                },
-            },
-            Msg::PollTask {
-                client_id,
-                app_name,
-                workflow_name,
-            } => {
-                self.selection.touch(client_id, now);
-                Msg::TaskOffer {
-                    task: self.management.advertise(&app_name, &workflow_name),
-                }
-            }
-            Msg::JoinRound {
-                client_id,
-                task_id,
-                dh_pubkey,
-            } => {
-                // Eligibility check against the task's selection criteria.
-                let criteria = self
-                    .management
-                    .with_task(task_id, |t| Ok(t.config.selection.clone()));
-                let eligible = match criteria {
-                    Ok(c) => self.selection.eligible(client_id, &c),
-                    Err(e) => Err(e),
-                };
-                match eligible {
-                    Err(e) => Msg::JoinAck {
-                        accepted: false,
-                        reason: e.to_string(),
-                    },
-                    Ok(false) => Msg::JoinAck {
-                        accepted: false,
-                        reason: "device does not meet selection criteria".into(),
-                    },
-                    Ok(true) => match self.management.join(client_id, task_id, dh_pubkey, now)
-                    {
-                        Ok((accepted, reason)) => Msg::JoinAck { accepted, reason },
-                        Err(e) => Msg::JoinAck {
-                            accepted: false,
-                            reason: e.to_string(),
-                        },
-                    },
-                }
-            }
-            Msg::FetchRound { client_id, task_id } => {
-                match self
-                    .management
-                    .fetch_round(client_id, task_id, &self.selection, now)
-                {
-                    Ok(role) => Msg::RoundPlan { role },
-                    Err(e) => Msg::ErrorReply {
-                        message: e.to_string(),
-                    },
-                }
-            }
-            Msg::SecAggShares {
-                client_id,
-                task_id,
-                round,
-                shares,
-            } => ack(self.management.accept_shares(client_id, task_id, round, shares)),
-            Msg::UploadPlain {
-                client_id,
-                task_id,
-                round,
-                base_version,
-                delta,
-                weight,
-                loss,
-            } => ack(self.management.accept_plain(
-                client_id,
-                task_id,
-                round,
-                base_version,
-                delta,
-                weight,
-                loss,
-                now,
-            )),
-            Msg::UploadMasked {
-                client_id,
-                task_id,
-                round,
-                vg_id,
-                masked,
-                loss,
-            } => ack(self.management.accept_masked(
-                client_id, task_id, round, vg_id, &masked, loss, now,
-            )),
-            Msg::UnmaskResponse {
-                client_id,
-                task_id,
-                round,
-                shares,
-            } => ack(self
-                .management
-                .accept_unmask(client_id, task_id, round, shares, now)),
-            Msg::GetTaskStatus { task_id } => match self.management.task_status(task_id) {
-                Ok((task, metrics, eps)) => {
-                    let last = metrics.last();
-                    Msg::TaskStatus {
-                        task,
-                        participants: last.map(|r| r.participants as u64).unwrap_or(0),
-                        last_round_duration_ms: last.map(|r| r.duration_ms()).unwrap_or(0),
-                        last_accuracy: last.and_then(|r| r.eval_accuracy).unwrap_or(f64::NAN),
-                        last_loss: last.map(|r| r.train_loss).unwrap_or(f64::NAN),
-                        epsilon: eps.unwrap_or(f64::NAN),
-                    }
-                }
-                Err(e) => Msg::ErrorReply {
-                    message: e.to_string(),
-                },
-            },
-            Msg::Heartbeat { client_id } => {
-                self.selection.touch(client_id, now);
-                Msg::Ack {
-                    ok: true,
-                    reason: String::new(),
-                }
-            }
-            // A server receiving a server→client message is a protocol error.
-            other => Msg::ErrorReply {
-                message: format!("unexpected message {other:?}"),
-            },
-        }
+        self.router.dispatch(self, msg)
     }
 
     /// Serve connections from a listener until `stop()` — one pooled
@@ -291,16 +178,6 @@ impl FloridaServer {
 
     pub fn stop(&self) {
         self.stopping.store(true, Ordering::SeqCst);
-    }
-}
-
-fn ack(r: Result<(bool, String)>) -> Msg {
-    match r {
-        Ok((ok, reason)) => Msg::Ack { ok, reason },
-        Err(e) => Msg::Ack {
-            ok: false,
-            reason: e.to_string(),
-        },
     }
 }
 

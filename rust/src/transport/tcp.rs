@@ -151,6 +151,28 @@ mod tests {
     }
 
     #[test]
+    fn oversize_frame_rejected_on_recv() {
+        // A hostile peer bypasses the send-side check with a raw socket
+        // and claims a frame beyond MAX_FRAME; recv must reject the
+        // length prefix without allocating the claimed buffer.
+        let l = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr();
+        let writer = thread::spawn(move || {
+            use std::io::Write;
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            let len = ((MAX_FRAME + 1) as u32).to_be_bytes();
+            s.write_all(&len).unwrap();
+            s.write_all(&[0u8; 64]).unwrap();
+            // Keep the socket open until the server side has rejected.
+            thread::sleep(Duration::from_millis(100));
+        });
+        let mut c = l.accept().unwrap();
+        let err = c.recv().unwrap_err();
+        assert!(err.to_string().contains("MAX_FRAME"), "{err}");
+        writer.join().unwrap();
+    }
+
+    #[test]
     fn peer_close_is_error_not_hang() {
         let l = TcpTransportListener::bind("127.0.0.1:0").unwrap();
         let addr = l.local_addr();

@@ -80,13 +80,16 @@ fn async_no_round_barrier_under_stragglers() {
 
 #[test]
 fn async_staleness_recorded_and_discounted() {
-    // Manually drive the async path: a stale update (base_version 0 after
-    // several flushes) must be accepted but discounted by FedBuff.
-    use florida::proto::Msg;
+    // Manually drive the async path through the typed stubs: a stale
+    // update (base_version 0 after several flushes) must be accepted but
+    // discounted by FedBuff.
+    use florida::client::FloridaClient;
+    use florida::proto::rpc;
     let server = server(41);
     let task = server
         .deploy_task(async_cfg(2, 3), ModelSnapshot::new(0, vec![0.0; 2]))
         .unwrap();
+    let client = FloridaClient::direct(&server);
     let mut ids = Vec::new();
     for i in 0..2u64 {
         let dev = format!("a{i}");
@@ -96,24 +99,15 @@ fn async_staleness_recorded_and_discounted() {
             i + 1,
             u64::MAX / 2,
         );
-        let id = match server.handle(Msg::Register {
-            device_id: dev,
-            verdict: v,
-            caps: Default::default(),
-        }) {
-            Msg::RegisterAck { client_id, .. } => client_id,
-            _ => panic!(),
-        };
-        server.handle(Msg::JoinRound {
-            client_id: id,
-            task_id: task,
-            dh_pubkey: [0; 32],
-        });
-        ids.push(id);
+        let ack = client.register(&dev, v, Default::default()).unwrap();
+        assert!(ack.accepted, "{}", ack.reason);
+        let join = client.join_round(ack.client_id, task, [0; 32]).unwrap();
+        assert!(join.accepted, "{}", join.reason);
+        ids.push(ack.client_id);
     }
     let upload = |cid: u64, base: u64, delta: f32| -> bool {
-        matches!(
-            server.handle(Msg::UploadPlain {
+        client
+            .upload_plain(rpc::UploadPlain {
                 client_id: cid,
                 task_id: task,
                 round: 0,
@@ -121,9 +115,8 @@ fn async_staleness_recorded_and_discounted() {
                 delta: vec![delta; 2],
                 weight: 1.0,
                 loss: 0.1,
-            }),
-            Msg::Ack { ok: true, .. }
-        )
+            })
+            .is_ok()
     };
     // Flush 1: two fresh updates of +1 → model ≈ 1.
     assert!(upload(ids[0], 0, 1.0));
@@ -154,13 +147,25 @@ fn async_staleness_recorded_and_discounted() {
 
 #[test]
 fn async_requires_join_before_upload() {
-    use florida::proto::Msg;
+    use florida::client::FloridaClient;
+    use florida::proto::rpc;
     let server = server(43);
     let task = server
         .deploy_task(async_cfg(2, 1), ModelSnapshot::new(0, vec![0.0; 2]))
         .unwrap();
-    match server.handle(Msg::UploadPlain {
-        client_id: 9999,
+    let client = FloridaClient::direct(&server);
+    // Registered (so the AuthInterceptor admits the request) but never
+    // joined: the aggregation service must refuse, and the stub surfaces
+    // the negative ack as Err(Error::Server).
+    let v = server.auth.authority().issue(
+        "aj-dev",
+        florida::crypto::attest::IntegrityTier::Device,
+        1,
+        u64::MAX / 2,
+    );
+    let ack = client.register("aj-dev", v, Default::default()).unwrap();
+    match client.upload_plain(rpc::UploadPlain {
+        client_id: ack.client_id,
         task_id: task,
         round: 0,
         base_version: 0,
@@ -168,10 +173,7 @@ fn async_requires_join_before_upload() {
         weight: 1.0,
         loss: 0.0,
     }) {
-        Msg::Ack { ok, reason } => {
-            assert!(!ok);
-            assert!(reason.contains("join"), "{reason}");
-        }
+        Err(florida::Error::Server(reason)) => assert!(reason.contains("join"), "{reason}"),
         other => panic!("{other:?}"),
     }
 }

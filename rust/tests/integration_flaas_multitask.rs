@@ -5,11 +5,11 @@
 
 use std::sync::Arc;
 
-use florida::client::{ConstantTrainer, TrainOutcome, Trainer};
+use florida::client::{ConstantTrainer, FloridaClient, TrainOutcome, Trainer};
 use florida::config::{FlMode, TaskConfig};
 use florida::error::Result;
 use florida::model::ModelSnapshot;
-use florida::proto::{Msg, TaskState};
+use florida::proto::TaskState;
 use florida::services::FloridaServer;
 use florida::simulator::{run_fleet, FleetConfig};
 
@@ -249,18 +249,11 @@ fn status_queries_are_per_task() {
     let t2 = server
         .deploy_task(cfg("b", "w", 2, 1), ModelSnapshot::new(0, vec![0.0; 2]))
         .unwrap();
-    match server.handle(Msg::GetTaskStatus { task_id: t1 }) {
-        Msg::TaskStatus { task, participants, .. } => {
-            assert_eq!(task.state, TaskState::Completed);
-            assert_eq!(participants, 2);
-        }
-        other => panic!("{other:?}"),
-    }
-    match server.handle(Msg::GetTaskStatus { task_id: t2 }) {
-        Msg::TaskStatus { task, participants, .. } => {
-            assert_eq!(task.state, TaskState::Running);
-            assert_eq!(participants, 0);
-        }
-        other => panic!("{other:?}"),
-    }
+    let client = FloridaClient::direct(&server);
+    let st1 = client.task_status(t1).unwrap();
+    assert_eq!(st1.task.state, TaskState::Completed);
+    assert_eq!(st1.participants, 2);
+    let st2 = client.task_status(t2).unwrap();
+    assert_eq!(st2.task.state, TaskState::Running);
+    assert_eq!(st2.participants, 0);
 }

@@ -231,13 +231,15 @@ fn secagg_dropout_recovery_preserves_survivor_mean() {
 
 #[test]
 fn masked_upload_required_when_secagg_on() {
-    use florida::proto::{Msg, RoundRole};
+    use florida::client::FloridaClient;
+    use florida::proto::{rpc, RoundRole};
     let server = server(111);
     let cfg = secagg_cfg(2, 1, 2);
     let task = server
         .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
         .unwrap();
-    // Register + join two clients manually.
+    let client = FloridaClient::direct(&server);
+    // Register + join two clients through the typed stubs.
     let mut ids = Vec::new();
     for i in 0..2 {
         let dev = format!("m{i}");
@@ -247,32 +249,19 @@ fn masked_upload_required_when_secagg_on() {
             i + 1,
             u64::MAX / 2,
         );
-        let id = match server.handle(Msg::Register {
-            device_id: dev,
-            verdict: v,
-            caps: Default::default(),
-        }) {
-            Msg::RegisterAck { client_id, .. } => client_id,
-            _ => panic!(),
-        };
-        ids.push(id);
-        server.handle(Msg::JoinRound {
-            client_id: id,
-            task_id: task,
-            dh_pubkey: [i as u8 + 1; 32],
-        });
+        let ack = client.register(&dev, v, Default::default()).unwrap();
+        assert!(ack.accepted, "{}", ack.reason);
+        ids.push(ack.client_id);
+        let join = client
+            .join_round(ack.client_id, task, [i as u8 + 1; 32])
+            .unwrap();
+        assert!(join.accepted, "{}", join.reason);
     }
     // Fetch to form the cohort.
-    let role = match server.handle(Msg::FetchRound {
-        client_id: ids[0],
-        task_id: task,
-    }) {
-        Msg::RoundPlan { role } => role,
-        other => panic!("{other:?}"),
-    };
+    let role = client.fetch_round(ids[0], task).unwrap();
     assert!(matches!(role, RoundRole::Train(ref ri) if ri.secagg.is_some()));
-    // Plaintext upload must be refused.
-    match server.handle(Msg::UploadPlain {
+    // Plaintext upload must be refused — observable as Err at the stub.
+    match client.upload_plain(rpc::UploadPlain {
         client_id: ids[0],
         task_id: task,
         round: 0,
@@ -281,9 +270,8 @@ fn masked_upload_required_when_secagg_on() {
         weight: 1.0,
         loss: 0.0,
     }) {
-        Msg::Ack { ok, reason } => {
-            assert!(!ok);
-            assert!(reason.contains("masked"), "{reason}");
+        Err(florida::Error::Server(reason)) => {
+            assert!(reason.contains("masked"), "{reason}")
         }
         other => panic!("{other:?}"),
     }

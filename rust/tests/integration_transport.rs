@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use florida::client::{
-    ConstantTrainer, FederatedLearningClient, RemoteApi, ServerApi,
+    ConstantTrainer, FederatedLearningClient, FloridaClient, RemoteApi, ServerApi,
 };
 use florida::config::TaskConfig;
 use florida::crypto::attest::IntegrityTier;
@@ -120,48 +120,33 @@ fn json_rest_path_control_plane_over_tcp() {
     let addr = listener.local_addr();
     let _srv = serve(&server, Box::new(listener));
 
-    let api = RemoteApi::connect(&TcpDialer, &addr, WireCodec::Json).unwrap();
+    // Typed stubs over the JSON ("REST") codec.
+    let client = FloridaClient::connect(&TcpDialer, &addr, WireCodec::Json).unwrap();
     // Register via JSON.
     let verdict = server
         .auth
         .authority()
         .issue("json-dev", IntegrityTier::Device, 9, u64::MAX / 2);
-    let reply = api
-        .call(Msg::Register {
-            device_id: "json-dev".into(),
+    let ack = client
+        .register(
+            "json-dev",
             verdict,
-            caps: DeviceCaps {
+            DeviceCaps {
                 sdk: "js".into(),
                 ..Default::default()
             },
-        })
+        )
         .unwrap();
-    let cid = match reply {
-        Msg::RegisterAck {
-            accepted: true,
-            client_id,
-            ..
-        } => client_id,
-        other => panic!("{other:?}"),
-    };
+    assert!(ack.accepted, "{}", ack.reason);
     // Poll task via JSON.
-    match api
-        .call(Msg::PollTask {
-            client_id: cid,
-            app_name: "mail".into(),
-            workflow_name: "spam".into(),
-        })
+    let offered = client
+        .poll_task(ack.client_id, "mail", "spam")
         .unwrap()
-    {
-        Msg::TaskOffer { task: Some(t) } => assert_eq!(t.task_id, task),
-        other => panic!("{other:?}"),
-    }
-    // Status via JSON.
-    match api.call(Msg::GetTaskStatus { task_id: task }).unwrap() {
-        Msg::ErrorReply { message } => panic!("{message}"),
-        Msg::TaskStatus { task: t, .. } => assert_eq!(t.state, TaskState::Running),
-        other => panic!("{other:?}"),
-    }
+        .expect("task advertised");
+    assert_eq!(offered.task_id, task);
+    // Status via JSON (an ErrorReply would surface as Err(Error::Server)).
+    let st = client.task_status(task).unwrap();
+    assert_eq!(st.task.state, TaskState::Running);
 }
 
 #[test]
@@ -176,24 +161,17 @@ fn mixed_codecs_one_listener() {
     let listener = InprocListener::bind("mixed-codec-test").unwrap();
     let _srv = serve(&server, Box::new(listener));
 
-    let bin = RemoteApi::connect(&InprocDialer, "mixed-codec-test", WireCodec::Binary).unwrap();
-    let json = RemoteApi::connect(&InprocDialer, "mixed-codec-test", WireCodec::Json).unwrap();
-    for (api, dev) in [(&bin, "b-dev"), (&json, "j-dev")] {
+    let bin =
+        FloridaClient::connect(&InprocDialer, "mixed-codec-test", WireCodec::Binary).unwrap();
+    let json =
+        FloridaClient::connect(&InprocDialer, "mixed-codec-test", WireCodec::Json).unwrap();
+    for (client, dev) in [(&bin, "b-dev"), (&json, "j-dev")] {
         let verdict = server
             .auth
             .authority()
             .issue(dev, IntegrityTier::Basic, 1, u64::MAX / 2);
-        match api
-            .call(Msg::Register {
-                device_id: dev.to_string(),
-                verdict,
-                caps: DeviceCaps::default(),
-            })
-            .unwrap()
-        {
-            Msg::RegisterAck { accepted, .. } => assert!(accepted),
-            other => panic!("{other:?}"),
-        }
+        let ack = client.register(dev, verdict, DeviceCaps::default()).unwrap();
+        assert!(ack.accepted, "{}", ack.reason);
     }
     assert_eq!(server.selection.count(), 2);
 }

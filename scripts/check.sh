@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Repo-wide check: formatting, lints, tests. CI runs exactly this; run
+# it locally before pushing.
+#
+#   scripts/check.sh           # everything
+#   scripts/check.sh --fast    # skip the (slow) test suite
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "==> cargo fmt --check"
+cargo fmt --all -- --check
+
+echo "==> cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+if [[ "$fast" == "0" ]]; then
+  # The release build is part of the repo's tier-1 contract
+  # (ROADMAP.md: `cargo build --release && cargo test -q`).
+  echo "==> cargo build --release"
+  cargo build --release
+  echo "==> cargo test -q"
+  cargo test -q
+fi
+
+echo "OK"
