@@ -1,18 +1,21 @@
 //! Quickstart: the smallest end-to-end Florida run.
 //!
 //! Mirrors the paper's Fig-3 sample client: define an app + workflow,
-//! plug in a trainer, deploy a task, and let a handful of simulated
-//! devices train it to completion — all in-process, with the real
-//! protocol (attestation → registration → selection → rounds).
+//! plug in a trainer, deploy a task through the fluent `TaskBuilder`,
+//! and let a handful of simulated devices train it to completion — all
+//! in-process, with the real protocol (attestation → registration →
+//! selection → rounds) and the round lifecycle observed through the
+//! `TaskEvent` subscription stream instead of status polling.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (uses the `micro` artifact preset — build with `make artifacts` first)
 
 use std::sync::Arc;
 
-use florida::config::{Manifest, TaskConfig};
+use florida::config::Manifest;
 use florida::data::{SpamCorpus, SpamCorpusConfig};
 use florida::model::ModelSnapshot;
+use florida::orchestrator::{TaskBuilder, TaskEvent};
 use florida::runtime::{HloEvaluator, HloTrainer, Runtime, ShardSampler};
 use florida::services::FloridaServer;
 use florida::simulator::{run_fleet, FleetConfig};
@@ -36,17 +39,19 @@ fn main() -> anyhow::Result<()> {
     let server = Arc::new(FloridaServer::with_evaluator(true, evaluator, 42, true));
 
     // --- ML scientist: create the task (dashboard/CLI equivalent) --------
-    let mut task = TaskConfig::default();
-    task.task_name = "quickstart-spam".into();
-    task.app_name = "python-app".into();
-    task.workflow_name = "python-workflow".into();
-    task.preset = "micro".into();
-    task.clients_per_round = 4;
-    task.total_rounds = 5;
-    task.client_lr = 5e-3;
     let init = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path))?;
-    let task_id = server.deploy_task(task, init)?;
-    println!("deployed task {task_id}");
+    let task = TaskBuilder::new("quickstart-spam")
+        .app("python-app")
+        .workflow("python-workflow")
+        .preset("micro")
+        .clients_per_round(4)
+        .rounds(5)
+        .client_lr(5e-3)
+        .deploy(&server.management, init)?;
+    println!("deployed task {}", task.id());
+
+    // Observe the round lifecycle as it happens (no polling).
+    let events = task.subscribe();
 
     // --- Devices: 4 simulated clients, each owning one data shard --------
     let fleet = FleetConfig {
@@ -54,13 +59,36 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let shards = corpus.shards;
-    let reports = run_fleet(&server, task_id, &fleet, |i| {
+    let reports = run_fleet(&server, task.id(), &fleet, |i| {
         let sampler = ShardSampler::new(Arc::clone(&train), shards[i].clone(), 0.5, i as u64);
         HloTrainer::new(runtime.handle(), preset.clone(), sampler)
     });
 
     // --- Results ----------------------------------------------------------
-    let (desc, metrics, _) = server.management.task_status(task_id)?;
+    println!("\nlifecycle (from the TaskEvent stream):");
+    let mut committed = 0;
+    for ev in events.drain() {
+        match ev {
+            TaskEvent::RoundStarted { round, cohort, .. } => {
+                println!("  round {round} started ({cohort} clients)")
+            }
+            TaskEvent::RoundCommitted {
+                round,
+                participants,
+                train_loss,
+                ..
+            } => {
+                committed += 1;
+                println!(
+                    "  round {round} committed ({participants} participants, loss {train_loss:.4})"
+                );
+            }
+            TaskEvent::TaskCompleted { .. } => println!("  task completed"),
+            _ => {}
+        }
+    }
+
+    let (desc, metrics, _) = task.status()?;
     println!("\n{}", metrics.render_dashboard(&desc.task_name));
     println!(
         "device round participations: {}",
@@ -76,6 +104,7 @@ fn main() -> anyhow::Result<()> {
         desc.state == florida::proto::TaskState::Completed,
         "task did not complete"
     );
+    anyhow::ensure!(committed == 5, "expected 5 committed rounds, saw {committed}");
     println!("final eval accuracy: {final_acc:.3}");
     Ok(())
 }

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use florida::client::{TrainOutcome, Trainer};
-use florida::config::{Manifest, TaskConfig};
+use florida::config::Manifest;
 use florida::data::{SpamCorpus, SpamCorpusConfig};
 use florida::error::Result;
 use florida::model::compress::SparseDelta;
@@ -98,15 +98,17 @@ fn main() {
             99,
             true,
         ));
-        let mut cfg = TaskConfig::default();
-        cfg.preset = "micro".into();
-        cfg.clients_per_round = 8;
-        cfg.total_rounds = 10;
-        cfg.client_lr = 8e-3;
-        cfg.round_timeout_ms = 120_000;
         let init =
             ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path)).unwrap();
-        let task = server.deploy_task(cfg, init).unwrap();
+        let task = florida::orchestrator::TaskBuilder::new("compression-ablation")
+            .preset("micro")
+            .clients_per_round(8)
+            .rounds(10)
+            .client_lr(8e-3)
+            .round_timeout_ms(120_000)
+            .deploy(&server.management, init)
+            .unwrap()
+            .id();
 
         let bytes = Arc::new(std::sync::atomic::AtomicU64::new(0));
         let fleet = FleetConfig {

@@ -19,7 +19,8 @@ use florida::services::FloridaServer;
 use florida::util::{bench, Rng};
 
 fn main() {
-    let b = bench::Bencher::default();
+    let b = bench::Bencher::from_env();
+    let mut snap = bench::Snapshot::new();
     let dim = 667_394; // BERT-tiny flat dim (the real payload size)
     let bytes = (dim * 4) as u64;
     let mut rng = Rng::new(1);
@@ -29,40 +30,40 @@ fn main() {
 
     bench::section("aggregation hot path (dim = 667,394 — BERT-tiny)");
     let mut acc_u32 = vec![0u32; dim];
-    bench::report(&b.run_bytes("masked add_mod (u32 wrapping sum)", bytes, || {
+    snap.report(b.run_bytes("masked add_mod (u32 wrapping sum)", bytes, || {
         add_mod(&mut acc_u32, &qdelta);
     }));
-    bench::report(&b.run_bytes("quantize f32→u32 lattice", bytes, || {
+    snap.report(b.run_bytes("quantize f32→u32 lattice", bytes, || {
         std::hint::black_box(quant.quantize(&delta));
     }));
-    bench::report(&b.run_bytes("dequantize sum→mean", bytes, || {
+    snap.report(b.run_bytes("dequantize sum→mean", bytes, || {
         std::hint::black_box(quant.dequantize_sum_to_mean(&acc_u32, 32).unwrap());
     }));
     let mut dacc = DeltaAccumulator::new(dim);
-    bench::report(&b.run_bytes("weighted delta accumulate (f64)", bytes, || {
+    snap.report(b.run_bytes("weighted delta accumulate (f64)", bytes, || {
         dacc.add(&delta, 67.0).unwrap();
     }));
     let mut global = ModelSnapshot::new(0, delta.clone());
-    bench::report(&b.run_bytes("apply_delta (server model update)", bytes, || {
+    snap.report(b.run_bytes("apply_delta (server model update)", bytes, || {
         global.apply_delta(&delta, 1.0).unwrap();
     }));
 
     bench::section("client-side DP + masking");
     let mut v = delta.clone();
-    bench::report(&b.run_bytes("L2 clip", bytes, || {
+    snap.report(b.run_bytes("L2 clip", bytes, || {
         std::hint::black_box(GaussianMechanism::clip(&mut v, 0.5));
     }));
     let mut v2 = delta.clone();
-    bench::report(&b.run_bytes("gaussian noise (Box–Muller)", bytes, || {
+    snap.report(b.run_bytes("gaussian noise (Box–Muller)", bytes, || {
         GaussianMechanism::add_noise(&mut v2, 0.5, 0.08, &mut rng);
     }));
     let mut masked = qdelta.clone();
-    bench::report(&b.run_bytes("PRG mask apply (AES-CTR, 1 peer)", bytes, || {
+    snap.report(b.run_bytes("PRG mask apply (AES-CTR, 1 peer)", bytes, || {
         MaskPrg::new([7u8; 16]).apply_mask(&mut masked, 1);
     }));
 
     bench::section("wire codec (bulk arrays)");
-    bench::report(&b.run_bytes("encode f32s", bytes, || {
+    snap.report(b.run_bytes("encode f32s", bytes, || {
         let mut w = Writer::with_capacity(dim * 4 + 8);
         w.put_f32s(&delta);
         std::hint::black_box(w.into_bytes());
@@ -70,32 +71,38 @@ fn main() {
     let mut w = Writer::new();
     w.put_f32s(&delta);
     let encoded = w.into_bytes();
-    bench::report(&b.run_bytes("decode f32s", bytes, || {
+    snap.report(b.run_bytes("decode f32s", bytes, || {
         let mut r = Reader::new(&encoded);
         std::hint::black_box(r.get_f32s().unwrap());
     }));
-    let snap = ModelSnapshot::new(1, delta.clone());
-    let frame = snap.to_bytes();
-    bench::report(&b.run_bytes("snapshot wire roundtrip", bytes, || {
+    let model_snap = ModelSnapshot::new(1, delta.clone());
+    let frame = model_snap.to_bytes();
+    snap.report(b.run_bytes("snapshot wire roundtrip", bytes, || {
         std::hint::black_box(ModelSnapshot::from_bytes(&frame).unwrap());
     }));
 
     bench::section("snapshot compression (paper: ~16MB model compressed)");
-    let slow = bench::Bencher {
-        measure: std::time::Duration::from_millis(800),
-        ..Default::default()
+    // Long measure window for the slow zlib cases — except in quick
+    // (CI snapshot) mode, where from_env's short window wins.
+    let slow = if std::env::var("FLORIDA_BENCH_QUICK").is_ok() {
+        bench::Bencher::from_env()
+    } else {
+        bench::Bencher {
+            measure: std::time::Duration::from_millis(800),
+            ..Default::default()
+        }
     };
-    bench::report(&slow.run_bytes("zlib compress snapshot", bytes, || {
-        std::hint::black_box(snap.to_compressed().unwrap());
+    snap.report(slow.run_bytes("zlib compress snapshot", bytes, || {
+        std::hint::black_box(model_snap.to_compressed().unwrap());
     }));
-    let z = snap.to_compressed().unwrap();
+    let z = model_snap.to_compressed().unwrap();
     println!(
         "    compressed {:.2} MB → {:.2} MB ({:.0}%)",
         bytes as f64 / 1e6,
         z.len() as f64 / 1e6,
         100.0 * z.len() as f64 / bytes as f64
     );
-    bench::report(&slow.run_bytes("zlib decompress snapshot", bytes, || {
+    snap.report(slow.run_bytes("zlib decompress snapshot", bytes, || {
         std::hint::black_box(ModelSnapshot::from_compressed(&z).unwrap());
     }));
 
@@ -113,27 +120,73 @@ fn main() {
         .register("bench-dev", verdict, Default::default())
         .expect("register")
         .client_id;
-    bench::report(&b.run("service body only (selection.touch)", || {
+    snap.report(b.run("service body only (selection.touch)", || {
         server.selection.touch(cid, 0);
     }));
-    bench::report(&b.run("handle() → router + interceptor chain", || {
+    snap.report(b.run("handle() → router + interceptor chain", || {
         std::hint::black_box(server.handle(Msg::Heartbeat { client_id: cid }));
     }));
-    bench::report(&b.run("typed stub heartbeat (stub + router)", || {
+    snap.report(b.run("typed stub heartbeat (stub + router)", || {
         stub.heartbeat(cid).expect("heartbeat");
     }));
+
+    bench::section("round_engine_commit (full plaintext round, 32 clients)");
+    // Orchestration cost of one committed round through the RoundEngine:
+    // 32 joins → cohort formation → 32 fetches → 32 uploads → commit.
+    {
+        use florida::config::TaskConfig;
+        use florida::orchestrator::{EventBus, NoEval, NullDirectory, RoundEngine};
+
+        let engine_dim = 1024;
+        let k = 32u64;
+        let mut cfg = TaskConfig::default();
+        cfg.clients_per_round = k as usize;
+        cfg.total_rounds = u64::MAX / 2; // never completes inside the bench
+        cfg.round_timeout_ms = u64::MAX / 4;
+        let mut engine = RoundEngine::new(
+            1,
+            cfg,
+            ModelSnapshot::new(0, vec![0.0; engine_dim]),
+            7,
+            EventBus::new(),
+        )
+        .expect("engine");
+        engine.start().expect("start");
+        let dir = NullDirectory;
+        let delta = vec![0.01f32; engine_dim];
+        snap.report(b.run("round_engine_commit", || {
+            let round = engine.round;
+            let version = engine.global.version;
+            for c in 1..=k {
+                engine.join(c, [0u8; 32], 0).expect("join");
+            }
+            for c in 1..=k {
+                let _ = engine.fetch(c, &dir, 0).expect("fetch");
+            }
+            for c in 1..=k {
+                let (ok, why) = engine
+                    .accept_plain(c, round, version, delta.clone(), 1.0, 0.1, &NoEval, 1)
+                    .expect("accept");
+                assert!(ok, "{why}");
+            }
+            assert_eq!(engine.round, round + 1, "round must commit");
+        }));
+    }
 
     bench::section("crypto primitives");
     let kp1 = KeyPair::generate(&mut rng);
     let kp2 = KeyPair::generate(&mut rng);
-    bench::report(&b.run("x25519 agree", || {
+    snap.report(b.run("x25519 agree", || {
         std::hint::black_box(kp1.agree(&kp2.public()));
     }));
     let shared = kp1.agree(&kp2.public());
-    bench::report(&b.run("hkdf derive_key16", || {
+    snap.report(b.run("hkdf derive_key16", || {
         std::hint::black_box(hkdf::derive_key16(b"salt", &shared.0, b"info"));
     }));
-    bench::report(&b.run_bytes("PRG fill 667k u32", bytes, || {
+    snap.report(b.run_bytes("PRG fill 667k u32", bytes, || {
         std::hint::black_box(MaskPrg::new([3u8; 16]).mask_vec(dim));
     }));
+
+    // Machine-readable snapshot for the perf trajectory (BENCH_JSON=path).
+    snap.write_if_env("BENCH_JSON").expect("write bench snapshot");
 }

@@ -20,6 +20,7 @@ use crate::config::{Manifest, TaskConfig};
 use crate::dp::{DpConfig, DpMode, RdpAccountant};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
+use crate::orchestrator::{TaskBuilder, TaskEvent};
 use crate::proto::WireCodec;
 use crate::services::management::NoEval;
 use crate::services::FloridaServer;
@@ -249,7 +250,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.usize_or("seed", 99)? as u64,
         true,
     ));
-    // Optionally deploy a task at startup.
+    // Optionally deploy a task at startup (JSON config → TaskBuilder).
     if let Some(cfg_path) = args.flag("task") {
         let text = std::fs::read_to_string(cfg_path)?;
         let tcfg = TaskConfig::from_json_str(&text)?;
@@ -261,22 +262,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             None => ModelSnapshot::new(0, vec![0.0; args.usize_or("dim", 5)?]),
         };
-        let id = server.deploy_task(tcfg, init)?;
-        println!("deployed task {id} from {cfg_path}");
+        let handle = TaskBuilder::from_config(tcfg).deploy(&server.management, init)?;
+        println!("deployed task {} from {cfg_path}", handle.id());
     }
     let listener = TcpTransportListener::bind(addr)?;
     println!("florida serving on {}", listener.local_addr());
     let pool = ThreadPool::new(args.usize_or("conns", 64)?);
+    // Lifecycle event log: the dashboard view of round orchestration,
+    // driven by the subscription stream rather than status polling.
+    {
+        let events = server.subscribe();
+        std::thread::spawn(move || loop {
+            match events.next_timeout(std::time::Duration::from_secs(60)) {
+                Some(ev) => println!("{}", render_event(&ev)),
+                // Idle or disconnected: back off instead of spinning.
+                None => std::thread::sleep(std::time::Duration::from_millis(100)),
+            }
+        });
+    }
     // Background deadline sweep.
     {
         let server = Arc::clone(&server);
         std::thread::spawn(move || loop {
-            server.management.tick(server.now_ms());
+            server.tick();
             std::thread::sleep(std::time::Duration::from_millis(100));
         });
     }
     server.serve(Box::new(listener), &pool);
     Ok(())
+}
+
+/// One task-event log line for the serve console.
+fn render_event(ev: &TaskEvent) -> String {
+    match ev {
+        TaskEvent::TaskStateChanged { task_id, state } => {
+            format!("task {task_id}: state → {}", state.name())
+        }
+        TaskEvent::ClientJoined { task_id, client_id } => {
+            format!("task {task_id}: client {client_id} joined")
+        }
+        TaskEvent::RoundStarted {
+            task_id,
+            round,
+            cohort,
+        } => format!("task {task_id}: round {round} started ({cohort} clients)"),
+        TaskEvent::RoundCommitted {
+            task_id,
+            round,
+            participants,
+            train_loss,
+        } => format!(
+            "task {task_id}: round {round} committed ({participants} participants, loss {train_loss:.4})"
+        ),
+        TaskEvent::QuorumMissed {
+            task_id,
+            round,
+            reported,
+            quorum,
+        } => format!("task {task_id}: round {round} missed quorum ({reported}/{quorum})"),
+        TaskEvent::RoundFailed { task_id, round } => {
+            format!("task {task_id}: round {round} failed — retrying")
+        }
+        TaskEvent::TaskCompleted { task_id } => format!("task {task_id}: completed"),
+    }
 }
 
 fn cmd_status(args: &Args) -> Result<()> {
@@ -365,6 +413,25 @@ mod tests {
     fn dp_plan_runs() {
         let a = Args::parse(&argv("dp-plan --q 0.32 --sigma 0.08 --rounds 3")).unwrap();
         cmd_dp_plan(&a).unwrap();
+    }
+
+    #[test]
+    fn event_rendering() {
+        let line = render_event(&TaskEvent::RoundCommitted {
+            task_id: 3,
+            round: 1,
+            participants: 8,
+            train_loss: 0.5,
+        });
+        assert!(line.contains("task 3"));
+        assert!(line.contains("committed"));
+        let line = render_event(&TaskEvent::QuorumMissed {
+            task_id: 3,
+            round: 0,
+            reported: 1,
+            quorum: 4,
+        });
+        assert!(line.contains("1/4"));
     }
 
     #[test]

@@ -13,6 +13,32 @@ pub enum FlMode {
     Async { buffer_size: usize },
 }
 
+/// Config-expressible cohort policy (§4.2): which
+/// `orchestrator::CohortPolicy` the task's round engine runs. Serialized
+/// with the task so "user-defined logic" ships as configuration.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum CohortSpec {
+    /// `clients_per_round` joiners chosen uniformly at random (default).
+    #[default]
+    UniformRandom,
+    /// Prefer higher-integrity devices (ranked by `DeviceCaps::tier`).
+    Tiered,
+    /// Draft `ceil(clients_per_round × spawn_factor)` joiners so rounds
+    /// tolerate dropouts instead of stalling (§4.2).
+    OverProvision { spawn_factor: f64 },
+}
+
+impl CohortSpec {
+    /// Stable name used on the JSON config surface.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CohortSpec::UniformRandom => "uniform",
+            CohortSpec::Tiered => "tiered",
+            CohortSpec::OverProvision { .. } => "overprovision",
+        }
+    }
+}
+
 /// Everything the ML scientist specifies when creating a task (§3.3.1).
 #[derive(Clone, Debug)]
 pub struct TaskConfig {
@@ -25,6 +51,12 @@ pub struct TaskConfig {
 
     /// Clients per round (sync) / per buffer epoch (async).
     pub clients_per_round: usize,
+    /// Degraded floor: with `min_clients ≤ pool < clients_per_round` and
+    /// the join grace elapsed, a smaller cohort forms instead of the
+    /// round stalling at Joining. 0 (default) disables degraded rounds.
+    pub min_clients: usize,
+    /// Cohort policy the round engine runs (§4.2).
+    pub cohort: CohortSpec,
     /// Total rounds (sync) or buffer flushes (async).
     pub total_rounds: u64,
 
@@ -65,6 +97,8 @@ impl Default for TaskConfig {
             workflow_name: "workflow".into(),
             preset: "tiny".into(),
             clients_per_round: 32,
+            min_clients: 0,
+            cohort: CohortSpec::UniformRandom,
             total_rounds: 10,
             mode: FlMode::Sync,
             aggregator: "fedavg".into(),
@@ -89,6 +123,19 @@ impl TaskConfig {
     pub fn validate(&self) -> Result<()> {
         if self.clients_per_round == 0 {
             return Err(Error::Config("clients_per_round must be > 0".into()));
+        }
+        if self.min_clients > self.clients_per_round {
+            return Err(Error::Config(format!(
+                "min_clients {} exceeds clients_per_round {}",
+                self.min_clients, self.clients_per_round
+            )));
+        }
+        if let CohortSpec::OverProvision { spawn_factor } = self.cohort {
+            if !(spawn_factor.is_finite() && spawn_factor >= 1.0) {
+                return Err(Error::Config(format!(
+                    "spawn_factor must be ≥ 1.0, got {spawn_factor}"
+                )));
+            }
         }
         if self.total_rounds == 0 {
             return Err(Error::Config("total_rounds must be > 0".into()));
@@ -137,12 +184,22 @@ impl TaskConfig {
             "central" => DpMode::Central,
             other => return Err(Error::Config(format!("bad dp_mode {other:?}"))),
         };
+        let cohort = match j.opt_str("cohort_policy", "uniform").as_str() {
+            "uniform" => CohortSpec::UniformRandom,
+            "tiered" => CohortSpec::Tiered,
+            "overprovision" => CohortSpec::OverProvision {
+                spawn_factor: j.opt_f64("spawn_factor", 1.25),
+            },
+            other => return Err(Error::Config(format!("bad cohort_policy {other:?}"))),
+        };
         let cfg = TaskConfig {
             task_name: j.opt_str("task_name", &d.task_name),
             app_name: j.opt_str("app_name", &d.app_name),
             workflow_name: j.opt_str("workflow_name", &d.workflow_name),
             preset: j.opt_str("preset", &d.preset),
             clients_per_round: j.opt_usize("clients_per_round", d.clients_per_round),
+            min_clients: j.opt_usize("min_clients", d.min_clients),
+            cohort,
             total_rounds: j.opt_usize("total_rounds", d.total_rounds as usize) as u64,
             mode,
             aggregator: j.opt_str("aggregator", &d.aggregator),
@@ -181,12 +238,19 @@ impl TaskConfig {
             DpMode::Local => "local",
             DpMode::Central => "central",
         };
+        let spawn_factor = match self.cohort {
+            CohortSpec::OverProvision { spawn_factor } => spawn_factor,
+            _ => 1.0,
+        };
         Json::obj()
             .set("task_name", self.task_name.as_str())
             .set("app_name", self.app_name.as_str())
             .set("workflow_name", self.workflow_name.as_str())
             .set("preset", self.preset.as_str())
             .set("clients_per_round", self.clients_per_round)
+            .set("min_clients", self.min_clients)
+            .set("cohort_policy", self.cohort.name())
+            .set("spawn_factor", spawn_factor)
             .set("total_rounds", self.total_rounds)
             .set("mode", mode)
             .set("buffer_size", buffer)
@@ -297,6 +361,8 @@ mod tests {
         cfg.secure_agg = true;
         cfg.vg_size = 8;
         cfg.dp = DpConfig::paper_local();
+        cfg.min_clients = 16;
+        cfg.cohort = CohortSpec::OverProvision { spawn_factor: 1.5 };
         let j = cfg.to_json();
         let back = TaskConfig::from_json(&j).unwrap();
         assert_eq!(back.task_name, cfg.task_name);
@@ -304,6 +370,17 @@ mod tests {
         assert_eq!(back.vg_size, 8);
         assert_eq!(back.dp.mode, DpMode::Local);
         assert!((back.dp.clip_norm - 0.5).abs() < 1e-12);
+        assert_eq!(back.min_clients, 16);
+        assert_eq!(back.cohort, CohortSpec::OverProvision { spawn_factor: 1.5 });
+    }
+
+    #[test]
+    fn cohort_policy_json_variants() {
+        let cfg = TaskConfig::from_json_str(r#"{"cohort_policy":"tiered"}"#).unwrap();
+        assert_eq!(cfg.cohort, CohortSpec::Tiered);
+        let cfg = TaskConfig::from_json_str(r#"{"cohort_policy":"uniform"}"#).unwrap();
+        assert_eq!(cfg.cohort, CohortSpec::UniformRandom);
+        assert!(TaskConfig::from_json_str(r#"{"cohort_policy":"psychic"}"#).is_err());
     }
 
     #[test]
@@ -342,6 +419,14 @@ mod tests {
 
         let mut c = TaskConfig::default();
         c.min_report_fraction = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = TaskConfig::default();
+        c.min_clients = c.clients_per_round + 1;
+        assert!(c.validate().is_err());
+
+        let mut c = TaskConfig::default();
+        c.cohort = CohortSpec::OverProvision { spawn_factor: 0.5 };
         assert!(c.validate().is_err());
     }
 

@@ -8,12 +8,17 @@
 //! metrics → backpressure), and clients talk to them through typed
 //! stubs (`client::FloridaClient`) generated over the `proto::rpc`
 //! request/reply pairs, so protocol errors surface as `Err(Error::
-//! Server)` instead of raw `Msg` pattern matches. Beneath the router:
-//! the management service, selection service, two-stage secure
-//! aggregation (virtual groups + master aggregator), authentication/
-//! attestation, the client SDK, transports, differential privacy, and
-//! a multi-client device simulator. See `docs/architecture.md` for the
-//! topology and client round state machine.
+//! Server)` instead of raw `Msg` pattern matches. Beneath the router,
+//! the management service is a thin registry over per-task
+//! `orchestrator::RoundEngine`s — typed phase state machines
+//! parameterized by pluggable `CohortPolicy`/`PacingPolicy` seams,
+//! administered through `TaskBuilder`/`TaskHandle` and observed through
+//! the `TaskEvent` stream. Around them: the selection service,
+//! two-stage secure aggregation (virtual groups + master aggregator),
+//! authentication/attestation, the client SDK, transports, differential
+//! privacy, and a multi-client device simulator. See
+//! `docs/architecture.md` for the topology, the task lifecycle state
+//! machine, and the policy seams.
 //!
 //! Layer 2 (python/compile/model.py, build-time only): the on-device
 //! compute — a BERT-tiny-class transformer classifier fwd/bwd lowered via
@@ -38,6 +43,7 @@ pub mod dp;
 pub mod error;
 pub mod metrics;
 pub mod model;
+pub mod orchestrator;
 pub mod proto;
 pub mod quant;
 pub mod runtime;

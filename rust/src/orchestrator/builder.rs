@@ -1,0 +1,378 @@
+//! FLaaS-facing task API: a fluent [`TaskBuilder`] (replacing raw
+//! `TaskConfig` struct literals) and a [`TaskHandle`] for admin
+//! operations + event subscription (§3.3.1 task creation/management).
+//!
+//! ```no_run
+//! # use florida::orchestrator::TaskBuilder;
+//! # use florida::model::ModelSnapshot;
+//! # use florida::services::FloridaServer;
+//! # let server = FloridaServer::for_testing(false, 1);
+//! let handle = TaskBuilder::new("spam-classifier")
+//!     .app("mail")
+//!     .workflow("spam")
+//!     .clients_per_round(32)
+//!     .rounds(10)
+//!     .secure_agg(16)
+//!     .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 8]))
+//!     .unwrap();
+//! let events = handle.subscribe();
+//! # let _ = events;
+//! ```
+
+use crate::config::{CohortSpec, FlMode, TaskConfig};
+use crate::dp::DpConfig;
+use crate::error::Result;
+use crate::metrics::TaskMetrics;
+use crate::model::ModelSnapshot;
+use crate::proto::{SelectionCriteria, TaskDescriptor};
+use crate::services::management::ManagementService;
+
+use super::events::EventStream;
+use super::policy::{CohortPolicy, PacingPolicy};
+
+/// Fluent task construction. Every knob defaults to
+/// [`TaskConfig::default`]; validation happens at deploy time.
+pub struct TaskBuilder {
+    config: TaskConfig,
+    cohort_policy: Option<Box<dyn CohortPolicy>>,
+    pacing: Option<Box<dyn PacingPolicy>>,
+}
+
+impl TaskBuilder {
+    pub fn new(task_name: &str) -> TaskBuilder {
+        let mut config = TaskConfig::default();
+        config.task_name = task_name.to_string();
+        TaskBuilder {
+            config,
+            cohort_policy: None,
+            pacing: None,
+        }
+    }
+
+    /// Wrap an existing config (JSON-deployed tasks, CLI `--task`).
+    pub fn from_config(config: TaskConfig) -> TaskBuilder {
+        TaskBuilder {
+            config,
+            cohort_policy: None,
+            pacing: None,
+        }
+    }
+
+    pub fn app(mut self, app_name: &str) -> Self {
+        self.config.app_name = app_name.to_string();
+        self
+    }
+
+    pub fn workflow(mut self, workflow_name: &str) -> Self {
+        self.config.workflow_name = workflow_name.to_string();
+        self
+    }
+
+    pub fn preset(mut self, preset: &str) -> Self {
+        self.config.preset = preset.to_string();
+        self
+    }
+
+    pub fn clients_per_round(mut self, k: usize) -> Self {
+        self.config.clients_per_round = k;
+        self
+    }
+
+    /// Degraded floor: rounds proceed with `min_clients ≤ pool < k`
+    /// after the join grace instead of stalling at Joining.
+    pub fn min_clients(mut self, floor: usize) -> Self {
+        self.config.min_clients = floor;
+        self
+    }
+
+    pub fn rounds(mut self, total_rounds: u64) -> Self {
+        self.config.total_rounds = total_rounds;
+        self
+    }
+
+    /// Synchronous rounds (the default).
+    pub fn sync(mut self) -> Self {
+        self.config.mode = FlMode::Sync;
+        self
+    }
+
+    /// Buffered-async federation (§4.3): flush every `buffer_size`
+    /// contributions.
+    pub fn buffered_async(mut self, buffer_size: usize) -> Self {
+        self.config.mode = FlMode::Async { buffer_size };
+        self
+    }
+
+    /// Aggregation strategy: fedavg | fedprox | dga | fedbuff.
+    pub fn aggregator(mut self, name: &str) -> Self {
+        self.config.aggregator = name.to_string();
+        self
+    }
+
+    pub fn server_lr(mut self, lr: f32) -> Self {
+        self.config.server_lr = lr;
+        self
+    }
+
+    pub fn client_lr(mut self, lr: f32) -> Self {
+        self.config.client_lr = lr;
+        self
+    }
+
+    pub fn prox_mu(mut self, mu: f32) -> Self {
+        self.config.prox_mu = mu;
+        self
+    }
+
+    /// Enable secure aggregation with the given virtual-group size.
+    pub fn secure_agg(mut self, vg_size: usize) -> Self {
+        self.config.secure_agg = true;
+        self.config.vg_size = vg_size;
+        self
+    }
+
+    /// Disable secure aggregation (plaintext uploads — the default).
+    pub fn plaintext(mut self) -> Self {
+        self.config.secure_agg = false;
+        self
+    }
+
+    pub fn quantizer(mut self, range: f32, bits: u32) -> Self {
+        self.config.quant_range = range;
+        self.config.quant_bits = bits;
+        self
+    }
+
+    pub fn dp(mut self, dp: DpConfig) -> Self {
+        self.config.dp = dp;
+        self
+    }
+
+    pub fn dp_population(mut self, population: usize) -> Self {
+        self.config.dp_population = population;
+        self
+    }
+
+    pub fn selection(mut self, criteria: SelectionCriteria) -> Self {
+        self.config.selection = criteria;
+        self
+    }
+
+    pub fn round_timeout_ms(mut self, timeout_ms: u64) -> Self {
+        self.config.round_timeout_ms = timeout_ms;
+        self
+    }
+
+    pub fn min_report_fraction(mut self, fraction: f64) -> Self {
+        self.config.min_report_fraction = fraction;
+        self
+    }
+
+    /// Config-expressible cohort policy (serializes with the task).
+    pub fn cohort_policy(mut self, spec: CohortSpec) -> Self {
+        self.config.cohort = spec;
+        self
+    }
+
+    /// Custom cohort policy object (overrides the config spec).
+    pub fn custom_cohort_policy(mut self, policy: Box<dyn CohortPolicy>) -> Self {
+        self.cohort_policy = Some(policy);
+        self
+    }
+
+    /// Custom pacing policy object (overrides the mode-derived default).
+    pub fn custom_pacing(mut self, policy: Box<dyn PacingPolicy>) -> Self {
+        self.pacing = Some(policy);
+        self
+    }
+
+    /// Finish building, returning the validated config (for wire/JSON
+    /// paths that carry configs rather than live tasks).
+    pub fn build(self) -> Result<TaskConfig> {
+        self.config.validate()?;
+        Ok(self.config)
+    }
+
+    /// Create the task (Created state — start it via the handle).
+    pub fn create<'a>(
+        self,
+        mgmt: &'a ManagementService,
+        init: ModelSnapshot,
+    ) -> Result<TaskHandle<'a>> {
+        let TaskBuilder {
+            config,
+            cohort_policy,
+            pacing,
+        } = self;
+        let id = if cohort_policy.is_some() || pacing.is_some() {
+            mgmt.create_task_with_policies(config, init, cohort_policy, pacing)?
+        } else {
+            mgmt.create_task(config, init)?
+        };
+        Ok(TaskHandle { mgmt, id })
+    }
+
+    /// Create **and start** the task — the one-call deploy path.
+    pub fn deploy<'a>(
+        self,
+        mgmt: &'a ManagementService,
+        init: ModelSnapshot,
+    ) -> Result<TaskHandle<'a>> {
+        let handle = self.create(mgmt, init)?;
+        handle.start()?;
+        Ok(handle)
+    }
+}
+
+/// Admin handle for one deployed task: lifecycle operations, status and
+/// the task-scoped event stream. Cheap — holds only the registry
+/// reference and the task id.
+#[derive(Clone, Copy)]
+pub struct TaskHandle<'a> {
+    mgmt: &'a ManagementService,
+    id: u64,
+}
+
+impl<'a> TaskHandle<'a> {
+    /// Re-attach to an existing task by id (router/CLI surfaces).
+    pub fn attach(mgmt: &'a ManagementService, id: u64) -> TaskHandle<'a> {
+        TaskHandle { mgmt, id }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn start(&self) -> Result<()> {
+        self.mgmt.start_task(self.id)
+    }
+
+    pub fn pause(&self) -> Result<()> {
+        self.mgmt.pause_task(self.id)
+    }
+
+    pub fn cancel(&self) -> Result<()> {
+        self.mgmt.cancel_task(self.id)
+    }
+
+    pub fn descriptor(&self) -> Result<TaskDescriptor> {
+        self.mgmt.with_task(self.id, |t| Ok(t.descriptor()))
+    }
+
+    /// (descriptor, metrics, epsilon) — the dashboard status tuple.
+    pub fn status(&self) -> Result<(TaskDescriptor, TaskMetrics, Option<f64>)> {
+        self.mgmt.task_status(self.id)
+    }
+
+    /// Subscribe to this task's lifecycle events.
+    pub fn subscribe(&self) -> EventStream {
+        self.mgmt.events().subscribe_task(self.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::TaskEvent;
+    use crate::proto::TaskState;
+    use crate::services::management::NoEval;
+    use std::sync::Arc;
+
+    fn mgmt() -> ManagementService {
+        ManagementService::new(Arc::new(NoEval), 11)
+    }
+
+    #[test]
+    fn builder_sets_config_fields() {
+        let cfg = TaskBuilder::new("t")
+            .app("mail")
+            .workflow("spam")
+            .clients_per_round(8)
+            .min_clients(4)
+            .rounds(3)
+            .aggregator("fedprox")
+            .prox_mu(0.1)
+            .secure_agg(4)
+            .round_timeout_ms(5000)
+            .min_report_fraction(0.6)
+            .cohort_policy(CohortSpec::OverProvision { spawn_factor: 1.25 })
+            .build()
+            .unwrap();
+        assert_eq!(cfg.task_name, "t");
+        assert_eq!(cfg.app_name, "mail");
+        assert_eq!(cfg.clients_per_round, 8);
+        assert_eq!(cfg.min_clients, 4);
+        assert!(cfg.secure_agg);
+        assert_eq!(cfg.vg_size, 4);
+        assert_eq!(
+            cfg.cohort,
+            CohortSpec::OverProvision { spawn_factor: 1.25 }
+        );
+    }
+
+    #[test]
+    fn build_validates() {
+        assert!(TaskBuilder::new("bad").clients_per_round(0).build().is_err());
+        assert!(TaskBuilder::new("bad")
+            .buffered_async(4)
+            .secure_agg(2)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn deploy_creates_started_task_and_handle_controls_it() {
+        let m = mgmt();
+        let handle = TaskBuilder::new("built")
+            .clients_per_round(2)
+            .rounds(1)
+            .deploy(&m, ModelSnapshot::new(0, vec![0.0; 2]))
+            .unwrap();
+        assert_eq!(handle.descriptor().unwrap().state, TaskState::Running);
+        handle.pause().unwrap();
+        assert_eq!(handle.descriptor().unwrap().state, TaskState::Paused);
+        handle.start().unwrap();
+        handle.cancel().unwrap();
+        assert_eq!(handle.descriptor().unwrap().state, TaskState::Cancelled);
+        let (desc, metrics, eps) = handle.status().unwrap();
+        assert_eq!(desc.task_id, handle.id());
+        assert_eq!(metrics.rounds.len(), 0);
+        assert!(eps.is_none());
+    }
+
+    #[test]
+    fn create_leaves_task_unstarted() {
+        let m = mgmt();
+        let handle = TaskBuilder::new("staged")
+            .clients_per_round(1)
+            .create(&m, ModelSnapshot::new(0, vec![0.0]))
+            .unwrap();
+        assert_eq!(handle.descriptor().unwrap().state, TaskState::Created);
+        handle.start().unwrap();
+        assert_eq!(handle.descriptor().unwrap().state, TaskState::Running);
+    }
+
+    #[test]
+    fn handle_subscription_is_task_scoped() {
+        let m = mgmt();
+        let a = TaskBuilder::new("a")
+            .deploy(&m, ModelSnapshot::new(0, vec![0.0]))
+            .unwrap();
+        let events_a = a.subscribe();
+        let b = TaskBuilder::new("b")
+            .deploy(&m, ModelSnapshot::new(0, vec![0.0]))
+            .unwrap();
+        b.pause().unwrap();
+        a.pause().unwrap();
+        let got = events_a.drain();
+        assert!(!got.is_empty());
+        assert!(got.iter().all(|ev| ev.task_id() == a.id()));
+        assert!(matches!(
+            got.last().unwrap(),
+            TaskEvent::TaskStateChanged {
+                state: TaskState::Paused,
+                ..
+            }
+        ));
+    }
+}

@@ -1,0 +1,1206 @@
+//! Per-task round engine: the typed phase state machine at the heart of
+//! the orchestrator (§3.1.1), parameterized by pluggable policies.
+//!
+//! ```text
+//!            ┌────────────── CohortPolicy::form ──────────────┐
+//!            ▼                                                │
+//!   Joining ──► Training ──(PacingPolicy: Commit)──► Committed ──► next round
+//!      ▲            │                                    ▲
+//!      │            ├──(secagg dropouts)──► Unmasking ───┘
+//!      │            │                          │
+//!      └── Failed ◄─┴──(PacingPolicy: Fail)────┘
+//! ```
+//!
+//! `Committed`/`Failed` are the explicit transition points
+//! ([`RoundEngine::commit_round`] / [`RoundEngine::fail_round`]): a
+//! committed round advances the model and re-enters `Joining` for the
+//! next round (or completes the task); a failed round re-enters
+//! `Joining` with the waiting pool intact. Every transition is emitted
+//! on the [`EventBus`], so dashboards and the simulator observe the
+//! lifecycle instead of polling `task_status`.
+//!
+//! Async tasks (§4.3) skip the barrier: every joiner trains immediately
+//! against the newest model; uploads fill a buffer that the pacing
+//! policy flushes (goal counts) with staleness-aware weighting (Papaya).
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::aggregation::{self, ClientUpdate};
+use crate::config::{FlMode, TaskConfig};
+use crate::dp::{DpMode, RdpAccountant};
+use crate::error::{Error, Result};
+use crate::metrics::{RoundRecord, TaskMetrics};
+use crate::model::ModelSnapshot;
+use crate::proto::msg::{PeerShare, RecoveredShare};
+use crate::proto::{RoundInstruction, RoundRole, TaskDescriptor, TaskState, TrainParams};
+use crate::quant::Quantizer;
+use crate::services::master_aggregator::MasterAggregator;
+use crate::services::secure_aggregator::SecAggRound;
+use crate::services::selection::SelectionService;
+use crate::util::Rng;
+
+use super::events::{EventBus, TaskEvent};
+use super::policy::{
+    ClientDirectory, CohortContext, CohortPolicy, PacingDecision, PacingPolicy, RoundProgress,
+};
+
+/// Server-side model evaluation hook (wired to the PJRT runtime by the
+/// simulator / server binary; `NoEval` for dummy tasks).
+pub trait Evaluator: Send + Sync {
+    /// Returns (eval_loss, eval_accuracy) for the given global params.
+    fn evaluate(&self, preset: &str, params: &[f32]) -> Option<(f64, f64)>;
+}
+
+/// No-op evaluator.
+pub struct NoEval;
+
+impl Evaluator for NoEval {
+    fn evaluate(&self, _preset: &str, _params: &[f32]) -> Option<(f64, f64)> {
+        None
+    }
+}
+
+/// Phase of the current sync round (internal to the engine — nothing
+/// outside `orchestrator/` matches on it).
+enum Phase {
+    /// Accumulating joiners; the pool holds (client, round pubkey).
+    Joining,
+    /// Cohort selected, clients training.
+    Training {
+        secagg: Option<SecAggRound>,
+        plain: Vec<ClientUpdate>,
+        uploaded: BTreeSet<u64>,
+        model_blob: Arc<Vec<u8>>,
+        base_version: u64,
+        deadline_ms: u64,
+    },
+    /// Waiting for survivors' unmask shares.
+    Unmasking {
+        secagg: SecAggRound,
+        deadline_ms: u64,
+    },
+}
+
+/// One federated task's orchestration state machine.
+pub struct RoundEngine {
+    pub id: u64,
+    pub config: TaskConfig,
+    pub state: TaskState,
+    /// Completed sync rounds / async flushes.
+    pub round: u64,
+    pub global: ModelSnapshot,
+    pub metrics: TaskMetrics,
+    pub accountant: Option<RdpAccountant>,
+
+    master: MasterAggregator,
+    rng: Rng,
+    phase: Phase,
+    cohort_policy: Box<dyn CohortPolicy>,
+    pacing: Box<dyn PacingPolicy>,
+    events: EventBus,
+    /// Sync: waiting joiners (client, per-round pubkey), FIFO.
+    join_pool: VecDeque<(u64, [u8; 32])>,
+    /// When the current joining phase started waiting (first joiner).
+    joining_since_ms: Option<u64>,
+    /// Current-round cohort (empty outside Training/Unmasking).
+    cohort: BTreeSet<u64>,
+    round_started_ms: u64,
+
+    // Async state.
+    buffer: Vec<ClientUpdate>,
+    async_joined: BTreeSet<u64>,
+    last_flush_ms: u64,
+}
+
+impl RoundEngine {
+    /// Build an engine with policies derived from the config
+    /// (`config.cohort` spec; pacing from the sync/async mode).
+    pub fn new(
+        id: u64,
+        config: TaskConfig,
+        global: ModelSnapshot,
+        seed: u64,
+        events: EventBus,
+    ) -> Result<RoundEngine> {
+        let cohort_policy = config.cohort.build();
+        let pacing = super::policy::default_pacing(config.mode);
+        Self::with_policies(id, config, global, seed, events, cohort_policy, pacing)
+    }
+
+    /// Build an engine with explicit policy objects (custom policies the
+    /// config cannot express — tests, experiments).
+    pub fn with_policies(
+        id: u64,
+        config: TaskConfig,
+        global: ModelSnapshot,
+        seed: u64,
+        events: EventBus,
+        cohort_policy: Box<dyn CohortPolicy>,
+        pacing: Box<dyn PacingPolicy>,
+    ) -> Result<RoundEngine> {
+        config.validate()?;
+        let strategy = aggregation::by_name(&config.aggregator, config.prox_mu)?;
+        let master = MasterAggregator::new(strategy, config.dp, config.server_lr);
+        let accountant = if config.dp.mode != DpMode::Off {
+            Some(RdpAccountant::new())
+        } else {
+            None
+        };
+        Ok(RoundEngine {
+            id,
+            config,
+            state: TaskState::Created,
+            round: 0,
+            global,
+            metrics: TaskMetrics::default(),
+            accountant,
+            master,
+            rng: Rng::new(seed),
+            phase: Phase::Joining,
+            cohort_policy,
+            pacing,
+            events,
+            join_pool: VecDeque::new(),
+            joining_since_ms: None,
+            cohort: BTreeSet::new(),
+            round_started_ms: 0,
+            buffer: Vec::new(),
+            async_joined: BTreeSet::new(),
+            last_flush_ms: 0,
+        })
+    }
+
+    pub fn descriptor(&self) -> TaskDescriptor {
+        TaskDescriptor {
+            task_id: self.id,
+            task_name: self.config.task_name.clone(),
+            app_name: self.config.app_name.clone(),
+            workflow_name: self.config.workflow_name.clone(),
+            state: self.state,
+            round: self.round,
+            total_rounds: self.config.total_rounds,
+        }
+    }
+
+    /// Current phase, for status surfaces ("joining" | "training" |
+    /// "unmasking") — the phase itself never leaves the orchestrator.
+    pub fn phase_name(&self) -> &'static str {
+        match self.phase {
+            Phase::Joining => "joining",
+            Phase::Training { .. } => "training",
+            Phase::Unmasking { .. } => "unmasking",
+        }
+    }
+
+    pub fn epsilon(&self) -> Option<f64> {
+        self.accountant
+            .as_ref()
+            .and_then(|a| a.epsilon(1e-5).ok())
+            .map(|(e, _)| e)
+    }
+
+    fn train_params(&self) -> TrainParams {
+        TrainParams {
+            preset: self.config.preset.clone(),
+            lr: self.config.client_lr,
+            prox_mu: self.config.prox_mu,
+        }
+    }
+
+    fn emit(&self, event: TaskEvent) {
+        self.events.emit(event);
+    }
+
+    fn set_state(&mut self, state: TaskState) {
+        self.state = state;
+        self.emit(TaskEvent::TaskStateChanged {
+            task_id: self.id,
+            state,
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // Lifecycle transitions
+    // -----------------------------------------------------------------
+
+    pub fn start(&mut self) -> Result<()> {
+        match self.state {
+            TaskState::Created | TaskState::Paused => {
+                self.set_state(TaskState::Running);
+                Ok(())
+            }
+            s => Err(Error::Task(format!("cannot start task in state {}", s.name()))),
+        }
+    }
+
+    pub fn pause(&mut self) -> Result<()> {
+        if self.state == TaskState::Running {
+            self.set_state(TaskState::Paused);
+            Ok(())
+        } else {
+            Err(Error::Task(format!("cannot pause {}", self.state.name())))
+        }
+    }
+
+    pub fn cancel(&mut self) {
+        self.set_state(TaskState::Cancelled);
+    }
+
+    // -----------------------------------------------------------------
+    // Client-facing transitions
+    // -----------------------------------------------------------------
+
+    /// A client asks to participate in the next round.
+    pub fn join(
+        &mut self,
+        client_id: u64,
+        pubkey: [u8; 32],
+        now_ms: u64,
+    ) -> Result<(bool, String)> {
+        if self.state != TaskState::Running {
+            return Ok((false, format!("task is {}", self.state.name())));
+        }
+        match self.config.mode {
+            FlMode::Sync => {
+                if self.cohort.contains(&client_id)
+                    || self.join_pool.iter().any(|&(c, _)| c == client_id)
+                {
+                    return Ok((false, "already joined".into()));
+                }
+                self.join_pool.push_back((client_id, pubkey));
+                if self.joining_since_ms.is_none() {
+                    self.joining_since_ms = Some(now_ms);
+                }
+                self.emit(TaskEvent::ClientJoined {
+                    task_id: self.id,
+                    client_id,
+                });
+                Ok((true, String::new()))
+            }
+            FlMode::Async { .. } => {
+                if self.async_joined.insert(client_id) {
+                    self.emit(TaskEvent::ClientJoined {
+                        task_id: self.id,
+                        client_id,
+                    });
+                }
+                Ok((true, String::new()))
+            }
+        }
+    }
+
+    /// A client polls for its current obligation.
+    pub fn fetch(
+        &mut self,
+        client_id: u64,
+        dir: &dyn ClientDirectory,
+        now_ms: u64,
+    ) -> Result<RoundRole> {
+        match self.state {
+            TaskState::Completed | TaskState::Cancelled | TaskState::Failed => {
+                return Ok(RoundRole::TaskDone)
+            }
+            TaskState::Paused | TaskState::Created => return Ok(RoundRole::Wait),
+            TaskState::Running => {}
+        }
+        if let FlMode::Async { .. } = self.config.mode {
+            if !self.async_joined.contains(&client_id) {
+                return Ok(RoundRole::RoundDone); // join first
+            }
+            // Train against the freshest model, no barrier.
+            let blob = self.global.to_compressed()?;
+            return Ok(RoundRole::Train(RoundInstruction {
+                round: self.round,
+                model_blob: blob,
+                train: self.train_params(),
+                secagg: None,
+                deadline_ms: now_ms + self.config.round_timeout_ms,
+            }));
+        }
+        // Sync path: try to advance Joining → Training first.
+        self.maybe_form_cohort(dir, now_ms)?;
+        match &self.phase {
+            Phase::Joining => {
+                if self.join_pool.iter().any(|&(c, _)| c == client_id) {
+                    Ok(RoundRole::Wait)
+                } else {
+                    Ok(RoundRole::RoundDone)
+                }
+            }
+            Phase::Training {
+                secagg,
+                uploaded,
+                model_blob,
+                deadline_ms,
+                ..
+            } => {
+                if !self.cohort.contains(&client_id) {
+                    if self.join_pool.iter().any(|&(c, _)| c == client_id) {
+                        return Ok(RoundRole::Wait); // queued for next round
+                    }
+                    return Ok(RoundRole::NotSelected);
+                }
+                if uploaded.contains(&client_id) {
+                    return Ok(RoundRole::Wait);
+                }
+                let sa = match secagg {
+                    Some(s) => Some(s.setup_for(client_id)?),
+                    None => None,
+                };
+                Ok(RoundRole::Train(RoundInstruction {
+                    round: self.round,
+                    model_blob: model_blob.as_ref().clone(),
+                    train: self.train_params(),
+                    secagg: sa,
+                    deadline_ms: *deadline_ms,
+                }))
+            }
+            Phase::Unmasking { secagg, .. } => {
+                if let Some(req) = secagg.unmask_request_for(client_id) {
+                    Ok(RoundRole::Unmask(req))
+                } else if self.cohort.contains(&client_id) {
+                    Ok(RoundRole::Wait)
+                } else {
+                    Ok(RoundRole::NotSelected)
+                }
+            }
+        }
+    }
+
+    /// Plaintext upload (secure_agg = false, or async).
+    #[allow(clippy::too_many_arguments)]
+    pub fn accept_plain(
+        &mut self,
+        client_id: u64,
+        round: u64,
+        base_version: u64,
+        delta: Vec<f32>,
+        weight: f64,
+        loss: f64,
+        eval: &dyn Evaluator,
+        now_ms: u64,
+    ) -> Result<(bool, String)> {
+        if self.state != TaskState::Running {
+            return Ok((false, format!("task is {}", self.state.name())));
+        }
+        if delta.len() != self.global.dim() {
+            return Ok((
+                false,
+                format!("dim {} != {}", delta.len(), self.global.dim()),
+            ));
+        }
+        if !(weight.is_finite() && weight > 0.0 && weight < 1e9) {
+            return Ok((false, format!("bad weight {weight}")));
+        }
+        self.metrics.total_uploads += 1;
+        if let FlMode::Async { buffer_size } = self.config.mode {
+            if !self.async_joined.contains(&client_id) {
+                return Ok((false, "join first".into()));
+            }
+            let staleness = self.global.version.saturating_sub(base_version);
+            self.buffer.push(ClientUpdate {
+                client_id,
+                delta,
+                weight,
+                loss,
+                staleness,
+            });
+            let progress = RoundProgress {
+                cohort: buffer_size,
+                reported: self.buffer.len(),
+                now_ms,
+                deadline_ms: u64::MAX,
+                min_report_fraction: self.config.min_report_fraction,
+            };
+            if self.pacing.assess(&progress) == PacingDecision::Commit {
+                self.flush_async(eval, now_ms)?;
+            }
+            return Ok((true, String::new()));
+        }
+        // Sync plaintext round.
+        let progress = match &mut self.phase {
+            Phase::Training {
+                secagg: None,
+                plain,
+                uploaded,
+                base_version: bv,
+                deadline_ms,
+                ..
+            } => {
+                if round != self.round {
+                    return Ok((false, format!("stale round {round} (now {})", self.round)));
+                }
+                if !self.cohort.contains(&client_id) {
+                    return Ok((false, "not in cohort".into()));
+                }
+                // Validate before marking uploaded: a rejected upload
+                // must leave the client free to retry.
+                if base_version != *bv {
+                    return Ok((false, format!("base version {base_version} != {bv}")));
+                }
+                if !uploaded.insert(client_id) {
+                    return Ok((false, "duplicate upload".into()));
+                }
+                plain.push(ClientUpdate {
+                    client_id,
+                    delta,
+                    weight,
+                    loss,
+                    staleness: 0,
+                });
+                RoundProgress {
+                    cohort: self.cohort.len(),
+                    reported: uploaded.len(),
+                    now_ms,
+                    deadline_ms: *deadline_ms,
+                    min_report_fraction: self.config.min_report_fraction,
+                }
+            }
+            Phase::Training { secagg: Some(_), .. } => {
+                return Ok((false, "task requires masked uploads".into()))
+            }
+            _ => return Ok((false, "no round in progress".into())),
+        };
+        // Uploads only ever commit; deadline failure stays tick()'s job.
+        if self.pacing.assess(&progress) == PacingDecision::Commit {
+            self.try_commit(eval, now_ms);
+        }
+        Ok((true, String::new()))
+    }
+
+    /// Masked upload (secure aggregation path).
+    pub fn accept_masked(
+        &mut self,
+        client_id: u64,
+        round: u64,
+        vg_id: u32,
+        masked: &[u32],
+        loss: f64,
+        eval: &dyn Evaluator,
+        now_ms: u64,
+    ) -> Result<(bool, String)> {
+        if self.state != TaskState::Running {
+            return Ok((false, format!("task is {}", self.state.name())));
+        }
+        if round != self.round {
+            return Ok((false, format!("stale round {round}")));
+        }
+        self.metrics.total_uploads += 1;
+        let progress = match &mut self.phase {
+            Phase::Training {
+                secagg: Some(sa),
+                uploaded,
+                deadline_ms,
+                ..
+            } => {
+                if let Err(e) = sa.accept_masked(client_id, vg_id, masked, loss) {
+                    return Ok((false, e.to_string()));
+                }
+                uploaded.insert(client_id);
+                RoundProgress {
+                    cohort: self.cohort.len(),
+                    reported: uploaded.len(),
+                    now_ms,
+                    deadline_ms: *deadline_ms,
+                    min_report_fraction: self.config.min_report_fraction,
+                }
+            }
+            _ => return Ok((false, "no masked round in progress".into())),
+        };
+        // Uploads only ever commit; deadline failure stays tick()'s job.
+        if self.pacing.assess(&progress) == PacingDecision::Commit {
+            self.try_commit(eval, now_ms);
+        }
+        Ok((true, String::new()))
+    }
+
+    /// Encrypted Shamir shares for the current secagg round.
+    pub fn accept_shares(
+        &mut self,
+        client_id: u64,
+        round: u64,
+        shares: Vec<PeerShare>,
+    ) -> Result<(bool, String)> {
+        if round != self.round {
+            return Ok((false, format!("stale round {round}")));
+        }
+        match &mut self.phase {
+            Phase::Training {
+                secagg: Some(sa), ..
+            } => match sa.accept_shares(client_id, shares) {
+                Ok(()) => Ok((true, String::new())),
+                Err(e) => Ok((false, e.to_string())),
+            },
+            _ => Ok((false, "no secagg round in progress".into())),
+        }
+    }
+
+    /// Plaintext shares recovered by survivors (unmask phase).
+    pub fn accept_unmask(
+        &mut self,
+        client_id: u64,
+        round: u64,
+        shares: Vec<RecoveredShare>,
+        eval: &dyn Evaluator,
+        now_ms: u64,
+    ) -> Result<(bool, String)> {
+        if round != self.round {
+            return Ok((false, format!("stale round {round}")));
+        }
+        let complete = match &mut self.phase {
+            Phase::Unmasking { secagg, .. } => {
+                if let Err(e) = secagg.accept_recovered(client_id, shares) {
+                    return Ok((false, e.to_string()));
+                }
+                !secagg.needs_unmasking()
+            }
+            _ => return Ok((false, "no unmask phase in progress".into())),
+        };
+        if complete {
+            self.try_commit(eval, now_ms);
+        }
+        Ok((true, String::new()))
+    }
+
+    /// Deadline sweep: advance degraded cohorts and consult the pacing
+    /// policy once the open round's deadline has passed.
+    pub fn tick(&mut self, eval: &dyn Evaluator, dir: &dyn ClientDirectory, now_ms: u64) {
+        if self.state != TaskState::Running {
+            return;
+        }
+        if matches!(self.phase, Phase::Joining) {
+            // Degraded cohort formation after the join grace (min_clients).
+            if let Err(e) = self.maybe_form_cohort(dir, now_ms) {
+                log::warn!("task {}: cohort formation failed: {e}", self.id);
+            }
+            return;
+        }
+        let (deadline_ms, reported) = match &self.phase {
+            Phase::Training {
+                secagg,
+                uploaded,
+                deadline_ms,
+                ..
+            } => (
+                *deadline_ms,
+                match secagg {
+                    Some(sa) => sa.uploaded_count(),
+                    None => uploaded.len(),
+                },
+            ),
+            // Unmasking only begins once upload quorum was met; the
+            // deadline decision reuses that quorum.
+            Phase::Unmasking { deadline_ms, .. } => (*deadline_ms, self.cohort.len()),
+            Phase::Joining => unreachable!("handled above"),
+        };
+        if now_ms < deadline_ms {
+            return;
+        }
+        let progress = RoundProgress {
+            cohort: self.cohort.len(),
+            reported,
+            now_ms,
+            deadline_ms,
+            min_report_fraction: self.config.min_report_fraction,
+        };
+        match self.pacing.assess(&progress) {
+            PacingDecision::Wait => {}
+            PacingDecision::Commit => self.try_commit(eval, now_ms),
+            PacingDecision::Fail => {
+                let quorum = progress.quorum();
+                log::warn!(
+                    "task {}: round {} missed quorum ({reported}/{quorum}) — retrying",
+                    self.id,
+                    self.round
+                );
+                self.emit(TaskEvent::QuorumMissed {
+                    task_id: self.id,
+                    round: self.round,
+                    reported,
+                    quorum,
+                });
+                self.fail_round();
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Internal transitions (Joining → Training → Unmasking → Committed/Failed)
+    // -----------------------------------------------------------------
+
+    /// Joining → Training, when the cohort policy says the pool is ready.
+    fn maybe_form_cohort(&mut self, dir: &dyn ClientDirectory, now_ms: u64) -> Result<()> {
+        if !matches!(self.phase, Phase::Joining) || self.state != TaskState::Running {
+            return Ok(());
+        }
+        if self.joining_since_ms.is_none() && !self.join_pool.is_empty() {
+            self.joining_since_ms = Some(now_ms);
+        }
+        let pool: Vec<u64> = self.join_pool.iter().map(|&(c, _)| c).collect();
+        let target = self.config.clients_per_round;
+        let min_clients = if self.config.min_clients == 0 {
+            target
+        } else {
+            self.config.min_clients.min(target)
+        };
+        let waited_ms = self
+            .joining_since_ms
+            .map(|t0| now_ms.saturating_sub(t0))
+            .unwrap_or(0);
+        let ctx = CohortContext {
+            pool: &pool,
+            target,
+            min_clients,
+            waited_ms,
+            grace_ms: self.config.round_timeout_ms,
+            directory: dir,
+        };
+        let cohort_ids = match self.cohort_policy.form(&ctx, &mut self.rng) {
+            Some(ids) => ids,
+            None => return Ok(()),
+        };
+        let cohort_set: BTreeSet<u64> = cohort_ids.iter().copied().collect();
+        let mut keys: HashMap<u64, [u8; 32]> = HashMap::new();
+        self.join_pool.retain(|&(c, pk)| {
+            if cohort_set.contains(&c) {
+                keys.insert(c, pk);
+                false
+            } else {
+                true
+            }
+        });
+        let model_blob = Arc::new(self.global.to_compressed()?);
+        let secagg = if self.config.secure_agg {
+            let groups_ids =
+                SelectionService::form_virtual_groups(&cohort_ids, self.config.vg_size);
+            let groups: Vec<Vec<(u64, [u8; 32])>> = groups_ids
+                .iter()
+                .map(|g| g.iter().map(|c| (*c, keys[c])).collect())
+                .collect();
+            let quant = Quantizer::new(self.config.quant_range, self.config.quant_bits)?;
+            Some(SecAggRound::new(
+                self.id,
+                self.round,
+                groups,
+                quant,
+                self.global.dim(),
+                0.6,
+            ))
+        } else {
+            None
+        };
+        let cohort_size = cohort_set.len();
+        self.cohort = cohort_set;
+        self.joining_since_ms = None;
+        self.round_started_ms = now_ms;
+        let deadline_ms = self
+            .pacing
+            .deadline_ms(now_ms, self.config.round_timeout_ms);
+        self.phase = Phase::Training {
+            secagg,
+            plain: Vec::new(),
+            uploaded: BTreeSet::new(),
+            model_blob,
+            base_version: self.global.version,
+            deadline_ms,
+        };
+        log::info!(
+            "task {}: round {} cohort formed ({} clients, {} policy{})",
+            self.id,
+            self.round,
+            cohort_size,
+            self.cohort_policy.name(),
+            if self.config.secure_agg { ", secagg" } else { "" }
+        );
+        self.emit(TaskEvent::RoundStarted {
+            task_id: self.id,
+            round: self.round,
+            cohort: cohort_size,
+        });
+        Ok(())
+    }
+
+    /// Commit with failure containment: a commit error fails the round
+    /// (joiners stay queued, round retries) instead of leaving a
+    /// half-torn phase behind. Shared by the upload paths and `tick()`.
+    fn try_commit(&mut self, eval: &dyn Evaluator, now_ms: u64) {
+        if let Err(e) = self.commit_round(eval, now_ms) {
+            log::warn!("task {}: round finish failed: {e}", self.id);
+            self.fail_round();
+        }
+    }
+
+    /// Training/Unmasking → Committed: aggregate (possibly via the unmask
+    /// detour), update the model, record metrics, advance or finish.
+    fn commit_round(&mut self, eval: &dyn Evaluator, now_ms: u64) -> Result<()> {
+        // Take the phase out to appease the borrow checker.
+        let phase = std::mem::replace(&mut self.phase, Phase::Joining);
+        match phase {
+            Phase::Training {
+                secagg: Some(mut sa),
+                uploaded,
+                deadline_ms,
+                ..
+            } => {
+                if sa.needs_unmasking() {
+                    log::info!(
+                        "task {}: round {} has dropouts — entering unmask phase",
+                        self.id,
+                        self.round
+                    );
+                    let _ = uploaded;
+                    self.enter_unmasking(sa, deadline_ms + self.config.round_timeout_ms);
+                    return Ok(());
+                }
+                let interims = sa.finalize()?;
+                if interims.is_empty() {
+                    return Err(Error::SecAgg("no usable VG interims".into()));
+                }
+                let participants =
+                    self.master
+                        .apply_interims(&mut self.global, &interims, &mut self.rng)?;
+                let loss = interims.iter().map(|i| i.mean_loss).sum::<f64>()
+                    / interims.len() as f64;
+                self.record_round(eval, participants, loss, now_ms);
+            }
+            Phase::Training {
+                secagg: None,
+                plain,
+                ..
+            } => {
+                if plain.is_empty() {
+                    return Err(Error::Task("no uploads to aggregate".into()));
+                }
+                let loss = plain.iter().map(|u| u.loss).sum::<f64>() / plain.len() as f64;
+                let participants =
+                    self.master.apply_plain(&mut self.global, &plain, &mut self.rng)?;
+                self.record_round(eval, participants, loss, now_ms);
+            }
+            Phase::Unmasking { mut secagg, .. } => {
+                let interims = secagg.finalize()?;
+                if interims.is_empty() {
+                    return Err(Error::SecAgg("all VGs poisoned".into()));
+                }
+                let participants =
+                    self.master
+                        .apply_interims(&mut self.global, &interims, &mut self.rng)?;
+                let loss = interims.iter().map(|i| i.mean_loss).sum::<f64>()
+                    / interims.len() as f64;
+                self.record_round(eval, participants, loss, now_ms);
+            }
+            Phase::Joining => return Err(Error::Task("commit_round in Joining".into())),
+        }
+        Ok(())
+    }
+
+    /// Training → Unmasking (secagg dropouts need share recovery).
+    fn enter_unmasking(&mut self, secagg: SecAggRound, deadline_ms: u64) {
+        self.phase = Phase::Unmasking { secagg, deadline_ms };
+    }
+
+    fn record_round(
+        &mut self,
+        eval: &dyn Evaluator,
+        participants: usize,
+        train_loss: f64,
+        now_ms: u64,
+    ) {
+        if let Some(acc) = &mut self.accountant {
+            let q = (participants as f64 / self.config.dp_population as f64).min(1.0);
+            let _ = acc.step(q, self.config.dp.noise_multiplier);
+        }
+        let evald = eval.evaluate(&self.config.preset, &self.global.params);
+        let epsilon = self.epsilon();
+        self.metrics.push(RoundRecord {
+            round: self.round,
+            started_ms: self.round_started_ms,
+            ended_ms: now_ms,
+            participants,
+            train_loss,
+            eval_loss: evald.map(|(l, _)| l),
+            eval_accuracy: evald.map(|(_, a)| a),
+            epsilon,
+        });
+        self.emit(TaskEvent::RoundCommitted {
+            task_id: self.id,
+            round: self.round,
+            participants,
+            train_loss,
+        });
+        self.cohort.clear();
+        self.round += 1;
+        if self.round >= self.config.total_rounds {
+            self.set_state(TaskState::Completed);
+            self.emit(TaskEvent::TaskCompleted { task_id: self.id });
+            log::info!("task {}: completed after {} rounds", self.id, self.round);
+        }
+    }
+
+    /// Training/Unmasking → Failed → Joining: abandon the round; joiners
+    /// stay queued, stragglers may rejoin.
+    fn fail_round(&mut self) {
+        self.metrics.failed_rounds += 1;
+        self.cohort.clear();
+        self.phase = Phase::Joining;
+        self.emit(TaskEvent::RoundFailed {
+            task_id: self.id,
+            round: self.round,
+        });
+    }
+
+    /// Async path: flush the buffered updates into the model.
+    fn flush_async(&mut self, eval: &dyn Evaluator, now_ms: u64) -> Result<()> {
+        let updates = std::mem::take(&mut self.buffer);
+        let participants =
+            self.master.apply_plain(&mut self.global, &updates, &mut self.rng)?;
+        let loss = updates.iter().map(|u| u.loss).sum::<f64>() / updates.len() as f64;
+        self.round_started_ms = self.last_flush_ms;
+        self.last_flush_ms = now_ms;
+        self.record_round(eval, participants, loss, now_ms);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::policy::{GoalCount, NullDirectory, UniformRandom};
+
+    fn engine(cfg: TaskConfig, dim: usize) -> (RoundEngine, EventBus) {
+        let bus = EventBus::new();
+        let mut e = RoundEngine::new(1, cfg, ModelSnapshot::new(0, vec![0.0; dim]), 7, bus.clone())
+            .unwrap();
+        e.start().unwrap();
+        (e, bus)
+    }
+
+    fn small_cfg(n: usize, rounds: u64) -> TaskConfig {
+        let mut c = TaskConfig::default();
+        c.clients_per_round = n;
+        c.total_rounds = rounds;
+        c.round_timeout_ms = 1000;
+        c
+    }
+
+    /// Join + fetch + upload for `uploaders` of `joiners` clients.
+    fn drive_round(e: &mut RoundEngine, joiners: u64, uploaders: u64, now: u64) {
+        for c in 1..=joiners {
+            e.join(c, [0u8; 32], now).unwrap();
+        }
+        let dir = NullDirectory;
+        for c in 1..=joiners {
+            let _ = e.fetch(c, &dir, now).unwrap();
+        }
+        let round = e.round;
+        let version = e.global.version;
+        let dim = e.global.dim();
+        for c in 1..=uploaders {
+            let (ok, why) = e
+                .accept_plain(c, round, version, vec![0.1; dim], 1.0, 0.5, &NoEval, now + 10)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+    }
+
+    #[test]
+    fn full_round_commits_and_advances_model() {
+        let (mut e, bus) = engine(small_cfg(3, 2), 4);
+        let stream = bus.subscribe();
+        drive_round(&mut e, 3, 3, 0);
+        assert_eq!(e.round, 1);
+        assert_eq!(e.metrics.rounds.len(), 1);
+        assert!((e.global.params[0] - 0.1).abs() < 1e-6);
+        let kinds: Vec<&'static str> = stream.drain().iter().map(|ev| ev.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "client_joined",
+                "client_joined",
+                "client_joined",
+                "round_started",
+                "round_committed",
+            ]
+        );
+    }
+
+    #[test]
+    fn tick_deadline_with_quorum_commits_partial_round() {
+        let mut cfg = small_cfg(4, 1);
+        cfg.min_report_fraction = 0.5;
+        let (mut e, bus) = engine(cfg, 4);
+        let stream = bus.subscribe();
+        drive_round(&mut e, 4, 3, 0); // only 3 of 4 upload
+        assert_eq!(e.round, 0, "round must still be open");
+        e.tick(&NoEval, &NullDirectory, 2000); // past deadline (1000)
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 3);
+        assert_eq!(e.metrics.failed_rounds, 0);
+        assert!(stream
+            .drain()
+            .iter()
+            .any(|ev| ev.kind() == "task_completed"));
+    }
+
+    #[test]
+    fn tick_deadline_without_quorum_fails_and_retries() {
+        let mut cfg = small_cfg(4, 1);
+        cfg.min_report_fraction = 0.9; // quorum 4
+        let (mut e, bus) = engine(cfg, 4);
+        let stream = bus.subscribe();
+        drive_round(&mut e, 4, 1, 0);
+        e.tick(&NoEval, &NullDirectory, 5000);
+        assert_eq!(e.round, 0);
+        assert_eq!(e.metrics.failed_rounds, 1);
+        assert_eq!(e.state, TaskState::Running);
+        assert_eq!(e.phase_name(), "joining");
+        let events = stream.drain();
+        let quorum_missed = events
+            .iter()
+            .find(|ev| ev.kind() == "quorum_missed")
+            .expect("quorum_missed event");
+        match quorum_missed {
+            TaskEvent::QuorumMissed {
+                reported, quorum, ..
+            } => {
+                assert_eq!(*reported, 1);
+                assert_eq!(*quorum, 4);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(events.iter().any(|ev| ev.kind() == "round_failed"));
+    }
+
+    #[test]
+    fn tick_unmask_deadline_without_shares_fails_round() {
+        // SecAgg round where one member never uploads and nobody ever
+        // deposited Shamir shares: the Training deadline enters the
+        // unmask phase, and the *Unmasking* deadline must fail the round
+        // (all VGs poisoned) instead of hanging on "quorum known met".
+        let mut cfg = small_cfg(4, 1);
+        cfg.secure_agg = true;
+        cfg.vg_size = 4;
+        cfg.min_report_fraction = 0.5;
+        let (mut e, bus) = engine(cfg, 4);
+        let stream = bus.subscribe();
+        let dir = NullDirectory;
+        for c in 1..=4u64 {
+            e.join(c, [c as u8; 32], 0).unwrap();
+        }
+        for c in 1..=4u64 {
+            let _ = e.fetch(c, &dir, 0).unwrap();
+        }
+        assert_eq!(e.phase_name(), "training");
+        for c in 1..=3u64 {
+            let (ok, why) = e
+                .accept_masked(c, 0, 0, &[7u32; 4], 0.2, &NoEval, 10)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+        // Training deadline: quorum met (3/4 ≥ 0.5) but client 4 dropped
+        // → unmask phase with a fresh deadline.
+        e.tick(&NoEval, &NullDirectory, 1500);
+        assert_eq!(e.phase_name(), "unmasking");
+        assert_eq!(e.state, TaskState::Running);
+        // Unmask deadline passes with no recovered shares → VG poisoned
+        // → round fails and retries; the task does not hang or complete.
+        e.tick(&NoEval, &NullDirectory, 3000);
+        assert_eq!(e.phase_name(), "joining");
+        assert_eq!(e.round, 0);
+        assert_eq!(e.metrics.failed_rounds, 1);
+        assert_eq!(e.state, TaskState::Running);
+        assert!(stream.drain().iter().any(|ev| ev.kind() == "round_failed"));
+    }
+
+    #[test]
+    fn min_clients_floor_forms_degraded_cohort_after_grace() {
+        let mut cfg = small_cfg(4, 1);
+        cfg.min_clients = 2;
+        let (mut e, _bus) = engine(cfg, 4);
+        let dir = NullDirectory;
+        // Only 2 of the 4 requested clients ever join.
+        e.join(1, [0u8; 32], 0).unwrap();
+        e.join(2, [0u8; 32], 0).unwrap();
+        // Inside the join grace: still waiting.
+        e.tick(&NoEval, &dir, 500);
+        assert_eq!(e.phase_name(), "joining");
+        // Grace (round_timeout_ms = 1000) elapsed: degraded cohort of 2.
+        e.tick(&NoEval, &dir, 1100);
+        assert_eq!(e.phase_name(), "training");
+        let round = e.round;
+        for c in 1..=2u64 {
+            let (ok, why) = e
+                .accept_plain(c, round, 0, vec![0.5; 4], 1.0, 0.1, &NoEval, 1200)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 2);
+    }
+
+    #[test]
+    fn over_provision_policy_drafts_extra_clients() {
+        let mut cfg = small_cfg(4, 1);
+        cfg.cohort = crate::config::CohortSpec::OverProvision { spawn_factor: 1.5 };
+        cfg.min_report_fraction = 0.5;
+        let (mut e, _bus) = engine(cfg, 4);
+        let dir = NullDirectory;
+        for c in 1..=6u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+        }
+        let mut training = 0;
+        for c in 1..=6u64 {
+            if matches!(e.fetch(c, &dir, 0).unwrap(), RoundRole::Train(_)) {
+                training += 1;
+            }
+        }
+        // ceil(4 × 1.5) = 6 drafted: dropouts no longer stall the round.
+        assert_eq!(training, 6);
+        // 4 of 6 report; deadline commits with the survivors.
+        let round = e.round;
+        for c in 1..=4u64 {
+            e.accept_plain(c, round, 0, vec![1.0; 4], 1.0, 0.1, &NoEval, 10)
+                .unwrap();
+        }
+        e.tick(&NoEval, &dir, 2000);
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 4);
+    }
+
+    #[test]
+    fn async_goal_count_flushes_buffer() {
+        let mut cfg = small_cfg(4, 2);
+        cfg.mode = FlMode::Async { buffer_size: 3 };
+        cfg.aggregator = "fedbuff".into();
+        let (mut e, bus) = engine(cfg, 4);
+        let stream = bus.subscribe();
+        let dir = NullDirectory;
+        for c in 1..=4u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+            assert!(matches!(e.fetch(c, &dir, 0).unwrap(), RoundRole::Train(_)));
+        }
+        for c in 1..=3u64 {
+            let (ok, _) = e
+                .accept_plain(c, 0, 0, vec![0.3; 4], 1.0, 0.5, &NoEval, 100)
+                .unwrap();
+            assert!(ok);
+        }
+        assert_eq!(e.round, 1); // flush #1 at the goal count
+        for c in 1..=3u64 {
+            e.accept_plain(c, 1, 0, vec![0.3; 4], 1.0, 0.4, &NoEval, 200)
+                .unwrap();
+        }
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(
+            stream
+                .drain()
+                .iter()
+                .filter(|ev| ev.kind() == "round_committed")
+                .count(),
+            2
+        );
+    }
+
+    #[test]
+    fn version_mismatch_upload_can_be_retried() {
+        let (mut e, _bus) = engine(small_cfg(2, 1), 2);
+        let dir = NullDirectory;
+        for c in 1..=2u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+        }
+        for c in 1..=2u64 {
+            let _ = e.fetch(c, &dir, 0).unwrap();
+        }
+        // Wrong base version is rejected without consuming the client's
+        // upload slot…
+        let (ok, why) = e
+            .accept_plain(1, 0, 99, vec![0.1; 2], 1.0, 0.1, &NoEval, 5)
+            .unwrap();
+        assert!(!ok);
+        assert!(why.contains("base version"), "{why}");
+        // …so a corrected retry succeeds and the round still commits
+        // with both participants.
+        let (ok, why) = e
+            .accept_plain(1, 0, 0, vec![0.1; 2], 1.0, 0.1, &NoEval, 6)
+            .unwrap();
+        assert!(ok, "{why}");
+        let (ok, _) = e
+            .accept_plain(2, 0, 0, vec![0.1; 2], 1.0, 0.1, &NoEval, 7)
+            .unwrap();
+        assert!(ok);
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 2);
+    }
+
+    #[test]
+    fn custom_goal_pacing_commits_early_on_sync_uploads() {
+        // The pacing seam is honored on the upload path, not just tick():
+        // a GoalCount policy on a sync task commits as soon as the goal
+        // is met instead of waiting for the full cohort or the deadline.
+        let bus = EventBus::new();
+        let mut e = RoundEngine::with_policies(
+            5,
+            small_cfg(4, 1),
+            ModelSnapshot::new(0, vec![0.0; 2]),
+            3,
+            bus,
+            Box::new(UniformRandom),
+            Box::new(GoalCount { goal: 2 }),
+        )
+        .unwrap();
+        e.start().unwrap();
+        let dir = NullDirectory;
+        for c in 1..=4u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+        }
+        for c in 1..=4u64 {
+            let _ = e.fetch(c, &dir, 0).unwrap();
+        }
+        for c in 1..=2u64 {
+            let (ok, why) = e
+                .accept_plain(c, 0, 0, vec![1.0; 2], 1.0, 0.1, &NoEval, 10)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+        // Committed at the goal — stragglers dropped, no deadline wait.
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 2);
+    }
+
+    #[test]
+    fn lifecycle_transitions_enforced_and_observable() {
+        let bus = EventBus::new();
+        let mut e = RoundEngine::new(
+            9,
+            small_cfg(2, 3),
+            ModelSnapshot::new(0, vec![0.0; 2]),
+            1,
+            bus.clone(),
+        )
+        .unwrap();
+        let stream = bus.subscribe_task(9);
+        assert!(e.pause().is_err()); // created → pause invalid
+        e.start().unwrap();
+        e.pause().unwrap();
+        e.start().unwrap();
+        e.cancel();
+        assert!(e.start().is_err());
+        let states: Vec<TaskState> = stream
+            .drain()
+            .into_iter()
+            .filter_map(|ev| match ev {
+                TaskEvent::TaskStateChanged { state, .. } => Some(state),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            states,
+            vec![
+                TaskState::Running,
+                TaskState::Paused,
+                TaskState::Running,
+                TaskState::Cancelled,
+            ]
+        );
+    }
+}

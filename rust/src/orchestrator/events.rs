@@ -1,0 +1,260 @@
+//! Task lifecycle events (§3.3 observability): dashboards, the CLI and
+//! the simulator subscribe to a [`TaskEvent`] stream instead of polling
+//! `task_status`.
+//!
+//! The bus is deliberately simple: every subscriber gets every event
+//! (optionally filtered to one task), delivery is best-effort in-process
+//! mpsc, and dropped receivers are pruned on the next emit. Emission
+//! happens while the management registry lock is held, so handlers must
+//! never call back into the platform synchronously — they receive on
+//! their own thread.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::proto::TaskState;
+
+/// One observable lifecycle transition.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TaskEvent {
+    /// Task moved between lifecycle states (start/pause/cancel/complete).
+    TaskStateChanged { task_id: u64, state: TaskState },
+    /// A client was admitted to the join pool (sync) or enrolled (async).
+    ClientJoined { task_id: u64, client_id: u64 },
+    /// A cohort formed and the round opened for training.
+    RoundStarted {
+        task_id: u64,
+        round: u64,
+        cohort: usize,
+    },
+    /// The round aggregated and the global model advanced.
+    RoundCommitted {
+        task_id: u64,
+        round: u64,
+        participants: usize,
+        train_loss: f64,
+    },
+    /// The deadline passed with fewer reports than the quorum.
+    QuorumMissed {
+        task_id: u64,
+        round: u64,
+        reported: usize,
+        quorum: usize,
+    },
+    /// The round was abandoned and will be retried (joiners stay queued).
+    RoundFailed { task_id: u64, round: u64 },
+    /// The task reached its final round and completed.
+    TaskCompleted { task_id: u64 },
+}
+
+impl TaskEvent {
+    /// The task this event belongs to.
+    pub fn task_id(&self) -> u64 {
+        match self {
+            TaskEvent::TaskStateChanged { task_id, .. }
+            | TaskEvent::ClientJoined { task_id, .. }
+            | TaskEvent::RoundStarted { task_id, .. }
+            | TaskEvent::RoundCommitted { task_id, .. }
+            | TaskEvent::QuorumMissed { task_id, .. }
+            | TaskEvent::RoundFailed { task_id, .. }
+            | TaskEvent::TaskCompleted { task_id } => *task_id,
+        }
+    }
+
+    /// Stable short name (log lines, dashboards).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TaskEvent::TaskStateChanged { .. } => "task_state_changed",
+            TaskEvent::ClientJoined { .. } => "client_joined",
+            TaskEvent::RoundStarted { .. } => "round_started",
+            TaskEvent::RoundCommitted { .. } => "round_committed",
+            TaskEvent::QuorumMissed { .. } => "quorum_missed",
+            TaskEvent::RoundFailed { .. } => "round_failed",
+            TaskEvent::TaskCompleted { .. } => "task_completed",
+        }
+    }
+}
+
+/// Fan-out publisher shared by every [`crate::orchestrator::RoundEngine`]
+/// under one management service. Cheap to clone.
+#[derive(Clone, Default)]
+pub struct EventBus {
+    subs: Arc<Mutex<Vec<Sender<TaskEvent>>>>,
+}
+
+impl EventBus {
+    pub fn new() -> EventBus {
+        EventBus::default()
+    }
+
+    /// Subscribe to every task's events.
+    pub fn subscribe(&self) -> EventStream {
+        self.subscribe_filtered(None)
+    }
+
+    /// Subscribe to a single task's events.
+    pub fn subscribe_task(&self, task_id: u64) -> EventStream {
+        self.subscribe_filtered(Some(task_id))
+    }
+
+    fn subscribe_filtered(&self, only_task: Option<u64>) -> EventStream {
+        let (tx, rx) = channel();
+        self.subs.lock().unwrap().push(tx);
+        EventStream { rx, only_task }
+    }
+
+    /// Publish to all live subscribers; dead ones are pruned.
+    pub fn emit(&self, event: TaskEvent) {
+        let mut subs = self.subs.lock().unwrap();
+        subs.retain(|tx| tx.send(event.clone()).is_ok());
+    }
+
+    pub fn subscriber_count(&self) -> usize {
+        self.subs.lock().unwrap().len()
+    }
+}
+
+/// A subscriber's end of the bus. Dropping it unsubscribes (lazily).
+pub struct EventStream {
+    rx: Receiver<TaskEvent>,
+    only_task: Option<u64>,
+}
+
+impl EventStream {
+    fn admits(&self, ev: &TaskEvent) -> bool {
+        match self.only_task {
+            None => true,
+            Some(id) => ev.task_id() == id,
+        }
+    }
+
+    /// Non-blocking: the next matching event, if one is queued.
+    pub fn try_next(&self) -> Option<TaskEvent> {
+        while let Ok(ev) = self.rx.try_recv() {
+            if self.admits(&ev) {
+                return Some(ev);
+            }
+        }
+        None
+    }
+
+    /// Block up to `timeout` for the next matching event.
+    pub fn next_timeout(&self, timeout: Duration) -> Option<TaskEvent> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(ev) if self.admits(&ev) => return Some(ev),
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Drain everything currently queued (matching events only).
+    pub fn drain(&self) -> Vec<TaskEvent> {
+        let mut out = Vec::new();
+        while let Ok(ev) = self.rx.try_recv() {
+            if self.admits(&ev) {
+                out.push(ev);
+            }
+        }
+        out
+    }
+
+    /// Block up to `timeout` for the first matching event satisfying
+    /// `pred` — the simulator's replacement for status polling.
+    pub fn wait_for(
+        &self,
+        timeout: Duration,
+        mut pred: impl FnMut(&TaskEvent) -> bool,
+    ) -> Option<TaskEvent> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(ev) if self.admits(&ev) && pred(&ev) => return Some(ev),
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subscribers_receive_emitted_events() {
+        let bus = EventBus::new();
+        let all = bus.subscribe();
+        let only_2 = bus.subscribe_task(2);
+        bus.emit(TaskEvent::TaskCompleted { task_id: 1 });
+        bus.emit(TaskEvent::RoundStarted {
+            task_id: 2,
+            round: 0,
+            cohort: 4,
+        });
+        assert_eq!(all.drain().len(), 2);
+        let got = only_2.drain();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].task_id(), 2);
+        assert_eq!(got[0].kind(), "round_started");
+    }
+
+    #[test]
+    fn dropped_subscribers_are_pruned() {
+        let bus = EventBus::new();
+        {
+            let _short_lived = bus.subscribe();
+            assert_eq!(bus.subscriber_count(), 1);
+        }
+        bus.emit(TaskEvent::TaskCompleted { task_id: 1 });
+        assert_eq!(bus.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn wait_for_matches_predicate_across_noise() {
+        let bus = EventBus::new();
+        let stream = bus.subscribe();
+        bus.emit(TaskEvent::ClientJoined {
+            task_id: 1,
+            client_id: 9,
+        });
+        bus.emit(TaskEvent::RoundCommitted {
+            task_id: 1,
+            round: 3,
+            participants: 8,
+            train_loss: 0.25,
+        });
+        let hit = stream
+            .wait_for(Duration::from_millis(200), |ev| {
+                matches!(ev, TaskEvent::RoundCommitted { round: 3, .. })
+            })
+            .expect("committed event");
+        assert_eq!(hit.kind(), "round_committed");
+        // Timeout path: nothing else queued.
+        assert!(stream
+            .wait_for(Duration::from_millis(10), |_| true)
+            .is_none());
+    }
+
+    #[test]
+    fn try_next_skips_filtered_events() {
+        let bus = EventBus::new();
+        let only_7 = bus.subscribe_task(7);
+        bus.emit(TaskEvent::TaskCompleted { task_id: 1 });
+        bus.emit(TaskEvent::TaskCompleted { task_id: 7 });
+        let ev = only_7.try_next().expect("task 7 event");
+        assert_eq!(ev.task_id(), 7);
+        assert!(only_7.try_next().is_none());
+    }
+}

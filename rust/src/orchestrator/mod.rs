@@ -1,0 +1,31 @@
+//! Round orchestration (§3.1.3, §4.2, §4.3): the task-workflow side of
+//! the platform, decoupled from service management.
+//!
+//! * [`RoundEngine`] — per-task typed phase state machine
+//!   (Joining → Training → Unmasking → Committed/Failed) with explicit
+//!   transition methods. All phase/round internals live here; nothing
+//!   outside `orchestrator/` matches on a phase or mutates a round.
+//! * [`CohortPolicy`] / [`PacingPolicy`] — the pluggable "user-defined
+//!   logic" seams (selection and pacing); the third seam is the existing
+//!   [`crate::aggregation::Aggregator`].
+//! * [`TaskBuilder`] / [`TaskHandle`] — the FLaaS-facing API for
+//!   creating and administering tasks.
+//! * [`TaskEvent`] / [`EventBus`] — the lifecycle subscription stream
+//!   dashboards and the simulator observe instead of polling.
+//!
+//! `services::management::ManagementService` is the thin multi-tenant
+//! registry over these engines.
+
+pub mod builder;
+pub mod engine;
+pub mod events;
+pub mod policy;
+
+pub use builder::{TaskBuilder, TaskHandle};
+pub use engine::{Evaluator, NoEval, RoundEngine};
+pub use events::{EventBus, EventStream, TaskEvent};
+pub use policy::{
+    default_pacing, ClientDirectory, CohortContext, CohortPolicy, FixedDeadline, GoalCount,
+    NullDirectory, OverProvision, PacingDecision, PacingPolicy, RoundProgress, Tiered,
+    UniformRandom,
+};

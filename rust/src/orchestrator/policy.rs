@@ -1,0 +1,415 @@
+//! Pluggable round policies (§3.1.3, §4.2, §4.3): the "user-defined
+//! logic" a task ships as configuration instead of platform code.
+//!
+//! Two policy seams parameterize the [`crate::orchestrator::RoundEngine`]:
+//!
+//! * [`CohortPolicy`] — who trains this round. Decides when the join pool
+//!   is ready and which joiners become the cohort (uniform random as the
+//!   paper's default, tiered by `DeviceCaps`, or over-provisioned per
+//!   §4.2 so rounds tolerate dropouts instead of stalling).
+//! * [`PacingPolicy`] — when the round closes. Fixed-deadline sync rounds
+//!   vs buffered-async / FedBuff-style goal counts; the engine's `tick()`
+//!   and upload paths consult it instead of hard-coding quorum logic.
+//!
+//! The third seam, the aggregation strategy, already exists as
+//! [`crate::aggregation::Aggregator`].
+
+use crate::proto::DeviceCaps;
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Cohort formation
+// ---------------------------------------------------------------------------
+
+/// Read-only view of the client registry a cohort policy may consult
+/// (implemented by `SelectionService`; `NullDirectory` for tests/benches).
+pub trait ClientDirectory {
+    fn caps_of(&self, client_id: u64) -> Option<DeviceCaps>;
+}
+
+/// A directory that knows nothing — every client reads as capless.
+pub struct NullDirectory;
+
+impl ClientDirectory for NullDirectory {
+    fn caps_of(&self, _client_id: u64) -> Option<DeviceCaps> {
+        None
+    }
+}
+
+/// Everything a cohort policy sees when deciding whether to open a round.
+pub struct CohortContext<'a> {
+    /// Waiting joiners in FIFO arrival order.
+    pub pool: &'a [u64],
+    /// Configured cohort size (`clients_per_round`).
+    pub target: usize,
+    /// Degraded floor: with `min_clients ≤ pool < target` and the join
+    /// grace elapsed, a smaller cohort may form. Equal to `target` when
+    /// degraded rounds are disabled.
+    pub min_clients: usize,
+    /// How long the oldest joiner has been waiting.
+    pub waited_ms: u64,
+    /// Join grace before degraded formation is allowed.
+    pub grace_ms: u64,
+    /// Registry view for caps-aware policies.
+    pub directory: &'a dyn ClientDirectory,
+}
+
+impl CohortContext<'_> {
+    /// Degraded formation: take the whole (undersized) pool once the
+    /// grace period expires. Shared fallback for every policy.
+    fn degraded(&self) -> Option<Vec<u64>> {
+        if self.min_clients < self.target
+            && !self.pool.is_empty()
+            && self.pool.len() >= self.min_clients.max(1)
+            && self.waited_ms >= self.grace_ms
+        {
+            let mut cohort = self.pool.to_vec();
+            cohort.sort_unstable();
+            Some(cohort)
+        } else {
+            None
+        }
+    }
+}
+
+/// Decides when a cohort forms and who is in it. Returned cohorts are
+/// sorted by client id (deterministic virtual-group formation).
+pub trait CohortPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `Some(cohort)` to open the round now, `None` to keep waiting.
+    fn form(&self, ctx: &CohortContext<'_>, rng: &mut Rng) -> Option<Vec<u64>>;
+}
+
+/// The paper's default: `target` joiners chosen uniformly at random.
+pub struct UniformRandom;
+
+impl CohortPolicy for UniformRandom {
+    fn name(&self) -> &'static str {
+        "uniform_random"
+    }
+
+    fn form(&self, ctx: &CohortContext<'_>, rng: &mut Rng) -> Option<Vec<u64>> {
+        if ctx.pool.len() < ctx.target {
+            return ctx.degraded();
+        }
+        let idx = rng.sample_indices(ctx.pool.len(), ctx.target);
+        let mut cohort: Vec<u64> = idx.into_iter().map(|i| ctx.pool[i]).collect();
+        cohort.sort_unstable();
+        Some(cohort)
+    }
+}
+
+/// Prefers higher-integrity devices: candidates are ranked by
+/// `DeviceCaps::tier` (shuffled within a tier for fairness) and the top
+/// `target` selected. Capless clients rank lowest.
+pub struct Tiered;
+
+impl CohortPolicy for Tiered {
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+
+    fn form(&self, ctx: &CohortContext<'_>, rng: &mut Rng) -> Option<Vec<u64>> {
+        if ctx.pool.len() < ctx.target {
+            return ctx.degraded();
+        }
+        let mut ranked: Vec<u64> = ctx.pool.to_vec();
+        rng.shuffle(&mut ranked);
+        // Stable sort keeps the shuffle order within equal tiers.
+        ranked.sort_by_key(|&c| {
+            std::cmp::Reverse(
+                ctx.directory
+                    .caps_of(c)
+                    .map(|caps| caps.tier as u8)
+                    .unwrap_or(0),
+            )
+        });
+        let mut cohort: Vec<u64> = ranked.into_iter().take(ctx.target).collect();
+        cohort.sort_unstable();
+        Some(cohort)
+    }
+}
+
+/// §4.2 over-provisioning: spawn `ceil(target × spawn_factor)` clients
+/// (bounded by the pool) so the round still meets quorum when a fraction
+/// drop out, instead of stalling or retrying.
+pub struct OverProvision {
+    pub spawn_factor: f64,
+}
+
+impl CohortPolicy for OverProvision {
+    fn name(&self) -> &'static str {
+        "over_provision"
+    }
+
+    fn form(&self, ctx: &CohortContext<'_>, rng: &mut Rng) -> Option<Vec<u64>> {
+        if ctx.pool.len() < ctx.target {
+            return ctx.degraded();
+        }
+        let desired = ((ctx.target as f64) * self.spawn_factor).ceil() as usize;
+        let take = desired.clamp(ctx.target, ctx.pool.len());
+        let idx = rng.sample_indices(ctx.pool.len(), take);
+        let mut cohort: Vec<u64> = idx.into_iter().map(|i| ctx.pool[i]).collect();
+        cohort.sort_unstable();
+        Some(cohort)
+    }
+}
+
+impl crate::config::CohortSpec {
+    /// Instantiate the policy object this config spec names.
+    pub fn build(&self) -> Box<dyn CohortPolicy> {
+        match *self {
+            crate::config::CohortSpec::UniformRandom => Box::new(UniformRandom),
+            crate::config::CohortSpec::Tiered => Box::new(Tiered),
+            crate::config::CohortSpec::OverProvision { spawn_factor } => {
+                Box::new(OverProvision { spawn_factor })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Round pacing
+// ---------------------------------------------------------------------------
+
+/// What the engine should do with the open round right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PacingDecision {
+    /// Keep collecting reports.
+    Wait,
+    /// Aggregate and advance.
+    Commit,
+    /// Abandon the round (retry with the queued joiners).
+    Fail,
+}
+
+/// Progress snapshot handed to [`PacingPolicy::assess`].
+#[derive(Clone, Copy, Debug)]
+pub struct RoundProgress {
+    /// Members of the open cohort (buffer capacity for async flushes).
+    pub cohort: usize,
+    /// Reports received so far.
+    pub reported: usize,
+    pub now_ms: u64,
+    pub deadline_ms: u64,
+    /// Fraction of the cohort that must report for a deadline commit.
+    pub min_report_fraction: f64,
+}
+
+impl RoundProgress {
+    /// Minimum reports for a deadline commit (≥ 1).
+    pub fn quorum(&self) -> usize {
+        let q = (self.cohort as f64 * self.min_report_fraction).ceil() as usize;
+        q.max(1)
+    }
+}
+
+/// Decides when an open round commits, waits, or fails.
+pub trait PacingPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Report deadline for a round opening at `now_ms`.
+    fn deadline_ms(&self, now_ms: u64, round_timeout_ms: u64) -> u64 {
+        now_ms + round_timeout_ms
+    }
+
+    fn assess(&self, p: &RoundProgress) -> PacingDecision;
+}
+
+/// Synchronous pacing: commit when the whole cohort reported; at the
+/// deadline, commit with a quorum of stragglers dropped, else fail and
+/// retry the round.
+pub struct FixedDeadline;
+
+impl PacingPolicy for FixedDeadline {
+    fn name(&self) -> &'static str {
+        "fixed_deadline"
+    }
+
+    fn assess(&self, p: &RoundProgress) -> PacingDecision {
+        if p.cohort > 0 && p.reported >= p.cohort {
+            return PacingDecision::Commit;
+        }
+        if p.now_ms < p.deadline_ms {
+            return PacingDecision::Wait;
+        }
+        if p.reported >= p.quorum() {
+            PacingDecision::Commit
+        } else {
+            PacingDecision::Fail
+        }
+    }
+}
+
+/// Buffered-async / FedBuff pacing: commit (flush) as soon as `goal`
+/// contributions are buffered; never fails — stragglers' uploads simply
+/// land in the next flush epoch.
+pub struct GoalCount {
+    pub goal: usize,
+}
+
+impl PacingPolicy for GoalCount {
+    fn name(&self) -> &'static str {
+        "goal_count"
+    }
+
+    fn assess(&self, p: &RoundProgress) -> PacingDecision {
+        if p.reported >= self.goal.max(1) {
+            PacingDecision::Commit
+        } else {
+            PacingDecision::Wait
+        }
+    }
+}
+
+/// The mode-derived pacing default: fixed-deadline sync rounds, goal-count
+/// flushes for buffered async. The single source for this mapping.
+pub fn default_pacing(mode: crate::config::FlMode) -> Box<dyn PacingPolicy> {
+    match mode {
+        crate::config::FlMode::Sync => Box::new(FixedDeadline),
+        crate::config::FlMode::Async { buffer_size } => Box::new(GoalCount { goal: buffer_size }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::attest::IntegrityTier;
+
+    struct TierDir;
+
+    impl ClientDirectory for TierDir {
+        fn caps_of(&self, client_id: u64) -> Option<DeviceCaps> {
+            let mut caps = DeviceCaps::default();
+            // Clients 1..=3 are Strong, the rest Basic.
+            caps.tier = if client_id <= 3 {
+                IntegrityTier::Strong
+            } else {
+                IntegrityTier::Basic
+            };
+            Some(caps)
+        }
+    }
+
+    fn ctx<'a>(
+        pool: &'a [u64],
+        target: usize,
+        min_clients: usize,
+        waited_ms: u64,
+        directory: &'a dyn ClientDirectory,
+    ) -> CohortContext<'a> {
+        CohortContext {
+            pool,
+            target,
+            min_clients,
+            waited_ms,
+            grace_ms: 1000,
+            directory,
+        }
+    }
+
+    #[test]
+    fn uniform_random_waits_then_forms_full_cohort() {
+        let mut rng = Rng::new(1);
+        let dir = NullDirectory;
+        let pool: Vec<u64> = (1..=10).collect();
+        assert!(UniformRandom
+            .form(&ctx(&pool[..3], 4, 4, 0, &dir), &mut rng)
+            .is_none());
+        let cohort = UniformRandom
+            .form(&ctx(&pool, 4, 4, 0, &dir), &mut rng)
+            .unwrap();
+        assert_eq!(cohort.len(), 4);
+        assert!(cohort.windows(2).all(|w| w[0] < w[1]), "{cohort:?}");
+        assert!(cohort.iter().all(|c| pool.contains(c)));
+    }
+
+    #[test]
+    fn degraded_cohort_needs_floor_and_grace() {
+        let mut rng = Rng::new(2);
+        let dir = NullDirectory;
+        let pool: Vec<u64> = vec![5, 3, 8];
+        // Below the floor: never degrade.
+        assert!(UniformRandom
+            .form(&ctx(&pool[..1], 4, 2, 9999, &dir), &mut rng)
+            .is_none());
+        // At the floor but inside the grace window: keep waiting.
+        assert!(UniformRandom
+            .form(&ctx(&pool, 4, 2, 500, &dir), &mut rng)
+            .is_none());
+        // Floor met and grace elapsed: the whole pool trains, sorted.
+        let cohort = UniformRandom
+            .form(&ctx(&pool, 4, 2, 1000, &dir), &mut rng)
+            .unwrap();
+        assert_eq!(cohort, vec![3, 5, 8]);
+        // min_clients == target disables degraded formation entirely.
+        assert!(UniformRandom
+            .form(&ctx(&pool, 4, 4, 99_999, &dir), &mut rng)
+            .is_none());
+    }
+
+    #[test]
+    fn tiered_prefers_strong_devices() {
+        let mut rng = Rng::new(3);
+        let dir = TierDir;
+        let pool: Vec<u64> = (1..=8).collect(); // 1..=3 Strong, 4..=8 Basic
+        let cohort = Tiered.form(&ctx(&pool, 3, 3, 0, &dir), &mut rng).unwrap();
+        assert_eq!(cohort, vec![1, 2, 3]);
+        // With target 5 the two extra slots come from the Basic tier.
+        let cohort = Tiered.form(&ctx(&pool, 5, 5, 0, &dir), &mut rng).unwrap();
+        assert_eq!(cohort.len(), 5);
+        assert!(cohort.contains(&1) && cohort.contains(&2) && cohort.contains(&3));
+    }
+
+    #[test]
+    fn over_provision_spawns_extra_when_pool_allows() {
+        let mut rng = Rng::new(4);
+        let dir = NullDirectory;
+        let pool: Vec<u64> = (1..=10).collect();
+        let policy = OverProvision { spawn_factor: 1.5 };
+        // ceil(4 × 1.5) = 6 drafted.
+        let cohort = policy.form(&ctx(&pool, 4, 4, 0, &dir), &mut rng).unwrap();
+        assert_eq!(cohort.len(), 6);
+        // Pool smaller than desired but ≥ target: clamp to the pool.
+        let cohort = policy
+            .form(&ctx(&pool[..5], 4, 4, 0, &dir), &mut rng)
+            .unwrap();
+        assert_eq!(cohort.len(), 5);
+        // Pool below target: still waits.
+        assert!(policy.form(&ctx(&pool[..3], 4, 4, 0, &dir), &mut rng).is_none());
+    }
+
+    #[test]
+    fn fixed_deadline_assessment() {
+        let p = |cohort, reported, now_ms| RoundProgress {
+            cohort,
+            reported,
+            now_ms,
+            deadline_ms: 100,
+            min_report_fraction: 0.5,
+        };
+        assert_eq!(FixedDeadline.assess(&p(4, 4, 10)), PacingDecision::Commit);
+        assert_eq!(FixedDeadline.assess(&p(4, 2, 10)), PacingDecision::Wait);
+        // Past the deadline: quorum (2 of 4) commits, below it fails.
+        assert_eq!(FixedDeadline.assess(&p(4, 2, 100)), PacingDecision::Commit);
+        assert_eq!(FixedDeadline.assess(&p(4, 1, 100)), PacingDecision::Fail);
+        // Quorum is never below 1.
+        assert_eq!(p(0, 0, 0).quorum(), 1);
+    }
+
+    #[test]
+    fn goal_count_flushes_at_goal_and_never_fails() {
+        let policy = GoalCount { goal: 3 };
+        let p = |reported| RoundProgress {
+            cohort: 3,
+            reported,
+            now_ms: 1_000_000,
+            deadline_ms: 0, // long past — must not matter
+            min_report_fraction: 1.0,
+        };
+        assert_eq!(policy.assess(&p(2)), PacingDecision::Wait);
+        assert_eq!(policy.assess(&p(3)), PacingDecision::Commit);
+        assert_eq!(policy.assess(&p(7)), PacingDecision::Commit);
+    }
+}

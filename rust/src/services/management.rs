@@ -1,168 +1,41 @@
-//! Management Service (§3.1.1): task store, round state machine, and
-//! orchestration across the Selection, Secure-Aggregator and
-//! Master-Aggregator services.
+//! Management Service (§3.1.1): a thin multi-tenant registry of
+//! [`RoundEngine`]s.
 //!
-//! Sync task round lifecycle:
-//!
-//! ```text
-//!   Joining ──(cohort full)──► Training ──(all uploads)──► aggregate ──► next round
-//!      ▲                          │  (deadline, quorum met, secagg dropouts)
-//!      │                          ▼
-//!      └──(deadline, no quorum)  Unmasking ──(shares in)──► aggregate ──► next round
-//! ```
-//!
-//! Async tasks (§4.3) skip the barrier: every joiner trains immediately
-//! against the newest model; uploads fill a buffer that is flushed every
-//! `buffer_size` contributions with staleness-aware weighting (Papaya).
+//! All orchestration — the Joining → Training → Unmasking →
+//! Committed/Failed phase machine, cohort formation, pacing, secure
+//! aggregation, DP accounting — lives in [`crate::orchestrator`]. This
+//! service owns task CRUD, id allocation, advertisement, and fans
+//! client/admin calls out to the right engine. Lifecycle is observable
+//! through the shared [`EventBus`] (`subscribe()`), so dashboards and
+//! the simulator no longer poll `task_status`.
 
-use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::aggregation::{self, ClientUpdate};
-use crate::config::{FlMode, TaskConfig};
-use crate::dp::{DpMode, RdpAccountant};
+use crate::config::TaskConfig;
 use crate::error::{Error, Result};
-use crate::metrics::{RoundRecord, TaskMetrics};
+use crate::metrics::TaskMetrics;
 use crate::model::ModelSnapshot;
-use crate::proto::msg::{PeerShare, RecoveredShare};
-use crate::proto::{
-    RoundInstruction, RoundRole, TaskDescriptor, TaskState, TrainParams,
+use crate::orchestrator::{
+    ClientDirectory, CohortPolicy, EventBus, EventStream, PacingPolicy, RoundEngine,
 };
-use crate::quant::Quantizer;
-use crate::services::master_aggregator::MasterAggregator;
-use crate::services::secure_aggregator::SecAggRound;
-use crate::services::selection::SelectionService;
-use crate::util::Rng;
+use crate::proto::msg::{PeerShare, RecoveredShare};
+use crate::proto::{RoundRole, TaskDescriptor, TaskState};
 
-/// Server-side model evaluation hook (wired to the PJRT runtime by the
-/// simulator / server binary; `NoEval` for dummy tasks).
-pub trait Evaluator: Send + Sync {
-    /// Returns (eval_loss, eval_accuracy) for the given global params.
-    fn evaluate(&self, preset: &str, params: &[f32]) -> Option<(f64, f64)>;
-}
+// Compatibility re-exports: the evaluator hook moved to the orchestrator
+// with the engine, but callers import it from here.
+pub use crate::orchestrator::{Evaluator, NoEval};
 
-/// No-op evaluator.
-pub struct NoEval;
-
-impl Evaluator for NoEval {
-    fn evaluate(&self, _preset: &str, _params: &[f32]) -> Option<(f64, f64)> {
-        None
-    }
-}
-
-/// Phase of the current sync round.
-enum Phase {
-    /// Accumulating joiners; `pool` holds (client, round pubkey).
-    Joining,
-    /// Cohort selected, clients training.
-    Training {
-        secagg: Option<SecAggRound>,
-        plain: Vec<ClientUpdate>,
-        uploaded: BTreeSet<u64>,
-        model_blob: Arc<Vec<u8>>,
-        base_version: u64,
-        deadline_ms: u64,
-    },
-    /// Waiting for survivors' unmask shares.
-    Unmasking {
-        secagg: SecAggRound,
-        deadline_ms: u64,
-    },
-}
-
-/// One federated task.
-pub struct Task {
-    pub id: u64,
-    pub config: TaskConfig,
-    pub state: TaskState,
-    /// Completed sync rounds / async flushes.
-    pub round: u64,
-    pub global: ModelSnapshot,
-    pub metrics: TaskMetrics,
-    pub accountant: Option<RdpAccountant>,
-
-    master: MasterAggregator,
-    rng: Rng,
-    phase: Phase,
-    /// Sync: waiting joiners (client, per-round pubkey), FIFO.
-    join_pool: VecDeque<(u64, [u8; 32])>,
-    /// Current-round cohort (empty outside Training/Unmasking).
-    cohort: BTreeSet<u64>,
-    round_started_ms: u64,
-
-    // Async state.
-    buffer: Vec<ClientUpdate>,
-    async_joined: BTreeSet<u64>,
-    last_flush_ms: u64,
-}
-
-impl Task {
-    fn new(id: u64, config: TaskConfig, global: ModelSnapshot, seed: u64) -> Result<Task> {
-        config.validate()?;
-        let strategy = aggregation::by_name(&config.aggregator, config.prox_mu)?;
-        let master = MasterAggregator::new(strategy, config.dp, config.server_lr);
-        let accountant = if config.dp.mode != DpMode::Off {
-            Some(RdpAccountant::new())
-        } else {
-            None
-        };
-        Ok(Task {
-            id,
-            config,
-            state: TaskState::Created,
-            round: 0,
-            global,
-            metrics: TaskMetrics::default(),
-            accountant,
-            master,
-            rng: Rng::new(seed),
-            phase: Phase::Joining,
-            join_pool: VecDeque::new(),
-            cohort: BTreeSet::new(),
-            round_started_ms: 0,
-            buffer: Vec::new(),
-            async_joined: BTreeSet::new(),
-            last_flush_ms: 0,
-        })
-    }
-
-    pub fn descriptor(&self) -> TaskDescriptor {
-        TaskDescriptor {
-            task_id: self.id,
-            task_name: self.config.task_name.clone(),
-            app_name: self.config.app_name.clone(),
-            workflow_name: self.config.workflow_name.clone(),
-            state: self.state,
-            round: self.round,
-            total_rounds: self.config.total_rounds,
-        }
-    }
-
-    fn train_params(&self) -> TrainParams {
-        TrainParams {
-            preset: self.config.preset.clone(),
-            lr: self.config.client_lr,
-            prox_mu: self.config.prox_mu,
-        }
-    }
-
-    fn epsilon(&self) -> Option<f64> {
-        self.accountant
-            .as_ref()
-            .and_then(|a| a.epsilon(1e-5).ok())
-            .map(|(e, _)| e)
-    }
-}
-
-/// The Management Service: task CRUD + orchestration entry points.
+/// The Management Service: task CRUD + delegation to per-task engines.
 pub struct ManagementService {
     inner: Mutex<Inner>,
     evaluator: Arc<dyn Evaluator>,
+    events: EventBus,
 }
 
 struct Inner {
     next_task_id: u64,
-    tasks: HashMap<u64, Task>,
+    engines: HashMap<u64, RoundEngine>,
     seed: u64,
 }
 
@@ -171,51 +44,71 @@ impl ManagementService {
         ManagementService {
             inner: Mutex::new(Inner {
                 next_task_id: 1,
-                tasks: HashMap::new(),
+                engines: HashMap::new(),
                 seed,
             }),
             evaluator,
+            events: EventBus::new(),
         }
     }
 
-    /// Create a task with an initial model snapshot; returns task id.
+    /// The shared lifecycle event bus.
+    pub fn events(&self) -> &EventBus {
+        &self.events
+    }
+
+    /// Subscribe to every task's lifecycle events.
+    pub fn subscribe(&self) -> EventStream {
+        self.events.subscribe()
+    }
+
+    /// Create a task with an initial model snapshot; returns the task id.
     pub fn create_task(&self, config: TaskConfig, init: ModelSnapshot) -> Result<u64> {
+        self.insert_engine(|id, seed, events| RoundEngine::new(id, config, init, seed, events))
+    }
+
+    /// Create a task with custom policy objects (None → config/mode
+    /// defaults) — the `TaskBuilder::custom_*` path.
+    pub fn create_task_with_policies(
+        &self,
+        config: TaskConfig,
+        init: ModelSnapshot,
+        cohort_policy: Option<Box<dyn CohortPolicy>>,
+        pacing: Option<Box<dyn PacingPolicy>>,
+    ) -> Result<u64> {
+        self.insert_engine(|id, seed, events| {
+            let cohort_policy = cohort_policy.unwrap_or_else(|| config.cohort.build());
+            let pacing =
+                pacing.unwrap_or_else(|| crate::orchestrator::default_pacing(config.mode));
+            RoundEngine::with_policies(id, config, init, seed, events, cohort_policy, pacing)
+        })
+    }
+
+    fn insert_engine(
+        &self,
+        build: impl FnOnce(u64, u64, EventBus) -> Result<RoundEngine>,
+    ) -> Result<u64> {
         let mut g = self.inner.lock().unwrap();
         let id = g.next_task_id;
         let seed = g.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15);
-        let task = Task::new(id, config, init, seed)?;
+        let engine = build(id, seed, self.events.clone())?;
         g.next_task_id += 1;
-        g.tasks.insert(id, task);
+        g.engines.insert(id, engine);
         Ok(id)
     }
 
     /// Start a created/paused task.
     pub fn start_task(&self, task_id: u64) -> Result<()> {
-        self.with_task(task_id, |t| {
-            match t.state {
-                TaskState::Created | TaskState::Paused => {
-                    t.state = TaskState::Running;
-                    Ok(())
-                }
-                s => Err(Error::Task(format!("cannot start task in state {}", s.name()))),
-            }
-        })
+        self.with_task(task_id, |t| t.start())
     }
 
     pub fn pause_task(&self, task_id: u64) -> Result<()> {
-        self.with_task(task_id, |t| {
-            if t.state == TaskState::Running {
-                t.state = TaskState::Paused;
-                Ok(())
-            } else {
-                Err(Error::Task(format!("cannot pause {}", t.state.name())))
-            }
-        })
+        self.with_task(task_id, |t| t.pause())
     }
 
     pub fn cancel_task(&self, task_id: u64) -> Result<()> {
         self.with_task(task_id, |t| {
-            t.state = TaskState::Cancelled;
+            t.cancel();
             Ok(())
         })
     }
@@ -223,7 +116,7 @@ impl ManagementService {
     /// First advertisable task matching (app, workflow).
     pub fn advertise(&self, app: &str, workflow: &str) -> Option<TaskDescriptor> {
         let g = self.inner.lock().unwrap();
-        let mut tasks: Vec<&Task> = g.tasks.values().collect();
+        let mut tasks: Vec<&RoundEngine> = g.engines.values().collect();
         tasks.sort_by_key(|t| t.id);
         tasks
             .iter()
@@ -237,22 +130,27 @@ impl ManagementService {
 
     pub fn list_tasks(&self) -> Vec<TaskDescriptor> {
         let g = self.inner.lock().unwrap();
-        let mut v: Vec<TaskDescriptor> = g.tasks.values().map(Task::descriptor).collect();
+        let mut v: Vec<TaskDescriptor> = g.engines.values().map(RoundEngine::descriptor).collect();
         v.sort_by_key(|d| d.task_id);
         v
     }
 
-    pub fn with_task<R>(&self, task_id: u64, f: impl FnOnce(&mut Task) -> Result<R>) -> Result<R> {
+    /// Run `f` against one task's engine under the registry lock.
+    pub fn with_task<R>(
+        &self,
+        task_id: u64,
+        f: impl FnOnce(&mut RoundEngine) -> Result<R>,
+    ) -> Result<R> {
         let mut g = self.inner.lock().unwrap();
         let t = g
-            .tasks
+            .engines
             .get_mut(&task_id)
             .ok_or_else(|| Error::Task(format!("unknown task {task_id}")))?;
         f(t)
     }
 
     // -----------------------------------------------------------------
-    // Client-facing orchestration
+    // Client-facing delegation
     // -----------------------------------------------------------------
 
     /// A client asks to participate in the task's next round.
@@ -263,27 +161,7 @@ impl ManagementService {
         pubkey: [u8; 32],
         now_ms: u64,
     ) -> Result<(bool, String)> {
-        self.with_task(task_id, |t| {
-            if t.state != TaskState::Running {
-                return Ok((false, format!("task is {}", t.state.name())));
-            }
-            match t.config.mode {
-                FlMode::Sync => {
-                    if t.cohort.contains(&client_id)
-                        || t.join_pool.iter().any(|&(c, _)| c == client_id)
-                    {
-                        return Ok((false, "already joined".into()));
-                    }
-                    t.join_pool.push_back((client_id, pubkey));
-                    Ok((true, String::new()))
-                }
-                FlMode::Async { .. } => {
-                    t.async_joined.insert(client_id);
-                    let _ = now_ms;
-                    Ok((true, String::new()))
-                }
-            }
-        })
+        self.with_task(task_id, |t| t.join(client_id, pubkey, now_ms))
     }
 
     /// A client polls for its current obligation.
@@ -291,80 +169,10 @@ impl ManagementService {
         &self,
         client_id: u64,
         task_id: u64,
-        selection: &SelectionService,
+        dir: &dyn ClientDirectory,
         now_ms: u64,
     ) -> Result<RoundRole> {
-        self.with_task(task_id, |t| {
-            match t.state {
-                TaskState::Completed | TaskState::Cancelled | TaskState::Failed => {
-                    return Ok(RoundRole::TaskDone)
-                }
-                TaskState::Paused | TaskState::Created => return Ok(RoundRole::Wait),
-                TaskState::Running => {}
-            }
-            if let FlMode::Async { .. } = t.config.mode {
-                if !t.async_joined.contains(&client_id) {
-                    return Ok(RoundRole::RoundDone); // join first
-                }
-                // Train against the freshest model, no barrier.
-                let blob = t.global.to_compressed()?;
-                return Ok(RoundRole::Train(RoundInstruction {
-                    round: t.round,
-                    model_blob: blob,
-                    train: t.train_params(),
-                    secagg: None,
-                    deadline_ms: now_ms + t.config.round_timeout_ms,
-                }));
-            }
-            // Sync path: try to advance Joining → Training first.
-            Self::maybe_form_cohort(t, selection, now_ms)?;
-            match &t.phase {
-                Phase::Joining => {
-                    if t.join_pool.iter().any(|&(c, _)| c == client_id) {
-                        Ok(RoundRole::Wait)
-                    } else {
-                        Ok(RoundRole::RoundDone)
-                    }
-                }
-                Phase::Training {
-                    secagg,
-                    uploaded,
-                    model_blob,
-                    deadline_ms,
-                    ..
-                } => {
-                    if !t.cohort.contains(&client_id) {
-                        if t.join_pool.iter().any(|&(c, _)| c == client_id) {
-                            return Ok(RoundRole::Wait); // queued for next round
-                        }
-                        return Ok(RoundRole::NotSelected);
-                    }
-                    if uploaded.contains(&client_id) {
-                        return Ok(RoundRole::Wait);
-                    }
-                    let sa = match secagg {
-                        Some(s) => Some(s.setup_for(client_id)?),
-                        None => None,
-                    };
-                    Ok(RoundRole::Train(RoundInstruction {
-                        round: t.round,
-                        model_blob: model_blob.as_ref().clone(),
-                        train: t.train_params(),
-                        secagg: sa,
-                        deadline_ms: *deadline_ms,
-                    }))
-                }
-                Phase::Unmasking { secagg, .. } => {
-                    if let Some(req) = secagg.unmask_request_for(client_id) {
-                        Ok(RoundRole::Unmask(req))
-                    } else if t.cohort.contains(&client_id) {
-                        Ok(RoundRole::Wait)
-                    } else {
-                        Ok(RoundRole::NotSelected)
-                    }
-                }
-            }
-        })
+        self.with_task(task_id, |t| t.fetch(client_id, dir, now_ms))
     }
 
     /// Plaintext upload (secure_agg = false, or async).
@@ -382,71 +190,7 @@ impl ManagementService {
     ) -> Result<(bool, String)> {
         let eval = Arc::clone(&self.evaluator);
         self.with_task(task_id, |t| {
-            if t.state != TaskState::Running {
-                return Ok((false, format!("task is {}", t.state.name())));
-            }
-            if delta.len() != t.global.dim() {
-                return Ok((false, format!("dim {} != {}", delta.len(), t.global.dim())));
-            }
-            if !(weight.is_finite() && weight > 0.0 && weight < 1e9) {
-                return Ok((false, format!("bad weight {weight}")));
-            }
-            t.metrics.total_uploads += 1;
-            if let FlMode::Async { buffer_size } = t.config.mode {
-                if !t.async_joined.contains(&client_id) {
-                    return Ok((false, "join first".into()));
-                }
-                let staleness = t.global.version.saturating_sub(base_version);
-                t.buffer.push(ClientUpdate {
-                    client_id,
-                    delta,
-                    weight,
-                    loss,
-                    staleness,
-                });
-                if t.buffer.len() >= buffer_size {
-                    Self::flush_async(t, &*eval, now_ms)?;
-                }
-                return Ok((true, String::new()));
-            }
-            // Sync plaintext round.
-            match &mut t.phase {
-                Phase::Training {
-                    secagg: None,
-                    plain,
-                    uploaded,
-                    base_version: bv,
-                    ..
-                } => {
-                    if round != t.round {
-                        return Ok((false, format!("stale round {round} (now {})", t.round)));
-                    }
-                    if !t.cohort.contains(&client_id) {
-                        return Ok((false, "not in cohort".into()));
-                    }
-                    if !uploaded.insert(client_id) {
-                        return Ok((false, "duplicate upload".into()));
-                    }
-                    if base_version != *bv {
-                        return Ok((false, format!("base version {base_version} != {bv}")));
-                    }
-                    plain.push(ClientUpdate {
-                        client_id,
-                        delta,
-                        weight,
-                        loss,
-                        staleness: 0,
-                    });
-                    if uploaded.len() == t.cohort.len() {
-                        Self::finish_sync_round(t, &*eval, now_ms)?;
-                    }
-                    Ok((true, String::new()))
-                }
-                Phase::Training { secagg: Some(_), .. } => {
-                    Ok((false, "task requires masked uploads".into()))
-                }
-                _ => Ok((false, "no round in progress".into())),
-            }
+            t.accept_plain(client_id, round, base_version, delta, weight, loss, &*eval, now_ms)
         })
     }
 
@@ -463,30 +207,7 @@ impl ManagementService {
     ) -> Result<(bool, String)> {
         let eval = Arc::clone(&self.evaluator);
         self.with_task(task_id, |t| {
-            if t.state != TaskState::Running {
-                return Ok((false, format!("task is {}", t.state.name())));
-            }
-            if round != t.round {
-                return Ok((false, format!("stale round {round}")));
-            }
-            t.metrics.total_uploads += 1;
-            match &mut t.phase {
-                Phase::Training {
-                    secagg: Some(sa),
-                    uploaded,
-                    ..
-                } => {
-                    if let Err(e) = sa.accept_masked(client_id, vg_id, masked, loss) {
-                        return Ok((false, e.to_string()));
-                    }
-                    uploaded.insert(client_id);
-                    if uploaded.len() == t.cohort.len() {
-                        Self::finish_sync_round(t, &*eval, now_ms)?;
-                    }
-                    Ok((true, String::new()))
-                }
-                _ => Ok((false, "no masked round in progress".into())),
-            }
+            t.accept_masked(client_id, round, vg_id, masked, loss, &*eval, now_ms)
         })
     }
 
@@ -498,20 +219,7 @@ impl ManagementService {
         round: u64,
         shares: Vec<PeerShare>,
     ) -> Result<(bool, String)> {
-        self.with_task(task_id, |t| {
-            if round != t.round {
-                return Ok((false, format!("stale round {round}")));
-            }
-            match &mut t.phase {
-                Phase::Training {
-                    secagg: Some(sa), ..
-                } => match sa.accept_shares(client_id, shares) {
-                    Ok(()) => Ok((true, String::new())),
-                    Err(e) => Ok((false, e.to_string())),
-                },
-                _ => Ok((false, "no secagg round in progress".into())),
-            }
-        })
+        self.with_task(task_id, |t| t.accept_shares(client_id, round, shares))
     }
 
     /// Plaintext shares recovered by survivors (unmask phase).
@@ -525,265 +233,33 @@ impl ManagementService {
     ) -> Result<(bool, String)> {
         let eval = Arc::clone(&self.evaluator);
         self.with_task(task_id, |t| {
-            if round != t.round {
-                return Ok((false, format!("stale round {round}")));
-            }
-            match &mut t.phase {
-                Phase::Unmasking { secagg, .. } => {
-                    if let Err(e) = secagg.accept_recovered(client_id, shares) {
-                        return Ok((false, e.to_string()));
-                    }
-                    if !secagg.needs_unmasking() {
-                        Self::finish_sync_round(t, &*eval, now_ms)?;
-                    }
-                    Ok((true, String::new()))
-                }
-                _ => Ok((false, "no unmask phase in progress".into())),
-            }
+            t.accept_unmask(client_id, round, shares, &*eval, now_ms)
         })
     }
 
-    /// Deadline sweep: call periodically (and on events).
-    pub fn tick(&self, now_ms: u64) {
+    /// Deadline sweep across every engine: call periodically (and on
+    /// events). `dir` feeds caps-aware cohort policies.
+    pub fn tick(&self, dir: &dyn ClientDirectory, now_ms: u64) {
         let eval = Arc::clone(&self.evaluator);
         let mut g = self.inner.lock().unwrap();
-        for t in g.tasks.values_mut() {
-            if t.state != TaskState::Running {
-                continue;
-            }
-            let deadline_hit = match &t.phase {
-                Phase::Training { deadline_ms, .. } => now_ms >= *deadline_ms,
-                Phase::Unmasking { deadline_ms, .. } => now_ms >= *deadline_ms,
-                Phase::Joining => false,
-            };
-            if !deadline_hit {
-                continue;
-            }
-            let reported = match &t.phase {
-                Phase::Training {
-                    secagg, uploaded, ..
-                } => match secagg {
-                    Some(sa) => sa.uploaded_count(),
-                    None => uploaded.len(),
-                },
-                Phase::Unmasking { .. } => t.cohort.len(), // quorum known met
-                Phase::Joining => 0,
-            };
-            let quorum =
-                (t.cohort.len() as f64 * t.config.min_report_fraction).ceil() as usize;
-            if reported >= quorum.max(1) {
-                if let Err(e) = Self::finish_sync_round(t, &*eval, now_ms) {
-                    log::warn!("task {}: round finish failed: {e}", t.id);
-                    Self::fail_round(t);
-                }
-            } else {
-                log::warn!(
-                    "task {}: round {} missed quorum ({reported}/{quorum}) — retrying",
-                    t.id,
-                    t.round
-                );
-                Self::fail_round(t);
-            }
+        for t in g.engines.values_mut() {
+            t.tick(&*eval, dir, now_ms);
         }
     }
 
     /// Status summary for the dashboard / CLI.
     pub fn task_status(&self, task_id: u64) -> Result<(TaskDescriptor, TaskMetrics, Option<f64>)> {
-        self.with_task(task_id, |t| {
-            Ok((t.descriptor(), t.metrics.clone(), t.epsilon()))
-        })
-    }
-
-    // -----------------------------------------------------------------
-    // Internals
-    // -----------------------------------------------------------------
-
-    fn maybe_form_cohort(
-        t: &mut Task,
-        selection: &SelectionService,
-        now_ms: u64,
-    ) -> Result<()> {
-        if !matches!(t.phase, Phase::Joining) || t.state != TaskState::Running {
-            return Ok(());
-        }
-        let k = t.config.clients_per_round;
-        if t.join_pool.len() < k {
-            return Ok(());
-        }
-        // Candidate pool = all waiting joiners; random k become the cohort.
-        let pool: Vec<u64> = t.join_pool.iter().map(|&(c, _)| c).collect();
-        let cohort_ids = selection.select_cohort(&pool, k)?;
-        let cohort_set: BTreeSet<u64> = cohort_ids.iter().copied().collect();
-        let mut keys: HashMap<u64, [u8; 32]> = HashMap::new();
-        t.join_pool.retain(|&(c, pk)| {
-            if cohort_set.contains(&c) {
-                keys.insert(c, pk);
-                false
-            } else {
-                true
-            }
-        });
-        let model_blob = Arc::new(t.global.to_compressed()?);
-        let secagg = if t.config.secure_agg {
-            let groups_ids =
-                SelectionService::form_virtual_groups(&cohort_ids, t.config.vg_size);
-            let groups: Vec<Vec<(u64, [u8; 32])>> = groups_ids
-                .iter()
-                .map(|g| g.iter().map(|c| (*c, keys[c])).collect())
-                .collect();
-            let quant = Quantizer::new(t.config.quant_range, t.config.quant_bits)?;
-            Some(SecAggRound::new(
-                t.id,
-                t.round,
-                groups,
-                quant,
-                t.global.dim(),
-                0.6,
-            ))
-        } else {
-            None
-        };
-        t.cohort = cohort_set;
-        t.round_started_ms = now_ms;
-        t.phase = Phase::Training {
-            secagg,
-            plain: Vec::new(),
-            uploaded: BTreeSet::new(),
-            model_blob,
-            base_version: t.global.version,
-            deadline_ms: now_ms + t.config.round_timeout_ms,
-        };
-        log::info!(
-            "task {}: round {} cohort formed ({} clients{})",
-            t.id,
-            t.round,
-            k,
-            if t.config.secure_agg { ", secagg" } else { "" }
-        );
-        Ok(())
-    }
-
-    /// Complete the round: aggregate (possibly via the unmask detour),
-    /// update the model, record metrics, advance or finish the task.
-    fn finish_sync_round(t: &mut Task, eval: &dyn Evaluator, now_ms: u64) -> Result<()> {
-        // Take the phase out to appease the borrow checker.
-        let phase = std::mem::replace(&mut t.phase, Phase::Joining);
-        match phase {
-            Phase::Training {
-                secagg: Some(mut sa),
-                uploaded,
-                deadline_ms,
-                ..
-            } => {
-                if sa.needs_unmasking() {
-                    log::info!(
-                        "task {}: round {} has dropouts — entering unmask phase",
-                        t.id,
-                        t.round
-                    );
-                    let _ = uploaded;
-                    t.phase = Phase::Unmasking {
-                        secagg: sa,
-                        deadline_ms: deadline_ms + t.config.round_timeout_ms,
-                    };
-                    return Ok(());
-                }
-                let interims = sa.finalize()?;
-                if interims.is_empty() {
-                    return Err(Error::SecAgg("no usable VG interims".into()));
-                }
-                let participants =
-                    t.master
-                        .apply_interims(&mut t.global, &interims, &mut t.rng)?;
-                let loss = interims.iter().map(|i| i.mean_loss).sum::<f64>()
-                    / interims.len() as f64;
-                Self::record_round(t, eval, participants, loss, now_ms);
-            }
-            Phase::Training {
-                secagg: None,
-                plain,
-                ..
-            } => {
-                if plain.is_empty() {
-                    return Err(Error::Task("no uploads to aggregate".into()));
-                }
-                let loss =
-                    plain.iter().map(|u| u.loss).sum::<f64>() / plain.len() as f64;
-                let participants = t.master.apply_plain(&mut t.global, &plain, &mut t.rng)?;
-                Self::record_round(t, eval, participants, loss, now_ms);
-            }
-            Phase::Unmasking { mut secagg, .. } => {
-                let interims = secagg.finalize()?;
-                if interims.is_empty() {
-                    return Err(Error::SecAgg("all VGs poisoned".into()));
-                }
-                let participants =
-                    t.master
-                        .apply_interims(&mut t.global, &interims, &mut t.rng)?;
-                let loss = interims.iter().map(|i| i.mean_loss).sum::<f64>()
-                    / interims.len() as f64;
-                Self::record_round(t, eval, participants, loss, now_ms);
-            }
-            Phase::Joining => {
-                return Err(Error::Task("finish_sync_round in Joining".into()))
-            }
-        }
-        Ok(())
-    }
-
-    fn record_round(
-        t: &mut Task,
-        eval: &dyn Evaluator,
-        participants: usize,
-        train_loss: f64,
-        now_ms: u64,
-    ) {
-        if let Some(acc) = &mut t.accountant {
-            let q = (participants as f64 / t.config.dp_population as f64).min(1.0);
-            let _ = acc.step(q, t.config.dp.noise_multiplier);
-        }
-        let evald = eval.evaluate(&t.config.preset, &t.global.params);
-        let epsilon = t.epsilon();
-        t.metrics.push(RoundRecord {
-            round: t.round,
-            started_ms: t.round_started_ms,
-            ended_ms: now_ms,
-            participants,
-            train_loss,
-            eval_loss: evald.map(|(l, _)| l),
-            eval_accuracy: evald.map(|(_, a)| a),
-            epsilon,
-        });
-        t.cohort.clear();
-        t.round += 1;
-        if t.round >= t.config.total_rounds {
-            t.state = TaskState::Completed;
-            log::info!("task {}: completed after {} rounds", t.id, t.round);
-        }
-    }
-
-    fn fail_round(t: &mut Task) {
-        t.metrics.failed_rounds += 1;
-        t.cohort.clear();
-        t.phase = Phase::Joining;
-        // Joiners stay queued; stragglers may rejoin.
-    }
-
-    fn flush_async(t: &mut Task, eval: &dyn Evaluator, now_ms: u64) -> Result<()> {
-        let updates = std::mem::take(&mut t.buffer);
-        let participants = t.master.apply_plain(&mut t.global, &updates, &mut t.rng)?;
-        let loss = updates.iter().map(|u| u.loss).sum::<f64>() / updates.len() as f64;
-        t.round_started_ms = t.last_flush_ms;
-        t.last_flush_ms = now_ms;
-        Self::record_round(t, eval, participants, loss, now_ms);
-        Ok(())
+        self.with_task(task_id, |t| Ok((t.descriptor(), t.metrics.clone(), t.epsilon())))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::FlMode;
+    use crate::orchestrator::NullDirectory;
     use crate::proto::DeviceCaps;
+    use crate::services::selection::SelectionService;
 
     fn mgmt() -> (ManagementService, SelectionService) {
         (
@@ -964,7 +440,7 @@ mod tests {
         }
         let (desc, _, _) = m.task_status(id).unwrap();
         assert_eq!(desc.round, 0); // still open
-        m.tick(2000); // past deadline
+        m.tick(&NullDirectory, 2000); // past deadline
         let (desc, metrics, _) = m.task_status(id).unwrap();
         assert_eq!(desc.state, TaskState::Completed);
         assert_eq!(metrics.rounds[0].participants, 3);
@@ -991,7 +467,7 @@ mod tests {
                 break;
             }
         }
-        m.tick(5000);
+        m.tick(&NullDirectory, 5000);
         let (desc, metrics, _) = m.task_status(id).unwrap();
         assert_eq!(desc.round, 0);
         assert_eq!(metrics.failed_rounds, 1);
@@ -1092,5 +568,30 @@ mod tests {
         run_plain_round(&m, &sel, id, &clients, 1000);
         let (_, _, eps2) = m.task_status(id).unwrap();
         assert!(eps2.unwrap() > eps.unwrap());
+    }
+
+    #[test]
+    fn management_events_cover_the_round_lifecycle() {
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 2);
+        let stream = m.subscribe();
+        let id = m
+            .create_task(small_cfg(2, 1), ModelSnapshot::new(0, vec![0.0; 2]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        run_plain_round(&m, &sel, id, &clients, 0);
+        let kinds: Vec<&'static str> = stream.drain().iter().map(|e| e.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "task_state_changed", // → running
+                "client_joined",
+                "client_joined",
+                "round_started",
+                "round_committed",
+                "task_state_changed", // → completed
+                "task_completed",
+            ]
+        );
     }
 }

@@ -1,5 +1,6 @@
 //! Back-end services (§3.1): Authentication, Selection, Secure Aggregator,
-//! Master Aggregator, and the Management Service that orchestrates them.
+//! Master Aggregator, and the Management Service — a thin multi-tenant
+//! registry over the per-task round engines in [`crate::orchestrator`].
 //! `router.rs` exposes them as four FLaaS-style [`router::Service`]s
 //! behind an ordered interceptor chain (auth → metrics → backpressure);
 //! `server.rs` assembles the platform and keeps `handle()` as a thin

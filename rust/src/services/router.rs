@@ -395,7 +395,9 @@ impl Service for AggregationIngest {
     }
 }
 
-/// Operator-facing surface: task status (§3.3 dashboard/CLI backing).
+/// Operator-facing surface: task status (§3.3 dashboard/CLI backing),
+/// served through the orchestrator's admin `TaskHandle` — phase and
+/// round internals never leave `orchestrator/`.
 pub struct AdminService;
 
 impl Service for AdminService {
@@ -405,7 +407,7 @@ impl Service for AdminService {
 
     fn call(&self, srv: &FloridaServer, _ctx: &RequestCtx, msg: Msg) -> Msg {
         match msg {
-            Msg::GetTaskStatus { task_id } => match srv.management.task_status(task_id) {
+            Msg::GetTaskStatus { task_id } => match srv.task_handle(task_id).status() {
                 Ok((task, metrics, eps)) => {
                     let last = metrics.last();
                     Msg::TaskStatus {

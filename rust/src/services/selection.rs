@@ -10,6 +10,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
+use crate::orchestrator::ClientDirectory;
 use crate::proto::{DeviceCaps, SelectionCriteria};
 use crate::util::Rng;
 
@@ -99,20 +100,36 @@ impl SelectionService {
         Ok(criteria.matches(&info.caps))
     }
 
-    /// Randomly select `k` distinct clients from `pool` (the round's
-    /// joiners). Errors if the pool is smaller than `k`.
-    pub fn select_cohort(&self, pool: &[u64], k: usize) -> Result<Vec<u64>> {
-        if pool.len() < k {
+    /// Randomly select up to `k` distinct clients from `pool` (the
+    /// round's joiners), honoring a `min_clients` floor: with
+    /// `min_clients ≤ pool < k` the whole (undersized) pool is selected
+    /// so rounds proceed degraded instead of permanently stalling at the
+    /// Joining phase. `min_clients` of 0 means strict (`pool ≥ k`
+    /// required, the old behavior).
+    ///
+    /// Note: the round engine's in-band selection lives in
+    /// `orchestrator::policy::UniformRandom` (same sampling + floor
+    /// semantics, plus a join-grace gate, on the engine's RNG); keep the
+    /// two in step. This remains the standalone registry-level utility.
+    pub fn select_cohort(&self, pool: &[u64], k: usize, min_clients: usize) -> Result<Vec<u64>> {
+        let floor = if min_clients == 0 { k } else { min_clients.min(k) };
+        if pool.len() < floor.max(1) {
             return Err(Error::Selection(format!(
-                "pool {} smaller than cohort {k}",
+                "pool {} smaller than cohort floor {floor} (k = {k})",
                 pool.len()
             )));
         }
+        let take = k.min(pool.len());
         let mut g = self.inner.lock().unwrap();
-        let idx = g.rng.sample_indices(pool.len(), k);
+        let idx = g.rng.sample_indices(pool.len(), take);
         let mut cohort: Vec<u64> = idx.into_iter().map(|i| pool[i]).collect();
         cohort.sort_unstable(); // deterministic order for VG formation
         Ok(cohort)
+    }
+
+    /// Directory view for caps-aware cohort policies.
+    pub fn caps_of(&self, client_id: u64) -> Option<DeviceCaps> {
+        self.get(client_id).map(|info| info.caps)
     }
 
     /// Partition a cohort into virtual groups of (at most) `vg_size`,
@@ -139,6 +156,12 @@ impl SelectionService {
             gr.sort_unstable();
         }
         groups
+    }
+}
+
+impl ClientDirectory for SelectionService {
+    fn caps_of(&self, client_id: u64) -> Option<DeviceCaps> {
+        SelectionService::caps_of(self, client_id)
     }
 }
 
@@ -175,22 +198,51 @@ mod tests {
     fn cohort_selection_distinct_and_sized() {
         let s = SelectionService::new(3);
         let pool: Vec<u64> = (1..=100).collect();
-        let cohort = s.select_cohort(&pool, 32).unwrap();
+        let cohort = s.select_cohort(&pool, 32, 0).unwrap();
         assert_eq!(cohort.len(), 32);
         let mut c = cohort.clone();
         c.dedup();
         assert_eq!(c.len(), 32);
         assert!(cohort.iter().all(|x| pool.contains(x)));
-        assert!(s.select_cohort(&pool[..10], 32).is_err());
+        assert!(s.select_cohort(&pool[..10], 32, 0).is_err());
     }
 
     #[test]
     fn cohort_selection_is_random_ish() {
         let s = SelectionService::new(4);
         let pool: Vec<u64> = (1..=100).collect();
-        let a = s.select_cohort(&pool, 20).unwrap();
-        let b = s.select_cohort(&pool, 20).unwrap();
+        let a = s.select_cohort(&pool, 20, 0).unwrap();
+        let b = s.select_cohort(&pool, 20, 0).unwrap();
         assert_ne!(a, b); // astronomically unlikely to collide
+    }
+
+    #[test]
+    fn cohort_floor_allows_degraded_selection() {
+        let s = SelectionService::new(5);
+        let pool: Vec<u64> = (1..=10).collect();
+        // min_clients ≤ pool < k: the whole pool is taken, sorted.
+        let cohort = s.select_cohort(&pool, 32, 4).unwrap();
+        assert_eq!(cohort, pool);
+        // Pool below the floor still errors.
+        assert!(s.select_cohort(&pool[..3], 32, 4).is_err());
+        // Floor larger than k clamps to k (never blocks a full pool).
+        let cohort = s.select_cohort(&pool, 4, 9).unwrap();
+        assert_eq!(cohort.len(), 4);
+        // Strict mode (floor 0) behaves as before.
+        assert!(s.select_cohort(&pool, 11, 0).is_err());
+        // An empty pool can never form a cohort, even with floor 0 … k 0.
+        assert!(s.select_cohort(&[], 0, 0).is_err());
+    }
+
+    #[test]
+    fn directory_exposes_caps() {
+        let s = SelectionService::new(6);
+        let mut caps = DeviceCaps::default();
+        caps.os = "android".into();
+        let id = s.register("dir-dev", caps, 0);
+        let got = ClientDirectory::caps_of(&s, id).unwrap();
+        assert_eq!(got.os, "android");
+        assert!(s.caps_of(9999).is_none());
     }
 
     #[test]

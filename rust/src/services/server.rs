@@ -18,6 +18,7 @@ use crate::config::TaskConfig;
 use crate::error::Result;
 use crate::metrics::RpcMetrics;
 use crate::model::ModelSnapshot;
+use crate::orchestrator::{EventStream, TaskBuilder, TaskHandle};
 use crate::proto::{decode_frame, encode_frame, Msg};
 use crate::services::auth::AuthService;
 use crate::services::management::{Evaluator, ManagementService, NoEval};
@@ -123,14 +124,31 @@ impl FloridaServer {
         if let Clock::Manual(ms) = &self.clock {
             ms.fetch_add(delta, Ordering::SeqCst);
         }
-        self.management.tick(self.now_ms());
+        self.tick();
+    }
+
+    /// Deadline sweep across every task engine (the selection registry
+    /// feeds caps-aware cohort policies).
+    pub fn tick(&self) {
+        self.management.tick(&self.selection, self.now_ms());
     }
 
     /// Convenience: create + start a task from a config and initial model.
+    /// (The fluent path is `TaskBuilder::new(..).deploy(&server.management, ..)`.)
     pub fn deploy_task(&self, config: TaskConfig, init: ModelSnapshot) -> Result<u64> {
-        let id = self.management.create_task(config, init)?;
-        self.management.start_task(id)?;
-        Ok(id)
+        Ok(TaskBuilder::from_config(config)
+            .deploy(&self.management, init)?
+            .id())
+    }
+
+    /// Admin handle for an existing task.
+    pub fn task_handle(&self, task_id: u64) -> TaskHandle<'_> {
+        TaskHandle::attach(&self.management, task_id)
+    }
+
+    /// Subscribe to every task's lifecycle events.
+    pub fn subscribe(&self) -> EventStream {
+        self.management.subscribe()
     }
 
     /// Single request/response entry point — a thin compatibility shim

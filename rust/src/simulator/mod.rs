@@ -175,7 +175,7 @@ where
         let stop = Arc::clone(&stop);
         thread::spawn(move || {
             while !stop.load(Ordering::SeqCst) {
-                server.management.tick(server.now_ms());
+                server.tick();
                 thread::sleep(Duration::from_millis(20));
             }
         })
@@ -273,38 +273,59 @@ fn run_device<T: Trainer + 'static>(
 mod tests {
     use super::*;
     use crate::client::ConstantTrainer;
-    use crate::config::TaskConfig;
+    use crate::orchestrator::{TaskBuilder, TaskEvent};
     use crate::proto::TaskState;
 
-    fn dummy_server_task(n: usize, rounds: u64, secagg: bool) -> (Arc<FloridaServer>, u64) {
-        let server = Arc::new(FloridaServer::with_evaluator(
+    fn sim_server() -> Arc<FloridaServer> {
+        Arc::new(FloridaServer::with_evaluator(
             true,
             Arc::new(crate::services::management::NoEval),
             42,
             true, // real clock — fleet threads need real deadlines
-        ));
-        let mut cfg = TaskConfig::default();
-        cfg.clients_per_round = n;
-        cfg.total_rounds = rounds;
-        cfg.secure_agg = secagg;
-        cfg.vg_size = 8;
-        cfg.round_timeout_ms = 20_000;
-        let id = server
-            .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 5]))
-            .unwrap();
+        ))
+    }
+
+    fn dummy_task(n: usize, rounds: u64, secagg: bool) -> TaskBuilder {
+        let b = TaskBuilder::new("dummy")
+            .clients_per_round(n)
+            .rounds(rounds)
+            .round_timeout_ms(20_000);
+        if secagg {
+            b.secure_agg(8)
+        } else {
+            b
+        }
+    }
+
+    fn dummy_server_task(n: usize, rounds: u64, secagg: bool) -> (Arc<FloridaServer>, u64) {
+        let server = sim_server();
+        let id = dummy_task(n, rounds, secagg)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 5]))
+            .unwrap()
+            .id();
         (server, id)
     }
 
     #[test]
     fn fleet_completes_dummy_task() {
         let (server, task) = dummy_server_task(8, 2, false);
+        // Observe the lifecycle through the event stream, not polling.
+        let events = server.task_handle(task).subscribe();
         let cfg = FleetConfig {
             n_devices: 8,
             ..Default::default()
         };
         let reports = run_fleet(&server, task, &cfg, |_| ConstantTrainer { step: 1.0 });
         assert!(reports.iter().all(|r| r.task_completed));
-        let (desc, metrics, _) = server.management.task_status(task).unwrap();
+        let seen = events.drain();
+        assert!(seen.iter().any(|ev| ev.kind() == "task_completed"));
+        assert_eq!(
+            seen.iter()
+                .filter(|ev| matches!(ev, TaskEvent::RoundCommitted { .. }))
+                .count(),
+            2
+        );
+        let (desc, metrics, _) = server.task_handle(task).status().unwrap();
         assert_eq!(desc.state, TaskState::Completed);
         assert_eq!(metrics.rounds.len(), 2);
         // All-ones aggregation: model should be +1 per round.
@@ -342,23 +363,21 @@ mod tests {
 
     #[test]
     fn fleet_survives_dropouts_with_secagg() {
-        let (server, task) = dummy_server_task(8, 1, true);
+        let server = sim_server();
+        // Short timeout so dropped uploads trigger the unmask path quickly.
+        let task = dummy_task(8, 1, true)
+            .round_timeout_ms(1500)
+            .min_report_fraction(0.5)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 5]))
+            .unwrap()
+            .id();
         let mut cfg = FleetConfig {
             n_devices: 8,
             ..Default::default()
         };
         cfg.heterogeneity.dropout_prob = 0.25;
-        // Short timeout so dropped uploads trigger the unmask path quickly.
-        server
-            .management
-            .with_task(task, |t| {
-                t.config.round_timeout_ms = 1500;
-                t.config.min_report_fraction = 0.5;
-                Ok(())
-            })
-            .unwrap();
         let _reports = run_fleet(&server, task, &cfg, |_| ConstantTrainer { step: 1.0 });
-        let (desc, metrics, _) = server.management.task_status(task).unwrap();
+        let (desc, metrics, _) = server.task_handle(task).status().unwrap();
         // Either the round committed with survivors or was retried and
         // then committed — the task must end Completed with >=1 round.
         assert_eq!(desc.state, TaskState::Completed);

@@ -8,9 +8,9 @@
 use std::sync::Arc;
 
 use crate::client::ConstantTrainer;
-use crate::config::TaskConfig;
 use crate::error::Result;
 use crate::model::ModelSnapshot;
+use crate::orchestrator::TaskBuilder;
 use crate::services::management::NoEval;
 use crate::services::FloridaServer;
 use crate::simulator::{run_fleet, FleetConfig, Heterogeneity};
@@ -40,13 +40,13 @@ pub fn run_scaling_point(n: usize, rounds: u64, seed: u64) -> Result<ScalingPoin
         seed,
         true,
     ));
-    let mut cfg = TaskConfig::default();
-    cfg.task_name = format!("dummy-scaling-{n}");
-    cfg.clients_per_round = n;
-    cfg.total_rounds = rounds;
-    cfg.round_timeout_ms = 120_000;
     // Dummy task: all-ones array of size 5.
-    let task = server.deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 5]))?;
+    let task = TaskBuilder::new(&format!("dummy-scaling-{n}"))
+        .clients_per_round(n)
+        .rounds(rounds)
+        .round_timeout_ms(120_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 5]))?
+        .id();
 
     let t0 = std::time::Instant::now();
     let fleet = FleetConfig {
@@ -59,7 +59,7 @@ pub fn run_scaling_point(n: usize, rounds: u64, seed: u64) -> Result<ScalingPoin
     let reports = run_fleet(&server, task, &fleet, |_| ConstantTrainer { step: 1.0 });
     let wall_ms = t0.elapsed().as_millis() as u64;
 
-    let (_, metrics, _) = server.management.task_status(task)?;
+    let (_, metrics, _) = server.task_handle(task).status()?;
     let register_ms = server.selection.count() as u64; // count only; see bench
     let _ = reports;
     Ok(ScalingPoint {

@@ -8,12 +8,13 @@
 
 use std::sync::Arc;
 
-use crate::config::{FlMode, Manifest, TaskConfig};
+use crate::config::Manifest;
 use crate::data::{SpamCorpus, SpamCorpusConfig};
 use crate::dp::DpConfig;
 use crate::error::Result;
 use crate::metrics::RoundRecord;
 use crate::model::ModelSnapshot;
+use crate::orchestrator::TaskBuilder;
 use crate::runtime::{HloEvaluator, HloTrainer, Runtime, ShardSampler};
 use crate::services::FloridaServer;
 use crate::simulator::{FleetConfig, Heterogeneity};
@@ -111,33 +112,53 @@ pub fn run_spam(cfg: &SpamRunConfig) -> Result<SpamRunResult> {
         true,
     ));
 
-    let mut tcfg = TaskConfig::default();
-    tcfg.task_name = "spam-classification".into();
-    tcfg.app_name = "python-app".into();
-    tcfg.workflow_name = "python-workflow".into();
-    tcfg.preset = cfg.preset.clone();
-    tcfg.clients_per_round = cfg.clients_per_round;
-    tcfg.total_rounds = cfg.rounds;
-    tcfg.mode = match cfg.async_buffer {
-        None => FlMode::Sync,
-        Some(k) => FlMode::Async { buffer_size: k },
-    };
-    tcfg.aggregator = if cfg.async_buffer.is_some() && cfg.aggregator == "fedavg" {
-        "fedbuff".into()
+    let aggregator = if cfg.async_buffer.is_some() && cfg.aggregator == "fedavg" {
+        "fedbuff".to_string()
     } else {
         cfg.aggregator.clone()
     };
-    tcfg.client_lr = cfg.client_lr;
-    tcfg.prox_mu = cfg.prox_mu;
-    tcfg.secure_agg = cfg.secure_agg;
-    tcfg.vg_size = cfg.vg_size;
-    tcfg.dp = cfg.dp;
-    tcfg.dp_population = cfg.n_shards; // paper: pool of 100 clients
-    tcfg.round_timeout_ms = 600_000;
-    tcfg.min_report_fraction = 0.75;
+    let mut builder = TaskBuilder::new("spam-classification")
+        .app("python-app")
+        .workflow("python-workflow")
+        .preset(&cfg.preset)
+        .clients_per_round(cfg.clients_per_round)
+        .rounds(cfg.rounds)
+        .aggregator(&aggregator)
+        .client_lr(cfg.client_lr)
+        .prox_mu(cfg.prox_mu)
+        .dp(cfg.dp)
+        .dp_population(cfg.n_shards) // paper: pool of 100 clients
+        .round_timeout_ms(600_000)
+        .min_report_fraction(0.75);
+    if let Some(k) = cfg.async_buffer {
+        builder = builder.buffered_async(k);
+    }
+    if cfg.secure_agg {
+        builder = builder.secure_agg(cfg.vg_size);
+    }
 
     let init = ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path))?;
-    let task_id = server.deploy_task(tcfg, init)?;
+    let handle = builder.deploy(&server.management, init)?;
+    let task_id = handle.id();
+    // Round-lifecycle log via the event stream (the §3.3 dashboard view).
+    let events = handle.subscribe();
+    // Detached: exits when the task completes or the server drops.
+    let _event_logger = std::thread::spawn(move || {
+        while let Some(ev) = events.next_timeout(std::time::Duration::from_secs(1800)) {
+            log::info!("spam-sim event: {} (task {})", ev.kind(), ev.task_id());
+            if matches!(
+                ev,
+                crate::orchestrator::TaskEvent::TaskCompleted { .. }
+                    | crate::orchestrator::TaskEvent::TaskStateChanged {
+                        state: crate::proto::TaskState::Cancelled
+                            | crate::proto::TaskState::Failed,
+                        ..
+                    }
+            ) {
+                break;
+            }
+        }
+    });
 
     // Build per-device trainers: each device samples a random shard per
     // round — approximated by giving device i shard (i + round) % S via a
@@ -184,7 +205,7 @@ pub fn run_spam(cfg: &SpamRunConfig) -> Result<SpamRunResult> {
     });
     let total_wall_ms = t0.elapsed().as_millis() as u64;
 
-    let (_, metrics, epsilon) = server.management.task_status(task_id)?;
+    let (_, metrics, epsilon) = server.task_handle(task_id).status()?;
     let final_accuracy = metrics
         .rounds
         .iter()
@@ -225,7 +246,7 @@ where
         let stop = Arc::clone(&stop);
         std::thread::spawn(move || {
             while !stop.load(Ordering::SeqCst) {
-                server.management.tick(server.now_ms());
+                server.tick();
                 std::thread::sleep(std::time::Duration::from_millis(20));
             }
         })

@@ -59,6 +59,22 @@ impl Bencher {
         }
     }
 
+    /// Default bencher, honoring `FLORIDA_BENCH_QUICK=1` (CI snapshot
+    /// mode: short measure windows so `scripts/check.sh` can emit a
+    /// `BENCH_*.json` trajectory point without a full bench run).
+    pub fn from_env() -> Self {
+        if std::env::var("FLORIDA_BENCH_QUICK").is_ok() {
+            Bencher {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(60),
+                min_iters: 3,
+                max_iters: 100_000,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
     /// Time `f`, per-iteration. Returns stats over individual iterations.
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
         // Warmup.
@@ -130,6 +146,73 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Accumulates results for a machine-readable snapshot — the perf
+/// trajectory `scripts/check.sh` appends to on every CI run.
+#[derive(Default)]
+pub struct Snapshot {
+    results: Vec<BenchResult>,
+}
+
+impl Snapshot {
+    pub fn new() -> Snapshot {
+        Snapshot::default()
+    }
+
+    pub fn record(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Print the row (as [`report`]) and record it for the snapshot.
+    pub fn report(&mut self, r: BenchResult) {
+        report(&r);
+        self.record(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut j = Json::obj()
+                    .set("name", r.name.as_str())
+                    .set("iters", r.iters)
+                    .set("mean_ns", r.mean_ns)
+                    .set("p50_ns", r.p50_ns)
+                    .set("p95_ns", r.p95_ns)
+                    .set("std_ns", r.std_ns);
+                if let Some(b) = r.bytes_per_iter {
+                    j = j.set("bytes_per_iter", b);
+                }
+                if let Some(g) = r.throughput_gbs() {
+                    j = j.set("gb_per_s", g);
+                }
+                j
+            })
+            .collect();
+        Json::obj().set("cases", Json::Arr(cases))
+    }
+
+    /// Write the snapshot to the path named by `env_var`, if set.
+    pub fn write_if_env(&self, env_var: &str) -> std::io::Result<()> {
+        if let Ok(path) = std::env::var(env_var) {
+            if !path.is_empty() {
+                std::fs::write(&path, self.to_json().to_string())?;
+                println!("\nwrote bench snapshot: {path} ({} cases)", self.len());
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Print a table of (label, value) series — used for figure reproduction.
 pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
     println!("\n--- {title} ---");
@@ -187,6 +270,28 @@ mod tests {
             bytes_per_iter: Some(2000),
         };
         assert!((r.throughput_gbs().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_serializes_cases() {
+        let mut snap = Snapshot::new();
+        snap.record(BenchResult {
+            name: "case_a".into(),
+            iters: 10,
+            mean_ns: 100.0,
+            p50_ns: 90.0,
+            p95_ns: 150.0,
+            std_ns: 5.0,
+            bytes_per_iter: Some(1000),
+        });
+        assert_eq!(snap.len(), 1);
+        assert!(!snap.is_empty());
+        let text = snap.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        let cases = back.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").unwrap().as_str().unwrap(), "case_a");
+        assert!(cases[0].get("gb_per_s").is_some());
     }
 
     #[test]

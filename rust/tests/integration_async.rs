@@ -3,9 +3,8 @@
 use std::sync::Arc;
 
 use florida::client::ConstantTrainer;
-use florida::config::{FlMode, TaskConfig};
-
 use florida::model::ModelSnapshot;
+use florida::orchestrator::{TaskBuilder, TaskEvent};
 use florida::proto::TaskState;
 use florida::services::FloridaServer;
 use florida::simulator::{run_fleet, FleetConfig, Heterogeneity};
@@ -19,22 +18,23 @@ fn server(seed: u64) -> Arc<FloridaServer> {
     ))
 }
 
-fn async_cfg(buffer: usize, flushes: u64) -> TaskConfig {
-    let mut cfg = TaskConfig::default();
-    cfg.mode = FlMode::Async { buffer_size: buffer };
-    cfg.aggregator = "fedbuff".into();
-    cfg.clients_per_round = buffer;
-    cfg.total_rounds = flushes;
-    cfg.round_timeout_ms = 30_000;
-    cfg
+fn async_task(buffer: usize, flushes: u64) -> TaskBuilder {
+    TaskBuilder::new("buffered-async")
+        .buffered_async(buffer)
+        .aggregator("fedbuff")
+        .clients_per_round(buffer)
+        .rounds(flushes)
+        .round_timeout_ms(30_000)
 }
 
 #[test]
 fn async_task_completes_with_buffer_flushes() {
     let server = server(31);
-    let task = server
-        .deploy_task(async_cfg(8, 3), ModelSnapshot::new(0, vec![0.0; 4]))
+    let handle = async_task(8, 3)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 4]))
         .unwrap();
+    let task = handle.id();
+    let events = handle.subscribe();
     let fleet = FleetConfig {
         n_devices: 8,
         seed: 2,
@@ -42,10 +42,19 @@ fn async_task_completes_with_buffer_flushes() {
     };
     let reports = run_fleet(&server, task, &fleet, |_| ConstantTrainer { step: 0.5 });
     assert!(reports.iter().all(|r| r.task_completed));
-    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    let (desc, metrics, _) = handle.status().unwrap();
     assert_eq!(desc.state, TaskState::Completed);
     assert_eq!(metrics.rounds.len(), 3);
     assert!(metrics.rounds.iter().all(|r| r.participants == 8));
+    // Each buffer flush surfaced as a committed round on the stream.
+    assert_eq!(
+        events
+            .drain()
+            .iter()
+            .filter(|ev| matches!(ev, TaskEvent::RoundCommitted { .. }))
+            .count(),
+        3
+    );
 }
 
 #[test]
@@ -53,9 +62,10 @@ fn async_no_round_barrier_under_stragglers() {
     // With heterogeneous speeds, async flushes don't wait for stragglers:
     // fast devices contribute multiple times per flush epoch.
     let server = server(37);
-    let task = server
-        .deploy_task(async_cfg(6, 4), ModelSnapshot::new(0, vec![0.0; 4]))
-        .unwrap();
+    let task = async_task(6, 4)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
     let mut fleet = FleetConfig {
         n_devices: 6,
         seed: 3,
@@ -86,9 +96,10 @@ fn async_staleness_recorded_and_discounted() {
     use florida::client::FloridaClient;
     use florida::proto::rpc;
     let server = server(41);
-    let task = server
-        .deploy_task(async_cfg(2, 3), ModelSnapshot::new(0, vec![0.0; 2]))
-        .unwrap();
+    let task = async_task(2, 3)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 2]))
+        .unwrap()
+        .id();
     let client = FloridaClient::direct(&server);
     let mut ids = Vec::new();
     for i in 0..2u64 {
@@ -150,9 +161,10 @@ fn async_requires_join_before_upload() {
     use florida::client::FloridaClient;
     use florida::proto::rpc;
     let server = server(43);
-    let task = server
-        .deploy_task(async_cfg(2, 1), ModelSnapshot::new(0, vec![0.0; 2]))
-        .unwrap();
+    let task = async_task(2, 1)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 2]))
+        .unwrap()
+        .id();
     let client = FloridaClient::direct(&server);
     // Registered (so the AuthInterceptor admits the request) but never
     // joined: the aggregation service must refuse, and the stub surfaces

@@ -6,9 +6,9 @@
 use std::sync::Arc;
 
 use florida::client::{ConstantTrainer, FloridaClient, TrainOutcome, Trainer};
-use florida::config::{FlMode, TaskConfig};
 use florida::error::Result;
 use florida::model::ModelSnapshot;
+use florida::orchestrator::TaskBuilder;
 use florida::proto::TaskState;
 use florida::services::FloridaServer;
 use florida::simulator::{run_fleet, FleetConfig};
@@ -22,15 +22,20 @@ fn server() -> Arc<FloridaServer> {
     ))
 }
 
-fn cfg(app: &str, wf: &str, n: usize, rounds: u64) -> TaskConfig {
-    let mut c = TaskConfig::default();
-    c.task_name = format!("{app}/{wf}");
-    c.app_name = app.into();
-    c.workflow_name = wf.into();
-    c.clients_per_round = n;
-    c.total_rounds = rounds;
-    c.round_timeout_ms = 30_000;
-    c
+fn task(app: &str, wf: &str, n: usize, rounds: u64) -> TaskBuilder {
+    TaskBuilder::new(&format!("{app}/{wf}"))
+        .app(app)
+        .workflow(wf)
+        .clients_per_round(n)
+        .rounds(rounds)
+        .round_timeout_ms(30_000)
+}
+
+fn deploy(server: &FloridaServer, builder: TaskBuilder, dim: usize) -> u64 {
+    builder
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; dim]))
+        .unwrap()
+        .id()
 }
 
 #[test]
@@ -38,15 +43,8 @@ fn two_customers_run_concurrently_isolated() {
     let server = server();
     // Customer A: "mail" spam model (dim 4); Customer B: "keyboard"
     // next-word model (dim 9). Different device fleets.
-    let task_a = server
-        .deploy_task(cfg("mail", "spam", 4, 3), ModelSnapshot::new(0, vec![0.0; 4]))
-        .unwrap();
-    let task_b = server
-        .deploy_task(
-            cfg("keyboard", "nextword", 3, 4),
-            ModelSnapshot::new(0, vec![0.0; 9]),
-        )
-        .unwrap();
+    let task_a = deploy(&server, task("mail", "spam", 4, 3), 4);
+    let task_b = deploy(&server, task("keyboard", "nextword", 3, 4), 9);
     assert_ne!(task_a, task_b);
 
     let sa = Arc::clone(&server);
@@ -100,15 +98,9 @@ fn two_customers_run_concurrently_isolated() {
 #[test]
 fn advertisement_routes_by_app_and_workflow() {
     let server = server();
-    let t1 = server
-        .deploy_task(cfg("mail", "spam", 1, 1), ModelSnapshot::new(0, vec![0.0]))
-        .unwrap();
-    let t2 = server
-        .deploy_task(cfg("mail", "rank", 1, 1), ModelSnapshot::new(0, vec![0.0]))
-        .unwrap();
-    let t3 = server
-        .deploy_task(cfg("voice", "verify", 1, 1), ModelSnapshot::new(0, vec![0.0]))
-        .unwrap();
+    let t1 = deploy(&server, task("mail", "spam", 1, 1), 1);
+    let t2 = deploy(&server, task("mail", "rank", 1, 1), 1);
+    let t3 = deploy(&server, task("voice", "verify", 1, 1), 1);
     assert_eq!(server.management.advertise("mail", "spam").unwrap().task_id, t1);
     assert_eq!(server.management.advertise("mail", "rank").unwrap().task_id, t2);
     assert_eq!(server.management.advertise("voice", "verify").unwrap().task_id, t3);
@@ -126,18 +118,14 @@ fn one_device_serves_sequential_workflows() {
     use florida::proto::DeviceCaps;
 
     let server = server();
-    let _ta = server
-        .deploy_task(cfg("mail", "spam", 1, 2), ModelSnapshot::new(0, vec![0.0; 2]))
-        .unwrap();
-    let _tb = server
-        .deploy_task(cfg("mail", "rank", 1, 1), ModelSnapshot::new(0, vec![0.0; 3]))
-        .unwrap();
+    let _ta = deploy(&server, task("mail", "spam", 1, 2), 2);
+    let _tb = deploy(&server, task("mail", "rank", 1, 1), 3);
     // Background deadline ticks.
     let ticker = {
         let s = Arc::clone(&server);
         std::thread::spawn(move || {
             for _ in 0..600 {
-                s.management.tick(s.now_ms());
+                s.tick();
                 std::thread::sleep(std::time::Duration::from_millis(10));
             }
         })
@@ -179,15 +167,14 @@ fn one_device_serves_sequential_workflows() {
 #[test]
 fn mixed_sync_and_async_tasks_coexist() {
     let server = server();
-    let mut async_cfg = cfg("app-x", "wf-x", 3, 2);
-    async_cfg.mode = FlMode::Async { buffer_size: 3 };
-    async_cfg.aggregator = "fedbuff".into();
-    let t_async = server
-        .deploy_task(async_cfg, ModelSnapshot::new(0, vec![0.0; 2]))
-        .unwrap();
-    let t_sync = server
-        .deploy_task(cfg("app-y", "wf-y", 3, 2), ModelSnapshot::new(0, vec![0.0; 2]))
-        .unwrap();
+    let t_async = deploy(
+        &server,
+        task("app-x", "wf-x", 3, 2)
+            .buffered_async(3)
+            .aggregator("fedbuff"),
+        2,
+    );
+    let t_sync = deploy(&server, task("app-y", "wf-y", 3, 2), 2);
 
     struct Slow;
     impl Trainer for Slow {
@@ -228,7 +215,7 @@ fn mixed_sync_and_async_tasks_coexist() {
     h1.join().unwrap();
     h2.join().unwrap();
     for t in [t_async, t_sync] {
-        let (d, m, _) = server.management.task_status(t).unwrap();
+        let (d, m, _) = server.task_handle(t).status().unwrap();
         assert_eq!(d.state, TaskState::Completed, "task {t}");
         assert_eq!(m.rounds.len(), 2);
     }
@@ -237,18 +224,14 @@ fn mixed_sync_and_async_tasks_coexist() {
 #[test]
 fn status_queries_are_per_task() {
     let server = server();
-    let t1 = server
-        .deploy_task(cfg("a", "w", 2, 1), ModelSnapshot::new(0, vec![0.0; 2]))
-        .unwrap();
+    let t1 = deploy(&server, task("a", "w", 2, 1), 2);
     let fleet = FleetConfig {
         n_devices: 2,
         seed: 6,
         ..Default::default()
     };
     run_fleet(&server, t1, &fleet, |_| ConstantTrainer { step: 1.0 });
-    let t2 = server
-        .deploy_task(cfg("b", "w", 2, 1), ModelSnapshot::new(0, vec![0.0; 2]))
-        .unwrap();
+    let t2 = deploy(&server, task("b", "w", 2, 1), 2);
     let client = FloridaClient::direct(&server);
     let st1 = client.task_status(t1).unwrap();
     assert_eq!(st1.task.state, TaskState::Completed);

@@ -2,12 +2,12 @@
 //! masked sums equal plaintext aggregation, multiple virtual groups,
 //! dropout recovery, and privacy of individual uploads.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use florida::client::{ConstantTrainer, TrainOutcome, Trainer};
-use florida::config::TaskConfig;
 use florida::error::Result;
 use florida::model::ModelSnapshot;
+use florida::orchestrator::{TaskBuilder, TaskEvent};
 use florida::proto::TaskState;
 use florida::services::FloridaServer;
 use florida::simulator::{run_fleet, FleetConfig};
@@ -21,16 +21,13 @@ fn server(seed: u64) -> Arc<FloridaServer> {
     ))
 }
 
-fn secagg_cfg(n: usize, rounds: u64, vg: usize) -> TaskConfig {
-    let mut cfg = TaskConfig::default();
-    cfg.clients_per_round = n;
-    cfg.total_rounds = rounds;
-    cfg.secure_agg = true;
-    cfg.vg_size = vg;
-    cfg.quant_bits = 18;
-    cfg.quant_range = 4.0;
-    cfg.round_timeout_ms = 30_000;
-    cfg
+fn secagg_task(n: usize, rounds: u64, vg: usize) -> TaskBuilder {
+    TaskBuilder::new("secagg")
+        .clients_per_round(n)
+        .rounds(rounds)
+        .secure_agg(vg)
+        .quantizer(4.0, 18)
+        .round_timeout_ms(30_000)
 }
 
 #[test]
@@ -60,11 +57,15 @@ fn secagg_equals_plain_aggregation() {
 
     let run = |secure: bool| -> Vec<f32> {
         let server = server(77);
-        let mut cfg = secagg_cfg(16, 1, 8);
-        cfg.secure_agg = secure;
-        let task = server
-            .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 32]))
-            .unwrap();
+        let builder = if secure {
+            secagg_task(16, 1, 8)
+        } else {
+            secagg_task(16, 1, 8).plaintext()
+        };
+        let task = builder
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 32]))
+            .unwrap()
+            .id();
         let fleet = FleetConfig {
             n_devices: 16,
             seed: 17,
@@ -89,10 +90,10 @@ fn secagg_equals_plain_aggregation() {
 #[test]
 fn secagg_multiple_virtual_groups() {
     let server = server(88);
-    let cfg = secagg_cfg(12, 2, 4); // → 3 VGs of 4
-    let task = server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 8]))
+    let handle = secagg_task(12, 2, 4) // → 3 VGs of 4
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 8]))
         .unwrap();
+    let task = handle.id();
     let fleet = FleetConfig {
         n_devices: 12,
         seed: 19,
@@ -100,7 +101,7 @@ fn secagg_multiple_virtual_groups() {
     };
     let reports = run_fleet(&server, task, &fleet, |_| ConstantTrainer { step: 1.0 });
     assert!(reports.iter().all(|r| r.task_completed));
-    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    let (desc, metrics, _) = handle.status().unwrap();
     assert_eq!(desc.state, TaskState::Completed);
     assert_eq!(metrics.rounds.len(), 2);
     assert_eq!(metrics.rounds[0].participants, 12);
@@ -145,16 +146,17 @@ fn secagg_dropout_recovery_preserves_survivor_mean() {
     }
 
     let server = server(99);
-    let mut cfg = secagg_cfg(8, 1, 8);
-    cfg.round_timeout_ms = 2_500; // quick deadline so dropouts resolve fast
-    cfg.min_report_fraction = 0.5;
-    let task = server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 16]))
+    let handle = secagg_task(8, 1, 8)
+        .round_timeout_ms(2_500) // quick deadline so dropouts resolve fast
+        .min_report_fraction(0.5)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 16]))
         .unwrap();
+    let task = handle.id();
+    // Lifecycle observation replaces status polling: the sweeper ticks
+    // deadlines until the event stream reports completion.
+    let events = handle.subscribe();
 
     // Use client-level dropout injection for 2 of 8 devices.
-    let stop = Arc::new(Mutex::new(()));
-    let _ = stop;
     let fleet_reports: Vec<_> = std::thread::scope(|scope| {
         let mut joins = Vec::new();
         for i in 0..8usize {
@@ -193,17 +195,20 @@ fn secagg_dropout_recovery_preserves_survivor_mean() {
                 report
             }));
         }
-        // Deadline sweep until the task resolves (bounded at 60 s).
+        // Deadline sweep until the event stream resolves (bounded 60 s).
         let sweeper = {
             let server = Arc::clone(&server);
+            let events = events;
             scope.spawn(move || {
                 for _ in 0..2400 {
-                    server.management.tick(server.now_ms());
-                    std::thread::sleep(std::time::Duration::from_millis(25));
-                    if let Ok((d, _, _)) = server.management.task_status(task) {
-                        if d.state == TaskState::Completed {
-                            break;
-                        }
+                    server.tick();
+                    if events
+                        .wait_for(std::time::Duration::from_millis(25), |ev| {
+                            matches!(ev, TaskEvent::TaskCompleted { .. })
+                        })
+                        .is_some()
+                    {
+                        break;
                     }
                 }
             })
@@ -214,7 +219,7 @@ fn secagg_dropout_recovery_preserves_survivor_mean() {
     });
     let _ = fleet_reports;
 
-    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    let (desc, metrics, _) = handle.status().unwrap();
     assert_eq!(desc.state, TaskState::Completed, "{metrics:?}");
     // 6 survivors, mean delta = 1.0 exactly.
     assert!(metrics.rounds[0].participants >= 6);
@@ -234,10 +239,10 @@ fn masked_upload_required_when_secagg_on() {
     use florida::client::FloridaClient;
     use florida::proto::{rpc, RoundRole};
     let server = server(111);
-    let cfg = secagg_cfg(2, 1, 2);
-    let task = server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
-        .unwrap();
+    let task = secagg_task(2, 1, 2)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
     let client = FloridaClient::direct(&server);
     // Register + join two clients through the typed stubs.
     let mut ids = Vec::new();

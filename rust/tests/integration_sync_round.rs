@@ -1,13 +1,14 @@
 //! Integration: full synchronous FL rounds through the public API
-//! (server dispatch + SDK), plaintext path, including selection,
-//! rotation, aggregation strategies, and convergence on a toy problem.
+//! (TaskBuilder deploy + server dispatch + SDK), plaintext path,
+//! including selection, rotation, aggregation strategies, lifecycle
+//! events, and convergence on a toy problem.
 
 use std::sync::{Arc, Mutex};
 
 use florida::client::{ConstantTrainer, TrainOutcome, Trainer};
-use florida::config::TaskConfig;
 use florida::error::Result;
 use florida::model::ModelSnapshot;
+use florida::orchestrator::{TaskBuilder, TaskEvent};
 use florida::proto::TaskState;
 use florida::services::FloridaServer;
 use florida::simulator::{run_fleet, FleetConfig};
@@ -59,13 +60,14 @@ impl Trainer for QuadraticTrainer {
 #[test]
 fn fedavg_converges_to_mean_of_client_targets() {
     let server = server();
-    let mut cfg = TaskConfig::default();
-    cfg.clients_per_round = 8;
-    cfg.total_rounds = 30;
-    cfg.round_timeout_ms = 20_000;
-    let task = server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+    let handle = TaskBuilder::new("fedavg-mean")
+        .clients_per_round(8)
+        .rounds(30)
+        .round_timeout_ms(20_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 4]))
         .unwrap();
+    let task = handle.id();
+    let events = handle.subscribe();
 
     let targets: Vec<Vec<f32>> = (0..8)
         .map(|i| (0..4).map(|j| ((i + j) % 4) as f32).collect())
@@ -85,12 +87,21 @@ fn fedavg_converges_to_mean_of_client_targets() {
         lr: 0.5,
     });
 
-    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    let (desc, metrics, _) = handle.status().unwrap();
     assert_eq!(desc.state, TaskState::Completed);
     assert_eq!(metrics.rounds.len(), 30);
     // Loss decreases to the client-disagreement floor (each device keeps
     // nonzero loss against its own target even at the FedAvg optimum).
     assert!(metrics.rounds.last().unwrap().train_loss < metrics.rounds[0].train_loss * 0.8);
+    // The event stream saw every commit plus the completion.
+    let seen = events.drain();
+    assert_eq!(
+        seen.iter()
+            .filter(|ev| matches!(ev, TaskEvent::RoundCommitted { .. }))
+            .count(),
+        30
+    );
+    assert!(seen.iter().any(|ev| ev.kind() == "task_completed"));
     server
         .management
         .with_task(task, |t| {
@@ -105,13 +116,13 @@ fn fedavg_converges_to_mean_of_client_targets() {
 #[test]
 fn over_provisioned_fleet_rotates_participants() {
     let server = server();
-    let mut cfg = TaskConfig::default();
-    cfg.clients_per_round = 4;
-    cfg.total_rounds = 12;
-    cfg.round_timeout_ms = 20_000;
-    let task = server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 3]))
-        .unwrap();
+    let task = TaskBuilder::new("rotation")
+        .clients_per_round(4)
+        .rounds(12)
+        .round_timeout_ms(20_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 3]))
+        .unwrap()
+        .id();
     let fleet = FleetConfig {
         n_devices: 12,
         seed: 9,
@@ -148,14 +159,14 @@ fn dga_suppresses_high_loss_clients() {
 
     let run = |aggregator: &str| -> f32 {
         let server = server();
-        let mut cfg = TaskConfig::default();
-        cfg.clients_per_round = 4;
-        cfg.total_rounds = 1;
-        cfg.aggregator = aggregator.into();
-        cfg.round_timeout_ms = 20_000;
-        let task = server
-            .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 2]))
-            .unwrap();
+        let task = TaskBuilder::new("dga-vs-fedavg")
+            .clients_per_round(4)
+            .rounds(1)
+            .aggregator(aggregator)
+            .round_timeout_ms(20_000)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 2]))
+            .unwrap()
+            .id();
         let fleet = FleetConfig {
             n_devices: 4,
             seed: 11,
@@ -208,15 +219,15 @@ fn fedprox_mu_flows_to_clients() {
     }
 
     let server = server();
-    let mut cfg = TaskConfig::default();
-    cfg.clients_per_round = 2;
-    cfg.total_rounds = 1;
-    cfg.aggregator = "fedprox".into();
-    cfg.prox_mu = 0.75;
-    cfg.round_timeout_ms = 20_000;
-    let task = server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![1.0; 2]))
-        .unwrap();
+    let task = TaskBuilder::new("fedprox-mu")
+        .clients_per_round(2)
+        .rounds(1)
+        .aggregator("fedprox")
+        .prox_mu(0.75)
+        .round_timeout_ms(20_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![1.0; 2]))
+        .unwrap()
+        .id();
     let fleet = FleetConfig {
         n_devices: 2,
         seed: 3,
@@ -252,13 +263,13 @@ fn weighted_fedavg_respects_example_counts() {
         }
     }
     let server = server();
-    let mut cfg = TaskConfig::default();
-    cfg.clients_per_round = 2;
-    cfg.total_rounds = 1;
-    cfg.round_timeout_ms = 20_000;
-    let task = server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 1]))
-        .unwrap();
+    let task = TaskBuilder::new("weighted-fedavg")
+        .clients_per_round(2)
+        .rounds(1)
+        .round_timeout_ms(20_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 1]))
+        .unwrap()
+        .id();
     let fleet = FleetConfig {
         n_devices: 2,
         seed: 13,
@@ -293,14 +304,14 @@ fn weighted_fedavg_respects_example_counts() {
 #[test]
 fn paused_task_stalls_then_resumes() {
     let server = server();
-    let mut cfg = TaskConfig::default();
-    cfg.clients_per_round = 2;
-    cfg.total_rounds = 2;
-    cfg.round_timeout_ms = 20_000;
-    let task = server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 2]))
+    let handle = TaskBuilder::new("pausable")
+        .clients_per_round(2)
+        .rounds(2)
+        .round_timeout_ms(20_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 2]))
         .unwrap();
-    server.management.pause_task(task).unwrap();
+    let task = handle.id();
+    handle.pause().unwrap();
 
     // Run the fleet in a thread; it should not finish while paused.
     let s2 = Arc::clone(&server);
@@ -313,12 +324,80 @@ fn paused_task_stalls_then_resumes() {
         run_fleet(&s2, task, &fleet, |_| ConstantTrainer { step: 1.0 })
     });
     std::thread::sleep(std::time::Duration::from_millis(300));
-    let (desc, _, _) = server.management.task_status(task).unwrap();
+    let (desc, _, _) = handle.status().unwrap();
     assert_eq!(desc.state, TaskState::Paused);
     assert_eq!(desc.round, 0);
-    server.management.start_task(task).unwrap();
+    handle.start().unwrap();
     let reports = h.join().unwrap();
     assert!(reports.iter().all(|r| r.task_completed));
-    let (desc, _, _) = server.management.task_status(task).unwrap();
+    let (desc, _, _) = handle.status().unwrap();
     assert_eq!(desc.state, TaskState::Completed);
+}
+
+/// §4.2 over-provisioning through the policy seam: spawn_factor 1.5
+/// drafts 6 of 6 joiners for a 4-client round, so two dropouts cannot
+/// stall it — driven deterministically through the typed stubs and
+/// observed through the event stream.
+#[test]
+fn over_provision_policy_survives_dropouts() {
+    use florida::client::FloridaClient;
+    use florida::crypto::attest::IntegrityTier;
+    use florida::proto::{rpc, RoundRole};
+
+    let server = Arc::new(FloridaServer::for_testing(true, 29)); // manual clock
+    let handle = TaskBuilder::new("overprovisioned")
+        .clients_per_round(4)
+        .rounds(1)
+        .round_timeout_ms(1_000)
+        .min_report_fraction(0.5)
+        .cohort_policy(florida::config::CohortSpec::OverProvision { spawn_factor: 1.5 })
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 3]))
+        .unwrap();
+    let events = handle.subscribe();
+    let client = FloridaClient::direct(&server);
+    let mut ids = Vec::new();
+    for i in 0..6u64 {
+        let dev = format!("op-{i}");
+        let v = server
+            .auth
+            .authority()
+            .issue(&dev, IntegrityTier::Device, i + 1, u64::MAX / 2);
+        let ack = client.register(&dev, v, Default::default()).unwrap();
+        assert!(ack.accepted, "{}", ack.reason);
+        let join = client.join_round(ack.client_id, handle.id(), [0; 32]).unwrap();
+        assert!(join.accepted, "{}", join.reason);
+        ids.push(ack.client_id);
+    }
+    // All 6 joiners are drafted: ceil(4 × 1.5) = 6.
+    let mut training = 0;
+    for &id in &ids {
+        if let RoundRole::Train(_) = client.fetch_round(id, handle.id()).unwrap() {
+            training += 1;
+        }
+    }
+    assert_eq!(training, 6);
+    // Two devices drop; four upload. The deadline commits the survivors.
+    for &id in &ids[..4] {
+        client
+            .upload_plain(rpc::UploadPlain {
+                client_id: id,
+                task_id: handle.id(),
+                round: 0,
+                base_version: 0,
+                delta: vec![1.0; 3],
+                weight: 1.0,
+                loss: 0.1,
+            })
+            .unwrap();
+    }
+    server.advance_ms(2_000); // past the deadline → tick → commit
+    let (desc, metrics, _) = handle.status().unwrap();
+    assert_eq!(desc.state, TaskState::Completed, "{metrics:?}");
+    assert_eq!(metrics.rounds[0].participants, 4);
+    assert_eq!(metrics.failed_rounds, 0);
+    let seen = events.drain();
+    assert!(seen
+        .iter()
+        .any(|ev| matches!(ev, TaskEvent::RoundStarted { cohort: 6, .. })));
+    assert!(seen.iter().any(|ev| ev.kind() == "task_completed"));
 }

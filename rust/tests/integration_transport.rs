@@ -7,8 +7,8 @@ use std::sync::Arc;
 use florida::client::{
     ConstantTrainer, FederatedLearningClient, FloridaClient, RemoteApi, ServerApi,
 };
-use florida::config::TaskConfig;
 use florida::crypto::attest::IntegrityTier;
+use florida::orchestrator::TaskBuilder;
 use florida::model::ModelSnapshot;
 use florida::proto::{DeviceCaps, Msg, TaskState, WireCodec};
 use florida::services::FloridaServer;
@@ -27,15 +27,15 @@ fn serve(server: &Arc<FloridaServer>, listener: Box<dyn Listener>) -> std::threa
 }
 
 fn deploy(server: &Arc<FloridaServer>, n: usize, rounds: u64) -> u64 {
-    let mut cfg = TaskConfig::default();
-    cfg.clients_per_round = n;
-    cfg.total_rounds = rounds;
-    cfg.app_name = "mail".into();
-    cfg.workflow_name = "spam".into();
-    cfg.round_timeout_ms = 30_000;
-    server
-        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 6]))
+    TaskBuilder::new("wire-task")
+        .app("mail")
+        .workflow("spam")
+        .clients_per_round(n)
+        .rounds(rounds)
+        .round_timeout_ms(30_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 6]))
         .unwrap()
+        .id()
 }
 
 #[test]
@@ -55,7 +55,7 @@ fn full_round_over_tcp_binary() {
         let s = Arc::clone(&server);
         std::thread::spawn(move || {
             for _ in 0..600 {
-                s.management.tick(s.now_ms());
+                s.tick();
                 std::thread::sleep(std::time::Duration::from_millis(10));
             }
         })

@@ -384,7 +384,7 @@ fn prop_selection_cohort_uniformity() {
     let mut counts = vec![0usize; 50];
     let draws = 2000;
     for _ in 0..draws {
-        for c in s.select_cohort(&pool, 10).unwrap() {
+        for c in s.select_cohort(&pool, 10, 0).unwrap() {
             counts[c as usize] += 1;
         }
     }

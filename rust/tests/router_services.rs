@@ -9,9 +9,9 @@
 use std::sync::Arc;
 
 use florida::client::FloridaClient;
-use florida::config::TaskConfig;
 use florida::crypto::attest::{IntegrityTier, Verdict};
 use florida::model::ModelSnapshot;
+use florida::orchestrator::TaskBuilder;
 use florida::proto::{rpc, Msg, RoundRole, TaskState};
 use florida::services::FloridaServer;
 use florida::Error;
@@ -27,13 +27,14 @@ fn verdict(s: &FloridaServer, dev: &str, nonce: u64) -> Verdict {
 }
 
 fn deploy(s: &FloridaServer, n: usize, rounds: u64) -> u64 {
-    let mut cfg = TaskConfig::default();
-    cfg.clients_per_round = n;
-    cfg.total_rounds = rounds;
-    cfg.app_name = "mail".into();
-    cfg.workflow_name = "spam".into();
-    s.deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+    TaskBuilder::new("router-task")
+        .app("mail")
+        .workflow("spam")
+        .clients_per_round(n)
+        .rounds(rounds)
+        .deploy(&s.management, ModelSnapshot::new(0, vec![0.0; 4]))
         .unwrap()
+        .id()
 }
 
 #[test]

@@ -1,0 +1,142 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! Mirrors the API surface used by `florida`'s runtime module
+//! (`PjRtClient`, `PjRtLoadedExecutable`, `HloModuleProto`,
+//! `XlaComputation`, `Literal`) without linking the XLA extension C
+//! library. Every entry point that would talk to PJRT returns
+//! [`Error::Unavailable`]; `PjRtClient::cpu()` fails first, so the
+//! downstream methods exist only to satisfy the type checker.
+//!
+//! Swap this path dependency for the registry crate to run real PJRT.
+
+use std::fmt;
+
+/// Stub error: always "PJRT unavailable".
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub cannot perform PJRT operations.
+    Unavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "PJRT unavailable ({what}): built against the vendored xla stub; \
+                 link the real xla crate + XLA extension library for runtime support"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error::Unavailable(what.to_string()))
+}
+
+/// Stub PJRT client. `cpu()` always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stub HLO module proto (text loader).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stub XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Matches the real signature shape: `execute::<Literal>(&args)` →
+    /// per-device, per-output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Stub literal (host tensor).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T, Error> {
+        unavailable("Literal::get_first_element")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), Error> {
+        unavailable("Literal::to_tuple2")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let text = err.to_string();
+        assert!(text.contains("PJRT unavailable"));
+        assert!(text.contains("stub"));
+    }
+
+    #[test]
+    fn literal_constructors_exist() {
+        let _ = Literal::vec1(&[1.0f32, 2.0]);
+        let _ = Literal::vec1(&[1i32, 2]);
+        let _ = Literal::scalar(0.5f32);
+        assert!(Literal::vec1(&[0i32]).reshape(&[1, 1]).is_err());
+    }
+}
