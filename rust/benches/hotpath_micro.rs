@@ -106,6 +106,22 @@ fn main() {
         std::hint::black_box(ModelSnapshot::from_compressed(&z).unwrap());
     }));
 
+    bench::section("snapshot distribution (version-keyed SnapshotStore cache)");
+    // What each client poll costs: without the cache every poll zlib-
+    // compresses the full model; with it, polls on an unchanged version
+    // are an Arc clone of the cached bytes.
+    {
+        use florida::model::SnapshotStore;
+        let store = SnapshotStore::new(ModelSnapshot::new(1, delta.clone()));
+        snap.report(slow.run_bytes("snapshot_fetch_uncached", bytes, || {
+            std::hint::black_box(model_snap.to_compressed().unwrap());
+        }));
+        snap.report(b.run_bytes("snapshot_fetch_cached", bytes, || {
+            std::hint::black_box(store.compressed().unwrap());
+        }));
+        assert_eq!(store.compressions(), 1, "cache must compress once");
+    }
+
     bench::section("router_dispatch (typed stub vs direct service call)");
     // How much the interceptor chain + typed-stub conversions cost on the
     // hot path, against the bare service body (selection.touch) baseline.
@@ -170,6 +186,50 @@ fn main() {
                 assert!(ok, "{why}");
             }
             assert_eq!(engine.round, round + 1, "round must commit");
+        }));
+    }
+
+    bench::section("streaming_ingest_commit (async fold, 32 uploads per flush)");
+    // Buffered-async ingest cost with the O(dim) streaming fold: 32
+    // uploads folded at arrival, then the goal-count flush commits.
+    {
+        use florida::config::{FlMode, TaskConfig};
+        use florida::orchestrator::{EventBus, NoEval, NullDirectory, RoundEngine};
+
+        let engine_dim = 1024;
+        let k = 32u64;
+        let mut cfg = TaskConfig::default();
+        cfg.mode = FlMode::Async {
+            buffer_size: k as usize,
+        };
+        cfg.aggregator = "fedbuff".into();
+        cfg.total_rounds = u64::MAX / 2; // never completes inside the bench
+        cfg.round_timeout_ms = u64::MAX / 4;
+        let mut engine = RoundEngine::new(
+            2,
+            cfg,
+            ModelSnapshot::new(0, vec![0.0; engine_dim]),
+            9,
+            EventBus::new(),
+        )
+        .expect("engine");
+        engine.start().expect("start");
+        let dir = NullDirectory;
+        for c in 1..=k {
+            engine.join(c, [0u8; 32], 0).expect("join");
+            let _ = engine.fetch(c, &dir, 0).expect("fetch");
+        }
+        let delta = vec![0.01f32; engine_dim];
+        snap.report(b.run("streaming_ingest_commit", || {
+            let round = engine.round;
+            let version = engine.global.version;
+            for c in 1..=k {
+                let (ok, why) = engine
+                    .accept_plain(c, round, version, delta.clone(), 1.0, 0.1, &NoEval, 1)
+                    .expect("accept");
+                assert!(ok, "{why}");
+            }
+            assert_eq!(engine.round, round + 1, "buffer must flush");
         }));
     }
 

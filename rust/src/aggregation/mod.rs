@@ -5,16 +5,22 @@
 //! The paper uploads the aggregation recipe as a script/executable; here
 //! strategies are a trait with built-ins selected by name from the task
 //! config — custom strategies implement [`Aggregator`].
+//!
+//! Ingest is **streaming** (§Perf): a strategy opens an
+//! [`AggregatorFold`] with `begin(dim)`, the round engine folds each
+//! upload in at arrival with `accept(delta, stats)`, and `finish()`
+//! yields the combined pseudo-gradient. All built-ins keep O(dim)
+//! state (a [`DeltaAccumulator`]) plus scalars — the server never
+//! buffers a cohort's worth of deltas. [`Aggregator::aggregate`] is the
+//! batch convenience over the same fold (tests, one-shot callers).
 
 use crate::error::{Error, Result};
 use crate::model::DeltaAccumulator;
 
-/// One client's contribution to an aggregation step.
-#[derive(Clone, Debug)]
-pub struct ClientUpdate {
+/// Per-update scalar metadata accompanying a delta on the ingest path.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateStats {
     pub client_id: u64,
-    /// Pseudo-gradient (local params − global params at round start).
-    pub delta: Vec<f32>,
     /// Example-count weight (paper: FedAvg weighting).
     pub weight: f64,
     /// Mean local training loss (drives DGA weighting).
@@ -24,10 +30,81 @@ pub struct ClientUpdate {
     pub staleness: u64,
 }
 
-/// An aggregation strategy: combine updates into one pseudo-gradient.
+/// One client's contribution held as a value — the batch-call container
+/// (tests, VG interims); the live ingest path never materializes these.
+#[derive(Clone, Debug)]
+pub struct ClientUpdate {
+    pub client_id: u64,
+    /// Pseudo-gradient (local params − global params at round start).
+    pub delta: Vec<f32>,
+    pub weight: f64,
+    pub loss: f64,
+    pub staleness: u64,
+}
+
+impl ClientUpdate {
+    pub fn stats(&self) -> UpdateStats {
+        UpdateStats {
+            client_id: self.client_id,
+            weight: self.weight,
+            loss: self.loss,
+            staleness: self.staleness,
+        }
+    }
+}
+
+/// In-progress aggregation state: one fold per round (sync) or buffer
+/// epoch (async). Implementations must stay O(dim) + O(1) per update.
+pub trait AggregatorFold: Send {
+    /// Fold one update in. Errors (dim mismatch, non-positive weight)
+    /// leave the fold unchanged.
+    fn accept(&mut self, delta: &[f32], stats: &UpdateStats) -> Result<()>;
+
+    /// Updates folded in so far.
+    fn count(&self) -> usize;
+
+    /// Combined pseudo-gradient; error if nothing was folded.
+    fn finish(self: Box<Self>) -> Result<Vec<f32>>;
+}
+
+/// An aggregation strategy: a factory of per-round streaming folds.
 pub trait Aggregator: Send + Sync {
     fn name(&self) -> &'static str;
-    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>>;
+
+    /// Open a fold for updates of dimensionality `dim`.
+    fn begin(&self, dim: usize) -> Result<Box<dyn AggregatorFold>>;
+
+    /// Batch convenience over the streaming fold.
+    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
+        let first = updates
+            .first()
+            .ok_or_else(|| Error::Other("no updates to aggregate".into()))?;
+        let mut fold = self.begin(first.delta.len())?;
+        for u in updates {
+            fold.accept(&u.delta, &u.stats())?;
+        }
+        fold.finish()
+    }
+}
+
+/// Weighted running mean — the fold behind FedAvg/FedProx, and the base
+/// for the reweighting strategies.
+struct MeanFold {
+    acc: DeltaAccumulator,
+}
+
+impl AggregatorFold for MeanFold {
+    fn accept(&mut self, delta: &[f32], stats: &UpdateStats) -> Result<()> {
+        self.acc.add(delta, stats.weight)
+    }
+
+    fn count(&self) -> usize {
+        self.acc.count()
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>> {
+        self.acc.mean()
+    }
 }
 
 /// Weighted Federated Averaging (McMahan et al. 2017).
@@ -38,13 +115,10 @@ impl Aggregator for FedAvg {
         "fedavg"
     }
 
-    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
-        let dim = check_dims(updates)?;
-        let mut acc = DeltaAccumulator::new(dim);
-        for u in updates {
-            acc.add(&u.delta, u.weight)?;
-        }
-        acc.mean()
+    fn begin(&self, dim: usize) -> Result<Box<dyn AggregatorFold>> {
+        Ok(Box::new(MeanFold {
+            acc: DeltaAccumulator::new(dim),
+        }))
     }
 }
 
@@ -60,8 +134,8 @@ impl Aggregator for FedProx {
         "fedprox"
     }
 
-    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
-        FedAvg.aggregate(updates)
+    fn begin(&self, dim: usize) -> Result<Box<dyn AggregatorFold>> {
+        FedAvg.begin(dim)
     }
 }
 
@@ -83,21 +157,56 @@ impl Aggregator for Dga {
         "dga"
     }
 
-    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
-        let dim = check_dims(updates)?;
-        if !(self.temp > 0.0) {
+    fn begin(&self, dim: usize) -> Result<Box<dyn AggregatorFold>> {
+        if !self.temp.is_finite() || self.temp <= 0.0 {
             return Err(Error::Other("dga temperature must be > 0".into()));
         }
-        let min_loss = updates
-            .iter()
-            .map(|u| u.loss)
-            .fold(f64::INFINITY, f64::min);
-        let mut acc = DeltaAccumulator::new(dim);
-        for u in updates {
-            let quality = (-(u.loss - min_loss) / self.temp).exp();
-            acc.add(&u.delta, (u.weight * quality).max(1e-12))?;
+        Ok(Box::new(DgaFold {
+            acc: DeltaAccumulator::new(dim),
+            temp: self.temp,
+            min_loss: f64::INFINITY,
+        }))
+    }
+}
+
+/// Streaming DGA: qualities are softmax terms `exp(-(loss - min)/temp)`
+/// relative to the running minimum loss. When a new minimum arrives,
+/// everything folded so far is rescaled by `exp((new - old)/temp)` — the
+/// shift cancels in the weighted mean, so one pass matches the two-pass
+/// batch formula without ever re-reading a delta. Anchoring at the
+/// minimum keeps every exponent ≤ 0 (no overflow for outlier losses).
+struct DgaFold {
+    acc: DeltaAccumulator,
+    temp: f64,
+    min_loss: f64,
+}
+
+impl AggregatorFold for DgaFold {
+    fn accept(&mut self, delta: &[f32], stats: &UpdateStats) -> Result<()> {
+        // Validate before touching min_loss or rescaling: a rejected
+        // update must leave the fold unchanged. A -inf loss would
+        // otherwise rescale the accumulator by exp(-inf) = 0, wiping
+        // every previously folded contribution.
+        self.acc.validate(delta, stats.weight)?;
+        if !stats.loss.is_finite() {
+            return Err(Error::Model(format!("non-finite loss {}", stats.loss)));
         }
-        acc.mean()
+        if stats.loss < self.min_loss {
+            if self.min_loss.is_finite() {
+                self.acc.scale(((stats.loss - self.min_loss) / self.temp).exp());
+            }
+            self.min_loss = stats.loss;
+        }
+        let quality = (-(stats.loss - self.min_loss) / self.temp).exp();
+        self.acc.add(delta, (stats.weight * quality).max(1e-12))
+    }
+
+    fn count(&self) -> usize {
+        self.acc.count()
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>> {
+        self.acc.mean()
     }
 }
 
@@ -115,19 +224,36 @@ impl Default for FedBuff {
     }
 }
 
+struct FedBuffFold {
+    acc: DeltaAccumulator,
+    staleness_alpha: f64,
+}
+
+impl AggregatorFold for FedBuffFold {
+    fn accept(&mut self, delta: &[f32], stats: &UpdateStats) -> Result<()> {
+        let discount = 1.0 / (1.0 + stats.staleness as f64).powf(self.staleness_alpha);
+        self.acc.add(delta, stats.weight * discount)
+    }
+
+    fn count(&self) -> usize {
+        self.acc.count()
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>> {
+        self.acc.mean()
+    }
+}
+
 impl Aggregator for FedBuff {
     fn name(&self) -> &'static str {
         "fedbuff"
     }
 
-    fn aggregate(&self, updates: &[ClientUpdate]) -> Result<Vec<f32>> {
-        let dim = check_dims(updates)?;
-        let mut acc = DeltaAccumulator::new(dim);
-        for u in updates {
-            let discount = 1.0 / (1.0 + u.staleness as f64).powf(self.staleness_alpha);
-            acc.add(&u.delta, u.weight * discount)?;
-        }
-        acc.mean()
+    fn begin(&self, dim: usize) -> Result<Box<dyn AggregatorFold>> {
+        Ok(Box::new(FedBuffFold {
+            acc: DeltaAccumulator::new(dim),
+            staleness_alpha: self.staleness_alpha,
+        }))
     }
 }
 
@@ -145,23 +271,6 @@ pub fn by_name(name: &str, prox_mu: f32) -> Result<Box<dyn Aggregator>> {
             )))
         }
     })
-}
-
-fn check_dims(updates: &[ClientUpdate]) -> Result<usize> {
-    let first = updates
-        .first()
-        .ok_or_else(|| Error::Other("no updates to aggregate".into()))?;
-    let dim = first.delta.len();
-    for u in updates {
-        if u.delta.len() != dim {
-            return Err(Error::Model(format!(
-                "update dim mismatch: client {} has {} want {dim}",
-                u.client_id,
-                u.delta.len()
-            )));
-        }
-    }
-    Ok(dim)
 }
 
 #[cfg(test)]
@@ -240,6 +349,45 @@ mod tests {
     }
 
     #[test]
+    fn dga_order_independent_min_rescaling() {
+        // The streaming rescale must make arrival order irrelevant: the
+        // minimum loss arriving last exercises the `scale` path.
+        let asc = vec![
+            upd(1, vec![1.0, 0.0], 1.0, 0.2, 0),
+            upd(2, vec![0.0, 1.0], 2.0, 1.7, 0),
+            upd(3, vec![-1.0, 2.0], 1.5, 3.0, 0),
+        ];
+        let mut desc = asc.clone();
+        desc.reverse();
+        let a = Dga { temp: 0.7 }.aggregate(&asc).unwrap();
+        let b = Dga { temp: 0.7 }.aggregate(&desc).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dga_rejected_update_leaves_fold_unchanged() {
+        let mut fold = Dga { temp: 1.0 }.begin(1).unwrap();
+        fold.accept(&[1.0], &upd(1, vec![], 1.0, 0.5, 0).stats())
+            .unwrap();
+        // Wrong-dim update with a far lower loss: rejected, and it must
+        // not have rescaled the fold or moved the running minimum.
+        let bad = fold.accept(&[1.0, 2.0], &upd(2, vec![], 1.0, -100.0, 0).stats());
+        assert!(bad.is_err());
+        // A -inf loss would rescale the accumulator by exp(-inf) = 0;
+        // it must be rejected before any mutation.
+        let inf = fold.accept(&[5.0], &upd(4, vec![], 1.0, f64::NEG_INFINITY, 0).stats());
+        assert!(inf.is_err());
+        fold.accept(&[3.0], &upd(3, vec![], 1.0, 0.5, 0).stats())
+            .unwrap();
+        // Equal losses ⇒ plain mean; a poisoned minimum would have
+        // collapsed one side to the 1e-12 clamp instead.
+        let got = fold.finish().unwrap();
+        assert!((got[0] - 2.0).abs() < 1e-5, "{}", got[0]);
+    }
+
+    #[test]
     fn fedbuff_discounts_stale() {
         // Fresh vs very stale update with opposite directions: fresh wins.
         let got = FedBuff {
@@ -265,6 +413,20 @@ mod tests {
     }
 
     #[test]
+    fn fold_counts_and_streams_incrementally() {
+        let mut fold = FedAvg.begin(2).unwrap();
+        assert_eq!(fold.count(), 0);
+        fold.accept(&[1.0, 0.0], &upd(1, vec![], 1.0, 0.0, 0).stats())
+            .unwrap();
+        fold.accept(&[0.0, 1.0], &upd(2, vec![], 3.0, 0.0, 0).stats())
+            .unwrap();
+        assert_eq!(fold.count(), 2);
+        let m = fold.finish().unwrap();
+        assert!((m[0] - 0.25).abs() < 1e-6);
+        assert!((m[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
     fn registry_lookup() {
         for name in ["fedavg", "fedprox", "dga", "fedbuff"] {
             assert_eq!(by_name(name, 0.1).unwrap().name(), name);
@@ -281,5 +443,7 @@ mod tests {
                 upd(2, vec![1.0, 2.0], 1.0, 0.0, 0),
             ])
             .is_err());
+        assert!(FedAvg.begin(1).unwrap().finish().is_err());
+        assert!(Dga { temp: 0.0 }.begin(1).is_err());
     }
 }

@@ -49,7 +49,7 @@ impl ServerApi for RemoteApi {
     fn call(&self, msg: Msg) -> Result<Msg> {
         let frame = encode_frame(&msg, self.codec)?;
         let mut conn = self.conn.lock().unwrap();
-        conn.send(&frame)?;
+        conn.send_owned(frame)?;
         let reply = conn.recv()?;
         let (m, _) = decode_frame(&reply)?;
         // An `ErrorReply` passes through untouched: the stub layer turns

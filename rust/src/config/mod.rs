@@ -366,7 +366,7 @@ mod tests {
         let j = cfg.to_json();
         let back = TaskConfig::from_json(&j).unwrap();
         assert_eq!(back.task_name, cfg.task_name);
-        assert_eq!(back.secure_agg, true);
+        assert!(back.secure_agg);
         assert_eq!(back.vg_size, 8);
         assert_eq!(back.dp.mode, DpMode::Local);
         assert!((back.dp.clip_norm - 0.5).abs() < 1e-12);

@@ -8,6 +8,9 @@
 //! compressed").
 
 pub mod compress;
+pub mod store;
+
+pub use store::SnapshotStore;
 
 use std::io::{Read, Write};
 
@@ -144,8 +147,11 @@ impl DeltaAccumulator {
         self.total_weight
     }
 
-    /// Accumulate `delta` with the given weight.
-    pub fn add(&mut self, delta: &[f32], weight: f64) -> Result<()> {
+    /// Check an (update, weight) pair against this accumulator without
+    /// mutating — the single rule set shared by `add` and by folds that
+    /// must validate before irreversible pre-accumulation steps (the
+    /// streaming-DGA rescale).
+    pub fn validate(&self, delta: &[f32], weight: f64) -> Result<()> {
         if delta.len() != self.sum.len() {
             return Err(Error::Model(format!(
                 "dim mismatch {} vs {}",
@@ -153,15 +159,31 @@ impl DeltaAccumulator {
                 self.sum.len()
             )));
         }
-        if !(weight > 0.0) {
+        if weight.is_nan() || weight <= 0.0 {
             return Err(Error::Model(format!("non-positive weight {weight}")));
         }
+        Ok(())
+    }
+
+    /// Accumulate `delta` with the given weight.
+    pub fn add(&mut self, delta: &[f32], weight: f64) -> Result<()> {
+        self.validate(delta, weight)?;
         for (s, &d) in self.sum.iter_mut().zip(delta) {
             *s += weight * d as f64;
         }
         self.total_weight += weight;
         self.count += 1;
         Ok(())
+    }
+
+    /// Rescale everything accumulated so far (sum and total weight) by
+    /// `factor` — the streaming-DGA renormalization step when a new
+    /// minimum loss shifts the softmax reference point.
+    pub fn scale(&mut self, factor: f64) {
+        for s in self.sum.iter_mut() {
+            *s *= factor;
+        }
+        self.total_weight *= factor;
     }
 
     /// Weighted mean; error if nothing accumulated.
@@ -240,6 +262,18 @@ mod tests {
         assert!(acc.add(&[1.0], 1.0).is_err());
         assert!(acc.add(&[1.0, 1.0], 0.0).is_err());
         assert!(acc.mean().is_err());
+    }
+
+    #[test]
+    fn accumulator_scale_rescales_sum_and_weight() {
+        let mut acc = DeltaAccumulator::new(1);
+        acc.add(&[2.0], 1.0).unwrap();
+        acc.scale(0.5);
+        // Mean is scale-invariant; the absolute mass halves.
+        assert!((acc.mean().unwrap()[0] - 2.0).abs() < 1e-6);
+        assert!((acc.total_weight() - 0.5).abs() < 1e-12);
+        acc.add(&[0.0], 0.5).unwrap();
+        assert!((acc.mean().unwrap()[0] - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Version-keyed snapshot distribution cache.
+//!
+//! The orchestrator's data-plane hot path is *distribution*: every sync
+//! cohort member and every async poll needs the current global model as
+//! a zlib-compressed blob (§3.1, the paper's ~16 MB compressed
+//! snapshot). Compressing per poll is O(dim) zlib work on a path that
+//! at simulator scale runs thousands of times per version; the
+//! [`SnapshotStore`] compresses **once per version bump** and hands out
+//! cheap `Arc` clones of the cached bytes until the next central
+//! update invalidates them.
+//!
+//! Mutation goes through the store's single mutator (`apply_delta`,
+//! which always bumps the version) so the cache key — the snapshot
+//! version — can never drift from the bytes it describes. Reads deref
+//! straight to the inner [`ModelSnapshot`].
+
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+
+use super::ModelSnapshot;
+
+/// The global model plus its cached compressed representation.
+pub struct SnapshotStore {
+    snapshot: ModelSnapshot,
+    /// `(version, compressed bytes)` — valid iff version matches the
+    /// snapshot. Interior mutability so read paths (`&self`) can fill it.
+    cache: Mutex<Option<(u64, Arc<Vec<u8>>)>>,
+    /// Total zlib compressions performed (cache-miss counter; tests
+    /// assert the poll path performs zero on an unchanged version).
+    compressions: AtomicU64,
+}
+
+impl SnapshotStore {
+    pub fn new(snapshot: ModelSnapshot) -> SnapshotStore {
+        SnapshotStore {
+            snapshot,
+            cache: Mutex::new(None),
+            compressions: AtomicU64::new(0),
+        }
+    }
+
+    /// Read-only view of the current snapshot.
+    pub fn snapshot(&self) -> &ModelSnapshot {
+        &self.snapshot
+    }
+
+    /// The compressed wire blob for the current version. First call per
+    /// version compresses; subsequent calls are an `Arc` clone.
+    pub fn compressed(&self) -> Result<Arc<Vec<u8>>> {
+        let mut guard = self.cache.lock().unwrap();
+        if let Some((version, blob)) = guard.as_ref() {
+            if *version == self.snapshot.version {
+                return Ok(Arc::clone(blob));
+            }
+        }
+        let blob = Arc::new(self.snapshot.to_compressed()?);
+        self.compressions.fetch_add(1, Ordering::Relaxed);
+        *guard = Some((self.snapshot.version, Arc::clone(&blob)));
+        Ok(blob)
+    }
+
+    /// How many zlib compressions this store has performed — at most one
+    /// per version, regardless of poll volume.
+    pub fn compressions(&self) -> u64 {
+        self.compressions.load(Ordering::Relaxed)
+    }
+
+    /// Apply an aggregated pseudo-gradient (bumps the version, so the
+    /// next `compressed()` call re-encodes).
+    ///
+    /// This is deliberately the store's only mutator: every mutation
+    /// bumps the version, so an in-flight round's `base_version` guard
+    /// can always detect that the model moved under it.
+    pub fn apply_delta(&mut self, delta: &[f32], server_lr: f32) -> Result<()> {
+        self.snapshot.apply_delta(delta, server_lr)
+    }
+}
+
+impl Deref for SnapshotStore {
+    type Target = ModelSnapshot;
+
+    fn deref(&self) -> &ModelSnapshot {
+        &self.snapshot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(dim: usize) -> SnapshotStore {
+        SnapshotStore::new(ModelSnapshot::new(0, vec![0.25; dim]))
+    }
+
+    #[test]
+    fn repeated_reads_share_one_compression() {
+        let s = store(512);
+        let a = s.compressed().unwrap();
+        let b = s.compressed().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same version must share the blob");
+        assert_eq!(s.compressions(), 1);
+        assert_eq!(ModelSnapshot::from_compressed(&a).unwrap(), *s.snapshot());
+    }
+
+    #[test]
+    fn version_bump_invalidates_exactly_once() {
+        let mut s = store(64);
+        let old = s.compressed().unwrap();
+        s.apply_delta(&[1.0; 64], 1.0).unwrap();
+        assert_eq!(s.version, 1);
+        let new = s.compressed().unwrap();
+        assert!(!Arc::ptr_eq(&old, &new), "stale blob must not be reused");
+        let again = s.compressed().unwrap();
+        assert!(Arc::ptr_eq(&new, &again));
+        assert_eq!(s.compressions(), 2, "one compression per version");
+        let back = ModelSnapshot::from_compressed(&new).unwrap();
+        assert_eq!(back.version, 1);
+        assert!((back.params[0] - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deref_exposes_read_surface() {
+        let s = store(3);
+        assert_eq!(s.dim(), 3);
+        assert_eq!(s.version, 0);
+        assert_eq!(s.params.len(), 3);
+    }
+}

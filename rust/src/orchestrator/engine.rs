@@ -24,14 +24,13 @@
 //! policy flushes (goal counts) with staleness-aware weighting (Papaya).
 
 use std::collections::{BTreeSet, HashMap, VecDeque};
-use std::sync::Arc;
 
-use crate::aggregation::{self, ClientUpdate};
+use crate::aggregation::{self, AggregatorFold, UpdateStats};
 use crate::config::{FlMode, TaskConfig};
 use crate::dp::{DpMode, RdpAccountant};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, TaskMetrics};
-use crate::model::ModelSnapshot;
+use crate::model::{ModelSnapshot, SnapshotStore};
 use crate::proto::msg::{PeerShare, RecoveredShare};
 use crate::proto::{RoundInstruction, RoundRole, TaskDescriptor, TaskState, TrainParams};
 use crate::quant::Quantizer;
@@ -66,12 +65,15 @@ impl Evaluator for NoEval {
 enum Phase {
     /// Accumulating joiners; the pool holds (client, round pubkey).
     Joining,
-    /// Cohort selected, clients training.
+    /// Cohort selected, clients training. The model blob clients fetch
+    /// comes from the global [`SnapshotStore`] cache (the version is
+    /// pinned by `base_version` until commit).
     Training {
         secagg: Option<SecAggRound>,
-        plain: Vec<ClientUpdate>,
+        /// Plaintext rounds: O(dim) streaming ingest (None under secagg,
+        /// whose masked running sums live in `SecAggRound`).
+        ingest: Option<StreamingIngest>,
         uploaded: BTreeSet<u64>,
-        model_blob: Arc<Vec<u8>>,
         base_version: u64,
         deadline_ms: u64,
     },
@@ -82,6 +84,43 @@ enum Phase {
     },
 }
 
+/// Streaming upload ingest: each arriving delta is folded into the
+/// task's aggregation strategy immediately, so resident state is the
+/// fold's O(dim) accumulator plus per-upload scalars — never a
+/// cohort × dim buffer of deltas.
+struct StreamingIngest {
+    fold: Box<dyn AggregatorFold>,
+    loss_sum: f64,
+}
+
+impl StreamingIngest {
+    fn new(fold: Box<dyn AggregatorFold>) -> StreamingIngest {
+        StreamingIngest {
+            fold,
+            loss_sum: 0.0,
+        }
+    }
+
+    fn accept(&mut self, delta: &[f32], stats: &UpdateStats) -> Result<()> {
+        self.fold.accept(delta, stats)?;
+        self.loss_sum += stats.loss;
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.fold.count()
+    }
+
+    fn mean_loss(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.loss_sum / n as f64
+        }
+    }
+}
+
 /// One federated task's orchestration state machine.
 pub struct RoundEngine {
     pub id: u64,
@@ -89,7 +128,10 @@ pub struct RoundEngine {
     pub state: TaskState,
     /// Completed sync rounds / async flushes.
     pub round: u64,
-    pub global: ModelSnapshot,
+    /// The global model behind its version-keyed distribution cache —
+    /// every poll hands out an `Arc` of the compressed blob; zlib runs
+    /// once per version bump.
+    pub global: SnapshotStore,
     pub metrics: TaskMetrics,
     pub accountant: Option<RdpAccountant>,
 
@@ -107,8 +149,9 @@ pub struct RoundEngine {
     cohort: BTreeSet<u64>,
     round_started_ms: u64,
 
-    // Async state.
-    buffer: Vec<ClientUpdate>,
+    // Async state: the in-flight buffer epoch's streaming fold (None
+    // between flushes) plus the joined set.
+    ingest: Option<StreamingIngest>,
     async_joined: BTreeSet<u64>,
     last_flush_ms: u64,
 }
@@ -152,7 +195,7 @@ impl RoundEngine {
             config,
             state: TaskState::Created,
             round: 0,
-            global,
+            global: SnapshotStore::new(global),
             metrics: TaskMetrics::default(),
             accountant,
             master,
@@ -165,7 +208,7 @@ impl RoundEngine {
             joining_since_ms: None,
             cohort: BTreeSet::new(),
             round_started_ms: 0,
-            buffer: Vec::new(),
+            ingest: None,
             async_joined: BTreeSet::new(),
             last_flush_ms: 0,
         })
@@ -308,8 +351,10 @@ impl RoundEngine {
             if !self.async_joined.contains(&client_id) {
                 return Ok(RoundRole::RoundDone); // join first
             }
-            // Train against the freshest model, no barrier.
-            let blob = self.global.to_compressed()?;
+            // Train against the freshest model, no barrier. The blob is
+            // the store's cached compressed bytes — an Arc clone per
+            // poll, one zlib pass per version.
+            let blob = self.global.compressed()?;
             return Ok(RoundRole::Train(RoundInstruction {
                 round: self.round,
                 model_blob: blob,
@@ -331,7 +376,6 @@ impl RoundEngine {
             Phase::Training {
                 secagg,
                 uploaded,
-                model_blob,
                 deadline_ms,
                 ..
             } => {
@@ -348,9 +392,11 @@ impl RoundEngine {
                     Some(s) => Some(s.setup_for(client_id)?),
                     None => None,
                 };
+                // The version is pinned for the phase's lifetime, so the
+                // whole cohort shares one compression via the cache.
                 Ok(RoundRole::Train(RoundInstruction {
                     round: self.round,
-                    model_blob: model_blob.as_ref().clone(),
+                    model_blob: self.global.compressed()?,
                     train: self.train_params(),
                     secagg: sa,
                     deadline_ms: *deadline_ms,
@@ -393,22 +439,41 @@ impl RoundEngine {
         if !(weight.is_finite() && weight > 0.0 && weight < 1e9) {
             return Ok((false, format!("bad weight {weight}")));
         }
+        if !loss.is_finite() {
+            return Ok((false, format!("bad loss {loss}")));
+        }
         self.metrics.total_uploads += 1;
         if let FlMode::Async { buffer_size } = self.config.mode {
             if !self.async_joined.contains(&client_id) {
                 return Ok((false, "join first".into()));
             }
             let staleness = self.global.version.saturating_sub(base_version);
-            self.buffer.push(ClientUpdate {
-                client_id,
-                delta,
-                weight,
-                loss,
-                staleness,
-            });
+            // Fold the delta in at arrival — the buffer epoch keeps only
+            // the strategy's O(dim) accumulator, never the deltas.
+            if self.ingest.is_none() {
+                self.ingest = Some(StreamingIngest::new(
+                    self.master.begin_fold(self.global.dim())?,
+                ));
+            }
+            let reported = {
+                let ingest = self.ingest.as_mut().expect("ingest initialized above");
+                let accepted = ingest.accept(
+                    &delta,
+                    &UpdateStats {
+                        client_id,
+                        weight,
+                        loss,
+                        staleness,
+                    },
+                );
+                if let Err(e) = accepted {
+                    return Ok((false, e.to_string()));
+                }
+                ingest.count()
+            };
             let progress = RoundProgress {
                 cohort: buffer_size,
-                reported: self.buffer.len(),
+                reported,
                 now_ms,
                 deadline_ms: u64::MAX,
                 min_report_fraction: self.config.min_report_fraction,
@@ -422,11 +487,10 @@ impl RoundEngine {
         let progress = match &mut self.phase {
             Phase::Training {
                 secagg: None,
-                plain,
+                ingest,
                 uploaded,
                 base_version: bv,
                 deadline_ms,
-                ..
             } => {
                 if round != self.round {
                     return Ok((false, format!("stale round {round} (now {})", self.round)));
@@ -439,16 +503,28 @@ impl RoundEngine {
                 if base_version != *bv {
                     return Ok((false, format!("base version {base_version} != {bv}")));
                 }
-                if !uploaded.insert(client_id) {
+                if uploaded.contains(&client_id) {
                     return Ok((false, "duplicate upload".into()));
                 }
-                plain.push(ClientUpdate {
-                    client_id,
-                    delta,
-                    weight,
-                    loss,
-                    staleness: 0,
-                });
+                // Fold before marking uploaded: a rejected fold must
+                // leave the client free to retry, and `uploaded` must
+                // only ever count deltas actually folded in.
+                let accepted = ingest
+                    .as_mut()
+                    .ok_or_else(|| Error::Task("plaintext round missing ingest fold".into()))?
+                    .accept(
+                        &delta,
+                        &UpdateStats {
+                            client_id,
+                            weight,
+                            loss,
+                            staleness: 0,
+                        },
+                    );
+                if let Err(e) = accepted {
+                    return Ok((false, e.to_string()));
+                }
+                uploaded.insert(client_id);
                 RoundProgress {
                     cohort: self.cohort.len(),
                     reported: uploaded.len(),
@@ -485,6 +561,9 @@ impl RoundEngine {
         }
         if round != self.round {
             return Ok((false, format!("stale round {round}")));
+        }
+        if !loss.is_finite() {
+            return Ok((false, format!("bad loss {loss}")));
         }
         self.metrics.total_uploads += 1;
         let progress = match &mut self.phase {
@@ -670,7 +749,6 @@ impl RoundEngine {
                 true
             }
         });
-        let model_blob = Arc::new(self.global.to_compressed()?);
         let secagg = if self.config.secure_agg {
             let groups_ids =
                 SelectionService::form_virtual_groups(&cohort_ids, self.config.vg_size);
@@ -690,6 +768,15 @@ impl RoundEngine {
         } else {
             None
         };
+        // Plaintext rounds open their streaming ingest fold up front;
+        // masked rounds accumulate inside `SecAggRound` instead.
+        let ingest = if secagg.is_none() {
+            Some(StreamingIngest::new(
+                self.master.begin_fold(self.global.dim())?,
+            ))
+        } else {
+            None
+        };
         let cohort_size = cohort_set.len();
         self.cohort = cohort_set;
         self.joining_since_ms = None;
@@ -699,9 +786,8 @@ impl RoundEngine {
             .deadline_ms(now_ms, self.config.round_timeout_ms);
         self.phase = Phase::Training {
             secagg,
-            plain: Vec::new(),
+            ingest,
             uploaded: BTreeSet::new(),
-            model_blob,
             base_version: self.global.version,
             deadline_ms,
         };
@@ -766,15 +852,17 @@ impl RoundEngine {
             }
             Phase::Training {
                 secagg: None,
-                plain,
+                ingest,
                 ..
             } => {
-                if plain.is_empty() {
-                    return Err(Error::Task("no uploads to aggregate".into()));
-                }
-                let loss = plain.iter().map(|u| u.loss).sum::<f64>() / plain.len() as f64;
+                let ingest = match ingest {
+                    Some(i) if i.count() > 0 => i,
+                    _ => return Err(Error::Task("no uploads to aggregate".into())),
+                };
+                let loss = ingest.mean_loss();
                 let participants =
-                    self.master.apply_plain(&mut self.global, &plain, &mut self.rng)?;
+                    self.master
+                        .commit_fold(&mut self.global, ingest.fold, &mut self.rng)?;
                 self.record_round(eval, participants, loss, now_ms);
             }
             Phase::Unmasking { mut secagg, .. } => {
@@ -849,12 +937,15 @@ impl RoundEngine {
         });
     }
 
-    /// Async path: flush the buffered updates into the model.
+    /// Async path: commit the buffer epoch's fold into the model.
     fn flush_async(&mut self, eval: &dyn Evaluator, now_ms: u64) -> Result<()> {
-        let updates = std::mem::take(&mut self.buffer);
+        let ingest = self
+            .ingest
+            .take()
+            .ok_or_else(|| Error::Task("no buffered uploads to flush".into()))?;
+        let loss = ingest.mean_loss();
         let participants =
-            self.master.apply_plain(&mut self.global, &updates, &mut self.rng)?;
-        let loss = updates.iter().map(|u| u.loss).sum::<f64>() / updates.len() as f64;
+            self.master.commit_fold(&mut self.global, ingest.fold, &mut self.rng)?;
         self.round_started_ms = self.last_flush_ms;
         self.last_flush_ms = now_ms;
         self.record_round(eval, participants, loss, now_ms);
@@ -1165,6 +1256,64 @@ mod tests {
         // Committed at the goal — stragglers dropped, no deadline wait.
         assert_eq!(e.state, TaskState::Completed);
         assert_eq!(e.metrics.rounds[0].participants, 2);
+    }
+
+    #[test]
+    fn sync_cohort_fetches_share_one_compression() {
+        use std::sync::Arc;
+        let (mut e, _bus) = engine(small_cfg(3, 1), 8);
+        let dir = NullDirectory;
+        for c in 1..=3u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+        }
+        let mut blobs = Vec::new();
+        for c in 1..=3u64 {
+            if let RoundRole::Train(ri) = e.fetch(c, &dir, 0).unwrap() {
+                blobs.push(ri.model_blob);
+            }
+        }
+        assert_eq!(blobs.len(), 3);
+        assert!(Arc::ptr_eq(&blobs[0], &blobs[1]));
+        assert!(Arc::ptr_eq(&blobs[1], &blobs[2]));
+        assert_eq!(e.global.compressions(), 1, "one zlib pass per version");
+    }
+
+    #[test]
+    fn async_polls_share_cached_blob_until_version_bump() {
+        use std::sync::Arc;
+        let mut cfg = small_cfg(4, 2);
+        cfg.mode = FlMode::Async { buffer_size: 3 };
+        cfg.aggregator = "fedbuff".into();
+        let (mut e, _bus) = engine(cfg, 4);
+        for c in 1..=3u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+        }
+        fn fetch_blob(e: &mut RoundEngine, c: u64, now: u64) -> Arc<Vec<u8>> {
+            match e.fetch(c, &NullDirectory, now).unwrap() {
+                RoundRole::Train(ri) => ri.model_blob,
+                other => panic!("{other:?}"),
+            }
+        }
+        let a = fetch_blob(&mut e, 1, 0);
+        let b = fetch_blob(&mut e, 2, 1);
+        assert!(
+            Arc::ptr_eq(&a, &b),
+            "unchanged version must serve the cached Arc"
+        );
+        assert_eq!(e.global.compressions(), 1, "repeat polls must not zlib");
+        // Three uploads → flush → version bump → cache invalidated.
+        for c in 1..=3u64 {
+            let (ok, why) = e
+                .accept_plain(c, 0, 0, vec![0.1; 4], 1.0, 0.5, &NoEval, 10)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+        assert_eq!(e.global.version, 1);
+        let fresh = fetch_blob(&mut e, 3, 20);
+        assert!(!Arc::ptr_eq(&a, &fresh), "stale blob must not be reused");
+        assert_eq!(e.global.compressions(), 2);
+        let decoded = ModelSnapshot::from_compressed(&fresh).unwrap();
+        assert_eq!(decoded.version, 1);
     }
 
     #[test]

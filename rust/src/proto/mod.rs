@@ -3,6 +3,8 @@
 pub mod msg;
 pub mod rpc;
 
+use std::sync::Arc;
+
 use crate::codec::{Reader, Wire, Writer};
 use crate::crypto::attest::{IntegrityTier, Verdict};
 use crate::error::{Error, Result};
@@ -320,8 +322,10 @@ pub enum RoundRole {
 #[derive(Clone, Debug, PartialEq)]
 pub struct RoundInstruction {
     pub round: u64,
-    /// zlib-compressed `ModelSnapshot`.
-    pub model_blob: Vec<u8>,
+    /// zlib-compressed `ModelSnapshot`, shared with the orchestrator's
+    /// version-keyed [`crate::model::SnapshotStore`] cache — handing an
+    /// instruction to a poller is an `Arc` clone, not a recompression.
+    pub model_blob: Arc<Vec<u8>>,
     pub train: TrainParams,
     /// Present iff the task uses secure aggregation.
     pub secagg: Option<SecAggSetup>,
@@ -347,7 +351,7 @@ impl Wire for RoundInstruction {
     fn decode(r: &mut Reader) -> Result<Self> {
         Ok(RoundInstruction {
             round: r.get_u64()?,
-            model_blob: r.get_bytes()?,
+            model_blob: Arc::new(r.get_bytes()?),
             train: TrainParams::decode(r)?,
             secagg: if r.get_bool()? {
                 Some(SecAggSetup::decode(r)?)
@@ -498,7 +502,7 @@ mod tests {
 
         let ri = RoundInstruction {
             round: 4,
-            model_blob: vec![1, 2, 3],
+            model_blob: Arc::new(vec![1, 2, 3]),
             train: TrainParams {
                 preset: "tiny".into(),
                 lr: 5e-4,

@@ -165,6 +165,24 @@ const R_ROUND_DONE: u8 = 4;
 const R_TASK_DONE: u8 = 5;
 
 impl Msg {
+    /// Approximate encoded size, dominated by the bulk payload if any.
+    /// `encode_frame` preallocates the Writer from this so multi-MB
+    /// frames (model blobs, deltas, masked vectors) don't grow through
+    /// repeated buffer doublings on the hot path.
+    pub fn size_hint(&self) -> usize {
+        let payload = match self {
+            Msg::UploadPlain { delta, .. } => delta.len() * 4,
+            Msg::UploadMasked { masked, .. } => masked.len() * 4,
+            Msg::RoundPlan {
+                role: RoundRole::Train(ri),
+            } => ri.model_blob.len(),
+            Msg::SecAggShares { shares, .. } => shares.iter().map(|s| s.enc.len() + 16).sum(),
+            Msg::UnmaskResponse { shares, .. } => shares.iter().map(|s| s.y.len() + 16).sum(),
+            _ => 0,
+        };
+        payload + 64
+    }
+
     fn tag(&self) -> u8 {
         match self {
             Msg::Register { .. } => T_REGISTER,
@@ -705,7 +723,11 @@ impl Msg {
 /// Encode a message into a frame for the given codec.
 pub fn encode_frame(msg: &Msg, codec: WireCodec) -> Result<Vec<u8>> {
     match codec {
-        WireCodec::Binary => Ok(msg.to_bytes()),
+        WireCodec::Binary => {
+            let mut w = Writer::with_capacity(msg.size_hint());
+            msg.encode(&mut w);
+            Ok(w.into_bytes())
+        }
         WireCodec::Json => Ok(msg.to_json()?.to_string().into_bytes()),
     }
 }
@@ -821,7 +843,7 @@ mod tests {
             Msg::RoundPlan {
                 role: RoundRole::Train(RoundInstruction {
                     round: 1,
-                    model_blob: vec![3, 2, 1],
+                    model_blob: std::sync::Arc::new(vec![3, 2, 1]),
                     train: TrainParams {
                         preset: "tiny".into(),
                         lr: 5e-4,

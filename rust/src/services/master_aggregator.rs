@@ -1,14 +1,16 @@
 //! Master Aggregator (§3.1.3): stage two of the aggregation pipeline.
 //!
-//! Combines per-VG interim results (or plaintext updates when secure
-//! aggregation is off), applies the task's aggregation strategy
-//! ("user-defined logic"), optional central DP noise, and updates the
-//! global model snapshot.
+//! Owns the task's aggregation strategy ("user-defined logic"), optional
+//! central DP noise, and the server learning rate. Ingest is streaming:
+//! the round engine opens a fold with [`MasterAggregator::begin_fold`],
+//! feeds each upload at arrival, and [`MasterAggregator::commit_fold`]
+//! finishes the fold, noises, and advances the global [`SnapshotStore`]
+//! (one version bump — which also invalidates the distribution cache).
 
-use crate::aggregation::{Aggregator, ClientUpdate};
+use crate::aggregation::{Aggregator, AggregatorFold, UpdateStats};
 use crate::dp::{DpConfig, DpMode, GaussianMechanism};
 use crate::error::Result;
-use crate::model::ModelSnapshot;
+use crate::model::SnapshotStore;
 use crate::services::secure_aggregator::VgInterim;
 use crate::util::Rng;
 
@@ -32,43 +34,51 @@ impl MasterAggregator {
         self.strategy.name()
     }
 
-    /// Plaintext path: aggregate client updates and advance the model.
-    /// Returns the number of contributors.
-    pub fn apply_plain(
-        &self,
-        global: &mut ModelSnapshot,
-        updates: &[ClientUpdate],
-        rng: &mut Rng,
-    ) -> Result<usize> {
-        let mut combined = self.strategy.aggregate(updates)?;
-        self.maybe_central_noise(&mut combined, rng);
-        global.apply_delta(&combined, self.server_lr)?;
-        Ok(updates.len())
+    /// Open a streaming ingest fold for one round / buffer epoch.
+    pub fn begin_fold(&self, dim: usize) -> Result<Box<dyn AggregatorFold>> {
+        self.strategy.begin(dim)
     }
 
-    /// Secure path: combine VG interims (stage two of §3.1.2's two-stage
-    /// process), weighting each interim by its contributor count.
+    /// Finish `fold`, apply optional central DP noise, and advance the
+    /// model. Returns the number of folded contributors.
+    pub fn commit_fold(
+        &self,
+        global: &mut SnapshotStore,
+        fold: Box<dyn AggregatorFold>,
+        rng: &mut Rng,
+    ) -> Result<usize> {
+        let participants = fold.count();
+        let mut combined = fold.finish()?;
+        self.maybe_central_noise(&mut combined, rng);
+        global.apply_delta(&combined, self.server_lr)?;
+        Ok(participants)
+    }
+
+    /// Secure path: stream per-VG interims (stage two of §3.1.2's
+    /// two-stage process) through the strategy fold, weighting each
+    /// interim by its contributor count.
     pub fn apply_interims(
         &self,
-        global: &mut ModelSnapshot,
+        global: &mut SnapshotStore,
         interims: &[VgInterim],
         rng: &mut Rng,
     ) -> Result<usize> {
-        // Interims are already per-VG means; convert to pseudo-updates so
-        // the configured strategy applies uniformly.
-        let updates: Vec<ClientUpdate> = interims
-            .iter()
-            .map(|iv| ClientUpdate {
-                client_id: iv.vg_id as u64,
-                delta: iv.mean_delta.clone(),
-                weight: iv.contributors as f64,
-                loss: iv.mean_loss,
-                staleness: 0,
-            })
-            .collect();
-        let mut combined = self.strategy.aggregate(&updates)?;
-        self.maybe_central_noise(&mut combined, rng);
-        global.apply_delta(&combined, self.server_lr)?;
+        let first = interims
+            .first()
+            .ok_or_else(|| crate::error::Error::Other("no interims to aggregate".into()))?;
+        let mut fold = self.strategy.begin(first.mean_delta.len())?;
+        for iv in interims {
+            fold.accept(
+                &iv.mean_delta,
+                &UpdateStats {
+                    client_id: iv.vg_id as u64,
+                    weight: iv.contributors as f64,
+                    loss: iv.mean_loss,
+                    staleness: 0,
+                },
+            )?;
+        }
+        self.commit_fold(global, fold, rng)?;
         Ok(interims.iter().map(|iv| iv.contributors).sum())
     }
 
@@ -88,29 +98,45 @@ impl MasterAggregator {
 mod tests {
     use super::*;
     use crate::aggregation::FedAvg;
+    use crate::model::ModelSnapshot;
 
-    fn upd(id: u64, delta: Vec<f32>, weight: f64) -> ClientUpdate {
-        ClientUpdate {
-            client_id: id,
-            delta,
-            weight,
-            loss: 0.5,
-            staleness: 0,
+    fn store(params: Vec<f32>) -> SnapshotStore {
+        SnapshotStore::new(ModelSnapshot::new(0, params))
+    }
+
+    fn feed(
+        ma: &MasterAggregator,
+        global: &mut SnapshotStore,
+        updates: &[(u64, Vec<f32>, f64)],
+        rng: &mut Rng,
+    ) -> Result<usize> {
+        let mut fold = ma.begin_fold(global.dim())?;
+        for (id, delta, weight) in updates {
+            fold.accept(
+                delta,
+                &UpdateStats {
+                    client_id: *id,
+                    weight: *weight,
+                    loss: 0.5,
+                    staleness: 0,
+                },
+            )?;
         }
+        ma.commit_fold(global, fold, rng)
     }
 
     #[test]
-    fn plain_path_moves_model() {
+    fn streaming_commit_moves_model() {
         let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 1.0);
-        let mut global = ModelSnapshot::new(0, vec![0.0, 0.0]);
+        let mut global = store(vec![0.0, 0.0]);
         let mut rng = Rng::new(1);
-        let n = ma
-            .apply_plain(
-                &mut global,
-                &[upd(1, vec![1.0, 0.0], 1.0), upd(2, vec![0.0, 1.0], 1.0)],
-                &mut rng,
-            )
-            .unwrap();
+        let n = feed(
+            &ma,
+            &mut global,
+            &[(1, vec![1.0, 0.0], 1.0), (2, vec![0.0, 1.0], 1.0)],
+            &mut rng,
+        )
+        .unwrap();
         assert_eq!(n, 2);
         assert_eq!(global.version, 1);
         assert!((global.params[0] - 0.5).abs() < 1e-6);
@@ -120,17 +146,29 @@ mod tests {
     #[test]
     fn server_lr_scales_step() {
         let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 0.5);
-        let mut global = ModelSnapshot::new(0, vec![0.0]);
+        let mut global = store(vec![0.0]);
         let mut rng = Rng::new(2);
-        ma.apply_plain(&mut global, &[upd(1, vec![2.0], 1.0)], &mut rng)
-            .unwrap();
+        feed(&ma, &mut global, &[(1, vec![2.0], 1.0)], &mut rng).unwrap();
         assert!((global.params[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn commit_invalidates_distribution_cache() {
+        let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 1.0);
+        let mut global = store(vec![0.0; 16]);
+        let mut rng = Rng::new(9);
+        let before = global.compressed().unwrap();
+        feed(&ma, &mut global, &[(1, vec![1.0; 16], 1.0)], &mut rng).unwrap();
+        let after = global.compressed().unwrap();
+        assert!(!std::sync::Arc::ptr_eq(&before, &after));
+        let decoded = ModelSnapshot::from_compressed(&after).unwrap();
+        assert_eq!(decoded.version, 1);
     }
 
     #[test]
     fn interims_weighted_by_contributors() {
         let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 1.0);
-        let mut global = ModelSnapshot::new(3, vec![0.0]);
+        let mut global = SnapshotStore::new(ModelSnapshot::new(3, vec![0.0]));
         let mut rng = Rng::new(3);
         let interims = vec![
             VgInterim {
@@ -161,24 +199,25 @@ mod tests {
             noise_multiplier: 1.0,
         };
         let ma = MasterAggregator::new(Box::new(FedAvg), dp, 1.0);
-        let mut g1 = ModelSnapshot::new(0, vec![0.0; 64]);
-        let mut g2 = ModelSnapshot::new(0, vec![0.0; 64]);
+        let mut g1 = store(vec![0.0; 64]);
+        let mut g2 = store(vec![0.0; 64]);
         let mut rng1 = Rng::new(4);
         let mut rng2 = Rng::new(5);
-        let ups = [upd(1, vec![0.0; 64], 1.0)];
-        ma.apply_plain(&mut g1, &ups, &mut rng1).unwrap();
-        ma.apply_plain(&mut g2, &ups, &mut rng2).unwrap();
+        feed(&ma, &mut g1, &[(1, vec![0.0; 64], 1.0)], &mut rng1).unwrap();
+        feed(&ma, &mut g2, &[(1, vec![0.0; 64], 1.0)], &mut rng2).unwrap();
         // Zero update + central noise → nonzero, seed-dependent params.
         assert!(g1.params.iter().any(|&x| x != 0.0));
         assert_ne!(g1.params, g2.params);
     }
 
     #[test]
-    fn empty_updates_error() {
+    fn empty_folds_error() {
         let ma = MasterAggregator::new(Box::new(FedAvg), DpConfig::off(), 1.0);
-        let mut global = ModelSnapshot::new(0, vec![0.0]);
+        let mut global = store(vec![0.0]);
         let mut rng = Rng::new(6);
-        assert!(ma.apply_plain(&mut global, &[], &mut rng).is_err());
+        let fold = ma.begin_fold(1).unwrap();
+        assert!(ma.commit_fold(&mut global, fold, &mut rng).is_err());
         assert!(ma.apply_interims(&mut global, &[], &mut rng).is_err());
+        assert_eq!(global.version, 0, "failed commit must not move the model");
     }
 }

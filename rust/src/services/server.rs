@@ -187,7 +187,7 @@ impl FloridaServer {
                     Err(_) => encode_frame(&reply, crate::proto::WireCodec::Binary)
                         .expect("binary encode cannot fail"),
                 };
-                if conn.send(&out).is_err() {
+                if conn.send_owned(out).is_err() {
                     break;
                 }
             });

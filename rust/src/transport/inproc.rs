@@ -31,8 +31,15 @@ pub struct InprocConn {
 
 impl Connection for InprocConn {
     fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.send_owned(frame.to_vec())
+    }
+
+    /// Zero-copy path: the frame's allocation moves straight into the
+    /// channel — no per-frame `to_vec` double-buffering for the
+    /// simulator's thousands of in-process clients.
+    fn send_owned(&mut self, frame: Vec<u8>) -> Result<()> {
         self.tx
-            .send(frame.to_vec())
+            .send(frame)
             .map_err(|_| Error::Transport("inproc peer closed".into()))
     }
 
@@ -129,6 +136,22 @@ mod tests {
         let mut c = InprocDialer.dial("test-echo").unwrap();
         c.send(b"ping").unwrap();
         assert_eq!(c.recv().unwrap(), b"ping");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn send_owned_moves_frame_without_copy() {
+        let l = InprocListener::bind("test-owned").unwrap();
+        let server = thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            let f = c.recv().unwrap();
+            c.send_owned(f).unwrap();
+        });
+        let mut c = InprocDialer.dial("test-owned").unwrap();
+        let frame = vec![42u8; 4096];
+        let expect = frame.clone();
+        c.send_owned(frame).unwrap();
+        assert_eq!(c.recv().unwrap(), expect);
         server.join().unwrap();
     }
 

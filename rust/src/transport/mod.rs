@@ -24,6 +24,14 @@ pub const MAX_FRAME: usize = 64 << 20;
 pub trait Connection: Send {
     /// Send one frame (blocking).
     fn send(&mut self, frame: &[u8]) -> Result<()>;
+    /// Send one frame, consuming the buffer. Transports that can move
+    /// the allocation (inproc channels) override this to skip the copy
+    /// `send` would make; byte-stream transports use the default, which
+    /// borrows and delegates. Frame producers (`encode_frame`) always
+    /// yield owned buffers, so this is the server/client send path.
+    fn send_owned(&mut self, frame: Vec<u8>) -> Result<()> {
+        self.send(&frame)
+    }
     /// Receive one frame (blocking; `Err` on close/timeout).
     fn recv(&mut self) -> Result<Vec<u8>>;
     /// Peer description for logs.

@@ -299,6 +299,6 @@ mod tests {
         assert!(fmt_ns(500.0).contains("ns"));
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
-        assert!(fmt_ns(5e9).contains("s"));
+        assert!(fmt_ns(5e9).contains('s'));
     }
 }

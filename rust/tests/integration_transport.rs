@@ -202,7 +202,7 @@ fn model_blob_survives_wire_roundtrip() {
     let msg = Msg::RoundPlan {
         role: RoundRole::Train(RoundInstruction {
             round: 9,
-            model_blob: blob,
+            model_blob: std::sync::Arc::new(blob),
             train: TrainParams {
                 preset: "tiny".into(),
                 lr: 5e-4,

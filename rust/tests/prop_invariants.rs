@@ -135,6 +135,82 @@ fn prop_fedavg_mean_within_input_hull() {
 }
 
 #[test]
+fn prop_streaming_fold_matches_batch_reference() {
+    use florida::aggregation::{Dga, FedProx};
+    // The engine now folds uploads at arrival (O(dim) resident state);
+    // every strategy's one-pass fold must reproduce the two-pass batch
+    // formula on seeded random cohorts. Random loss order exercises the
+    // DGA running-min rescale path.
+    property("streaming-vs-batch", 64, |_, rng| {
+        let k = rng.range(1, 12);
+        let dim = rng.range(1, 48);
+        let updates: Vec<ClientUpdate> = (0..k)
+            .map(|i| ClientUpdate {
+                client_id: i as u64,
+                delta: (0..dim).map(|_| (rng.next_f32() - 0.5) * 6.0).collect(),
+                weight: 0.1 + rng.next_f64() * 9.0,
+                loss: rng.next_f64() * 4.0,
+                staleness: rng.below(30),
+            })
+            .collect();
+        let min_loss = updates
+            .iter()
+            .map(|u| u.loss)
+            .fold(f64::INFINITY, f64::min);
+        let strategies: Vec<(Box<dyn Aggregator>, Vec<f64>)> = vec![
+            (
+                Box::new(FedAvg),
+                updates.iter().map(|u| u.weight).collect(),
+            ),
+            (
+                Box::new(FedProx { mu: 0.1 }),
+                updates.iter().map(|u| u.weight).collect(),
+            ),
+            (
+                Box::new(Dga { temp: 0.9 }),
+                updates
+                    .iter()
+                    .map(|u| (u.weight * (-(u.loss - min_loss) / 0.9).exp()).max(1e-12))
+                    .collect(),
+            ),
+            (
+                Box::new(FedBuff {
+                    staleness_alpha: 0.5,
+                }),
+                updates
+                    .iter()
+                    .map(|u| u.weight / (1.0 + u.staleness as f64).powf(0.5))
+                    .collect(),
+            ),
+        ];
+        for (agg, weights) in strategies {
+            // Independent batch reference: weighted mean in f64.
+            let total: f64 = weights.iter().sum();
+            let mut reference = vec![0.0f64; dim];
+            for (u, w) in updates.iter().zip(&weights) {
+                for (r, &d) in reference.iter_mut().zip(&u.delta) {
+                    *r += w * d as f64;
+                }
+            }
+            let mut fold = agg.begin(dim).unwrap();
+            for u in &updates {
+                fold.accept(&u.delta, &u.stats()).unwrap();
+            }
+            let got = fold.finish().unwrap();
+            assert_eq!(got.len(), dim);
+            for (j, g) in got.iter().enumerate() {
+                let want = (reference[j] / total) as f32;
+                assert!(
+                    (g - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "{}[{j}]: {g} vs {want}",
+                    agg.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_fedbuff_discount_monotone_in_staleness() {
     property("fedbuff-monotone", 64, |_, rng| {
         let s1 = rng.below(20);
