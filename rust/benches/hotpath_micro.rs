@@ -122,6 +122,58 @@ fn main() {
         assert_eq!(store.compressions(), 1, "cache must compress once");
     }
 
+    bench::section("durability (write-ahead journal + checkpoint/recover)");
+    // What durable orchestration costs per transition: a journal append
+    // (the per-upload hot path, unsynced — fsync cost is a disk
+    // property, not a code property) and a full checkpoint + recovery
+    // sweep of the BERT-tiny model (cache-warm: the checkpoint reuses
+    // the SnapshotStore's compressed blob, so the steady-state cost is
+    // the file write, not zlib).
+    {
+        use florida::config::FsyncPolicy;
+        use florida::model::SnapshotStore;
+        use florida::storage::journal::{JournalRecord, WalJournal};
+        use florida::storage::{self, CheckpointView};
+        use florida::util::TempDir;
+
+        let tmp = TempDir::new("bench-durability").expect("tempdir");
+        let mut journal =
+            WalJournal::create(&tmp.path().join("bench.journal"), FsyncPolicy::Never)
+                .expect("journal");
+        let rec = JournalRecord::UploadAccepted {
+            task_id: 1,
+            client_id: 42,
+            round: 3,
+            weight: 1.0,
+            loss: 0.25,
+        };
+        snap.report(b.run("journal_append", || {
+            journal.append(&rec).expect("append");
+        }));
+        journal.truncate().expect("truncate");
+
+        let store = SnapshotStore::new(ModelSnapshot::new(3, delta.clone()));
+        let cfg = florida::config::TaskConfig::default();
+        let metrics = florida::metrics::TaskMetrics::default();
+        let view = CheckpointView {
+            task_id: 7,
+            config: &cfg,
+            state: florida::proto::TaskState::Running,
+            round: 3,
+            store: &store,
+            metrics: &metrics,
+        };
+        let ckpt = storage::ckpt_path(tmp.path(), 7);
+        snap.report(slow.run_bytes("checkpoint_write", bytes, || {
+            storage::checkpoint::write(&ckpt, &view, FsyncPolicy::Never).expect("checkpoint");
+        }));
+        snap.report(slow.run_bytes("checkpoint_recover", bytes, || {
+            let tasks = storage::recover(tmp.path()).expect("recover");
+            assert_eq!(tasks.len(), 1);
+            std::hint::black_box(tasks);
+        }));
+    }
+
     bench::section("router_dispatch (typed stub vs direct service call)");
     // How much the interceptor chain + typed-stub conversions cost on the
     // hot path, against the bare service body (selection.touch) baseline.

@@ -16,12 +16,12 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::client::FloridaClient;
-use crate::config::{Manifest, TaskConfig};
+use crate::config::{FsyncPolicy, Manifest, StorageConfig, TaskConfig};
 use crate::dp::{DpConfig, DpMode, RdpAccountant};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
 use crate::orchestrator::{TaskBuilder, TaskEvent};
-use crate::proto::WireCodec;
+use crate::proto::{TaskState, WireCodec};
 use crate::services::management::NoEval;
 use crate::services::FloridaServer;
 use crate::simulator::spam::{run_spam, SpamRunConfig};
@@ -110,9 +110,16 @@ COMMANDS:
              [--artifacts DIR] [--csv FILE] [--seed N]
   scale      Run the §5.2 dummy-task scaling point
              [--clients N] [--rounds N] [--seed N]
+             [--churn-restart [--kill-after N] [--state-dir DIR]]
   serve      Serve the platform over TCP
              --addr HOST:PORT [--task cfg.json] [--artifacts DIR]
              [--dim N] [--no-attest] [--conns N]
+             [--state-dir DIR [--fsync always|commit|never]]
+             With --state-dir, tasks journal + checkpoint there and are
+             recovered at the next boot; 'q' + Enter checkpoints
+             everything and exits gracefully (stdin EOF is ignored, so
+             detached servers keep serving). A hard kill is also safe:
+             the write-ahead journal covers the tail.
   status     Query a served task
              --addr HOST:PORT --task-id N [--json]
   dp-plan    Privacy accounting for a task design
@@ -232,6 +239,34 @@ fn cmd_scale(args: &Args) -> Result<()> {
     let n = args.usize_or("clients", 256)?;
     let rounds = args.usize_or("rounds", 3)? as u64;
     let seed = args.usize_or("seed", 7)? as u64;
+    if args.switch("churn-restart") {
+        // Durability scenario: kill the server mid-experiment, recover
+        // from the state dir, report rounds-to-reconverge.
+        let kill_after = args.usize_or("kill-after", (rounds / 2).max(1) as usize)? as u64;
+        let tmp;
+        let state_dir = match args.flag("state-dir") {
+            Some(dir) => std::path::PathBuf::from(dir),
+            None => {
+                tmp = crate::util::TempDir::new("churn")?;
+                tmp.path().to_path_buf()
+            }
+        };
+        use crate::simulator::scaling::run_churn_restart;
+        let r = run_churn_restart(n, rounds, kill_after, seed, &state_dir)?;
+        println!(
+            "churn-restart: {} clients, killed mid-round after {} committed rounds",
+            r.n_clients, r.committed_before
+        );
+        println!(
+            "  recovered: round {} retried, version preserved {}, weights preserved {}",
+            r.interrupted_round, r.version_preserved, r.params_preserved
+        );
+        println!(
+            "  rounds to reconverge: {} (wall {} ms)",
+            r.rounds_to_reconverge, r.wall_ms
+        );
+        return Ok(());
+    }
     let p = crate::simulator::scaling::run_scaling_point(n, rounds, seed)?;
     println!(
         "scale: {} clients, {} rounds -> mean iteration {:.1} ms (wall {} ms)",
@@ -244,26 +279,91 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args
         .flag("addr")
         .ok_or_else(|| Error::Config("serve requires --addr".into()))?;
-    let server = Arc::new(FloridaServer::with_evaluator(
-        !args.switch("no-attest"),
-        Arc::new(NoEval),
-        args.usize_or("seed", 99)? as u64,
-        true,
-    ));
-    // Optionally deploy a task at startup (JSON config → TaskBuilder).
+    let seed = args.usize_or("seed", 99)? as u64;
+    let attest = !args.switch("no-attest");
+    let server = match args.flag("state-dir") {
+        Some(dir) => {
+            let storage = StorageConfig::new(dir)
+                .fsync(FsyncPolicy::parse(&args.flag_or("fsync", "commit"))?);
+            let s = Arc::new(FloridaServer::with_storage(
+                attest,
+                Arc::new(NoEval),
+                seed,
+                true,
+                storage,
+            )?);
+            for t in s.management.list_tasks() {
+                println!(
+                    "recovered task {} {:?} at round {}/{} ({})",
+                    t.task_id,
+                    t.task_name,
+                    t.round,
+                    t.total_rounds,
+                    t.state.name()
+                );
+            }
+            s
+        }
+        None => Arc::new(FloridaServer::with_evaluator(
+            attest,
+            Arc::new(NoEval),
+            seed,
+            true,
+        )),
+    };
+    // Optionally deploy a task at startup (JSON config → TaskBuilder) —
+    // unless recovery already brought back a live task of that name.
     if let Some(cfg_path) = args.flag("task") {
         let text = std::fs::read_to_string(cfg_path)?;
         let tcfg = TaskConfig::from_json_str(&text)?;
-        let init = match args.flag("artifacts") {
-            Some(dir) => {
-                let manifest = Manifest::load(dir)?;
-                let preset = manifest.preset(&tcfg.preset)?;
-                ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path))?
+        let live = server.management.list_tasks().into_iter().any(|t| {
+            t.task_name == tcfg.task_name
+                && matches!(
+                    t.state,
+                    TaskState::Created | TaskState::Running | TaskState::Paused
+                )
+        });
+        if live {
+            println!(
+                "task {:?} already recovered from the state dir — not redeploying",
+                tcfg.task_name
+            );
+        } else {
+            let init = match args.flag("artifacts") {
+                Some(dir) => {
+                    let manifest = Manifest::load(dir)?;
+                    let preset = manifest.preset(&tcfg.preset)?;
+                    ModelSnapshot::from_f32_file(&manifest.path_of(&preset.init_path))?
+                }
+                None => ModelSnapshot::new(0, vec![0.0; args.usize_or("dim", 5)?]),
+            };
+            let handle = TaskBuilder::from_config(tcfg).deploy(&server.management, init)?;
+            println!("deployed task {} from {cfg_path}", handle.id());
+        }
+    }
+    // Graceful shutdown: 'q' + Enter checkpoints every task at its
+    // committed-round boundary and exits. Detached servers (stdin
+    // closed) just keep serving — hard kills are covered by the
+    // write-ahead journal.
+    {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            let stdin = std::io::stdin();
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match stdin.read_line(&mut line) {
+                    // Detached: never treat EOF as a shutdown request.
+                    Ok(0) | Err(_) => return,
+                    Ok(_) if matches!(line.trim(), "q" | "quit" | "exit") => break,
+                    Ok(_) => {}
+                }
             }
-            None => ModelSnapshot::new(0, vec![0.0; args.usize_or("dim", 5)?]),
-        };
-        let handle = TaskBuilder::from_config(tcfg).deploy(&server.management, init)?;
-        println!("deployed task {} from {cfg_path}", handle.id());
+            let n = server.checkpoint_all();
+            println!("shutdown: checkpointed {n} task(s)");
+            server.stop();
+            std::process::exit(0);
+        });
     }
     let listener = TcpTransportListener::bind(addr)?;
     println!("florida serving on {}", listener.local_addr());

@@ -39,6 +39,65 @@ impl CohortSpec {
     }
 }
 
+/// When the durability subsystem (`crate::storage`) fsyncs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync every journal append and checkpoint — full durability; a
+    /// power cut loses nothing the server acknowledged.
+    Always,
+    /// fsync checkpoints and journal truncations only (default): a
+    /// power cut may tear the journal tail — which recovery already
+    /// treats as an in-flight round to retry — but never a checkpoint.
+    #[default]
+    Commit,
+    /// Never fsync (tests/benches; the OS flushes eventually).
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Stable name used on the CLI/JSON config surface.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Commit => "commit",
+            FsyncPolicy::Never => "never",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FsyncPolicy> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "commit" => Ok(FsyncPolicy::Commit),
+            "never" => Ok(FsyncPolicy::Never),
+            other => Err(Error::Config(format!(
+                "bad fsync policy {other:?} (expected always|commit|never)"
+            ))),
+        }
+    }
+}
+
+/// Where (and how durably) the orchestrator persists task state.
+#[derive(Clone, Debug)]
+pub struct StorageConfig {
+    /// Directory holding per-task checkpoints + journals.
+    pub state_dir: std::path::PathBuf,
+    pub fsync: FsyncPolicy,
+}
+
+impl StorageConfig {
+    pub fn new(state_dir: impl Into<std::path::PathBuf>) -> StorageConfig {
+        StorageConfig {
+            state_dir: state_dir.into(),
+            fsync: FsyncPolicy::default(),
+        }
+    }
+
+    pub fn fsync(mut self, policy: FsyncPolicy) -> StorageConfig {
+        self.fsync = policy;
+        self
+    }
+}
+
 /// Everything the ML scientist specifies when creating a task (§3.3.1).
 #[derive(Clone, Debug)]
 pub struct TaskConfig {
@@ -441,5 +500,17 @@ mod tests {
     fn bad_mode_rejected() {
         assert!(TaskConfig::from_json_str(r#"{"mode":"quantum"}"#).is_err());
         assert!(TaskConfig::from_json_str(r#"{"dp_mode":"??"}"#).is_err());
+    }
+
+    #[test]
+    fn fsync_policy_parse_roundtrip() {
+        for p in [FsyncPolicy::Always, FsyncPolicy::Commit, FsyncPolicy::Never] {
+            assert_eq!(FsyncPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        assert_eq!(FsyncPolicy::default(), FsyncPolicy::Commit);
+        let s = StorageConfig::new("/tmp/state").fsync(FsyncPolicy::Always);
+        assert_eq!(s.fsync, FsyncPolicy::Always);
+        assert_eq!(s.state_dir, std::path::PathBuf::from("/tmp/state"));
     }
 }

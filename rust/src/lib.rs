@@ -50,6 +50,7 @@ pub mod runtime;
 pub mod secagg;
 pub mod services;
 pub mod simulator;
+pub mod storage;
 pub mod transport;
 pub mod util;
 

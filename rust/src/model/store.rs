@@ -42,6 +42,19 @@ impl SnapshotStore {
         }
     }
 
+    /// Rebuild a store from a compressed snapshot blob (checkpoint
+    /// import). The cache is seeded with the very bytes, so the first
+    /// post-recovery poll is an `Arc` clone, not a zlib pass.
+    pub fn from_blob(blob: Vec<u8>) -> Result<SnapshotStore> {
+        let snapshot = ModelSnapshot::from_compressed(&blob)?;
+        let version = snapshot.version;
+        Ok(SnapshotStore {
+            snapshot,
+            cache: Mutex::new(Some((version, Arc::new(blob)))),
+            compressions: AtomicU64::new(0),
+        })
+    }
+
     /// Read-only view of the current snapshot.
     pub fn snapshot(&self) -> &ModelSnapshot {
         &self.snapshot
@@ -119,6 +132,19 @@ mod tests {
         let back = ModelSnapshot::from_compressed(&new).unwrap();
         assert_eq!(back.version, 1);
         assert!((back.params[0] - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_blob_roundtrips_and_pre_warms_cache() {
+        let s = store(128);
+        let blob = s.compressed().unwrap();
+        let back = SnapshotStore::from_blob(blob.as_ref().clone()).unwrap();
+        assert_eq!(*back.snapshot(), *s.snapshot());
+        // Export/import seeds the cache: no recompression on first read.
+        let again = back.compressed().unwrap();
+        assert_eq!(back.compressions(), 0);
+        assert_eq!(*again, *blob);
+        assert!(SnapshotStore::from_blob(vec![1, 2, 3]).is_err());
     }
 
     #[test]

@@ -268,6 +268,12 @@ impl<'a> TaskHandle<'a> {
     pub fn subscribe(&self) -> EventStream {
         self.mgmt.events().subscribe_task(self.id)
     }
+
+    /// Force a durability checkpoint at the task's current
+    /// committed-round boundary (a no-op for in-memory deployments).
+    pub fn checkpoint(&self) -> Result<()> {
+        self.mgmt.checkpoint_task(self.id)
+    }
 }
 
 #[cfg(test)]
@@ -338,6 +344,8 @@ mod tests {
         assert_eq!(desc.task_id, handle.id());
         assert_eq!(metrics.rounds.len(), 0);
         assert!(eps.is_none());
+        // In-memory deployment: an admin checkpoint is a free no-op.
+        handle.checkpoint().unwrap();
     }
 
     #[test]

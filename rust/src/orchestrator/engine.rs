@@ -37,6 +37,7 @@ use crate::quant::Quantizer;
 use crate::services::master_aggregator::MasterAggregator;
 use crate::services::secure_aggregator::SecAggRound;
 use crate::services::selection::SelectionService;
+use crate::storage::{CheckpointView, NoopPersistence, Persistence};
 use crate::util::Rng;
 
 use super::events::{EventBus, TaskEvent};
@@ -138,6 +139,10 @@ pub struct RoundEngine {
     master: MasterAggregator,
     rng: Rng,
     phase: Phase,
+    /// Durability hooks (`crate::storage`): journal appends on every
+    /// transition, checkpoint + truncate on commit. Defaults to
+    /// [`NoopPersistence`], so in-memory paths pay nothing.
+    persistence: Box<dyn Persistence>,
     cohort_policy: Box<dyn CohortPolicy>,
     pacing: Box<dyn PacingPolicy>,
     events: EventBus,
@@ -201,6 +206,7 @@ impl RoundEngine {
             master,
             rng: Rng::new(seed),
             phase: Phase::Joining,
+            persistence: Box::new(NoopPersistence),
             cohort_policy,
             pacing,
             events,
@@ -212,6 +218,86 @@ impl RoundEngine {
             async_joined: BTreeSet::new(),
             last_flush_ms: 0,
         })
+    }
+
+    /// Rebuild an engine at a committed round boundary (crash
+    /// recovery). No events are emitted; the phase re-enters `Joining`.
+    /// A round that was open at crash time is deliberately
+    /// failed-and-retried by the caller — streaming aggregation folds
+    /// are not replayable mid-round. The DP accountant is re-stepped
+    /// from the recovered round history, so epsilon survives restarts.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore(
+        id: u64,
+        config: TaskConfig,
+        global: SnapshotStore,
+        seed: u64,
+        events: EventBus,
+        state: TaskState,
+        round: u64,
+        metrics: TaskMetrics,
+    ) -> Result<RoundEngine> {
+        let mut e = Self::new(id, config, ModelSnapshot::new(0, Vec::new()), seed, events)?;
+        e.global = global;
+        e.state = state;
+        e.round = round;
+        e.metrics = metrics;
+        if let Some(acc) = &mut e.accountant {
+            for r in &e.metrics.rounds {
+                let q = (r.participants as f64 / e.config.dp_population as f64).min(1.0);
+                let _ = acc.step(q, e.config.dp.noise_multiplier);
+            }
+        }
+        Ok(e)
+    }
+
+    /// Attach durable persistence to a fresh task: writes the initial
+    /// checkpoint + journal birth record, then installs the hooks.
+    pub fn persist_to(&mut self, mut persistence: Box<dyn Persistence>) -> Result<()> {
+        persistence.task_created(&self.checkpoint_view())?;
+        self.persistence = persistence;
+        Ok(())
+    }
+
+    /// Re-attach persistence after recovery (no initial checkpoint).
+    pub fn resume_persistence(&mut self, persistence: Box<dyn Persistence>) {
+        self.persistence = persistence;
+    }
+
+    /// The engine's current committed-round boundary image.
+    pub fn checkpoint_view(&self) -> CheckpointView<'_> {
+        CheckpointView {
+            task_id: self.id,
+            config: &self.config,
+            state: self.state,
+            round: self.round,
+            store: &self.global,
+            metrics: &self.metrics,
+        }
+    }
+
+    /// Force a checkpoint at the current committed-round boundary
+    /// (graceful shutdown, admin op). An in-flight round is *not*
+    /// captured — it restarts cleanly after recovery, by design.
+    pub fn checkpoint(&mut self) -> Result<()> {
+        let view = CheckpointView {
+            task_id: self.id,
+            config: &self.config,
+            state: self.state,
+            round: self.round,
+            store: &self.global,
+            metrics: &self.metrics,
+        };
+        self.persistence.checkpoint(&view)
+    }
+
+    /// Run a journal hook, downgrading failures to a warning: the
+    /// in-memory round proceeds (availability), and recovery treats any
+    /// missing tail records as an in-flight round to retry.
+    fn persist(&mut self, f: impl FnOnce(&mut dyn Persistence) -> Result<()>) {
+        if let Err(e) = f(self.persistence.as_mut()) {
+            log::warn!("task {}: journal write failed: {e}", self.id);
+        }
     }
 
     pub fn descriptor(&self) -> TaskDescriptor {
@@ -261,6 +347,7 @@ impl RoundEngine {
             task_id: self.id,
             state,
         });
+        self.persist(|p| p.state_changed(state));
     }
 
     // -----------------------------------------------------------------
@@ -442,7 +529,6 @@ impl RoundEngine {
         if !loss.is_finite() {
             return Ok((false, format!("bad loss {loss}")));
         }
-        self.metrics.total_uploads += 1;
         if let FlMode::Async { buffer_size } = self.config.mode {
             if !self.async_joined.contains(&client_id) {
                 return Ok((false, "join first".into()));
@@ -471,6 +557,11 @@ impl RoundEngine {
                 }
                 ingest.count()
             };
+            // Counted (and journaled) only on acceptance, so the metric
+            // survives crash recovery exactly.
+            self.metrics.total_uploads += 1;
+            let upload_round = self.round;
+            self.persist(|p| p.upload_accepted(client_id, upload_round, weight, loss));
             let progress = RoundProgress {
                 cohort: buffer_size,
                 reported,
@@ -538,6 +629,8 @@ impl RoundEngine {
             }
             _ => return Ok((false, "no round in progress".into())),
         };
+        self.metrics.total_uploads += 1;
+        self.persist(|p| p.upload_accepted(client_id, round, weight, loss));
         // Uploads only ever commit; deadline failure stays tick()'s job.
         if self.pacing.assess(&progress) == PacingDecision::Commit {
             self.try_commit(eval, now_ms);
@@ -565,7 +658,6 @@ impl RoundEngine {
         if !loss.is_finite() {
             return Ok((false, format!("bad loss {loss}")));
         }
-        self.metrics.total_uploads += 1;
         let progress = match &mut self.phase {
             Phase::Training {
                 secagg: Some(sa),
@@ -587,6 +679,9 @@ impl RoundEngine {
             }
             _ => return Ok((false, "no masked round in progress".into())),
         };
+        self.metrics.total_uploads += 1;
+        // Masked uploads carry no plaintext weight; journal unit weight.
+        self.persist(|p| p.upload_accepted(client_id, round, 1.0, loss));
         // Uploads only ever commit; deadline failure stays tick()'s job.
         if self.pacing.assess(&progress) == PacingDecision::Commit {
             self.try_commit(eval, now_ms);
@@ -804,6 +899,8 @@ impl RoundEngine {
             round: self.round,
             cohort: cohort_size,
         });
+        let round = self.round;
+        self.persist(|p| p.round_started(round, cohort_size));
         Ok(())
     }
 
@@ -894,6 +991,7 @@ impl RoundEngine {
         train_loss: f64,
         now_ms: u64,
     ) {
+        let committed_round = self.round;
         if let Some(acc) = &mut self.accountant {
             let q = (participants as f64 / self.config.dp_population as f64).min(1.0);
             let _ = acc.step(q, self.config.dp.noise_multiplier);
@@ -923,6 +1021,22 @@ impl RoundEngine {
             self.emit(TaskEvent::TaskCompleted { task_id: self.id });
             log::info!("task {}: completed after {} rounds", self.id, self.round);
         }
+        // Durability point: journal the commit, checkpoint the new
+        // model version atomically, truncate the absorbed journal tail.
+        let view = CheckpointView {
+            task_id: self.id,
+            config: &self.config,
+            state: self.state,
+            round: self.round,
+            store: &self.global,
+            metrics: &self.metrics,
+        };
+        if let Err(e) = self.persistence.round_committed(committed_round, &view) {
+            log::error!(
+                "task {}: checkpoint failed — round {committed_round} is not durable: {e}",
+                self.id
+            );
+        }
     }
 
     /// Training/Unmasking → Failed → Joining: abandon the round; joiners
@@ -935,6 +1049,8 @@ impl RoundEngine {
             task_id: self.id,
             round: self.round,
         });
+        let round = self.round;
+        self.persist(|p| p.round_failed(round));
     }
 
     /// Async path: commit the buffer epoch's fold into the model.
@@ -1314,6 +1430,68 @@ mod tests {
         assert_eq!(e.global.compressions(), 2);
         let decoded = ModelSnapshot::from_compressed(&fresh).unwrap();
         assert_eq!(decoded.version, 1);
+    }
+
+    #[test]
+    fn restore_rebuilds_committed_boundary_without_events() {
+        let (mut e, _bus) = engine(small_cfg(2, 3), 4);
+        drive_round(&mut e, 2, 2, 0);
+        assert_eq!(e.round, 1);
+        let params = e.global.params.clone();
+        let version = e.global.version;
+        let bus = EventBus::new();
+        let stream = bus.subscribe();
+        let store = SnapshotStore::new(ModelSnapshot::new(version, params.clone()));
+        let mut r = RoundEngine::restore(
+            1,
+            small_cfg(2, 3),
+            store,
+            7,
+            bus.clone(),
+            TaskState::Running,
+            1,
+            e.metrics.clone(),
+        )
+        .unwrap();
+        assert!(stream.drain().is_empty(), "restore must not emit events");
+        assert_eq!(r.round, 1);
+        assert_eq!(r.state, TaskState::Running);
+        assert_eq!(r.global.params, params);
+        assert_eq!(r.global.version, version);
+        assert_eq!(r.phase_name(), "joining");
+        // The restored engine keeps orchestrating where it left off.
+        drive_round(&mut r, 2, 2, 10);
+        assert_eq!(r.round, 2);
+        assert_eq!(r.metrics.rounds.len(), 2);
+    }
+
+    #[test]
+    fn restore_replays_dp_accountant_from_round_history() {
+        let mut cfg = small_cfg(2, 3);
+        cfg.dp = crate::dp::DpConfig::paper_local();
+        cfg.dp_population = 50;
+        let (mut e, _bus) = engine(cfg.clone(), 2);
+        drive_round(&mut e, 2, 2, 0);
+        let eps_before = e.epsilon().unwrap();
+        assert!(eps_before > 0.0);
+        let store =
+            SnapshotStore::new(ModelSnapshot::new(e.global.version, e.global.params.clone()));
+        let r = RoundEngine::restore(
+            1,
+            cfg,
+            store,
+            7,
+            EventBus::new(),
+            TaskState::Running,
+            1,
+            e.metrics.clone(),
+        )
+        .unwrap();
+        let eps_after = r.epsilon().unwrap();
+        assert!(
+            (eps_before - eps_after).abs() < 1e-12,
+            "{eps_before} vs {eps_after}"
+        );
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::config::TaskConfig;
+use crate::config::{StorageConfig, TaskConfig};
 use crate::error::{Error, Result};
 use crate::metrics::TaskMetrics;
 use crate::model::ModelSnapshot;
@@ -21,6 +21,7 @@ use crate::orchestrator::{
 };
 use crate::proto::msg::{PeerShare, RecoveredShare};
 use crate::proto::{RoundRole, TaskDescriptor, TaskState};
+use crate::storage::{FilePersistence, Persistence as _};
 
 // Compatibility re-exports: the evaluator hook moved to the orchestrator
 // with the engine, but callers import it from here.
@@ -31,12 +32,19 @@ pub struct ManagementService {
     inner: Mutex<Inner>,
     evaluator: Arc<dyn Evaluator>,
     events: EventBus,
+    /// Durability: when set, every task journals + checkpoints under
+    /// `storage.state_dir` and is recovered from there at boot.
+    storage: Option<StorageConfig>,
 }
 
 struct Inner {
     next_task_id: u64,
     engines: HashMap<u64, RoundEngine>,
     seed: u64,
+}
+
+fn task_seed(seed: u64, task_id: u64) -> u64 {
+    seed ^ task_id.wrapping_mul(0x9E3779B97F4A7C15)
 }
 
 impl ManagementService {
@@ -49,7 +57,70 @@ impl ManagementService {
             }),
             evaluator,
             events: EventBus::new(),
+            storage: None,
         }
+    }
+
+    /// Durable constructor: creates `state_dir` if needed, then runs the
+    /// multi-tenant recovery sweep — every `task-N.ckpt` is loaded, its
+    /// journal tail replayed, and the engine rebuilt at its last
+    /// committed round boundary. A round that was in flight at crash
+    /// time is failed-and-retried (streaming folds are not replayable
+    /// mid-round); the committed model versions are preserved
+    /// bit-for-bit. New tasks created on this service persist to the
+    /// same directory.
+    pub fn with_storage(
+        evaluator: Arc<dyn Evaluator>,
+        seed: u64,
+        storage: StorageConfig,
+    ) -> Result<ManagementService> {
+        std::fs::create_dir_all(&storage.state_dir)?;
+        let recovered = crate::storage::recover(&storage.state_dir)?;
+        let svc = ManagementService {
+            inner: Mutex::new(Inner {
+                next_task_id: 1,
+                engines: HashMap::new(),
+                seed,
+            }),
+            evaluator,
+            events: EventBus::new(),
+            storage: Some(storage.clone()),
+        };
+        {
+            let mut g = svc.inner.lock().unwrap();
+            for rt in recovered {
+                let id = rt.task_id;
+                let mut engine = RoundEngine::restore(
+                    id,
+                    rt.config,
+                    rt.store,
+                    task_seed(seed, id),
+                    svc.events.clone(),
+                    rt.state,
+                    rt.round,
+                    rt.metrics,
+                )?;
+                let mut persistence = FilePersistence::attach(&storage, id)?;
+                if let Some(round) = rt.interrupted_round {
+                    log::warn!(
+                        "task {id}: round {round} was in flight at shutdown — failing and \
+                         retrying it (streaming folds are not replayable mid-round)"
+                    );
+                    engine.metrics.failed_rounds += 1;
+                    let _ = persistence.round_failed(round);
+                }
+                engine.resume_persistence(Box::new(persistence));
+                log::info!(
+                    "task {id}: recovered at round {} (model version {}, state {})",
+                    engine.round,
+                    engine.global.version,
+                    engine.state.name()
+                );
+                g.next_task_id = g.next_task_id.max(id + 1);
+                g.engines.insert(id, engine);
+            }
+        }
+        Ok(svc)
     }
 
     /// The shared lifecycle event bus.
@@ -90,11 +161,44 @@ impl ManagementService {
     ) -> Result<u64> {
         let mut g = self.inner.lock().unwrap();
         let id = g.next_task_id;
-        let seed = g.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15);
-        let engine = build(id, seed, self.events.clone())?;
+        let mut engine = build(id, task_seed(g.seed, id), self.events.clone())?;
+        if let Some(storage) = &self.storage {
+            // Durable-or-failed: the task exists only if its initial
+            // checkpoint + journal landed. On failure, sweep any partial
+            // files so the next boot cannot resurrect a task whose
+            // creation the caller was told failed.
+            let attach = FilePersistence::create(storage, id)
+                .and_then(|p| engine.persist_to(Box::new(p)));
+            if let Err(e) = attach {
+                let _ = std::fs::remove_file(crate::storage::ckpt_path(&storage.state_dir, id));
+                let _ =
+                    std::fs::remove_file(crate::storage::journal_path(&storage.state_dir, id));
+                return Err(e);
+            }
+        }
         g.next_task_id += 1;
         g.engines.insert(id, engine);
         Ok(id)
+    }
+
+    /// Checkpoint one task at its committed-round boundary.
+    pub fn checkpoint_task(&self, task_id: u64) -> Result<()> {
+        self.with_task(task_id, |t| t.checkpoint())
+    }
+
+    /// Checkpoint every task (graceful shutdown). Returns how many
+    /// checkpoints succeeded; failures are logged, not fatal — the WAL
+    /// already covers anything a failed checkpoint would have captured.
+    pub fn checkpoint_all(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let mut ok = 0;
+        for t in g.engines.values_mut() {
+            match t.checkpoint() {
+                Ok(()) => ok += 1,
+                Err(e) => log::warn!("task {}: shutdown checkpoint failed: {e}", t.id),
+            }
+        }
+        ok
     }
 
     /// Start a created/paused task.
@@ -568,6 +672,87 @@ mod tests {
         run_plain_round(&m, &sel, id, &clients, 1000);
         let (_, _, eps2) = m.task_status(id).unwrap();
         assert!(eps2.unwrap() > eps.unwrap());
+    }
+
+    #[test]
+    fn storage_roundtrip_recovers_committed_state_bit_for_bit() {
+        use crate::config::{FsyncPolicy, StorageConfig};
+        use crate::util::TempDir;
+        let tmp = TempDir::new("mgmt-storage").unwrap();
+        let storage = StorageConfig::new(tmp.path()).fsync(FsyncPolicy::Always);
+        let sel = SelectionService::new(2);
+        let clients = register_n(&sel, 3);
+        let (params, version, id) = {
+            let m = ManagementService::with_storage(Arc::new(NoEval), 1, storage.clone()).unwrap();
+            let id = m
+                .create_task(small_cfg(3, 5), ModelSnapshot::new(0, vec![0.0; 4]))
+                .unwrap();
+            m.start_task(id).unwrap();
+            run_plain_round(&m, &sel, id, &clients, 0);
+            run_plain_round(&m, &sel, id, &clients, 100);
+            // Open round 2 and crash with one of three uploads folded.
+            for &c in &clients {
+                m.join(c, id, [0u8; 32], 200).unwrap();
+            }
+            for &c in &clients {
+                let _ = m.fetch_round(c, id, &sel, 200).unwrap();
+            }
+            let (ok, why) = m
+                .accept_plain(clients[0], id, 2, 2, vec![0.1; 4], 1.0, 0.5, 210)
+                .unwrap();
+            assert!(ok, "{why}");
+            let snap = m
+                .with_task(id, |t| Ok((t.global.params.clone(), t.global.version)))
+                .unwrap();
+            (snap.0, snap.1, id)
+        }; // server dropped here: the "crash"
+
+        let m = ManagementService::with_storage(Arc::new(NoEval), 1, storage).unwrap();
+        let (desc, metrics, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.round, 2, "in-flight round retried, not skipped");
+        assert_eq!(desc.state, TaskState::Running);
+        assert_eq!(metrics.rounds.len(), 2);
+        assert_eq!(metrics.failed_rounds, 1, "in-flight round failed-and-retried");
+        m.with_task(id, |t| {
+            assert_eq!(t.global.params, params, "weights must match bit-for-bit");
+            assert_eq!(t.global.version, version);
+            Ok(())
+        })
+        .unwrap();
+        // The retried round commits normally.
+        run_plain_round(&m, &sel, id, &clients, 300);
+        let (desc, metrics, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.round, 3);
+        assert_eq!(metrics.rounds.len(), 3);
+    }
+
+    #[test]
+    fn recovery_resumes_task_id_allocation() {
+        use crate::config::StorageConfig;
+        use crate::util::TempDir;
+        let tmp = TempDir::new("mgmt-ids").unwrap();
+        let storage = StorageConfig::new(tmp.path());
+        {
+            let m = ManagementService::with_storage(Arc::new(NoEval), 7, storage.clone()).unwrap();
+            assert_eq!(
+                m.create_task(small_cfg(2, 1), ModelSnapshot::new(0, vec![0.0]))
+                    .unwrap(),
+                1
+            );
+            assert_eq!(
+                m.create_task(small_cfg(2, 1), ModelSnapshot::new(0, vec![0.0]))
+                    .unwrap(),
+                2
+            );
+        }
+        let m = ManagementService::with_storage(Arc::new(NoEval), 7, storage).unwrap();
+        assert_eq!(m.list_tasks().len(), 2);
+        assert_eq!(
+            m.create_task(small_cfg(2, 1), ModelSnapshot::new(0, vec![0.0]))
+                .unwrap(),
+            3,
+            "id allocation must resume past recovered tasks"
+        );
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::TaskConfig;
+use crate::config::{StorageConfig, TaskConfig};
 use crate::error::Result;
 use crate::metrics::RpcMetrics;
 use crate::model::ModelSnapshot;
@@ -113,6 +113,35 @@ impl FloridaServer {
                 Clock::Manual(AtomicU64::new(0))
             },
         )
+    }
+
+    /// Durable constructor: the management service journals +
+    /// checkpoints every task under `storage.state_dir` and recovers
+    /// whatever a previous process left there (multi-tenant sweep at
+    /// boot; in-flight rounds are failed-and-retried).
+    pub fn with_storage(
+        attestation_required: bool,
+        evaluator: Arc<dyn Evaluator>,
+        seed: u64,
+        real_clock: bool,
+        storage: StorageConfig,
+    ) -> Result<FloridaServer> {
+        Ok(Self::assemble(
+            AuthService::new(b"florida-test-authority", attestation_required),
+            SelectionService::new(seed.wrapping_add(1)),
+            ManagementService::with_storage(evaluator, seed, storage)?,
+            if real_clock {
+                Clock::Real(Instant::now())
+            } else {
+                Clock::Manual(AtomicU64::new(0))
+            },
+        ))
+    }
+
+    /// Checkpoint every task at its committed-round boundary (graceful
+    /// shutdown path). Returns the number of successful checkpoints.
+    pub fn checkpoint_all(&self) -> usize {
+        self.management.checkpoint_all()
     }
 
     pub fn now_ms(&self) -> u64 {

@@ -5,12 +5,15 @@
 //! arrays." Reproduces Fig 11 (right): per-iteration duration vs number
 //! of concurrent clients.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::client::ConstantTrainer;
-use crate::error::Result;
+use crate::config::{FsyncPolicy, StorageConfig};
+use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
 use crate::orchestrator::TaskBuilder;
+use crate::proto::TaskState;
 use crate::services::management::NoEval;
 use crate::services::FloridaServer;
 use crate::simulator::{run_fleet, FleetConfig, Heterogeneity};
@@ -69,4 +72,179 @@ pub fn run_scaling_point(n: usize, rounds: u64, seed: u64) -> Result<ScalingPoin
         rounds: metrics.rounds.len(),
         register_ms,
     })
+}
+
+/// Outcome of the §Durability churn scenario: kill the server
+/// mid-experiment, recover it from `state_dir`, and finish the task.
+#[derive(Clone, Debug)]
+pub struct ChurnRestartReport {
+    pub n_clients: usize,
+    /// Rounds committed before the kill.
+    pub committed_before: u64,
+    /// The round that was in flight when the server died (it is retried
+    /// after recovery, never silently lost).
+    pub interrupted_round: u64,
+    /// Committed rounds the recovered server needed to finish the task —
+    /// `total - committed_before`, since the interrupted round keeps its
+    /// round number.
+    pub rounds_to_reconverge: u64,
+    /// Model version after recovery equals the pre-kill committed
+    /// version (no committed work lost, no phantom commits).
+    pub version_preserved: bool,
+    /// Recovered weights match the pre-kill committed weights
+    /// bit-for-bit.
+    pub params_preserved: bool,
+    pub wall_ms: u64,
+}
+
+/// Run the dummy task with durability on, kill the server after
+/// `kill_after` committed rounds (mid-round, with a partial cohort
+/// already uploaded), recover from `state_dir`, and drive the task to
+/// completion. Rounds are driven synchronously through the management
+/// API so the kill point is deterministic.
+pub fn run_churn_restart(
+    n: usize,
+    total_rounds: u64,
+    kill_after: u64,
+    seed: u64,
+    state_dir: &Path,
+) -> Result<ChurnRestartReport> {
+    if n < 2 {
+        return Err(Error::Config("churn restart needs >= 2 clients".into()));
+    }
+    if !(1..total_rounds).contains(&kill_after) {
+        return Err(Error::Config(format!(
+            "kill_after must be in 1..{total_rounds}"
+        )));
+    }
+    let storage = StorageConfig::new(state_dir).fsync(FsyncPolicy::Commit);
+    let t0 = std::time::Instant::now();
+
+    // One plaintext sync round through the management API: everyone
+    // joins (forming the cohort), then `uploaders` clients report.
+    fn drive(server: &FloridaServer, task: u64, n: usize, uploaders: usize) -> Result<()> {
+        let now = server.now_ms();
+        for c in 1..=n as u64 {
+            server.management.join(c, task, [0u8; 32], now)?;
+        }
+        for c in 1..=n as u64 {
+            let _ = server.management.fetch_round(c, task, &server.selection, now)?;
+        }
+        let (round, version) = server
+            .management
+            .with_task(task, |t| Ok((t.round, t.global.version)))?;
+        for c in 1..=uploaders as u64 {
+            let (ok, why) = server.management.accept_plain(
+                c,
+                task,
+                round,
+                version,
+                vec![1.0; 5],
+                1.0,
+                0.1,
+                now + 1,
+            )?;
+            if !ok {
+                return Err(Error::Task(why));
+            }
+        }
+        Ok(())
+    }
+
+    // Phase 1: run to the kill point, leaving a round in flight.
+    let (task, committed_before, params_before, version_before) = {
+        let server = Arc::new(FloridaServer::with_storage(
+            false,
+            Arc::new(NoEval),
+            seed,
+            true,
+            storage.clone(),
+        )?);
+        let task = TaskBuilder::new("churn-restart")
+            .clients_per_round(n)
+            .rounds(total_rounds)
+            .round_timeout_ms(120_000)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 5]))?
+            .id();
+        for _ in 0..kill_after {
+            drive(&server, task, n, n)?;
+        }
+        // Mid-experiment kill: half the cohort has already uploaded.
+        drive(&server, task, n, n / 2)?;
+        let snap = server
+            .management
+            .with_task(task, |t| Ok((t.global.params.clone(), t.global.version)))?;
+        (task, kill_after, snap.0, snap.1)
+    }; // server dropped: the crash
+
+    // Phase 2: recover and reconverge.
+    let server = Arc::new(FloridaServer::with_storage(
+        false,
+        Arc::new(NoEval),
+        seed,
+        true,
+        storage,
+    )?);
+    let (interrupted_round, version_preserved, params_preserved) =
+        server.management.with_task(task, |t| {
+            Ok((
+                t.round,
+                t.global.version == version_before,
+                t.global.params == params_before,
+            ))
+        })?;
+    let mut rounds_after = 0u64;
+    loop {
+        let state = server.management.with_task(task, |t| Ok(t.state))?;
+        if state != TaskState::Running {
+            break;
+        }
+        if rounds_after > total_rounds + 2 {
+            return Err(Error::Task("churn restart failed to reconverge".into()));
+        }
+        drive(&server, task, n, n)?;
+        rounds_after += 1;
+    }
+    let (desc, metrics, _) = server.management.task_status(task)?;
+    if desc.state != TaskState::Completed || metrics.rounds.len() as u64 != total_rounds {
+        return Err(Error::Task(format!(
+            "churn restart ended in state {} after {} committed rounds",
+            desc.state.name(),
+            metrics.rounds.len()
+        )));
+    }
+    Ok(ChurnRestartReport {
+        n_clients: n,
+        committed_before,
+        interrupted_round,
+        rounds_to_reconverge: rounds_after,
+        version_preserved,
+        params_preserved,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn churn_restart_retries_in_flight_round_and_reconverges() {
+        let tmp = TempDir::new("churn").unwrap();
+        let r = run_churn_restart(4, 3, 1, 11, tmp.path()).unwrap();
+        assert_eq!(r.committed_before, 1);
+        assert_eq!(r.interrupted_round, 1, "in-flight round keeps its number");
+        assert!(r.version_preserved, "committed version must survive the kill");
+        assert!(r.params_preserved, "committed weights must survive the kill");
+        assert_eq!(r.rounds_to_reconverge, 2, "retry round 1, then round 2");
+    }
+
+    #[test]
+    fn churn_restart_validates_inputs() {
+        let tmp = TempDir::new("churn").unwrap();
+        assert!(run_churn_restart(1, 3, 1, 0, tmp.path()).is_err());
+        assert!(run_churn_restart(4, 3, 3, 0, tmp.path()).is_err());
+        assert!(run_churn_restart(4, 3, 0, 0, tmp.path()).is_err());
+    }
 }

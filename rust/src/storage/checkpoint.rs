@@ -1,0 +1,287 @@
+//! Model checkpoints: the durable image of one task at a committed
+//! round boundary — config, lifecycle state, round counter, metrics
+//! history, and the compressed model blob (the same bytes the
+//! [`crate::model::SnapshotStore`] distribution cache hands to clients,
+//! so a cache-warm checkpoint costs no extra zlib pass).
+//!
+//! Writes are atomic: encode to `<path>.tmp`, fsync, rename over the
+//! final name, fsync the directory. A reader therefore sees either the
+//! previous checkpoint or the new one, never a torn hybrid; a trailing
+//! CRC32 catches bit rot and partial tmp files that survived a crash.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::codec::{Reader, Wire, Writer};
+use crate::config::{FsyncPolicy, TaskConfig};
+use crate::error::{Error, Result};
+use crate::metrics::{RoundRecord, TaskMetrics};
+use crate::model::ModelSnapshot;
+use crate::proto::{SelectionCriteria, TaskState};
+
+use super::journal::crc32;
+use super::CheckpointView;
+
+const MAGIC: u32 = 0x464C_434B; // "FLCK"
+const FORMAT: u32 = 1;
+
+/// A loaded checkpoint (committed-round boundary image of one task).
+pub struct Checkpoint {
+    pub task_id: u64,
+    pub config: TaskConfig,
+    pub state: TaskState,
+    pub round: u64,
+    pub metrics: TaskMetrics,
+    /// zlib-compressed [`ModelSnapshot`] (version + params).
+    pub blob: Vec<u8>,
+}
+
+impl Checkpoint {
+    pub fn model(&self) -> Result<ModelSnapshot> {
+        ModelSnapshot::from_compressed(&self.blob)
+    }
+}
+
+fn encode_metrics(w: &mut Writer, m: &TaskMetrics) {
+    w.put_u64(m.failed_rounds);
+    w.put_u64(m.total_uploads);
+    w.put_varint(m.rounds.len() as u64);
+    for r in &m.rounds {
+        w.put_u64(r.round);
+        w.put_u64(r.started_ms);
+        w.put_u64(r.ended_ms);
+        w.put_varint(r.participants as u64);
+        w.put_f64(r.train_loss);
+        for opt in [r.eval_loss, r.eval_accuracy, r.epsilon] {
+            w.put_bool(opt.is_some());
+            w.put_f64(opt.unwrap_or(0.0));
+        }
+    }
+}
+
+fn decode_metrics(r: &mut Reader) -> Result<TaskMetrics> {
+    let failed_rounds = r.get_u64()?;
+    let total_uploads = r.get_u64()?;
+    let n = r.get_varint()? as usize;
+    let mut rounds = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let round = r.get_u64()?;
+        let started_ms = r.get_u64()?;
+        let ended_ms = r.get_u64()?;
+        let participants = r.get_varint()? as usize;
+        let train_loss = r.get_f64()?;
+        let mut opts = [None; 3];
+        for o in opts.iter_mut() {
+            let present = r.get_bool()?;
+            let v = r.get_f64()?;
+            *o = present.then_some(v);
+        }
+        rounds.push(RoundRecord {
+            round,
+            started_ms,
+            ended_ms,
+            participants,
+            train_loss,
+            eval_loss: opts[0],
+            eval_accuracy: opts[1],
+            epsilon: opts[2],
+        });
+    }
+    Ok(TaskMetrics {
+        rounds,
+        failed_rounds,
+        total_uploads,
+    })
+}
+
+/// Atomically write `view` to `path` (temp file + rename).
+pub fn write(path: &Path, view: &CheckpointView, fsync: FsyncPolicy) -> Result<()> {
+    let mut w = Writer::new();
+    w.put_u32(MAGIC);
+    w.put_u32(FORMAT);
+    w.put_u64(view.task_id);
+    // Config travels as its JSON surface plus the wire-encoded selection
+    // criteria (which the JSON surface does not carry).
+    w.put_str(&view.config.to_json().to_string());
+    w.put_bytes(&view.config.selection.to_bytes());
+    w.put_u8(view.state as u8);
+    w.put_u64(view.round);
+    encode_metrics(&mut w, view.metrics);
+    w.put_bytes(&view.store.compressed()?);
+    let payload = w.into_bytes();
+    let crc = crc32(&payload);
+
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&payload)?;
+        f.write_all(&crc.to_le_bytes())?;
+        if fsync != FsyncPolicy::Never {
+            f.sync_all()?;
+        }
+    }
+    std::fs::rename(&tmp, path)?;
+    if fsync != FsyncPolicy::Never {
+        // Persist the rename itself. Directory fsync is a Unix-ism;
+        // ignore failure on platforms that reject opening directories.
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load and verify a checkpoint file.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < 4 {
+        return Err(Error::Codec(format!(
+            "checkpoint {}: truncated ({} bytes)",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    let (payload, tail) = bytes.split_at(bytes.len() - 4);
+    let crc = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32(payload) != crc {
+        return Err(Error::Codec(format!(
+            "checkpoint {}: checksum mismatch",
+            path.display()
+        )));
+    }
+    let mut r = Reader::new(payload);
+    if r.get_u32()? != MAGIC {
+        return Err(Error::Codec(format!(
+            "checkpoint {}: bad magic",
+            path.display()
+        )));
+    }
+    let format = r.get_u32()?;
+    if format != FORMAT {
+        return Err(Error::Codec(format!(
+            "checkpoint {}: unsupported format {format}",
+            path.display()
+        )));
+    }
+    let task_id = r.get_u64()?;
+    let mut config = TaskConfig::from_json_str(&r.get_str()?)?;
+    config.selection = SelectionCriteria::from_bytes(&r.get_bytes()?)?;
+    let state = TaskState::from_u8(r.get_u8()?)
+        .ok_or_else(|| Error::Codec(format!("checkpoint {}: bad state", path.display())))?;
+    let round = r.get_u64()?;
+    let metrics = decode_metrics(&mut r)?;
+    let blob = r.get_bytes()?;
+    if !r.is_empty() {
+        return Err(Error::Codec(format!(
+            "checkpoint {}: {} trailing bytes",
+            path.display(),
+            r.remaining()
+        )));
+    }
+    Ok(Checkpoint {
+        task_id,
+        config,
+        state,
+        round,
+        metrics,
+        blob,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::attest::IntegrityTier;
+    use crate::model::SnapshotStore;
+    use crate::util::TempDir;
+
+    fn view<'a>(
+        config: &'a TaskConfig,
+        store: &'a SnapshotStore,
+        metrics: &'a TaskMetrics,
+    ) -> CheckpointView<'a> {
+        CheckpointView {
+            task_id: 42,
+            config,
+            state: TaskState::Running,
+            round: 3,
+            store,
+            metrics,
+        }
+    }
+
+    #[test]
+    fn write_load_roundtrip_bit_for_bit() {
+        let tmp = TempDir::new("ckpt").unwrap();
+        let path = tmp.path().join("task-42.ckpt");
+        let mut config = TaskConfig::default();
+        config.selection.min_tier = IntegrityTier::Strong;
+        config.selection.os_allow = vec!["android".into()];
+        let store = SnapshotStore::new(ModelSnapshot::new(5, vec![0.25, -1.5, 3.0]));
+        let mut metrics = TaskMetrics::default();
+        metrics.failed_rounds = 2;
+        metrics.total_uploads = 17;
+        metrics.push(RoundRecord {
+            round: 0,
+            started_ms: 10,
+            ended_ms: 30,
+            participants: 4,
+            train_loss: 0.5,
+            eval_loss: Some(0.4),
+            eval_accuracy: None,
+            epsilon: Some(1.25),
+        });
+        write(&path, &view(&config, &store, &metrics), FsyncPolicy::Always).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.task_id, 42);
+        assert_eq!(back.state, TaskState::Running);
+        assert_eq!(back.round, 3);
+        assert_eq!(back.config.selection.min_tier, IntegrityTier::Strong);
+        assert_eq!(back.config.selection.os_allow, vec!["android".to_string()]);
+        assert_eq!(back.metrics.failed_rounds, 2);
+        assert_eq!(back.metrics.total_uploads, 17);
+        assert_eq!(back.metrics.rounds.len(), 1);
+        assert_eq!(back.metrics.rounds[0].eval_loss, Some(0.4));
+        assert_eq!(back.metrics.rounds[0].eval_accuracy, None);
+        let model = back.model().unwrap();
+        assert_eq!(model.version, 5);
+        assert_eq!(model.params, vec![0.25, -1.5, 3.0]);
+    }
+
+    #[test]
+    fn rewrite_replaces_atomically() {
+        let tmp = TempDir::new("ckpt").unwrap();
+        let path = tmp.path().join("task-1.ckpt");
+        let config = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(0, vec![1.0]));
+        write(&path, &view(&config, &store, &metrics), FsyncPolicy::Commit).unwrap();
+        let mut store2 = SnapshotStore::new(ModelSnapshot::new(0, vec![1.0]));
+        store2.apply_delta(&[1.0], 1.0).unwrap();
+        write(&path, &view(&config, &store2, &metrics), FsyncPolicy::Commit).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.model().unwrap().version, 1);
+        // No tmp residue.
+        assert!(!path.with_extension("ckpt.tmp").exists());
+    }
+
+    #[test]
+    fn corruption_is_a_clean_error() {
+        let tmp = TempDir::new("ckpt").unwrap();
+        let path = tmp.path().join("task-9.ckpt");
+        let config = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(0, vec![0.5; 8]));
+        write(&path, &view(&config, &store, &metrics), FsyncPolicy::Never).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+        // Truncation too.
+        std::fs::write(&path, &bytes[..3]).unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,435 @@
+//! Write-ahead round journal: an append-only log of orchestration
+//! transitions, length-prefixed and CRC32-checksummed per record.
+//!
+//! On-disk frame: `[len: u32 LE][crc32(payload): u32 LE][payload]`,
+//! payload being the [`JournalRecord`]'s `Wire` encoding. Replay
+//! distinguishes two failure shapes:
+//!
+//! * a **torn tail** — the file ends mid-frame (crash during an append).
+//!   Replay stops cleanly at the last complete record; this is the
+//!   expected crash shape and not an error.
+//! * **corruption** — a complete frame whose checksum does not match,
+//!   a length prefix beyond [`MAX_RECORD_LEN`], or an undecodable
+//!   payload. Replay returns a clean `Err`; silent data loss is never
+//!   an option the recovery path takes by itself.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::codec::{Reader, Wire, Writer};
+use crate::config::FsyncPolicy;
+use crate::error::{Error, Result};
+use crate::proto::TaskState;
+
+/// Upper bound on one record's payload; anything larger is corruption
+/// (journal records are small control-plane facts, never model blobs).
+pub const MAX_RECORD_LEN: usize = 1 << 24; // 16 MiB
+
+/// One durable orchestration fact. The journal is the delta between the
+/// last checkpoint and the crash point; model bytes live in checkpoints.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalRecord {
+    /// Task registered (the initial checkpoint carries the model).
+    TaskCreated { task_id: u64, config_json: String },
+    /// Lifecycle state moved (start/pause/cancel/complete).
+    StateChanged { task_id: u64, state: TaskState },
+    /// A cohort formed and the round opened.
+    RoundStarted {
+        task_id: u64,
+        round: u64,
+        cohort: u64,
+    },
+    /// An upload was accepted into the round's streaming fold.
+    UploadAccepted {
+        task_id: u64,
+        client_id: u64,
+        round: u64,
+        weight: f64,
+        loss: f64,
+    },
+    /// The round aggregated; the checkpoint that follows carries the
+    /// new model at `version`.
+    RoundCommitted {
+        task_id: u64,
+        round: u64,
+        version: u64,
+    },
+    /// The round was abandoned and will be retried.
+    RoundFailed { task_id: u64, round: u64 },
+    /// The task reached its final round.
+    TaskCompleted { task_id: u64 },
+    /// A checkpoint at `version` landed; every earlier record is
+    /// absorbed. Appended between the checkpoint write and the journal
+    /// truncation, so a crash in that window leaves a tail that replay
+    /// can prove stale instead of double-counting it.
+    Checkpointed { task_id: u64, version: u64 },
+}
+
+impl Wire for JournalRecord {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            JournalRecord::TaskCreated {
+                task_id,
+                config_json,
+            } => {
+                w.put_u8(1);
+                w.put_u64(*task_id);
+                w.put_str(config_json);
+            }
+            JournalRecord::StateChanged { task_id, state } => {
+                w.put_u8(2);
+                w.put_u64(*task_id);
+                w.put_u8(*state as u8);
+            }
+            JournalRecord::RoundStarted {
+                task_id,
+                round,
+                cohort,
+            } => {
+                w.put_u8(3);
+                w.put_u64(*task_id);
+                w.put_u64(*round);
+                w.put_u64(*cohort);
+            }
+            JournalRecord::UploadAccepted {
+                task_id,
+                client_id,
+                round,
+                weight,
+                loss,
+            } => {
+                w.put_u8(4);
+                w.put_u64(*task_id);
+                w.put_u64(*client_id);
+                w.put_u64(*round);
+                w.put_f64(*weight);
+                w.put_f64(*loss);
+            }
+            JournalRecord::RoundCommitted {
+                task_id,
+                round,
+                version,
+            } => {
+                w.put_u8(5);
+                w.put_u64(*task_id);
+                w.put_u64(*round);
+                w.put_u64(*version);
+            }
+            JournalRecord::RoundFailed { task_id, round } => {
+                w.put_u8(6);
+                w.put_u64(*task_id);
+                w.put_u64(*round);
+            }
+            JournalRecord::TaskCompleted { task_id } => {
+                w.put_u8(7);
+                w.put_u64(*task_id);
+            }
+            JournalRecord::Checkpointed { task_id, version } => {
+                w.put_u8(8);
+                w.put_u64(*task_id);
+                w.put_u64(*version);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<JournalRecord> {
+        match r.get_u8()? {
+            1 => Ok(JournalRecord::TaskCreated {
+                task_id: r.get_u64()?,
+                config_json: r.get_str()?,
+            }),
+            2 => Ok(JournalRecord::StateChanged {
+                task_id: r.get_u64()?,
+                state: TaskState::from_u8(r.get_u8()?)
+                    .ok_or_else(|| Error::Codec("journal: bad task state".into()))?,
+            }),
+            3 => Ok(JournalRecord::RoundStarted {
+                task_id: r.get_u64()?,
+                round: r.get_u64()?,
+                cohort: r.get_u64()?,
+            }),
+            4 => Ok(JournalRecord::UploadAccepted {
+                task_id: r.get_u64()?,
+                client_id: r.get_u64()?,
+                round: r.get_u64()?,
+                weight: r.get_f64()?,
+                loss: r.get_f64()?,
+            }),
+            5 => Ok(JournalRecord::RoundCommitted {
+                task_id: r.get_u64()?,
+                round: r.get_u64()?,
+                version: r.get_u64()?,
+            }),
+            6 => Ok(JournalRecord::RoundFailed {
+                task_id: r.get_u64()?,
+                round: r.get_u64()?,
+            }),
+            7 => Ok(JournalRecord::TaskCompleted {
+                task_id: r.get_u64()?,
+            }),
+            8 => Ok(JournalRecord::Checkpointed {
+                task_id: r.get_u64()?,
+                version: r.get_u64()?,
+            }),
+            t => Err(Error::Codec(format!("journal: unknown record tag {t}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE, same polynomial as zlib) — table built at compile time.
+// ---------------------------------------------------------------------
+
+const fn make_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = make_crc_table();
+
+/// CRC32 (IEEE) over `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Append-only journal writer over one task's log file.
+pub struct WalJournal {
+    file: File,
+    fsync: FsyncPolicy,
+}
+
+impl WalJournal {
+    /// Open a fresh (truncated) journal — new task.
+    pub fn create(path: &Path, fsync: FsyncPolicy) -> Result<WalJournal> {
+        let file = OpenOptions::new().create(true).write(true).truncate(true).open(path)?;
+        Ok(WalJournal { file, fsync })
+    }
+
+    /// Open an existing journal for appending — recovery re-attach.
+    pub fn open_append(path: &Path, fsync: FsyncPolicy) -> Result<WalJournal> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(WalJournal { file, fsync })
+    }
+
+    /// Append one record; under [`FsyncPolicy::Always`] the record is
+    /// fsynced before this returns.
+    pub fn append(&mut self, rec: &JournalRecord) -> Result<()> {
+        let payload = rec.to_bytes();
+        if payload.len() > MAX_RECORD_LEN {
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("journal record too large: {} bytes", payload.len()),
+            )));
+        }
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file.write_all(&frame)?;
+        if self.fsync == FsyncPolicy::Always {
+            self.file.sync_data()?;
+        }
+        Ok(())
+    }
+
+    /// Drop every record — called after a checkpoint has absorbed them.
+    pub fn truncate(&mut self) -> Result<()> {
+        self.file.set_len(0)?;
+        // Rewind the cursor: without this, the next append on a
+        // write-mode handle would land at the old offset and leave a
+        // zero-filled hole that replay would reject as corruption.
+        self.file.seek(SeekFrom::Start(0))?;
+        if self.fsync != FsyncPolicy::Never {
+            self.file.sync_data()?;
+        }
+        Ok(())
+    }
+}
+
+/// Replay a journal file. A missing file is an empty journal; a torn
+/// tail stops cleanly at the last complete record; corruption (bad
+/// checksum on a complete frame, absurd length prefix, undecodable
+/// payload) is a clean `Err` — never a panic, never a hang.
+pub fn replay(path: &Path) -> Result<Vec<JournalRecord>> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e.into()),
+    };
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let remaining = bytes.len() - pos;
+        if remaining < 8 {
+            log::warn!(
+                "journal {}: torn tail ({remaining} trailing bytes) — stopping at record {}",
+                path.display(),
+                records.len()
+            );
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        if len > MAX_RECORD_LEN {
+            return Err(Error::Codec(format!(
+                "journal {}: record length {len} at offset {pos} exceeds {MAX_RECORD_LEN}",
+                path.display()
+            )));
+        }
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if remaining - 8 < len {
+            log::warn!(
+                "journal {}: torn record at offset {pos} — stopping at record {}",
+                path.display(),
+                records.len()
+            );
+            break;
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            return Err(Error::Codec(format!(
+                "journal {}: checksum mismatch at offset {pos}",
+                path.display()
+            )));
+        }
+        records.push(JournalRecord::from_bytes(payload)?);
+        pos += 8 + len;
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn sample_records() -> Vec<JournalRecord> {
+        vec![
+            JournalRecord::TaskCreated {
+                task_id: 1,
+                config_json: "{\"task_name\":\"t\"}".into(),
+            },
+            JournalRecord::StateChanged {
+                task_id: 1,
+                state: TaskState::Running,
+            },
+            JournalRecord::RoundStarted { task_id: 1, round: 0, cohort: 4 },
+            JournalRecord::UploadAccepted {
+                task_id: 1,
+                client_id: 9,
+                round: 0,
+                weight: 2.5,
+                loss: 0.125,
+            },
+            JournalRecord::RoundCommitted { task_id: 1, round: 0, version: 1 },
+            JournalRecord::RoundFailed { task_id: 1, round: 1 },
+            JournalRecord::TaskCompleted { task_id: 1 },
+            JournalRecord::Checkpointed { task_id: 1, version: 1 },
+        ]
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let tmp = TempDir::new("journal").unwrap();
+        let path = tmp.path().join("t.journal");
+        let recs = sample_records();
+        let mut j = WalJournal::create(&path, FsyncPolicy::Always).unwrap();
+        for r in &recs {
+            j.append(r).unwrap();
+        }
+        drop(j);
+        assert_eq!(replay(&path).unwrap(), recs);
+    }
+
+    #[test]
+    fn missing_file_is_empty_journal() {
+        let tmp = TempDir::new("journal").unwrap();
+        assert!(replay(&tmp.path().join("nope.journal")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn truncate_clears_records() {
+        let tmp = TempDir::new("journal").unwrap();
+        let path = tmp.path().join("t.journal");
+        let mut j = WalJournal::create(&path, FsyncPolicy::Commit).unwrap();
+        j.append(&JournalRecord::TaskCompleted { task_id: 3 }).unwrap();
+        j.truncate().unwrap();
+        j.append(&JournalRecord::RoundFailed { task_id: 3, round: 7 }).unwrap();
+        drop(j);
+        assert_eq!(
+            replay(&path).unwrap(),
+            vec![JournalRecord::RoundFailed { task_id: 3, round: 7 }]
+        );
+    }
+
+    #[test]
+    fn torn_tail_lands_on_last_complete_record() {
+        let tmp = TempDir::new("journal").unwrap();
+        let path = tmp.path().join("t.journal");
+        let recs = sample_records();
+        let mut j = WalJournal::create(&path, FsyncPolicy::Never).unwrap();
+        for r in &recs {
+            j.append(r).unwrap();
+        }
+        drop(j);
+        let full = std::fs::read(&path).unwrap();
+        // Chop 5 bytes off the end: the final frame is torn.
+        let cut = tmp.path().join("cut.journal");
+        std::fs::write(&cut, &full[..full.len() - 5]).unwrap();
+        let got = replay(&cut).unwrap();
+        assert_eq!(got, recs[..recs.len() - 1]);
+    }
+
+    #[test]
+    fn flipped_checksum_is_a_clean_error() {
+        let tmp = TempDir::new("journal").unwrap();
+        let path = tmp.path().join("t.journal");
+        let mut j = WalJournal::create(&path, FsyncPolicy::Never).unwrap();
+        j.append(&JournalRecord::TaskCompleted { task_id: 1 }).unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] ^= 0xFF; // first CRC byte
+        std::fs::write(&path, bytes).unwrap();
+        assert!(replay(&path).is_err());
+    }
+
+    #[test]
+    fn absurd_length_prefix_is_a_clean_error() {
+        let tmp = TempDir::new("journal").unwrap();
+        let path = tmp.path().join("t.journal");
+        // A complete 8-byte header claiming a 4 GiB record.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, frame).unwrap();
+        assert!(replay(&path).is_err());
+        // A header shorter than 8 bytes is a torn tail, not corruption.
+        std::fs::write(&path, u32::MAX.to_le_bytes()).unwrap();
+        assert!(replay(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // IEEE CRC32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,632 @@
+//! Durability subsystem: write-ahead round journal, model checkpoints,
+//! and crash recovery for the orchestrator.
+//!
+//! Florida's orchestrator is long-lived managed infrastructure (§3);
+//! restart, upgrade and failover must be supported scenarios, not
+//! data-loss events. Three parts:
+//!
+//! * [`journal::WalJournal`] — an append-only, length-prefixed +
+//!   checksummed log of [`journal::JournalRecord`]s emitted by
+//!   `RoundEngine` transitions through the [`Persistence`] trait
+//!   ([`NoopPersistence`] keeps in-memory / simulator / bench paths
+//!   zero-cost).
+//! * [`checkpoint`] — on every round commit (and on graceful shutdown)
+//!   the task's committed state — config, lifecycle state, round,
+//!   metrics, and the compressed model blob — is written atomically via
+//!   temp-file + rename, then the journal is truncated up to that
+//!   version.
+//! * [`recover`] — at boot, load the latest checkpoint per task and
+//!   replay the journal tail to rebuild each engine at its last
+//!   committed round boundary.
+//!
+//! **Invariant: in-flight rounds are failed-and-retried on recovery.**
+//! Uploads stream into an O(dim) aggregation fold at arrival, and folds
+//! are not replayable mid-round (the deltas are never retained), so a
+//! round that was open at crash time is deliberately abandoned: the
+//! recovered engine re-enters `Joining` at the same round number,
+//! `failed_rounds` is incremented, and clients simply rejoin and retry.
+//! Committed state is never lost: the checkpoint ordering (journal
+//! commit record → checkpoint write → journal truncate, with the
+//! checkpoint rename atomic) guarantees recovery always lands on a
+//! fully-committed model version.
+
+pub mod checkpoint;
+pub mod journal;
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{StorageConfig, TaskConfig};
+use crate::error::Result;
+use crate::metrics::TaskMetrics;
+use crate::model::SnapshotStore;
+use crate::proto::TaskState;
+
+pub use checkpoint::Checkpoint;
+pub use journal::{JournalRecord, WalJournal};
+
+/// Borrowed image of one task at a persistence point. `round` is the
+/// *next* round (the committed-round boundary the engine sits at).
+pub struct CheckpointView<'a> {
+    pub task_id: u64,
+    pub config: &'a TaskConfig,
+    pub state: TaskState,
+    pub round: u64,
+    pub store: &'a SnapshotStore,
+    pub metrics: &'a TaskMetrics,
+}
+
+/// Durability hooks called by `RoundEngine` transition methods. The
+/// default [`NoopPersistence`] makes every hook free, so simulator and
+/// bench paths pay nothing for the seam.
+pub trait Persistence: Send {
+    /// New task registered: write the initial checkpoint, then the
+    /// journal birth record.
+    fn task_created(&mut self, view: &CheckpointView) -> Result<()>;
+    /// Lifecycle state moved (start/pause/cancel/complete).
+    fn state_changed(&mut self, state: TaskState) -> Result<()>;
+    /// A cohort formed and the round opened.
+    fn round_started(&mut self, round: u64, cohort: usize) -> Result<()>;
+    /// An upload was accepted into the round's streaming fold.
+    fn upload_accepted(&mut self, client_id: u64, round: u64, weight: f64, loss: f64) -> Result<()>;
+    /// The round was abandoned (will be retried).
+    fn round_failed(&mut self, round: u64) -> Result<()>;
+    /// `round` committed: journal the commit, checkpoint, truncate.
+    fn round_committed(&mut self, round: u64, view: &CheckpointView) -> Result<()>;
+    /// Checkpoint the committed boundary without a commit record
+    /// (graceful shutdown, admin-forced checkpoint).
+    fn checkpoint(&mut self, view: &CheckpointView) -> Result<()>;
+}
+
+/// Default persistence: everything is a no-op (in-memory deployments).
+pub struct NoopPersistence;
+
+impl Persistence for NoopPersistence {
+    fn task_created(&mut self, _view: &CheckpointView) -> Result<()> {
+        Ok(())
+    }
+    fn state_changed(&mut self, _state: TaskState) -> Result<()> {
+        Ok(())
+    }
+    fn round_started(&mut self, _round: u64, _cohort: usize) -> Result<()> {
+        Ok(())
+    }
+    fn upload_accepted(
+        &mut self,
+        _client_id: u64,
+        _round: u64,
+        _weight: f64,
+        _loss: f64,
+    ) -> Result<()> {
+        Ok(())
+    }
+    fn round_failed(&mut self, _round: u64) -> Result<()> {
+        Ok(())
+    }
+    fn round_committed(&mut self, _round: u64, _view: &CheckpointView) -> Result<()> {
+        Ok(())
+    }
+    fn checkpoint(&mut self, _view: &CheckpointView) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Checkpoint path for one task under `state_dir`.
+pub fn ckpt_path(state_dir: &Path, task_id: u64) -> PathBuf {
+    state_dir.join(format!("task-{task_id}.ckpt"))
+}
+
+/// Journal path for one task under `state_dir`.
+pub fn journal_path(state_dir: &Path, task_id: u64) -> PathBuf {
+    state_dir.join(format!("task-{task_id}.journal"))
+}
+
+/// File-backed persistence for one task: a WAL journal plus an
+/// atomically-replaced checkpoint, both under the service `state_dir`.
+pub struct FilePersistence {
+    task_id: u64,
+    ckpt: PathBuf,
+    journal: WalJournal,
+    fsync: crate::config::FsyncPolicy,
+}
+
+impl FilePersistence {
+    /// Fresh task: truncates any stale journal for this id.
+    pub fn create(storage: &StorageConfig, task_id: u64) -> Result<FilePersistence> {
+        Ok(FilePersistence {
+            task_id,
+            ckpt: ckpt_path(&storage.state_dir, task_id),
+            journal: WalJournal::create(&journal_path(&storage.state_dir, task_id), storage.fsync)?,
+            fsync: storage.fsync,
+        })
+    }
+
+    /// Recovery re-attach: append to the surviving journal.
+    pub fn attach(storage: &StorageConfig, task_id: u64) -> Result<FilePersistence> {
+        Ok(FilePersistence {
+            task_id,
+            ckpt: ckpt_path(&storage.state_dir, task_id),
+            journal: WalJournal::open_append(
+                &journal_path(&storage.state_dir, task_id),
+                storage.fsync,
+            )?,
+            fsync: storage.fsync,
+        })
+    }
+}
+
+impl Persistence for FilePersistence {
+    fn task_created(&mut self, view: &CheckpointView) -> Result<()> {
+        // Checkpoint first: a task is recoverable iff its checkpoint
+        // landed; the journal record is the birth marker after it.
+        checkpoint::write(&self.ckpt, view, self.fsync)?;
+        self.journal.append(&JournalRecord::TaskCreated {
+            task_id: self.task_id,
+            config_json: view.config.to_json().to_string(),
+        })
+    }
+
+    fn state_changed(&mut self, state: TaskState) -> Result<()> {
+        self.journal.append(&JournalRecord::StateChanged {
+            task_id: self.task_id,
+            state,
+        })?;
+        if state == TaskState::Completed {
+            // Explicit terminal marker: a journal tail ending in
+            // TaskCompleted is unambiguous even if the final commit's
+            // checkpoint never lands.
+            self.journal.append(&JournalRecord::TaskCompleted {
+                task_id: self.task_id,
+            })?;
+        }
+        Ok(())
+    }
+
+    fn round_started(&mut self, round: u64, cohort: usize) -> Result<()> {
+        self.journal.append(&JournalRecord::RoundStarted {
+            task_id: self.task_id,
+            round,
+            cohort: cohort as u64,
+        })
+    }
+
+    fn upload_accepted(
+        &mut self,
+        client_id: u64,
+        round: u64,
+        weight: f64,
+        loss: f64,
+    ) -> Result<()> {
+        self.journal.append(&JournalRecord::UploadAccepted {
+            task_id: self.task_id,
+            client_id,
+            round,
+            weight,
+            loss,
+        })
+    }
+
+    fn round_failed(&mut self, round: u64) -> Result<()> {
+        self.journal.append(&JournalRecord::RoundFailed {
+            task_id: self.task_id,
+            round,
+        })
+    }
+
+    fn round_committed(&mut self, round: u64, view: &CheckpointView) -> Result<()> {
+        // Commit record first: if the checkpoint write below crashes
+        // mid-way, recovery sees a commit the checkpoint doesn't cover
+        // and retries that round instead of silently losing it.
+        self.journal.append(&JournalRecord::RoundCommitted {
+            task_id: self.task_id,
+            round,
+            version: view.store.version,
+        })?;
+        self.checkpoint(view)
+    }
+
+    fn checkpoint(&mut self, view: &CheckpointView) -> Result<()> {
+        checkpoint::write(&self.ckpt, view, self.fsync)?;
+        // Marker before truncation: if the truncate below never lands
+        // (crash), replay sees the marker and discards the stale tail
+        // instead of double-counting records the checkpoint absorbed.
+        self.journal.append(&JournalRecord::Checkpointed {
+            task_id: self.task_id,
+            version: view.store.version,
+        })?;
+        self.journal.truncate()
+    }
+}
+
+/// One task rebuilt from its checkpoint + journal tail.
+pub struct RecoveredTask {
+    pub task_id: u64,
+    pub config: TaskConfig,
+    /// Model store seeded with the checkpoint blob (cache-warm: the
+    /// first post-recovery poll is an `Arc` clone, not a zlib pass).
+    pub store: SnapshotStore,
+    pub state: TaskState,
+    pub round: u64,
+    pub metrics: TaskMetrics,
+    /// A round that was open at crash time — the caller must fail and
+    /// retry it (streaming folds are not replayable mid-round).
+    pub interrupted_round: Option<u64>,
+}
+
+/// Recovery sweep: load every `task-N.ckpt` under `state_dir`, replay
+/// each journal tail, and return the tasks at their last committed
+/// round boundary (sorted by task id). A missing/empty dir recovers
+/// zero tasks; a corrupt checkpoint or journal is a clean `Err` —
+/// operator intervention beats silent data loss.
+pub fn recover(state_dir: &Path) -> Result<Vec<RecoveredTask>> {
+    let entries = match std::fs::read_dir(state_dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e.into()),
+    };
+    let mut out = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let id: u64 = match name
+            .strip_prefix("task-")
+            .and_then(|s| s.strip_suffix(".ckpt"))
+            .and_then(|s| s.parse().ok())
+        {
+            Some(id) => id,
+            None => continue, // journals, tmp residue, unrelated files
+        };
+        let ckpt = checkpoint::load(&entry.path())?;
+        let store = SnapshotStore::from_blob(ckpt.blob)?;
+        let mut state = ckpt.state;
+        let mut metrics = ckpt.metrics;
+        // Tail effects are accumulated as deltas so a `Checkpointed`
+        // marker (checkpoint landed, truncate lost) can discard them.
+        let mut uploads_delta = 0u64;
+        let mut failed_delta = 0u64;
+        let mut open_round = None;
+        for rec in journal::replay(&journal_path(state_dir, id))? {
+            match rec {
+                JournalRecord::TaskCreated { .. } => {}
+                JournalRecord::StateChanged { state: s, .. } => state = s,
+                JournalRecord::RoundStarted { round, .. } => {
+                    if round >= ckpt.round {
+                        open_round = Some(round);
+                    }
+                }
+                JournalRecord::UploadAccepted { round, .. } => {
+                    if round >= ckpt.round {
+                        // Async buffers have no RoundStarted marker; an
+                        // upload at the current round opens it too.
+                        uploads_delta += 1;
+                        open_round = Some(round);
+                    }
+                }
+                JournalRecord::RoundCommitted { round, version, .. } => {
+                    if version > store.version {
+                        // The commit record landed but the checkpoint
+                        // never did: the committed model is lost. Fail
+                        // and retry the round from the last durable
+                        // version rather than losing it silently.
+                        log::warn!(
+                            "task {id}: journal records round {round} committed at version \
+                             {version} but the checkpoint holds version {} — retrying the round",
+                            store.version
+                        );
+                        open_round = Some(round);
+                    } else {
+                        open_round = None;
+                    }
+                }
+                JournalRecord::RoundFailed { round, .. } => {
+                    if round >= ckpt.round {
+                        failed_delta += 1;
+                    }
+                    open_round = None;
+                }
+                JournalRecord::TaskCompleted { .. } => state = TaskState::Completed,
+                JournalRecord::Checkpointed { version, .. } => {
+                    if version <= store.version {
+                        // A checkpoint at least as new as the one we
+                        // loaded absorbed everything before this marker
+                        // (the truncate that should have followed it was
+                        // lost). Discard the stale prefix.
+                        state = ckpt.state;
+                        uploads_delta = 0;
+                        failed_delta = 0;
+                        open_round = None;
+                    } else {
+                        log::warn!(
+                            "task {id}: journal marks a checkpoint at version {version} but the \
+                             loaded checkpoint holds version {} — proceeding from the older one",
+                            store.version
+                        );
+                    }
+                }
+            }
+        }
+        metrics.total_uploads += uploads_delta;
+        metrics.failed_rounds += failed_delta;
+        // Completion is durable only through its checkpoint: the engine
+        // journals Completed and then immediately checkpoints-and-
+        // truncates, so a surviving tail that says Completed while the
+        // loaded checkpoint doesn't means the final commit's checkpoint
+        // never landed (crash before or after its RoundCommitted
+        // append). Reopen the task so the final round is retried
+        // instead of silently dropping its model update.
+        if state == TaskState::Completed && ckpt.state != TaskState::Completed {
+            log::warn!(
+                "task {id}: journaled completion has no durable checkpoint — reopening to retry \
+                 the final round"
+            );
+            state = TaskState::Running;
+        }
+        let interrupted_round = if state == TaskState::Running {
+            open_round
+        } else {
+            None
+        };
+        out.push(RecoveredTask {
+            task_id: id,
+            config: ckpt.config,
+            store,
+            state,
+            round: ckpt.round,
+            metrics,
+            interrupted_round,
+        });
+    }
+    out.sort_by_key(|t| t.task_id);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FsyncPolicy;
+    use crate::model::ModelSnapshot;
+    use crate::util::TempDir;
+
+    fn storage(tmp: &TempDir) -> StorageConfig {
+        StorageConfig::new(tmp.path()).fsync(FsyncPolicy::Commit)
+    }
+
+    fn view<'a>(
+        task_id: u64,
+        config: &'a TaskConfig,
+        store: &'a SnapshotStore,
+        metrics: &'a TaskMetrics,
+        state: TaskState,
+        round: u64,
+    ) -> CheckpointView<'a> {
+        CheckpointView {
+            task_id,
+            config,
+            state,
+            round,
+            store,
+            metrics,
+        }
+    }
+
+    #[test]
+    fn recover_empty_or_missing_dir() {
+        let tmp = TempDir::new("storage").unwrap();
+        assert!(recover(tmp.path()).unwrap().is_empty());
+        assert!(recover(&tmp.path().join("nope")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn commit_checkpoint_truncates_journal_and_recovers_clean() {
+        let tmp = TempDir::new("storage").unwrap();
+        let cfg = storage(&tmp);
+        let task_cfg = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let mut store = SnapshotStore::new(ModelSnapshot::new(0, vec![0.0; 4]));
+
+        let mut p = FilePersistence::create(&cfg, 1).unwrap();
+        p.task_created(&view(1, &task_cfg, &store, &metrics, TaskState::Created, 0))
+            .unwrap();
+        p.state_changed(TaskState::Running).unwrap();
+        p.round_started(0, 4).unwrap();
+        p.upload_accepted(7, 0, 1.0, 0.5).unwrap();
+        store.apply_delta(&[1.0; 4], 1.0).unwrap();
+        p.round_committed(0, &view(1, &task_cfg, &store, &metrics, TaskState::Running, 1))
+            .unwrap();
+        drop(p);
+
+        // Journal truncated by the commit checkpoint.
+        assert_eq!(journal::replay(&journal_path(tmp.path(), 1)).unwrap(), vec![]);
+        let tasks = recover(tmp.path()).unwrap();
+        assert_eq!(tasks.len(), 1);
+        let t = &tasks[0];
+        assert_eq!(t.task_id, 1);
+        assert_eq!(t.round, 1);
+        assert_eq!(t.state, TaskState::Running);
+        assert_eq!(t.store.version, 1);
+        assert_eq!(t.store.params, vec![1.0; 4]);
+        assert!(t.interrupted_round.is_none());
+        // Cache-warm: the first poll must not recompress.
+        let _ = t.store.compressed().unwrap();
+        assert_eq!(t.store.compressions(), 0);
+    }
+
+    #[test]
+    fn in_flight_round_is_flagged_for_retry() {
+        let tmp = TempDir::new("storage").unwrap();
+        let cfg = storage(&tmp);
+        let task_cfg = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(0, vec![0.0; 2]));
+
+        let mut p = FilePersistence::create(&cfg, 3).unwrap();
+        p.task_created(&view(3, &task_cfg, &store, &metrics, TaskState::Created, 0))
+            .unwrap();
+        p.state_changed(TaskState::Running).unwrap();
+        p.round_started(0, 2).unwrap();
+        p.upload_accepted(1, 0, 1.0, 0.3).unwrap();
+        drop(p); // crash mid-round
+
+        let tasks = recover(tmp.path()).unwrap();
+        assert_eq!(tasks[0].interrupted_round, Some(0));
+        assert_eq!(tasks[0].round, 0);
+        assert_eq!(tasks[0].metrics.total_uploads, 1);
+    }
+
+    #[test]
+    fn commit_record_without_checkpoint_retries_the_round() {
+        // Crash between the journal commit record and the checkpoint
+        // write: the committed model is gone; the round must be retried
+        // from the last durable version, loudly.
+        let tmp = TempDir::new("storage").unwrap();
+        let cfg = storage(&tmp);
+        let task_cfg = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(0, vec![0.0; 2]));
+
+        let mut p = FilePersistence::create(&cfg, 2).unwrap();
+        p.task_created(&view(2, &task_cfg, &store, &metrics, TaskState::Created, 0))
+            .unwrap();
+        p.state_changed(TaskState::Running).unwrap();
+        p.round_started(0, 2).unwrap();
+        drop(p);
+        // Simulate the torn commit: record appended, checkpoint missing.
+        let mut j =
+            WalJournal::open_append(&journal_path(tmp.path(), 2), FsyncPolicy::Never).unwrap();
+        j.append(&JournalRecord::RoundCommitted { task_id: 2, round: 0, version: 1 }).unwrap();
+        drop(j);
+
+        let tasks = recover(tmp.path()).unwrap();
+        assert_eq!(tasks[0].store.version, 0, "last durable version");
+        assert_eq!(tasks[0].interrupted_round, Some(0));
+    }
+
+    #[test]
+    fn lost_final_commit_reopens_a_completed_task() {
+        // The terminal crash window: the journal records the final
+        // round's commit and the Completed transition, but the
+        // checkpoint never lands. The completion rode the lost commit,
+        // so recovery must reopen the task and retry the round.
+        let tmp = TempDir::new("storage").unwrap();
+        let cfg = storage(&tmp);
+        let task_cfg = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(0, vec![0.0]));
+
+        let mut p = FilePersistence::create(&cfg, 4).unwrap();
+        p.task_created(&view(4, &task_cfg, &store, &metrics, TaskState::Created, 0))
+            .unwrap();
+        p.state_changed(TaskState::Running).unwrap();
+        p.round_started(0, 1).unwrap();
+        p.state_changed(TaskState::Completed).unwrap();
+        drop(p); // crash window A: before the RoundCommitted append
+
+        let tasks = recover(tmp.path()).unwrap();
+        assert_eq!(tasks[0].state, TaskState::Running, "completion was not durable");
+        assert_eq!(tasks[0].store.version, 0);
+        assert_eq!(tasks[0].interrupted_round, Some(0), "the final round retries");
+
+        // Crash window B: the RoundCommitted record landed too, but the
+        // checkpoint for version 1 still didn't. Same outcome.
+        let mut j =
+            WalJournal::open_append(&journal_path(tmp.path(), 4), FsyncPolicy::Never).unwrap();
+        j.append(&JournalRecord::RoundCommitted { task_id: 4, round: 0, version: 1 }).unwrap();
+        drop(j);
+        let tasks = recover(tmp.path()).unwrap();
+        assert_eq!(tasks[0].state, TaskState::Running, "completion was not durable");
+        assert_eq!(tasks[0].store.version, 0);
+        assert_eq!(tasks[0].interrupted_round, Some(0), "the final round retries");
+    }
+
+    #[test]
+    fn stale_tail_after_lost_truncate_is_discarded() {
+        // Crash window: checkpoint + marker landed, truncate didn't.
+        // The tail before the marker was absorbed by the checkpoint and
+        // must not be double-counted or flagged as an in-flight round.
+        let tmp = TempDir::new("storage").unwrap();
+        let task_cfg = TaskConfig::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(0, vec![0.0]));
+        let mut metrics = TaskMetrics::default();
+        metrics.total_uploads = 1; // the checkpoint already counts it
+        checkpoint::write(
+            &ckpt_path(tmp.path(), 6),
+            &view(6, &task_cfg, &store, &metrics, TaskState::Running, 0),
+            FsyncPolicy::Never,
+        )
+        .unwrap();
+        let jpath = journal_path(tmp.path(), 6);
+        let mut j = WalJournal::create(&jpath, FsyncPolicy::Never).unwrap();
+        j.append(&JournalRecord::RoundStarted { task_id: 6, round: 0, cohort: 1 }).unwrap();
+        j.append(&JournalRecord::UploadAccepted {
+            task_id: 6,
+            client_id: 1,
+            round: 0,
+            weight: 1.0,
+            loss: 0.1,
+        })
+        .unwrap();
+        j.append(&JournalRecord::Checkpointed { task_id: 6, version: 0 }).unwrap();
+        drop(j);
+
+        let tasks = recover(tmp.path()).unwrap();
+        assert_eq!(tasks[0].metrics.total_uploads, 1, "absorbed upload not recounted");
+        assert_eq!(tasks[0].metrics.failed_rounds, 0);
+        assert!(tasks[0].interrupted_round.is_none(), "marker proves it was absorbed");
+
+        // Genuine records after the marker still count.
+        let mut j = WalJournal::open_append(&jpath, FsyncPolicy::Never).unwrap();
+        j.append(&JournalRecord::UploadAccepted {
+            task_id: 6,
+            client_id: 2,
+            round: 0,
+            weight: 1.0,
+            loss: 0.2,
+        })
+        .unwrap();
+        drop(j);
+        let tasks = recover(tmp.path()).unwrap();
+        assert_eq!(tasks[0].metrics.total_uploads, 2);
+        assert_eq!(tasks[0].interrupted_round, Some(0));
+    }
+
+    #[test]
+    fn completed_tasks_recover_without_retry() {
+        // A real completion is immediately absorbed by its commit
+        // checkpoint (state Completed); recovery must not reopen it.
+        let tmp = TempDir::new("storage").unwrap();
+        let cfg = storage(&tmp);
+        let task_cfg = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(1, vec![0.5]));
+
+        let mut p = FilePersistence::create(&cfg, 5).unwrap();
+        p.task_created(&view(5, &task_cfg, &store, &metrics, TaskState::Created, 0))
+            .unwrap();
+        p.state_changed(TaskState::Running).unwrap();
+        p.round_started(0, 1).unwrap();
+        p.state_changed(TaskState::Completed).unwrap();
+        p.round_committed(0, &view(5, &task_cfg, &store, &metrics, TaskState::Completed, 1))
+            .unwrap();
+        drop(p);
+
+        let tasks = recover(tmp.path()).unwrap();
+        assert_eq!(tasks[0].state, TaskState::Completed);
+        assert_eq!(tasks[0].round, 1);
+        assert!(tasks[0].interrupted_round.is_none());
+    }
+
+    #[test]
+    fn noop_persistence_is_free_and_infallible() {
+        let mut p = NoopPersistence;
+        let task_cfg = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(0, vec![0.0]));
+        let v = view(1, &task_cfg, &store, &metrics, TaskState::Running, 0);
+        p.task_created(&v).unwrap();
+        p.state_changed(TaskState::Running).unwrap();
+        p.round_started(0, 1).unwrap();
+        p.upload_accepted(1, 0, 1.0, 0.0).unwrap();
+        p.round_failed(0).unwrap();
+        p.round_committed(0, &v).unwrap();
+        p.checkpoint(&v).unwrap();
+    }
+}

@@ -8,6 +8,8 @@ pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod stats;
+pub mod tempdir;
 
 pub use pool::ThreadPool;
 pub use rng::Rng;
+pub use tempdir::TempDir;

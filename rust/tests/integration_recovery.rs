@@ -1,0 +1,274 @@
+//! Integration: durability + crash recovery. A multi-task server is
+//! driven through committed rounds over the existing stub API, killed
+//! with one round in flight, and recovered from its `state_dir` into a
+//! fresh `ManagementService`. Recovery must preserve committed model
+//! versions and weights bit-for-bit, fail-and-retry the in-flight round
+//! (never silently lose it), and let clients resume through the same
+//! protocol with no changes.
+
+use std::sync::Arc;
+
+use florida::client::FloridaClient;
+use florida::config::{FsyncPolicy, StorageConfig};
+use florida::crypto::attest::IntegrityTier;
+use florida::model::ModelSnapshot;
+use florida::orchestrator::TaskBuilder;
+use florida::proto::{rpc, RoundRole, TaskState};
+use florida::services::management::NoEval;
+use florida::services::FloridaServer;
+use florida::util::TempDir;
+
+fn durable_server(tmp: &TempDir, seed: u64) -> Arc<FloridaServer> {
+    // FsyncPolicy::Always so CI exercises the full fsync path.
+    Arc::new(
+        FloridaServer::with_storage(
+            true,
+            Arc::new(NoEval),
+            seed,
+            true,
+            StorageConfig::new(tmp.path()).fsync(FsyncPolicy::Always),
+        )
+        .unwrap(),
+    )
+}
+
+fn register(server: &Arc<FloridaServer>, stub: &FloridaClient, dev: &str, nonce: u64) -> u64 {
+    let verdict = server
+        .auth
+        .authority()
+        .issue(dev, IntegrityTier::Device, nonce, u64::MAX / 2);
+    let ack = stub.register(dev, verdict, Default::default()).unwrap();
+    assert!(ack.accepted, "{}", ack.reason);
+    ack.client_id
+}
+
+/// Join + fetch + upload one full plaintext round for `clients` through
+/// the typed stubs; `uploaders` of them report.
+fn drive_round(stub: &FloridaClient, task_id: u64, clients: &[u64], uploaders: usize) {
+    for &c in clients {
+        let ack = stub.join_round(c, task_id, [0u8; 32]).unwrap();
+        assert!(ack.accepted, "{}", ack.reason);
+    }
+    let mut sent = 0;
+    for &c in clients {
+        if let RoundRole::Train(ri) = stub.fetch_round(c, task_id).unwrap() {
+            if sent >= uploaders {
+                continue;
+            }
+            let model = ModelSnapshot::from_compressed(&ri.model_blob).unwrap();
+            stub.upload_plain(rpc::UploadPlain {
+                client_id: c,
+                task_id,
+                round: ri.round,
+                base_version: model.version,
+                delta: vec![0.5; model.dim()],
+                weight: 1.0,
+                loss: 0.25,
+            })
+            .unwrap();
+            sent += 1;
+        }
+    }
+    assert_eq!(sent, uploaders);
+}
+
+#[test]
+fn multi_task_crash_recovery_end_to_end() {
+    let tmp = TempDir::new("integration-recovery").unwrap();
+
+    // ---- Phase 1: the original server ----------------------------------
+    let (task_a, task_b, params_a, version_a, params_b, version_b) = {
+        let server = durable_server(&tmp, 42);
+        let stub = FloridaClient::direct(&server);
+
+        // Two tenants: a sync fedavg task and a buffered-async fedbuff
+        // task, with different models.
+        let task_a = TaskBuilder::new("tenant-a/sync")
+            .clients_per_round(2)
+            .rounds(4)
+            .round_timeout_ms(60_000)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 8]))
+            .unwrap()
+            .id();
+        let task_b = TaskBuilder::new("tenant-b/async")
+            .buffered_async(2)
+            .aggregator("fedbuff")
+            .rounds(3)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap()
+            .id();
+
+        let a1 = register(&server, &stub, "dev-a1", 1);
+        let a2 = register(&server, &stub, "dev-a2", 2);
+        let b1 = register(&server, &stub, "dev-b1", 3);
+        let b2 = register(&server, &stub, "dev-b2", 4);
+
+        // Two committed rounds on each task.
+        drive_round(&stub, task_a, &[a1, a2], 2);
+        drive_round(&stub, task_a, &[a1, a2], 2);
+        drive_round(&stub, task_b, &[b1, b2], 2);
+        drive_round(&stub, task_b, &[b1, b2], 2);
+
+        // Open round 2 on task A with only one of two uploads: this is
+        // the in-flight round the crash will strand.
+        drive_round(&stub, task_a, &[a1, a2], 1);
+
+        let (pa, va) = server
+            .management
+            .with_task(task_a, |t| Ok((t.global.params.clone(), t.global.version)))
+            .unwrap();
+        let (pb, vb) = server
+            .management
+            .with_task(task_b, |t| Ok((t.global.params.clone(), t.global.version)))
+            .unwrap();
+        assert_eq!(va, 2);
+        assert_eq!(vb, 2);
+        drop(stub);
+        (task_a, task_b, pa, va, pb, vb)
+    }; // server dropped: the crash
+
+    // ---- Phase 2: recovery into a fresh service ------------------------
+    let server = durable_server(&tmp, 42);
+    let tasks = server.management.list_tasks();
+    assert_eq!(tasks.len(), 2, "multi-tenant sweep must find both tasks");
+
+    // Committed state matches the pre-crash state bit-for-bit.
+    server
+        .management
+        .with_task(task_a, |t| {
+            assert_eq!(t.global.version, version_a);
+            assert_eq!(t.global.params, params_a, "task A weights bit-for-bit");
+            Ok(())
+        })
+        .unwrap();
+    server
+        .management
+        .with_task(task_b, |t| {
+            assert_eq!(t.global.version, version_b);
+            assert_eq!(t.global.params, params_b, "task B weights bit-for-bit");
+            Ok(())
+        })
+        .unwrap();
+
+    // The in-flight round on task A was failed-and-retried, not lost:
+    // same round number, one recorded failure, metrics history intact.
+    let (desc_a, metrics_a, _) = server.management.task_status(task_a).unwrap();
+    assert_eq!(desc_a.state, TaskState::Running);
+    assert_eq!(desc_a.round, 2, "interrupted round keeps its number");
+    assert_eq!(metrics_a.rounds.len(), 2, "committed history preserved");
+    assert_eq!(metrics_a.failed_rounds, 1, "in-flight round counted as retried");
+    assert_eq!(
+        metrics_a.total_uploads, 5,
+        "4 committed uploads + 1 stranded upload survive in the metrics"
+    );
+    let (desc_b, metrics_b, _) = server.management.task_status(task_b).unwrap();
+    assert_eq!(desc_b.round, 2);
+    assert_eq!(metrics_b.rounds.len(), 2);
+    assert_eq!(metrics_b.failed_rounds, 0, "task B had nothing in flight");
+
+    // ---- Phase 3: clients resume over the unchanged stub API -----------
+    let stub = FloridaClient::direct(&server);
+    let a1 = register(&server, &stub, "dev-a1", 11);
+    let a2 = register(&server, &stub, "dev-a2", 12);
+    let b1 = register(&server, &stub, "dev-b1", 13);
+    let b2 = register(&server, &stub, "dev-b2", 14);
+
+    // Task A: retry round 2, then round 3 → completed after 4 commits.
+    drive_round(&stub, task_a, &[a1, a2], 2);
+    drive_round(&stub, task_a, &[a1, a2], 2);
+    let (desc_a, metrics_a, _) = server.management.task_status(task_a).unwrap();
+    assert_eq!(desc_a.state, TaskState::Completed);
+    assert_eq!(metrics_a.rounds.len(), 4);
+
+    // Task B: one more flush → completed after 3.
+    drive_round(&stub, task_b, &[b1, b2], 2);
+    let (desc_b, metrics_b, _) = server.management.task_status(task_b).unwrap();
+    assert_eq!(desc_b.state, TaskState::Completed);
+    assert_eq!(metrics_b.rounds.len(), 3);
+
+    // Committed model math survived the crash: task A saw 4 rounds of
+    // mean-delta 0.5 with server_lr 1.0.
+    server
+        .management
+        .with_task(task_a, |t| {
+            assert_eq!(t.global.version, 4);
+            for p in &t.global.params {
+                assert!((p - 2.0).abs() < 1e-6, "{p}");
+            }
+            Ok(())
+        })
+        .unwrap();
+}
+
+#[test]
+fn graceful_shutdown_checkpoint_recovers_without_failed_rounds() {
+    let tmp = TempDir::new("integration-shutdown").unwrap();
+    let task = {
+        let server = durable_server(&tmp, 7);
+        let stub = FloridaClient::direct(&server);
+        let task = TaskBuilder::new("graceful")
+            .clients_per_round(2)
+            .rounds(3)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap()
+            .id();
+        let c1 = register(&server, &stub, "g1", 1);
+        let c2 = register(&server, &stub, "g2", 2);
+        drive_round(&stub, task, &[c1, c2], 2);
+        // Leave a round open, then shut down gracefully: the checkpoint
+        // lands at the committed boundary and truncates the journal, so
+        // the open round restarts cleanly without counting as a failure.
+        drive_round(&stub, task, &[c1, c2], 1);
+        assert_eq!(server.checkpoint_all(), 1);
+        task
+    };
+    let server = durable_server(&tmp, 7);
+    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    assert_eq!(desc.round, 1);
+    assert_eq!(desc.state, TaskState::Running);
+    assert_eq!(metrics.rounds.len(), 1);
+    assert_eq!(
+        metrics.failed_rounds, 0,
+        "a graceful shutdown is not a crash — no failed-round bump"
+    );
+    // And the task still runs to completion.
+    let stub = FloridaClient::direct(&server);
+    let c1 = register(&server, &stub, "g1", 11);
+    let c2 = register(&server, &stub, "g2", 12);
+    drive_round(&stub, task, &[c1, c2], 2);
+    drive_round(&stub, task, &[c1, c2], 2);
+    assert_eq!(
+        server.management.task_status(task).unwrap().0.state,
+        TaskState::Completed
+    );
+}
+
+#[test]
+fn completed_tasks_recover_as_completed() {
+    let tmp = TempDir::new("integration-done").unwrap();
+    let task = {
+        let server = durable_server(&tmp, 9);
+        let stub = FloridaClient::direct(&server);
+        let task = TaskBuilder::new("done")
+            .clients_per_round(2)
+            .rounds(1)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 2]))
+            .unwrap()
+            .id();
+        let c1 = register(&server, &stub, "d1", 1);
+        let c2 = register(&server, &stub, "d2", 2);
+        drive_round(&stub, task, &[c1, c2], 2);
+        task
+    };
+    let server = durable_server(&tmp, 9);
+    let (desc, metrics, _) = server.management.task_status(task).unwrap();
+    assert_eq!(desc.state, TaskState::Completed);
+    assert_eq!(metrics.rounds.len(), 1);
+    // A completed task offers TaskDone to returning clients.
+    let stub = FloridaClient::direct(&server);
+    let c = register(&server, &stub, "d1", 5);
+    assert_eq!(
+        stub.fetch_round(c, task).unwrap(),
+        RoundRole::TaskDone
+    );
+}

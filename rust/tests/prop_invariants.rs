@@ -451,6 +451,215 @@ fn prop_json_roundtrip_random_values() {
 }
 
 #[test]
+fn prop_checkpoint_replay_equals_uninterrupted_run() {
+    use florida::config::{FlMode, FsyncPolicy, StorageConfig, TaskConfig};
+    use florida::model::ModelSnapshot;
+    use florida::services::management::{ManagementService, NoEval};
+    use florida::util::TempDir;
+    use std::sync::Arc;
+
+    // "checkpoint + journal-replay ≡ uninterrupted run" for committed
+    // state: a durable service killed mid-round and recovered must end
+    // with bit-identical model weights/versions to a service that never
+    // crashed, across fedavg (sync) and fedbuff (buffered async).
+    // Uploads are a deterministic function of (round, client), so both
+    // runs fold identical data in identical order.
+    fn cfg_for(agg: &str, k: usize, total: u64) -> TaskConfig {
+        let mut c = TaskConfig::default();
+        c.clients_per_round = k;
+        c.total_rounds = total;
+        c.round_timeout_ms = 120_000;
+        c.aggregator = agg.into();
+        if agg == "fedbuff" {
+            c.mode = FlMode::Async { buffer_size: k };
+        }
+        c
+    }
+
+    fn delta(dim: usize, round: u64, client: u64) -> Vec<f32> {
+        (0..dim)
+            .map(|j| ((round as f32 + 1.0) * 0.1 - client as f32 * 0.01 + j as f32 * 1e-3))
+            .collect()
+    }
+
+    /// Drive one committed round: join+fetch all k, then upload all k.
+    fn drive(m: &ManagementService, task: u64, k: u64, dim: usize, now: u64) {
+        let dir = florida::orchestrator::NullDirectory;
+        for c in 1..=k {
+            let (ok, why) = m.join(c, task, [0u8; 32], now).unwrap();
+            assert!(ok, "{why}");
+        }
+        for c in 1..=k {
+            let _ = m.fetch_round(c, task, &dir, now).unwrap();
+        }
+        let (round, version) = m
+            .with_task(task, |t| Ok((t.round, t.global.version)))
+            .unwrap();
+        for c in 1..=k {
+            let (ok, why) = m
+                .accept_plain(c, task, round, version, delta(dim, round, c), 1.0, 0.5, now + 1)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+    }
+
+    property("checkpoint-replay-vs-uninterrupted", 12, |seed, rng| {
+        let dim = rng.range(2, 24);
+        let k = rng.range(2, 5) as u64;
+        let total = rng.range(2, 5) as u64;
+        let kill_after = 1 + rng.below(total - 1); // 1..total
+        let agg = if rng.chance(0.5) { "fedavg" } else { "fedbuff" };
+        let cfg = cfg_for(agg, k as usize, total);
+
+        // Uninterrupted reference.
+        let m_ref = ManagementService::new(Arc::new(NoEval), seed);
+        let task = m_ref
+            .create_task(cfg.clone(), ModelSnapshot::new(0, vec![0.0; dim]))
+            .unwrap();
+        m_ref.start_task(task).unwrap();
+        for r in 0..total {
+            drive(&m_ref, task, k, dim, r * 10);
+        }
+
+        // Durable run: crash mid-round at `kill_after`, recover, finish.
+        let tmp = TempDir::new("prop-replay").unwrap();
+        let storage = StorageConfig::new(tmp.path()).fsync(FsyncPolicy::Commit);
+        {
+            let m = ManagementService::with_storage(Arc::new(NoEval), seed, storage.clone())
+                .unwrap();
+            let t2 = m
+                .create_task(cfg.clone(), ModelSnapshot::new(0, vec![0.0; dim]))
+                .unwrap();
+            assert_eq!(t2, task);
+            m.start_task(task).unwrap();
+            for r in 0..kill_after {
+                drive(&m, task, k, dim, r * 10);
+            }
+            // Strand a partial round: joins plus one folded upload.
+            let dir = florida::orchestrator::NullDirectory;
+            for c in 1..=k {
+                m.join(c, task, [0u8; 32], kill_after * 10).unwrap();
+            }
+            for c in 1..=k {
+                let _ = m.fetch_round(c, task, &dir, kill_after * 10).unwrap();
+            }
+            let (round, version) = m
+                .with_task(task, |t| Ok((t.round, t.global.version)))
+                .unwrap();
+            let (ok, _) = m
+                .accept_plain(
+                    1,
+                    task,
+                    round,
+                    version,
+                    delta(dim, round, 1),
+                    1.0,
+                    0.5,
+                    kill_after * 10 + 1,
+                )
+                .unwrap();
+            assert!(ok);
+        } // crash
+        let m = ManagementService::with_storage(Arc::new(NoEval), seed, storage).unwrap();
+        let (desc, _, _) = m.task_status(task).unwrap();
+        assert_eq!(desc.round, kill_after, "recovery lands on the commit boundary");
+        for r in kill_after..total {
+            drive(&m, task, k, dim, 1000 + r * 10);
+        }
+
+        // Committed state must be bit-identical.
+        let reference = m_ref
+            .with_task(task, |t| Ok((t.global.params.clone(), t.global.version)))
+            .unwrap();
+        m.with_task(task, |t| {
+            assert_eq!(t.global.version, reference.1, "{agg}: version diverged");
+            assert_eq!(t.global.params, reference.0, "{agg}: weights diverged");
+            Ok(())
+        })
+        .unwrap();
+        let (desc, metrics, _) = m.task_status(task).unwrap();
+        assert_eq!(desc.state, florida::proto::TaskState::Completed);
+        assert_eq!(metrics.rounds.len() as u64, total);
+        assert_eq!(metrics.failed_rounds, 1, "the stranded round is retried");
+    });
+}
+
+#[test]
+fn prop_journal_torn_write_lands_on_last_valid_record() {
+    use florida::config::FsyncPolicy;
+    use florida::storage::journal::{replay, JournalRecord, WalJournal};
+    use florida::util::TempDir;
+
+    fn random_record(rng: &mut Rng) -> JournalRecord {
+        match rng.below(8) {
+            0 => JournalRecord::TaskCreated {
+                task_id: rng.next_u64(),
+                config_json: (0..rng.range(0, 40))
+                    .map(|_| char::from_u32(97 + rng.next_u32() % 26).unwrap())
+                    .collect(),
+            },
+            1 => JournalRecord::StateChanged {
+                task_id: rng.next_u64(),
+                state: florida::proto::TaskState::Running,
+            },
+            2 => JournalRecord::RoundStarted {
+                task_id: rng.next_u64(),
+                round: rng.next_u64(),
+                cohort: rng.next_u64(),
+            },
+            3 => JournalRecord::UploadAccepted {
+                task_id: rng.next_u64(),
+                client_id: rng.next_u64(),
+                round: rng.next_u64(),
+                weight: rng.next_f64() * 10.0,
+                loss: rng.next_f64(),
+            },
+            4 => JournalRecord::RoundCommitted {
+                task_id: rng.next_u64(),
+                round: rng.next_u64(),
+                version: rng.next_u64(),
+            },
+            5 => JournalRecord::RoundFailed {
+                task_id: rng.next_u64(),
+                round: rng.next_u64(),
+            },
+            6 => JournalRecord::TaskCompleted { task_id: rng.next_u64() },
+            _ => JournalRecord::Checkpointed {
+                task_id: rng.next_u64(),
+                version: rng.next_u64(),
+            },
+        }
+    }
+
+    property("journal-torn-write", 16, |_, rng| {
+        let tmp = TempDir::new("prop-torn").unwrap();
+        let path = tmp.path().join("t.journal");
+        let n = rng.range(1, 8);
+        let records: Vec<JournalRecord> = (0..n).map(|_| random_record(rng)).collect();
+        let mut frame_ends = Vec::with_capacity(n);
+        {
+            let mut j = WalJournal::create(&path, FsyncPolicy::Never).unwrap();
+            for r in &records {
+                j.append(r).unwrap();
+                frame_ends.push(std::fs::metadata(&path).unwrap().len() as usize);
+            }
+        }
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(*frame_ends.last().unwrap(), bytes.len());
+        // Truncate at EVERY byte offset: replay must never panic and
+        // must land on exactly the records whose frames are complete.
+        let cut_path = tmp.path().join("cut.journal");
+        for cut in 0..=bytes.len() {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            let got = replay(&cut_path).unwrap_or_else(|e| panic!("cut {cut}: {e}"));
+            let expect = frame_ends.iter().take_while(|&&end| end <= cut).count();
+            assert_eq!(got.len(), expect, "cut {cut}");
+            assert_eq!(got[..], records[..expect], "cut {cut}");
+        }
+    });
+}
+
+#[test]
 fn prop_selection_cohort_uniformity() {
     // Over many draws, every pool member is selected with roughly equal
     // frequency (no positional bias).

@@ -235,6 +235,117 @@ fn json_garbage_never_panics() {
 }
 
 #[test]
+fn corrupted_journal_errs_cleanly_never_panics_or_hangs() {
+    use florida::config::FsyncPolicy;
+    use florida::storage::journal::{replay, JournalRecord, WalJournal};
+    use florida::util::TempDir;
+
+    let tmp = TempDir::new("fuzz-journal").unwrap();
+    let path = tmp.path().join("t.journal");
+    let records = vec![
+        JournalRecord::TaskCreated {
+            task_id: 1,
+            config_json: "{\"task_name\":\"fz\"}".into(),
+        },
+        JournalRecord::RoundStarted { task_id: 1, round: 0, cohort: 8 },
+        JournalRecord::UploadAccepted {
+            task_id: 1,
+            client_id: 5,
+            round: 0,
+            weight: 1.0,
+            loss: 0.5,
+        },
+    ];
+    let mut j = WalJournal::create(&path, FsyncPolicy::Never).unwrap();
+    for r in &records {
+        j.append(r).unwrap();
+    }
+    drop(j);
+    let original = std::fs::read(&path).unwrap();
+    let target = tmp.path().join("corrupt.journal");
+
+    // Flipped checksum bytes: every bit of the first record's CRC field
+    // (bytes 4..8) must yield a clean Err — the frame is complete, so
+    // this is corruption, not a torn write.
+    for byte in 4..8 {
+        for bit in 0..8 {
+            let mut f = original.clone();
+            f[byte] ^= 1 << bit;
+            std::fs::write(&target, f).unwrap();
+            assert!(replay(&target).is_err(), "crc flip at {byte}.{bit}");
+        }
+    }
+
+    // Garbage length prefixes beyond MAX_RECORD_LEN: clean Err.
+    for garbage in [u32::MAX, 0x7FFF_FFFF, (1 << 24) + 1] {
+        let mut f = original.clone();
+        f[0..4].copy_from_slice(&garbage.to_le_bytes());
+        std::fs::write(&target, f).unwrap();
+        assert!(replay(&target).is_err(), "garbage length {garbage:#x}");
+    }
+
+    // Arbitrary single-byte flips anywhere: never a panic or hang, and
+    // any Ok outcome is a strict prefix of the original records (a flip
+    // can turn the tail into a torn write, never invent records).
+    let mut rng = Rng::new(77);
+    for _ in 0..2000 {
+        let mut f = original.clone();
+        let idx = rng.range(0, f.len());
+        f[idx] ^= 1 << rng.range(0, 8);
+        std::fs::write(&target, f).unwrap();
+        if let Ok(got) = replay(&target) {
+            assert!(got.len() <= records.len());
+            assert_eq!(got[..], records[..got.len()], "flip at {idx}");
+        }
+    }
+
+    // Pure random bytes: same contract.
+    for _ in 0..500 {
+        let len = rng.range(0, 120);
+        let f: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        std::fs::write(&target, f).unwrap();
+        let _ = replay(&target); // must return, any which way
+    }
+}
+
+#[test]
+fn corrupted_checkpoint_fails_recovery_cleanly() {
+    use florida::config::{FsyncPolicy, StorageConfig};
+    use florida::services::management::{ManagementService, NoEval};
+    use florida::storage::recover;
+    use florida::util::TempDir;
+
+    let tmp = TempDir::new("fuzz-ckpt").unwrap();
+    let storage = StorageConfig::new(tmp.path()).fsync(FsyncPolicy::Commit);
+    {
+        let m = ManagementService::with_storage(Arc::new(NoEval), 3, storage.clone()).unwrap();
+        let mut cfg = TaskConfig::default();
+        cfg.clients_per_round = 1;
+        m.create_task(cfg, ModelSnapshot::new(0, vec![0.5; 16]))
+            .unwrap();
+    }
+    // Sanity: the intact dir recovers.
+    assert_eq!(recover(tmp.path()).unwrap().len(), 1);
+
+    let ckpt = tmp.path().join("task-1.ckpt");
+    let good = std::fs::read(&ckpt).unwrap();
+    let mut rng = Rng::new(13);
+    for _ in 0..200 {
+        let mut f = good.clone();
+        let idx = rng.range(0, f.len());
+        f[idx] ^= 1 << rng.range(0, 8);
+        std::fs::write(&ckpt, f).unwrap();
+        // A checkpoint protects itself with a trailing CRC: any flip is
+        // a clean Err from both the storage sweep and the service boot.
+        assert!(recover(tmp.path()).is_err());
+        assert!(ManagementService::with_storage(Arc::new(NoEval), 3, storage.clone()).is_err());
+    }
+    // Restore the good bytes: recovery works again (no state was eaten).
+    std::fs::write(ckpt, good).unwrap();
+    assert_eq!(recover(tmp.path()).unwrap().len(), 1);
+}
+
+#[test]
 fn replayed_frames_idempotent_or_rejected() {
     use florida::client::FloridaClient;
     let s = server();

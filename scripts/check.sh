@@ -25,7 +25,10 @@ if [[ "$fast" == "0" ]]; then
   # (ROADMAP.md: `cargo build --release && cargo test -q`).
   echo "==> cargo build --release"
   cargo build --release
-  echo "==> cargo test -q"
+  # The suite above includes integration_recovery (a registered
+  # [[test]] target): the crash-recovery path runs fsync-Always against
+  # a tempdir, so CI exercises real fsyncs, not just the Noop seam.
+  echo "==> cargo test -q (incl. integration_recovery fsync path)"
   cargo test -q
 
   # Perf trajectory: snapshot the hot-path micro-bench into
