@@ -3,8 +3,11 @@
 //! Mirrors the paper's Fig-3 sample client: define an app + workflow,
 //! plug in a trainer, deploy a task through the fluent `TaskBuilder`,
 //! and let a handful of simulated devices train it to completion — all
-//! in-process, with the real protocol (attestation → registration →
-//! selection → rounds) and the round lifecycle observed through the
+//! in-process, with the real session protocol v2 (attestation →
+//! `SessionOpen` handshake negotiating the protocol version and
+//! submitting each device's heterogeneity profile → liveness-lease
+//! renewal via `SessionHeartbeat` → selection → rounds → graceful
+//! `SessionClose`) and the round lifecycle observed through the
 //! `TaskEvent` subscription stream instead of status polling.
 //!
 //! Run: `cargo run --release --example quickstart`
@@ -54,6 +57,9 @@ fn main() -> anyhow::Result<()> {
     let events = task.subscribe();
 
     // --- Devices: 4 simulated clients, each owning one data shard --------
+    // Each device opens a v2 session (device profile + liveness lease),
+    // auto-renews its lease across the round loop, and closes the
+    // session when the task completes.
     let fleet = FleetConfig {
         n_devices: 4,
         ..Default::default()
@@ -63,6 +69,10 @@ fn main() -> anyhow::Result<()> {
         let sampler = ShardSampler::new(Arc::clone(&train), shards[i].clone(), 0.5, i as u64);
         HloTrainer::new(runtime.handle(), preset.clone(), sampler)
     });
+    println!(
+        "live sessions after graceful close: {}",
+        server.sessions.live_count()
+    );
 
     // --- Results ----------------------------------------------------------
     println!("\nlifecycle (from the TaskEvent stream):");

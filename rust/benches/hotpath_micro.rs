@@ -198,6 +198,62 @@ fn main() {
         stub.heartbeat(cid).expect("heartbeat");
     }));
 
+    bench::section("session protocol v2 (open / renew / sweep)");
+    // The steady-state liveness costs at fleet scale: opening (or
+    // reopening) a session through the full router path, renewing a
+    // lease via SessionHeartbeat, and sweeping a 1k-session registry.
+    {
+        use florida::proto::{DeviceCaps, DeviceProfile, LoadHints, PROTO_V2};
+        use florida::services::SessionRegistry;
+
+        let sverdict = server.auth.authority().issue(
+            "bench-session-dev",
+            IntegrityTier::Device,
+            2,
+            u64::MAX / 2,
+        );
+        let profile = DeviceProfile::default();
+        snap.report(b.run("session_open", || {
+            let grant = stub
+                .open_session(
+                    "bench-session-dev",
+                    sverdict.clone(),
+                    DeviceCaps::default(),
+                    profile,
+                    PROTO_V2,
+                )
+                .expect("open");
+            assert!(grant.accepted, "{}", grant.reason);
+        }));
+        let grant = stub
+            .open_session(
+                "bench-session-dev",
+                sverdict,
+                DeviceCaps::default(),
+                profile,
+                PROTO_V2,
+            )
+            .expect("open");
+        snap.report(b.run("heartbeat_renew", || {
+            let ack = stub
+                .session_heartbeat(grant.client_id, grant.token, LoadHints::default())
+                .expect("renew");
+            assert!(ack.renewed, "{}", ack.reason);
+        }));
+        // Sweep cost: the per-tick scan over a 1k-session live registry
+        // (the recurring hot path — eviction itself is a map remove on
+        // top). Registry built OUTSIDE the timed closure so the number
+        // is the sweep, not 1024 opens.
+        let reg = SessionRegistry::new(1_000_000);
+        for c in 1..=1024u64 {
+            reg.open(c, DeviceProfile::default(), PROTO_V2, 0);
+        }
+        snap.report(b.run("evict_sweep", || {
+            assert!(reg.sweep(500_000).is_empty());
+        }));
+        assert_eq!(reg.sweep(2_000_000).len(), 1024, "expiry evicts the fleet");
+    }
+
     bench::section("round_engine_commit (full plaintext round, 32 clients)");
     // Orchestration cost of one committed round through the RoundEngine:
     // 32 joins → cohort formation → 32 fetches → 32 uploads → commit.

@@ -111,9 +111,12 @@ COMMANDS:
   scale      Run the §5.2 dummy-task scaling point
              [--clients N] [--rounds N] [--seed N]
              [--churn-restart [--kill-after N] [--state-dir DIR]]
+             [--device-mix]  mixed-tier population under the Tiered
+             policy: stragglers drop mid-round, leases expire, cohort
+             slots are backfilled; reports per-tier participation
   serve      Serve the platform over TCP
              --addr HOST:PORT [--task cfg.json] [--artifacts DIR]
-             [--dim N] [--no-attest] [--conns N]
+             [--dim N] [--no-attest] [--conns N] [--lease-ms N]
              [--state-dir DIR [--fsync always|commit|never]]
              With --state-dir, tasks journal + checkpoint there and are
              recovered at the next boot; 'q' + Enter checkpoints
@@ -239,6 +242,32 @@ fn cmd_scale(args: &Args) -> Result<()> {
     let n = args.usize_or("clients", 256)?;
     let rounds = args.usize_or("rounds", 3)? as u64;
     let seed = args.usize_or("seed", 7)? as u64;
+    if args.switch("device-mix") {
+        // Heterogeneity scenario: mixed-tier population, capability-aware
+        // (Tiered) selection, mid-round lease evictions + backfill.
+        let r = crate::simulator::scaling::run_device_mix(n.min(4096), rounds, seed)?;
+        println!(
+            "device-mix: {} clients (high {} / mid {} / low {}), {} rounds",
+            r.n_clients,
+            r.population_by_tier[2],
+            r.population_by_tier[1],
+            r.population_by_tier[0],
+            r.rounds_completed
+        );
+        println!(
+            "  per-tier uploads: high {}, mid {}, low {} (low enters via backfill)",
+            r.uploads_by_tier[2], r.uploads_by_tier[1], r.uploads_by_tier[0]
+        );
+        println!(
+            "  lease evictions {}, cohort backfills {}, failed rounds {}",
+            r.evicted, r.backfilled, r.failed_rounds
+        );
+        println!(
+            "  rounds to target: {} (wall {} ms)",
+            r.rounds_completed, r.wall_ms
+        );
+        return Ok(());
+    }
     if args.switch("churn-restart") {
         // Durability scenario: kill the server mid-experiment, recover
         // from the state dir, report rounds-to-reconverge.
@@ -311,6 +340,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             true,
         )),
     };
+    // Session liveness lease (protocol v2); default from SessionConfig.
+    let lease_ms = args.usize_or(
+        "lease-ms",
+        crate::config::SessionConfig::default().lease_ms as usize,
+    )? as u64;
+    server.sessions.set_lease_ms(lease_ms);
     // Optionally deploy a task at startup (JSON config → TaskBuilder) —
     // unless recovery already brought back a live task of that name.
     if let Some(cfg_path) = args.flag("task") {
@@ -423,6 +458,16 @@ fn render_event(ev: &TaskEvent) -> String {
         TaskEvent::RoundFailed { task_id, round } => {
             format!("task {task_id}: round {round} failed — retrying")
         }
+        TaskEvent::ClientEvicted {
+            task_id,
+            client_id,
+            round,
+        } => format!("task {task_id}: client {client_id} lease-evicted from round {round}"),
+        TaskEvent::CohortBackfilled {
+            task_id,
+            client_id,
+            round,
+        } => format!("task {task_id}: client {client_id} backfilled into round {round}"),
         TaskEvent::TaskCompleted { task_id } => format!("task {task_id}: completed"),
     }
 }
@@ -513,6 +558,12 @@ mod tests {
     fn dp_plan_runs() {
         let a = Args::parse(&argv("dp-plan --q 0.32 --sigma 0.08 --rounds 3")).unwrap();
         cmd_dp_plan(&a).unwrap();
+    }
+
+    #[test]
+    fn scale_device_mix_runs() {
+        let a = Args::parse(&argv("scale --device-mix --clients 12 --rounds 1")).unwrap();
+        cmd_scale(&a).unwrap();
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::proto::{decode_frame, encode_frame, Msg, WireCodec};
 use crate::services::FloridaServer;
 use crate::transport::{Connection, Dialer};
@@ -48,7 +48,14 @@ impl RemoteApi {
 impl ServerApi for RemoteApi {
     fn call(&self, msg: Msg) -> Result<Msg> {
         let frame = encode_frame(&msg, self.codec)?;
-        let mut conn = self.conn.lock().unwrap();
+        // A thread that panicked mid-call poisons the connection mutex.
+        // That is a transport fault for *this* caller, not a reason to
+        // propagate the panic into every SDK user sharing the connection.
+        let mut conn = self.conn.lock().map_err(|_| {
+            Error::Transport(
+                "connection mutex poisoned (a previous caller panicked mid-call)".into(),
+            )
+        })?;
         conn.send_owned(frame)?;
         let reply = conn.recv()?;
         let (m, _) = decode_frame(&reply)?;
@@ -63,4 +70,55 @@ pub fn direct(server: &Arc<FloridaServer>) -> Box<dyn ServerApi> {
     Box::new(DirectApi {
         server: Arc::clone(server),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    struct EchoConn;
+
+    impl Connection for EchoConn {
+        fn send(&mut self, _frame: &[u8]) -> Result<()> {
+            Ok(())
+        }
+
+        fn recv(&mut self) -> Result<Vec<u8>> {
+            encode_frame(
+                &Msg::Ack {
+                    ok: true,
+                    reason: String::new(),
+                },
+                WireCodec::Binary,
+            )
+        }
+
+        fn peer(&self) -> String {
+            "echo".into()
+        }
+    }
+
+    #[test]
+    fn poisoned_connection_mutex_is_a_transport_error_not_a_panic() {
+        let api = Arc::new(RemoteApi {
+            conn: Mutex::new(Box::new(EchoConn) as Box<dyn Connection>),
+            codec: WireCodec::Binary,
+        });
+        assert!(api.call(Msg::Heartbeat { client_id: 1 }).is_ok());
+        // One caller thread panics while holding the connection lock…
+        {
+            let api = Arc::clone(&api);
+            let _ = std::thread::spawn(move || {
+                let _guard = api.conn.lock().unwrap();
+                panic!("caller died mid-call");
+            })
+            .join();
+        }
+        // …and every other SDK user sees a clean transport error.
+        match api.call(Msg::Heartbeat { client_id: 1 }) {
+            Err(Error::Transport(m)) => assert!(m.contains("poisoned"), "{m}"),
+            other => panic!("expected Err(Error::Transport), got {other:?}"),
+        }
+    }
 }

@@ -3,20 +3,26 @@
 //! Mirrors the paper's sample client: the application developer supplies a
 //! `Trainer` (the paper's `trainer(model, iteration_id)` callback) inside
 //! a [`WorkflowDetails`], and [`FederatedLearningClient::execute`] runs
-//! the full protocol — attest, register, poll, join, (secagg setup),
-//! train, privatize, quantize+mask, upload, unmask service — until the
-//! task completes.
+//! the full protocol — attest, open a session (negotiating the protocol
+//! version and submitting the device's heterogeneity profile), poll,
+//! join, (secagg setup), train, privatize, quantize+mask, upload, unmask
+//! service — until the task completes. The SDK holds the liveness lease:
+//! it auto-renews at half-life via `SessionHeartbeat`, transparently
+//! reopens the session when the lease is lost, and negotiates down to
+//! the v1 one-shot `Register` flow against servers that don't speak v2.
 
 pub mod api;
 pub mod secagg_participant;
 pub mod stub;
+
+use std::time::Instant;
 
 use crate::crypto::attest::Verdict;
 use crate::crypto::x25519::KeyPair;
 use crate::dp::{DpConfig, GaussianMechanism};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
-use crate::proto::{rpc, RoundRole};
+use crate::proto::{rpc, DeviceProfile, LoadHints, RoundRole, PROTO_V2};
 use crate::quant::Quantizer;
 use crate::util::Rng;
 
@@ -68,13 +74,27 @@ pub struct ExecutionReport {
     pub task_completed: bool,
 }
 
+/// The SDK's side of a live session: the renewal credential plus the
+/// wall-clock bookkeeping for half-life auto-renewal.
+struct SessionState {
+    token: u64,
+    lease_ms: u64,
+    renewed_at: Instant,
+    /// Negotiated protocol version (v2 unless the server clamped it).
+    proto: u32,
+}
+
 /// The device-side client.
 pub struct FederatedLearningClient {
     stub: FloridaClient,
     device_id: String,
     verdict: Verdict,
     caps: crate::proto::DeviceCaps,
+    /// Heterogeneity profile submitted at `SessionOpen` (compute tier,
+    /// bandwidth class, availability window).
+    pub profile: DeviceProfile,
     client_id: u64,
+    session: Option<SessionState>,
     rng: Rng,
     /// Local DP (None → follow task config only for clipping-free upload).
     pub local_dp: Option<DpConfig>,
@@ -97,7 +117,9 @@ impl FederatedLearningClient {
             device_id: device_id.to_string(),
             verdict,
             caps,
+            profile: DeviceProfile::default(),
             client_id: 0,
+            session: None,
             rng: Rng::new(seed),
             local_dp: None,
             dropout_prob: 0.0,
@@ -109,7 +131,13 @@ impl FederatedLearningClient {
         self.client_id
     }
 
-    /// Attest + register with the selection service.
+    /// The negotiated protocol version, if a session is live.
+    pub fn session_proto(&self) -> Option<u32> {
+        self.session.as_ref().map(|s| s.proto)
+    }
+
+    /// Attest + register with the selection service (the v1 one-shot
+    /// flow, kept as the negotiation fallback).
     pub fn register(&mut self) -> Result<u64> {
         let ack =
             self.stub
@@ -119,6 +147,118 @@ impl FederatedLearningClient {
             Ok(ack.client_id)
         } else {
             Err(Error::Attestation(ack.reason))
+        }
+    }
+
+    /// Open a negotiated v2 session: attest, register, submit the device
+    /// profile, receive a token + liveness lease. A server that cannot
+    /// route `SessionOpen` (a v1 deployment) answers with an
+    /// `ErrorReply`, which the stub surfaces as `Err(Error::Server)` —
+    /// the SDK then falls back to the one-shot `register` flow, so the
+    /// protocol redesign is a migration, not a break.
+    pub fn open_session(&mut self) -> Result<u64> {
+        match self.stub.open_session(
+            &self.device_id,
+            self.verdict.clone(),
+            self.caps.clone(),
+            self.profile,
+            PROTO_V2,
+        ) {
+            Ok(grant) if grant.accepted => {
+                self.client_id = grant.client_id;
+                self.session = Some(SessionState {
+                    token: grant.token,
+                    lease_ms: grant.lease_ms.max(1),
+                    renewed_at: Instant::now(),
+                    proto: grant.proto,
+                });
+                Ok(grant.client_id)
+            }
+            Ok(grant) => Err(Error::Attestation(grant.reason)),
+            // Fall back to the one-shot flow ONLY when the server cannot
+            // speak the frame at all (a v1 router answers "unexpected
+            // message …" / "… cannot handle …"). Transient server errors
+            // (backpressure sheds, auth hiccups) propagate instead — a
+            // retry must not burn the attestation verdict on `register`.
+            Err(Error::Server(message))
+                if message.contains("unexpected message")
+                    || message.contains("cannot handle") =>
+            {
+                self.session = None;
+                self.register()
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Make sure the device can act as a principal: open a session (with
+    /// v1 fallback) the first time, and best-effort *reopen* one when the
+    /// device is registered but lease-less (e.g. the previous task closed
+    /// its session) — so a multi-task client keeps its profile and lease
+    /// instead of degrading to sessionless forever. Reopen failures (v1
+    /// server, single-use attestation verdict) are non-fatal.
+    pub fn ensure_session(&mut self) -> Result<u64> {
+        if self.client_id == 0 {
+            return self.open_session();
+        }
+        if self.session.is_none() {
+            if let Err(e) = self.open_session() {
+                log::debug!(
+                    "device {}: session reopen failed ({e}); continuing sessionless",
+                    self.device_id
+                );
+            }
+        }
+        Ok(self.client_id)
+    }
+
+    /// Auto-renew the lease at half-life. A refused renewal (lease
+    /// expired, token rotated, server restarted) transparently reopens
+    /// the session; if reopening fails too (e.g. single-use attestation
+    /// verdicts), the client degrades to the sessionless v1 flow rather
+    /// than aborting the round loop.
+    fn maybe_renew(&mut self) {
+        let (token, due) = match &self.session {
+            Some(s) => (
+                s.token,
+                s.renewed_at.elapsed().as_millis() as u64 >= s.lease_ms / 2,
+            ),
+            None => return,
+        };
+        if !due {
+            return;
+        }
+        let hints = LoadHints {
+            load: 0.0,
+            battery: 1.0,
+            charging: self.caps.charging,
+        };
+        match self.stub.session_heartbeat(self.client_id, token, hints) {
+            Ok(ack) if ack.renewed => {
+                if let Some(s) = &mut self.session {
+                    s.lease_ms = ack.lease_ms.max(1);
+                    s.renewed_at = Instant::now();
+                }
+            }
+            Ok(_) | Err(Error::Server(_)) => {
+                log::debug!("device {}: lease lost — reopening session", self.device_id);
+                self.session = None;
+                if let Err(e) = self.open_session() {
+                    log::debug!(
+                        "device {}: session reopen failed ({e}); continuing sessionless",
+                        self.device_id
+                    );
+                }
+            }
+            // Transport hiccup: keep the session, retry at the next poll.
+            Err(_) => {}
+        }
+    }
+
+    /// Release the lease (graceful departure); best-effort.
+    pub fn close_session(&mut self) {
+        if let Some(s) = self.session.take() {
+            let _ = self.stub.session_close(self.client_id, s.token);
         }
     }
 
@@ -133,9 +273,7 @@ impl FederatedLearningClient {
     /// Run a workflow to completion (the paper's `client.execute(...)`).
     pub fn execute(&mut self, workflow: &mut WorkflowDetails) -> Result<ExecutionReport> {
         let mut report = ExecutionReport::default();
-        if self.client_id == 0 {
-            self.register()?;
-        }
+        self.ensure_session()?;
         let task_id = loop {
             if let Some(t) = self.poll_task(&workflow.app_name, &workflow.workflow_name)? {
                 break t;
@@ -160,7 +298,11 @@ impl FederatedLearningClient {
         let mut train_keys: Vec<(u64, KeyPair)> = Vec::new();
         let mut joined = false;
         let mut idle_polls = 0u32;
+        self.ensure_session()?;
         loop {
+            // Keep the liveness lease alive across the whole round loop;
+            // an expired lease would evict us from the open cohort.
+            self.maybe_renew();
             if !joined {
                 // Fresh keypair per join attempt; committed only if the
                 // join is accepted — the server's roster keeps the pubkey
@@ -191,6 +333,7 @@ impl FederatedLearningClient {
             match role {
                 RoundRole::TaskDone => {
                     report.task_completed = true;
+                    self.close_session(); // graceful departure: release the lease
                     return Ok(());
                 }
                 RoundRole::Wait => {
@@ -250,6 +393,9 @@ impl FederatedLearningClient {
                     let model = ModelSnapshot::from_compressed(&ri.model_blob)?;
                     let outcome =
                         trainer.train(&model, ri.round, ri.train.lr, ri.train.prox_mu)?;
+                    // Training can outlast the lease half-life; renew
+                    // before uploading so the slot is still ours.
+                    self.maybe_renew();
                     if self.rng.chance(self.dropout_prob) {
                         // Simulated device failure after training — the
                         // upload never happens; the server recovers via

@@ -11,7 +11,7 @@ use crate::crypto::attest::Verdict;
 use crate::error::Result;
 use crate::proto::msg::{PeerShare, RecoveredShare};
 use crate::proto::rpc::{self, Reply, Rpc};
-use crate::proto::{DeviceCaps, RoundRole, TaskDescriptor, WireCodec};
+use crate::proto::{DeviceCaps, DeviceProfile, LoadHints, RoundRole, TaskDescriptor, WireCodec};
 use crate::services::FloridaServer;
 use crate::transport::Dialer;
 
@@ -140,5 +140,46 @@ impl FloridaClient {
 
     pub fn heartbeat(&self, client_id: u64) -> Result<()> {
         self.call(rpc::Heartbeat { client_id }).map(|_| ())
+    }
+
+    // ---- session protocol v2 ---------------------------------------------
+
+    /// Open a negotiated session (attest + register + device profile).
+    /// Against a v1 server this surfaces as `Err(Error::Server)` — the
+    /// SDK's cue to fall back to the one-shot `register` flow.
+    pub fn open_session(
+        &self,
+        device_id: &str,
+        verdict: Verdict,
+        caps: DeviceCaps,
+        profile: DeviceProfile,
+        proto_max: u32,
+    ) -> Result<rpc::SessionGrant> {
+        self.call(rpc::SessionOpen {
+            device_id: device_id.to_string(),
+            verdict,
+            caps,
+            profile,
+            proto_max,
+        })
+    }
+
+    /// Renew the liveness lease with load/battery hints.
+    pub fn session_heartbeat(
+        &self,
+        client_id: u64,
+        token: u64,
+        hints: LoadHints,
+    ) -> Result<rpc::LeaseAck> {
+        self.call(rpc::SessionHeartbeat {
+            client_id,
+            token,
+            hints,
+        })
+    }
+
+    /// Release the lease early (graceful departure).
+    pub fn session_close(&self, client_id: u64, token: u64) -> Result<()> {
+        self.call(rpc::SessionClose { client_id, token }).map(|_| ())
     }
 }

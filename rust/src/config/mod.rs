@@ -76,6 +76,21 @@ impl FsyncPolicy {
     }
 }
 
+/// Server-side knobs for the session protocol v2 (liveness leases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionConfig {
+    /// Liveness lease granted at `SessionOpen` and on every heartbeat
+    /// renewal, ms. An un-renewed lease is swept and the client evicted
+    /// from any open cohort (its slot backfilled from the join pool).
+    pub lease_ms: u64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { lease_ms: 30_000 }
+    }
+}
+
 /// Where (and how durably) the orchestrator persists task state.
 #[derive(Clone, Debug)]
 pub struct StorageConfig {

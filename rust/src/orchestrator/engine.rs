@@ -737,6 +737,91 @@ impl RoundEngine {
         Ok((true, String::new()))
     }
 
+    /// Remove clients whose liveness lease expired (session sweep) and
+    /// repair the open cohort instead of waiting out the deadline.
+    ///
+    /// Evicted clients leave the waiting pools in every mode. In a
+    /// plaintext sync round, a cohort member that has not uploaded is
+    /// dropped from the cohort and its slot backfilled from the join
+    /// pool (the over-provisioned extras, when the task runs the
+    /// `OverProvision` policy); if that leaves the shrunken cohort fully
+    /// reported, the round commits immediately. Secure-aggregation
+    /// rounds are left alone: an evicted member is an ordinary dropout
+    /// there, and the unmask path already recovers its pairwise masks.
+    pub fn evict_clients(&mut self, evicted: &[u64], eval: &dyn Evaluator, now_ms: u64) {
+        if evicted.is_empty() || self.state != TaskState::Running {
+            return;
+        }
+        self.join_pool.retain(|&(c, _)| !evicted.contains(&c));
+        for c in evicted {
+            self.async_joined.remove(c);
+        }
+        let mut removed: Vec<u64> = Vec::new();
+        let mut drafted: Vec<u64> = Vec::new();
+        let progress = match &mut self.phase {
+            Phase::Training {
+                secagg: None,
+                uploaded,
+                deadline_ms,
+                ..
+            } => {
+                for &c in evicted {
+                    // An already-folded upload stays counted; only
+                    // members the round is still waiting on are replaced.
+                    if !uploaded.contains(&c) && self.cohort.remove(&c) {
+                        removed.push(c);
+                        if let Some((draftee, _pk)) = self.join_pool.pop_front() {
+                            self.cohort.insert(draftee);
+                            drafted.push(draftee);
+                        }
+                    }
+                }
+                if removed.is_empty() {
+                    None
+                } else {
+                    Some(RoundProgress {
+                        cohort: self.cohort.len(),
+                        reported: uploaded.len(),
+                        now_ms,
+                        deadline_ms: *deadline_ms,
+                        min_report_fraction: self.config.min_report_fraction,
+                    })
+                }
+            }
+            _ => None,
+        };
+        if removed.is_empty() && drafted.is_empty() {
+            return;
+        }
+        let round = self.round;
+        log::info!(
+            "task {}: round {round} evicted {} expired client(s), backfilled {}",
+            self.id,
+            removed.len(),
+            drafted.len()
+        );
+        for &c in &removed {
+            self.emit(TaskEvent::ClientEvicted {
+                task_id: self.id,
+                client_id: c,
+                round,
+            });
+        }
+        for &c in &drafted {
+            self.emit(TaskEvent::CohortBackfilled {
+                task_id: self.id,
+                client_id: c,
+                round,
+            });
+        }
+        // The shrunken cohort may already be fully reported.
+        if let Some(p) = progress {
+            if p.cohort > 0 && self.pacing.assess(&p) == PacingDecision::Commit {
+                self.try_commit(eval, now_ms);
+            }
+        }
+    }
+
     /// Deadline sweep: advance degraded cohorts and consult the pacing
     /// policy once the open round's deadline has passed.
     pub fn tick(&mut self, eval: &dyn Evaluator, dir: &dyn ClientDirectory, now_ms: u64) {
@@ -1272,6 +1357,122 @@ mod tests {
         e.tick(&NoEval, &dir, 2000);
         assert_eq!(e.state, TaskState::Completed);
         assert_eq!(e.metrics.rounds[0].participants, 4);
+    }
+
+    #[test]
+    fn eviction_mid_round_backfills_from_the_pool() {
+        let (mut e, bus) = engine(small_cfg(2, 1), 2);
+        let stream = bus.subscribe();
+        let dir = NullDirectory;
+        for c in 1..=3u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+        }
+        // Cohort of 2 forms; the third joiner stays queued.
+        let mut cohort = Vec::new();
+        let mut queued = 0u64;
+        for c in 1..=3u64 {
+            match e.fetch(c, &dir, 0).unwrap() {
+                RoundRole::Train(_) => cohort.push(c),
+                RoundRole::Wait => queued = c,
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(cohort.len(), 2);
+        assert_ne!(queued, 0);
+        // One cohort member's lease expires before it uploads: its slot
+        // is backfilled by the queued joiner, not waited out.
+        let (evicted, survivor) = (cohort[0], cohort[1]);
+        e.evict_clients(&[evicted], &NoEval, 100);
+        assert!(matches!(
+            e.fetch(queued, &dir, 100).unwrap(),
+            RoundRole::Train(_)
+        ));
+        assert!(matches!(
+            e.fetch(evicted, &dir, 100).unwrap(),
+            RoundRole::NotSelected
+        ));
+        // The evicted client's upload is now refused.
+        let (ok, why) = e
+            .accept_plain(evicted, 0, 0, vec![0.1; 2], 1.0, 0.1, &NoEval, 110)
+            .unwrap();
+        assert!(!ok);
+        assert!(why.contains("not in cohort"), "{why}");
+        for c in [survivor, queued] {
+            let (ok, why) = e
+                .accept_plain(c, 0, 0, vec![0.1; 2], 1.0, 0.1, &NoEval, 120)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 2);
+        let kinds: Vec<&'static str> = stream.drain().iter().map(|ev| ev.kind()).collect();
+        assert!(kinds.contains(&"client_evicted"));
+        assert!(kinds.contains(&"cohort_backfilled"));
+    }
+
+    #[test]
+    fn eviction_with_empty_pool_commits_fully_reported_shrunken_cohort() {
+        let (mut e, _bus) = engine(small_cfg(2, 1), 2);
+        let dir = NullDirectory;
+        for c in 1..=2u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+            let _ = e.fetch(c, &dir, 0).unwrap();
+        }
+        let (ok, why) = e
+            .accept_plain(1, 0, 0, vec![0.1; 2], 1.0, 0.1, &NoEval, 10)
+            .unwrap();
+        assert!(ok, "{why}");
+        // Client 2 goes dark; no replacement available. The shrunken
+        // cohort is fully reported → the round commits right away
+        // instead of waiting for the deadline.
+        e.evict_clients(&[2], &NoEval, 100);
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 1);
+    }
+
+    #[test]
+    fn eviction_of_uploaded_member_keeps_its_contribution() {
+        let (mut e, _bus) = engine(small_cfg(2, 1), 2);
+        let dir = NullDirectory;
+        for c in 1..=2u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+            let _ = e.fetch(c, &dir, 0).unwrap();
+        }
+        let (ok, _) = e
+            .accept_plain(1, 0, 0, vec![0.1; 2], 1.0, 0.1, &NoEval, 10)
+            .unwrap();
+        assert!(ok);
+        // Client 1 already uploaded: evicting it must not strand the
+        // round (cohort unchanged, fold kept) — client 2 finishes.
+        e.evict_clients(&[1], &NoEval, 50);
+        assert_eq!(e.phase_name(), "training");
+        let (ok, _) = e
+            .accept_plain(2, 0, 0, vec![0.1; 2], 1.0, 0.1, &NoEval, 60)
+            .unwrap();
+        assert!(ok);
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 2);
+    }
+
+    #[test]
+    fn eviction_leaves_secagg_rounds_to_the_unmask_path() {
+        let mut cfg = small_cfg(2, 1);
+        cfg.secure_agg = true;
+        cfg.vg_size = 2;
+        let (mut e, bus) = engine(cfg, 2);
+        let stream = bus.subscribe();
+        let dir = NullDirectory;
+        for c in 1..=2u64 {
+            e.join(c, [c as u8; 32], 0).unwrap();
+            let _ = e.fetch(c, &dir, 0).unwrap();
+        }
+        assert_eq!(e.phase_name(), "training");
+        // A masked member's masks are already in its peers' sums —
+        // eviction must not tear the cohort; dropout recovery owns it.
+        e.evict_clients(&[1], &NoEval, 100);
+        assert_eq!(e.phase_name(), "training");
+        assert!(matches!(e.fetch(1, &dir, 100).unwrap(), RoundRole::Train(_)));
+        assert!(!stream.drain().iter().any(|ev| ev.kind() == "client_evicted"));
     }
 
     #[test]

@@ -44,6 +44,19 @@ pub enum TaskEvent {
     },
     /// The round was abandoned and will be retried (joiners stay queued).
     RoundFailed { task_id: u64, round: u64 },
+    /// A cohort member's liveness lease expired mid-round and it was
+    /// removed from the open cohort (its waiting-pool entries too).
+    ClientEvicted {
+        task_id: u64,
+        client_id: u64,
+        round: u64,
+    },
+    /// An evicted cohort slot was refilled from the waiting join pool.
+    CohortBackfilled {
+        task_id: u64,
+        client_id: u64,
+        round: u64,
+    },
     /// The task reached its final round and completed.
     TaskCompleted { task_id: u64 },
 }
@@ -58,6 +71,8 @@ impl TaskEvent {
             | TaskEvent::RoundCommitted { task_id, .. }
             | TaskEvent::QuorumMissed { task_id, .. }
             | TaskEvent::RoundFailed { task_id, .. }
+            | TaskEvent::ClientEvicted { task_id, .. }
+            | TaskEvent::CohortBackfilled { task_id, .. }
             | TaskEvent::TaskCompleted { task_id } => *task_id,
         }
     }
@@ -71,6 +86,8 @@ impl TaskEvent {
             TaskEvent::RoundCommitted { .. } => "round_committed",
             TaskEvent::QuorumMissed { .. } => "quorum_missed",
             TaskEvent::RoundFailed { .. } => "round_failed",
+            TaskEvent::ClientEvicted { .. } => "client_evicted",
+            TaskEvent::CohortBackfilled { .. } => "cohort_backfilled",
             TaskEvent::TaskCompleted { .. } => "task_completed",
         }
     }

@@ -14,7 +14,7 @@
 //! The third seam, the aggregation strategy, already exists as
 //! [`crate::aggregation::Aggregator`].
 
-use crate::proto::DeviceCaps;
+use crate::proto::{DeviceCaps, DeviceProfile};
 use crate::util::Rng;
 
 // ---------------------------------------------------------------------------
@@ -22,9 +22,17 @@ use crate::util::Rng;
 // ---------------------------------------------------------------------------
 
 /// Read-only view of the client registry a cohort policy may consult
-/// (implemented by `SelectionService`; `NullDirectory` for tests/benches).
+/// (implemented by `SelectionService`, and by the session-aware
+/// `services::LiveDirectory`; `NullDirectory` for tests/benches).
 pub trait ClientDirectory {
     fn caps_of(&self, client_id: u64) -> Option<DeviceCaps>;
+
+    /// The heterogeneity profile the client reported at `SessionOpen`
+    /// (protocol v2). `None` for sessionless v1 clients — directories
+    /// without a session view keep the default.
+    fn profile_of(&self, _client_id: u64) -> Option<DeviceProfile> {
+        None
+    }
 }
 
 /// A directory that knows nothing — every client reads as capless.
@@ -100,10 +108,24 @@ impl CohortPolicy for UniformRandom {
     }
 }
 
-/// Prefers higher-integrity devices: candidates are ranked by
-/// `DeviceCaps::tier` (shuffled within a tier for fairness) and the top
-/// `target` selected. Capless clients rank lowest.
+/// Partitions by reported capability: candidates are ranked by the
+/// compute tier from their session's [`DeviceProfile`] (the paper's
+/// heterogeneity axis), falling back to `DeviceCaps::tier` for
+/// sessionless v1 clients, shuffled within a rank for fairness; the top
+/// `target` are selected. Capless clients rank lowest.
 pub struct Tiered;
+
+/// Rank for tier-aware selection: profiled compute tiers sit strictly
+/// above integrity-only ranks, so a v2 `Low` device still outranks a
+/// capless v1 one but never a profiled `Mid`/`High`.
+fn capability_rank(dir: &dyn ClientDirectory, client_id: u64) -> u8 {
+    if let Some(profile) = dir.profile_of(client_id) {
+        return 4 + profile.compute_tier as u8; // 4..=6
+    }
+    dir.caps_of(client_id)
+        .map(|caps| caps.tier as u8) // 0..=2 (IntegrityTier)
+        .unwrap_or(0)
+}
 
 impl CohortPolicy for Tiered {
     fn name(&self) -> &'static str {
@@ -116,15 +138,8 @@ impl CohortPolicy for Tiered {
         }
         let mut ranked: Vec<u64> = ctx.pool.to_vec();
         rng.shuffle(&mut ranked);
-        // Stable sort keeps the shuffle order within equal tiers.
-        ranked.sort_by_key(|&c| {
-            std::cmp::Reverse(
-                ctx.directory
-                    .caps_of(c)
-                    .map(|caps| caps.tier as u8)
-                    .unwrap_or(0),
-            )
-        });
+        // Stable sort keeps the shuffle order within equal ranks.
+        ranked.sort_by_key(|&c| std::cmp::Reverse(capability_rank(ctx.directory, c)));
         let mut cohort: Vec<u64> = ranked.into_iter().take(ctx.target).collect();
         cohort.sort_unstable();
         Some(cohort)
@@ -347,6 +362,54 @@ mod tests {
         assert!(UniformRandom
             .form(&ctx(&pool, 4, 4, 99_999, &dir), &mut rng)
             .is_none());
+    }
+
+    /// Directory serving v2 profiles: odd ids High, even ids Low.
+    struct ProfileDir;
+
+    impl ClientDirectory for ProfileDir {
+        fn caps_of(&self, _client_id: u64) -> Option<DeviceCaps> {
+            Some(DeviceCaps::default())
+        }
+
+        fn profile_of(&self, client_id: u64) -> Option<DeviceProfile> {
+            Some(DeviceProfile {
+                compute_tier: if client_id % 2 == 1 {
+                    crate::proto::ComputeTier::High
+                } else {
+                    crate::proto::ComputeTier::Low
+                },
+                ..Default::default()
+            })
+        }
+    }
+
+    #[test]
+    fn tiered_partitions_by_reported_compute_tier() {
+        let mut rng = Rng::new(9);
+        let dir = ProfileDir;
+        let pool: Vec<u64> = (1..=8).collect(); // 1,3,5,7 High; 2,4,6,8 Low
+        let cohort = Tiered.form(&ctx(&pool, 4, 4, 0, &dir), &mut rng).unwrap();
+        assert_eq!(cohort, vec![1, 3, 5, 7], "High tier fills the cohort");
+        // A profiled Low device still outranks an integrity-only one.
+        struct MixedDir;
+        impl ClientDirectory for MixedDir {
+            fn caps_of(&self, _c: u64) -> Option<DeviceCaps> {
+                let mut caps = DeviceCaps::default();
+                caps.tier = IntegrityTier::Strong; // best integrity rank
+                Some(caps)
+            }
+            fn profile_of(&self, c: u64) -> Option<DeviceProfile> {
+                (c == 2).then(|| DeviceProfile {
+                    compute_tier: crate::proto::ComputeTier::Low,
+                    ..Default::default()
+                })
+            }
+        }
+        let cohort = Tiered
+            .form(&ctx(&[1, 2], 1, 1, 0, &MixedDir), &mut rng)
+            .unwrap();
+        assert_eq!(cohort, vec![2], "session profile beats integrity-only rank");
     }
 
     #[test]

@@ -12,6 +12,199 @@ use crate::util::json::Json;
 
 pub use msg::{decode_frame, encode_frame, Msg, WireCodec};
 
+// ---------------------------------------------------------------------------
+// Session protocol v2: capability negotiation + liveness leases
+// ---------------------------------------------------------------------------
+
+/// Protocol v1: the original one-shot surface (`Register` → `PollTask` →
+/// `JoinRound` → …) with fire-and-forget heartbeats.
+pub const PROTO_V1: u32 = 1;
+/// Protocol v2: negotiated sessions — `SessionOpen` submits a
+/// [`DeviceProfile`], the server answers with a token + liveness lease,
+/// and `SessionHeartbeat` renews the lease carrying [`LoadHints`].
+pub const PROTO_V2: u32 = 2;
+
+/// Version negotiation: the server grants the highest version both sides
+/// speak. Unknown future versions negotiate *down* to v2; a nonsensical
+/// 0 negotiates up to v1 — the handshake never fails on version alone.
+pub fn negotiate_proto(client_max: u32) -> u32 {
+    client_max.clamp(PROTO_V1, PROTO_V2)
+}
+
+/// Compute tier a device reports about itself (the paper's "wide variety
+/// of performance characteristics" — §1). Orders low → high so
+/// capability-aware cohort policies can rank on it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ComputeTier {
+    Low = 0,
+    Mid = 1,
+    High = 2,
+}
+
+impl ComputeTier {
+    pub fn from_u8(v: u8) -> Option<ComputeTier> {
+        Some(match v {
+            0 => ComputeTier::Low,
+            1 => ComputeTier::Mid,
+            2 => ComputeTier::High,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeTier::Low => "low",
+            ComputeTier::Mid => "mid",
+            ComputeTier::High => "high",
+        }
+    }
+}
+
+/// Bandwidth class a device reports about its network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BandwidthClass {
+    Constrained = 0,
+    Broadband = 1,
+    Fast = 2,
+}
+
+impl BandwidthClass {
+    pub fn from_u8(v: u8) -> Option<BandwidthClass> {
+        Some(match v {
+            0 => BandwidthClass::Constrained,
+            1 => BandwidthClass::Broadband,
+            2 => BandwidthClass::Fast,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BandwidthClass::Constrained => "constrained",
+            BandwidthClass::Broadband => "broadband",
+            BandwidthClass::Fast => "fast",
+        }
+    }
+}
+
+/// The heterogeneity axes a device submits at `SessionOpen` (platform
+/// identity already rides in [`DeviceCaps`]): compute tier, bandwidth
+/// class, and how long the device expects to remain available.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceProfile {
+    pub compute_tier: ComputeTier,
+    pub bandwidth: BandwidthClass,
+    /// Expected availability window, ms (0 = unknown). A duration, so
+    /// it rides JSON as a number — keep below 2^53 (f64-exact); only
+    /// credentials (tokens, nonces) get the string encoding.
+    pub avail_window_ms: u64,
+}
+
+impl Default for DeviceProfile {
+    fn default() -> Self {
+        DeviceProfile {
+            compute_tier: ComputeTier::Mid,
+            bandwidth: BandwidthClass::Broadband,
+            avail_window_ms: 0,
+        }
+    }
+}
+
+impl Wire for DeviceProfile {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(self.compute_tier as u8);
+        w.put_u8(self.bandwidth as u8);
+        w.put_u64(self.avail_window_ms);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(DeviceProfile {
+            compute_tier: ComputeTier::from_u8(r.get_u8()?)
+                .ok_or_else(|| Error::Codec("bad compute tier".into()))?,
+            bandwidth: BandwidthClass::from_u8(r.get_u8()?)
+                .ok_or_else(|| Error::Codec("bad bandwidth class".into()))?,
+            avail_window_ms: r.get_u64()?,
+        })
+    }
+}
+
+impl DeviceProfile {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("compute_tier", self.compute_tier as u8 as u64)
+            .set("bandwidth", self.bandwidth as u8 as u64)
+            .set("avail_window_ms", self.avail_window_ms)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(DeviceProfile {
+            compute_tier: ComputeTier::from_u8(
+                j.req_usize("compute_tier").map_err(Error::Codec)? as u8,
+            )
+            .ok_or_else(|| Error::Codec("bad compute tier".into()))?,
+            bandwidth: BandwidthClass::from_u8(
+                j.req_usize("bandwidth").map_err(Error::Codec)? as u8,
+            )
+            .ok_or_else(|| Error::Codec("bad bandwidth class".into()))?,
+            avail_window_ms: j.opt_usize("avail_window_ms", 0) as u64,
+        })
+    }
+}
+
+/// Load/battery hints carried by `SessionHeartbeat` (the lease-renewal
+/// path): the server's view of how loaded the live fleet is.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LoadHints {
+    /// CPU/utilization load, 0..1.
+    pub load: f32,
+    /// Battery level, 0..1 (negative = unknown / mains-powered).
+    pub battery: f32,
+    pub charging: bool,
+}
+
+impl Default for LoadHints {
+    fn default() -> Self {
+        LoadHints {
+            load: 0.0,
+            battery: 1.0,
+            charging: true,
+        }
+    }
+}
+
+impl Wire for LoadHints {
+    fn encode(&self, w: &mut Writer) {
+        w.put_f32(self.load);
+        w.put_f32(self.battery);
+        w.put_bool(self.charging);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(LoadHints {
+            load: r.get_f32()?,
+            battery: r.get_f32()?,
+            charging: r.get_bool()?,
+        })
+    }
+}
+
+impl LoadHints {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("load", self.load as f64)
+            .set("battery", self.battery as f64)
+            .set("charging", self.charging)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(LoadHints {
+            load: j.opt_f64("load", 0.0) as f32,
+            battery: j.opt_f64("battery", 1.0) as f32,
+            charging: j.opt_bool("charging", true),
+        })
+    }
+}
+
 /// Device capabilities reported at registration (heterogeneity surface).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeviceCaps {
@@ -533,5 +726,52 @@ mod tests {
         assert_eq!(TaskState::Running.name(), "running");
         assert_eq!(TaskState::from_u8(3), Some(TaskState::Completed));
         assert_eq!(TaskState::from_u8(99), None);
+    }
+
+    #[test]
+    fn proto_negotiation_clamps_both_ways() {
+        assert_eq!(negotiate_proto(PROTO_V1), PROTO_V1);
+        assert_eq!(negotiate_proto(PROTO_V2), PROTO_V2);
+        // A future v3 client negotiates down; garbage 0 negotiates up.
+        assert_eq!(negotiate_proto(99), PROTO_V2);
+        assert_eq!(negotiate_proto(0), PROTO_V1);
+    }
+
+    #[test]
+    fn device_profile_roundtrips_wire_and_json() {
+        let p = DeviceProfile {
+            compute_tier: ComputeTier::High,
+            bandwidth: BandwidthClass::Constrained,
+            avail_window_ms: 600_000,
+        };
+        assert_eq!(DeviceProfile::from_bytes(&p.to_bytes()).unwrap(), p);
+        assert_eq!(DeviceProfile::from_json(&p.to_json()).unwrap(), p);
+        assert_eq!(
+            DeviceProfile::from_json(&DeviceProfile::default().to_json()).unwrap(),
+            DeviceProfile::default()
+        );
+        // Tiers order low → high for capability-aware ranking.
+        assert!(ComputeTier::Low < ComputeTier::Mid);
+        assert!(ComputeTier::Mid < ComputeTier::High);
+        assert_eq!(ComputeTier::from_u8(7), None);
+        assert_eq!(BandwidthClass::from_u8(7), None);
+        assert_eq!(ComputeTier::High.name(), "high");
+        assert_eq!(BandwidthClass::Fast.name(), "fast");
+    }
+
+    #[test]
+    fn load_hints_roundtrip_wire_and_json() {
+        let h = LoadHints {
+            load: 0.75,
+            battery: 0.5,
+            charging: false,
+        };
+        assert_eq!(LoadHints::from_bytes(&h.to_bytes()).unwrap(), h);
+        assert_eq!(LoadHints::from_json(&h.to_json()).unwrap(), h);
+        assert_eq!(
+            LoadHints::from_json(&Json::obj()).unwrap(),
+            LoadHints::default(),
+            "hints fields are all optional in JSON"
+        );
     }
 }

@@ -19,7 +19,8 @@ use crate::util::base64;
 use crate::util::json::{parse as json_parse, Json};
 
 use super::{
-    DeviceCaps, RoundInstruction, RoundRole, TaskDescriptor, UnmaskRequest,
+    DeviceCaps, DeviceProfile, LoadHints, RoundInstruction, RoundRole, TaskDescriptor,
+    UnmaskRequest,
 };
 
 /// Which encoding a client speaks.
@@ -104,6 +105,30 @@ pub enum Msg {
         client_id: u64,
     },
 
+    // ---- session protocol v2 (client → server) ---------------------------
+    /// Open a negotiated session: attest + register + submit the device's
+    /// heterogeneity profile + the highest protocol version the client
+    /// speaks. Replaces the bare `Register` for v2 clients; v1 clients
+    /// keep sending `Register` (negotiation fallback).
+    SessionOpen {
+        device_id: String,
+        verdict: Verdict,
+        caps: DeviceCaps,
+        profile: DeviceProfile,
+        proto_max: u32,
+    },
+    /// Renew the liveness lease, carrying load/battery hints.
+    SessionHeartbeat {
+        client_id: u64,
+        token: u64,
+        hints: LoadHints,
+    },
+    /// Release the lease early (graceful departure).
+    SessionClose {
+        client_id: u64,
+        token: u64,
+    },
+
     // ---- server → client -------------------------------------------------
     RegisterAck {
         accepted: bool,
@@ -135,6 +160,26 @@ pub enum Msg {
     ErrorReply {
         message: String,
     },
+
+    // ---- session protocol v2 (server → client) ---------------------------
+    /// Session handshake outcome: token + lease + the negotiated protocol
+    /// version. A structured refusal (`accepted: false`) keeps its reason
+    /// (attestation failures), mirroring `RegisterAck`.
+    SessionGrant {
+        accepted: bool,
+        client_id: u64,
+        token: u64,
+        lease_ms: u64,
+        proto: u32,
+        reason: String,
+    },
+    /// Lease-renewal outcome. `renewed: false` is protocol data — the SDK
+    /// reopens the session rather than treating it as an error.
+    LeaseAck {
+        renewed: bool,
+        lease_ms: u64,
+        reason: String,
+    },
 }
 
 // Message tags. 0x00/0x01 reserved; '{' = 0x7b must not collide (all < 0x30).
@@ -148,6 +193,9 @@ const T_UPLOAD_MASKED: u8 = 0x08;
 const T_UNMASK_RESPONSE: u8 = 0x09;
 const T_GET_TASK_STATUS: u8 = 0x0a;
 const T_HEARTBEAT: u8 = 0x0b;
+const T_SESSION_OPEN: u8 = 0x0c;
+const T_SESSION_HEARTBEAT: u8 = 0x0d;
+const T_SESSION_CLOSE: u8 = 0x0e;
 const T_REGISTER_ACK: u8 = 0x10;
 const T_TASK_OFFER: u8 = 0x11;
 const T_JOIN_ACK: u8 = 0x12;
@@ -155,6 +203,8 @@ const T_ROUND_PLAN: u8 = 0x13;
 const T_ACK: u8 = 0x14;
 const T_TASK_STATUS: u8 = 0x15;
 const T_ERROR: u8 = 0x16;
+const T_SESSION_GRANT: u8 = 0x17;
+const T_LEASE_ACK: u8 = 0x18;
 
 // RoundRole sub-tags.
 const R_WAIT: u8 = 0;
@@ -195,6 +245,9 @@ impl Msg {
             Msg::UnmaskResponse { .. } => T_UNMASK_RESPONSE,
             Msg::GetTaskStatus { .. } => T_GET_TASK_STATUS,
             Msg::Heartbeat { .. } => T_HEARTBEAT,
+            Msg::SessionOpen { .. } => T_SESSION_OPEN,
+            Msg::SessionHeartbeat { .. } => T_SESSION_HEARTBEAT,
+            Msg::SessionClose { .. } => T_SESSION_CLOSE,
             Msg::RegisterAck { .. } => T_REGISTER_ACK,
             Msg::TaskOffer { .. } => T_TASK_OFFER,
             Msg::JoinAck { .. } => T_JOIN_ACK,
@@ -202,6 +255,8 @@ impl Msg {
             Msg::Ack { .. } => T_ACK,
             Msg::TaskStatus { .. } => T_TASK_STATUS,
             Msg::ErrorReply { .. } => T_ERROR,
+            Msg::SessionGrant { .. } => T_SESSION_GRANT,
+            Msg::LeaseAck { .. } => T_LEASE_ACK,
         }
     }
 }
@@ -306,6 +361,32 @@ impl Wire for Msg {
             }
             Msg::GetTaskStatus { task_id } => w.put_u64(*task_id),
             Msg::Heartbeat { client_id } => w.put_u64(*client_id),
+            Msg::SessionOpen {
+                device_id,
+                verdict,
+                caps,
+                profile,
+                proto_max,
+            } => {
+                w.put_str(device_id);
+                verdict.encode(w);
+                caps.encode(w);
+                profile.encode(w);
+                w.put_u32(*proto_max);
+            }
+            Msg::SessionHeartbeat {
+                client_id,
+                token,
+                hints,
+            } => {
+                w.put_u64(*client_id);
+                w.put_u64(*token);
+                hints.encode(w);
+            }
+            Msg::SessionClose { client_id, token } => {
+                w.put_u64(*client_id);
+                w.put_u64(*token);
+            }
             Msg::RegisterAck {
                 accepted,
                 client_id,
@@ -360,6 +441,30 @@ impl Wire for Msg {
                 w.put_f64(*epsilon);
             }
             Msg::ErrorReply { message } => w.put_str(message),
+            Msg::SessionGrant {
+                accepted,
+                client_id,
+                token,
+                lease_ms,
+                proto,
+                reason,
+            } => {
+                w.put_bool(*accepted);
+                w.put_u64(*client_id);
+                w.put_u64(*token);
+                w.put_u64(*lease_ms);
+                w.put_u32(*proto);
+                w.put_str(reason);
+            }
+            Msg::LeaseAck {
+                renewed,
+                lease_ms,
+                reason,
+            } => {
+                w.put_bool(*renewed);
+                w.put_u64(*lease_ms);
+                w.put_str(reason);
+            }
         }
     }
 
@@ -456,6 +561,22 @@ impl Wire for Msg {
             T_HEARTBEAT => Msg::Heartbeat {
                 client_id: r.get_u64()?,
             },
+            T_SESSION_OPEN => Msg::SessionOpen {
+                device_id: r.get_str()?,
+                verdict: Verdict::decode(r)?,
+                caps: DeviceCaps::decode(r)?,
+                profile: DeviceProfile::decode(r)?,
+                proto_max: r.get_u32()?,
+            },
+            T_SESSION_HEARTBEAT => Msg::SessionHeartbeat {
+                client_id: r.get_u64()?,
+                token: r.get_u64()?,
+                hints: LoadHints::decode(r)?,
+            },
+            T_SESSION_CLOSE => Msg::SessionClose {
+                client_id: r.get_u64()?,
+                token: r.get_u64()?,
+            },
             T_REGISTER_ACK => Msg::RegisterAck {
                 accepted: r.get_bool()?,
                 client_id: r.get_u64()?,
@@ -500,6 +621,19 @@ impl Wire for Msg {
             T_ERROR => Msg::ErrorReply {
                 message: r.get_str()?,
             },
+            T_SESSION_GRANT => Msg::SessionGrant {
+                accepted: r.get_bool()?,
+                client_id: r.get_u64()?,
+                token: r.get_u64()?,
+                lease_ms: r.get_u64()?,
+                proto: r.get_u32()?,
+                reason: r.get_str()?,
+            },
+            T_LEASE_ACK => Msg::LeaseAck {
+                renewed: r.get_bool()?,
+                lease_ms: r.get_u64()?,
+                reason: r.get_str()?,
+            },
             v => return Err(Error::Codec(format!("unknown message tag {v:#x}"))),
         })
     }
@@ -508,6 +642,50 @@ impl Wire for Msg {
 // ---------------------------------------------------------------------------
 // JSON ("REST") codec — control plane + plaintext uploads.
 // ---------------------------------------------------------------------------
+
+fn verdict_to_json(verdict: &Verdict) -> Json {
+    Json::obj()
+        .set("device_id", verdict.device_id.as_str())
+        .set("tier", verdict.tier as u8 as u64)
+        // u64 fields ride as strings: JSON numbers are f64 and would
+        // corrupt values above 2^53, breaking the HMAC over the verdict.
+        .set("nonce", verdict.nonce.to_string())
+        .set("expires_ms", verdict.expires_ms.to_string())
+        .set("sig", base64::encode(&verdict.sig))
+}
+
+fn verdict_from_json(j: &Json) -> Result<Verdict> {
+    let v = j
+        .get("verdict")
+        .ok_or_else(|| Error::Codec("missing verdict".into()))?;
+    let sig_v = base64::decode(v.req_str("sig").map_err(Error::Codec)?).map_err(Error::Codec)?;
+    let parse_u64_str = |key: &str| -> Result<u64> {
+        v.req_str(key)
+            .map_err(Error::Codec)?
+            .parse::<u64>()
+            .map_err(|e| Error::Codec(format!("verdict.{key}: {e}")))
+    };
+    Ok(Verdict {
+        device_id: v.req_str("device_id").map_err(Error::Codec)?.to_string(),
+        tier: crate::crypto::attest::IntegrityTier::from_u8(
+            v.req_usize("tier").map_err(Error::Codec)? as u8,
+        )
+        .ok_or_else(|| Error::Codec("bad tier".into()))?,
+        nonce: parse_u64_str("nonce")?,
+        expires_ms: parse_u64_str("expires_ms")?,
+        sig: sig_v
+            .try_into()
+            .map_err(|_| Error::Codec("sig not 32 bytes".into()))?,
+    })
+}
+
+/// Session tokens ride as strings (credentials must survive the full
+/// u64 range; JSON numbers are f64). Absent field → 0 (no session).
+fn token_from_json(j: &Json) -> Result<u64> {
+    j.opt_str("token", "0")
+        .parse::<u64>()
+        .map_err(|e| Error::Codec(format!("token: {e}")))
+}
 
 impl Msg {
     /// JSON encoding; `Err` for binary-only (secagg data plane) messages.
@@ -520,19 +698,60 @@ impl Msg {
             } => Json::obj()
                 .set("type", "register")
                 .set("device_id", device_id.as_str())
-                .set(
-                    "verdict",
-                    Json::obj()
-                        .set("device_id", verdict.device_id.as_str())
-                        .set("tier", verdict.tier as u8 as u64)
-                        // u64 fields ride as strings: JSON numbers are
-                        // f64 and would corrupt values above 2^53,
-                        // breaking the HMAC over the verdict.
-                        .set("nonce", verdict.nonce.to_string())
-                        .set("expires_ms", verdict.expires_ms.to_string())
-                        .set("sig", base64::encode(&verdict.sig)),
-                )
+                .set("verdict", verdict_to_json(verdict))
                 .set("caps", caps.to_json()),
+            Msg::SessionOpen {
+                device_id,
+                verdict,
+                caps,
+                profile,
+                proto_max,
+            } => Json::obj()
+                .set("type", "session_open")
+                .set("device_id", device_id.as_str())
+                .set("verdict", verdict_to_json(verdict))
+                .set("caps", caps.to_json())
+                .set("profile", profile.to_json())
+                .set("proto_max", *proto_max as u64),
+            Msg::SessionHeartbeat {
+                client_id,
+                token,
+                hints,
+            } => Json::obj()
+                .set("type", "session_heartbeat")
+                .set("client_id", *client_id)
+                // Tokens are credentials: ride as strings (full u64
+                // range) like the verdict nonce, not as lossy f64s.
+                .set("token", token.to_string())
+                .set("hints", hints.to_json()),
+            Msg::SessionClose { client_id, token } => Json::obj()
+                .set("type", "session_close")
+                .set("client_id", *client_id)
+                .set("token", token.to_string()),
+            Msg::SessionGrant {
+                accepted,
+                client_id,
+                token,
+                lease_ms,
+                proto,
+                reason,
+            } => Json::obj()
+                .set("type", "session_grant")
+                .set("accepted", *accepted)
+                .set("client_id", *client_id)
+                .set("token", token.to_string())
+                .set("lease_ms", *lease_ms)
+                .set("proto", *proto as u64)
+                .set("reason", reason.as_str()),
+            Msg::LeaseAck {
+                renewed,
+                lease_ms,
+                reason,
+            } => Json::obj()
+                .set("type", "lease_ack")
+                .set("renewed", *renewed)
+                .set("lease_ms", *lease_ms)
+                .set("reason", reason.as_str()),
             Msg::PollTask {
                 client_id,
                 app_name,
@@ -615,39 +834,52 @@ impl Msg {
     pub fn from_json(j: &Json) -> Result<Msg> {
         let ty = j.req_str("type").map_err(Error::Codec)?;
         Ok(match ty {
-            "register" => {
-                let v = j
-                    .get("verdict")
-                    .ok_or_else(|| Error::Codec("missing verdict".into()))?;
-                let sig_v = base64::decode(v.req_str("sig").map_err(Error::Codec)?)
-                    .map_err(Error::Codec)?;
-                let parse_u64_str = |key: &str| -> Result<u64> {
-                    v.req_str(key)
-                        .map_err(Error::Codec)?
-                        .parse::<u64>()
-                        .map_err(|e| Error::Codec(format!("verdict.{key}: {e}")))
-                };
-                let verdict = Verdict {
-                    device_id: v.req_str("device_id").map_err(Error::Codec)?.to_string(),
-                    tier: crate::crypto::attest::IntegrityTier::from_u8(
-                        v.req_usize("tier").map_err(Error::Codec)? as u8,
-                    )
-                    .ok_or_else(|| Error::Codec("bad tier".into()))?,
-                    nonce: parse_u64_str("nonce")?,
-                    expires_ms: parse_u64_str("expires_ms")?,
-                    sig: sig_v
-                        .try_into()
-                        .map_err(|_| Error::Codec("sig not 32 bytes".into()))?,
-                };
-                Msg::Register {
-                    device_id: j.req_str("device_id").map_err(Error::Codec)?.to_string(),
-                    verdict,
-                    caps: DeviceCaps::from_json(
-                        j.get("caps")
-                            .ok_or_else(|| Error::Codec("missing caps".into()))?,
-                    )?,
-                }
-            }
+            "register" => Msg::Register {
+                device_id: j.req_str("device_id").map_err(Error::Codec)?.to_string(),
+                verdict: verdict_from_json(j)?,
+                caps: DeviceCaps::from_json(
+                    j.get("caps")
+                        .ok_or_else(|| Error::Codec("missing caps".into()))?,
+                )?,
+            },
+            "session_open" => Msg::SessionOpen {
+                device_id: j.req_str("device_id").map_err(Error::Codec)?.to_string(),
+                verdict: verdict_from_json(j)?,
+                caps: DeviceCaps::from_json(
+                    j.get("caps")
+                        .ok_or_else(|| Error::Codec("missing caps".into()))?,
+                )?,
+                profile: DeviceProfile::from_json(
+                    j.get("profile")
+                        .ok_or_else(|| Error::Codec("missing profile".into()))?,
+                )?,
+                proto_max: j.req_usize("proto_max").map_err(Error::Codec)? as u32,
+            },
+            "session_heartbeat" => Msg::SessionHeartbeat {
+                client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+                token: token_from_json(j)?,
+                hints: match j.get("hints") {
+                    Some(h) => LoadHints::from_json(h)?,
+                    None => LoadHints::default(),
+                },
+            },
+            "session_close" => Msg::SessionClose {
+                client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+                token: token_from_json(j)?,
+            },
+            "session_grant" => Msg::SessionGrant {
+                accepted: j.opt_bool("accepted", false),
+                client_id: j.opt_usize("client_id", 0) as u64,
+                token: token_from_json(j)?,
+                lease_ms: j.opt_usize("lease_ms", 0) as u64,
+                proto: j.opt_usize("proto", 0) as u32,
+                reason: j.opt_str("reason", ""),
+            },
+            "lease_ack" => Msg::LeaseAck {
+                renewed: j.opt_bool("renewed", false),
+                lease_ms: j.opt_usize("lease_ms", 0) as u64,
+                reason: j.opt_str("reason", ""),
+            },
             "poll_task" => Msg::PollTask {
                 client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
                 app_name: j.req_str("app_name").map_err(Error::Codec)?.to_string(),
@@ -761,8 +993,65 @@ mod tests {
         }
     }
 
-    fn all_binary_samples() -> Vec<Msg> {
+    fn sample_session_frames() -> Vec<Msg> {
+        use crate::proto::{BandwidthClass, ComputeTier, DeviceProfile, LoadHints, PROTO_V2};
+        let auth = Authority::new(b"k");
         vec![
+            Msg::SessionOpen {
+                device_id: "dev-2".into(),
+                verdict: auth.issue("dev-2", IntegrityTier::Strong, 8, 99),
+                caps: DeviceCaps::default(),
+                profile: DeviceProfile {
+                    compute_tier: ComputeTier::High,
+                    bandwidth: BandwidthClass::Constrained,
+                    avail_window_ms: 120_000,
+                },
+                proto_max: PROTO_V2,
+            },
+            Msg::SessionHeartbeat {
+                client_id: 4,
+                token: 17,
+                hints: LoadHints {
+                    load: 0.25,
+                    battery: 0.5,
+                    charging: false,
+                },
+            },
+            Msg::SessionClose {
+                client_id: 4,
+                token: 17,
+            },
+            Msg::SessionGrant {
+                accepted: true,
+                client_id: 4,
+                token: 17,
+                lease_ms: 30_000,
+                proto: PROTO_V2,
+                reason: String::new(),
+            },
+            Msg::SessionGrant {
+                accepted: false,
+                client_id: 0,
+                token: 0,
+                lease_ms: 0,
+                proto: 0,
+                reason: "attestation rejected".into(),
+            },
+            Msg::LeaseAck {
+                renewed: false,
+                lease_ms: 0,
+                reason: "no live session".into(),
+            },
+            Msg::LeaseAck {
+                renewed: true,
+                lease_ms: 30_000,
+                reason: String::new(),
+            },
+        ]
+    }
+
+    fn all_binary_samples() -> Vec<Msg> {
+        let mut v = vec![
             sample_register(),
             Msg::PollTask {
                 client_id: 1,
@@ -886,7 +1175,9 @@ mod tests {
             Msg::ErrorReply {
                 message: "boom".into(),
             },
-        ]
+        ];
+        v.extend(sample_session_frames());
+        v
     }
 
     #[test]
@@ -939,6 +1230,20 @@ mod tests {
             let (back, codec) = decode_frame(&frame).unwrap();
             assert_eq!(codec, WireCodec::Json);
             assert_eq!(back, msg, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn session_frames_roundtrip_both_codecs() {
+        // The v2 surface is control plane: every session frame must
+        // survive the binary ("gRPC") AND JSON ("REST") paths.
+        for msg in sample_session_frames() {
+            for codec in [WireCodec::Binary, WireCodec::Json] {
+                let frame = encode_frame(&msg, codec).unwrap();
+                let (back, got) = decode_frame(&frame).unwrap();
+                assert_eq!(got, codec);
+                assert_eq!(back, msg, "{msg:?} via {codec:?}");
+            }
         }
     }
 

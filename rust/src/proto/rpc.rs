@@ -18,7 +18,7 @@ use crate::crypto::attest::Verdict;
 use crate::error::{Error, Result};
 
 use super::msg::{Msg, PeerShare, RecoveredShare};
-use super::{DeviceCaps, RoundRole, TaskDescriptor};
+use super::{DeviceCaps, DeviceProfile, LoadHints, RoundRole, TaskDescriptor};
 
 /// A typed server→client reply.
 pub trait Reply: Sized + Send {
@@ -180,9 +180,43 @@ request!(
 );
 
 request!(
-    /// Liveness ping keeping the device's registry entry fresh.
+    /// Liveness ping keeping the device's registry entry fresh. v1
+    /// compatibility surface: on a v2 server it also renews (or opens)
+    /// the client's implicit session lease.
     Heartbeat { client_id: u64 } => Ack,
     "heartbeat"
+);
+
+request!(
+    /// Protocol v2 handshake: attest + register + submit the device
+    /// profile and the highest protocol version the client speaks.
+    SessionOpen {
+        device_id: String,
+        verdict: Verdict,
+        caps: DeviceCaps,
+        profile: DeviceProfile,
+        proto_max: u32,
+    } => SessionGrant,
+    "session_open"
+);
+
+request!(
+    /// Renew the liveness lease, carrying load/battery hints.
+    SessionHeartbeat {
+        client_id: u64,
+        token: u64,
+        hints: LoadHints,
+    } => LeaseAck,
+    "session_heartbeat"
+);
+
+request!(
+    /// Release the lease early (graceful departure).
+    SessionClose {
+        client_id: u64,
+        token: u64,
+    } => Ack,
+    "session_close"
 );
 
 // ---------------------------------------------------------------------------
@@ -305,6 +339,90 @@ impl Reply for Ack {
     }
 }
 
+/// Session handshake outcome. Like [`RegisterAck`], `accepted: false`
+/// keeps the structured reason (attestation failures) as data; only
+/// `ErrorReply` — e.g. a v1 server that cannot route `SessionOpen` —
+/// is an `Err` at this layer, which is exactly the signal the SDK uses
+/// to negotiate down to the one-shot flow.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionGrant {
+    pub accepted: bool,
+    pub client_id: u64,
+    pub token: u64,
+    pub lease_ms: u64,
+    /// Negotiated protocol version (see [`crate::proto::negotiate_proto`]).
+    pub proto: u32,
+    pub reason: String,
+}
+
+impl Reply for SessionGrant {
+    fn into_msg(self) -> Msg {
+        Msg::SessionGrant {
+            accepted: self.accepted,
+            client_id: self.client_id,
+            token: self.token,
+            lease_ms: self.lease_ms,
+            proto: self.proto,
+            reason: self.reason,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::SessionGrant {
+                accepted,
+                client_id,
+                token,
+                lease_ms,
+                proto,
+                reason,
+            } => Ok(SessionGrant {
+                accepted,
+                client_id,
+                token,
+                lease_ms,
+                proto,
+                reason,
+            }),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+/// Lease-renewal outcome. `renewed: false` is protocol data the SDK
+/// inspects (lease lost → reopen the session), not an `Err`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaseAck {
+    pub renewed: bool,
+    pub lease_ms: u64,
+    pub reason: String,
+}
+
+impl Reply for LeaseAck {
+    fn into_msg(self) -> Msg {
+        Msg::LeaseAck {
+            renewed: self.renewed,
+            lease_ms: self.lease_ms,
+            reason: self.reason,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::LeaseAck {
+                renewed,
+                lease_ms,
+                reason,
+            } => Ok(LeaseAck {
+                renewed,
+                lease_ms,
+                reason,
+            }),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
 /// Task status snapshot (admin surface).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TaskStatus {
@@ -368,6 +486,9 @@ pub fn method_of(m: &Msg) -> Option<&'static str> {
         Msg::UnmaskResponse { .. } => UnmaskResponse::METHOD,
         Msg::GetTaskStatus { .. } => GetTaskStatus::METHOD,
         Msg::Heartbeat { .. } => Heartbeat::METHOD,
+        Msg::SessionOpen { .. } => SessionOpen::METHOD,
+        Msg::SessionHeartbeat { .. } => SessionHeartbeat::METHOD,
+        Msg::SessionClose { .. } => SessionClose::METHOD,
         _ => return None,
     })
 }
@@ -384,7 +505,11 @@ pub fn client_id_of(m: &Msg) -> Option<u64> {
         | Msg::UploadPlain { client_id, .. }
         | Msg::UploadMasked { client_id, .. }
         | Msg::UnmaskResponse { client_id, .. }
-        | Msg::Heartbeat { client_id } => Some(*client_id),
+        | Msg::Heartbeat { client_id }
+        | Msg::SessionHeartbeat { client_id, .. }
+        | Msg::SessionClose { client_id, .. } => Some(*client_id),
+        // `SessionOpen`, like `Register`, carries no principal: it is the
+        // request that *creates* one.
         _ => None,
     }
 }
@@ -436,6 +561,46 @@ mod tests {
             reason: String::new(),
         })
         .is_ok());
+    }
+
+    #[test]
+    fn session_rpcs_are_typed_pairs() {
+        let req = SessionHeartbeat {
+            client_id: 9,
+            token: 3,
+            hints: LoadHints::default(),
+        };
+        let msg = req.clone().into_msg();
+        assert_eq!(method_of(&msg), Some("session_heartbeat"));
+        assert_eq!(client_id_of(&msg), Some(9));
+        assert_eq!(SessionHeartbeat::from_msg(msg), Some(req));
+
+        let grant = SessionGrant {
+            accepted: true,
+            client_id: 9,
+            token: 3,
+            lease_ms: 30_000,
+            proto: crate::proto::PROTO_V2,
+            reason: String::new(),
+        };
+        let back = SessionGrant::from_msg(grant.clone().into_msg()).unwrap();
+        assert_eq!(back, grant);
+        // A v1 server bounces SessionOpen with ErrorReply → Err(Server),
+        // the SDK's cue to fall back to the one-shot Register flow.
+        assert!(matches!(
+            SessionGrant::from_msg(Msg::ErrorReply {
+                message: "unexpected message".into()
+            }),
+            Err(Error::Server(_))
+        ));
+        // A lost lease is data, not an error.
+        let ack = LeaseAck::from_msg(Msg::LeaseAck {
+            renewed: false,
+            lease_ms: 0,
+            reason: "no live session".into(),
+        })
+        .unwrap();
+        assert!(!ack.renewed);
     }
 
     #[test]

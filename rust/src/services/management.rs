@@ -351,6 +351,21 @@ impl ManagementService {
         }
     }
 
+    /// Fan a session-lease eviction out to every engine: the evicted
+    /// clients leave waiting pools, and open plaintext cohorts are
+    /// repaired (slots backfilled from the join pool) instead of
+    /// waiting out the round deadline.
+    pub fn evict_clients(&self, evicted: &[u64], now_ms: u64) {
+        if evicted.is_empty() {
+            return;
+        }
+        let eval = Arc::clone(&self.evaluator);
+        let mut g = self.inner.lock().unwrap();
+        for t in g.engines.values_mut() {
+            t.evict_clients(evicted, &*eval, now_ms);
+        }
+    }
+
     /// Status summary for the dashboard / CLI.
     pub fn task_status(&self, task_id: u64) -> Result<(TaskDescriptor, TaskMetrics, Option<f64>)> {
         self.with_task(task_id, |t| Ok((t.descriptor(), t.metrics.clone(), t.epsilon())))

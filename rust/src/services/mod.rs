@@ -1,5 +1,6 @@
-//! Back-end services (§3.1): Authentication, Selection, Secure Aggregator,
-//! Master Aggregator, and the Management Service — a thin multi-tenant
+//! Back-end services (§3.1): Authentication, Selection, Sessions (the
+//! protocol-v2 liveness-lease registry), Secure Aggregator, Master
+//! Aggregator, and the Management Service — a thin multi-tenant
 //! registry over the per-task round engines in [`crate::orchestrator`].
 //! `router.rs` exposes them as four FLaaS-style [`router::Service`]s
 //! behind an ordered interceptor chain (auth → metrics → backpressure);
@@ -14,5 +15,7 @@ pub mod router;
 pub mod secure_aggregator;
 pub mod selection;
 pub mod server;
+pub mod sessions;
 
 pub use server::FloridaServer;
+pub use sessions::{LiveDirectory, SessionRegistry};

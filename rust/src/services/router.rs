@@ -52,7 +52,11 @@ impl ServiceKind {
 /// service handles (server→client replies bounced back at the server).
 pub fn route(msg: &Msg) -> Option<ServiceKind> {
     Some(match msg {
-        Msg::Register { .. } | Msg::Heartbeat { .. } => ServiceKind::Registration,
+        Msg::Register { .. }
+        | Msg::Heartbeat { .. }
+        | Msg::SessionOpen { .. }
+        | Msg::SessionHeartbeat { .. }
+        | Msg::SessionClose { .. } => ServiceKind::Registration,
         Msg::PollTask { .. } | Msg::JoinRound { .. } | Msg::FetchRound { .. } => {
             ServiceKind::Task
         }
@@ -225,8 +229,8 @@ fn unhandled(kind: ServiceKind, msg: &Msg) -> Msg {
     }
 }
 
-/// Device registration + liveness (§3.1.5 Authentication, registry side
-/// of §3.1.4 Selection).
+/// Device registration, session negotiation + liveness (§3.1.5
+/// Authentication, registry side of §3.1.4 Selection).
 pub struct RegistrationService;
 
 impl Service for RegistrationService {
@@ -255,8 +259,75 @@ impl Service for RegistrationService {
                     reason: e.to_string(),
                 },
             },
+            Msg::SessionOpen {
+                device_id,
+                verdict,
+                caps,
+                profile,
+                proto_max,
+            } => match srv.auth.validate(&device_id, &verdict, ctx.now_ms) {
+                Ok(()) => {
+                    let id = srv.selection.register(&device_id, caps, ctx.now_ms);
+                    let proto = crate::proto::negotiate_proto(proto_max);
+                    let (token, lease_ms) = srv.sessions.open(id, profile, proto, ctx.now_ms);
+                    Msg::SessionGrant {
+                        accepted: true,
+                        client_id: id,
+                        token,
+                        lease_ms,
+                        proto,
+                        reason: String::new(),
+                    }
+                }
+                Err(e) => Msg::SessionGrant {
+                    accepted: false,
+                    client_id: 0,
+                    token: 0,
+                    lease_ms: 0,
+                    proto: 0,
+                    reason: e.to_string(),
+                },
+            },
+            Msg::SessionHeartbeat {
+                client_id,
+                token,
+                hints,
+            } => {
+                match srv.sessions.renew(client_id, token, hints, ctx.now_ms) {
+                    Ok(lease_ms) => {
+                        // Only an authenticated renewal counts as
+                        // liveness — a zombie's stale-token heartbeat
+                        // must not refresh last_seen either.
+                        srv.selection.touch(client_id, ctx.now_ms);
+                        Msg::LeaseAck {
+                            renewed: true,
+                            lease_ms,
+                            reason: String::new(),
+                        }
+                    }
+                    // Lease lost (expired, replaced, or server restart):
+                    // structured data, the SDK reopens the session.
+                    Err(e) => Msg::LeaseAck {
+                        renewed: false,
+                        lease_ms: 0,
+                        reason: e.to_string(),
+                    },
+                }
+            }
+            Msg::SessionClose { client_id, token } => {
+                srv.sessions.close(client_id, token);
+                Msg::Ack {
+                    ok: true,
+                    reason: String::new(),
+                }
+            }
             Msg::Heartbeat { client_id } => {
                 srv.selection.touch(client_id, ctx.now_ms);
+                // v1 liveness joins the lease machinery: the heartbeat
+                // renews (or implicitly opens) the client's IMPLICIT
+                // session — never a token-bearing v2 one — so
+                // un-heartbeated clients are evicted after lease expiry.
+                srv.sessions.touch_v1(client_id, ctx.now_ms);
                 Msg::Ack {
                     ok: true,
                     reason: String::new(),
@@ -324,7 +395,7 @@ impl Service for TaskService {
             Msg::FetchRound { client_id, task_id } => {
                 match srv
                     .management
-                    .fetch_round(client_id, task_id, &srv.selection, ctx.now_ms)
+                    .fetch_round(client_id, task_id, &srv.directory(), ctx.now_ms)
                 {
                     Ok(role) => Msg::RoundPlan { role },
                     Err(e) => Msg::ErrorReply {
@@ -521,6 +592,30 @@ mod tests {
         assert_eq!(
             route(&Msg::Heartbeat { client_id: 1 }),
             Some(ServiceKind::Registration)
+        );
+        assert_eq!(
+            route(&Msg::SessionHeartbeat {
+                client_id: 1,
+                token: 1,
+                hints: Default::default()
+            }),
+            Some(ServiceKind::Registration)
+        );
+        assert_eq!(
+            route(&Msg::SessionClose {
+                client_id: 1,
+                token: 1
+            }),
+            Some(ServiceKind::Registration)
+        );
+        // Session replies are server→client: unroutable.
+        assert_eq!(
+            route(&Msg::LeaseAck {
+                renewed: true,
+                lease_ms: 1,
+                reason: String::new()
+            }),
+            None
         );
         assert_eq!(
             route(&Msg::FetchRound {

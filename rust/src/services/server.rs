@@ -14,7 +14,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::{StorageConfig, TaskConfig};
+use crate::config::{SessionConfig, StorageConfig, TaskConfig};
 use crate::error::Result;
 use crate::metrics::RpcMetrics;
 use crate::model::ModelSnapshot;
@@ -24,6 +24,7 @@ use crate::services::auth::AuthService;
 use crate::services::management::{Evaluator, ManagementService, NoEval};
 use crate::services::router::Router;
 use crate::services::selection::SelectionService;
+use crate::services::sessions::{LiveDirectory, SessionRegistry};
 use crate::transport::Listener;
 use crate::util::ThreadPool;
 
@@ -49,6 +50,8 @@ impl Clock {
 pub struct FloridaServer {
     pub auth: AuthService,
     pub selection: SelectionService,
+    /// Protocol-v2 liveness: sessions, leases, and device profiles.
+    pub sessions: SessionRegistry,
     pub management: ManagementService,
     /// Per-RPC counters fed by the router's `MetricsInterceptor`.
     pub rpc_metrics: Arc<RpcMetrics>,
@@ -69,10 +72,20 @@ impl FloridaServer {
             router: Router::standard(Arc::clone(&rpc_metrics), DEFAULT_INFLIGHT_LIMIT),
             auth,
             selection,
+            sessions: SessionRegistry::new(SessionConfig::default().lease_ms),
             management,
             rpc_metrics,
             clock,
             stopping: AtomicBool::new(false),
+        }
+    }
+
+    /// The session-aware capability view (caps + device profiles) handed
+    /// to cohort policies.
+    pub fn directory(&self) -> LiveDirectory<'_> {
+        LiveDirectory {
+            selection: &self.selection,
+            sessions: &self.sessions,
         }
     }
 
@@ -156,10 +169,18 @@ impl FloridaServer {
         self.tick();
     }
 
-    /// Deadline sweep across every task engine (the selection registry
-    /// feeds caps-aware cohort policies).
+    /// Liveness + deadline sweep: expired session leases are evicted
+    /// first (open cohorts repaired, slots backfilled mid-round), then
+    /// every task engine runs its deadline sweep against the
+    /// session-aware capability directory.
     pub fn tick(&self) {
-        self.management.tick(&self.selection, self.now_ms());
+        let now_ms = self.now_ms();
+        let evicted = self.sessions.sweep(now_ms);
+        if !evicted.is_empty() {
+            log::debug!("session sweep evicted {} client(s)", evicted.len());
+            self.management.evict_clients(&evicted, now_ms);
+        }
+        self.management.tick(&self.directory(), now_ms);
     }
 
     /// Convenience: create + start a task from a config and initial model.
@@ -385,5 +406,189 @@ mod tests {
         s.advance_ms(500);
         s.handle(Msg::Heartbeat { client_id: a });
         assert_eq!(s.selection.get(a).unwrap().last_seen_ms, 500);
+    }
+
+    #[test]
+    fn heartbeat_touches_session_lease() {
+        // Satellite regression: the v1 heartbeat is no longer a dropped
+        // ack — it opens/renews an implicit lease, and an un-heartbeated
+        // client is swept after lease expiry.
+        let s = FloridaServer::for_testing(false, 12);
+        s.sessions.set_lease_ms(1000);
+        let a = register(&s, "hb-a", 1);
+        let b = register(&s, "hb-b", 2);
+        s.handle(Msg::Heartbeat { client_id: a });
+        s.handle(Msg::Heartbeat { client_id: b });
+        assert_eq!(s.sessions.live_count(), 2);
+        // a keeps heartbeating, b goes dark.
+        s.advance_ms(800);
+        s.handle(Msg::Heartbeat { client_id: a });
+        s.advance_ms(400); // now 1200: b's lease (1000) expired
+        assert!(s.sessions.get(a).is_some(), "renewed lease survives");
+        assert!(s.sessions.get(b).is_none(), "un-heartbeated client evicted");
+    }
+
+    #[test]
+    fn session_open_negotiates_and_grants_lease() {
+        use crate::proto::{ComputeTier, DeviceProfile, LoadHints, PROTO_V1, PROTO_V2};
+        let s = FloridaServer::for_testing(true, 13);
+        let v = s
+            .auth
+            .authority()
+            .issue("v2-dev", IntegrityTier::Device, 1, u64::MAX / 2);
+        let profile = DeviceProfile {
+            compute_tier: ComputeTier::High,
+            ..Default::default()
+        };
+        // A future v9 client negotiates down to v2.
+        let (client_id, token) = match s.handle(Msg::SessionOpen {
+            device_id: "v2-dev".into(),
+            verdict: v,
+            caps: DeviceCaps::default(),
+            profile,
+            proto_max: 9,
+        }) {
+            Msg::SessionGrant {
+                accepted: true,
+                client_id,
+                token,
+                lease_ms,
+                proto,
+                ..
+            } => {
+                assert_eq!(proto, PROTO_V2);
+                assert!(lease_ms > 0);
+                (client_id, token)
+            }
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(
+            s.sessions.profile_of(client_id).unwrap().compute_tier,
+            ComputeTier::High
+        );
+        // Renewal over the wire surface.
+        match s.handle(Msg::SessionHeartbeat {
+            client_id,
+            token,
+            hints: LoadHints::default(),
+        }) {
+            Msg::LeaseAck { renewed: true, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // A stale token cannot renew — structured refusal, not an error.
+        match s.handle(Msg::SessionHeartbeat {
+            client_id,
+            token: token + 1,
+            hints: LoadHints::default(),
+        }) {
+            Msg::LeaseAck { renewed: false, reason, .. } => {
+                assert!(reason.contains("stale"), "{reason}")
+            }
+            other => panic!("{other:?}"),
+        }
+        // Graceful close releases the lease.
+        match s.handle(Msg::SessionClose { client_id, token }) {
+            Msg::Ack { ok: true, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(s.sessions.get(client_id).is_none());
+        // A forged verdict is refused with the negotiation fields zeroed.
+        let evil = crate::crypto::attest::Authority::new(b"evil");
+        match s.handle(Msg::SessionOpen {
+            device_id: "v2-dev".into(),
+            verdict: evil.issue("v2-dev", IntegrityTier::Strong, 9, u64::MAX / 2),
+            caps: DeviceCaps::default(),
+            profile: DeviceProfile::default(),
+            proto_max: PROTO_V1,
+        }) {
+            Msg::SessionGrant {
+                accepted: false,
+                reason,
+                ..
+            } => assert!(!reason.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lease_expiry_evicts_cohort_member_and_backfills() {
+        let s = FloridaServer::for_testing(false, 14);
+        s.sessions.set_lease_ms(1000);
+        let mut cfg = TaskConfig::default();
+        cfg.clients_per_round = 2;
+        cfg.total_rounds = 1;
+        cfg.round_timeout_ms = 60_000;
+        let task_id = s
+            .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 2]))
+            .unwrap();
+        let ids: Vec<u64> = (0..3)
+            .map(|i| register(&s, &format!("lease-{i}"), i + 1))
+            .collect();
+        for &c in &ids {
+            s.handle(Msg::Heartbeat { client_id: c });
+            match s.handle(Msg::JoinRound {
+                client_id: c,
+                task_id,
+                dh_pubkey: [0; 32],
+            }) {
+                Msg::JoinAck { accepted: true, .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        let mut cohort = Vec::new();
+        let mut queued = 0u64;
+        for &c in &ids {
+            match s.handle(Msg::FetchRound { client_id: c, task_id }) {
+                Msg::RoundPlan {
+                    role: RoundRole::Train(_),
+                } => cohort.push(c),
+                Msg::RoundPlan {
+                    role: RoundRole::Wait,
+                } => queued = c,
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(cohort.len(), 2);
+        // Everyone but cohort[0] renews; its lease expires mid-round.
+        s.advance_ms(800);
+        for &c in &ids {
+            if c != cohort[0] {
+                s.handle(Msg::Heartbeat { client_id: c });
+            }
+        }
+        s.advance_ms(400); // tick: sweep evicts cohort[0], drafts `queued`
+        match s.handle(Msg::FetchRound {
+            client_id: queued,
+            task_id,
+        }) {
+            Msg::RoundPlan {
+                role: RoundRole::Train(_),
+            } => {}
+            other => panic!("backfilled client must train: {other:?}"),
+        }
+        // The survivors (original member + draftee) complete the round.
+        for c in [cohort[1], queued] {
+            match s.handle(Msg::UploadPlain {
+                client_id: c,
+                task_id,
+                round: 0,
+                base_version: 0,
+                delta: vec![0.5; 2],
+                weight: 1.0,
+                loss: 0.1,
+            }) {
+                Msg::Ack { ok: true, .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        match s.handle(Msg::GetTaskStatus { task_id }) {
+            Msg::TaskStatus {
+                task, participants, ..
+            } => {
+                assert_eq!(task.state, crate::proto::TaskState::Completed);
+                assert_eq!(participants, 2);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -1,0 +1,325 @@
+//! Session registry (protocol v2): the server's view of the live fleet.
+//!
+//! Every v2 client holds a **liveness lease**: granted at `SessionOpen`
+//! together with the negotiated protocol version, renewed by
+//! `SessionHeartbeat` (which carries [`LoadHints`]), and swept when it
+//! expires — [`SessionRegistry::sweep`] returns the evicted client ids so
+//! the orchestrator can repair open cohorts instead of waiting out the
+//! round deadline. v1 clients get an *implicit* session the first time
+//! they send a bare `Heartbeat` ([`SessionRegistry::touch_v1`]), so the
+//! legacy liveness ping participates in the same eviction machinery.
+//!
+//! The registry is also the capability store: the [`DeviceProfile`] a
+//! device submitted at open is served to cohort policies through
+//! [`LiveDirectory`], which pairs it with the selection registry's
+//! [`DeviceCaps`] — that is how `Tiered` partitions by reported compute
+//! tier.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::orchestrator::ClientDirectory;
+use crate::proto::{DeviceCaps, DeviceProfile, LoadHints};
+use crate::services::selection::SelectionService;
+
+/// Token issued to v1 implicit sessions (bare `Heartbeat`, no handshake).
+pub const IMPLICIT_TOKEN: u64 = 0;
+
+/// One live client session.
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub client_id: u64,
+    /// Renewal credential; [`IMPLICIT_TOKEN`] for v1 implicit sessions.
+    pub token: u64,
+    pub profile: DeviceProfile,
+    /// Negotiated protocol version.
+    pub proto: u32,
+    pub opened_ms: u64,
+    /// Lease expiry; the sweep evicts at `now >= expires_ms`.
+    pub expires_ms: u64,
+    /// Last load/battery hints carried by a heartbeat.
+    pub hints: LoadHints,
+}
+
+struct Inner {
+    lease_ms: u64,
+    next_token: u64,
+    live: HashMap<u64, Session>,
+}
+
+/// Registry of live sessions keyed by client id.
+pub struct SessionRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl SessionRegistry {
+    pub fn new(lease_ms: u64) -> SessionRegistry {
+        SessionRegistry {
+            inner: Mutex::new(Inner {
+                lease_ms: lease_ms.max(1),
+                next_token: 1,
+                live: HashMap::new(),
+            }),
+        }
+    }
+
+    pub fn lease_ms(&self) -> u64 {
+        self.inner.lock().unwrap().lease_ms
+    }
+
+    /// Adjust the lease granted to new opens/renewals (CLI `--lease-ms`,
+    /// simulator scenarios, tests).
+    pub fn set_lease_ms(&self, lease_ms: u64) {
+        self.inner.lock().unwrap().lease_ms = lease_ms.max(1);
+    }
+
+    /// Open (or replace) the client's session: a fresh token and a full
+    /// lease. Returns `(token, lease_ms)`.
+    pub fn open(
+        &self,
+        client_id: u64,
+        profile: DeviceProfile,
+        proto: u32,
+        now_ms: u64,
+    ) -> (u64, u64) {
+        let mut g = self.inner.lock().unwrap();
+        let token = g.next_token;
+        g.next_token += 1;
+        let lease_ms = g.lease_ms;
+        g.live.insert(
+            client_id,
+            Session {
+                client_id,
+                token,
+                profile,
+                proto,
+                opened_ms: now_ms,
+                expires_ms: now_ms + lease_ms,
+                hints: LoadHints::default(),
+            },
+        );
+        (token, lease_ms)
+    }
+
+    /// Renew the lease. The token must match the live session — a stale
+    /// token (the session was replaced or evicted) forces a reopen, so a
+    /// zombie client can never keep an abandoned session alive.
+    pub fn renew(&self, client_id: u64, token: u64, hints: LoadHints, now_ms: u64) -> Result<u64> {
+        let mut g = self.inner.lock().unwrap();
+        let lease_ms = g.lease_ms;
+        let s = g
+            .live
+            .get_mut(&client_id)
+            .ok_or_else(|| Error::Selection(format!("no live session for client {client_id}")))?;
+        if s.token != token {
+            return Err(Error::Selection(format!(
+                "stale session token for client {client_id}"
+            )));
+        }
+        s.expires_ms = now_ms + lease_ms;
+        s.hints = hints;
+        Ok(lease_ms)
+    }
+
+    /// v1 compatibility: a bare `Heartbeat` renews the client's
+    /// *implicit* session, or opens one (default profile, token
+    /// [`IMPLICIT_TOKEN`]) so legacy clients join the liveness
+    /// machinery. A negotiated v2 session is deliberately NOT renewed
+    /// here — it must present its token via `SessionHeartbeat`, so a
+    /// zombie's token-free heartbeat cannot keep a replaced session
+    /// alive (same guarantee [`SessionRegistry::renew`] enforces).
+    pub fn touch_v1(&self, client_id: u64, now_ms: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let lease_ms = g.lease_ms;
+        if let Some(s) = g.live.get_mut(&client_id) {
+            if s.token == IMPLICIT_TOKEN {
+                s.expires_ms = now_ms + lease_ms;
+            }
+            return;
+        }
+        g.live.insert(
+            client_id,
+            Session {
+                client_id,
+                token: IMPLICIT_TOKEN,
+                profile: DeviceProfile::default(),
+                proto: crate::proto::PROTO_V1,
+                opened_ms: now_ms,
+                expires_ms: now_ms + lease_ms,
+                hints: LoadHints::default(),
+            },
+        );
+    }
+
+    /// Release a session early. Returns whether a matching session was
+    /// closed (a stale token closes nothing).
+    pub fn close(&self, client_id: u64, token: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.live.get(&client_id) {
+            Some(s) if s.token == token => {
+                g.live.remove(&client_id);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Evict every expired lease; returns the evicted client ids (sorted,
+    /// for deterministic downstream handling).
+    pub fn sweep(&self, now_ms: u64) -> Vec<u64> {
+        let mut g = self.inner.lock().unwrap();
+        let mut evicted: Vec<u64> = g
+            .live
+            .values()
+            .filter(|s| now_ms >= s.expires_ms)
+            .map(|s| s.client_id)
+            .collect();
+        for id in &evicted {
+            g.live.remove(id);
+        }
+        evicted.sort_unstable();
+        evicted
+    }
+
+    pub fn get(&self, client_id: u64) -> Option<Session> {
+        self.inner.lock().unwrap().live.get(&client_id).cloned()
+    }
+
+    pub fn profile_of(&self, client_id: u64) -> Option<DeviceProfile> {
+        self.inner
+            .lock()
+            .unwrap()
+            .live
+            .get(&client_id)
+            .map(|s| s.profile)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.inner.lock().unwrap().live.len()
+    }
+}
+
+/// The capability view handed to cohort policies: device caps from the
+/// selection registry, heterogeneity profile from the live session.
+pub struct LiveDirectory<'a> {
+    pub selection: &'a SelectionService,
+    pub sessions: &'a SessionRegistry,
+}
+
+impl ClientDirectory for LiveDirectory<'_> {
+    fn caps_of(&self, client_id: u64) -> Option<DeviceCaps> {
+        self.selection.caps_of(client_id)
+    }
+
+    fn profile_of(&self, client_id: u64) -> Option<DeviceProfile> {
+        self.sessions.profile_of(client_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::{ComputeTier, PROTO_V2};
+
+    fn profile(tier: ComputeTier) -> DeviceProfile {
+        DeviceProfile {
+            compute_tier: tier,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn open_renew_and_expire() {
+        let reg = SessionRegistry::new(1000);
+        let (token, lease) = reg.open(1, profile(ComputeTier::High), PROTO_V2, 0);
+        assert_eq!(lease, 1000);
+        assert_eq!(reg.live_count(), 1);
+        assert_eq!(reg.profile_of(1).unwrap().compute_tier, ComputeTier::High);
+        // Renewal extends the lease and records the hints.
+        let hints = LoadHints {
+            load: 0.5,
+            battery: 0.25,
+            charging: false,
+        };
+        assert_eq!(reg.renew(1, token, hints, 900).unwrap(), 1000);
+        assert_eq!(reg.get(1).unwrap().expires_ms, 1900);
+        assert_eq!(reg.get(1).unwrap().hints, hints);
+        // Not yet expired: sweep leaves it alone.
+        assert!(reg.sweep(1899).is_empty());
+        // Expired: swept and gone.
+        assert_eq!(reg.sweep(1900), vec![1]);
+        assert!(reg.get(1).is_none());
+        assert!(reg.renew(1, token, LoadHints::default(), 2000).is_err());
+    }
+
+    #[test]
+    fn stale_token_cannot_renew_or_close() {
+        let reg = SessionRegistry::new(1000);
+        let (t1, _) = reg.open(1, DeviceProfile::default(), PROTO_V2, 0);
+        // Reopen replaces the session; the old token is dead.
+        let (t2, _) = reg.open(1, DeviceProfile::default(), PROTO_V2, 10);
+        assert_ne!(t1, t2);
+        assert!(reg.renew(1, t1, LoadHints::default(), 20).is_err());
+        assert!(!reg.close(1, t1));
+        assert_eq!(reg.live_count(), 1);
+        assert!(reg.close(1, t2));
+        assert_eq!(reg.live_count(), 0);
+    }
+
+    #[test]
+    fn v1_touch_opens_implicit_session_and_expires() {
+        let reg = SessionRegistry::new(500);
+        reg.touch_v1(7, 0);
+        let s = reg.get(7).unwrap();
+        assert_eq!(s.token, IMPLICIT_TOKEN);
+        assert_eq!(s.proto, crate::proto::PROTO_V1);
+        // Repeated touches renew; an un-heartbeated client expires.
+        reg.touch_v1(7, 400);
+        assert!(reg.sweep(600).is_empty());
+        assert_eq!(reg.sweep(900), vec![7]);
+    }
+
+    #[test]
+    fn v1_touch_cannot_renew_a_negotiated_session() {
+        let reg = SessionRegistry::new(500);
+        let (token, _) = reg.open(3, profile(ComputeTier::Low), PROTO_V2, 0);
+        // A token-free legacy heartbeat must not extend a v2 lease — a
+        // zombie could otherwise keep a replaced session alive forever.
+        reg.touch_v1(3, 100);
+        let s = reg.get(3).unwrap();
+        assert_eq!(s.token, token, "touch must not rotate or replace the session");
+        assert_eq!(s.profile.compute_tier, ComputeTier::Low);
+        assert_eq!(s.expires_ms, 500, "v2 lease unchanged by bare heartbeat");
+        // The token path still renews it.
+        reg.renew(3, token, LoadHints::default(), 100).unwrap();
+        assert_eq!(reg.get(3).unwrap().expires_ms, 600);
+    }
+
+    #[test]
+    fn sweep_returns_sorted_ids() {
+        let reg = SessionRegistry::new(100);
+        for id in [9u64, 2, 5] {
+            reg.open(id, DeviceProfile::default(), PROTO_V2, 0);
+        }
+        assert_eq!(reg.sweep(100), vec![2, 5, 9]);
+    }
+
+    #[test]
+    fn live_directory_combines_caps_and_profile() {
+        let sel = SelectionService::new(1);
+        let reg = SessionRegistry::new(1000);
+        let id = sel.register("dir-dev", DeviceCaps::default(), 0);
+        reg.open(id, profile(ComputeTier::High), PROTO_V2, 0);
+        let dir = LiveDirectory {
+            selection: &sel,
+            sessions: &reg,
+        };
+        assert!(dir.caps_of(id).is_some());
+        assert_eq!(dir.profile_of(id).unwrap().compute_tier, ComputeTier::High);
+        // Sessionless client: caps only (profile falls back to None).
+        let other = sel.register("capless", DeviceCaps::default(), 0);
+        assert!(dir.caps_of(other).is_some());
+        assert!(dir.profile_of(other).is_none());
+    }
+}

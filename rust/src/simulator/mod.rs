@@ -44,6 +44,32 @@ impl Default for DeviceProfile {
     }
 }
 
+impl DeviceProfile {
+    /// Report the simulated hardware to the server as the protocol-v2
+    /// heterogeneity axes (`SessionOpen`'s device profile): slow devices
+    /// read as low compute tier, delayed links as constrained bandwidth.
+    pub fn wire_profile(&self) -> crate::proto::DeviceProfile {
+        use crate::proto::{BandwidthClass, ComputeTier};
+        crate::proto::DeviceProfile {
+            compute_tier: if self.speed_mult <= 0.8 {
+                ComputeTier::High
+            } else if self.speed_mult <= 1.5 {
+                ComputeTier::Mid
+            } else {
+                ComputeTier::Low
+            },
+            bandwidth: if self.network_delay_ms == 0 {
+                BandwidthClass::Fast
+            } else if self.network_delay_ms <= 3 {
+                BandwidthClass::Broadband
+            } else {
+                BandwidthClass::Constrained
+            },
+            avail_window_ms: 0,
+        }
+    }
+}
+
 /// Fleet-level heterogeneity distribution (log-normal speeds — the usual
 /// straggler model; cf. §2 "client heterogeneity").
 #[derive(Clone, Copy, Debug)]
@@ -249,10 +275,13 @@ fn run_device<T: Trainer + 'static>(
         DeviceCaps::default(),
         seed,
     );
+    client.profile = profile.wire_profile();
     client.dropout_prob = profile.dropout_prob;
     client.poll_sleep_ms = poll_sleep_ms;
     let mut report = ExecutionReport::default();
-    if client.register().is_err() {
+    // Session protocol v2: negotiate a session (falls back to the v1
+    // one-shot register against servers that don't speak it).
+    if client.open_session().is_err() {
         return report;
     }
     let mut sim = SimulatedCompute {

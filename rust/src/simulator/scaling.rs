@@ -8,12 +8,14 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::client::ConstantTrainer;
-use crate::config::{FsyncPolicy, StorageConfig};
+use crate::client::{ConstantTrainer, FloridaClient};
+use crate::config::{CohortSpec, FsyncPolicy, StorageConfig};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
 use crate::orchestrator::TaskBuilder;
-use crate::proto::TaskState;
+use crate::proto::{
+    ComputeTier, DeviceCaps, DeviceProfile, LoadHints, RoundRole, TaskState, PROTO_V2,
+};
 use crate::services::management::NoEval;
 use crate::services::FloridaServer;
 use crate::simulator::{run_fleet, FleetConfig, Heterogeneity};
@@ -224,6 +226,209 @@ pub fn run_churn_restart(
     })
 }
 
+/// Outcome of the §Heterogeneity device-mix scenario: a mixed-tier
+/// population under the `Tiered` capability-aware cohort policy, with
+/// stragglers going dark mid-round (lease expiry → eviction → backfill).
+#[derive(Clone, Debug)]
+pub struct DeviceMixReport {
+    pub n_clients: usize,
+    /// Population per compute tier, indexed by `ComputeTier as usize`
+    /// (`[low, mid, high]`).
+    pub population_by_tier: [usize; 3],
+    /// Accepted uploads per compute tier across the whole run.
+    pub uploads_by_tier: [u64; 3],
+    /// Mid-round lease evictions observed on the event stream.
+    pub evicted: u64,
+    /// Cohort slots refilled from the join pool after an eviction.
+    pub backfilled: u64,
+    /// Committed rounds (== the target when the run converges).
+    pub rounds_completed: u64,
+    pub failed_rounds: u64,
+    pub wall_ms: u64,
+}
+
+/// Run the device-mix scenario: `n` clients split into high/mid/low
+/// compute tiers open v2 sessions reporting their profile; a `Tiered`
+/// task selects the top half by reported tier each round; a quarter of
+/// the cohort (its slowest members) goes dark mid-round and is evicted
+/// when its lease expires, the slots backfilled from the waiting pool —
+/// so low-tier devices participate exactly through the repair path.
+/// Driven on the server's manual clock for deterministic lease math.
+pub fn run_device_mix(n: usize, rounds: u64, seed: u64) -> Result<DeviceMixReport> {
+    if n < 6 {
+        return Err(Error::Config("device mix needs >= 6 clients".into()));
+    }
+    if rounds == 0 {
+        return Err(Error::Config("device mix needs >= 1 round".into()));
+    }
+    const LEASE_MS: u64 = 2_000;
+    let server = Arc::new(FloridaServer::for_testing(false, seed));
+    server.sessions.set_lease_ms(LEASE_MS);
+    let k = n / 2;
+    let n_high = (n / 6).max(1);
+    let n_mid = k - n_high;
+    let tier_of = |i: usize| {
+        if i < n_high {
+            ComputeTier::High
+        } else if i < n_high + n_mid {
+            ComputeTier::Mid
+        } else {
+            ComputeTier::Low
+        }
+    };
+    let task = TaskBuilder::new("device-mix")
+        .clients_per_round(k)
+        .rounds(rounds)
+        .cohort_policy(CohortSpec::Tiered)
+        .round_timeout_ms(60_000)
+        .min_report_fraction(0.5)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 5]))?
+        .id();
+    let stub = FloridaClient::direct(&server);
+    let events = server.subscribe();
+    let t0 = std::time::Instant::now();
+
+    // Every device opens a v2 session reporting its compute tier.
+    let mut population_by_tier = [0usize; 3];
+    let open = |i: usize, nonce: u64| -> Result<(u64, u64)> {
+        let device_id = format!("mix-{i}");
+        let verdict = server.auth.authority().issue(
+            &device_id,
+            crate::crypto::attest::IntegrityTier::Device,
+            nonce,
+            u64::MAX / 2,
+        );
+        let profile = DeviceProfile {
+            compute_tier: tier_of(i),
+            ..Default::default()
+        };
+        let grant = stub.open_session(
+            &device_id,
+            verdict,
+            DeviceCaps::default(),
+            profile,
+            PROTO_V2,
+        )?;
+        if !grant.accepted {
+            return Err(Error::Attestation(grant.reason));
+        }
+        Ok((grant.client_id, grant.token))
+    };
+    // (device index, client_id, session token)
+    let mut clients: Vec<(usize, u64, u64)> = Vec::with_capacity(n);
+    for i in 0..n {
+        let (cid, token) = open(i, i as u64)?;
+        population_by_tier[tier_of(i) as usize] += 1;
+        clients.push((i, cid, token));
+    }
+
+    let mut uploads_by_tier = [0u64; 3];
+    let mut nonce = n as u64;
+    for _ in 0..rounds {
+        // Everyone renews its lease and volunteers for the round.
+        for &(_, cid, token) in &clients {
+            let ack = stub.session_heartbeat(cid, token, LoadHints::default())?;
+            if !ack.renewed {
+                return Err(Error::Selection(format!("client {cid}: {}", ack.reason)));
+            }
+            // Joiners queued from the previous round are still in the
+            // pool — their rejoin reads "already joined", which is fine.
+            let join = stub.join_round(cid, task, [0u8; 32])?;
+            if !join.accepted && !join.reason.contains("already joined") {
+                return Err(Error::Task(join.reason));
+            }
+        }
+        // First fetch: the Tiered cohort forms — top `k` by reported tier.
+        let mut in_cohort: Vec<(usize, u64)> = Vec::new();
+        for &(i, cid, _) in &clients {
+            if let RoundRole::Train(_) = stub.fetch_round(cid, task)? {
+                in_cohort.push((i, cid));
+            }
+        }
+        // The slowest quarter of the cohort goes dark (stragglers that
+        // stop heartbeating mid-round).
+        let n_drop = (in_cohort.len() / 4).max(1);
+        in_cohort.sort_by_key(|&(i, _)| tier_of(i));
+        let droppers: Vec<(usize, u64)> = in_cohort[..n_drop].to_vec();
+        let is_dropper = |cid: u64| droppers.iter().any(|&(_, d)| d == cid);
+        // The live cohort members train and upload.
+        server.advance_ms(100);
+        let mut upload = |i: usize, cid: u64| -> Result<()> {
+            if let RoundRole::Train(ri) = stub.fetch_round(cid, task)? {
+                let model = ModelSnapshot::from_compressed(&ri.model_blob)?;
+                stub.upload_plain(crate::proto::rpc::UploadPlain {
+                    client_id: cid,
+                    task_id: task,
+                    round: ri.round,
+                    base_version: model.version,
+                    delta: vec![1.0; model.dim()],
+                    weight: 1.0,
+                    loss: 0.1,
+                })?;
+                uploads_by_tier[tier_of(i) as usize] += 1;
+            }
+            Ok(())
+        };
+        for &(i, cid) in &in_cohort[n_drop..] {
+            upload(i, cid)?;
+        }
+        // Mid-lease the live fleet renews; the droppers stay dark.
+        server.advance_ms(LEASE_MS / 2 - 500);
+        for &(_, cid, token) in &clients {
+            if !is_dropper(cid) {
+                let _ = stub.session_heartbeat(cid, token, LoadHints::default());
+            }
+        }
+        // Past the droppers' expiry: the sweep evicts them mid-round and
+        // backfills their cohort slots from the waiting (low-tier) pool.
+        server.advance_ms(LEASE_MS / 2 + 600);
+        // Backfilled draftees discover their Train role and report.
+        for &(i, cid, _) in &clients {
+            if !is_dropper(cid) {
+                upload(i, cid)?;
+            }
+        }
+        // Dropped devices come back online and reopen their sessions
+        // (fresh token + lease) for the next round.
+        for &(i, dropped_cid) in &droppers {
+            let (cid, token) = open(i, nonce)?;
+            nonce += 1;
+            debug_assert_eq!(cid, dropped_cid, "re-registration keeps the id");
+            if let Some(c) = clients.iter_mut().find(|c| c.0 == i) {
+                c.2 = token;
+            }
+        }
+    }
+
+    let (desc, metrics, _) = server.management.task_status(task)?;
+    if desc.state != TaskState::Completed {
+        return Err(Error::Task(format!(
+            "device mix ended in state {} after {} rounds",
+            desc.state.name(),
+            metrics.rounds.len()
+        )));
+    }
+    let mut evicted = 0u64;
+    let mut backfilled = 0u64;
+    for ev in events.drain() {
+        match ev.kind() {
+            "client_evicted" => evicted += 1,
+            "cohort_backfilled" => backfilled += 1,
+            _ => {}
+        }
+    }
+    Ok(DeviceMixReport {
+        n_clients: n,
+        population_by_tier,
+        uploads_by_tier,
+        evicted,
+        backfilled,
+        rounds_completed: metrics.rounds.len() as u64,
+        failed_rounds: metrics.failed_rounds,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,5 +451,31 @@ mod tests {
         assert!(run_churn_restart(1, 3, 1, 0, tmp.path()).is_err());
         assert!(run_churn_restart(4, 3, 3, 0, tmp.path()).is_err());
         assert!(run_churn_restart(4, 3, 0, 0, tmp.path()).is_err());
+    }
+
+    #[test]
+    fn device_mix_partitions_by_tier_and_backfills_evictions() {
+        let r = run_device_mix(12, 2, 5).unwrap();
+        assert_eq!(r.rounds_completed, 2);
+        assert_eq!(r.failed_rounds, 0, "repair must beat the deadline path");
+        assert_eq!(r.population_by_tier.iter().sum::<usize>(), 12);
+        // Tiered selection: the high tier participates every round…
+        assert!(r.uploads_by_tier[ComputeTier::High as usize] > 0);
+        // …and the low tier participates ONLY via eviction backfill.
+        assert!(r.evicted > 0, "stragglers must be lease-evicted");
+        assert!(r.backfilled > 0, "evicted slots must be drafted from the pool");
+        assert!(
+            r.uploads_by_tier[ComputeTier::Low as usize] > 0,
+            "backfill must pull the waiting low tier into the round"
+        );
+        // Every committed round was fully reported after repair.
+        let total: u64 = r.uploads_by_tier.iter().sum();
+        assert_eq!(total, 2 * (12 / 2) as u64, "k uploads per committed round");
+    }
+
+    #[test]
+    fn device_mix_validates_inputs() {
+        assert!(run_device_mix(4, 2, 0).is_err());
+        assert!(run_device_mix(12, 0, 0).is_err());
     }
 }

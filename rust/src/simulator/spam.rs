@@ -282,13 +282,14 @@ where
                         client.local_dp = local_dp;
                         let mut report = Default::default();
                         let mut tr = trainer;
-                        match client.register() {
+                        // Session protocol v2, with v1 register fallback.
+                        match client.open_session() {
                             Ok(_) => {
                                 if let Err(e) = client.run_task(task_id, &mut tr, &mut report) {
                                     log::warn!("device {i}: {e}");
                                 }
                             }
-                            Err(e) => log::warn!("device {i} register failed: {e}"),
+                            Err(e) => log::warn!("device {i} session open failed: {e}"),
                         }
                         report
                     })

@@ -1,0 +1,315 @@
+//! Integration: the session-oriented client protocol v2.
+//!
+//! Covers the acceptance surface of the redesign end to end:
+//! * a v1 client (bare `Register`, no profile, no session) still
+//!   completes rounds against the v2 server — negotiation fallback;
+//! * a v2 SDK against a v1 server (SessionOpen bounced with
+//!   `ErrorReply`) negotiates down to the one-shot flow transparently;
+//! * a `Tiered`-policy task partitions its cohort by *reported compute
+//!   tier*, and a mid-round lease eviction is backfilled from the pool;
+//! * version negotiation clamps unknown future versions down to v2.
+
+use std::sync::Arc;
+
+use florida::client::{
+    ConstantTrainer, DirectApi, FederatedLearningClient, FloridaClient, ServerApi,
+};
+use florida::config::CohortSpec;
+use florida::crypto::attest::{IntegrityTier, Verdict};
+use florida::error::Result;
+use florida::model::ModelSnapshot;
+use florida::orchestrator::TaskBuilder;
+use florida::proto::{
+    ComputeTier, DeviceCaps, DeviceProfile, LoadHints, Msg, RoundRole, TaskState, PROTO_V2,
+};
+use florida::services::FloridaServer;
+use florida::Error;
+
+fn server(seed: u64) -> Arc<FloridaServer> {
+    Arc::new(FloridaServer::for_testing(true, seed))
+}
+
+fn verdict(s: &FloridaServer, dev: &str, nonce: u64) -> Verdict {
+    s.auth
+        .authority()
+        .issue(dev, IntegrityTier::Device, nonce, u64::MAX / 2)
+}
+
+fn sdk_client(s: &Arc<FloridaServer>, dev: &str, nonce: u64) -> FederatedLearningClient {
+    FederatedLearningClient::new(
+        Box::new(DirectApi {
+            server: Arc::clone(s),
+        }),
+        dev,
+        verdict(s, dev, nonce),
+        DeviceCaps::default(),
+        nonce,
+    )
+}
+
+#[test]
+fn v1_register_client_completes_rounds_against_v2_server() {
+    let s = server(1);
+    let task = TaskBuilder::new("v1-compat")
+        .clients_per_round(1)
+        .rounds(2)
+        .deploy(&s.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
+    let mut client = sdk_client(&s, "legacy-dev", 1);
+    // The deprecated one-shot flow, explicitly: bare Register, no
+    // DeviceProfile, no session, no heartbeats.
+    client.register().unwrap();
+    assert_eq!(client.session_proto(), None);
+    let mut report = Default::default();
+    let mut trainer = ConstantTrainer { step: 1.0 };
+    client.run_task(task, &mut trainer, &mut report).unwrap();
+    assert!(report.task_completed);
+    assert_eq!(report.rounds_participated, 2);
+    // v1 participation leaves no lease behind (the SDK's best-effort
+    // reopen is refused here — the single-use verdict was spent on
+    // register — and the client simply continues sessionless).
+    assert_eq!(s.sessions.live_count(), 0);
+}
+
+/// A "v1 deployment" shim: bounces every session-protocol frame with the
+/// `ErrorReply` an old router would produce, forwards everything else.
+struct V1ServerShim {
+    server: Arc<FloridaServer>,
+}
+
+impl ServerApi for V1ServerShim {
+    fn call(&self, msg: Msg) -> Result<Msg> {
+        match msg {
+            Msg::SessionOpen { .. } | Msg::SessionHeartbeat { .. } | Msg::SessionClose { .. } => {
+                Ok(Msg::ErrorReply {
+                    message: format!("unexpected message {msg:?}"),
+                })
+            }
+            other => Ok(self.server.handle(other)),
+        }
+    }
+}
+
+#[test]
+fn v2_sdk_negotiates_down_against_v1_server() {
+    let s = server(2);
+    let task = TaskBuilder::new("v1-server")
+        .clients_per_round(1)
+        .rounds(1)
+        .deploy(&s.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
+    let mut client = FederatedLearningClient::new(
+        Box::new(V1ServerShim {
+            server: Arc::clone(&s),
+        }),
+        "modern-dev",
+        verdict(&s, "modern-dev", 7),
+        DeviceCaps::default(),
+        7,
+    );
+    // SessionOpen is bounced → the SDK falls back to Register and the
+    // workflow still runs to completion, sessionless.
+    let id = client.open_session().unwrap();
+    assert!(id > 0);
+    assert_eq!(client.session_proto(), None, "fell back to the v1 flow");
+    let mut report = Default::default();
+    let mut trainer = ConstantTrainer { step: 1.0 };
+    client.run_task(task, &mut trainer, &mut report).unwrap();
+    assert!(report.task_completed);
+}
+
+#[test]
+fn unknown_future_version_negotiates_down_to_v2() {
+    let s = server(3);
+    let stub = FloridaClient::direct(&s);
+    let grant = stub
+        .open_session(
+            "v9-dev",
+            verdict(&s, "v9-dev", 1),
+            DeviceCaps::default(),
+            DeviceProfile::default(),
+            99, // a protocol from the future
+        )
+        .unwrap();
+    assert!(grant.accepted, "{}", grant.reason);
+    assert_eq!(grant.proto, PROTO_V2);
+    assert!(grant.lease_ms > 0);
+    assert!(grant.token > 0);
+}
+
+#[test]
+fn tiered_cohort_partitions_by_reported_tier_and_backfills_evictions() {
+    let s = server(4);
+    s.sessions.set_lease_ms(1000);
+    let task = TaskBuilder::new("tiered-mix")
+        .clients_per_round(2)
+        .rounds(1)
+        .cohort_policy(CohortSpec::Tiered)
+        .round_timeout_ms(60_000)
+        .deploy(&s.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
+    let stub = FloridaClient::direct(&s);
+    let events = s.subscribe();
+
+    // Six devices, two per compute tier, joining lows-first so the
+    // backfill draft order is deterministic (FIFO join pool).
+    let open = |dev: &str, nonce: u64, tier: ComputeTier| -> (u64, u64) {
+        let grant = stub
+            .open_session(
+                dev,
+                verdict(&s, dev, nonce),
+                DeviceCaps::default(),
+                DeviceProfile {
+                    compute_tier: tier,
+                    ..Default::default()
+                },
+                PROTO_V2,
+            )
+            .unwrap();
+        assert!(grant.accepted, "{}", grant.reason);
+        (grant.client_id, grant.token)
+    };
+    let (l1, l1_tok) = open("low-1", 1, ComputeTier::Low);
+    let (l2, l2_tok) = open("low-2", 2, ComputeTier::Low);
+    let (m1, m1_tok) = open("mid-1", 3, ComputeTier::Mid);
+    let (m2, m2_tok) = open("mid-2", 4, ComputeTier::Mid);
+    let (h1, h1_tok) = open("high-1", 5, ComputeTier::High);
+    let (h2, _h2_tok) = open("high-2", 6, ComputeTier::High);
+    let all = [l1, l2, m1, m2, h1, h2];
+    for c in all {
+        assert!(stub.join_round(c, task, [0u8; 32]).unwrap().accepted);
+    }
+    // The cohort is partitioned by reported compute tier: exactly the
+    // two High devices train; everyone else stays queued.
+    let mut training = Vec::new();
+    for c in all {
+        match stub.fetch_round(c, task).unwrap() {
+            RoundRole::Train(_) => training.push(c),
+            RoundRole::Wait => {}
+            other => panic!("{other:?}"),
+        }
+    }
+    assert_eq!(training, vec![h1, h2], "cohort must be the High tier");
+
+    // Mid-round, high-2 goes dark: everyone else renews, its lease
+    // expires, the sweep evicts it and drafts the oldest queued joiner
+    // (low-1) into the open cohort.
+    s.advance_ms(800);
+    let renewals = [(l1, l1_tok), (l2, l2_tok), (m1, m1_tok), (m2, m2_tok), (h1, h1_tok)];
+    for (c, tok) in renewals {
+        let ack = stub.session_heartbeat(c, tok, LoadHints::default()).unwrap();
+        assert!(ack.renewed, "{}", ack.reason);
+    }
+    s.advance_ms(400); // high-2's lease (1000ms) expired → evicted
+    assert!(s.sessions.get(h2).is_none());
+    assert!(matches!(
+        stub.fetch_round(l1, task).unwrap(),
+        RoundRole::Train(_)
+    ));
+    assert!(matches!(
+        stub.fetch_round(h2, task).unwrap(),
+        RoundRole::NotSelected
+    ));
+    // The evicted member's late upload is refused…
+    match stub.upload_plain(florida::proto::rpc::UploadPlain {
+        client_id: h2,
+        task_id: task,
+        round: 0,
+        base_version: 0,
+        delta: vec![0.5; 4],
+        weight: 1.0,
+        loss: 0.1,
+    }) {
+        Err(Error::Server(reason)) => assert!(reason.contains("not in cohort"), "{reason}"),
+        other => panic!("expected refusal, got {other:?}"),
+    }
+    // …while the surviving member and the draftee commit the round.
+    for c in [h1, l1] {
+        stub.upload_plain(florida::proto::rpc::UploadPlain {
+            client_id: c,
+            task_id: task,
+            round: 0,
+            base_version: 0,
+            delta: vec![0.5; 4],
+            weight: 1.0,
+            loss: 0.1,
+        })
+        .unwrap();
+    }
+    let st = stub.task_status(task).unwrap();
+    assert_eq!(st.task.state, TaskState::Completed);
+    assert_eq!(st.participants, 2);
+
+    let kinds: Vec<(String, u64)> = events
+        .drain()
+        .into_iter()
+        .filter_map(|ev| match ev {
+            florida::orchestrator::TaskEvent::ClientEvicted { client_id, .. } => {
+                Some(("evicted".to_string(), client_id))
+            }
+            florida::orchestrator::TaskEvent::CohortBackfilled { client_id, .. } => {
+                Some(("backfilled".to_string(), client_id))
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(kinds.contains(&("evicted".to_string(), h2)));
+    assert!(kinds.contains(&("backfilled".to_string(), l1)));
+}
+
+#[test]
+fn v2_sdk_auto_renews_and_closes_its_lease() {
+    // Real-clock server so the SDK's Instant-based half-life renewal is
+    // exercised; short lease forces several renewals within the run.
+    let s = Arc::new(FloridaServer::with_evaluator(
+        true,
+        Arc::new(florida::services::management::NoEval),
+        5,
+        true,
+    ));
+    // Short enough that the 150 ms trainer forces a mid-run half-life
+    // renewal, long enough (vs ~300 ms of work) not to flake under CI
+    // scheduling jitter.
+    s.sessions.set_lease_ms(500);
+    let task = TaskBuilder::new("renewal")
+        .clients_per_round(1)
+        .rounds(2)
+        .deploy(&s.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
+    let mut client = sdk_client(&s, "leased-dev", 9);
+    client.poll_sleep_ms = 20;
+    client.open_session().unwrap();
+    assert_eq!(client.session_proto(), Some(PROTO_V2));
+    assert_eq!(s.sessions.live_count(), 1);
+    let mut report = Default::default();
+    let mut trainer = SlowTrainer;
+    client.run_task(task, &mut trainer, &mut report).unwrap();
+    assert!(report.task_completed);
+    assert_eq!(report.rounds_participated, 2);
+    // Graceful departure: the lease was released at TaskDone.
+    assert_eq!(s.sessions.live_count(), 0);
+}
+
+/// Trainer slow enough that the lease must be renewed mid-run.
+struct SlowTrainer;
+
+impl florida::client::Trainer for SlowTrainer {
+    fn train(
+        &mut self,
+        model: &ModelSnapshot,
+        _round: u64,
+        _lr: f32,
+        _prox_mu: f32,
+    ) -> Result<florida::client::TrainOutcome> {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        Ok(florida::client::TrainOutcome {
+            new_params: model.params.iter().map(|p| p + 1.0).collect(),
+            weight: 1.0,
+            loss: 0.0,
+        })
+    }
+}

@@ -681,3 +681,130 @@ fn prop_selection_cohort_uniformity() {
         );
     }
 }
+
+#[test]
+fn prop_session_frames_roundtrip_both_codecs() {
+    // decode(encode(x)) is identity for every session-protocol-v2 frame,
+    // with randomized field soup, across BOTH wire codecs — and version
+    // negotiation always lands inside [v1, v2].
+    use florida::crypto::attest::{Authority, IntegrityTier};
+    use florida::proto::{
+        decode_frame, encode_frame, negotiate_proto, BandwidthClass, ComputeTier, DeviceCaps,
+        DeviceProfile, LoadHints, Msg, WireCodec, PROTO_V1, PROTO_V2,
+    };
+    let auth = Authority::new(b"prop-session-authority");
+    property("session-frame-roundtrip", 128, |seed, rng| {
+        let profile = DeviceProfile {
+            compute_tier: ComputeTier::from_u8(rng.below(3) as u8).unwrap(),
+            bandwidth: BandwidthClass::from_u8(rng.below(3) as u8).unwrap(),
+            // Durations ride as JSON numbers (f64-exact below 2^53);
+            // only credentials (tokens, nonces) get the string encoding.
+            avail_window_ms: rng.below(1 << 50),
+        };
+        let hints = LoadHints {
+            load: rng.next_f32(),
+            battery: rng.next_f32() - 0.5,
+            charging: rng.below(2) == 0,
+        };
+        let device_id = format!("dev-{seed}");
+        let msgs = vec![
+            Msg::SessionOpen {
+                device_id: device_id.clone(),
+                verdict: auth.issue(
+                    &device_id,
+                    IntegrityTier::from_u8(rng.below(3) as u8).unwrap(),
+                    rng.next_u64(),
+                    rng.next_u64(),
+                ),
+                caps: DeviceCaps::default(),
+                profile,
+                proto_max: rng.below(1 << 20) as u32,
+            },
+            Msg::SessionHeartbeat {
+                client_id: rng.below(1 << 40),
+                // Tokens ride as strings in JSON: the FULL u64 range
+                // must round-trip exactly (credentials, not counters).
+                token: rng.next_u64(),
+                hints,
+            },
+            Msg::SessionClose {
+                client_id: rng.below(1 << 40),
+                token: rng.next_u64(),
+            },
+            Msg::SessionGrant {
+                accepted: rng.below(2) == 0,
+                client_id: rng.below(1 << 40),
+                token: rng.next_u64(),
+                lease_ms: rng.below(1 << 40),
+                proto: rng.below(16) as u32,
+                reason: format!("r{}", rng.below(1000)),
+            },
+            Msg::LeaseAck {
+                renewed: rng.below(2) == 0,
+                lease_ms: rng.below(1 << 40),
+                reason: String::new(),
+            },
+        ];
+        for msg in msgs {
+            for codec in [WireCodec::Binary, WireCodec::Json] {
+                let frame = encode_frame(&msg, codec).unwrap();
+                let (back, got) = decode_frame(&frame).unwrap();
+                assert_eq!(got, codec);
+                assert_eq!(back, msg, "codec {codec:?}");
+            }
+        }
+        let negotiated = negotiate_proto(rng.next_u32());
+        assert!((PROTO_V1..=PROTO_V2).contains(&negotiated));
+    });
+}
+
+#[test]
+fn prop_v1_frames_still_decode_and_negotiate_down_cleanly() {
+    // The v1 surface is untouched by the session redesign: every legacy
+    // frame decodes bit-for-bit, and a v1 `Register` against the v2
+    // server still yields a usable principal (negotiation fallback).
+    use florida::crypto::attest::IntegrityTier;
+    use florida::proto::{decode_frame, encode_frame, DeviceCaps, Msg, WireCodec};
+    use florida::services::FloridaServer;
+    let server = FloridaServer::for_testing(true, 0xF1);
+    property("v1-compat", 64, |seed, rng| {
+        let legacy = vec![
+            Msg::Heartbeat {
+                client_id: rng.below(1 << 40),
+            },
+            Msg::PollTask {
+                client_id: rng.below(1 << 40),
+                app_name: format!("app-{}", rng.below(100)),
+                workflow_name: format!("wf-{}", rng.below(100)),
+            },
+            Msg::GetTaskStatus {
+                task_id: rng.below(1 << 40),
+            },
+        ];
+        for msg in legacy {
+            for codec in [WireCodec::Binary, WireCodec::Json] {
+                let frame = encode_frame(&msg, codec).unwrap();
+                let (back, _) = decode_frame(&frame).unwrap();
+                assert_eq!(back, msg);
+            }
+        }
+        let dev = format!("legacy-{seed}");
+        let verdict =
+            server
+                .auth
+                .authority()
+                .issue(&dev, IntegrityTier::Device, seed, u64::MAX / 2);
+        match server.handle(Msg::Register {
+            device_id: dev,
+            verdict,
+            caps: DeviceCaps::default(),
+        }) {
+            Msg::RegisterAck {
+                accepted: true,
+                client_id,
+                ..
+            } => assert!(client_id > 0),
+            other => panic!("v1 register must keep working: {other:?}"),
+        }
+    });
+}

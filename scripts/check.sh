@@ -31,6 +31,12 @@ if [[ "$fast" == "0" ]]; then
   echo "==> cargo test -q (incl. integration_recovery fsync path)"
   cargo test -q
 
+  # Capability-aware selection smoke: a small mixed-tier population under
+  # the Tiered policy with mid-round lease evictions + backfill, so the
+  # session protocol's repair path is exercised on every check.
+  echo "==> device-mix scenario smoke (scale --device-mix)"
+  cargo run --release --quiet -- scale --device-mix --clients 12 --rounds 2
+
   # Perf trajectory: snapshot the hot-path micro-bench into
   # BENCH_hotpath.json (quick measure windows; compare across commits).
   echo "==> bench snapshot (hotpath_micro -> BENCH_hotpath.json)"
