@@ -341,6 +341,76 @@ fn main() {
         }));
     }
 
+    bench::section("hierarchical aggregation (leaf fold + root partial merge)");
+    // The tree path's two hot costs: a leaf folding its member slice
+    // into one partial (leaf_fold_forward), and the master absorbing a
+    // forwarded partial (partial_merge). Absorb is O(dim) regardless of
+    // how many member updates the partial folded — that independence is
+    // the fan-in reduction the tree buys, so it is measured at two
+    // cohort sizes that must land on the same cost.
+    {
+        use florida::aggregation::{self, UpdateStats};
+        use florida::aggtree::{LeafAggregator, LeafConfig};
+        use florida::proto::rpc;
+
+        let mk_partial = |members: u64| {
+            let mut fold = aggregation::by_name("fedavg", 0.0)
+                .expect("agg")
+                .begin(dim)
+                .expect("begin");
+            for c in 1..=members {
+                fold.accept(
+                    &delta,
+                    &UpdateStats {
+                        client_id: c,
+                        weight: 1.0,
+                        loss: 0.1,
+                        staleness: 0,
+                    },
+                )
+                .expect("accept");
+            }
+            fold.export()
+        };
+        let part_small = mk_partial(8);
+        let part_large = mk_partial(256);
+        let mut master = aggregation::by_name("fedavg", 0.0)
+            .expect("agg")
+            .begin(dim)
+            .expect("begin");
+        snap.report(b.run_bytes("partial_merge (8-member partial)", bytes, || {
+            master.absorb(&part_small).expect("absorb");
+        }));
+        snap.report(b.run_bytes("partial_merge (256-member partial)", bytes, || {
+            master.absorb(&part_large).expect("absorb");
+        }));
+
+        let k = 32u64;
+        let members: Vec<u64> = (1..=k).collect();
+        let assignment = rpc::LeafAssignment {
+            accepted: true,
+            round: 1,
+            base_version: 0,
+            members: members.clone(),
+            reason: String::new(),
+        };
+        let mut leaf = LeafAggregator::new(LeafConfig {
+            leaf_id: 9_000,
+            leaf_index: 0,
+            leaf_count: 1,
+            aggregator: "fedavg".into(),
+            prox_mu: 0.0,
+        });
+        snap.report(b.run_bytes("leaf_fold_forward (32 uploads → 1 partial)", k * bytes, || {
+            leaf.begin_round(&assignment, dim).expect("begin_round");
+            for &m in &members {
+                let (ok, why) = leaf.accept(m, 1, &delta, 1.0, 0.1).expect("accept");
+                assert!(ok, "{why}");
+            }
+            std::hint::black_box(leaf.forward_request(5).expect("forward"));
+        }));
+    }
+
     bench::section("crypto primitives");
     let kp1 = KeyPair::generate(&mut rng);
     let kp2 = KeyPair::generate(&mut rng);

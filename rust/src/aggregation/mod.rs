@@ -53,8 +53,35 @@ impl ClientUpdate {
     }
 }
 
+/// A fold's exportable state — what a leaf aggregator ships up the
+/// tree (§Hierarchical aggregation). The weighted sum stays f64 so a
+/// leaf→master hop loses no precision versus folding at the root.
+///
+/// `min_loss` is the leaf's running DGA anchor (`+inf` for strategies
+/// that don't track one): the master needs it to re-anchor the leaf's
+/// softmax terms onto the global minimum before merging.
+#[derive(Clone, Debug)]
+pub struct PartialFold {
+    pub sum: Vec<f64>,
+    pub total_weight: f64,
+    pub count: usize,
+    pub min_loss: f64,
+}
+
+impl PartialFold {
+    pub fn dim(&self) -> usize {
+        self.sum.len()
+    }
+}
+
 /// In-progress aggregation state: one fold per round (sync) or buffer
 /// epoch (async). Implementations must stay O(dim) + O(1) per update.
+///
+/// Folds are **associative**: `export`/`absorb` split a cohort across
+/// leaf folds whose merged result equals the flat fold of the same
+/// updates (bit-identical when the f64 sums are exact; within f64
+/// re-association error otherwise). `absorb` is O(dim) regardless of
+/// how many updates the partial folded — the leaf-tree scaling lever.
 pub trait AggregatorFold: Send {
     /// Fold one update in. Errors (dim mismatch, non-positive weight)
     /// leave the fold unchanged.
@@ -63,8 +90,34 @@ pub trait AggregatorFold: Send {
     /// Updates folded in so far.
     fn count(&self) -> usize;
 
+    /// Snapshot this fold's state for forwarding to a parent fold.
+    fn export(&self) -> PartialFold;
+
+    /// Merge a child fold's exported state. Errors (dim mismatch,
+    /// empty or non-finite partial) leave the fold unchanged.
+    fn absorb(&mut self, part: &PartialFold) -> Result<()>;
+
     /// Combined pseudo-gradient; error if nothing was folded.
     fn finish(self: Box<Self>) -> Result<Vec<f32>>;
+}
+
+/// Shared export for strategies whose merge is plain addition (any
+/// per-update reweighting was already baked into the weights at
+/// `accept` time — FedAvg/FedProx, and FedBuff's staleness discount).
+fn plain_export(acc: &DeltaAccumulator) -> PartialFold {
+    PartialFold {
+        sum: acc.sum().to_vec(),
+        total_weight: acc.total_weight(),
+        count: acc.count(),
+        min_loss: f64::INFINITY,
+    }
+}
+
+fn plain_absorb(acc: &mut DeltaAccumulator, part: &PartialFold) -> Result<()> {
+    if part.count == 0 {
+        return Err(Error::Model("empty partial".into()));
+    }
+    acc.merge_scaled(&part.sum, part.total_weight, part.count, 1.0)
 }
 
 /// An aggregation strategy: a factory of per-round streaming folds.
@@ -100,6 +153,14 @@ impl AggregatorFold for MeanFold {
 
     fn count(&self) -> usize {
         self.acc.count()
+    }
+
+    fn export(&self) -> PartialFold {
+        plain_export(&self.acc)
+    }
+
+    fn absorb(&mut self, part: &PartialFold) -> Result<()> {
+        plain_absorb(&mut self.acc, part)
     }
 
     fn finish(self: Box<Self>) -> Result<Vec<f32>> {
@@ -205,6 +266,59 @@ impl AggregatorFold for DgaFold {
         self.acc.count()
     }
 
+    fn export(&self) -> PartialFold {
+        PartialFold {
+            sum: self.acc.sum().to_vec(),
+            total_weight: self.acc.total_weight(),
+            count: self.acc.count(),
+            min_loss: self.min_loss,
+        }
+    }
+
+    /// Merge a leaf's partial by re-anchoring its softmax terms. The
+    /// leaf folded relative to its local min-loss; multiplying both
+    /// sides by `exp(-(anchor_gap)/temp)` puts them on one reference
+    /// point, so the merged fold matches the flat fold of the union.
+    fn absorb(&mut self, part: &PartialFold) -> Result<()> {
+        // Validate everything before the irreversible rescale — a
+        // rejected partial must leave the fold unchanged.
+        if part.count == 0 || !part.min_loss.is_finite() {
+            return Err(Error::Model("empty or non-finite DGA partial".into()));
+        }
+        if part.dim() != self.acc.dim() {
+            return Err(Error::Model(format!(
+                "dim mismatch {} vs {}",
+                part.dim(),
+                self.acc.dim()
+            )));
+        }
+        if !part.total_weight.is_finite() || part.total_weight <= 0.0 {
+            return Err(Error::Model(format!(
+                "non-positive partial weight {}",
+                part.total_weight
+            )));
+        }
+        if part.min_loss < self.min_loss {
+            // Partial brings a new global minimum: rescale what we hold
+            // (mirrors the streaming accept path), then fold the
+            // partial at factor 1.0 — it is already on the new anchor.
+            if self.min_loss.is_finite() {
+                self.acc
+                    .scale(((part.min_loss - self.min_loss) / self.temp).exp());
+            }
+            self.min_loss = part.min_loss;
+            self.acc
+                .merge_scaled(&part.sum, part.total_weight, part.count, 1.0)
+        } else {
+            // Our anchor stays; discount the partial by its anchor gap.
+            // Clamp like `accept`'s 1e-12 weight floor so a far-off
+            // leaf underflowing exp() can't zero the merge factor.
+            let factor = ((-(part.min_loss - self.min_loss) / self.temp).exp()).max(1e-300);
+            self.acc
+                .merge_scaled(&part.sum, part.total_weight, part.count, factor)
+        }
+    }
+
     fn finish(self: Box<Self>) -> Result<Vec<f32>> {
         self.acc.mean()
     }
@@ -237,6 +351,16 @@ impl AggregatorFold for FedBuffFold {
 
     fn count(&self) -> usize {
         self.acc.count()
+    }
+
+    fn export(&self) -> PartialFold {
+        // The staleness discount is baked into each weight at accept,
+        // so FedBuff partials merge by plain addition.
+        plain_export(&self.acc)
+    }
+
+    fn absorb(&mut self, part: &PartialFold) -> Result<()> {
+        plain_absorb(&mut self.acc, part)
     }
 
     fn finish(self: Box<Self>) -> Result<Vec<f32>> {
@@ -424,6 +548,116 @@ mod tests {
         let m = fold.finish().unwrap();
         assert!((m[0] - 0.25).abs() < 1e-6);
         assert!((m[1] - 0.75).abs() < 1e-6);
+    }
+
+    /// Fold `ups` flat, and split across `splits` leaf folds merged
+    /// into a master fold — return both means.
+    fn tree_vs_flat(
+        agg: &dyn Aggregator,
+        ups: &[ClientUpdate],
+        splits: &[std::ops::Range<usize>],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let dim = ups[0].delta.len();
+        let flat = agg.aggregate(ups).unwrap();
+        let mut master = agg.begin(dim).unwrap();
+        for r in splits {
+            let mut leaf = agg.begin(dim).unwrap();
+            for u in &ups[r.clone()] {
+                leaf.accept(&u.delta, &u.stats()).unwrap();
+            }
+            master.absorb(&leaf.export()).unwrap();
+        }
+        assert_eq!(master.count(), ups.len());
+        (master.finish().unwrap(), flat)
+    }
+
+    #[test]
+    fn tree_fold_matches_flat_fedavg_bitwise() {
+        // Dyadic inputs: every f64 partial sum is exact, so any
+        // association of the adds yields bit-identical results.
+        let ups = vec![
+            upd(1, vec![1.0, 0.5], 1.0, 0.0, 0),
+            upd(2, vec![0.25, 2.0], 2.0, 0.0, 0),
+            upd(3, vec![-1.5, 4.0], 1.0, 0.0, 0),
+            upd(4, vec![0.125, -8.0], 4.0, 0.0, 0),
+        ];
+        let (tree, flat) = tree_vs_flat(&FedAvg, &ups, &[0..2, 2..4]);
+        assert_eq!(tree, flat);
+    }
+
+    #[test]
+    fn tree_fold_matches_flat_dga_any_leaf_holds_min() {
+        // The global min-loss landing on the first or the last leaf
+        // exercises both absorb branches (re-anchor vs discount).
+        let ups = vec![
+            upd(1, vec![1.0, -2.0], 1.0, 0.2, 0),
+            upd(2, vec![0.5, 1.0], 2.0, 1.3, 0),
+            upd(3, vec![-1.0, 3.0], 1.5, 0.9, 0),
+            upd(4, vec![2.0, 0.0], 1.0, 2.4, 0),
+        ];
+        let dga = Dga { temp: 0.7 };
+        for splits in [&[0..2, 2..4][..], &[0..1, 1..3, 3..4][..]] {
+            let (tree, flat) = tree_vs_flat(&dga, &ups, splits);
+            for (x, y) in tree.iter().zip(&flat) {
+                assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+            }
+        }
+        let mut rev = ups;
+        rev.reverse(); // min loss now in the last leaf
+        let (tree, flat) = tree_vs_flat(&dga, &rev, &[0..2, 2..4]);
+        for (x, y) in tree.iter().zip(&flat) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tree_fold_matches_flat_fedbuff() {
+        let ups = vec![
+            upd(1, vec![1.0], 1.0, 0.0, 0),
+            upd(2, vec![-1.0], 1.0, 0.0, 7),
+            upd(3, vec![3.0], 2.0, 0.0, 2),
+        ];
+        let (tree, flat) = tree_vs_flat(&FedBuff::default(), &ups, &[0..1, 1..3]);
+        for (x, y) in tree.iter().zip(&flat) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn absorb_rejects_bad_partials_without_mutation() {
+        let mut fold = Dga { temp: 1.0 }.begin(2).unwrap();
+        fold.accept(&[1.0, 1.0], &upd(1, vec![], 1.0, 0.5, 0).stats())
+            .unwrap();
+        // Empty partial.
+        assert!(fold
+            .absorb(&PartialFold {
+                sum: vec![0.0; 2],
+                total_weight: 0.0,
+                count: 0,
+                min_loss: f64::INFINITY,
+            })
+            .is_err());
+        // Dim mismatch with a would-be new minimum: must not rescale.
+        assert!(fold
+            .absorb(&PartialFold {
+                sum: vec![1.0; 3],
+                total_weight: 1.0,
+                count: 1,
+                min_loss: -100.0,
+            })
+            .is_err());
+        let got = fold.finish().unwrap();
+        assert!((got[0] - 1.0).abs() < 1e-6, "{}", got[0]);
+        // Plain folds reject empties too.
+        let mut mean = FedAvg.begin(1).unwrap();
+        assert!(mean
+            .absorb(&PartialFold {
+                sum: vec![0.0],
+                total_weight: 0.0,
+                count: 0,
+                min_loss: f64::INFINITY,
+            })
+            .is_err());
     }
 
     #[test]

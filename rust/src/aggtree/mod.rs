@@ -1,0 +1,413 @@
+//! Hierarchical aggregation: the leaf side of the leaf/master tree.
+//!
+//! At cross-device scale a single master aggregator is the fan-in
+//! bottleneck: every device upload lands on one ingest surface and one
+//! streaming fold. This module multiplies the fan-in by putting a layer
+//! of **leaf aggregators** between devices and the master:
+//!
+//! ```text
+//!   devices ──► LeafAggregator 0 ─┐
+//!   devices ──► LeafAggregator 1 ─┼─► ForwardPartial ─► master fold
+//!   devices ──► LeafAggregator k ─┘      (O(dim) merge at the root)
+//! ```
+//!
+//! Each leaf claims a deterministic slice of the open round's cohort
+//! ([`rpc::LeafAssign`]), folds its members' uploads locally through the
+//! exact same streaming [`AggregatorFold`] the master uses, and forwards
+//! one O(dim) [`rpc::ForwardPartial`] frame. The master merges partials
+//! via [`AggregatorFold::absorb`], so the tree result is the same fold —
+//! *bit-identical* for plain-addition strategies over dyadic inputs —
+//! and the per-upload cost at the root collapses from O(cohort · dim)
+//! to O(leaves · dim).
+//!
+//! Composition rules enforced by the server seam (`RoundEngine`):
+//! - **Secure aggregation** rounds refuse leaf assignments: masked sums
+//!   must reach the root unmerged so mask cancellation and unmasking
+//!   happen in one place.
+//! - **DP noise** composes only at the root (the master's commit path);
+//!   leaves never add noise, so the privacy accounting is unchanged.
+//! - A leaf that dies mid-round simply never reports its members; the
+//!   root's pacing deadline fails the round and the retry starts from a
+//!   clean fold — no update can be double-counted.
+
+use std::collections::BTreeSet;
+
+use crate::aggregation::{self, AggregatorFold, UpdateStats};
+use crate::client::FloridaClient;
+use crate::error::{Error, Result};
+use crate::proto::rpc;
+
+/// Static identity + strategy of one leaf aggregator.
+#[derive(Clone, Debug)]
+pub struct LeafConfig {
+    /// Infrastructure identity (not a device principal).
+    pub leaf_id: u64,
+    /// Which slice of the cohort this leaf owns.
+    pub leaf_index: u32,
+    /// Total leaves splitting the cohort this round.
+    pub leaf_count: u32,
+    /// Must match the task's aggregator so leaf folds and the master
+    /// merge compose associatively (enforced numerically, not by name —
+    /// a mismatched strategy shows up as a divergent model).
+    pub aggregator: String,
+    pub prox_mu: f32,
+}
+
+/// In-flight state for the round a leaf currently owns.
+struct LeafRound {
+    round: u64,
+    base_version: u64,
+    members: Vec<u64>,
+    reported: BTreeSet<u64>,
+    fold: Box<dyn AggregatorFold>,
+    loss_sum: f64,
+}
+
+/// One leaf of the aggregation tree: owns a cohort slice, folds member
+/// uploads locally, forwards a single partial accumulator to the master.
+pub struct LeafAggregator {
+    cfg: LeafConfig,
+    open: Option<LeafRound>,
+}
+
+impl LeafAggregator {
+    pub fn new(cfg: LeafConfig) -> LeafAggregator {
+        LeafAggregator { cfg, open: None }
+    }
+
+    pub fn leaf_id(&self) -> u64 {
+        self.cfg.leaf_id
+    }
+
+    /// The round currently being folded, if any.
+    pub fn round(&self) -> Option<u64> {
+        self.open.as_ref().map(|r| r.round)
+    }
+
+    /// Members of the current slice (empty when no round is open).
+    pub fn members(&self) -> &[u64] {
+        self.open.as_ref().map(|r| r.members.as_slice()).unwrap_or(&[])
+    }
+
+    /// Members that have not reported yet (stragglers at deadline).
+    pub fn pending(&self) -> usize {
+        self.open
+            .as_ref()
+            .map(|r| r.members.len() - r.reported.len())
+            .unwrap_or(0)
+    }
+
+    /// Every assigned member's update has been folded.
+    pub fn complete(&self) -> bool {
+        self.open
+            .as_ref()
+            .map(|r| r.reported.len() == r.members.len())
+            .unwrap_or(false)
+    }
+
+    /// Open a round from a granted assignment. A refused assignment is
+    /// an error here — callers inspect `accepted` first and back off.
+    /// Re-opening replaces any stale previous round (the master already
+    /// failed it, or this leaf missed the deadline).
+    pub fn begin_round(&mut self, a: &rpc::LeafAssignment, dim: usize) -> Result<()> {
+        if !a.accepted {
+            return Err(Error::Task(format!("assignment refused: {}", a.reason)));
+        }
+        if a.members.is_empty() {
+            return Err(Error::Task("assignment carries no members".into()));
+        }
+        let fold = aggregation::by_name(&self.cfg.aggregator, self.cfg.prox_mu)?.begin(dim)?;
+        self.open = Some(LeafRound {
+            round: a.round,
+            base_version: a.base_version,
+            members: a.members.clone(),
+            reported: BTreeSet::new(),
+            fold,
+            loss_sum: 0.0,
+        });
+        Ok(())
+    }
+
+    /// Fold one member's upload. Structured refusals mirror the root's
+    /// ingest: a rejected upload leaves the fold unchanged and the
+    /// device free to retry (or go straight to the root).
+    pub fn accept(
+        &mut self,
+        client_id: u64,
+        round: u64,
+        delta: &[f32],
+        weight: f64,
+        loss: f64,
+    ) -> Result<(bool, String)> {
+        let r = match &mut self.open {
+            Some(r) => r,
+            None => return Ok((false, "no round open at this leaf".into())),
+        };
+        if round != r.round {
+            return Ok((false, format!("stale round {round} (now {})", r.round)));
+        }
+        if !r.members.contains(&client_id) {
+            return Ok((false, format!("client {client_id} not in this leaf's slice")));
+        }
+        if r.reported.contains(&client_id) {
+            return Ok((false, "duplicate upload".into()));
+        }
+        if !loss.is_finite() {
+            return Ok((false, format!("bad loss {loss}")));
+        }
+        let accepted = r.fold.accept(
+            delta,
+            &UpdateStats {
+                client_id,
+                weight,
+                loss,
+                staleness: 0,
+            },
+        );
+        if let Err(e) = accepted {
+            return Ok((false, e.to_string()));
+        }
+        r.reported.insert(client_id);
+        r.loss_sum += loss;
+        Ok((true, String::new()))
+    }
+
+    /// Export the fold as one typed [`rpc::ForwardPartial`] request and
+    /// close the leaf's round — forwarding is terminal: whatever the
+    /// master answers, this leaf starts fresh from the next assignment.
+    /// Only members actually folded ride along (stragglers are simply
+    /// absent, and the root's pacing decides the round's fate).
+    pub fn forward_request(&mut self, task_id: u64) -> Result<rpc::ForwardPartial> {
+        let r = self
+            .open
+            .take()
+            .ok_or_else(|| Error::Task("no round open at this leaf".into()))?;
+        if r.reported.is_empty() {
+            return Err(Error::Task("nothing folded — nothing to forward".into()));
+        }
+        let part = r.fold.export();
+        Ok(rpc::ForwardPartial {
+            leaf_id: self.cfg.leaf_id,
+            task_id,
+            round: r.round,
+            base_version: r.base_version,
+            members: r.reported.into_iter().collect(),
+            sum: part.sum,
+            total_weight: part.total_weight,
+            count: part.count as u64,
+            loss_sum: r.loss_sum,
+            min_loss: part.min_loss,
+        })
+    }
+
+    /// Claim this leaf's slice of `task_id`'s open round through the
+    /// typed router. Returns the assignment verbatim — `accepted: false`
+    /// is the back-off signal, not an error.
+    pub fn claim(&self, client: &FloridaClient, task_id: u64) -> Result<rpc::LeafAssignment> {
+        client.leaf_assign(
+            self.cfg.leaf_id,
+            task_id,
+            self.cfg.leaf_index,
+            self.cfg.leaf_count,
+        )
+    }
+
+    /// Forward the folded partial to the master through the typed
+    /// router. A rejected partial surfaces as `Err(Error::Server)`.
+    pub fn forward(&mut self, client: &FloridaClient, task_id: u64) -> Result<rpc::LeafAck> {
+        let req = self.forward_request(task_id)?;
+        client.forward_partial(req)
+    }
+}
+
+/// The engine's deterministic partition rule, exposed for callers that
+/// split a cohort locally (tests, fleet drivers): position `i` of the
+/// sorted cohort belongs to leaf `i % leaf_count`. Disjoint cover for
+/// any `leaf_count ≥ 1`.
+pub fn slice_of(cohort_sorted: &[u64], leaf_index: u32, leaf_count: u32) -> Vec<u64> {
+    cohort_sorted
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| leaf_count != 0 && i % leaf_count as usize == leaf_index as usize)
+        .map(|(_, &c)| c)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn assignment(round: u64, members: Vec<u64>) -> rpc::LeafAssignment {
+        rpc::LeafAssignment {
+            accepted: true,
+            round,
+            base_version: 0,
+            members,
+            reason: String::new(),
+        }
+    }
+
+    fn leaf(aggregator: &str) -> LeafAggregator {
+        LeafAggregator::new(LeafConfig {
+            leaf_id: 100,
+            leaf_index: 0,
+            leaf_count: 2,
+            aggregator: aggregator.into(),
+            prox_mu: 0.0,
+        })
+    }
+
+    #[test]
+    fn slice_of_is_a_disjoint_cover() {
+        let cohort: Vec<u64> = (10..23).collect();
+        for leaf_count in 1..=5u32 {
+            let mut seen = BTreeSet::new();
+            for i in 0..leaf_count {
+                for m in slice_of(&cohort, i, leaf_count) {
+                    assert!(seen.insert(m), "member {m} in two slices");
+                }
+            }
+            assert_eq!(seen.len(), cohort.len());
+        }
+    }
+
+    #[test]
+    fn leaf_validates_membership_rounds_and_duplicates() {
+        let mut l = leaf("fedavg");
+        // No round open yet.
+        let (ok, why) = l.accept(3, 0, &[1.0], 1.0, 0.1).unwrap();
+        assert!(!ok && why.contains("no round"), "{why}");
+        l.begin_round(&assignment(2, vec![3, 5]), 1).unwrap();
+        assert_eq!(l.round(), Some(2));
+        assert_eq!(l.pending(), 2);
+        // Not in the slice.
+        let (ok, why) = l.accept(4, 2, &[1.0], 1.0, 0.1).unwrap();
+        assert!(!ok && why.contains("not in this leaf"), "{why}");
+        // Stale round.
+        let (ok, why) = l.accept(3, 1, &[1.0], 1.0, 0.1).unwrap();
+        assert!(!ok && why.contains("stale round"), "{why}");
+        // Bad fold input leaves state unchanged, member free to retry.
+        let (ok, _) = l.accept(3, 2, &[1.0, 2.0], 1.0, 0.1).unwrap();
+        assert!(!ok, "dim mismatch must be refused");
+        assert_eq!(l.pending(), 2);
+        let (ok, why) = l.accept(3, 2, &[1.0], 1.0, 0.1).unwrap();
+        assert!(ok, "{why}");
+        // Duplicate.
+        let (ok, why) = l.accept(3, 2, &[1.0], 1.0, 0.1).unwrap();
+        assert!(!ok && why.contains("duplicate"), "{why}");
+        assert!(!l.complete());
+        let (ok, _) = l.accept(5, 2, &[1.0], 1.0, 0.1).unwrap();
+        assert!(ok);
+        assert!(l.complete());
+    }
+
+    #[test]
+    fn forward_request_carries_only_folded_members() {
+        let mut l = leaf("fedavg");
+        // Nothing open, then nothing folded: both are errors.
+        assert!(l.forward_request(1).is_err());
+        l.begin_round(&assignment(0, vec![3, 5, 9]), 2).unwrap();
+        assert!(l.forward_request(1).is_err());
+        l.begin_round(&assignment(0, vec![3, 5, 9]), 2).unwrap();
+        l.accept(5, 0, &[1.0, 1.0], 2.0, 0.5).unwrap();
+        l.accept(3, 0, &[1.0, 1.0], 1.0, 0.3).unwrap();
+        let req = l.forward_request(7).unwrap();
+        assert_eq!(req.leaf_id, 100);
+        assert_eq!(req.task_id, 7);
+        assert_eq!(req.members, vec![3, 5], "straggler 9 must be absent");
+        assert_eq!(req.count, 2);
+        assert!((req.total_weight - 3.0).abs() < 1e-12);
+        assert!((req.loss_sum - 0.8).abs() < 1e-12);
+        // Forwarding closed the round.
+        assert_eq!(l.round(), None);
+        assert!(l.forward_request(7).is_err());
+    }
+
+    /// The satellite property test: for random cohorts, random updates,
+    /// and random slice partitions, folding through leaves and absorbing
+    /// at a master fold matches the flat single-fold reference — for
+    /// every aggregation strategy, including the reweighting ones
+    /// (fedbuff staleness discounts, dga loss softmax).
+    #[test]
+    fn prop_tree_fold_matches_flat_reference() {
+        let mut rng = Rng::new(0xF10F1DA);
+        for trial in 0..40 {
+            for name in ["fedavg", "fedprox", "fedbuff", "dga"] {
+                let agg = aggregation::by_name(name, 0.01).unwrap();
+                let dim = 1 + (rng.next_u64() % 6) as usize;
+                let n = 1 + (rng.next_u64() % 9) as usize;
+                let leaf_count = 1 + (rng.next_u64() % 4) as u32;
+                let updates: Vec<(u64, Vec<f32>, f64, f64)> = (0..n)
+                    .map(|i| {
+                        let delta: Vec<f32> =
+                            (0..dim).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                        let weight = 0.5 + rng.next_f64() * 4.0;
+                        let loss = rng.next_f64() * 3.0;
+                        (i as u64 + 1, delta, weight, loss)
+                    })
+                    .collect();
+
+                // Flat reference: one fold sees every update.
+                let mut flat = agg.begin(dim).unwrap();
+                for (id, delta, weight, loss) in &updates {
+                    flat.accept(
+                        delta,
+                        &UpdateStats {
+                            client_id: *id,
+                            weight: *weight,
+                            loss: *loss,
+                            staleness: 0,
+                        },
+                    )
+                    .unwrap();
+                }
+                let want = flat.finish().unwrap();
+
+                // Tree: leaves fold their slices, the master absorbs the
+                // exported partials in a shuffled arrival order.
+                let cohort: Vec<u64> = updates.iter().map(|u| u.0).collect();
+                let mut master = agg.begin(dim).unwrap();
+                let mut order: Vec<u32> = (0..leaf_count).collect();
+                rng.shuffle(&mut order);
+                for li in order {
+                    let members = slice_of(&cohort, li, leaf_count);
+                    if members.is_empty() {
+                        continue;
+                    }
+                    let mut l = LeafAggregator::new(LeafConfig {
+                        leaf_id: 200 + li as u64,
+                        leaf_index: li,
+                        leaf_count,
+                        aggregator: name.into(),
+                        prox_mu: 0.01,
+                    });
+                    l.begin_round(&assignment(0, members.clone()), dim).unwrap();
+                    for (id, delta, weight, loss) in &updates {
+                        if members.contains(id) {
+                            let (ok, why) = l.accept(*id, 0, delta, *weight, *loss).unwrap();
+                            assert!(ok, "{why}");
+                        }
+                    }
+                    let req = l.forward_request(1).unwrap();
+                    master
+                        .absorb(&crate::aggregation::PartialFold {
+                            sum: req.sum,
+                            total_weight: req.total_weight,
+                            count: req.count as usize,
+                            min_loss: req.min_loss,
+                        })
+                        .unwrap();
+                }
+                assert_eq!(master.count(), n);
+                let got = master.finish().unwrap();
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                        "{name} trial {trial}: tree {g} vs flat {w} (dim {dim}, n {n}, leaves {leaf_count})"
+                    );
+                }
+            }
+        }
+    }
+}

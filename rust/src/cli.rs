@@ -114,6 +114,9 @@ COMMANDS:
              [--device-mix]  mixed-tier population under the Tiered
              policy: stragglers drop mid-round, leases expire, cohort
              slots are backfilled; reports per-tier participation
+             [--tree depth=2 --leaves N]  hierarchical aggregation:
+             leaf aggregators fold their cohort slices and forward one
+             partial each; verifies bit-identity against the flat path
   serve      Serve the platform over TCP
              --addr HOST:PORT [--task cfg.json] [--artifacts DIR]
              [--dim N] [--no-attest] [--conns N] [--lease-ms N]
@@ -242,6 +245,38 @@ fn cmd_scale(args: &Args) -> Result<()> {
     let n = args.usize_or("clients", 256)?;
     let rounds = args.usize_or("rounds", 3)? as u64;
     let seed = args.usize_or("seed", 7)? as u64;
+    if let Some(spec) = args.flag("tree") {
+        // Hierarchical aggregation: the same seeded fleet through a
+        // leaf/master tree vs the flat path, verified bit-identical.
+        let leaves = args.usize_or("leaves", 4)? as u32;
+        let tree = crate::config::TreeSpec::parse(spec, leaves)?;
+        if !tree.uses_leaves() {
+            return Err(Error::Config(
+                "scale --tree needs depth=2 and --leaves >= 1".into(),
+            ));
+        }
+        let r = crate::simulator::scaling::run_tree_scale(n.min(4096), rounds, tree.leaves, seed)?;
+        println!(
+            "tree-scale: {} clients over {} leaves (depth {}), {} rounds",
+            r.n_clients, r.leaves, tree.depth, r.rounds_completed
+        );
+        println!(
+            "  root ingest frames/round: flat {} -> tree {} ({}x fan-in absorbed at the leaves)",
+            r.root_frames_flat,
+            r.root_frames_tree,
+            r.root_frames_flat / r.root_frames_tree.max(1)
+        );
+        println!(
+            "  bit-identical to flat path: {} (max |diff| {}) (wall {} ms)",
+            r.bit_identical, r.max_abs_diff, r.wall_ms
+        );
+        if !r.bit_identical {
+            return Err(Error::Task(
+                "tree path diverged from flat reference".into(),
+            ));
+        }
+        return Ok(());
+    }
     if args.switch("device-mix") {
         // Heterogeneity scenario: mixed-tier population, capability-aware
         // (Tiered) selection, mid-round lease evictions + backfill.
@@ -564,6 +599,18 @@ mod tests {
     fn scale_device_mix_runs() {
         let a = Args::parse(&argv("scale --device-mix --clients 12 --rounds 1")).unwrap();
         cmd_scale(&a).unwrap();
+    }
+
+    #[test]
+    fn scale_tree_runs_and_validates() {
+        let a =
+            Args::parse(&argv("scale --tree depth=2 --leaves 4 --clients 12 --rounds 1")).unwrap();
+        cmd_scale(&a).unwrap();
+        // depth=1 never uses leaves; the tree run must refuse it.
+        let a = Args::parse(&argv("scale --tree depth=1 --clients 12 --rounds 1")).unwrap();
+        assert!(cmd_scale(&a).is_err());
+        let a = Args::parse(&argv("scale --tree depth=3 --leaves 2")).unwrap();
+        assert!(cmd_scale(&a).is_err());
     }
 
     #[test]

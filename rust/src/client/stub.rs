@@ -182,4 +182,30 @@ impl FloridaClient {
     pub fn session_close(&self, client_id: u64, token: u64) -> Result<()> {
         self.call(rpc::SessionClose { client_id, token }).map(|_| ())
     }
+
+    // ---- hierarchical aggregation (leaf data plane) ----------------------
+
+    /// Ask for the leaf's slice of the open round's cohort. A
+    /// structured refusal (`accepted: false`) is data: no open round
+    /// yet, or the round is secagg and leaves must stand down.
+    pub fn leaf_assign(
+        &self,
+        leaf_id: u64,
+        task_id: u64,
+        leaf_index: u32,
+        leaf_count: u32,
+    ) -> Result<rpc::LeafAssignment> {
+        self.call(rpc::LeafAssign {
+            leaf_id,
+            task_id,
+            leaf_index,
+            leaf_count,
+        })
+    }
+
+    /// Forward a folded partial accumulator to the master. A rejected
+    /// partial (stale round, duplicate members) is `Err(Error::Server)`.
+    pub fn forward_partial(&self, req: rpc::ForwardPartial) -> Result<rpc::LeafAck> {
+        self.call(req)
+    }
 }

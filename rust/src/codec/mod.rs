@@ -118,6 +118,25 @@ impl Writer {
         }
     }
 
+    /// Bulk f64 array (length-prefixed, LE) — leaf partial-sum payloads
+    /// keep accumulator precision across the leaf→master hop.
+    pub fn put_f64s(&mut self, xs: &[f64]) {
+        self.put_varint(xs.len() as u64);
+        self.buf.reserve(xs.len() * 8);
+        #[cfg(target_endian = "little")]
+        {
+            let bytes =
+                unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8) };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(target_endian = "big")]
+        {
+            for &x in xs {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
     }
@@ -270,6 +289,34 @@ impl<'a> Reader<'a> {
             Ok(out)
         }
     }
+
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() / 8 {
+            return Err(Error::Codec(format!("f64 array length {n} exceeds frame")));
+        }
+        let raw = self.take(n * 8)?;
+        #[cfg(target_endian = "little")]
+        {
+            let mut out = vec![0f64; n];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 8,
+                );
+            }
+            Ok(out)
+        }
+        #[cfg(target_endian = "big")]
+        {
+            let mut out = Vec::with_capacity(n);
+            for c in raw.chunks_exact(8) {
+                out.push(f64::from_le_bytes(c.try_into().unwrap()));
+            }
+            Ok(out)
+        }
+    }
 }
 
 /// A message that can cross the wire in the binary encoding.
@@ -350,6 +397,15 @@ mod tests {
     }
 
     #[test]
+    fn f64s_roundtrip() {
+        let xs: Vec<f64> = (0..321).map(|i| i as f64 * 0.25 - 40.0).collect();
+        let mut w = Writer::new();
+        w.put_f64s(&xs);
+        let buf = w.into_bytes();
+        assert_eq!(Reader::new(&buf).get_f64s().unwrap(), xs);
+    }
+
+    #[test]
     fn short_reads_error() {
         let mut r = Reader::new(&[1, 2]);
         assert!(r.get_u32().is_err());
@@ -366,6 +422,7 @@ mod tests {
         let buf = w.into_bytes();
         assert!(Reader::new(&buf).get_f32s().is_err());
         assert!(Reader::new(&buf).get_u32s().is_err());
+        assert!(Reader::new(&buf).get_f64s().is_err());
     }
 
     #[test]

@@ -91,6 +91,58 @@ impl Default for SessionConfig {
     }
 }
 
+/// Shape of the hierarchical-aggregation tree a deployment runs
+/// (`crate::aggtree`): `depth = 1` is the flat path (devices upload
+/// straight to the master), `depth = 2` puts `leaves` leaf aggregators
+/// between devices and the master. Deeper trees are not implemented —
+/// partials compose associatively, so adding levels is a wiring
+/// exercise, but two levels already collapse root fan-in from
+/// O(cohort) to O(leaves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeSpec {
+    pub depth: u32,
+    pub leaves: u32,
+}
+
+impl Default for TreeSpec {
+    fn default() -> Self {
+        TreeSpec { depth: 1, leaves: 0 }
+    }
+}
+
+impl TreeSpec {
+    /// Parse the CLI surface: `"depth=2"` (with `leaves` supplied
+    /// separately) or a bare depth like `"2"`.
+    pub fn parse(spec: &str, leaves: u32) -> Result<TreeSpec> {
+        let depth_str = spec.strip_prefix("depth=").unwrap_or(spec);
+        let depth: u32 = depth_str
+            .parse()
+            .map_err(|_| Error::Config(format!("bad tree spec {spec:?} (expected depth=N)")))?;
+        let t = TreeSpec {
+            depth,
+            leaves: if depth <= 1 { 0 } else { leaves },
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self.depth {
+            1 => Ok(()),
+            2 if self.leaves >= 1 => Ok(()),
+            2 => Err(Error::Config("tree depth=2 needs leaves >= 1".into())),
+            d => Err(Error::Config(format!(
+                "tree depth {d} unsupported (1 = flat, 2 = leaf/master)"
+            ))),
+        }
+    }
+
+    /// Does this topology interpose leaf aggregators?
+    pub fn uses_leaves(&self) -> bool {
+        self.depth >= 2 && self.leaves >= 1
+    }
+}
+
 /// Where (and how durably) the orchestrator persists task state.
 #[derive(Clone, Debug)]
 pub struct StorageConfig {
@@ -515,6 +567,20 @@ mod tests {
     fn bad_mode_rejected() {
         assert!(TaskConfig::from_json_str(r#"{"mode":"quantum"}"#).is_err());
         assert!(TaskConfig::from_json_str(r#"{"dp_mode":"??"}"#).is_err());
+    }
+
+    #[test]
+    fn tree_spec_parses_and_validates() {
+        assert_eq!(
+            TreeSpec::parse("depth=2", 4).unwrap(),
+            TreeSpec { depth: 2, leaves: 4 }
+        );
+        assert_eq!(TreeSpec::parse("1", 4).unwrap(), TreeSpec { depth: 1, leaves: 0 });
+        assert!(!TreeSpec::default().uses_leaves());
+        assert!(TreeSpec { depth: 2, leaves: 4 }.uses_leaves());
+        assert!(TreeSpec::parse("depth=3", 4).is_err());
+        assert!(TreeSpec::parse("depth=2", 0).is_err());
+        assert!(TreeSpec::parse("depth=x", 4).is_err());
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! them natively.
 
 pub mod aggregation;
+pub mod aggtree;
 pub mod client;
 pub mod cli;
 pub mod codec;

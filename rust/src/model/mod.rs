@@ -186,6 +186,46 @@ impl DeltaAccumulator {
         self.total_weight *= factor;
     }
 
+    /// Raw weighted sum accumulated so far — what a leaf aggregator
+    /// exports up the tree (f64, so no precision is lost in transit).
+    pub fn sum(&self) -> &[f64] {
+        &self.sum
+    }
+
+    /// Merge another accumulator's exported state, pre-scaled by
+    /// `factor` (1.0 for plain-associative strategies; the DGA master
+    /// uses it to re-anchor a leaf partial onto the global min-loss).
+    /// `count` folds in unchanged — it counts updates, not leaves.
+    pub fn merge_scaled(
+        &mut self,
+        sum: &[f64],
+        total_weight: f64,
+        count: usize,
+        factor: f64,
+    ) -> Result<()> {
+        if sum.len() != self.sum.len() {
+            return Err(Error::Model(format!(
+                "dim mismatch {} vs {}",
+                sum.len(),
+                self.sum.len()
+            )));
+        }
+        if !factor.is_finite() || factor <= 0.0 {
+            return Err(Error::Model(format!("non-positive merge factor {factor}")));
+        }
+        if !total_weight.is_finite() || total_weight <= 0.0 {
+            return Err(Error::Model(format!(
+                "non-positive partial weight {total_weight}"
+            )));
+        }
+        for (s, &p) in self.sum.iter_mut().zip(sum) {
+            *s += factor * p;
+        }
+        self.total_weight += factor * total_weight;
+        self.count += count;
+        Ok(())
+    }
+
     /// Weighted mean; error if nothing accumulated.
     pub fn mean(&self) -> Result<Vec<f32>> {
         if self.count == 0 || self.total_weight <= 0.0 {
@@ -274,6 +314,52 @@ mod tests {
         assert!((acc.total_weight() - 0.5).abs() < 1e-12);
         acc.add(&[0.0], 0.5).unwrap();
         assert!((acc.mean().unwrap()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accumulator_merge_scaled_matches_direct_adds() {
+        // Fold 4 updates into one accumulator directly, and into two
+        // halves merged with factor 1.0 — identical state either way.
+        let deltas: [(&[f32], f64); 4] =
+            [(&[1.0, 2.0], 1.0), (&[0.5, -1.0], 2.0), (&[3.0, 0.0], 0.5), (&[-2.0, 4.0], 1.5)];
+        let mut flat = DeltaAccumulator::new(2);
+        for (d, w) in deltas {
+            flat.add(d, w).unwrap();
+        }
+        let mut left = DeltaAccumulator::new(2);
+        let mut right = DeltaAccumulator::new(2);
+        for (d, w) in &deltas[..2] {
+            left.add(d, *w).unwrap();
+        }
+        for (d, w) in &deltas[2..] {
+            right.add(d, *w).unwrap();
+        }
+        let mut root = DeltaAccumulator::new(2);
+        root.merge_scaled(left.sum(), left.total_weight(), left.count(), 1.0)
+            .unwrap();
+        root.merge_scaled(right.sum(), right.total_weight(), right.count(), 1.0)
+            .unwrap();
+        assert_eq!(root.count(), flat.count());
+        assert!((root.total_weight() - flat.total_weight()).abs() < 1e-12);
+        let a = root.mean().unwrap();
+        let b = flat.mean().unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn accumulator_merge_scaled_rejects_bad_input() {
+        let mut acc = DeltaAccumulator::new(2);
+        assert!(acc.merge_scaled(&[1.0], 1.0, 1, 1.0).is_err());
+        assert!(acc.merge_scaled(&[1.0, 1.0], 0.0, 1, 1.0).is_err());
+        assert!(acc.merge_scaled(&[1.0, 1.0], 1.0, 1, 0.0).is_err());
+        assert!(acc
+            .merge_scaled(&[1.0, 1.0], 1.0, 1, f64::INFINITY)
+            .is_err());
+        // A rejected merge leaves the accumulator untouched.
+        assert_eq!(acc.count(), 0);
+        assert!(acc.mean().is_err());
     }
 
     #[test]

@@ -25,13 +25,14 @@
 
 use std::collections::{BTreeSet, HashMap, VecDeque};
 
-use crate::aggregation::{self, AggregatorFold, UpdateStats};
+use crate::aggregation::{self, AggregatorFold, PartialFold, UpdateStats};
 use crate::config::{FlMode, TaskConfig};
 use crate::dp::{DpMode, RdpAccountant};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, TaskMetrics};
 use crate::model::{ModelSnapshot, SnapshotStore};
 use crate::proto::msg::{PeerShare, RecoveredShare};
+use crate::proto::rpc::LeafAssignment;
 use crate::proto::{RoundInstruction, RoundRole, TaskDescriptor, TaskState, TrainParams};
 use crate::quant::Quantizer;
 use crate::services::master_aggregator::MasterAggregator;
@@ -105,6 +106,14 @@ impl StreamingIngest {
     fn accept(&mut self, delta: &[f32], stats: &UpdateStats) -> Result<()> {
         self.fold.accept(delta, stats)?;
         self.loss_sum += stats.loss;
+        Ok(())
+    }
+
+    /// Merge a leaf aggregator's exported partial — O(dim) regardless
+    /// of how many member updates the leaf folded.
+    fn absorb(&mut self, part: &PartialFold, loss_sum: f64) -> Result<()> {
+        self.fold.absorb(part)?;
+        self.loss_sum += loss_sum;
         Ok(())
     }
 
@@ -636,6 +645,175 @@ impl RoundEngine {
             self.try_commit(eval, now_ms);
         }
         Ok((true, String::new()))
+    }
+
+    // -----------------------------------------------------------------
+    // Hierarchical aggregation (leaf → master ingest seam)
+    // -----------------------------------------------------------------
+
+    /// The `leaf_index`-th of `leaf_count` deterministic slices of the
+    /// open plaintext round's cohort (sorted ids, round-robin by
+    /// position — every leaf asking with the same `leaf_count` sees a
+    /// disjoint cover of the cohort). A structured refusal is data the
+    /// leaf uses to back off: no open round yet, a secagg round (whose
+    /// masked sums must reach the root unmerged), or a bad index.
+    pub fn leaf_slice(&self, leaf_index: u32, leaf_count: u32) -> LeafAssignment {
+        let refuse = |reason: &str| LeafAssignment {
+            accepted: false,
+            round: 0,
+            base_version: 0,
+            members: Vec::new(),
+            reason: reason.into(),
+        };
+        if self.state != TaskState::Running {
+            return refuse(&format!("task is {}", self.state.name()));
+        }
+        if leaf_count == 0 || leaf_index >= leaf_count {
+            return refuse(&format!("bad leaf index {leaf_index}/{leaf_count}"));
+        }
+        if let FlMode::Async { .. } = self.config.mode {
+            return refuse("async tasks ingest directly at the root");
+        }
+        match &self.phase {
+            Phase::Training {
+                secagg: None,
+                base_version,
+                ..
+            } => LeafAssignment {
+                accepted: true,
+                round: self.round,
+                base_version: *base_version,
+                members: self
+                    .cohort
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % leaf_count as usize == leaf_index as usize)
+                    .map(|(_, &c)| c)
+                    .collect(),
+                reason: String::new(),
+            },
+            Phase::Training { secagg: Some(_), .. } => {
+                refuse("secure-aggregation rounds do not use leaves")
+            }
+            _ => refuse("no open plaintext round"),
+        }
+    }
+
+    /// Merge a leaf's forwarded partial accumulator into the open
+    /// round's streaming fold — the tree-aware twin of [`accept_plain`].
+    /// All `members` are marked reported at once; a member that already
+    /// uploaded directly (or arrived via another leaf) rejects the
+    /// whole partial, so no update can be double-counted. Returns
+    /// `(ok, folded, reason)` with `folded` the member updates credited.
+    ///
+    /// [`accept_plain`]: RoundEngine::accept_plain
+    #[allow(clippy::too_many_arguments)]
+    pub fn accept_partial(
+        &mut self,
+        leaf_id: u64,
+        round: u64,
+        base_version: u64,
+        members: &[u64],
+        part: &PartialFold,
+        loss_sum: f64,
+        eval: &dyn Evaluator,
+        now_ms: u64,
+    ) -> Result<(bool, u64, String)> {
+        if self.state != TaskState::Running {
+            return Ok((false, 0, format!("task is {}", self.state.name())));
+        }
+        if let FlMode::Async { .. } = self.config.mode {
+            return Ok((false, 0, "async tasks ingest directly at the root".into()));
+        }
+        if members.is_empty() || part.count != members.len() {
+            return Ok((
+                false,
+                0,
+                format!(
+                    "partial counts {} updates for {} members",
+                    part.count,
+                    members.len()
+                ),
+            ));
+        }
+        if !loss_sum.is_finite() {
+            return Ok((false, 0, format!("bad loss sum {loss_sum}")));
+        }
+        let progress = match &mut self.phase {
+            Phase::Training {
+                secagg: None,
+                ingest,
+                uploaded,
+                base_version: bv,
+                deadline_ms,
+            } => {
+                if round != self.round {
+                    return Ok((
+                        false,
+                        0,
+                        format!("stale round {round} (now {})", self.round),
+                    ));
+                }
+                if base_version != *bv {
+                    return Ok((false, 0, format!("base version {base_version} != {bv}")));
+                }
+                // Validate the whole member slice before the fold: a
+                // rejected partial must leave nothing half-credited.
+                for m in members {
+                    if !self.cohort.contains(m) {
+                        return Ok((false, 0, format!("member {m} not in cohort")));
+                    }
+                    if uploaded.contains(m) {
+                        return Ok((false, 0, format!("member {m} already reported")));
+                    }
+                }
+                // Absorb before marking members reported — an absorb
+                // error (dim mismatch, bad weights) leaves the round
+                // exactly as it was and the leaf free to retry.
+                let absorbed = ingest
+                    .as_mut()
+                    .ok_or_else(|| Error::Task("plaintext round missing ingest fold".into()))?
+                    .absorb(part, loss_sum);
+                if let Err(e) = absorbed {
+                    return Ok((false, 0, e.to_string()));
+                }
+                uploaded.extend(members.iter().copied());
+                RoundProgress {
+                    cohort: self.cohort.len(),
+                    reported: uploaded.len(),
+                    now_ms,
+                    deadline_ms: *deadline_ms,
+                    min_report_fraction: self.config.min_report_fraction,
+                }
+            }
+            Phase::Training { secagg: Some(_), .. } => {
+                return Ok((
+                    false,
+                    0,
+                    "secure-aggregation rounds do not accept partials".into(),
+                ))
+            }
+            _ => return Ok((false, 0, "no round in progress".into())),
+        };
+        self.metrics.total_uploads += members.len() as u64;
+        // Journal per member so recovery's upload accounting matches the
+        // flat path; per-member weight/loss ride as the partial's means
+        // (the journal is bookkeeping — folds are not replayed from it).
+        let mean_weight = part.total_weight / part.count as f64;
+        let mean_loss = loss_sum / part.count as f64;
+        for &m in members {
+            self.persist(|p| p.upload_accepted(m, round, mean_weight, mean_loss));
+        }
+        log::debug!(
+            "task {}: round {round} leaf {leaf_id} merged {} member update(s)",
+            self.id,
+            members.len()
+        );
+        // Partials only ever commit; deadline failure stays tick()'s job.
+        if self.pacing.assess(&progress) == PacingDecision::Commit {
+            self.try_commit(eval, now_ms);
+        }
+        Ok((true, members.len() as u64, String::new()))
     }
 
     /// Masked upload (secure aggregation path).
@@ -1693,6 +1871,191 @@ mod tests {
             (eps_before - eps_after).abs() < 1e-12,
             "{eps_before} vs {eps_after}"
         );
+    }
+
+    /// Fold unit deltas for `members` the way a leaf would, returning
+    /// the exported partial + loss sum for `accept_partial`.
+    fn leaf_partial(e: &RoundEngine, members: &[u64], step: f32) -> (PartialFold, f64) {
+        let agg = aggregation::by_name(&e.config.aggregator, e.config.prox_mu).unwrap();
+        let mut fold = agg.begin(e.global.dim()).unwrap();
+        let mut loss_sum = 0.0;
+        for &m in members {
+            fold.accept(
+                &vec![step; e.global.dim()],
+                &UpdateStats {
+                    client_id: m,
+                    weight: 1.0,
+                    loss: 0.5,
+                    staleness: 0,
+                },
+            )
+            .unwrap();
+            loss_sum += 0.5;
+        }
+        (fold.export(), loss_sum)
+    }
+
+    #[test]
+    fn leaf_slices_cover_cohort_disjointly() {
+        let (mut e, _bus) = engine(small_cfg(5, 1), 2);
+        // No open round yet: structured refusal, not an error.
+        assert!(!e.leaf_slice(0, 2).accepted);
+        drive_round(&mut e, 5, 0, 0); // form cohort, nobody uploads
+        assert_eq!(e.phase_name(), "training");
+        assert!(!e.leaf_slice(0, 0).accepted, "zero leaves refused");
+        assert!(!e.leaf_slice(2, 2).accepted, "index out of range refused");
+        let mut seen = BTreeSet::new();
+        let mut total = 0;
+        for i in 0..3u32 {
+            let a = e.leaf_slice(i, 3);
+            assert!(a.accepted, "{}", a.reason);
+            assert_eq!(a.round, 0);
+            assert_eq!(a.base_version, 0);
+            total += a.members.len();
+            for m in a.members {
+                assert!(seen.insert(m), "member {m} in two slices");
+            }
+        }
+        assert_eq!(total, 5);
+        assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn partial_merges_commit_round_bit_identical_to_flat() {
+        // Flat reference: everyone uploads unit deltas directly.
+        let (mut e_flat, _b1) = engine(small_cfg(4, 1), 3);
+        drive_round(&mut e_flat, 4, 0, 0);
+        let round = e_flat.round;
+        for c in 1..=4u64 {
+            let (ok, why) = e_flat
+                .accept_plain(c, round, 0, vec![1.0; 3], 1.0, 0.5, &NoEval, 10)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+        assert_eq!(e_flat.state, TaskState::Completed);
+
+        // Tree path: the same cohort split across two leaves.
+        let (mut e, _b2) = engine(small_cfg(4, 1), 3);
+        drive_round(&mut e, 4, 0, 0);
+        for i in 0..2u32 {
+            let a = e.leaf_slice(i, 2);
+            assert!(a.accepted, "{}", a.reason);
+            assert_eq!(a.members.len(), 2);
+            let (part, loss_sum) = leaf_partial(&e, &a.members, 1.0);
+            let (ok, folded, why) = e
+                .accept_partial(
+                    100 + i as u64,
+                    a.round,
+                    a.base_version,
+                    &a.members,
+                    &part,
+                    loss_sum,
+                    &NoEval,
+                    10,
+                )
+                .unwrap();
+            assert!(ok, "{why}");
+            assert_eq!(folded, 2);
+        }
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds[0].participants, 4);
+        assert_eq!(e.metrics.total_uploads, 4);
+        // Unit deltas and weights make every f64 sum exact: the tree
+        // path must be bit-identical to the flat path.
+        assert_eq!(e.global.params, e_flat.global.params);
+    }
+
+    #[test]
+    fn partial_with_already_reported_member_is_rejected_whole() {
+        let (mut e, _bus) = engine(small_cfg(4, 1), 2);
+        drive_round(&mut e, 4, 0, 0);
+        let a = e.leaf_slice(0, 2);
+        assert!(a.accepted);
+        // One of the leaf's members uploads directly first.
+        let direct = a.members[0];
+        let (ok, why) = e
+            .accept_plain(direct, 0, 0, vec![1.0; 2], 1.0, 0.5, &NoEval, 5)
+            .unwrap();
+        assert!(ok, "{why}");
+        let (part, loss_sum) = leaf_partial(&e, &a.members, 1.0);
+        let (ok, folded, why) = e
+            .accept_partial(100, 0, 0, &a.members, &part, loss_sum, &NoEval, 10)
+            .unwrap();
+        assert!(!ok);
+        assert_eq!(folded, 0);
+        assert!(why.contains("already reported"), "{why}");
+        // Nothing was half-credited: only the direct upload counts.
+        assert_eq!(e.metrics.total_uploads, 1);
+        // Mismatched member/count bookkeeping is refused up front.
+        let (ok, _, why) = e
+            .accept_partial(100, 0, 0, &a.members[1..], &part, loss_sum, &NoEval, 11)
+            .unwrap();
+        assert!(!ok);
+        assert!(why.contains("updates for"), "{why}");
+        // Stale round is a structured refusal too.
+        let (ok, _, why) = e
+            .accept_partial(100, 7, 0, &a.members, &part, loss_sum, &NoEval, 12)
+            .unwrap();
+        assert!(!ok && why.contains("stale round"), "{why}");
+    }
+
+    #[test]
+    fn leaf_death_mid_round_fails_and_retries_without_double_count() {
+        // Two leaves own the cohort; leaf 1 dies before forwarding. The
+        // existing pacing deadline fails the round, and the retry must
+        // commit from a clean fold — the dead round's merged partial
+        // must not leak into the final model.
+        let mut cfg = small_cfg(4, 1);
+        cfg.min_report_fraction = 0.9; // quorum 4: a lost leaf misses it
+        let (mut e, bus) = engine(cfg, 3);
+        let stream = bus.subscribe();
+        drive_round(&mut e, 4, 0, 0);
+        let a = e.leaf_slice(0, 2);
+        assert!(a.accepted);
+        let (part, loss_sum) = leaf_partial(&e, &a.members, 1.0);
+        let (ok, _, why) = e
+            .accept_partial(100, a.round, a.base_version, &a.members, &part, loss_sum, &NoEval, 10)
+            .unwrap();
+        assert!(ok, "{why}");
+        // Leaf 1 never forwards; the deadline sweep fails the round.
+        e.tick(&NoEval, &NullDirectory, 5000);
+        assert_eq!(e.round, 0);
+        assert_eq!(e.metrics.failed_rounds, 1);
+        assert_eq!(e.phase_name(), "joining");
+        assert!(stream.drain().iter().any(|ev| ev.kind() == "quorum_missed"));
+        // A late partial from the dead round is refused (no round open).
+        let (ok, _, why) = e
+            .accept_partial(101, 0, 0, &[1], &part, 0.5, &NoEval, 5100)
+            .unwrap();
+        assert!(!ok, "{why}");
+        // Retry: everyone rejoins and both leaves forward this time.
+        drive_round(&mut e, 4, 0, 6000);
+        for i in 0..2u32 {
+            let a = e.leaf_slice(i, 2);
+            assert!(a.accepted, "{}", a.reason);
+            let (part, loss_sum) = leaf_partial(&e, &a.members, 1.0);
+            let (ok, _, why) = e
+                .accept_partial(
+                    100 + i as u64,
+                    a.round,
+                    a.base_version,
+                    &a.members,
+                    &part,
+                    loss_sum,
+                    &NoEval,
+                    6010,
+                )
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+        assert_eq!(e.state, TaskState::Completed);
+        assert_eq!(e.metrics.rounds.len(), 1);
+        assert_eq!(e.metrics.rounds[0].participants, 4);
+        // Exactly one committed round of unit deltas: +1.0 per param.
+        // Any leakage from the failed attempt would show up here.
+        for p in &e.global.params {
+            assert_eq!(*p, 1.0);
+        }
     }
 
     #[test]

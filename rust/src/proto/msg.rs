@@ -129,6 +129,36 @@ pub enum Msg {
         token: u64,
     },
 
+    // ---- hierarchical aggregation, leaf → master -------------------------
+    /// A leaf aggregator claims its slice of the current round's cohort.
+    /// Leaves are trusted platform infrastructure (not registered
+    /// devices), addressed by operator-assigned `leaf_id`; the slice is
+    /// the `leaf_index`-th of `leaf_count` deterministic cohort chunks.
+    LeafAssign {
+        leaf_id: u64,
+        task_id: u64,
+        leaf_index: u32,
+        leaf_count: u32,
+    },
+    /// A leaf forwards its merged partial accumulator (the exported
+    /// `PartialFold` plus bookkeeping) to the master. `sum` stays f64 so
+    /// the hop loses no accumulator precision; `members` lists the
+    /// cohort ids folded in so the master can mark them reported
+    /// without double-counting; `min_loss` carries the leaf's DGA
+    /// anchor (`+inf` for strategies without one).
+    ForwardPartial {
+        leaf_id: u64,
+        task_id: u64,
+        round: u64,
+        base_version: u64,
+        members: Vec<u64>,
+        sum: Vec<f64>,
+        total_weight: f64,
+        count: u64,
+        loss_sum: f64,
+        min_loss: f64,
+    },
+
     // ---- server → client -------------------------------------------------
     RegisterAck {
         accepted: bool,
@@ -180,6 +210,25 @@ pub enum Msg {
         lease_ms: u64,
         reason: String,
     },
+
+    // ---- hierarchical aggregation, master → leaf -------------------------
+    /// Answer to `LeafAssign`: the member slice the leaf owns for this
+    /// round, plus the base version its partial must be built against.
+    /// `accepted: false` is protocol data (no open round, bad index).
+    LeafAssignment {
+        accepted: bool,
+        round: u64,
+        base_version: u64,
+        members: Vec<u64>,
+        reason: String,
+    },
+    /// Answer to `ForwardPartial`: `folded` echoes how many member
+    /// updates the master credited from the partial.
+    LeafAck {
+        ok: bool,
+        folded: u64,
+        reason: String,
+    },
 }
 
 // Message tags. 0x00/0x01 reserved; '{' = 0x7b must not collide (all < 0x30).
@@ -196,6 +245,7 @@ const T_HEARTBEAT: u8 = 0x0b;
 const T_SESSION_OPEN: u8 = 0x0c;
 const T_SESSION_HEARTBEAT: u8 = 0x0d;
 const T_SESSION_CLOSE: u8 = 0x0e;
+const T_LEAF_ASSIGN: u8 = 0x0f;
 const T_REGISTER_ACK: u8 = 0x10;
 const T_TASK_OFFER: u8 = 0x11;
 const T_JOIN_ACK: u8 = 0x12;
@@ -205,6 +255,9 @@ const T_TASK_STATUS: u8 = 0x15;
 const T_ERROR: u8 = 0x16;
 const T_SESSION_GRANT: u8 = 0x17;
 const T_LEASE_ACK: u8 = 0x18;
+const T_LEAF_ASSIGNMENT: u8 = 0x19;
+const T_LEAF_ACK: u8 = 0x1a;
+const T_FORWARD_PARTIAL: u8 = 0x20;
 
 // RoundRole sub-tags.
 const R_WAIT: u8 = 0;
@@ -228,6 +281,8 @@ impl Msg {
             } => ri.model_blob.len(),
             Msg::SecAggShares { shares, .. } => shares.iter().map(|s| s.enc.len() + 16).sum(),
             Msg::UnmaskResponse { shares, .. } => shares.iter().map(|s| s.y.len() + 16).sum(),
+            Msg::ForwardPartial { sum, members, .. } => sum.len() * 8 + members.len() * 9,
+            Msg::LeafAssignment { members, .. } => members.len() * 9,
             _ => 0,
         };
         payload + 64
@@ -248,6 +303,8 @@ impl Msg {
             Msg::SessionOpen { .. } => T_SESSION_OPEN,
             Msg::SessionHeartbeat { .. } => T_SESSION_HEARTBEAT,
             Msg::SessionClose { .. } => T_SESSION_CLOSE,
+            Msg::LeafAssign { .. } => T_LEAF_ASSIGN,
+            Msg::ForwardPartial { .. } => T_FORWARD_PARTIAL,
             Msg::RegisterAck { .. } => T_REGISTER_ACK,
             Msg::TaskOffer { .. } => T_TASK_OFFER,
             Msg::JoinAck { .. } => T_JOIN_ACK,
@@ -257,6 +314,8 @@ impl Msg {
             Msg::ErrorReply { .. } => T_ERROR,
             Msg::SessionGrant { .. } => T_SESSION_GRANT,
             Msg::LeaseAck { .. } => T_LEASE_ACK,
+            Msg::LeafAssignment { .. } => T_LEAF_ASSIGNMENT,
+            Msg::LeafAck { .. } => T_LEAF_ACK,
         }
     }
 }
@@ -387,6 +446,43 @@ impl Wire for Msg {
                 w.put_u64(*client_id);
                 w.put_u64(*token);
             }
+            Msg::LeafAssign {
+                leaf_id,
+                task_id,
+                leaf_index,
+                leaf_count,
+            } => {
+                w.put_u64(*leaf_id);
+                w.put_u64(*task_id);
+                w.put_u32(*leaf_index);
+                w.put_u32(*leaf_count);
+            }
+            Msg::ForwardPartial {
+                leaf_id,
+                task_id,
+                round,
+                base_version,
+                members,
+                sum,
+                total_weight,
+                count,
+                loss_sum,
+                min_loss,
+            } => {
+                w.put_u64(*leaf_id);
+                w.put_u64(*task_id);
+                w.put_u64(*round);
+                w.put_u64(*base_version);
+                w.put_varint(members.len() as u64);
+                for m in members {
+                    w.put_u64(*m);
+                }
+                w.put_f64s(sum);
+                w.put_f64(*total_weight);
+                w.put_u64(*count);
+                w.put_f64(*loss_sum);
+                w.put_f64(*min_loss);
+            }
             Msg::RegisterAck {
                 accepted,
                 client_id,
@@ -463,6 +559,27 @@ impl Wire for Msg {
             } => {
                 w.put_bool(*renewed);
                 w.put_u64(*lease_ms);
+                w.put_str(reason);
+            }
+            Msg::LeafAssignment {
+                accepted,
+                round,
+                base_version,
+                members,
+                reason,
+            } => {
+                w.put_bool(*accepted);
+                w.put_u64(*round);
+                w.put_u64(*base_version);
+                w.put_varint(members.len() as u64);
+                for m in members {
+                    w.put_u64(*m);
+                }
+                w.put_str(reason);
+            }
+            Msg::LeafAck { ok, folded, reason } => {
+                w.put_bool(*ok);
+                w.put_u64(*folded);
                 w.put_str(reason);
             }
         }
@@ -577,6 +694,24 @@ impl Wire for Msg {
                 client_id: r.get_u64()?,
                 token: r.get_u64()?,
             },
+            T_LEAF_ASSIGN => Msg::LeafAssign {
+                leaf_id: r.get_u64()?,
+                task_id: r.get_u64()?,
+                leaf_index: r.get_u32()?,
+                leaf_count: r.get_u32()?,
+            },
+            T_FORWARD_PARTIAL => Msg::ForwardPartial {
+                leaf_id: r.get_u64()?,
+                task_id: r.get_u64()?,
+                round: r.get_u64()?,
+                base_version: r.get_u64()?,
+                members: get_members(r)?,
+                sum: r.get_f64s()?,
+                total_weight: r.get_f64()?,
+                count: r.get_u64()?,
+                loss_sum: r.get_f64()?,
+                min_loss: r.get_f64()?,
+            },
             T_REGISTER_ACK => Msg::RegisterAck {
                 accepted: r.get_bool()?,
                 client_id: r.get_u64()?,
@@ -634,9 +769,35 @@ impl Wire for Msg {
                 lease_ms: r.get_u64()?,
                 reason: r.get_str()?,
             },
+            T_LEAF_ASSIGNMENT => Msg::LeafAssignment {
+                accepted: r.get_bool()?,
+                round: r.get_u64()?,
+                base_version: r.get_u64()?,
+                members: get_members(r)?,
+                reason: r.get_str()?,
+            },
+            T_LEAF_ACK => Msg::LeafAck {
+                ok: r.get_bool()?,
+                folded: r.get_u64()?,
+                reason: r.get_str()?,
+            },
             v => return Err(Error::Codec(format!("unknown message tag {v:#x}"))),
         })
     }
+}
+
+/// Length-prefixed cohort-member id list with a hostile-length guard
+/// (each id is 8 bytes, so a claimed length beyond the frame is bogus).
+fn get_members(r: &mut Reader) -> Result<Vec<u64>> {
+    let n = r.get_varint()? as usize;
+    if n > r.remaining() / 8 {
+        return Err(Error::Codec(format!("member list length {n} exceeds frame")));
+    }
+    let mut members = Vec::with_capacity(n);
+    for _ in 0..n {
+        members.push(r.get_u64()?);
+    }
+    Ok(members)
 }
 
 // ---------------------------------------------------------------------------
@@ -1175,6 +1336,43 @@ mod tests {
             Msg::ErrorReply {
                 message: "boom".into(),
             },
+            Msg::LeafAssign {
+                leaf_id: 100,
+                task_id: 2,
+                leaf_index: 1,
+                leaf_count: 4,
+            },
+            Msg::ForwardPartial {
+                leaf_id: 100,
+                task_id: 2,
+                round: 3,
+                base_version: 4,
+                members: vec![5, 6, 7],
+                sum: vec![1.5, -2.25],
+                total_weight: 3.0,
+                count: 3,
+                loss_sum: 0.9,
+                min_loss: f64::INFINITY,
+            },
+            Msg::LeafAssignment {
+                accepted: true,
+                round: 3,
+                base_version: 4,
+                members: vec![5, 6, 7],
+                reason: String::new(),
+            },
+            Msg::LeafAssignment {
+                accepted: false,
+                round: 0,
+                base_version: 0,
+                members: vec![],
+                reason: "no open round".into(),
+            },
+            Msg::LeafAck {
+                ok: true,
+                folded: 3,
+                reason: String::new(),
+            },
         ];
         v.extend(sample_session_frames());
         v
@@ -1259,6 +1457,41 @@ mod tests {
         };
         assert!(encode_frame(&m, WireCodec::Json).is_err());
         assert!(encode_frame(&m, WireCodec::Binary).is_ok());
+    }
+
+    #[test]
+    fn leaf_messages_are_binary_only() {
+        // The leaf↔master hop is platform-internal data plane, like the
+        // secagg frames — the REST path never carries it.
+        let m = Msg::ForwardPartial {
+            leaf_id: 1,
+            task_id: 1,
+            round: 1,
+            base_version: 1,
+            members: vec![2],
+            sum: vec![0.5],
+            total_weight: 1.0,
+            count: 1,
+            loss_sum: 0.1,
+            min_loss: f64::INFINITY,
+        };
+        assert!(encode_frame(&m, WireCodec::Json).is_err());
+        assert!(encode_frame(&m, WireCodec::Binary).is_ok());
+    }
+
+    #[test]
+    fn forward_partial_hostile_member_length_rejected() {
+        // Claim a huge member list inside a tiny frame: decode must
+        // error before allocating.
+        let mut w = Writer::new();
+        w.put_u8(0x20); // T_FORWARD_PARTIAL
+        for _ in 0..4 {
+            w.put_u64(1); // leaf, task, round, base_version
+        }
+        w.put_varint(u32::MAX as u64);
+        w.put_u64(0);
+        let buf = w.into_bytes();
+        assert!(decode_frame(&buf).is_err());
     }
 
     #[test]

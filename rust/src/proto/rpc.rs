@@ -219,6 +219,35 @@ request!(
     "session_close"
 );
 
+request!(
+    /// A leaf aggregator claims its deterministic slice of the current
+    /// round's cohort (hierarchical aggregation).
+    LeafAssign {
+        leaf_id: u64,
+        task_id: u64,
+        leaf_index: u32,
+        leaf_count: u32,
+    } => LeafAssignment,
+    "leaf_assign"
+);
+
+request!(
+    /// A leaf forwards its merged partial accumulator to the master.
+    ForwardPartial {
+        leaf_id: u64,
+        task_id: u64,
+        round: u64,
+        base_version: u64,
+        members: Vec<u64>,
+        sum: Vec<f64>,
+        total_weight: f64,
+        count: u64,
+        loss_sum: f64,
+        min_loss: f64,
+    } => LeafAck,
+    "forward_partial"
+);
+
 // ---------------------------------------------------------------------------
 // Replies
 // ---------------------------------------------------------------------------
@@ -423,6 +452,84 @@ impl Reply for LeaseAck {
     }
 }
 
+/// Round-slice grant for a leaf aggregator. A structured refusal
+/// (`accepted: false` — no open round yet, bad leaf index) is data the
+/// leaf inspects to back off and re-ask, mirroring [`JoinAck`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeafAssignment {
+    pub accepted: bool,
+    pub round: u64,
+    pub base_version: u64,
+    pub members: Vec<u64>,
+    pub reason: String,
+}
+
+impl Reply for LeafAssignment {
+    fn into_msg(self) -> Msg {
+        Msg::LeafAssignment {
+            accepted: self.accepted,
+            round: self.round,
+            base_version: self.base_version,
+            members: self.members,
+            reason: self.reason,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::LeafAssignment {
+                accepted,
+                round,
+                base_version,
+                members,
+                reason,
+            } => Ok(LeafAssignment {
+                accepted,
+                round,
+                base_version,
+                members,
+                reason,
+            }),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+/// Partial-merge acknowledgement. Like [`Ack`], a wire
+/// `LeafAck { ok: false }` surfaces as [`Error::Server`] — a rejected
+/// partial (stale round, duplicate members) is always an observable
+/// `Err` at the leaf.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeafAck {
+    /// Member updates the master credited from the partial.
+    pub folded: u64,
+    pub reason: String,
+}
+
+impl Reply for LeafAck {
+    fn into_msg(self) -> Msg {
+        Msg::LeafAck {
+            ok: true,
+            folded: self.folded,
+            reason: self.reason,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::LeafAck {
+                ok: true,
+                folded,
+                reason,
+            } => Ok(LeafAck { folded, reason }),
+            Msg::LeafAck {
+                ok: false, reason, ..
+            } => Err(Error::Server(reason)),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
 /// Task status snapshot (admin surface).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TaskStatus {
@@ -489,6 +596,8 @@ pub fn method_of(m: &Msg) -> Option<&'static str> {
         Msg::SessionOpen { .. } => SessionOpen::METHOD,
         Msg::SessionHeartbeat { .. } => SessionHeartbeat::METHOD,
         Msg::SessionClose { .. } => SessionClose::METHOD,
+        Msg::LeafAssign { .. } => LeafAssign::METHOD,
+        Msg::ForwardPartial { .. } => ForwardPartial::METHOD,
         _ => return None,
     })
 }
@@ -509,7 +618,10 @@ pub fn client_id_of(m: &Msg) -> Option<u64> {
         | Msg::SessionHeartbeat { client_id, .. }
         | Msg::SessionClose { client_id, .. } => Some(*client_id),
         // `SessionOpen`, like `Register`, carries no principal: it is the
-        // request that *creates* one.
+        // request that *creates* one. `LeafAssign`/`ForwardPartial`
+        // carry a `leaf_id`, not a registered-device principal — leaves
+        // are trusted platform infrastructure, admitted like admin
+        // requests rather than authenticated against the device registry.
         _ => None,
     }
 }
@@ -601,6 +713,64 @@ mod tests {
         })
         .unwrap();
         assert!(!ack.renewed);
+    }
+
+    #[test]
+    fn leaf_rpcs_are_typed_pairs() {
+        let req = LeafAssign {
+            leaf_id: 100,
+            task_id: 2,
+            leaf_index: 0,
+            leaf_count: 2,
+        };
+        let msg = req.clone().into_msg();
+        assert_eq!(method_of(&msg), Some("leaf_assign"));
+        // Leaves are infrastructure, not device principals.
+        assert_eq!(client_id_of(&msg), None);
+        assert_eq!(LeafAssign::from_msg(msg), Some(req));
+
+        let fwd = ForwardPartial {
+            leaf_id: 100,
+            task_id: 2,
+            round: 1,
+            base_version: 1,
+            members: vec![3, 4],
+            sum: vec![0.5],
+            total_weight: 2.0,
+            count: 2,
+            loss_sum: 0.2,
+            min_loss: f64::INFINITY,
+        };
+        let msg = fwd.clone().into_msg();
+        assert_eq!(method_of(&msg), Some("forward_partial"));
+        assert_eq!(client_id_of(&msg), None);
+        assert_eq!(ForwardPartial::from_msg(msg), Some(fwd));
+
+        // A rejected partial is an observable Err at the leaf.
+        let e = LeafAck::from_msg(Msg::LeafAck {
+            ok: false,
+            folded: 0,
+            reason: "stale round".into(),
+        })
+        .unwrap_err();
+        assert!(matches!(e, Error::Server(ref m) if m == "stale round"));
+        let ok = LeafAck::from_msg(Msg::LeafAck {
+            ok: true,
+            folded: 2,
+            reason: String::new(),
+        })
+        .unwrap();
+        assert_eq!(ok.folded, 2);
+        // A structured assignment refusal is data, not an error.
+        let a = LeafAssignment::from_msg(Msg::LeafAssignment {
+            accepted: false,
+            round: 0,
+            base_version: 0,
+            members: vec![],
+            reason: "no open round".into(),
+        })
+        .unwrap();
+        assert!(!a.accepted);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::aggregation::PartialFold;
 use crate::config::{StorageConfig, TaskConfig};
 use crate::error::{Error, Result};
 use crate::metrics::TaskMetrics;
@@ -20,6 +21,7 @@ use crate::orchestrator::{
     ClientDirectory, CohortPolicy, EventBus, EventStream, PacingPolicy, RoundEngine,
 };
 use crate::proto::msg::{PeerShare, RecoveredShare};
+use crate::proto::rpc::LeafAssignment;
 use crate::proto::{RoundRole, TaskDescriptor, TaskState};
 use crate::storage::{FilePersistence, Persistence as _};
 
@@ -341,6 +343,59 @@ impl ManagementService {
         })
     }
 
+    // -----------------------------------------------------------------
+    // Leaf-facing delegation (hierarchical aggregation)
+    // -----------------------------------------------------------------
+
+    /// A leaf aggregator asks which slice of the open round it owns.
+    pub fn leaf_assignment(
+        &self,
+        task_id: u64,
+        leaf_index: u32,
+        leaf_count: u32,
+    ) -> Result<LeafAssignment> {
+        self.with_task(task_id, |t| Ok(t.leaf_slice(leaf_index, leaf_count)))
+    }
+
+    /// A leaf forwards its folded partial accumulator for the round.
+    /// The raw wire fields become a [`PartialFold`] here, so the engine
+    /// seam works with the same type the aggregation layer exports.
+    #[allow(clippy::too_many_arguments)]
+    pub fn accept_partial(
+        &self,
+        leaf_id: u64,
+        task_id: u64,
+        round: u64,
+        base_version: u64,
+        members: &[u64],
+        sum: Vec<f64>,
+        total_weight: f64,
+        count: u64,
+        loss_sum: f64,
+        min_loss: f64,
+        now_ms: u64,
+    ) -> Result<(bool, u64, String)> {
+        let part = PartialFold {
+            sum,
+            total_weight,
+            count: count as usize,
+            min_loss,
+        };
+        let eval = Arc::clone(&self.evaluator);
+        self.with_task(task_id, |t| {
+            t.accept_partial(
+                leaf_id,
+                round,
+                base_version,
+                members,
+                &part,
+                loss_sum,
+                &*eval,
+                now_ms,
+            )
+        })
+    }
+
     /// Deadline sweep across every engine: call periodically (and on
     /// events). `dir` feeds caps-aware cohort policies.
     pub fn tick(&self, dir: &dyn ClientDirectory, now_ms: u64) {
@@ -485,6 +540,68 @@ mod tests {
         m.with_task(id, |t| {
             assert!((t.global.params[0] - 0.1).abs() < 1e-6);
             assert_eq!(t.global.version, 1);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn leaf_partials_through_service_match_flat_round() {
+        use crate::aggregation::{self, UpdateStats};
+        let (m, sel) = mgmt();
+        let clients = register_n(&sel, 4);
+        let id = m
+            .create_task(small_cfg(4, 1), ModelSnapshot::new(0, vec![0.0; 8]))
+            .unwrap();
+        m.start_task(id).unwrap();
+        for &c in &clients {
+            m.join(c, id, [0u8; 32], 0).unwrap();
+            let _ = m.fetch_round(c, id, &sel, 0).unwrap();
+        }
+        // Two leaves each fold their slice and forward one partial.
+        for leaf in 0..2u32 {
+            let a = m.leaf_assignment(id, leaf, 2).unwrap();
+            assert!(a.accepted, "{}", a.reason);
+            assert_eq!(a.members.len(), 2);
+            let agg = aggregation::by_name("fedavg", 0.0).unwrap();
+            let mut fold = agg.begin(8).unwrap();
+            for &c in &a.members {
+                fold.accept(
+                    &vec![1.0; 8],
+                    &UpdateStats {
+                        client_id: c,
+                        weight: 1.0,
+                        loss: 0.5,
+                        staleness: 0,
+                    },
+                )
+                .unwrap();
+            }
+            let part = fold.export();
+            let (ok, folded, why) = m
+                .accept_partial(
+                    900 + leaf as u64,
+                    id,
+                    a.round,
+                    a.base_version,
+                    &a.members,
+                    part.sum,
+                    part.total_weight,
+                    part.count as u64,
+                    1.0,
+                    part.min_loss,
+                    10,
+                )
+                .unwrap();
+            assert!(ok, "{why}");
+            assert_eq!(folded, 2);
+        }
+        let (desc, metrics, _) = m.task_status(id).unwrap();
+        assert_eq!(desc.state, TaskState::Completed);
+        assert_eq!(metrics.rounds[0].participants, 4);
+        // Four unit deltas at unit weight: the mean is exactly 1.0.
+        m.with_task(id, |t| {
+            assert!(t.global.params.iter().all(|&p| p == 1.0));
             Ok(())
         })
         .unwrap();

@@ -57,13 +57,15 @@ pub fn route(msg: &Msg) -> Option<ServiceKind> {
         | Msg::SessionOpen { .. }
         | Msg::SessionHeartbeat { .. }
         | Msg::SessionClose { .. } => ServiceKind::Registration,
-        Msg::PollTask { .. } | Msg::JoinRound { .. } | Msg::FetchRound { .. } => {
-            ServiceKind::Task
-        }
+        Msg::PollTask { .. }
+        | Msg::JoinRound { .. }
+        | Msg::FetchRound { .. }
+        | Msg::LeafAssign { .. } => ServiceKind::Task,
         Msg::SecAggShares { .. }
         | Msg::UploadPlain { .. }
         | Msg::UploadMasked { .. }
-        | Msg::UnmaskResponse { .. } => ServiceKind::AggregationIngest,
+        | Msg::UnmaskResponse { .. }
+        | Msg::ForwardPartial { .. } => ServiceKind::AggregationIngest,
         Msg::GetTaskStatus { .. } => ServiceKind::Admin,
         _ => return None,
     })
@@ -403,6 +405,29 @@ impl Service for TaskService {
                     },
                 }
             }
+            Msg::LeafAssign {
+                leaf_id: _,
+                task_id,
+                leaf_index,
+                leaf_count,
+            } => match srv.management.leaf_assignment(task_id, leaf_index, leaf_count) {
+                Ok(a) => Msg::LeafAssignment {
+                    accepted: a.accepted,
+                    round: a.round,
+                    base_version: a.base_version,
+                    members: a.members,
+                    reason: a.reason,
+                },
+                // Unknown task etc.: a structured refusal the leaf backs
+                // off on, mirroring JoinAck.
+                Err(e) => Msg::LeafAssignment {
+                    accepted: false,
+                    round: 0,
+                    base_version: 0,
+                    members: Vec::new(),
+                    reason: e.to_string(),
+                },
+            },
             other => unhandled(self.kind(), &other),
         }
     }
@@ -461,6 +486,37 @@ impl Service for AggregationIngest {
             } => ack(srv
                 .management
                 .accept_unmask(client_id, task_id, round, shares, ctx.now_ms)),
+            Msg::ForwardPartial {
+                leaf_id,
+                task_id,
+                round,
+                base_version,
+                members,
+                sum,
+                total_weight,
+                count,
+                loss_sum,
+                min_loss,
+            } => match srv.management.accept_partial(
+                leaf_id,
+                task_id,
+                round,
+                base_version,
+                &members,
+                sum,
+                total_weight,
+                count,
+                loss_sum,
+                min_loss,
+                ctx.now_ms,
+            ) {
+                Ok((ok, folded, reason)) => Msg::LeafAck { ok, folded, reason },
+                Err(e) => Msg::LeafAck {
+                    ok: false,
+                    folded: 0,
+                    reason: e.to_string(),
+                },
+            },
             other => unhandled(self.kind(), &other),
         }
     }
@@ -632,6 +688,32 @@ mod tests {
                 vg_id: 0,
                 masked: vec![],
                 loss: 0.0
+            }),
+            Some(ServiceKind::AggregationIngest)
+        );
+        // Leaf-aggregator data plane: assignment via the task service,
+        // partial forwarding via aggregation ingest.
+        assert_eq!(
+            route(&Msg::LeafAssign {
+                leaf_id: 1,
+                task_id: 1,
+                leaf_index: 0,
+                leaf_count: 2
+            }),
+            Some(ServiceKind::Task)
+        );
+        assert_eq!(
+            route(&Msg::ForwardPartial {
+                leaf_id: 1,
+                task_id: 1,
+                round: 0,
+                base_version: 0,
+                members: vec![],
+                sum: vec![],
+                total_weight: 0.0,
+                count: 0,
+                loss_sum: 0.0,
+                min_loss: f64::INFINITY
             }),
             Some(ServiceKind::AggregationIngest)
         );

@@ -8,8 +8,9 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::aggtree::{LeafAggregator, LeafConfig};
 use crate::client::{ConstantTrainer, FloridaClient};
-use crate::config::{CohortSpec, FsyncPolicy, StorageConfig};
+use crate::config::{CohortSpec, FsyncPolicy, StorageConfig, TreeSpec};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
 use crate::orchestrator::TaskBuilder;
@@ -429,6 +430,163 @@ pub fn run_device_mix(n: usize, rounds: u64, seed: u64) -> Result<DeviceMixRepor
     })
 }
 
+/// Outcome of the hierarchical-aggregation scenario: the same seeded
+/// fleet driven once through the flat path (every device uploads to the
+/// root) and once through a `depth=2` leaf/master tree, demonstrating
+/// multiplied ingest fan-in with bit-identical results.
+#[derive(Clone, Debug)]
+pub struct TreeScaleReport {
+    pub n_clients: usize,
+    pub leaves: u32,
+    pub rounds_completed: u64,
+    /// Ingest frames that reached the root per round on each path:
+    /// `n_clients` flat vs `leaves` through the tree — the fan-in
+    /// multiplication the leaf layer buys.
+    pub root_frames_flat: u64,
+    pub root_frames_tree: u64,
+    /// Final model weights match bit-for-bit across the two paths.
+    pub bit_identical: bool,
+    pub max_abs_diff: f32,
+    pub wall_ms: u64,
+}
+
+/// Run the §5.2 dummy task (all-ones deltas at unit weight) on the same
+/// seeded fleet through both topologies and compare the final models.
+/// The leaf plane goes through the typed router + interceptor chain
+/// (`LeafAssign` / `ForwardPartial`), exactly as a deployed leaf would.
+pub fn run_tree_scale(n: usize, rounds: u64, leaves: u32, seed: u64) -> Result<TreeScaleReport> {
+    TreeSpec { depth: 2, leaves }.validate()?;
+    if n < leaves as usize {
+        return Err(Error::Config(format!(
+            "tree scale needs >= 1 client per leaf ({n} clients, {leaves} leaves)"
+        )));
+    }
+    if rounds == 0 {
+        return Err(Error::Config("tree scale needs >= 1 round".into()));
+    }
+    const DIM: usize = 5;
+    let t0 = std::time::Instant::now();
+
+    let make_server = |tag: &str| -> Result<(Arc<FloridaServer>, u64)> {
+        let server = Arc::new(FloridaServer::with_evaluator(
+            false,
+            Arc::new(NoEval),
+            seed,
+            true,
+        ));
+        let task = TaskBuilder::new(tag)
+            .clients_per_round(n)
+            .rounds(rounds)
+            .round_timeout_ms(120_000)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; DIM]))?
+            .id();
+        Ok((server, task))
+    };
+    // Everyone joins and fetches: the round's cohort forms.
+    let form_cohort = |server: &FloridaServer, task: u64| -> Result<(u64, u64)> {
+        let now = server.now_ms();
+        for c in 1..=n as u64 {
+            server.management.join(c, task, [0u8; 32], now)?;
+        }
+        for c in 1..=n as u64 {
+            let _ = server.management.fetch_round(c, task, &server.selection, now)?;
+        }
+        server
+            .management
+            .with_task(task, |t| Ok((t.round, t.global.version)))
+    };
+
+    // Flat reference: every device uploads straight to the root.
+    let (flat_srv, flat_task) = make_server("tree-scale-flat")?;
+    for _ in 0..rounds {
+        let (round, version) = form_cohort(&flat_srv, flat_task)?;
+        for c in 1..=n as u64 {
+            let (ok, why) = flat_srv.management.accept_plain(
+                c,
+                flat_task,
+                round,
+                version,
+                vec![1.0; DIM],
+                1.0,
+                0.1,
+                flat_srv.now_ms() + 1,
+            )?;
+            if !ok {
+                return Err(Error::Task(why));
+            }
+        }
+    }
+
+    // Tree path: the same fleet, but uploads fold at `leaves` leaf
+    // aggregators which each forward one partial through the router.
+    let (tree_srv, tree_task) = make_server("tree-scale-tree")?;
+    let stub = FloridaClient::direct(&tree_srv);
+    for _ in 0..rounds {
+        form_cohort(&tree_srv, tree_task)?;
+        for li in 0..leaves {
+            let mut leaf = LeafAggregator::new(LeafConfig {
+                leaf_id: 1000 + li as u64,
+                leaf_index: li,
+                leaf_count: leaves,
+                aggregator: "fedavg".into(),
+                prox_mu: 0.0,
+            });
+            let a = leaf.claim(&stub, tree_task)?;
+            if !a.accepted {
+                return Err(Error::Task(format!("leaf {li}: {}", a.reason)));
+            }
+            let members = a.members.clone();
+            leaf.begin_round(&a, DIM)?;
+            for &m in &members {
+                let (ok, why) = leaf.accept(m, a.round, &[1.0; DIM], 1.0, 0.1)?;
+                if !ok {
+                    return Err(Error::Task(format!("leaf {li} member {m}: {why}")));
+                }
+            }
+            let ack = leaf.forward(&stub, tree_task)?;
+            if ack.folded != members.len() as u64 {
+                return Err(Error::Task(format!(
+                    "leaf {li}: root credited {} of {} members",
+                    ack.folded,
+                    members.len()
+                )));
+            }
+        }
+    }
+
+    for (srv, task, tag) in [(&flat_srv, flat_task, "flat"), (&tree_srv, tree_task, "tree")] {
+        let (desc, metrics, _) = srv.management.task_status(task)?;
+        if desc.state != TaskState::Completed || metrics.rounds.len() as u64 != rounds {
+            return Err(Error::Task(format!(
+                "{tag} path ended in state {} after {} rounds",
+                desc.state.name(),
+                metrics.rounds.len()
+            )));
+        }
+    }
+    let p_flat = flat_srv
+        .management
+        .with_task(flat_task, |t| Ok(t.global.params.clone()))?;
+    let p_tree = tree_srv
+        .management
+        .with_task(tree_task, |t| Ok(t.global.params.clone()))?;
+    let max_abs_diff = p_flat
+        .iter()
+        .zip(&p_tree)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    Ok(TreeScaleReport {
+        n_clients: n,
+        leaves,
+        rounds_completed: rounds,
+        root_frames_flat: n as u64,
+        root_frames_tree: leaves as u64,
+        bit_identical: p_flat == p_tree,
+        max_abs_diff,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -477,5 +635,33 @@ mod tests {
     fn device_mix_validates_inputs() {
         assert!(run_device_mix(4, 2, 0).is_err());
         assert!(run_device_mix(12, 0, 0).is_err());
+    }
+
+    #[test]
+    fn tree_scale_bit_identical_to_flat() {
+        let r = run_tree_scale(12, 2, 4, 7).unwrap();
+        assert_eq!(r.rounds_completed, 2);
+        assert_eq!(r.root_frames_flat, 12, "flat: one frame per device");
+        assert_eq!(r.root_frames_tree, 4, "tree: one frame per leaf");
+        assert!(
+            r.bit_identical,
+            "dyadic all-ones folds must match exactly (max diff {})",
+            r.max_abs_diff
+        );
+        assert_eq!(r.max_abs_diff, 0.0);
+    }
+
+    #[test]
+    fn tree_scale_handles_uneven_slices() {
+        // 10 clients over 4 leaves: slices of 3/3/2/2.
+        let r = run_tree_scale(10, 1, 4, 3).unwrap();
+        assert!(r.bit_identical);
+    }
+
+    #[test]
+    fn tree_scale_validates_inputs() {
+        assert!(run_tree_scale(12, 2, 0, 0).is_err(), "depth 2 needs leaves");
+        assert!(run_tree_scale(2, 2, 4, 0).is_err(), "fewer clients than leaves");
+        assert!(run_tree_scale(12, 0, 4, 0).is_err(), "zero rounds");
     }
 }

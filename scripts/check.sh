@@ -37,6 +37,12 @@ if [[ "$fast" == "0" ]]; then
   echo "==> device-mix scenario smoke (scale --device-mix)"
   cargo run --release --quiet -- scale --device-mix --clients 12 --rounds 2
 
+  # Hierarchical aggregation smoke: the same seeded fleet through a
+  # depth-2 leaf/master tree must commit bit-identically to the flat
+  # path (the run itself fails on any divergence).
+  echo "==> tree scenario smoke (scale --tree depth=2 --leaves 4)"
+  cargo run --release --quiet -- scale --tree depth=2 --leaves 4 --clients 12 --rounds 2
+
   # Perf trajectory: snapshot the hot-path micro-bench into
   # BENCH_hotpath.json (quick measure windows; compare across commits).
   echo "==> bench snapshot (hotpath_micro -> BENCH_hotpath.json)"
