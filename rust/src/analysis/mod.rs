@@ -1,0 +1,488 @@
+//! `florida lint` — repo-aware static analysis (std-only, like `util/`).
+//!
+//! Past PRs fixed a panicking poisoned mutex on the RPC path, a u64
+//! corrupted above 2^53 by the f64-backed JSON codec, and wall-clock
+//! nondeterminism in the simulator — each found by hand. This module
+//! turns those bug classes into machine-checked invariants: a
+//! lightweight tokenizer ([`tokenizer`]), a [`rules::Rule`] framework
+//! with file-path scoping, `file:line` findings, inline
+//! `// florida-lint: allow(<rule>)` suppression, and a committed
+//! [`Baseline`] for grandfathered sites whose count may only shrink.
+//!
+//! Entry points: the `florida lint [--baseline] [--write-baseline]`
+//! CLI subcommand (`cli.rs`) and the `lint_enforced` test target, which
+//! runs the same engine over `rust/src` under plain `cargo test`.
+//!
+//! Suppression syntax, checked per rule name:
+//!
+//! ```text
+//! // florida-lint: allow(wall-clock-in-core): metrics latency is wall time
+//! let t0 = Instant::now();
+//! ```
+//!
+//! An `allow` covers its own line and the line directly below, so it
+//! works both trailing and as a line above. Corpus markers
+//! (`// florida-lint: corpus(binary-roundtrip)`) tag the test-corpus
+//! functions the `msg-coverage` rule checks variants against.
+
+pub mod rules;
+pub mod tokenizer;
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use tokenizer::{tokenize, Token};
+
+pub use rules::{default_rules, Rule};
+
+/// One lint finding, anchored to a source line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// A tokenized source file plus the lint-relevant trivia extracted from
+/// its comments: `allow` suppressions, corpus markers, and the line
+/// ranges of `#[cfg(test)]` regions (tests may panic, block, and read
+/// the wall clock freely).
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes, e.g.
+    /// `rust/src/services/router.rs`.
+    pub path: String,
+    /// All tokens, comments included.
+    pub tokens: Vec<Token>,
+    /// Significant tokens only (comments stripped) — what rules match.
+    pub code: Vec<Token>,
+    /// line → rules allowed on that line and the next.
+    allows: HashMap<u32, Vec<String>>,
+    /// Corpus marker name → source line of the marker.
+    pub corpus_markers: Vec<(String, u32)>,
+    /// Inclusive line ranges covered by `#[cfg(test)]` items.
+    test_ranges: Vec<(u32, u32)>,
+}
+
+impl SourceFile {
+    /// Tokenize and extract directives. Never fails: a file the
+    /// tokenizer cannot make sense of just yields fewer tokens.
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let tokens = tokenize(src);
+        let mut allows: HashMap<u32, Vec<String>> = HashMap::new();
+        let mut corpus_markers = Vec::new();
+        for t in tokens.iter().filter(|t| t.is_comment()) {
+            let Some(rest) = t.text.split("florida-lint:").nth(1) else {
+                continue;
+            };
+            for (kind, names) in parse_directives(rest) {
+                match kind {
+                    DirectiveKind::Allow => {
+                        allows.entry(t.line).or_default().extend(names)
+                    }
+                    DirectiveKind::Corpus => corpus_markers
+                        .extend(names.into_iter().map(|n| (n, t.line))),
+                }
+            }
+        }
+        let code: Vec<Token> = tokens.iter().filter(|t| !t.is_comment()).cloned().collect();
+        let test_ranges = find_test_ranges(&code);
+        SourceFile {
+            path: path.replace('\\', "/"),
+            tokens,
+            code,
+            allows,
+            corpus_markers,
+            test_ranges,
+        }
+    }
+
+    /// Is `rule` suppressed at `line` (allow on the line itself or the
+    /// line directly above)?
+    pub fn allowed(&self, rule: &str, line: u32) -> bool {
+        for l in [line, line.saturating_sub(1)] {
+            if self
+                .allows
+                .get(&l)
+                .is_some_and(|rs| rs.iter().any(|r| r == rule))
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Is `line` inside a `#[cfg(test)]` item?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+}
+
+#[derive(Clone, Copy)]
+enum DirectiveKind {
+    Allow,
+    Corpus,
+}
+
+/// Parse `allow(a, b)` / `corpus(x)` occurrences out of a comment tail.
+fn parse_directives(rest: &str) -> Vec<(DirectiveKind, Vec<String>)> {
+    let mut out = Vec::new();
+    for (word, kind) in [
+        ("allow(", DirectiveKind::Allow),
+        ("corpus(", DirectiveKind::Corpus),
+    ] {
+        let mut cursor = rest;
+        while let Some(pos) = cursor.find(word) {
+            let tail = &cursor[pos + word.len()..];
+            let Some(end) = tail.find(')') else { break };
+            let names = tail[..end]
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            out.push((kind, names));
+            cursor = &tail[end..];
+        }
+    }
+    out
+}
+
+/// Line ranges of `#[cfg(test)]` items: from the attribute to the close
+/// of the first brace block that follows it.
+fn find_test_ranges(code: &[Token]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < code.len() {
+        let hit = code[i].punct("#")
+            && code[i + 1].punct("[")
+            && code[i + 2].ident("cfg")
+            && code[i + 3].punct("(")
+            && code[i + 4].ident("test")
+            && code[i + 5].punct(")")
+            && code[i + 6].punct("]");
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let start_line = code[i].line;
+        // Find the body: first `{` after the attribute, then its match.
+        let mut j = i + 7;
+        while j < code.len() && !code[j].punct("{") {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        let mut end_line = code.last().map(|t| t.line).unwrap_or(start_line);
+        while j < code.len() {
+            if code[j].punct("{") {
+                depth += 1;
+            } else if code[j].punct("}") {
+                depth -= 1;
+                if depth == 0 {
+                    end_line = code[j].line;
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        out.push((start_line, end_line));
+        i = j.max(i + 7);
+    }
+    out
+}
+
+/// Walk `repo_root/rust/src` and parse every `.rs` file, storing paths
+/// relative to `repo_root` so findings and the baseline are stable no
+/// matter where the engine runs from.
+pub fn load_tree(repo_root: &Path) -> Result<Vec<SourceFile>> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut paths = Vec::new();
+    collect_rs_files(&src_root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = std::fs::read_to_string(&p)?;
+        let rel = p
+            .strip_prefix(repo_root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile::parse(&rel, &text));
+    }
+    Ok(files)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| Error::Io(std::io::Error::new(e.kind(), format!("{}: {e}", dir.display()))))?
+    {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over the tree, drop inline-suppressed findings, and
+/// return the rest sorted by (file, line, rule).
+pub fn run_rules(files: &[SourceFile], rules: &[Box<dyn Rule>]) -> Vec<Finding> {
+    let by_path: HashMap<&str, &SourceFile> =
+        files.iter().map(|f| (f.path.as_str(), f)).collect();
+    let mut out = Vec::new();
+    for rule in rules {
+        let mut raw = Vec::new();
+        rule.check(files, &mut raw);
+        for f in raw {
+            let suppressed = by_path
+                .get(f.file.as_str())
+                .is_some_and(|s| s.allowed(f.rule, f.line));
+            if !suppressed {
+                out.push(f);
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+/// Render findings one per line, `file:line: [rule] message`.
+pub fn render(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    s
+}
+
+/// Grandfathered findings: per (rule, file) counts that may only
+/// shrink. Count-based (not line-based) so unrelated edits shifting
+/// line numbers never resurrect or mask a finding.
+#[derive(Default)]
+pub struct Baseline {
+    counts: BTreeMap<(String, String), usize>,
+}
+
+impl Baseline {
+    /// Parse the committed baseline: `#` comments, then
+    /// `<rule> <file> <count>` per line.
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let mut counts = BTreeMap::new();
+        for (idx, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (Some(rule), Some(file), Some(n)) = (it.next(), it.next(), it.next()) else {
+                return Err(Error::Config(format!(
+                    "lint baseline line {}: expected `<rule> <file> <count>`, got {line:?}",
+                    idx + 1
+                )));
+            };
+            let n: usize = n.parse().map_err(|_| {
+                Error::Config(format!("lint baseline line {}: bad count {n:?}", idx + 1))
+            })?;
+            counts.insert((rule.to_string(), file.to_string()), n);
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Serialize findings as a fresh baseline.
+    pub fn render_from(findings: &[Finding]) -> String {
+        let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for f in findings {
+            *counts.entry((f.rule.to_string(), f.file.clone())).or_default() += 1;
+        }
+        let mut s = String::from(
+            "# florida lint baseline — grandfathered findings, count may only shrink.\n\
+             # Format: <rule> <file> <count>\n\
+             # Regenerate (after fixing, never to admit new findings):\n\
+             #   cargo run --release -- lint --write-baseline\n",
+        );
+        for ((rule, file), n) in &counts {
+            s.push_str(&format!("{rule} {file} {n}\n"));
+        }
+        s
+    }
+
+    /// Split findings into (reported, grandfathered-count, stale-slots).
+    ///
+    /// A (rule, file) group within its baselined count is grandfathered
+    /// wholesale; once a group exceeds its budget every finding in it is
+    /// reported (line identity is unknowable, so the whole group
+    /// surfaces — fixing back down to budget silences it). `stale` is
+    /// how many baseline slots are no longer used; CI prints a nudge to
+    /// shrink the file when it is nonzero.
+    pub fn apply(&self, findings: Vec<Finding>) -> (Vec<Finding>, usize, usize) {
+        let mut groups: BTreeMap<(String, String), Vec<Finding>> = BTreeMap::new();
+        for f in findings {
+            groups
+                .entry((f.rule.to_string(), f.file.clone()))
+                .or_default()
+                .push(f);
+        }
+        let mut reported = Vec::new();
+        let mut grandfathered = 0usize;
+        let mut stale = 0usize;
+        for ((rule, file), group) in &mut groups {
+            let budget = self
+                .counts
+                .get(&(rule.clone(), file.clone()))
+                .copied()
+                .unwrap_or(0);
+            if group.len() <= budget {
+                grandfathered += group.len();
+                stale += budget - group.len();
+            } else {
+                reported.append(group);
+            }
+        }
+        // Baseline entries whose group vanished entirely are stale too.
+        for (key, budget) in &self.counts {
+            if !groups.contains_key(key) {
+                stale += budget;
+            }
+        }
+        reported.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+        });
+        (reported, grandfathered, stale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_directive_covers_own_and_next_line() {
+        let f = SourceFile::parse(
+            "rust/src/x.rs",
+            "// florida-lint: allow(some-rule)\nlet a = 1;\nlet b = 2;\n",
+        );
+        assert!(f.allowed("some-rule", 1));
+        assert!(f.allowed("some-rule", 2));
+        assert!(!f.allowed("some-rule", 3));
+        assert!(!f.allowed("other-rule", 2));
+    }
+
+    #[test]
+    fn trailing_allow_and_multiple_rules() {
+        let f = SourceFile::parse(
+            "rust/src/x.rs",
+            "let a = 1; // florida-lint: allow(rule-a, rule-b): why\n",
+        );
+        assert!(f.allowed("rule-a", 1));
+        assert!(f.allowed("rule-b", 1));
+        assert!(!f.allowed("rule-c", 1));
+    }
+
+    #[test]
+    fn corpus_markers_collected() {
+        let f = SourceFile::parse(
+            "rust/src/x.rs",
+            "// florida-lint: corpus(binary-roundtrip, json-roundtrip)\nfn samples() {}\n",
+        );
+        let names: Vec<&str> = f.corpus_markers.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["binary-roundtrip", "json-roundtrip"]);
+    }
+
+    #[test]
+    fn cfg_test_ranges_detected() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\nfn after() {}\n";
+        let f = SourceFile::parse("rust/src/x.rs", src);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(2));
+        assert!(f.in_test(4));
+        assert!(f.in_test(5));
+        assert!(!f.in_test(6));
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_budget() {
+        let findings = vec![
+            Finding {
+                rule: "r1",
+                file: "rust/src/a.rs".into(),
+                line: 3,
+                message: "m".into(),
+            },
+            Finding {
+                rule: "r1",
+                file: "rust/src/a.rs".into(),
+                line: 9,
+                message: "m".into(),
+            },
+        ];
+        let text = Baseline::render_from(&findings);
+        let base = Baseline::parse(&text).unwrap();
+        // Within budget: everything grandfathered.
+        let (rep, grand, stale) = base.apply(findings.clone());
+        assert!(rep.is_empty());
+        assert_eq!(grand, 2);
+        assert_eq!(stale, 0);
+        // Over budget: the whole group surfaces.
+        let mut more = findings.clone();
+        more.push(Finding {
+            rule: "r1",
+            file: "rust/src/a.rs".into(),
+            line: 20,
+            message: "m".into(),
+        });
+        let (rep, _, _) = base.apply(more);
+        assert_eq!(rep.len(), 3);
+        // Under budget: stale slots reported.
+        let (rep, grand, stale) = base.apply(findings[..1].to_vec());
+        assert!(rep.is_empty());
+        assert_eq!(grand, 1);
+        assert_eq!(stale, 1);
+    }
+
+    #[test]
+    fn baseline_rejects_garbage() {
+        assert!(Baseline::parse("not enough fields\n").is_err());
+        assert!(Baseline::parse("rule file notanumber\n").is_err());
+        assert!(Baseline::parse("# comment only\n\n").is_ok());
+    }
+
+    #[test]
+    fn run_rules_applies_suppression() {
+        struct Always;
+        impl Rule for Always {
+            fn name(&self) -> &'static str {
+                "always"
+            }
+            fn description(&self) -> &'static str {
+                "fires on line 2 of every file"
+            }
+            fn applies_to(&self, _path: &str) -> bool {
+                true
+            }
+            fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>) {
+                for f in files {
+                    out.push(Finding {
+                        rule: "always",
+                        file: f.path.clone(),
+                        line: 2,
+                        message: "hit".into(),
+                    });
+                }
+            }
+        }
+        let clean = SourceFile::parse("rust/src/a.rs", "fn a() {}\nfn b() {}\n");
+        let suppressed = SourceFile::parse(
+            "rust/src/b.rs",
+            "fn a() {}\nfn b() {} // florida-lint: allow(always)\n",
+        );
+        let rules: Vec<Box<dyn Rule>> = vec![Box::new(Always)];
+        let out = run_rules(&[clean, suppressed], &rules);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].file, "rust/src/a.rs");
+    }
+}

@@ -1,0 +1,1078 @@
+//! The six project-grounded lint rules.
+//!
+//! Each rule encodes a bug class this repo has actually shipped and
+//! fixed by hand (see `docs/architecture.md` § "Static analysis &
+//! enforced invariants"):
+//!
+//! * [`PanickingLock`] — `.lock().unwrap()` on a server path panics the
+//!   connection thread when a mutex is poisoned (the PR 5 `RemoteApi`
+//!   bug, server-side).
+//! * [`U64AsJsonNumber`] — `u64` message fields must ride the JSON
+//!   codec as strings; JSON numbers are f64 and corrupt above 2^53
+//!   (the PR 5 session-token bug, generalized).
+//! * [`WallClockInCore`] — `Instant::now`/`SystemTime::now` outside an
+//!   explicit allowlist breaks manual-clock determinism (the seeded
+//!   simulator and `Clock::Manual` seam).
+//! * [`MsgCoverage`] — every `Msg` variant must be exercised by the
+//!   binary round-trip corpus, every JSON-capable variant by the JSON
+//!   corpus, and every request variant must have a typed pair in
+//!   `proto/rpc.rs`.
+//! * [`UncheckedWireLength`] — a wire-derived length must be bounds-
+//!   checked before it sizes an allocation (hostile-frame defense).
+//! * [`LockAcrossSend`] — a `MutexGuard` held across a transport
+//!   `send`/`send_owned` serializes the data plane; the lock-discipline
+//!   precondition for sharding it.
+
+use super::{Finding, SourceFile};
+use crate::analysis::tokenizer::{TokKind, Token};
+use std::collections::{BTreeSet, HashMap};
+
+/// A lint rule over tokenized source files.
+///
+/// `check` receives the whole tree so cross-file rules (like
+/// [`MsgCoverage`]) can correlate; per-file rules iterate the files
+/// they [`applies_to`](Rule::applies_to).
+pub trait Rule {
+    /// Stable rule name — what `allow(<name>)` and the baseline use.
+    fn name(&self) -> &'static str;
+    /// One-line description for docs and `lint` output.
+    fn description(&self) -> &'static str;
+    /// File-path scoping (paths are repo-relative, forward slashes).
+    fn applies_to(&self, path: &str) -> bool;
+    /// Append findings for the tree.
+    fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>);
+}
+
+/// The shipped rule set.
+pub fn default_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(PanickingLock),
+        Box::new(U64AsJsonNumber),
+        Box::new(WallClockInCore),
+        Box::new(MsgCoverage),
+        Box::new(UncheckedWireLength),
+        Box::new(LockAcrossSend),
+    ]
+}
+
+/// Server-side modules: a panic here takes down a connection thread or
+/// the orchestrator, not just one device.
+fn server_side(path: &str) -> bool {
+    ["/services/", "/orchestrator/", "/transport/", "/storage/", "/aggtree/"]
+        .iter()
+        .any(|d| path.contains(d))
+}
+
+/// Index of the brace matching `code[open]` (which must be `{`).
+fn close_of(code: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, t) in code.iter().enumerate().skip(open) {
+        if t.punct("{") {
+            depth += 1;
+        } else if t.punct("}") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// Token range (open-brace idx, close-brace idx) of the body of
+/// `kw name { … }` — e.g. (`enum`, `Msg`) or (`fn`, `to_json`).
+fn item_body(code: &[Token], kw: &str, name: &str) -> Option<(usize, usize)> {
+    for i in 0..code.len().saturating_sub(2) {
+        if code[i].ident(kw) && code[i + 1].ident(name) {
+            let mut j = i + 2;
+            while j < code.len() && !code[j].punct("{") {
+                if code[j].punct(";") {
+                    break; // declaration without a body
+                }
+                j += 1;
+            }
+            if j < code.len() && code[j].punct("{") {
+                return close_of(code, j).map(|c| (j, c));
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// 1. panicking-lock
+// ---------------------------------------------------------------------------
+
+/// `.lock().unwrap()` / `.lock().expect(…)` in server-side modules.
+pub struct PanickingLock;
+
+impl Rule for PanickingLock {
+    fn name(&self) -> &'static str {
+        "panicking-lock"
+    }
+
+    fn description(&self) -> &'static str {
+        "server-side .lock().unwrap()/.expect() panics on mutex poisoning; \
+         surface Err(Error::…) or recover with into_inner()"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        server_side(path)
+    }
+
+    fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>) {
+        for f in files.iter().filter(|f| self.applies_to(&f.path)) {
+            let c = &f.code;
+            for i in 0..c.len().saturating_sub(6) {
+                let hit = c[i].punct(".")
+                    && c[i + 1].ident("lock")
+                    && c[i + 2].punct("(")
+                    && c[i + 3].punct(")")
+                    && c[i + 4].punct(".")
+                    && (c[i + 5].ident("unwrap") || c[i + 5].ident("expect"))
+                    && c[i + 6].punct("(");
+                if hit && !f.in_test(c[i + 5].line) {
+                    out.push(Finding {
+                        rule: self.name(),
+                        file: f.path.clone(),
+                        line: c[i + 5].line,
+                        message: format!(
+                            ".lock().{}() panics if a previous holder panicked; map the \
+                             PoisonError into Err(Error::…) or recover with \
+                             unwrap_or_else(|p| p.into_inner())",
+                            c[i + 5].text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. u64-as-json-number
+// ---------------------------------------------------------------------------
+
+/// `u64` message fields encoded as raw JSON numbers in `proto/msg.rs`.
+pub struct U64AsJsonNumber;
+
+/// `field: u64` declarations inside top-level `enum`/`struct` bodies.
+fn u64_field_names(code: &[Token]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if (code[i].ident("enum") || code[i].ident("struct"))
+            && code.get(i + 1).map(|t| t.kind) == Some(TokKind::Ident)
+        {
+            if let Some((open, close)) = item_body(&code[i..], &code[i].text, &code[i + 1].text)
+                .map(|(o, c)| (o + i, c + i))
+            {
+                for j in open..close.saturating_sub(2) {
+                    let field = code[j].kind == TokKind::Ident
+                        && code[j + 1].punct(":")
+                        && code[j + 2].ident("u64")
+                        && code
+                            .get(j + 3)
+                            .map(|t| t.punct(",") || t.punct("}"))
+                            .unwrap_or(false);
+                    if field {
+                        names.insert(code[j].text.clone());
+                    }
+                }
+                i = close;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    names
+}
+
+impl Rule for U64AsJsonNumber {
+    fn name(&self) -> &'static str {
+        "u64-as-json-number"
+    }
+
+    fn description(&self) -> &'static str {
+        "u64 Msg fields must ride the JSON codec as strings — JSON numbers \
+         are f64-backed and corrupt values above 2^53"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        path.ends_with("proto/msg.rs")
+    }
+
+    fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>) {
+        for f in files.iter().filter(|f| self.applies_to(&f.path)) {
+            let c = &f.code;
+            let u64_fields = u64_field_names(c);
+            let mut i = 0usize;
+            while i + 4 < c.len() {
+                let is_set = c[i].punct(".")
+                    && c[i + 1].ident("set")
+                    && c[i + 2].punct("(")
+                    && c[i + 3].kind == TokKind::Str
+                    && c[i + 4].punct(",");
+                if !is_set || f.in_test(c[i + 3].line) {
+                    i += 1;
+                    continue;
+                }
+                let key = c[i + 3].text.trim_matches('"').to_string();
+                if !u64_fields.contains(&key) {
+                    i += 5;
+                    continue;
+                }
+                // Argument tokens up to the `.set(`'s matching close.
+                let mut depth = 1i32;
+                let mut j = i + 5;
+                let mut stringified = false;
+                while j < c.len() && depth > 0 {
+                    if c[j].punct("(") {
+                        depth += 1;
+                    } else if c[j].punct(")") {
+                        depth -= 1;
+                    } else if c[j].ident("to_string") || c[j].ident("format") {
+                        stringified = true;
+                    }
+                    j += 1;
+                }
+                if !stringified {
+                    out.push(Finding {
+                        rule: self.name(),
+                        file: f.path.clone(),
+                        line: c[i + 3].line,
+                        message: format!(
+                            "u64 field {key:?} encoded as a JSON number — values above \
+                             2^53 corrupt through the f64-backed codec; encode \
+                             .to_string() and decode number-or-string"
+                        ),
+                    });
+                }
+                i = j;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. wall-clock-in-core
+// ---------------------------------------------------------------------------
+
+/// `Instant::now` / `SystemTime::now` outside the allowlist.
+pub struct WallClockInCore;
+
+impl Rule for WallClockInCore {
+    fn name(&self) -> &'static str {
+        "wall-clock-in-core"
+    }
+
+    fn description(&self) -> &'static str {
+        "Instant::now/SystemTime::now outside util/bench.rs and cli.rs \
+         breaks manual-clock determinism; use the Clock seam or justify \
+         with an inline allow"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        !(path.ends_with("util/bench.rs") || path.ends_with("cli.rs"))
+    }
+
+    fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>) {
+        for f in files.iter().filter(|f| self.applies_to(&f.path)) {
+            let c = &f.code;
+            for i in 0..c.len().saturating_sub(3) {
+                let hit = (c[i].ident("Instant") || c[i].ident("SystemTime"))
+                    && c[i + 1].punct(":")
+                    && c[i + 2].punct(":")
+                    && c[i + 3].ident("now");
+                if hit && !f.in_test(c[i].line) {
+                    out.push(Finding {
+                        rule: self.name(),
+                        file: f.path.clone(),
+                        line: c[i].line,
+                        message: format!(
+                            "{}::now in core logic — orchestration must run on the \
+                             deterministic Clock seam (services::FloridaServer) so \
+                             seeded simulations replay bit-identically",
+                            c[i].text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. msg-coverage
+// ---------------------------------------------------------------------------
+
+/// Cross-file exhaustiveness over the `Msg` enum.
+pub struct MsgCoverage;
+
+/// `Msg::Variant` references within `code[range]`.
+fn msg_refs(code: &[Token], from: usize, to: usize) -> BTreeSet<String> {
+    let mut set = BTreeSet::new();
+    let hi = to.min(code.len());
+    for i in from..hi.saturating_sub(3) {
+        if code[i].ident("Msg")
+            && code[i + 1].punct(":")
+            && code[i + 2].punct(":")
+            && code[i + 3].kind == TokKind::Ident
+        {
+            set.insert(code[i + 3].text.clone());
+        }
+    }
+    set
+}
+
+/// The union of `Msg::…` references in every function tagged with a
+/// `// florida-lint: corpus(<name>)` marker.
+fn corpus_refs(f: &SourceFile, corpus: &str) -> Option<BTreeSet<String>> {
+    let mut found_marker = false;
+    let mut set = BTreeSet::new();
+    for (name, line) in &f.corpus_markers {
+        if name != corpus {
+            continue;
+        }
+        found_marker = true;
+        // The marked item: first code token at/after the marker line,
+        // then its first brace block.
+        let Some(start) = f.code.iter().position(|t| t.line >= *line) else {
+            continue;
+        };
+        let mut j = start;
+        while j < f.code.len() && !f.code[j].punct("{") {
+            j += 1;
+        }
+        if j < f.code.len() {
+            if let Some(end) = close_of(&f.code, j) {
+                set.extend(msg_refs(&f.code, j, end + 1));
+            }
+        }
+    }
+    found_marker.then_some(set)
+}
+
+impl Rule for MsgCoverage {
+    fn name(&self) -> &'static str {
+        "msg-coverage"
+    }
+
+    fn description(&self) -> &'static str {
+        "every Msg variant must round-trip in the binary corpus, every \
+         JSON-capable variant in the JSON corpus, and every request \
+         variant must have a typed pair in proto/rpc.rs"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        path.ends_with("proto/msg.rs") || path.ends_with("proto/rpc.rs")
+    }
+
+    fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>) {
+        let Some(msg) = files.iter().find(|f| f.path.ends_with("proto/msg.rs")) else {
+            return;
+        };
+        let push = |out: &mut Vec<Finding>, line: u32, message: String| {
+            out.push(Finding {
+                rule: "msg-coverage",
+                file: msg.path.clone(),
+                line,
+                message,
+            });
+        };
+        let Some((open, close)) = item_body(&msg.code, "enum", "Msg") else {
+            push(out, 1, "enum Msg not found in proto/msg.rs".into());
+            return;
+        };
+
+        // Variants at depth 1 of the enum body, with their lines.
+        let mut variants: Vec<(String, u32)> = Vec::new();
+        let mut depth = 0i32;
+        for j in open..=close {
+            if msg.code[j].punct("{") {
+                depth += 1;
+            } else if msg.code[j].punct("}") {
+                depth -= 1;
+            } else if depth == 1
+                && msg.code[j].kind == TokKind::Ident
+                && msg.code
+                    .get(j + 1)
+                    .map(|t| t.punct("{") || t.punct("(") || t.punct(","))
+                    .unwrap_or(false)
+            {
+                variants.push((msg.code[j].text.clone(), msg.code[j].line));
+            }
+        }
+
+        // Direction sections from the enum's `// ---- a → b ----` comments.
+        let enum_lines = (msg.code[open].line, msg.code[close].line);
+        let mut switches: Vec<(u32, bool)> = Vec::new();
+        for t in msg.tokens.iter().filter(|t| t.is_comment()) {
+            if t.line < enum_lines.0 || t.line > enum_lines.1 {
+                continue;
+            }
+            if t.text.contains("→ server") || t.text.contains("→ master") {
+                switches.push((t.line, true));
+            } else if t.text.contains("→ client") || t.text.contains("→ leaf") {
+                switches.push((t.line, false));
+            }
+        }
+        let is_request = |line: u32| -> bool {
+            switches
+                .iter()
+                .rev()
+                .find(|(l, _)| *l < line)
+                .map(|(_, r)| *r)
+                .unwrap_or(false)
+        };
+
+        // (a) Every variant in the binary round-trip corpus.
+        match corpus_refs(msg, "binary-roundtrip") {
+            None => push(
+                out,
+                1,
+                "no `// florida-lint: corpus(binary-roundtrip)` marker in proto/msg.rs — \
+                 the round-trip corpus is untracked"
+                    .into(),
+            ),
+            Some(corpus) => {
+                for (v, line) in &variants {
+                    if !corpus.contains(v) {
+                        push(
+                            out,
+                            *line,
+                            format!(
+                                "Msg::{v} missing from the corpus(binary-roundtrip) \
+                                 round-trip samples"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // (b) Every JSON-capable variant (a `Msg::…` arm in to_json) in
+        // the JSON corpus.
+        if let Some((jopen, jclose)) = item_body(&msg.code, "fn", "to_json") {
+            let json_capable = msg_refs(&msg.code, jopen, jclose + 1);
+            match corpus_refs(msg, "json-roundtrip") {
+                None => push(
+                    out,
+                    msg.code[jopen].line,
+                    "no `// florida-lint: corpus(json-roundtrip)` marker in proto/msg.rs — \
+                     the JSON corpus is untracked"
+                        .into(),
+                ),
+                Some(corpus) => {
+                    for (v, line) in &variants {
+                        if json_capable.contains(v) && !corpus.contains(v) {
+                            push(
+                                out,
+                                *line,
+                                format!(
+                                    "JSON-capable Msg::{v} missing from the \
+                                     corpus(json-roundtrip) round-trip samples"
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // (c) Every request variant has a typed `request!` pair in rpc.rs.
+        let Some(rpc) = files.iter().find(|f| f.path.ends_with("proto/rpc.rs")) else {
+            push(out, 1, "proto/rpc.rs not found — typed RPC pairs unchecked".into());
+            return;
+        };
+        let mut typed: BTreeSet<String> = BTreeSet::new();
+        let rc = &rpc.code;
+        for i in 0..rc.len().saturating_sub(3) {
+            if rc[i].ident("request") && rc[i + 1].punct("!") && rc[i + 2].punct("(") {
+                // First ident inside the invocation is the request name.
+                if let Some(t) = rc[i + 3..].iter().find(|t| t.kind == TokKind::Ident) {
+                    typed.insert(t.text.clone());
+                }
+            }
+        }
+        for (v, line) in &variants {
+            if is_request(*line) && !typed.contains(v) {
+                push(
+                    out,
+                    *line,
+                    format!(
+                        "request variant Msg::{v} has no typed `request!` pair in \
+                         proto/rpc.rs — protocol errors would surface as raw Msg matches"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. unchecked-wire-length
+// ---------------------------------------------------------------------------
+
+/// Wire-derived lengths sizing allocations without a bound check.
+pub struct UncheckedWireLength;
+
+const LEN_SOURCES: [&str; 5] = [
+    "get_varint",
+    "get_u32",
+    "get_u64",
+    "from_le_bytes",
+    "from_be_bytes",
+];
+
+impl Rule for UncheckedWireLength {
+    fn name(&self) -> &'static str {
+        "unchecked-wire-length"
+    }
+
+    fn description(&self) -> &'static str {
+        "a length decoded from the wire must be bounds-checked (MAX_FRAME, \
+         remaining(), .min(cap)) before it sizes an allocation"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        ["/codec/", "/proto/", "/transport/", "/storage/", "/aggtree/"]
+            .iter()
+            .any(|d| path.contains(d))
+    }
+
+    fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>) {
+        for f in files.iter().filter(|f| self.applies_to(&f.path)) {
+            let c = &f.code;
+            // ident -> still-unguarded wire length.
+            let mut tracked: HashMap<String, bool> = HashMap::new();
+            let mut i = 0usize;
+            while i < c.len() {
+                if f.in_test(c[i].line) {
+                    i += 1;
+                    continue;
+                }
+                // New function: bindings don't cross fn boundaries.
+                if c[i].ident("fn") {
+                    tracked.clear();
+                    i += 1;
+                    continue;
+                }
+                // `let [mut] name = <rhs…>;` with a wire-length source in rhs.
+                if c[i].ident("let") {
+                    let mut j = i + 1;
+                    if c.get(j).map(|t| t.ident("mut")).unwrap_or(false) {
+                        j += 1;
+                    }
+                    if let Some(name_tok) = c.get(j).filter(|t| t.kind == TokKind::Ident) {
+                        let name = name_tok.text.clone();
+                        let mut k = j + 1;
+                        let mut depth = 0i32;
+                        let mut sourced = false;
+                        while k < c.len() {
+                            if c[k].punct("(") || c[k].punct("{") || c[k].punct("[") {
+                                depth += 1;
+                            } else if c[k].punct(")") || c[k].punct("}") || c[k].punct("]") {
+                                depth -= 1;
+                            } else if c[k].punct(";") && depth <= 0 {
+                                break;
+                            } else if c[k].kind == TokKind::Ident
+                                && LEN_SOURCES.contains(&c[k].text.as_str())
+                            {
+                                sourced = true;
+                            }
+                            k += 1;
+                        }
+                        if sourced {
+                            tracked.insert(name, true);
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                // Guard: the ident compared, clamped, or measured.
+                if c[i].kind == TokKind::Ident && tracked.contains_key(&c[i].text) {
+                    let prev = i.checked_sub(1).map(|p| &c[p]);
+                    let next = c.get(i + 1);
+                    let cmp = |t: Option<&Token>| {
+                        t.map(|t| t.punct("<") || t.punct(">")).unwrap_or(false)
+                    };
+                    let clamped = next.map(|t| t.punct(".")).unwrap_or(false)
+                        && c.get(i + 2).map(|t| t.ident("min")).unwrap_or(false);
+                    let min_arg = prev.map(|t| t.punct("(")).unwrap_or(false)
+                        && i.checked_sub(2)
+                            .map(|p| c[p].ident("min"))
+                            .unwrap_or(false);
+                    if cmp(prev) || cmp(next) || clamped || min_arg {
+                        tracked.insert(c[i].text.clone(), false);
+                    }
+                }
+                // Allocation sinks: with_capacity(…) and vec![…; n].
+                let alloc_args: Option<(usize, &str)> = if c[i].ident("with_capacity")
+                    && c.get(i + 1).map(|t| t.punct("(")).unwrap_or(false)
+                {
+                    Some((i + 1, "("))
+                } else if c[i].ident("vec")
+                    && c.get(i + 1).map(|t| t.punct("!")).unwrap_or(false)
+                    && c.get(i + 2).map(|t| t.punct("[")).unwrap_or(false)
+                {
+                    Some((i + 2, "["))
+                } else {
+                    None
+                };
+                if let Some((start, open)) = alloc_args {
+                    let (inc, dec) = if open == "(" { ("(", ")") } else { ("[", "]") };
+                    let mut depth = 0i32;
+                    let mut j = start;
+                    while j < c.len() {
+                        if c[j].punct(inc) {
+                            depth += 1;
+                        } else if c[j].punct(dec) {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        } else if c[j].kind == TokKind::Ident
+                            && tracked.get(&c[j].text).copied().unwrap_or(false)
+                        {
+                            // `.min(cap)` right on the use site is a guard.
+                            let clamped = c.get(j + 1).map(|t| t.punct(".")).unwrap_or(false)
+                                && c.get(j + 2).map(|t| t.ident("min")).unwrap_or(false);
+                            if !clamped {
+                                out.push(Finding {
+                                    rule: self.name(),
+                                    file: f.path.clone(),
+                                    line: c[j].line,
+                                    message: format!(
+                                        "wire-derived length `{}` sizes an allocation \
+                                         without a bound check — a hostile frame can \
+                                         claim any length; compare against \
+                                         MAX_FRAME/remaining() or clamp with .min()",
+                                        c[j].text
+                                    ),
+                                });
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j.max(i + 1);
+                    continue;
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 6. lock-across-send
+// ---------------------------------------------------------------------------
+
+/// A `MutexGuard` binding live across a transport `send`/`send_owned`.
+pub struct LockAcrossSend;
+
+/// Idents whose call in a `let` RHS produces a guard.
+const LOCK_CALLS: [&str; 4] = ["lock", "try_lock", "locked", "lock_checked"];
+
+impl Rule for LockAcrossSend {
+    fn name(&self) -> &'static str {
+        "lock-across-send"
+    }
+
+    fn description(&self) -> &'static str {
+        "a MutexGuard held across a transport send serializes the data \
+         plane and can deadlock with slow peers; serialize under the \
+         lock, drop the guard, then send"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        server_side(path)
+    }
+
+    fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>) {
+        for f in files.iter().filter(|f| self.applies_to(&f.path)) {
+            let c = &f.code;
+            let mut depth = 0i32;
+            // (guard name, depth at binding)
+            let mut guards: Vec<(String, i32)> = Vec::new();
+            let mut i = 0usize;
+            while i < c.len() {
+                if f.in_test(c[i].line) {
+                    i += 1;
+                    continue;
+                }
+                if c[i].punct("{") {
+                    depth += 1;
+                } else if c[i].punct("}") {
+                    depth -= 1;
+                    guards.retain(|(_, d)| *d <= depth);
+                } else if c[i].ident("fn") {
+                    guards.clear();
+                } else if c[i].ident("let") {
+                    if let Some((name, after)) = let_binding_name(c, i) {
+                        let mut k = after;
+                        let mut d = 0i32;
+                        let mut locks = false;
+                        while k < c.len() {
+                            if c[k].punct("(") || c[k].punct("{") || c[k].punct("[") {
+                                d += 1;
+                            } else if c[k].punct(")") || c[k].punct("}") || c[k].punct("]") {
+                                d -= 1;
+                            } else if c[k].punct(";") && d <= 0 {
+                                break;
+                            } else if d == 0
+                                && c[k].kind == TokKind::Ident
+                                && LOCK_CALLS.contains(&c[k].text.as_str())
+                                && c.get(k + 1).map(|t| t.punct("(")).unwrap_or(false)
+                            {
+                                // Depth 0 only: a lock() inside a nested
+                                // block/closure (`let x = { let g = m.lock()…; … };`)
+                                // doesn't make the outer binding a guard.
+                                locks = true;
+                            }
+                            k += 1;
+                        }
+                        if locks {
+                            guards.push((name, depth));
+                        }
+                        i = after;
+                        continue;
+                    }
+                } else if c[i].ident("drop")
+                    && c.get(i + 1).map(|t| t.punct("(")).unwrap_or(false)
+                {
+                    if let Some(t) = c.get(i + 2) {
+                        guards.retain(|(n, _)| n != &t.text);
+                    }
+                } else if c[i].punct(".")
+                    && c.get(i + 1)
+                        .map(|t| t.ident("send") || t.ident("send_owned"))
+                        .unwrap_or(false)
+                    && c.get(i + 2).map(|t| t.punct("(")).unwrap_or(false)
+                {
+                    if let Some((g, _)) = guards.first() {
+                        out.push(Finding {
+                            rule: self.name(),
+                            file: f.path.clone(),
+                            line: c[i + 1].line,
+                            message: format!(
+                                "transport .{}() while MutexGuard `{g}` is live — \
+                                 serialize under the lock, drop({g}), then send",
+                                c[i + 1].text
+                            ),
+                        });
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Parse the bound name of `let [mut] name =` / `let Ok(name) =` /
+/// `let Some(mut name) =`; returns (name, index-after-pattern).
+fn let_binding_name(c: &[Token], let_idx: usize) -> Option<(String, usize)> {
+    let mut j = let_idx + 1;
+    if c.get(j)?.ident("mut") {
+        j += 1;
+    }
+    let t = c.get(j)?;
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    if (t.ident("Ok") || t.ident("Some")) && c.get(j + 1).map(|t| t.punct("(")).unwrap_or(false) {
+        j += 2;
+        if c.get(j)?.ident("mut") {
+            j += 1;
+        }
+        let inner = c.get(j)?;
+        if inner.kind != TokKind::Ident {
+            return None;
+        }
+        return Some((inner.text.clone(), j + 2));
+    }
+    Some((t.text.clone(), j + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::run_rules;
+
+    fn lint_one(rule: Box<dyn Rule>, path: &str, src: &str) -> Vec<Finding> {
+        let files = vec![SourceFile::parse(path, src)];
+        run_rules(&files, &[rule])
+    }
+
+    // -- panicking-lock ----------------------------------------------------
+
+    #[test]
+    fn panicking_lock_flags_unwrap_and_expect() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) {\n\
+                   let a = m.lock().unwrap();\n\
+                   let b = m.lock().expect(\"poisoned\");\n}\n";
+        let got = lint_one(Box::new(PanickingLock), "rust/src/services/x.rs", src);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].line, 2);
+        assert_eq!(got[1].line, 3);
+    }
+
+    #[test]
+    fn panicking_lock_scopes_to_server_modules_and_skips_tests() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) { let a = m.lock().unwrap(); }\n";
+        assert!(lint_one(Box::new(PanickingLock), "rust/src/client/x.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n  fn f(m: &std::sync::Mutex<u32>) \
+                        { let a = m.lock().unwrap(); }\n}\n";
+        assert!(lint_one(Box::new(PanickingLock), "rust/src/services/x.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn panicking_lock_accepts_mapped_and_recovered_forms() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> Result<u32, ()> {\n\
+                   let a = m.lock().map_err(|_| ())?;\n\
+                   let b = m.lock().unwrap_or_else(|p| p.into_inner());\n\
+                   Ok(*a + *b)\n}\n";
+        assert!(lint_one(Box::new(PanickingLock), "rust/src/services/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panicking_lock_inline_allow() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) {\n\
+                   // florida-lint: allow(panicking-lock): demo\n\
+                   let a = m.lock().unwrap();\n}\n";
+        assert!(lint_one(Box::new(PanickingLock), "rust/src/services/x.rs", src).is_empty());
+    }
+
+    // -- u64-as-json-number ------------------------------------------------
+
+    const MINI_MSG_HEADER: &str = "pub enum Msg {\n\
+        A { client_id: u64, name: String },\n\
+    }\n";
+
+    #[test]
+    fn u64_json_flags_raw_number_encoding() {
+        let src = format!(
+            "{MINI_MSG_HEADER}impl Msg {{\n  pub fn to_json(&self) -> Json {{\n\
+             Json::obj().set(\"client_id\", *client_id).set(\"name\", name.as_str())\n  }}\n}}\n"
+        );
+        let got = lint_one(Box::new(U64AsJsonNumber), "rust/src/proto/msg.rs", &src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("client_id"));
+    }
+
+    #[test]
+    fn u64_json_accepts_stringified_encoding() {
+        let src = format!(
+            "{MINI_MSG_HEADER}impl Msg {{\n  pub fn to_json(&self) -> Json {{\n\
+             Json::obj().set(\"client_id\", client_id.to_string())\n  }}\n}}\n"
+        );
+        assert!(lint_one(Box::new(U64AsJsonNumber), "rust/src/proto/msg.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn u64_json_only_applies_to_msg_rs() {
+        let src = format!(
+            "{MINI_MSG_HEADER}fn f() {{ Json::obj().set(\"client_id\", *client_id); }}\n"
+        );
+        assert!(lint_one(Box::new(U64AsJsonNumber), "rust/src/proto/mod.rs", &src).is_empty());
+    }
+
+    // -- wall-clock-in-core ------------------------------------------------
+
+    #[test]
+    fn wall_clock_flags_both_clocks() {
+        let src = "fn f() { let a = Instant::now(); let b = std::time::SystemTime::now(); }\n";
+        let got = lint_one(Box::new(WallClockInCore), "rust/src/simulator/x.rs", src);
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn wall_clock_allowlist_and_tests() {
+        let src = "fn f() { let a = Instant::now(); }\n";
+        assert!(lint_one(Box::new(WallClockInCore), "rust/src/util/bench.rs", src).is_empty());
+        assert!(lint_one(Box::new(WallClockInCore), "rust/src/cli.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n fn f() { let a = Instant::now(); }\n}\n";
+        assert!(
+            lint_one(Box::new(WallClockInCore), "rust/src/simulator/x.rs", test_src).is_empty()
+        );
+    }
+
+    // -- msg-coverage ------------------------------------------------------
+
+    fn mini_msg(corpus_has_b: bool, json_corpus: bool) -> String {
+        let b_sample = if corpus_has_b { "Msg::B," } else { "" };
+        let json_marker = if json_corpus {
+            "// florida-lint: corpus(json-roundtrip)\n"
+        } else {
+            "\n"
+        };
+        format!(
+            "pub enum Msg {{\n\
+             // ---- client → server ----\n\
+             A {{ x: u64 }},\n\
+             B {{ y: u64 }},\n\
+             // ---- server → client ----\n\
+             C {{ z: u64 }},\n\
+             }}\n\
+             impl Msg {{\n\
+             pub fn to_json(&self) -> Json {{ match self {{ Msg::A {{ .. }} => j() }} }}\n\
+             }}\n\
+             #[cfg(test)]\n\
+             mod tests {{\n\
+             // florida-lint: corpus(binary-roundtrip)\n\
+             fn all_binary_samples() {{ let v = [Msg::A, {b_sample} Msg::C,]; }}\n\
+             {json_marker}\
+             fn all_json_samples() {{ let v = [Msg::A,]; }}\n\
+             }}\n"
+        )
+    }
+
+    const MINI_RPC: &str = "request!(A { x: u64 } => ReplyA, \"a\");\n";
+
+    #[test]
+    fn msg_coverage_clean_when_complete() {
+        let msg = mini_msg(true, true);
+        let rpc = format!("request!(A {{ x: u64 }} => ReplyA, \"a\");\n{}",
+            "request!(B { y: u64 } => ReplyB, \"b\");\n");
+        let files = vec![
+            SourceFile::parse("rust/src/proto/msg.rs", &msg),
+            SourceFile::parse("rust/src/proto/rpc.rs", &rpc),
+        ];
+        let got = run_rules(&files, &[Box::new(MsgCoverage) as Box<dyn Rule>]);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn msg_coverage_flags_missing_binary_sample() {
+        let files = vec![
+            SourceFile::parse("rust/src/proto/msg.rs", &mini_msg(false, true)),
+            SourceFile::parse(
+                "rust/src/proto/rpc.rs",
+                &format!("{MINI_RPC}request!(B {{ y: u64 }} => ReplyB, \"b\");\n"),
+            ),
+        ];
+        let got = run_rules(&files, &[Box::new(MsgCoverage) as Box<dyn Rule>]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("Msg::B"));
+        assert!(got[0].message.contains("binary-roundtrip"));
+    }
+
+    #[test]
+    fn msg_coverage_flags_missing_json_sample_and_missing_rpc_pair() {
+        // B is a request with no request! pair; to_json covers A only,
+        // and the json corpus is missing entirely.
+        let files = vec![
+            SourceFile::parse("rust/src/proto/msg.rs", &mini_msg(true, false)),
+            SourceFile::parse("rust/src/proto/rpc.rs", MINI_RPC),
+        ];
+        let got = run_rules(&files, &[Box::new(MsgCoverage) as Box<dyn Rule>]);
+        let msgs: Vec<&str> = got.iter().map(|f| f.message.as_str()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("json-roundtrip")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter()
+                .any(|m| m.contains("Msg::B") && m.contains("request!")),
+            "{msgs:?}"
+        );
+        // C is a reply — no request! pair needed.
+        assert!(!msgs.iter().any(|m| m.contains("Msg::C")), "{msgs:?}");
+    }
+
+    // -- unchecked-wire-length ---------------------------------------------
+
+    #[test]
+    fn wire_length_flags_unguarded_alloc() {
+        let src = "fn d(r: &mut Reader) {\n\
+                   let n = r.get_varint()? as usize;\n\
+                   let mut v = Vec::with_capacity(n);\n}\n";
+        let got = lint_one(Box::new(UncheckedWireLength), "rust/src/codec/x.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].line, 3);
+    }
+
+    #[test]
+    fn wire_length_accepts_guarded_and_clamped() {
+        let src = "fn d(r: &mut Reader) {\n\
+                   let n = r.get_varint()? as usize;\n\
+                   if n > r.remaining() / 8 { return; }\n\
+                   let mut v = Vec::with_capacity(n);\n\
+                   let len = u32::from_be_bytes(b) as usize;\n\
+                   let mut w = Vec::with_capacity(len.min(4096));\n}\n";
+        let got = lint_one(Box::new(UncheckedWireLength), "rust/src/codec/x.rs", src);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn wire_length_flags_vec_macro_alloc() {
+        let src = "fn d(b: [u8; 4]) {\n\
+                   let len = u32::from_be_bytes(b) as usize;\n\
+                   let buf = vec![0u8; len];\n}\n";
+        let got = lint_one(Box::new(UncheckedWireLength), "rust/src/transport/x.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+    }
+
+    #[test]
+    fn wire_length_ignores_non_wire_lengths() {
+        let src = "fn d(delta: &[f32]) { let mut v = Vec::with_capacity(delta.len() * 4); }\n";
+        assert!(lint_one(Box::new(UncheckedWireLength), "rust/src/codec/x.rs", src).is_empty());
+    }
+
+    // -- lock-across-send --------------------------------------------------
+
+    #[test]
+    fn lock_across_send_flags_live_guard() {
+        let src = "fn f(&self, conn: &mut dyn Connection) {\n\
+                   let g = self.inner.lock().unwrap();\n\
+                   conn.send(&g.frame);\n}\n";
+        let got = lint_one(Box::new(LockAcrossSend), "rust/src/services/x.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains('g'));
+    }
+
+    #[test]
+    fn lock_across_send_accepts_drop_and_scope_exit() {
+        let src = "fn f(&self, conn: &mut dyn Connection) {\n\
+                   let g = self.inner.lock().unwrap();\n\
+                   let frame = g.frame.clone();\n\
+                   drop(g);\n\
+                   conn.send(&frame);\n\
+                   let out = {\n\
+                     let h = self.inner.lock().unwrap();\n\
+                     h.frame.clone()\n\
+                   };\n\
+                   conn.send_owned(out);\n}\n";
+        let got = lint_one(Box::new(LockAcrossSend), "rust/src/services/x.rs", src);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn lock_across_send_tracks_ok_patterns_and_helpers() {
+        let src = "fn f(&self, conn: &mut dyn Connection) {\n\
+                   let Ok(mut g) = self.inner.locked() else { return; };\n\
+                   conn.send_owned(g.take());\n}\n";
+        let got = lint_one(Box::new(LockAcrossSend), "rust/src/services/x.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+    }
+
+    #[test]
+    fn default_rules_names_are_unique_and_stable() {
+        let rules = default_rules();
+        let names: Vec<&str> = rules.iter().map(|r| r.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "panicking-lock",
+                "u64-as-json-number",
+                "wall-clock-in-core",
+                "msg-coverage",
+                "unchecked-wire-length",
+                "lock-across-send",
+            ]
+        );
+        for r in &rules {
+            assert!(!r.description().is_empty());
+        }
+    }
+}

@@ -1,0 +1,434 @@
+//! Lightweight Rust tokenizer for the lint engine.
+//!
+//! Deliberately NOT a full lexer: the rules in `analysis::rules` match
+//! short token sequences (`.lock().unwrap()`, `Instant::now`,
+//! `Vec::with_capacity(n)`), so the tokenizer only needs to get four
+//! things exactly right — comments (kept as trivia, because
+//! `// florida-lint:` directives and the `Msg` section markers live
+//! there), string/char literals (so code quoted inside test fixtures
+//! can never produce findings), lifetimes vs char literals, and line
+//! numbers (findings are reported as `file:line`). Everything else is
+//! single-character punctuation; multi-char operators (`::`, `=>`) stay
+//! split and the rules match them as consecutive tokens.
+
+/// Token classification — just enough for rule matching.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`lock`, `let`, `u64`, …).
+    Ident,
+    /// Numeric literal (permissive: `0x1f`, `1_000`, `1e-5`, `1.5f64`).
+    Number,
+    /// String literal, including raw (`r#"…"#`) and byte (`b"…"`) forms.
+    Str,
+    /// Char literal (`'x'`, `'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Single punctuation character.
+    Punct,
+    /// `// …` comment (text includes the slashes).
+    LineComment,
+    /// `/* … */` comment, nesting handled.
+    BlockComment,
+}
+
+/// One token plus the 1-based line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    /// Is this an identifier with exactly this text?
+    pub fn ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Is this a punctuation token with exactly this text?
+    pub fn punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+
+    /// Is this a comment (line or block)?
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize Rust source. Never fails: unterminated literals consume to
+/// end-of-input (the lint must degrade, not crash, on a broken tree).
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < chars.len() {
+        let c = chars[i];
+        let start_line = line;
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                let mut text = String::new();
+                while i < chars.len() && chars[i] != '\n' {
+                    text.push(chars[i]);
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::LineComment,
+                    text,
+                    line: start_line,
+                });
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                let mut text = String::new();
+                let mut depth = 0usize;
+                while i < chars.len() {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        text.push_str("/*");
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        text.push_str("*/");
+                        i += 2;
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        if chars[i] == '\n' {
+                            line += 1;
+                        }
+                        text.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                toks.push(Token {
+                    kind: TokKind::BlockComment,
+                    text,
+                    line: start_line,
+                });
+            }
+            '"' => {
+                let (text, ni, nl) = scan_string(&chars, i, line);
+                i = ni;
+                line = nl;
+                toks.push(Token {
+                    kind: TokKind::Str,
+                    text,
+                    line: start_line,
+                });
+            }
+            '\'' => {
+                // Lifetime or char literal. `'\…'` is always a char;
+                // `'x'` is a char; `'ident` not closed by a quote is a
+                // lifetime.
+                let next = chars.get(i + 1).copied();
+                let is_char = match next {
+                    Some('\\') => true,
+                    Some(n) if is_ident_start(n) => chars.get(i + 2) == Some(&'\''),
+                    Some(_) => true,
+                    None => false,
+                };
+                if is_char {
+                    let (text, ni) = scan_char(&chars, i);
+                    i = ni;
+                    toks.push(Token {
+                        kind: TokKind::Char,
+                        text,
+                        line: start_line,
+                    });
+                } else {
+                    let mut text = String::from("'");
+                    i += 1;
+                    while i < chars.len() && is_ident_continue(chars[i]) {
+                        text.push(chars[i]);
+                        i += 1;
+                    }
+                    toks.push(Token {
+                        kind: TokKind::Lifetime,
+                        text,
+                        line: start_line,
+                    });
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let mut text = String::new();
+                while i < chars.len()
+                    && (is_ident_continue(chars[i])
+                        || (chars[i] == '.'
+                            && chars.get(i + 1).is_some_and(|n| n.is_ascii_digit())
+                            && !text.contains('.')))
+                {
+                    text.push(chars[i]);
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Number,
+                    text,
+                    line: start_line,
+                });
+            }
+            c if is_ident_start(c) => {
+                let mut text = String::new();
+                while i < chars.len() && is_ident_continue(chars[i]) {
+                    text.push(chars[i]);
+                    i += 1;
+                }
+                // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#.
+                let next = chars.get(i).copied();
+                if matches!(text.as_str(), "r" | "b" | "br")
+                    && (next == Some('"') || (next == Some('#') && text != "b"))
+                {
+                    let (body, ni, nl) = scan_raw_or_byte_string(&chars, i, line, &text);
+                    i = ni;
+                    line = nl;
+                    toks.push(Token {
+                        kind: TokKind::Str,
+                        text: body,
+                        line: start_line,
+                    });
+                } else {
+                    toks.push(Token {
+                        kind: TokKind::Ident,
+                        text,
+                        line: start_line,
+                    });
+                }
+            }
+            other => {
+                toks.push(Token {
+                    kind: TokKind::Punct,
+                    text: other.to_string(),
+                    line: start_line,
+                });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// Scan a normal (escaped) string starting at the opening quote.
+/// Returns (text-with-quotes, next-index, next-line).
+fn scan_string(chars: &[char], mut i: usize, mut line: u32) -> (String, usize, u32) {
+    let mut text = String::from("\"");
+    i += 1;
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => {
+                text.push('\\');
+                if let Some(&e) = chars.get(i + 1) {
+                    text.push(e);
+                    if e == '\n' {
+                        line += 1;
+                    }
+                }
+                i += 2;
+            }
+            '"' => {
+                text.push('"');
+                i += 1;
+                break;
+            }
+            c => {
+                if c == '\n' {
+                    line += 1;
+                }
+                text.push(c);
+                i += 1;
+            }
+        }
+    }
+    (text, i, line)
+}
+
+/// Scan a char literal starting at the opening quote.
+fn scan_char(chars: &[char], mut i: usize) -> (String, usize) {
+    let mut text = String::from("'");
+    i += 1;
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => {
+                text.push('\\');
+                if let Some(&e) = chars.get(i + 1) {
+                    text.push(e);
+                }
+                i += 2;
+            }
+            '\'' => {
+                text.push('\'');
+                i += 1;
+                break;
+            }
+            c => {
+                text.push(c);
+                i += 1;
+            }
+        }
+    }
+    (text, i)
+}
+
+/// Scan `r"…"`, `r#"…"#` (any hash count) or `b"…"` after its prefix
+/// ident was consumed; `i` points at `"` or `#`.
+fn scan_raw_or_byte_string(
+    chars: &[char],
+    mut i: usize,
+    mut line: u32,
+    prefix: &str,
+) -> (String, usize, u32) {
+    if prefix == "b" {
+        // Byte string: normal escape rules.
+        let (body, ni, nl) = scan_string(chars, i, line);
+        return (format!("b{body}"), ni, nl);
+    }
+    let mut text = String::from(prefix);
+    let mut hashes = 0usize;
+    while chars.get(i) == Some(&'#') {
+        text.push('#');
+        hashes += 1;
+        i += 1;
+    }
+    if chars.get(i) == Some(&'"') {
+        text.push('"');
+        i += 1;
+        'outer: while i < chars.len() {
+            if chars[i] == '"' {
+                // Close only on `"` followed by the right number of `#`.
+                let mut ok = true;
+                for k in 0..hashes {
+                    if chars.get(i + 1 + k) != Some(&'#') {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    text.push('"');
+                    for _ in 0..hashes {
+                        text.push('#');
+                    }
+                    i += 1 + hashes;
+                    break 'outer;
+                }
+            }
+            if chars[i] == '\n' {
+                line += 1;
+            }
+            text.push(chars[i]);
+            i += 1;
+        }
+    }
+    (text, i, line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src)
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn basic_sequence() {
+        let toks = tokenize("let x = m.lock().unwrap();");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "x", "m", "lock", "unwrap"]);
+    }
+
+    #[test]
+    fn comments_are_trivia_with_lines() {
+        let toks = tokenize("a\n// florida-lint: allow(x)\nb");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].kind, TokKind::LineComment);
+        assert_eq!(toks[1].line, 2);
+        assert!(toks[1].text.contains("florida-lint"));
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn block_comments_nest_and_count_lines() {
+        let toks = tokenize("/* a /* b */\n c */ x");
+        assert_eq!(toks[0].kind, TokKind::BlockComment);
+        assert_eq!(toks[1].text, "x");
+        assert_eq!(toks[1].line, 2);
+    }
+
+    #[test]
+    fn code_in_strings_is_not_code() {
+        // A rule fixture quoting `.lock().unwrap()` must tokenize as one
+        // Str, never as idents a rule could match.
+        let toks = kinds(r#"let s = "m.lock().unwrap()";"#);
+        assert!(toks
+            .iter()
+            .all(|(k, t)| *k != TokKind::Ident || t != "unwrap"));
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Str && t.contains("unwrap")));
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings() {
+        let toks = kinds(r##"r#"has "quotes" and lock()"# b"bytes" r"plain""##);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Str)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(strs.len(), 3, "{toks:?}");
+        assert!(strs[0].contains("quotes"));
+        assert!(strs[1].contains("bytes"));
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes = toks.iter().filter(|(k, _)| *k == TokKind::Lifetime).count();
+        let chars = toks.iter().filter(|(k, _)| *k == TokKind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn numbers_are_permissive() {
+        let toks = kinds("0x1f 1_000 1e-5 2.5f64 0..4");
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Number)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        // `0..4` must split into 0, ., ., 4 — not swallow the range.
+        assert!(nums.contains(&"0x1f"));
+        assert!(nums.contains(&"1_000"));
+        assert!(nums.contains(&"0") && nums.contains(&"4"));
+        assert!(!nums.iter().any(|n| n.contains("..")));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings() {
+        let toks = tokenize("let a = \"x\ny\";\nlet b = 1;");
+        let b = toks.iter().find(|t| t.ident("b")).unwrap();
+        assert_eq!(b.line, 3);
+    }
+}

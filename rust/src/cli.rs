@@ -130,6 +130,12 @@ COMMANDS:
              --addr HOST:PORT --task-id N [--json]
   dp-plan    Privacy accounting for a task design
              [--q RATE] [--sigma S] [--rounds N] [--delta D]
+  lint       Run the repo-aware static-analysis rules over rust/src
+             [--root DIR] [--baseline] [--baseline-file FILE]
+             [--write-baseline]
+             --baseline grandfathers the committed lint.baseline counts
+             (what CI runs); --write-baseline regenerates that file —
+             use it only to shrink counts, never to admit new findings
   help       This text
 ";
 
@@ -162,6 +168,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "status" => cmd_status(&args),
         "dp-plan" => cmd_dp_plan(&args),
+        "lint" => cmd_lint(&args),
         other => {
             println!("{HELP}");
             Err(Error::Config(format!("unknown command {other:?}")))
@@ -561,6 +568,67 @@ fn cmd_dp_plan(args: &Args) -> Result<()> {
         acct.epsilon(delta)?.0
     );
     Ok(())
+}
+
+/// `florida lint` — run the static-analysis rules over `rust/src`.
+///
+/// Exit is nonzero on any reported finding, so `scripts/check.sh` and
+/// CI can gate on it; the `lint_enforced` test target runs the same
+/// engine under plain `cargo test`.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use crate::analysis::{default_rules, load_tree, render, run_rules, Baseline};
+    let root_flag = args.flag_or("root", ".");
+    let root = std::path::Path::new(&root_flag);
+    let files = load_tree(root)?;
+    let rules = default_rules();
+    let findings = run_rules(&files, &rules);
+    let baseline_file = args.flag_or("baseline-file", "lint.baseline");
+    let baseline_path = root.join(&baseline_file);
+
+    if args.switch("write-baseline") {
+        std::fs::write(&baseline_path, Baseline::render_from(&findings))?;
+        println!(
+            "lint: wrote {} ({} grandfathered finding(s))",
+            baseline_path.display(),
+            findings.len()
+        );
+        return Ok(());
+    }
+
+    let (reported, grandfathered, stale) = if args.switch("baseline") {
+        let text = std::fs::read_to_string(&baseline_path).map_err(|e| {
+            Error::Config(format!(
+                "lint --baseline: cannot read {}: {e}",
+                baseline_path.display()
+            ))
+        })?;
+        Baseline::parse(&text)?.apply(findings)
+    } else {
+        (findings, 0, 0)
+    };
+
+    if stale > 0 {
+        println!(
+            "lint: note: {stale} baseline slot(s) no longer used — shrink \
+             lint.baseline with `florida lint --write-baseline`"
+        );
+    }
+    if reported.is_empty() {
+        println!(
+            "lint: clean — {} file(s), {} rule(s), {} grandfathered",
+            files.len(),
+            rules.len(),
+            grandfathered
+        );
+        Ok(())
+    } else {
+        print!("{}", render(&reported));
+        Err(Error::Config(format!(
+            "lint: {} finding(s) — fix, `// florida-lint: allow(<rule>): <reason>`, \
+             or (to grandfather, counts may only shrink) --write-baseline",
+            reported.len()
+        )))
+    }
 }
 
 #[cfg(test)]

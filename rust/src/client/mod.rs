@@ -169,6 +169,7 @@ impl FederatedLearningClient {
                 self.session = Some(SessionState {
                     token: grant.token,
                     lease_ms: grant.lease_ms.max(1),
+                    // florida-lint: allow(wall-clock-in-core): SDK lease half-life runs on device real time
                     renewed_at: Instant::now(),
                     proto: grant.proto,
                 });
@@ -237,6 +238,7 @@ impl FederatedLearningClient {
             Ok(ack) if ack.renewed => {
                 if let Some(s) = &mut self.session {
                     s.lease_ms = ack.lease_ms.max(1);
+                    // florida-lint: allow(wall-clock-in-core): SDK lease half-life runs on device real time
                     s.renewed_at = Instant::now();
                 }
             }

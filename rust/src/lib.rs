@@ -34,6 +34,7 @@
 
 pub mod aggregation;
 pub mod aggtree;
+pub mod analysis;
 pub mod client;
 pub mod cli;
 pub mod codec;

@@ -117,18 +117,28 @@ impl EventBus {
 
     fn subscribe_filtered(&self, only_task: Option<u64>) -> EventStream {
         let (tx, rx) = channel();
-        self.subs.lock().unwrap().push(tx);
+        // Poison recovery: the subscriber list is a plain Vec of senders
+        // with no cross-entry invariant, so the list behind a guard
+        // abandoned by a panicking emitter is still valid — losing the
+        // whole event bus over one crashed handler would be worse.
+        self.subs
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(tx);
         EventStream { rx, only_task }
     }
 
     /// Publish to all live subscribers; dead ones are pruned.
     pub fn emit(&self, event: TaskEvent) {
-        let mut subs = self.subs.lock().unwrap();
+        let mut subs = self.subs.lock().unwrap_or_else(|p| p.into_inner());
+        // An unbounded in-process mpsc send never blocks, so holding the
+        // subscriber lock across it cannot stall the data plane.
+        // florida-lint: allow(lock-across-send): unbounded mpsc, non-blocking
         subs.retain(|tx| tx.send(event.clone()).is_ok());
     }
 
     pub fn subscriber_count(&self) -> usize {
-        self.subs.lock().unwrap().len()
+        self.subs.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 }
 
@@ -157,9 +167,15 @@ impl EventStream {
     }
 
     /// Block up to `timeout` for the next matching event.
+    ///
+    /// Wall-clock on purpose: this is the *subscriber's* wait, real time
+    /// by nature (a dashboard or test blocking on delivery). Orchestration
+    /// deadlines themselves run on the server's `Clock` seam.
     pub fn next_timeout(&self, timeout: Duration) -> Option<TaskEvent> {
+        // florida-lint: allow(wall-clock-in-core): subscriber-side real-time wait
         let deadline = Instant::now() + timeout;
         loop {
+            // florida-lint: allow(wall-clock-in-core): subscriber-side real-time wait
             let now = Instant::now();
             if now >= deadline {
                 return None;
@@ -190,8 +206,10 @@ impl EventStream {
         timeout: Duration,
         mut pred: impl FnMut(&TaskEvent) -> bool,
     ) -> Option<TaskEvent> {
+        // florida-lint: allow(wall-clock-in-core): subscriber-side real-time wait
         let deadline = Instant::now() + timeout;
         loop {
+            // florida-lint: allow(wall-clock-in-core): subscriber-side real-time wait
             let now = Instant::now();
             if now >= deadline {
                 return None;

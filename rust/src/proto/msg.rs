@@ -848,6 +848,55 @@ fn token_from_json(j: &Json) -> Result<u64> {
         .map_err(|e| Error::Codec(format!("token: {e}")))
 }
 
+/// A u64 carried in JSON: the string form every current encoder emits,
+/// or the historical raw-number form (only exact below 2^53 — which is
+/// exactly why encoders stopped emitting it).
+fn parse_u64_value(v: &Json) -> Option<u64> {
+    match v {
+        Json::Str(s) => s.parse::<u64>().ok(),
+        other => other.as_u64(),
+    }
+}
+
+fn req_u64_field(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(parse_u64_value)
+        .ok_or_else(|| Error::Codec(format!("missing/invalid u64 field {key:?}")))
+}
+
+fn opt_u64_field(j: &Json, key: &str, default: u64) -> u64 {
+    j.get(key).and_then(parse_u64_value).unwrap_or(default)
+}
+
+fn task_descriptor_to_json(t: &TaskDescriptor) -> Json {
+    Json::obj()
+        // u64 ids/counters ride as strings through JSON (f64 corrupts
+        // above 2^53); enforced repo-wide by the u64-as-json-number lint.
+        .set("task_id", t.task_id.to_string())
+        .set("task_name", t.task_name.as_str())
+        .set("app_name", t.app_name.as_str())
+        .set("workflow_name", t.workflow_name.as_str())
+        .set("state", t.state as u8 as u64)
+        .set("round", t.round.to_string())
+        .set("total_rounds", t.total_rounds.to_string())
+}
+
+fn task_descriptor_from_json(t: &Json) -> Result<TaskDescriptor> {
+    Ok(TaskDescriptor {
+        task_id: req_u64_field(t, "task_id")?,
+        task_name: t.req_str("task_name").map_err(Error::Codec)?.to_string(),
+        app_name: t.req_str("app_name").map_err(Error::Codec)?.to_string(),
+        workflow_name: t
+            .req_str("workflow_name")
+            .map_err(Error::Codec)?
+            .to_string(),
+        state: super::TaskState::from_u8(t.req_usize("state").map_err(Error::Codec)? as u8)
+            .ok_or_else(|| Error::Codec("bad state".into()))?,
+        round: req_u64_field(t, "round")?,
+        total_rounds: req_u64_field(t, "total_rounds")?,
+    })
+}
+
 impl Msg {
     /// JSON encoding; `Err` for binary-only (secagg data plane) messages.
     pub fn to_json(&self) -> Result<Json> {
@@ -880,14 +929,14 @@ impl Msg {
                 hints,
             } => Json::obj()
                 .set("type", "session_heartbeat")
-                .set("client_id", *client_id)
+                .set("client_id", client_id.to_string())
                 // Tokens are credentials: ride as strings (full u64
                 // range) like the verdict nonce, not as lossy f64s.
                 .set("token", token.to_string())
                 .set("hints", hints.to_json()),
             Msg::SessionClose { client_id, token } => Json::obj()
                 .set("type", "session_close")
-                .set("client_id", *client_id)
+                .set("client_id", client_id.to_string())
                 .set("token", token.to_string()),
             Msg::SessionGrant {
                 accepted,
@@ -899,9 +948,9 @@ impl Msg {
             } => Json::obj()
                 .set("type", "session_grant")
                 .set("accepted", *accepted)
-                .set("client_id", *client_id)
+                .set("client_id", client_id.to_string())
                 .set("token", token.to_string())
-                .set("lease_ms", *lease_ms)
+                .set("lease_ms", lease_ms.to_string())
                 .set("proto", *proto as u64)
                 .set("reason", reason.as_str()),
             Msg::LeaseAck {
@@ -911,7 +960,7 @@ impl Msg {
             } => Json::obj()
                 .set("type", "lease_ack")
                 .set("renewed", *renewed)
-                .set("lease_ms", *lease_ms)
+                .set("lease_ms", lease_ms.to_string())
                 .set("reason", reason.as_str()),
             Msg::PollTask {
                 client_id,
@@ -919,15 +968,15 @@ impl Msg {
                 workflow_name,
             } => Json::obj()
                 .set("type", "poll_task")
-                .set("client_id", *client_id)
+                .set("client_id", client_id.to_string())
                 .set("app_name", app_name.as_str())
                 .set("workflow_name", workflow_name.as_str()),
             Msg::Heartbeat { client_id } => Json::obj()
                 .set("type", "heartbeat")
-                .set("client_id", *client_id),
+                .set("client_id", client_id.to_string()),
             Msg::GetTaskStatus { task_id } => Json::obj()
                 .set("type", "get_task_status")
-                .set("task_id", *task_id),
+                .set("task_id", task_id.to_string()),
             Msg::UploadPlain {
                 client_id,
                 task_id,
@@ -943,10 +992,10 @@ impl Msg {
                 }
                 Json::obj()
                     .set("type", "upload_plain")
-                    .set("client_id", *client_id)
-                    .set("task_id", *task_id)
-                    .set("round", *round)
-                    .set("base_version", *base_version)
+                    .set("client_id", client_id.to_string())
+                    .set("task_id", task_id.to_string())
+                    .set("round", round.to_string())
+                    .set("base_version", base_version.to_string())
                     .set("delta_b64", base64::encode(&bytes))
                     .set("weight", *weight)
                     .set("loss", *loss)
@@ -958,22 +1007,30 @@ impl Msg {
             } => Json::obj()
                 .set("type", "register_ack")
                 .set("accepted", *accepted)
-                .set("client_id", *client_id)
+                .set("client_id", client_id.to_string())
                 .set("reason", reason.as_str()),
             Msg::TaskOffer { task } => {
                 let t = match task {
                     None => Json::Null,
-                    Some(t) => Json::obj()
-                        .set("task_id", t.task_id)
-                        .set("task_name", t.task_name.as_str())
-                        .set("app_name", t.app_name.as_str())
-                        .set("workflow_name", t.workflow_name.as_str())
-                        .set("state", t.state as u8 as u64)
-                        .set("round", t.round)
-                        .set("total_rounds", t.total_rounds),
+                    Some(t) => task_descriptor_to_json(t),
                 };
                 Json::obj().set("type", "task_offer").set("task", t)
             }
+            Msg::TaskStatus {
+                task,
+                participants,
+                last_round_duration_ms,
+                last_accuracy,
+                last_loss,
+                epsilon,
+            } => Json::obj()
+                .set("type", "task_status")
+                .set("task", task_descriptor_to_json(task))
+                .set("participants", participants.to_string())
+                .set("last_round_duration_ms", last_round_duration_ms.to_string())
+                .set("last_accuracy", *last_accuracy)
+                .set("last_loss", *last_loss)
+                .set("epsilon", *epsilon),
             Msg::Ack { ok, reason } => Json::obj()
                 .set("type", "ack")
                 .set("ok", *ok)
@@ -1017,7 +1074,7 @@ impl Msg {
                 proto_max: j.req_usize("proto_max").map_err(Error::Codec)? as u32,
             },
             "session_heartbeat" => Msg::SessionHeartbeat {
-                client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+                client_id: req_u64_field(j, "client_id")?,
                 token: token_from_json(j)?,
                 hints: match j.get("hints") {
                     Some(h) => LoadHints::from_json(h)?,
@@ -1025,24 +1082,24 @@ impl Msg {
                 },
             },
             "session_close" => Msg::SessionClose {
-                client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+                client_id: req_u64_field(j, "client_id")?,
                 token: token_from_json(j)?,
             },
             "session_grant" => Msg::SessionGrant {
                 accepted: j.opt_bool("accepted", false),
-                client_id: j.opt_usize("client_id", 0) as u64,
+                client_id: opt_u64_field(j, "client_id", 0),
                 token: token_from_json(j)?,
-                lease_ms: j.opt_usize("lease_ms", 0) as u64,
+                lease_ms: opt_u64_field(j, "lease_ms", 0),
                 proto: j.opt_usize("proto", 0) as u32,
                 reason: j.opt_str("reason", ""),
             },
             "lease_ack" => Msg::LeaseAck {
                 renewed: j.opt_bool("renewed", false),
-                lease_ms: j.opt_usize("lease_ms", 0) as u64,
+                lease_ms: opt_u64_field(j, "lease_ms", 0),
                 reason: j.opt_str("reason", ""),
             },
             "poll_task" => Msg::PollTask {
-                client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+                client_id: req_u64_field(j, "client_id")?,
                 app_name: j.req_str("app_name").map_err(Error::Codec)?.to_string(),
                 workflow_name: j
                     .req_str("workflow_name")
@@ -1050,10 +1107,10 @@ impl Msg {
                     .to_string(),
             },
             "heartbeat" => Msg::Heartbeat {
-                client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
+                client_id: req_u64_field(j, "client_id")?,
             },
             "get_task_status" => Msg::GetTaskStatus {
-                task_id: j.req_usize("task_id").map_err(Error::Codec)? as u64,
+                task_id: req_u64_field(j, "task_id")?,
             },
             "upload_plain" => {
                 let bytes = base64::decode(j.req_str("delta_b64").map_err(Error::Codec)?)
@@ -1066,10 +1123,10 @@ impl Msg {
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                     .collect();
                 Msg::UploadPlain {
-                    client_id: j.req_usize("client_id").map_err(Error::Codec)? as u64,
-                    task_id: j.req_usize("task_id").map_err(Error::Codec)? as u64,
-                    round: j.req_usize("round").map_err(Error::Codec)? as u64,
-                    base_version: j.opt_usize("base_version", 0) as u64,
+                    client_id: req_u64_field(j, "client_id")?,
+                    task_id: req_u64_field(j, "task_id")?,
+                    round: req_u64_field(j, "round")?,
+                    base_version: opt_u64_field(j, "base_version", 0),
                     delta,
                     weight: j.opt_f64("weight", 1.0),
                     loss: j.opt_f64("loss", 0.0),
@@ -1077,30 +1134,27 @@ impl Msg {
             }
             "register_ack" => Msg::RegisterAck {
                 accepted: j.opt_bool("accepted", false),
-                client_id: j.opt_usize("client_id", 0) as u64,
+                client_id: opt_u64_field(j, "client_id", 0),
                 reason: j.opt_str("reason", ""),
             },
             "task_offer" => {
                 let task = match j.get("task") {
                     None | Some(Json::Null) => None,
-                    Some(t) => Some(TaskDescriptor {
-                        task_id: t.req_usize("task_id").map_err(Error::Codec)? as u64,
-                        task_name: t.req_str("task_name").map_err(Error::Codec)?.to_string(),
-                        app_name: t.req_str("app_name").map_err(Error::Codec)?.to_string(),
-                        workflow_name: t
-                            .req_str("workflow_name")
-                            .map_err(Error::Codec)?
-                            .to_string(),
-                        state: super::TaskState::from_u8(
-                            t.req_usize("state").map_err(Error::Codec)? as u8,
-                        )
-                        .ok_or_else(|| Error::Codec("bad state".into()))?,
-                        round: t.req_usize("round").map_err(Error::Codec)? as u64,
-                        total_rounds: t.req_usize("total_rounds").map_err(Error::Codec)? as u64,
-                    }),
+                    Some(t) => Some(task_descriptor_from_json(t)?),
                 };
                 Msg::TaskOffer { task }
             }
+            "task_status" => Msg::TaskStatus {
+                task: task_descriptor_from_json(
+                    j.get("task")
+                        .ok_or_else(|| Error::Codec("missing task".into()))?,
+                )?,
+                participants: opt_u64_field(j, "participants", 0),
+                last_round_duration_ms: opt_u64_field(j, "last_round_duration_ms", 0),
+                last_accuracy: j.opt_f64("last_accuracy", 0.0),
+                last_loss: j.opt_f64("last_loss", 0.0),
+                epsilon: j.opt_f64("epsilon", 0.0),
+            },
             "ack" => Msg::Ack {
                 ok: j.opt_bool("ok", false),
                 reason: j.opt_str("reason", ""),
@@ -1145,6 +1199,7 @@ mod tests {
     use crate::crypto::attest::{Authority, IntegrityTier};
     use crate::proto::{TaskState, TrainParams};
 
+    // florida-lint: corpus(binary-roundtrip, json-roundtrip)
     fn sample_register() -> Msg {
         let auth = Authority::new(b"k");
         Msg::Register {
@@ -1154,6 +1209,7 @@ mod tests {
         }
     }
 
+    // florida-lint: corpus(binary-roundtrip, json-roundtrip)
     fn sample_session_frames() -> Vec<Msg> {
         use crate::proto::{BandwidthClass, ComputeTier, DeviceProfile, LoadHints, PROTO_V2};
         let auth = Authority::new(b"k");
@@ -1211,6 +1267,7 @@ mod tests {
         ]
     }
 
+    // florida-lint: corpus(binary-roundtrip)
     fn all_binary_samples() -> Vec<Msg> {
         let mut v = vec![
             sample_register(),
@@ -1388,22 +1445,25 @@ mod tests {
         }
     }
 
-    #[test]
-    fn json_roundtrip_control_plane() {
-        let msgs = vec![
-            sample_register(),
+    /// Ids/counters above 2^53 — exact in the binary codec, and only
+    /// exact through JSON because u64 fields ride as strings.
+    const BIG: u64 = (1u64 << 60) + 7;
+
+    // florida-lint: corpus(json-roundtrip)
+    fn all_json_samples() -> Vec<Msg> {
+        let mut v = vec![
             Msg::PollTask {
-                client_id: 3,
+                client_id: BIG,
                 app_name: "python-app".into(),
                 workflow_name: "python-workflow".into(),
             },
             Msg::Heartbeat { client_id: 3 },
-            Msg::GetTaskStatus { task_id: 1 },
+            Msg::GetTaskStatus { task_id: BIG },
             Msg::UploadPlain {
-                client_id: 3,
-                task_id: 1,
-                round: 2,
-                base_version: 2,
+                client_id: BIG,
+                task_id: BIG + 1,
+                round: BIG + 2,
+                base_version: BIG + 3,
                 delta: vec![0.25, -0.5, 1e-3],
                 weight: 8.0,
                 loss: 0.4,
@@ -1414,6 +1474,33 @@ mod tests {
                 reason: String::new(),
             },
             Msg::TaskOffer { task: None },
+            Msg::TaskOffer {
+                task: Some(TaskDescriptor {
+                    task_id: BIG,
+                    task_name: "t".into(),
+                    app_name: "a".into(),
+                    workflow_name: "w".into(),
+                    state: TaskState::Running,
+                    round: BIG,
+                    total_rounds: BIG + 9,
+                }),
+            },
+            Msg::TaskStatus {
+                task: TaskDescriptor {
+                    task_id: BIG,
+                    task_name: "t".into(),
+                    app_name: "a".into(),
+                    workflow_name: "w".into(),
+                    state: TaskState::Completed,
+                    round: 10,
+                    total_rounds: 10,
+                },
+                participants: BIG,
+                last_round_duration_ms: 1234,
+                last_accuracy: 0.97,
+                last_loss: 0.1,
+                epsilon: 2.0,
+            },
             Msg::Ack {
                 ok: false,
                 reason: "deadline".into(),
@@ -1422,13 +1509,89 @@ mod tests {
                 message: "x".into(),
             },
         ];
-        for msg in msgs {
+        v.push(sample_register());
+        v.extend(sample_session_frames());
+        v
+    }
+
+    #[test]
+    fn json_roundtrip_all_json_capable_variants() {
+        for msg in all_json_samples() {
             let frame = encode_frame(&msg, WireCodec::Json).unwrap();
             assert_eq!(frame[0], b'{');
             let (back, codec) = decode_frame(&frame).unwrap();
             assert_eq!(codec, WireCodec::Json);
             assert_eq!(back, msg, "{msg:?}");
         }
+    }
+
+    #[test]
+    fn task_status_roundtrips_both_codecs_with_large_ids() {
+        let msg = Msg::TaskStatus {
+            task: TaskDescriptor {
+                task_id: BIG,
+                task_name: "big".into(),
+                app_name: "a".into(),
+                workflow_name: "w".into(),
+                state: TaskState::Running,
+                round: BIG,
+                total_rounds: BIG + 1,
+            },
+            participants: BIG + 2,
+            last_round_duration_ms: BIG + 3,
+            last_accuracy: 0.5,
+            last_loss: 0.25,
+            epsilon: 1.0,
+        };
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let frame = encode_frame(&msg, codec).unwrap();
+            let (back, got) = decode_frame(&frame).unwrap();
+            assert_eq!(got, codec);
+            assert_eq!(back, msg, "via {codec:?}");
+        }
+    }
+
+    #[test]
+    fn json_decode_accepts_historical_number_form() {
+        // Pre-string frames carried u64 fields as raw JSON numbers;
+        // the tolerant decoder must still admit them (below 2^53).
+        let j = Json::obj()
+            .set("type", "heartbeat")
+            .set("client_id", 42u64);
+        let (msg, codec) = decode_frame(j.to_string().as_bytes()).unwrap();
+        assert_eq!(codec, WireCodec::Json);
+        assert_eq!(msg, Msg::Heartbeat { client_id: 42 });
+
+        let j = Json::obj()
+            .set("type", "session_grant")
+            .set("accepted", true)
+            .set("client_id", 7u64)
+            .set("token", "1152921504606846983")
+            .set("lease_ms", 30_000u64)
+            .set("proto", 2u64)
+            .set("reason", "");
+        let (msg, _) = decode_frame(j.to_string().as_bytes()).unwrap();
+        assert_eq!(
+            msg,
+            Msg::SessionGrant {
+                accepted: true,
+                client_id: 7,
+                token: (1u64 << 60) + 7,
+                lease_ms: 30_000,
+                proto: 2,
+                reason: String::new(),
+            }
+        );
+    }
+
+    #[test]
+    fn json_u64_fields_are_encoded_as_strings() {
+        let frame = encode_frame(&Msg::Heartbeat { client_id: BIG }, WireCodec::Json).unwrap();
+        let text = String::from_utf8(frame).unwrap();
+        assert!(
+            text.contains(&format!("\"{BIG}\"")),
+            "client_id must ride as a string: {text}"
+        );
     }
 
     #[test]

@@ -193,6 +193,7 @@ fn get_preset<'a>(
 ) -> Result<&'a CompiledPreset> {
     if !compiled.contains_key(name) {
         let p = manifest.preset(name)?;
+        // florida-lint: allow(wall-clock-in-core): one-shot compile timing for a log line
         let t0 = std::time::Instant::now();
         let train = compile_hlo(client, &manifest.path_of(&p.train_path))?;
         let eval = compile_hlo(client, &manifest.path_of(&p.eval_path))?;

@@ -56,7 +56,13 @@ impl AuthService {
         if !self.authority.verify(v) {
             return Err(Error::Attestation("bad signature".into()));
         }
-        let mut seen = self.seen_nonces.lock().unwrap();
+        // Security-critical: NEVER recover a poisoned replay set. A
+        // half-observed insert could let a replayed nonce through, so a
+        // poisoned guard fails closed as an attestation error.
+        let mut seen = self
+            .seen_nonces
+            .lock()
+            .map_err(|_| Error::Attestation("nonce replay set poisoned".into()))?;
         if !seen.insert((v.device_id.clone(), v.nonce)) {
             return Err(Error::Attestation(format!("replayed nonce {}", v.nonce)));
         }

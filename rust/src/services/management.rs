@@ -10,7 +10,7 @@
 //! the simulator no longer poll `task_status`.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::aggregation::PartialFold;
 use crate::config::{StorageConfig, TaskConfig};
@@ -50,6 +50,17 @@ fn task_seed(seed: u64, task_id: u64) -> u64 {
 }
 
 impl ManagementService {
+    /// Lock the engine registry. Engines mutate in multi-step phases, so
+    /// a guard abandoned by a panicking thread may hold a half-advanced
+    /// engine — don't silently recover it. Result paths surface `Err`,
+    /// infallible observers degrade to an empty view, and either way one
+    /// crashed request thread stops panicking every later RPC.
+    fn locked(&self) -> Result<MutexGuard<'_, Inner>> {
+        self.inner
+            .lock()
+            .map_err(|_| Error::Task("management registry poisoned".into()))
+    }
+
     pub fn new(evaluator: Arc<dyn Evaluator>, seed: u64) -> ManagementService {
         ManagementService {
             inner: Mutex::new(Inner {
@@ -89,7 +100,7 @@ impl ManagementService {
             storage: Some(storage.clone()),
         };
         {
-            let mut g = svc.inner.lock().unwrap();
+            let mut g = svc.locked()?;
             for rt in recovered {
                 let id = rt.task_id;
                 let mut engine = RoundEngine::restore(
@@ -161,7 +172,7 @@ impl ManagementService {
         &self,
         build: impl FnOnce(u64, u64, EventBus) -> Result<RoundEngine>,
     ) -> Result<u64> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked()?;
         let id = g.next_task_id;
         let mut engine = build(id, task_seed(g.seed, id), self.events.clone())?;
         if let Some(storage) = &self.storage {
@@ -192,7 +203,13 @@ impl ManagementService {
     /// checkpoints succeeded; failures are logged, not fatal — the WAL
     /// already covers anything a failed checkpoint would have captured.
     pub fn checkpoint_all(&self) -> usize {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = match self.locked() {
+            Ok(g) => g,
+            Err(e) => {
+                log::error!("checkpoint_all skipped: {e}");
+                return 0;
+            }
+        };
         let mut ok = 0;
         for t in g.engines.values_mut() {
             match t.checkpoint() {
@@ -221,7 +238,7 @@ impl ManagementService {
 
     /// First advertisable task matching (app, workflow).
     pub fn advertise(&self, app: &str, workflow: &str) -> Option<TaskDescriptor> {
-        let g = self.inner.lock().unwrap();
+        let g = self.locked().ok()?;
         let mut tasks: Vec<&RoundEngine> = g.engines.values().collect();
         tasks.sort_by_key(|t| t.id);
         tasks
@@ -235,7 +252,9 @@ impl ManagementService {
     }
 
     pub fn list_tasks(&self) -> Vec<TaskDescriptor> {
-        let g = self.inner.lock().unwrap();
+        let Ok(g) = self.locked() else {
+            return Vec::new();
+        };
         let mut v: Vec<TaskDescriptor> = g.engines.values().map(RoundEngine::descriptor).collect();
         v.sort_by_key(|d| d.task_id);
         v
@@ -247,7 +266,7 @@ impl ManagementService {
         task_id: u64,
         f: impl FnOnce(&mut RoundEngine) -> Result<R>,
     ) -> Result<R> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked()?;
         let t = g
             .engines
             .get_mut(&task_id)
@@ -400,7 +419,9 @@ impl ManagementService {
     /// events). `dir` feeds caps-aware cohort policies.
     pub fn tick(&self, dir: &dyn ClientDirectory, now_ms: u64) {
         let eval = Arc::clone(&self.evaluator);
-        let mut g = self.inner.lock().unwrap();
+        let Ok(mut g) = self.locked() else {
+            return;
+        };
         for t in g.engines.values_mut() {
             t.tick(&*eval, dir, now_ms);
         }
@@ -415,7 +436,9 @@ impl ManagementService {
             return;
         }
         let eval = Arc::clone(&self.evaluator);
-        let mut g = self.inner.lock().unwrap();
+        let Ok(mut g) = self.locked() else {
+            return;
+        };
         for t in g.engines.values_mut() {
             t.evict_clients(evicted, &*eval, now_ms);
         }

@@ -601,6 +601,7 @@ impl Router {
             method: rpc::method_of(&msg).unwrap_or("unknown"),
             principal: None,
         };
+        // florida-lint: allow(wall-clock-in-core): per-RPC latency metric is wall time
         let t0 = Instant::now();
         let mut admitted = 0;
         let mut rejection = None;

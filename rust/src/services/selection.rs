@@ -7,7 +7,7 @@
 //! with appropriate tasks that they can complete successfully."
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::error::{Error, Result};
 use crate::orchestrator::ClientDirectory;
@@ -48,10 +48,19 @@ impl SelectionService {
         }
     }
 
+    /// Lock the registry, recovering from poisoning: mutations are
+    /// single-step map/field writes (plus an RNG step that is valid in
+    /// any state), so the map behind an abandoned guard is intact —
+    /// better to keep selecting cohorts than to panic the request
+    /// thread that inherited someone else's crash.
+    fn locked(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Register (or re-register) a device; returns its client id.
     /// Re-registration keeps the id stable (devices reconnect).
     pub fn register(&self, device_id: &str, caps: DeviceCaps, now_ms: u64) -> u64 {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if let Some(&id) = g.by_device.get(device_id) {
             if let Some(info) = g.clients.get_mut(&id) {
                 info.caps = caps;
@@ -76,23 +85,23 @@ impl SelectionService {
     }
 
     pub fn touch(&self, client_id: u64, now_ms: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if let Some(info) = g.clients.get_mut(&client_id) {
             info.last_seen_ms = now_ms;
         }
     }
 
     pub fn get(&self, client_id: u64) -> Option<ClientInfo> {
-        self.inner.lock().unwrap().clients.get(&client_id).cloned()
+        self.locked().clients.get(&client_id).cloned()
     }
 
     pub fn count(&self) -> usize {
-        self.inner.lock().unwrap().clients.len()
+        self.locked().clients.len()
     }
 
     /// Is the client registered and eligible under `criteria`?
     pub fn eligible(&self, client_id: u64, criteria: &SelectionCriteria) -> Result<bool> {
-        let g = self.inner.lock().unwrap();
+        let g = self.locked();
         let info = g
             .clients
             .get(&client_id)
@@ -120,7 +129,7 @@ impl SelectionService {
             )));
         }
         let take = k.min(pool.len());
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let idx = g.rng.sample_indices(pool.len(), take);
         let mut cohort: Vec<u64> = idx.into_iter().map(|i| pool[i]).collect();
         cohort.sort_unstable(); // deterministic order for VG formation

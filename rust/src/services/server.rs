@@ -95,6 +95,7 @@ impl FloridaServer {
             AuthService::new(authority_key, true),
             SelectionService::new(seed ^ 0x5E1),
             ManagementService::new(evaluator, seed),
+            // florida-lint: allow(wall-clock-in-core): Clock::Real construction is the seam boundary
             Clock::Real(Instant::now()),
         )
     }
@@ -121,6 +122,7 @@ impl FloridaServer {
             SelectionService::new(seed.wrapping_add(1)),
             ManagementService::new(evaluator, seed),
             if real_clock {
+                // florida-lint: allow(wall-clock-in-core): Clock::Real construction is the seam boundary
                 Clock::Real(Instant::now())
             } else {
                 Clock::Manual(AtomicU64::new(0))
@@ -144,6 +146,7 @@ impl FloridaServer {
             SelectionService::new(seed.wrapping_add(1)),
             ManagementService::with_storage(evaluator, seed, storage)?,
             if real_clock {
+                // florida-lint: allow(wall-clock-in-core): Clock::Real construction is the seam boundary
                 Clock::Real(Instant::now())
             } else {
                 Clock::Manual(AtomicU64::new(0))

@@ -16,7 +16,7 @@
 //! tier.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::error::{Error, Result};
 use crate::orchestrator::ClientDirectory;
@@ -64,14 +64,23 @@ impl SessionRegistry {
         }
     }
 
+    /// Lock the registry, recovering from poisoning: every mutation in
+    /// this file is a single-step map insert/remove/field write, so a
+    /// guard abandoned by a panicking thread still holds a structurally
+    /// intact map — panicking the server thread that inherited it would
+    /// turn one crashed request into fleet-wide session loss.
+    fn locked(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     pub fn lease_ms(&self) -> u64 {
-        self.inner.lock().unwrap().lease_ms
+        self.locked().lease_ms
     }
 
     /// Adjust the lease granted to new opens/renewals (CLI `--lease-ms`,
     /// simulator scenarios, tests).
     pub fn set_lease_ms(&self, lease_ms: u64) {
-        self.inner.lock().unwrap().lease_ms = lease_ms.max(1);
+        self.locked().lease_ms = lease_ms.max(1);
     }
 
     /// Open (or replace) the client's session: a fresh token and a full
@@ -83,7 +92,7 @@ impl SessionRegistry {
         proto: u32,
         now_ms: u64,
     ) -> (u64, u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let token = g.next_token;
         g.next_token += 1;
         let lease_ms = g.lease_ms;
@@ -106,7 +115,7 @@ impl SessionRegistry {
     /// token (the session was replaced or evicted) forces a reopen, so a
     /// zombie client can never keep an abandoned session alive.
     pub fn renew(&self, client_id: u64, token: u64, hints: LoadHints, now_ms: u64) -> Result<u64> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let lease_ms = g.lease_ms;
         let s = g
             .live
@@ -130,7 +139,7 @@ impl SessionRegistry {
     /// zombie's token-free heartbeat cannot keep a replaced session
     /// alive (same guarantee [`SessionRegistry::renew`] enforces).
     pub fn touch_v1(&self, client_id: u64, now_ms: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let lease_ms = g.lease_ms;
         if let Some(s) = g.live.get_mut(&client_id) {
             if s.token == IMPLICIT_TOKEN {
@@ -155,7 +164,7 @@ impl SessionRegistry {
     /// Release a session early. Returns whether a matching session was
     /// closed (a stale token closes nothing).
     pub fn close(&self, client_id: u64, token: u64) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         match g.live.get(&client_id) {
             Some(s) if s.token == token => {
                 g.live.remove(&client_id);
@@ -168,7 +177,7 @@ impl SessionRegistry {
     /// Evict every expired lease; returns the evicted client ids (sorted,
     /// for deterministic downstream handling).
     pub fn sweep(&self, now_ms: u64) -> Vec<u64> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let mut evicted: Vec<u64> = g
             .live
             .values()
@@ -183,20 +192,15 @@ impl SessionRegistry {
     }
 
     pub fn get(&self, client_id: u64) -> Option<Session> {
-        self.inner.lock().unwrap().live.get(&client_id).cloned()
+        self.locked().live.get(&client_id).cloned()
     }
 
     pub fn profile_of(&self, client_id: u64) -> Option<DeviceProfile> {
-        self.inner
-            .lock()
-            .unwrap()
-            .live
-            .get(&client_id)
-            .map(|s| s.profile)
+        self.locked().live.get(&client_id).map(|s| s.profile)
     }
 
     pub fn live_count(&self) -> usize {
-        self.inner.lock().unwrap().live.len()
+        self.locked().live.len()
     }
 }
 

@@ -54,6 +54,7 @@ pub fn run_scaling_point(n: usize, rounds: u64, seed: u64) -> Result<ScalingPoin
         .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 5]))?
         .id();
 
+    // florida-lint: allow(wall-clock-in-core): wall_ms run reporting, not round logic
     let t0 = std::time::Instant::now();
     let fleet = FleetConfig {
         n_devices: n,
@@ -121,6 +122,7 @@ pub fn run_churn_restart(
         )));
     }
     let storage = StorageConfig::new(state_dir).fsync(FsyncPolicy::Commit);
+    // florida-lint: allow(wall-clock-in-core): wall_ms run reporting, not round logic
     let t0 = std::time::Instant::now();
 
     // One plaintext sync round through the management API: everyone
@@ -287,6 +289,7 @@ pub fn run_device_mix(n: usize, rounds: u64, seed: u64) -> Result<DeviceMixRepor
         .id();
     let stub = FloridaClient::direct(&server);
     let events = server.subscribe();
+    // florida-lint: allow(wall-clock-in-core): wall_ms run reporting, not round logic
     let t0 = std::time::Instant::now();
 
     // Every device opens a v2 session reporting its compute tier.
@@ -465,6 +468,7 @@ pub fn run_tree_scale(n: usize, rounds: u64, leaves: u32, seed: u64) -> Result<T
         return Err(Error::Config("tree scale needs >= 1 round".into()));
     }
     const DIM: usize = 5;
+    // florida-lint: allow(wall-clock-in-core): wall_ms run reporting, not round logic
     let t0 = std::time::Instant::now();
 
     let make_server = |tag: &str| -> Result<(Arc<FloridaServer>, u64)> {

@@ -186,6 +186,7 @@ pub fn run_spam(cfg: &SpamRunConfig) -> Result<SpamRunResult> {
     };
     let sim_compute_ms = cfg.sim_compute_ms;
 
+    // florida-lint: allow(wall-clock-in-core): wall_ms run reporting, not round logic
     let t0 = std::time::Instant::now();
     let rt_for_devices = Arc::clone(&rt);
     let reports = run_fleet_with_dp(&server, task_id, &fleet, local_dp, |i| {

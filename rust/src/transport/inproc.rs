@@ -6,10 +6,8 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, channel};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
-
-use once_cell::sync::Lazy;
 
 use super::{Connection, Dialer, Listener};
 use crate::error::{Error, Result};
@@ -18,9 +16,19 @@ use crate::error::{Error, Result};
 const RECV_TIMEOUT: Duration = Duration::from_secs(120);
 
 type Handshake = (Sender<Vec<u8>>, Receiver<Vec<u8>>, String);
+type Registry = Mutex<HashMap<String, Sender<Handshake>>>;
 
-static REGISTRY: Lazy<Mutex<HashMap<String, Sender<Handshake>>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The global address registry, poison surfaced as a transport error:
+/// a panic in one simulated client must not take down every later
+/// bind/dial in the process.
+fn registry() -> Result<MutexGuard<'static, HashMap<String, Sender<Handshake>>>> {
+    REGISTRY
+        .get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        .map_err(|_| Error::Transport("inproc registry poisoned".into()))
+}
 
 /// One end of an in-process connection.
 pub struct InprocConn {
@@ -63,7 +71,7 @@ pub struct InprocListener {
 impl InprocListener {
     /// Bind an address. Errors if already bound.
     pub fn bind(addr: &str) -> Result<InprocListener> {
-        let mut reg = REGISTRY.lock().unwrap();
+        let mut reg = registry()?;
         if reg.contains_key(addr) {
             return Err(Error::Transport(format!("inproc address {addr} in use")));
         }
@@ -92,7 +100,13 @@ impl Listener for InprocListener {
 
 impl Drop for InprocListener {
     fn drop(&mut self) {
-        REGISTRY.lock().unwrap().remove(&self.addr);
+        // Drop must not panic; a poisoned map is still a valid map, so
+        // recover it to unregister the address.
+        if let Some(reg) = REGISTRY.get() {
+            reg.lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .remove(&self.addr);
+        }
     }
 }
 
@@ -102,7 +116,7 @@ pub struct InprocDialer;
 impl Dialer for InprocDialer {
     fn dial(&self, addr: &str) -> Result<Box<dyn Connection>> {
         let acceptor = {
-            let reg = REGISTRY.lock().unwrap();
+            let reg = registry()?;
             reg.get(addr)
                 .cloned()
                 .ok_or_else(|| Error::Transport(format!("no inproc listener at {addr}")))?

@@ -33,6 +33,7 @@ impl Rng {
 
     /// Seed from the OS monotonic clock — for non-reproducible paths.
     pub fn from_entropy() -> Self {
+        // florida-lint: allow(wall-clock-in-core): entropy seeding is non-reproducible by design
         let t = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .unwrap_or_default();

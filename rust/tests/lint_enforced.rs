@@ -1,0 +1,38 @@
+//! Runs the `florida lint` engine over `rust/src` under plain
+//! `cargo test`, applying the committed baseline — the same gate the
+//! `florida lint --baseline` CLI subcommand and `scripts/check.sh`
+//! enforce. A fresh violation of any rule fails this test.
+
+use florida::analysis::{default_rules, load_tree, render, run_rules, Baseline};
+use std::path::Path;
+
+#[test]
+fn lint_clean_under_baseline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = load_tree(root).expect("walk rust/src");
+    assert!(
+        files.len() > 20,
+        "lint walked only {} files — load_tree is broken",
+        files.len()
+    );
+    let findings = run_rules(&files, &default_rules());
+    let baseline_path = root.join("lint.baseline");
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => Baseline::parse(&text).expect("parse lint.baseline"),
+        Err(_) => Baseline::default(),
+    };
+    let (reported, _grandfathered, stale) = baseline.apply(findings);
+    assert!(
+        reported.is_empty(),
+        "florida lint found {} new finding(s):\n{}\n\
+         Fix the site, add `// florida-lint: allow(<rule>): <reason>`, or \
+         regenerate the baseline with `florida lint --write-baseline`.",
+        reported.len(),
+        render(&reported)
+    );
+    assert_eq!(
+        stale, 0,
+        "lint.baseline grandfathers {stale} finding(s) that no longer exist — \
+         shrink it with `florida lint --write-baseline` so the count only goes down"
+    );
+}

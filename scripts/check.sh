@@ -4,6 +4,14 @@
 #
 #   scripts/check.sh           # everything
 #   scripts/check.sh --fast    # skip the (slow) test suite
+#
+# Lint step: `florida lint --baseline` runs the repo's own static
+# analysis (rust/src/analysis/) — six rules distilled from past bugs
+# (panicking-lock, u64-as-json-number, wall-clock-in-core,
+# msg-coverage, unchecked-wire-length, lock-across-send). Findings not
+# grandfathered in lint.baseline fail the build; the baseline may only
+# shrink. Suppress a deliberate site inline with
+# `// florida-lint: allow(<rule>): reason`.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -25,6 +33,13 @@ if [[ "$fast" == "0" ]]; then
   # (ROADMAP.md: `cargo build --release && cargo test -q`).
   echo "==> cargo build --release"
   cargo build --release
+
+  # Required gate: repo-aware static analysis against the committed
+  # baseline (see header). Also runs under `cargo test` via the
+  # lint_enforced [[test]] target; this invocation keeps the failure
+  # mode a first-class CI step with readable file:line output.
+  echo "==> florida lint --baseline"
+  cargo run --release --quiet -- lint --baseline
   # The suite above includes integration_recovery (a registered
   # [[test]] target): the crash-recovery path runs fsync-Always against
   # a tempdir, so CI exercises real fsyncs, not just the Noop seam.
