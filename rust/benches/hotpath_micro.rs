@@ -341,6 +341,79 @@ fn main() {
         }));
     }
 
+    bench::section("robust_trimmed_mean_commit (Byzantine-robust round, 32 clients)");
+    // What the O(cohort × dim) robust buffer costs against the linear
+    // fold above: same round shape as round_engine_commit, but the
+    // commit sorts every coordinate column and trims before averaging.
+    {
+        use florida::config::TaskConfig;
+        use florida::orchestrator::{EventBus, NoEval, NullDirectory, RoundEngine};
+
+        let engine_dim = 1024;
+        let k = 32u64;
+        let mut cfg = TaskConfig::default();
+        cfg.aggregator = "trimmed_mean".into();
+        cfg.trim_fraction = 0.2;
+        cfg.clients_per_round = k as usize;
+        cfg.total_rounds = u64::MAX / 2; // never completes inside the bench
+        cfg.round_timeout_ms = u64::MAX / 4;
+        let mut engine = RoundEngine::new(
+            3,
+            cfg,
+            ModelSnapshot::new(0, vec![0.0; engine_dim]),
+            11,
+            EventBus::new(),
+        )
+        .expect("engine");
+        engine.start().expect("start");
+        let dir = NullDirectory;
+        let delta = vec![0.01f32; engine_dim];
+        snap.report(b.run("robust_trimmed_mean_commit", || {
+            let round = engine.round;
+            let version = engine.global.version;
+            for c in 1..=k {
+                engine.join(c, [0u8; 32], 0).expect("join");
+            }
+            for c in 1..=k {
+                let _ = engine.fetch(c, &dir, 0).expect("fetch");
+            }
+            for c in 1..=k {
+                let (ok, why) = engine
+                    .accept_plain(c, round, version, delta.clone(), 1.0, 0.1, &NoEval, 1)
+                    .expect("accept");
+                assert!(ok, "{why}");
+            }
+            assert_eq!(engine.round, round + 1, "round must commit");
+        }));
+    }
+
+    bench::section("policy_admit (admission engine, warm client state)");
+    // The per-request policy tax on the router hot path: one lock, a
+    // token-bucket advance, and the reputation/quota checks. Capacity is
+    // set astronomically high so every admit succeeds (the steady state).
+    {
+        use florida::config::PolicyConfig;
+        use florida::services::router::{RequestCtx, ServiceKind};
+        use florida::services::PolicyEngine;
+
+        let policy = PolicyEngine::new(PolicyConfig {
+            enabled: true,
+            bucket_capacity: 1e18,
+            refill_per_sec: 1e9,
+            ..PolicyConfig::default()
+        });
+        let msg = Msg::Heartbeat { client_id: 42 };
+        let ctx = RequestCtx {
+            now_ms: 1,
+            service: ServiceKind::Task,
+            method: "heartbeat",
+            principal: Some(42),
+        };
+        snap.report(b.run("policy_admit", || {
+            policy.admit(&msg, &ctx).expect("admit");
+        }));
+    }
+
     bench::section("hierarchical aggregation (leaf fold + root partial merge)");
     // The tree path's two hot costs: a leaf folding its member slice
     // into one partial (leaf_fold_forward), and the master absorbing a

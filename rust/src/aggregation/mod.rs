@@ -9,13 +9,22 @@
 //! Ingest is **streaming** (§Perf): a strategy opens an
 //! [`AggregatorFold`] with `begin(dim)`, the round engine folds each
 //! upload in at arrival with `accept(delta, stats)`, and `finish()`
-//! yields the combined pseudo-gradient. All built-ins keep O(dim)
-//! state (a [`DeltaAccumulator`]) plus scalars — the server never
-//! buffers a cohort's worth of deltas. [`Aggregator::aggregate`] is the
-//! batch convenience over the same fold (tests, one-shot callers).
+//! yields the combined pseudo-gradient. The linear built-ins keep
+//! O(dim) state (a [`DeltaAccumulator`]) plus scalars — the server
+//! never buffers a cohort's worth of deltas. The Byzantine-robust
+//! strategies in [`robust`] are the documented exception: trimmed
+//! mean/median need every contribution at hand, so their folds buffer
+//! O(cohort × dim) and refuse the leaf-tree `export`/`absorb` seam
+//! (robust reduction happens at the root only).
+//! [`Aggregator::aggregate`] is the batch convenience over the same
+//! fold (tests, one-shot callers).
+
+pub mod robust;
 
 use crate::error::{Error, Result};
 use crate::model::DeltaAccumulator;
+
+pub use robust::{Median, RobustParams, TrimmedMean};
 
 /// Per-update scalar metadata accompanying a delta on the ingest path.
 #[derive(Clone, Copy, Debug)]
@@ -381,17 +390,38 @@ impl Aggregator for FedBuff {
     }
 }
 
-/// Look up a built-in strategy by config name.
+/// Look up a built-in strategy by config name (robust strategies get
+/// default [`RobustParams`]; use [`for_task`] to thread config knobs).
 pub fn by_name(name: &str, prox_mu: f32) -> Result<Box<dyn Aggregator>> {
+    for_task(name, prox_mu, RobustParams::default())
+}
+
+/// Strategies whose reduction cannot ride the linear `PartialFold`
+/// seam: the round engine refuses leaf assignments for these, so the
+/// robust reduction happens at the root only.
+pub fn is_robust(name: &str) -> bool {
+    matches!(name, "trimmed_mean" | "median")
+}
+
+/// Look up a built-in strategy with the task's robustness knobs.
+pub fn for_task(name: &str, prox_mu: f32, robust: RobustParams) -> Result<Box<dyn Aggregator>> {
     Ok(match name {
         "fedavg" => Box::new(FedAvg),
         "fedprox" => Box::new(FedProx { mu: prox_mu }),
         "dga" => Box::new(Dga::default()),
         "fedbuff" => Box::new(FedBuff::default()),
+        "trimmed_mean" => {
+            robust.validate()?;
+            Box::new(TrimmedMean { params: robust })
+        }
+        "median" => {
+            robust.validate()?;
+            Box::new(Median { params: robust })
+        }
         other => {
             return Err(Error::Config(format!(
                 "unknown aggregation strategy {other:?} \
-                 (expected fedavg|fedprox|dga|fedbuff)"
+                 (expected fedavg|fedprox|dga|fedbuff|trimmed_mean|median)"
             )))
         }
     })
@@ -662,10 +692,27 @@ mod tests {
 
     #[test]
     fn registry_lookup() {
-        for name in ["fedavg", "fedprox", "dga", "fedbuff"] {
+        for name in ["fedavg", "fedprox", "dga", "fedbuff", "trimmed_mean", "median"] {
             assert_eq!(by_name(name, 0.1).unwrap().name(), name);
         }
         assert!(by_name("magic", 0.0).is_err());
+        // Robust knobs are validated at construction time.
+        assert!(for_task(
+            "trimmed_mean",
+            0.0,
+            RobustParams {
+                trim_fraction: 0.5,
+                clip_norm: 0.0
+            }
+        )
+        .is_err());
+        assert_eq!(
+            ["fedavg", "fedprox", "dga", "fedbuff", "trimmed_mean", "median"]
+                .iter()
+                .filter(|n| is_robust(n))
+                .count(),
+            2
+        );
     }
 
     #[test]

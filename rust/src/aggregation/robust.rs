@@ -1,0 +1,445 @@
+//! Byzantine-robust aggregation: coordinate-wise trimmed mean and
+//! median (Yin et al. 2018), with a norm-bounding pre-filter.
+//!
+//! Unlike the streaming built-ins in the parent module, robust
+//! estimators are **not** functions of a running weighted sum: trimming
+//! and medians need every contribution at hand, so these folds buffer
+//! O(cohort × dim) by necessity. The pre-filter runs in two stages:
+//!
+//! * **Zero-scoring at `accept`**: wrong-dimension deltas, non-finite
+//!   components/weights, and deltas whose L2 norm exceeds
+//!   [`HARD_NORM_LIMIT`] are rejected outright, leaving the fold
+//!   unchanged — the upload bounces as `Ack { ok: false }`, which the
+//!   admission policy engine counts against the sender's reputation.
+//! * **Norm clipping at `finish`**: surviving deltas above the clip
+//!   bound are scaled down onto the bound (fixed `clip_norm`, or
+//!   adaptively [`ADAPTIVE_CLIP_FACTOR`]× the cohort's median norm), so
+//!   a finite magnitude-bomb cannot dominate even the untrimmed tails.
+//!
+//! **Tree composition**: a trimmed mean/median over a union is not a
+//! function of per-leaf sums, so robust folds cannot ride the
+//! `PartialFold` seam. `export` returns an *empty* partial (every
+//! `absorb` implementation rejects empties) and `absorb` refuses — a
+//! mis-wired leaf can only fail loudly, never silently skew the
+//! reduction. The round engine refuses leaf assignments for robust
+//! tasks up front ([`crate::orchestrator::RoundEngine::leaf_slice`]),
+//! so robust reduction happens at the root only.
+
+use crate::error::{Error, Result};
+
+use super::{Aggregator, AggregatorFold, PartialFold, UpdateStats};
+
+/// Deltas with an L2 norm beyond this are discarded (zero-scored) at
+/// `accept` — no plausible pseudo-gradient gets near it, and clipping
+/// such a value would still let its direction through at full credit.
+pub const HARD_NORM_LIMIT: f64 = 1e12;
+
+/// Adaptive clip bound: this multiple of the cohort's median delta
+/// norm, used when `clip_norm` is 0 (the config default).
+pub const ADAPTIVE_CLIP_FACTOR: f64 = 3.0;
+
+/// Knobs shared by the robust strategies, surfaced as `TaskConfig`
+/// fields (`trim_fraction`, `clip_norm`).
+#[derive(Clone, Copy, Debug)]
+pub struct RobustParams {
+    /// Fraction of updates trimmed from *each* end per coordinate by
+    /// the trimmed mean (ignored by the median). Must sit in [0, 0.5).
+    pub trim_fraction: f32,
+    /// Fixed L2 clip bound; 0 selects the adaptive median-norm bound.
+    pub clip_norm: f32,
+}
+
+impl Default for RobustParams {
+    fn default() -> Self {
+        RobustParams {
+            trim_fraction: 0.2,
+            clip_norm: 0.0,
+        }
+    }
+}
+
+impl RobustParams {
+    pub fn validate(&self) -> Result<()> {
+        if !self.trim_fraction.is_finite()
+            || self.trim_fraction < 0.0
+            || self.trim_fraction >= 0.5
+        {
+            return Err(Error::Config(format!(
+                "trim_fraction {} must be in [0, 0.5)",
+                self.trim_fraction
+            )));
+        }
+        if !self.clip_norm.is_finite() || self.clip_norm < 0.0 {
+            return Err(Error::Config(format!(
+                "clip_norm {} must be finite and >= 0",
+                self.clip_norm
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Which robust center estimate `finish` computes.
+#[derive(Clone, Copy, Debug)]
+enum RobustKind {
+    TrimmedMean,
+    Median,
+}
+
+/// Buffering fold behind both robust strategies. Each accepted update
+/// is held as `(delta, weight, norm)`; the reduction happens once, at
+/// `finish`.
+struct RobustFold {
+    dim: usize,
+    kind: RobustKind,
+    params: RobustParams,
+    updates: Vec<(Vec<f32>, f64, f64)>,
+}
+
+impl RobustFold {
+    /// The L2 clip bound for this cohort: the configured `clip_norm`,
+    /// or [`ADAPTIVE_CLIP_FACTOR`]× the median delta norm when 0.
+    fn clip_bound(&self) -> f64 {
+        if self.params.clip_norm > 0.0 {
+            return self.params.clip_norm as f64;
+        }
+        let mut norms: Vec<f64> = self.updates.iter().map(|(_, _, n)| *n).collect();
+        norms.sort_unstable_by(|a, b| a.total_cmp(b));
+        ADAPTIVE_CLIP_FACTOR * norms[(norms.len() - 1) / 2]
+    }
+}
+
+impl AggregatorFold for RobustFold {
+    fn accept(&mut self, delta: &[f32], stats: &UpdateStats) -> Result<()> {
+        // Full zero-scoring pass before any mutation: a rejected
+        // update must leave the fold unchanged.
+        if delta.len() != self.dim {
+            return Err(Error::Model(format!(
+                "dim mismatch {} vs {}",
+                delta.len(),
+                self.dim
+            )));
+        }
+        if !stats.weight.is_finite() || stats.weight <= 0.0 {
+            return Err(Error::Model(format!(
+                "non-positive weight {}",
+                stats.weight
+            )));
+        }
+        let mut sq = 0.0f64;
+        for &v in delta {
+            if !v.is_finite() {
+                return Err(Error::Model(format!(
+                    "non-finite delta component {v}"
+                )));
+            }
+            sq += v as f64 * v as f64;
+        }
+        let norm = sq.sqrt();
+        if norm > HARD_NORM_LIMIT {
+            return Err(Error::Model(format!(
+                "delta norm {norm:.3e} exceeds hard limit {HARD_NORM_LIMIT:.0e}"
+            )));
+        }
+        self.updates.push((delta.to_vec(), stats.weight, norm));
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.updates.len()
+    }
+
+    /// A robust reduction is not a function of a linear partial sum, so
+    /// there is nothing faithful to export. Return an *empty* partial:
+    /// every `absorb` implementation (including this fold's) rejects
+    /// empties, so a mis-wired leaf fails loudly instead of silently
+    /// bypassing the trim.
+    fn export(&self) -> PartialFold {
+        PartialFold {
+            sum: Vec::new(),
+            total_weight: 0.0,
+            count: 0,
+            min_loss: f64::INFINITY,
+        }
+    }
+
+    fn absorb(&mut self, _part: &PartialFold) -> Result<()> {
+        Err(Error::Model(
+            "robust strategies reduce at the root only — leaf partials are refused".into(),
+        ))
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>> {
+        if self.updates.is_empty() {
+            return Err(Error::Model("empty robust fold".into()));
+        }
+        let bound = self.clip_bound();
+        // Per-update clip factor (1.0 when under the bound or when the
+        // cohort's bound collapsed to 0, i.e. all-zero deltas).
+        let factors: Vec<f64> = self
+            .updates
+            .iter()
+            .map(|(_, _, norm)| {
+                if bound > 0.0 && *norm > bound {
+                    bound / *norm
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let n = self.updates.len();
+        let trim = match self.kind {
+            RobustKind::TrimmedMean => {
+                let k = (self.params.trim_fraction as f64 * n as f64).floor() as usize;
+                k.min((n - 1) / 2)
+            }
+            RobustKind::Median => 0,
+        };
+        let mut out = vec![0.0f32; self.dim];
+        // (value, weight) scratch reused across coordinates.
+        let mut col: Vec<(f64, f64)> = Vec::with_capacity(n);
+        for (j, slot) in out.iter_mut().enumerate() {
+            col.clear();
+            for ((delta, weight, _), factor) in self.updates.iter().zip(&factors) {
+                col.push((delta[j] as f64 * factor, *weight));
+            }
+            // Ties ordered by weight so the reduction is a function of
+            // the multiset of updates, not of arrival order.
+            col.sort_unstable_by(|a, b| {
+                a.0.total_cmp(&b.0).then_with(|| a.1.total_cmp(&b.1))
+            });
+            *slot = match self.kind {
+                RobustKind::TrimmedMean => {
+                    let kept = &col[trim..n - trim];
+                    let (mut sum, mut wsum) = (0.0f64, 0.0f64);
+                    for &(v, w) in kept {
+                        sum += v * w;
+                        wsum += w;
+                    }
+                    (sum / wsum) as f32
+                }
+                RobustKind::Median => {
+                    // Lower weighted median: the first value whose
+                    // cumulative weight reaches half the total.
+                    let total: f64 = col.iter().map(|&(_, w)| w).sum();
+                    let mut cum = 0.0f64;
+                    let mut med = col[n - 1].0;
+                    for &(v, w) in &col {
+                        cum += w;
+                        if cum >= total / 2.0 {
+                            med = v;
+                            break;
+                        }
+                    }
+                    med as f32
+                }
+            };
+        }
+        Ok(out)
+    }
+}
+
+/// Coordinate-wise trimmed mean: per coordinate, drop the
+/// `trim_fraction` lowest and highest values, weighted-average the
+/// rest. Tolerates up to `trim_fraction` Byzantine contributors.
+pub struct TrimmedMean {
+    pub params: RobustParams,
+}
+
+impl Aggregator for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed_mean"
+    }
+
+    fn begin(&self, dim: usize) -> Result<Box<dyn AggregatorFold>> {
+        self.params.validate()?;
+        Ok(Box::new(RobustFold {
+            dim,
+            kind: RobustKind::TrimmedMean,
+            params: self.params,
+            updates: Vec::new(),
+        }))
+    }
+}
+
+/// Coordinate-wise (weighted) median: the classic ½-breakdown robust
+/// center — any minority of colluding clients moves it only within the
+/// honest values' span.
+pub struct Median {
+    pub params: RobustParams,
+}
+
+impl Aggregator for Median {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+
+    fn begin(&self, dim: usize) -> Result<Box<dyn AggregatorFold>> {
+        self.params.validate()?;
+        Ok(Box::new(RobustFold {
+            dim,
+            kind: RobustKind::Median,
+            params: self.params,
+            updates: Vec::new(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{by_name, ClientUpdate, FedAvg};
+    use super::*;
+
+    fn upd(id: u64, delta: Vec<f32>, weight: f64) -> ClientUpdate {
+        ClientUpdate {
+            client_id: id,
+            delta,
+            weight,
+            loss: 0.1,
+            staleness: 0,
+        }
+    }
+
+    fn honest(n: u64, v: f32) -> Vec<ClientUpdate> {
+        (1..=n).map(|i| upd(i, vec![v, -v], 1.0)).collect()
+    }
+
+    #[test]
+    fn trimmed_mean_discards_outliers() {
+        let mut ups = honest(8, 1.0);
+        ups.push(upd(9, vec![1e6, -1e6], 1.0));
+        ups.push(upd(10, vec![-1e6, 1e6], 1.0));
+        let got = TrimmedMean {
+            params: RobustParams {
+                trim_fraction: 0.2,
+                clip_norm: f32::MAX, // isolate trimming from clipping
+            },
+        }
+        .aggregate(&ups)
+        .unwrap();
+        assert!((got[0] - 1.0).abs() < 1e-6, "{}", got[0]);
+        assert!((got[1] + 1.0).abs() < 1e-6, "{}", got[1]);
+    }
+
+    #[test]
+    fn median_ignores_minority_bombs() {
+        let mut ups = honest(7, 0.5);
+        ups.push(upd(8, vec![1e9, 1e9], 100.0));
+        ups.push(upd(9, vec![-1e9, -1e9], 100.0));
+        let got = Median {
+            params: RobustParams::default(),
+        }
+        .aggregate(&ups)
+        .unwrap();
+        assert!((got[0] - 0.5).abs() < 1e-6, "{}", got[0]);
+        assert!((got[1] + 0.5).abs() < 1e-6, "{}", got[1]);
+    }
+
+    #[test]
+    fn adaptive_clip_bounds_untrimmed_bomb() {
+        // trim_fraction 0 → the bomb survives trimming; the adaptive
+        // norm clip must still bound its contribution.
+        let mut ups = honest(4, 1.0);
+        ups.push(upd(5, vec![1e8, 0.0], 1.0));
+        let got = TrimmedMean {
+            params: RobustParams {
+                trim_fraction: 0.0,
+                clip_norm: 0.0,
+            },
+        }
+        .aggregate(&ups)
+        .unwrap();
+        // Bomb clipped to 3× the median honest norm (≈ √2): its share
+        // of the mean is at most ~3·√2/5 ≈ 0.85, not 2e7.
+        assert!(got[0] < 2.0, "{}", got[0]);
+    }
+
+    #[test]
+    fn zero_scores_nonfinite_and_oversized_without_mutation() {
+        for name in ["trimmed_mean", "median"] {
+            let agg = by_name(name, 0.0).unwrap();
+            let mut fold = agg.begin(2).unwrap();
+            fold.accept(&[1.0, 1.0], &upd(1, vec![], 1.0).stats()).unwrap();
+            for (delta, weight) in [
+                (vec![f32::NAN, 0.0], 1.0),
+                (vec![f32::INFINITY, 0.0], 1.0),
+                (vec![1.0, 2.0, 3.0], 1.0),                // wrong dim
+                (vec![1.0, 1.0], f64::NAN),                // bad weight
+                (vec![1.0, 1.0], 0.0),                     // bad weight
+                (vec![1e38, 1e38], 1.0),                   // > hard norm limit
+            ] {
+                let r = fold.accept(
+                    &delta,
+                    &UpdateStats {
+                        client_id: 9,
+                        weight,
+                        loss: 0.1,
+                        staleness: 0,
+                    },
+                );
+                assert!(r.is_err(), "{name}: {delta:?} w={weight} accepted");
+                assert_eq!(fold.count(), 1, "{name}: rejected update mutated fold");
+            }
+            let got = fold.finish().unwrap();
+            assert!((got[0] - 1.0).abs() < 1e-6, "{name}: {}", got[0]);
+        }
+    }
+
+    #[test]
+    fn robust_partials_refused_and_export_is_inert() {
+        let agg = by_name("median", 0.0).unwrap();
+        let mut fold = agg.begin(1).unwrap();
+        fold.accept(&[2.0], &upd(1, vec![], 1.0).stats()).unwrap();
+        // absorb refuses even a well-formed plain partial.
+        assert!(fold
+            .absorb(&PartialFold {
+                sum: vec![4.0],
+                total_weight: 2.0,
+                count: 2,
+                min_loss: f64::INFINITY,
+            })
+            .is_err());
+        // export yields an empty partial no fold will absorb — a
+        // mis-wired leaf fails loudly rather than skewing the result.
+        let part = fold.export();
+        assert_eq!(part.count, 0);
+        let mut mean = FedAvg.begin(1).unwrap();
+        assert!(mean.absorb(&part).is_err());
+        assert!((fold.finish().unwrap()[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn f0_identical_updates_match_fedavg() {
+        // No outliers, identical deltas with varying weights: both
+        // robust centers coincide with the FedAvg mean exactly.
+        let ups: Vec<ClientUpdate> = (1..=6)
+            .map(|i| upd(i, vec![0.25, -1.5], i as f64))
+            .collect();
+        let reference = FedAvg.aggregate(&ups).unwrap();
+        for name in ["trimmed_mean", "median"] {
+            let got = by_name(name, 0.0).unwrap().aggregate(&ups).unwrap();
+            for (g, r) in got.iter().zip(&reference) {
+                assert!((g - r).abs() < 1e-6, "{name}: {g} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn robust_folds_are_order_independent() {
+        let ups = vec![
+            upd(1, vec![1.0, -0.5], 1.0),
+            upd(2, vec![0.5, 0.25], 2.0),
+            upd(3, vec![-2.0, 4.0], 1.5),
+            upd(4, vec![0.75, -1.0], 3.0),
+            upd(5, vec![100.0, -100.0], 1.0),
+        ];
+        let mut rev = ups.clone();
+        rev.reverse();
+        for name in ["trimmed_mean", "median"] {
+            let agg = by_name(name, 0.0).unwrap();
+            let a = agg.aggregate(&ups).unwrap();
+            let b = agg.aggregate(&rev).unwrap();
+            assert_eq!(a, b, "{name} depends on arrival order");
+        }
+    }
+}

@@ -24,6 +24,15 @@
 //! - **Secure aggregation** rounds refuse leaf assignments: masked sums
 //!   must reach the root unmerged so mask cancellation and unmasking
 //!   happen in one place.
+//! - **Robust strategies** (trimmed_mean | median) refuse leaf
+//!   assignments too: a trimmed mean/median is not a function of
+//!   per-leaf sums, so a leaf could neither export its buffered fold
+//!   through the linear [`rpc::ForwardPartial`] frame nor have it
+//!   absorbed faithfully. Robust reduction happens at the root only —
+//!   [`LeafAggregator::begin_round`] refuses the strategy locally, the
+//!   engine's `leaf_slice`/`accept_partial` refuse it at the server,
+//!   and a robust fold's own `export`/`absorb` fail loudly as the last
+//!   line of defense.
 //! - **DP noise** composes only at the root (the master's commit path);
 //!   leaves never add noise, so the privacy accounting is unchanged.
 //! - A leaf that dies mid-round simply never reports its members; the
@@ -115,6 +124,15 @@ impl LeafAggregator {
         }
         if a.members.is_empty() {
             return Err(Error::Task("assignment carries no members".into()));
+        }
+        if aggregation::is_robust(&self.cfg.aggregator) {
+            // The engine refuses these assignments too; refusing locally
+            // keeps a mis-configured fleet driver from buffering folds
+            // it could never forward (robust export is inert by design).
+            return Err(Error::Task(format!(
+                "robust strategy {:?} reduces at the root only — leaves refuse",
+                self.cfg.aggregator
+            )));
         }
         let fold = aggregation::by_name(&self.cfg.aggregator, self.cfg.prox_mu)?.begin(dim)?;
         self.open = Some(LeafRound {
@@ -322,6 +340,16 @@ mod tests {
         // Forwarding closed the round.
         assert_eq!(l.round(), None);
         assert!(l.forward_request(7).is_err());
+    }
+
+    #[test]
+    fn robust_strategies_refused_at_the_leaf() {
+        for name in ["trimmed_mean", "median"] {
+            let mut l = leaf(name);
+            let err = l.begin_round(&assignment(0, vec![3, 5]), 2).unwrap_err();
+            assert!(err.to_string().contains("root only"), "{err}");
+            assert_eq!(l.round(), None, "{name}: refusal must not open a round");
+        }
     }
 
     /// The satellite property test: for random cohorts, random updates,

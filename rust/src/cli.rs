@@ -117,6 +117,10 @@ COMMANDS:
              [--tree depth=2 --leaves N]  hierarchical aggregation:
              leaf aggregators fold their cohort slices and forward one
              partial each; verifies bit-identity against the flat path
+             [--byzantine F]  adversarial fleet: fraction F of clients
+             attack (magnitude-bomb / sign-flip / label-flip); sweeps
+             loss-vs-f for fedavg vs trimmed-mean/median and proves the
+             admission policy engine sheds a misbehaving client
   serve      Serve the platform over TCP
              --addr HOST:PORT [--task cfg.json] [--artifacts DIR]
              [--dim N] [--no-attest] [--conns N] [--lease-ms N]
@@ -282,6 +286,56 @@ fn cmd_scale(args: &Args) -> Result<()> {
                 "tree path diverged from flat reference".into(),
             ));
         }
+        return Ok(());
+    }
+    if let Some(frac) = args.flag("byzantine") {
+        // Adversarial-fleet scenario: sweep attacker fractions across
+        // undefended fedavg vs the robust strategies, then assert the
+        // robustness + admission-policy gates at the requested fraction.
+        let f: f64 = frac
+            .parse()
+            .map_err(|_| Error::Config(format!("--byzantine expects a fraction, got {frac:?}")))?;
+        let r = crate::simulator::scaling::run_byzantine(n.min(4096), rounds, f, seed)?;
+        println!(
+            "byzantine: {} clients, {} rounds, attacks magnitude-bomb/sign-flip/label-flip",
+            r.n_clients, r.rounds
+        );
+        println!("\n  f      byz  fedavg        trimmed_mean  median        (final loss vs optimum)");
+        let fractions: Vec<f64> = r
+            .points
+            .iter()
+            .filter(|p| p.strategy == "fedavg")
+            .map(|p| p.f)
+            .collect();
+        for &g in &fractions {
+            let cell = |s: &str| {
+                r.loss_of(s, g)
+                    .map(|l| format!("{l:<12.3e}"))
+                    .unwrap_or_else(|| "-".into())
+            };
+            let byz = r
+                .points
+                .iter()
+                .find(|p| (p.f - g).abs() < 1e-9)
+                .map(|p| p.n_byzantine)
+                .unwrap_or(0);
+            println!(
+                "  {g:<5.2}  {byz:<3}  {}  {}  {}",
+                cell("fedavg"),
+                cell("trimmed_mean"),
+                cell("median")
+            );
+        }
+        println!(
+            "\n  admission policy: {} request(s) refused pre-engine; attacker reputation {:.2}",
+            r.policy_rejected, r.attacker_reputation
+        );
+        r.gate(f)?;
+        println!(
+            "  gate passed at f={f}: robust within 10% of clean baseline, fedavg degraded \
+             (wall {} ms)",
+            r.wall_ms
+        );
         return Ok(());
     }
     if args.switch("device-mix") {
@@ -678,6 +732,17 @@ mod tests {
         let a = Args::parse(&argv("scale --tree depth=1 --clients 12 --rounds 1")).unwrap();
         assert!(cmd_scale(&a).is_err());
         let a = Args::parse(&argv("scale --tree depth=3 --leaves 2")).unwrap();
+        assert!(cmd_scale(&a).is_err());
+    }
+
+    #[test]
+    fn scale_byzantine_runs_and_validates() {
+        let a = Args::parse(&argv("scale --byzantine 0.2 --clients 10 --rounds 3")).unwrap();
+        cmd_scale(&a).unwrap();
+        // An attacking majority cannot be defended against.
+        let a = Args::parse(&argv("scale --byzantine 0.6 --clients 10 --rounds 1")).unwrap();
+        assert!(cmd_scale(&a).is_err());
+        let a = Args::parse(&argv("scale --byzantine nope --clients 10")).unwrap();
         assert!(cmd_scale(&a).is_err());
     }
 

@@ -100,9 +100,18 @@ pub struct FederatedLearningClient {
     pub local_dp: Option<DpConfig>,
     /// Injected test hook: drop after training with this probability.
     pub dropout_prob: f64,
-    /// Poll backoff between FetchRound calls.
+    /// Base poll interval between FetchRound calls; idle polls back off
+    /// exponentially (with jitter) from here up to
+    /// [`MAX_BACKOFF_DOUBLINGS`] doublings, so a waiting fleet does not
+    /// hammer the server in lockstep. 0 disables sleeping entirely.
     pub poll_sleep_ms: u64,
+    /// Consecutive idle polls since the last round of real work (drives
+    /// the exponential backoff; reset whenever the server gives us work).
+    backoff_level: u32,
 }
+
+/// Cap on backoff doublings: idle polls plateau at base × 2^6 = 64×.
+const MAX_BACKOFF_DOUBLINGS: u32 = 6;
 
 impl FederatedLearningClient {
     pub fn new(
@@ -124,6 +133,7 @@ impl FederatedLearningClient {
             local_dp: None,
             dropout_prob: 0.0,
             poll_sleep_ms: 1,
+            backoff_level: 0,
         }
     }
 
@@ -278,6 +288,7 @@ impl FederatedLearningClient {
         self.ensure_session()?;
         let task_id = loop {
             if let Some(t) = self.poll_task(&workflow.app_name, &workflow.workflow_name)? {
+                self.reset_backoff();
                 break t;
             }
             self.sleep();
@@ -372,6 +383,7 @@ impl FederatedLearningClient {
                 }
                 RoundRole::Train(ri) => {
                     idle_polls = 0;
+                    self.reset_backoff();
                     // Secure-aggregation SETUP happens before local
                     // training (Bonawitz et al. round structure): the
                     // encrypted Shamir shares of this round's DH seed
@@ -457,9 +469,34 @@ impl FederatedLearningClient {
         }))
     }
 
-    fn sleep(&self) {
-        if self.poll_sleep_ms > 0 {
-            std::thread::sleep(std::time::Duration::from_millis(self.poll_sleep_ms));
+    /// The next idle-poll sleep: jittered exponential backoff. Doubles
+    /// from `poll_sleep_ms` up to 2^[`MAX_BACKOFF_DOUBLINGS`]× base,
+    /// jittered uniformly over [½·bound, bound] so a fleet that went
+    /// idle together does not wake (and re-poll) in lockstep. Returns 0
+    /// (and stays at level 0) when sleeping is disabled.
+    fn next_backoff_ms(&mut self) -> u64 {
+        if self.poll_sleep_ms == 0 {
+            return 0;
+        }
+        let bound = self
+            .poll_sleep_ms
+            .saturating_mul(1 << self.backoff_level.min(MAX_BACKOFF_DOUBLINGS));
+        if self.backoff_level < MAX_BACKOFF_DOUBLINGS {
+            self.backoff_level += 1;
+        }
+        let half = (bound / 2).max(1);
+        half + self.rng.below(bound - half + 1)
+    }
+
+    /// Forget accumulated backoff — the server gave us real work.
+    fn reset_backoff(&mut self) {
+        self.backoff_level = 0;
+    }
+
+    fn sleep(&mut self) {
+        let ms = self.next_backoff_ms();
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
         }
     }
 }
@@ -517,6 +554,48 @@ impl Trainer for ConstantTrainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn poll_backoff_doubles_with_jitter_and_resets() {
+        use std::sync::Arc;
+        let server = Arc::new(crate::services::FloridaServer::for_testing(false, 3));
+        let authority = crate::crypto::attest::Authority::new(b"florida-test-authority");
+        let verdict = authority.issue(
+            "backoff-dev",
+            crate::crypto::attest::IntegrityTier::Device,
+            1,
+            u64::MAX / 2,
+        );
+        let mut c = FederatedLearningClient::new(
+            api::direct(&server),
+            "backoff-dev",
+            verdict,
+            crate::proto::DeviceCaps::default(),
+            42,
+        );
+        c.poll_sleep_ms = 8;
+        // Each idle poll's sleep lands in [½·bound, bound] with the
+        // bound doubling per level, then plateaus at 2^6 × base.
+        let mut prev_bound = 0u64;
+        for level in 0..10u32 {
+            let bound = 8u64 * (1 << level.min(MAX_BACKOFF_DOUBLINGS));
+            let ms = c.next_backoff_ms();
+            assert!(
+                ms >= bound / 2 && ms <= bound,
+                "level {level}: {ms} outside [{}, {bound}]",
+                bound / 2
+            );
+            assert!(bound >= prev_bound, "bound must never shrink");
+            prev_bound = bound;
+        }
+        // Progress resets the schedule to the base interval.
+        c.reset_backoff();
+        let ms = c.next_backoff_ms();
+        assert!((4..=8).contains(&ms), "post-reset sleep {ms} not in [4, 8]");
+        // Disabled sleeping stays disabled (simulators rely on 0 = spin).
+        c.poll_sleep_ms = 0;
+        assert_eq!(c.next_backoff_ms(), 0);
+    }
 
     #[test]
     fn constant_trainer_shifts_params() {

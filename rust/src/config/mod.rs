@@ -165,6 +165,119 @@ impl StorageConfig {
     }
 }
 
+/// Admission-policy knobs for the server's policy engine
+/// (`services::policy`): token-bucket rate limits keyed by client id,
+/// per-tenant (app) request quotas, and the reputation ledger fed by
+/// eviction/upload-rejection history. `Default` is **disabled** — the
+/// engine admits everything until a deployment opts in, so a plain
+/// simulator run behaves exactly as before.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PolicyConfig {
+    pub enabled: bool,
+    /// Token-bucket burst capacity per client principal.
+    pub bucket_capacity: f64,
+    /// Token refill rate per client, tokens/second.
+    pub refill_per_sec: f64,
+    /// Max requests per tenant (app) per quota window; 0 = unlimited.
+    pub tenant_quota: u64,
+    pub quota_window_ms: u64,
+    /// Clients whose reputation sinks below this are refused.
+    pub min_reputation: f64,
+    /// Reputation lost per offense (eviction, rejected ingest).
+    pub reputation_penalty: f64,
+    /// Reputation regained per second, back toward the 1.0 ceiling.
+    pub reputation_recovery_per_sec: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            enabled: false,
+            bucket_capacity: 256.0,
+            refill_per_sec: 64.0,
+            tenant_quota: 0,
+            quota_window_ms: 1_000,
+            min_reputation: 0.25,
+            reputation_penalty: 0.25,
+            reputation_recovery_per_sec: 0.01,
+        }
+    }
+}
+
+impl PolicyConfig {
+    /// An enabled profile with the default limits.
+    pub fn enabled() -> PolicyConfig {
+        PolicyConfig {
+            enabled: true,
+            ..PolicyConfig::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.bucket_capacity.is_finite() && self.bucket_capacity >= 1.0) {
+            return Err(Error::Config(format!(
+                "bucket_capacity {} must be >= 1",
+                self.bucket_capacity
+            )));
+        }
+        if !(self.refill_per_sec.is_finite() && self.refill_per_sec >= 0.0) {
+            return Err(Error::Config(format!(
+                "refill_per_sec {} must be >= 0",
+                self.refill_per_sec
+            )));
+        }
+        if self.quota_window_ms == 0 {
+            return Err(Error::Config("quota_window_ms must be > 0".into()));
+        }
+        for (name, v) in [
+            ("min_reputation", self.min_reputation),
+            ("reputation_penalty", self.reputation_penalty),
+            ("reputation_recovery_per_sec", self.reputation_recovery_per_sec),
+        ] {
+            if !(v.is_finite() && (0.0..=1.0).contains(&v)) {
+                return Err(Error::Config(format!("{name} {v} must be in [0, 1]")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from JSON (server deployment spec / scenario config).
+    pub fn from_json(j: &Json) -> Result<PolicyConfig> {
+        let d = PolicyConfig::default();
+        let cfg = PolicyConfig {
+            enabled: j.opt_bool("enabled", d.enabled),
+            bucket_capacity: j.opt_f64("bucket_capacity", d.bucket_capacity),
+            refill_per_sec: j.opt_f64("refill_per_sec", d.refill_per_sec),
+            tenant_quota: j.opt_usize("tenant_quota", d.tenant_quota as usize) as u64,
+            quota_window_ms: j.opt_usize("quota_window_ms", d.quota_window_ms as usize) as u64,
+            min_reputation: j.opt_f64("min_reputation", d.min_reputation),
+            reputation_penalty: j.opt_f64("reputation_penalty", d.reputation_penalty),
+            reputation_recovery_per_sec: j.opt_f64(
+                "reputation_recovery_per_sec",
+                d.reputation_recovery_per_sec,
+            ),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<PolicyConfig> {
+        Self::from_json(&json_parse(s).map_err(Error::Config)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("enabled", self.enabled)
+            .set("bucket_capacity", self.bucket_capacity)
+            .set("refill_per_sec", self.refill_per_sec)
+            .set("tenant_quota", self.tenant_quota as usize)
+            .set("quota_window_ms", self.quota_window_ms as usize)
+            .set("min_reputation", self.min_reputation)
+            .set("reputation_penalty", self.reputation_penalty)
+            .set("reputation_recovery_per_sec", self.reputation_recovery_per_sec)
+    }
+}
+
 /// Everything the ML scientist specifies when creating a task (§3.3.1).
 #[derive(Clone, Debug)]
 pub struct TaskConfig {
@@ -195,6 +308,12 @@ pub struct TaskConfig {
     pub client_lr: f32,
     /// FedProx μ (0 disables the proximal term).
     pub prox_mu: f32,
+    /// Robust aggregation (trimmed_mean | median): fraction trimmed
+    /// from each end per coordinate. Ignored by linear strategies.
+    pub trim_fraction: f32,
+    /// Robust pre-filter L2 clip bound; 0 selects the adaptive
+    /// median-norm bound. Ignored by linear strategies.
+    pub clip_norm: f32,
 
     /// Secure aggregation on/off + virtual-group size (§3.1.2).
     pub secure_agg: bool,
@@ -231,6 +350,8 @@ impl Default for TaskConfig {
             server_lr: 1.0,
             client_lr: 5e-4,
             prox_mu: 0.0,
+            trim_fraction: 0.2,
+            clip_norm: 0.0,
             secure_agg: false,
             vg_size: 16,
             quant_range: 4.0,
@@ -290,8 +411,16 @@ impl TaskConfig {
         if !(self.server_lr.is_finite() && self.client_lr.is_finite()) {
             return Err(Error::Config("non-finite learning rate".into()));
         }
-        crate::aggregation::by_name(&self.aggregator, self.prox_mu)?;
+        crate::aggregation::for_task(&self.aggregator, self.prox_mu, self.robust_params())?;
         Ok(())
+    }
+
+    /// The robust-aggregation knobs as the aggregation layer's params.
+    pub fn robust_params(&self) -> crate::aggregation::RobustParams {
+        crate::aggregation::RobustParams {
+            trim_fraction: self.trim_fraction,
+            clip_norm: self.clip_norm,
+        }
     }
 
     /// Parse from JSON (CLI `create-task --config file.json`).
@@ -332,6 +461,8 @@ impl TaskConfig {
             server_lr: j.opt_f64("server_lr", d.server_lr as f64) as f32,
             client_lr: j.opt_f64("client_lr", d.client_lr as f64) as f32,
             prox_mu: j.opt_f64("prox_mu", 0.0) as f32,
+            trim_fraction: j.opt_f64("trim_fraction", d.trim_fraction as f64) as f32,
+            clip_norm: j.opt_f64("clip_norm", d.clip_norm as f64) as f32,
             secure_agg: j.opt_bool("secure_agg", d.secure_agg),
             vg_size: j.opt_usize("vg_size", d.vg_size),
             quant_range: j.opt_f64("quant_range", d.quant_range as f64) as f32,
@@ -384,6 +515,8 @@ impl TaskConfig {
             .set("server_lr", self.server_lr as f64)
             .set("client_lr", self.client_lr as f64)
             .set("prox_mu", self.prox_mu as f64)
+            .set("trim_fraction", self.trim_fraction as f64)
+            .set("clip_norm", self.clip_norm as f64)
             .set("secure_agg", self.secure_agg)
             .set("vg_size", self.vg_size)
             .set("quant_range", self.quant_range as f64)
@@ -554,6 +687,58 @@ mod tests {
         let mut c = TaskConfig::default();
         c.cohort = CohortSpec::OverProvision { spawn_factor: 0.5 };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn robust_knobs_roundtrip_and_validate() {
+        let mut cfg = TaskConfig::default();
+        cfg.aggregator = "trimmed_mean".into();
+        cfg.trim_fraction = 0.3;
+        cfg.clip_norm = 12.5;
+        let back = TaskConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.aggregator, "trimmed_mean");
+        assert!((back.trim_fraction - 0.3).abs() < 1e-6);
+        assert!((back.clip_norm - 12.5).abs() < 1e-6);
+
+        // validate() threads the knobs into the aggregation registry.
+        let mut bad = TaskConfig::default();
+        bad.aggregator = "median".into();
+        bad.clip_norm = -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = TaskConfig::default();
+        bad.aggregator = "trimmed_mean".into();
+        bad.trim_fraction = 0.5;
+        assert!(bad.validate().is_err());
+        // The knobs are inert for linear strategies.
+        let mut ok = TaskConfig::default();
+        ok.trim_fraction = 0.9;
+        ok.validate().unwrap();
+    }
+
+    #[test]
+    fn policy_config_roundtrip_and_validate() {
+        assert!(!PolicyConfig::default().enabled);
+        PolicyConfig::default().validate().unwrap();
+        let mut cfg = PolicyConfig::enabled();
+        cfg.bucket_capacity = 4.0;
+        cfg.tenant_quota = 100;
+        cfg.min_reputation = 0.5;
+        let back = PolicyConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        let parsed =
+            PolicyConfig::from_json_str(r#"{"enabled":true,"refill_per_sec":2.5}"#).unwrap();
+        assert!(parsed.enabled);
+        assert!((parsed.refill_per_sec - 2.5).abs() < 1e-12);
+
+        let mut bad = PolicyConfig::default();
+        bad.bucket_capacity = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = PolicyConfig::default();
+        bad.quota_window_ms = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = PolicyConfig::default();
+        bad.reputation_penalty = 1.5;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

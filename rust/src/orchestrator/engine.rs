@@ -197,7 +197,8 @@ impl RoundEngine {
         pacing: Box<dyn PacingPolicy>,
     ) -> Result<RoundEngine> {
         config.validate()?;
-        let strategy = aggregation::by_name(&config.aggregator, config.prox_mu)?;
+        let strategy =
+            aggregation::for_task(&config.aggregator, config.prox_mu, config.robust_params())?;
         let master = MasterAggregator::new(strategy, config.dp, config.server_lr);
         let accountant = if config.dp.mode != DpMode::Off {
             Some(RdpAccountant::new())
@@ -674,6 +675,12 @@ impl RoundEngine {
         if let FlMode::Async { .. } = self.config.mode {
             return refuse("async tasks ingest directly at the root");
         }
+        if aggregation::is_robust(&self.config.aggregator) {
+            // A trimmed mean/median is not a function of per-leaf sums;
+            // a leaf fold could neither export its buffer nor be
+            // absorbed faithfully. Robust reduction stays at the root.
+            return refuse("robust strategies reduce at the root only");
+        }
         match &self.phase {
             Phase::Training {
                 secagg: None,
@@ -724,6 +731,11 @@ impl RoundEngine {
         }
         if let FlMode::Async { .. } = self.config.mode {
             return Ok((false, 0, "async tasks ingest directly at the root".into()));
+        }
+        if aggregation::is_robust(&self.config.aggregator) {
+            // Mirrors `leaf_slice`: even a well-formed partial would
+            // bypass the trim/median, so the root refuses it outright.
+            return Ok((false, 0, "robust strategies reduce at the root only".into()));
         }
         if members.is_empty() || part.count != members.len() {
             return Ok((
@@ -1392,6 +1404,87 @@ mod tests {
                 "round_committed",
             ]
         );
+    }
+
+    #[test]
+    fn robust_round_commits_with_bounded_attacker() {
+        // 4 honest clients push +0.1; one magnitude-bomber uploads 1e6.
+        // Under trimmed_mean the bomb is trimmed and the model steps to
+        // the honest value; under fedavg it would explode to ~2e5.
+        let mut cfg = small_cfg(5, 1);
+        cfg.aggregator = "trimmed_mean".into();
+        cfg.trim_fraction = 0.25;
+        let (mut e, _bus) = engine(cfg, 4);
+        for c in 1..=5u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+        }
+        for c in 1..=5u64 {
+            let _ = e.fetch(c, &NullDirectory, 0).unwrap();
+        }
+        for c in 1..=4u64 {
+            let (ok, why) = e
+                .accept_plain(c, 0, 0, vec![0.1; 4], 1.0, 0.5, &NoEval, 10)
+                .unwrap();
+            assert!(ok, "{why}");
+        }
+        let (ok, why) = e
+            .accept_plain(5, 0, 0, vec![1e6; 4], 1.0, 0.5, &NoEval, 10)
+            .unwrap();
+        assert!(ok, "{why}");
+        assert_eq!(e.state, TaskState::Completed);
+        assert!(
+            (e.global.params[0] - 0.1).abs() < 1e-3,
+            "robust commit leaked the bomb: {}",
+            e.global.params[0]
+        );
+    }
+
+    #[test]
+    fn robust_round_zero_scores_nonfinite_upload() {
+        let mut cfg = small_cfg(2, 1);
+        cfg.aggregator = "median".into();
+        let (mut e, _bus) = engine(cfg, 2);
+        for c in 1..=2u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+            let _ = e.fetch(c, &NullDirectory, 0).unwrap();
+        }
+        let (ok, why) = e
+            .accept_plain(1, 0, 0, vec![f32::NAN, 1.0], 1.0, 0.5, &NoEval, 5)
+            .unwrap();
+        assert!(!ok);
+        assert!(why.contains("non-finite"), "{why}");
+        // The rejected client is free to retry with a sane delta.
+        let (ok, why) = e
+            .accept_plain(1, 0, 0, vec![0.5, 0.5], 1.0, 0.5, &NoEval, 6)
+            .unwrap();
+        assert!(ok, "{why}");
+    }
+
+    #[test]
+    fn robust_task_refuses_leaf_path() {
+        let mut cfg = small_cfg(4, 1);
+        cfg.aggregator = "trimmed_mean".into();
+        let (mut e, _bus) = engine(cfg, 2);
+        for c in 1..=4u64 {
+            e.join(c, [0u8; 32], 0).unwrap();
+            let _ = e.fetch(c, &NullDirectory, 0).unwrap();
+        }
+        assert_eq!(e.phase_name(), "training");
+        let a = e.leaf_slice(0, 2);
+        assert!(!a.accepted);
+        assert!(a.reason.contains("root only"), "{}", a.reason);
+        let part = PartialFold {
+            sum: vec![1.0; 2],
+            total_weight: 2.0,
+            count: 2,
+            min_loss: f64::INFINITY,
+        };
+        let (ok, folded, reason) = e
+            .accept_partial(77, 0, 0, &[1, 2], &part, 0.4, &NoEval, 10)
+            .unwrap();
+        assert!(!ok);
+        assert_eq!(folded, 0);
+        assert!(reason.contains("root only"), "{reason}");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! Aggregator, and the Management Service — a thin multi-tenant
 //! registry over the per-task round engines in [`crate::orchestrator`].
 //! `router.rs` exposes them as four FLaaS-style [`router::Service`]s
-//! behind an ordered interceptor chain (auth → metrics → backpressure);
+//! behind an ordered interceptor chain (auth → policy → metrics →
+//! backpressure, with `policy.rs` holding the admission engine);
 //! `server.rs` assembles the platform and keeps `handle()` as a thin
 //! shim over the router, shared by the in-process simulator and the
 //! TCP/inproc wire transports.
@@ -11,11 +12,13 @@
 pub mod auth;
 pub mod management;
 pub mod master_aggregator;
+pub mod policy;
 pub mod router;
 pub mod secure_aggregator;
 pub mod selection;
 pub mod server;
 pub mod sessions;
 
+pub use policy::PolicyEngine;
 pub use server::FloridaServer;
 pub use sessions::{LiveDirectory, SessionRegistry};

@@ -1,0 +1,363 @@
+//! Admission policy engine: the gate every consequential request
+//! passes before any service (and therefore any `RoundEngine`) sees it.
+//!
+//! Three coupled mechanisms, all driven by the router clock
+//! (`RequestCtx::now_ms`, so manual-clock tests are deterministic):
+//!
+//! * **Token-bucket rate limits** keyed by client principal: each
+//!   request spends one token; buckets refill at `refill_per_sec` up to
+//!   `bucket_capacity`. A drained bucket sheds the request before it
+//!   reaches the service.
+//! * **Per-tenant quotas**: task-discovery traffic (`PollTask`) is
+//!   counted per app name in fixed windows; a tenant over
+//!   `tenant_quota` is refused for the rest of the window.
+//! * **Reputation with decay**: every eviction and every engine-level
+//!   ingest rejection (`Ack { ok: false }` on the aggregation surface —
+//!   NaN deltas, wrong dims, duplicate spam) costs
+//!   `reputation_penalty`; reputation recovers toward 1.0 at
+//!   `reputation_recovery_per_sec`. Clients below `min_reputation` are
+//!   refused outright until they earn their way back.
+//!
+//! The engine is shared between [`PolicyInterceptor`] (in the router
+//! chain, after auth so `ctx.principal` is set) and
+//! [`crate::services::FloridaServer::tick`] (which reports lease
+//! evictions). Offenses are recorded even while `enabled` is false, so
+//! a deployment can observe reputations before turning enforcement on.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::config::PolicyConfig;
+use crate::error::{Error, Result};
+use crate::proto::{rpc, Msg};
+
+use super::router::{Interceptor, RequestCtx, ServiceKind};
+use super::FloridaServer;
+
+/// Per-client admission state: the token bucket plus the reputation
+/// ledger, both lazily advanced to the current clock on access.
+#[derive(Clone, Copy, Debug)]
+struct ClientState {
+    tokens: f64,
+    reputation: f64,
+    advanced_ms: u64,
+}
+
+impl ClientState {
+    fn new(cfg: &PolicyConfig, now_ms: u64) -> ClientState {
+        ClientState {
+            tokens: cfg.bucket_capacity,
+            reputation: 1.0,
+            advanced_ms: now_ms,
+        }
+    }
+
+    /// Refill tokens and recover reputation for the elapsed time.
+    fn advance(&mut self, cfg: &PolicyConfig, now_ms: u64) {
+        let dt = now_ms.saturating_sub(self.advanced_ms) as f64 / 1000.0;
+        self.tokens = (self.tokens + dt * cfg.refill_per_sec).min(cfg.bucket_capacity);
+        self.reputation =
+            (self.reputation + dt * cfg.reputation_recovery_per_sec).min(1.0);
+        self.advanced_ms = now_ms;
+    }
+}
+
+/// One tenant's fixed quota window.
+#[derive(Clone, Copy, Debug)]
+struct TenantWindow {
+    start_ms: u64,
+    count: u64,
+}
+
+struct Inner {
+    cfg: PolicyConfig,
+    clients: HashMap<u64, ClientState>,
+    tenants: HashMap<String, TenantWindow>,
+    /// Requests refused by policy since boot (observability).
+    rejected: u64,
+}
+
+/// The shared policy engine. One per server, threaded into the router
+/// chain as a [`PolicyInterceptor`].
+pub struct PolicyEngine {
+    inner: Mutex<Inner>,
+}
+
+impl PolicyEngine {
+    pub fn new(cfg: PolicyConfig) -> PolicyEngine {
+        PolicyEngine {
+            inner: Mutex::new(Inner {
+                cfg,
+                clients: HashMap::new(),
+                tenants: HashMap::new(),
+                rejected: 0,
+            }),
+        }
+    }
+
+    /// Poison-aware lock (same contract as the management registry): a
+    /// panicking request thread must not turn every later admission
+    /// decision into a panic. `Err` fails closed on the admit path.
+    fn locked(&self) -> Result<MutexGuard<'_, Inner>> {
+        self.inner
+            .lock()
+            .map_err(|_| Error::Server("policy engine poisoned".into()))
+    }
+
+    /// Swap the active configuration (validated first). Existing
+    /// buckets/reputations carry over; capacities clamp on next use.
+    pub fn set_config(&self, cfg: PolicyConfig) -> Result<()> {
+        cfg.validate()?;
+        self.locked()?.cfg = cfg;
+        Ok(())
+    }
+
+    pub fn config(&self) -> PolicyConfig {
+        self.locked().map(|g| g.cfg).unwrap_or_default()
+    }
+
+    /// Requests refused by policy since boot.
+    pub fn rejections(&self) -> u64 {
+        self.locked().map(|g| g.rejected).unwrap_or(0)
+    }
+
+    /// A client's current reputation, if the engine has seen it.
+    pub fn reputation_of(&self, client_id: u64) -> Option<f64> {
+        self.locked().ok()?.clients.get(&client_id).map(|s| s.reputation)
+    }
+
+    /// The admission decision for one routed request. `Err` becomes the
+    /// `ErrorReply` shed before any service runs.
+    pub fn admit(&self, msg: &Msg, ctx: &RequestCtx) -> Result<()> {
+        let mut g = self.locked()?;
+        if !g.cfg.enabled {
+            return Ok(());
+        }
+        let cfg = g.cfg;
+        let now_ms = ctx.now_ms;
+        // Reputation gate + token bucket, for requests that act as a
+        // client principal (auth ran first, so `ctx.principal` is the
+        // verified identity; pre-registration traffic has none).
+        if let Some(id) = ctx.principal.or_else(|| rpc::client_id_of(msg)) {
+            let refusal = {
+                let st = g
+                    .clients
+                    .entry(id)
+                    .or_insert_with(|| ClientState::new(&cfg, now_ms));
+                st.advance(&cfg, now_ms);
+                if st.reputation < cfg.min_reputation {
+                    Some(format!(
+                        "policy: client {id} reputation {:.2} below floor {:.2}",
+                        st.reputation, cfg.min_reputation
+                    ))
+                } else if st.tokens < 1.0 {
+                    Some(format!("policy: client {id} over rate limit"))
+                } else {
+                    st.tokens -= 1.0;
+                    None
+                }
+            };
+            if let Some(reason) = refusal {
+                g.rejected += 1;
+                return Err(Error::Server(reason));
+            }
+        }
+        // Per-tenant quota on task discovery.
+        if cfg.tenant_quota > 0 {
+            if let Msg::PollTask { app_name, .. } = msg {
+                let over = {
+                    let w = g.tenants.entry(app_name.clone()).or_insert(TenantWindow {
+                        start_ms: now_ms,
+                        count: 0,
+                    });
+                    if now_ms.saturating_sub(w.start_ms) >= cfg.quota_window_ms {
+                        w.start_ms = now_ms;
+                        w.count = 0;
+                    }
+                    w.count += 1;
+                    w.count > cfg.tenant_quota
+                };
+                if over {
+                    g.rejected += 1;
+                    return Err(Error::Server(format!(
+                        "policy: tenant {app_name:?} over quota ({} per {} ms)",
+                        cfg.tenant_quota, cfg.quota_window_ms
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Charge one offense (eviction, rejected ingest) against a client.
+    pub fn record_offense(&self, client_id: u64, now_ms: u64, what: &str) {
+        let Ok(mut g) = self.locked() else {
+            return;
+        };
+        let cfg = g.cfg;
+        let st = g
+            .clients
+            .entry(client_id)
+            .or_insert_with(|| ClientState::new(&cfg, now_ms));
+        st.advance(&cfg, now_ms);
+        st.reputation = (st.reputation - cfg.reputation_penalty).max(0.0);
+        log::debug!(
+            "policy: client {client_id} penalized for {what} (reputation {:.2})",
+            st.reputation
+        );
+    }
+
+    /// Session-sweep feedback: evicted clients lose reputation, so a
+    /// device that repeatedly joins and goes dark stops being drafted
+    /// into cohorts once its score sinks below the floor.
+    pub fn record_evictions(&self, evicted: &[u64], now_ms: u64) {
+        for &id in evicted {
+            self.record_offense(id, now_ms, "lease eviction");
+        }
+    }
+}
+
+/// The router-chain face of the policy engine. Sits after
+/// [`super::router::AuthInterceptor`] (it needs the verified principal)
+/// and ahead of metrics/backpressure, so refused traffic never counts
+/// as served and never occupies an in-flight slot.
+pub struct PolicyInterceptor {
+    engine: Arc<PolicyEngine>,
+}
+
+impl PolicyInterceptor {
+    pub fn new(engine: Arc<PolicyEngine>) -> PolicyInterceptor {
+        PolicyInterceptor { engine }
+    }
+}
+
+impl Interceptor for PolicyInterceptor {
+    fn name(&self) -> &'static str {
+        "policy"
+    }
+
+    fn before(&self, _: &FloridaServer, ctx: &mut RequestCtx, msg: &Msg) -> Result<()> {
+        self.engine.admit(msg, ctx)
+    }
+
+    fn after(&self, _: &FloridaServer, ctx: &RequestCtx, reply: &Msg, _: Duration) {
+        // Engine-level ingest rejections (NaN deltas, wrong dims,
+        // duplicate spam) feed the reputation ledger. Only structured
+        // negative Acks count: router-level `ErrorReply`s (backpressure
+        // sheds, unroutable frames) are not the client's model update.
+        if ctx.service == ServiceKind::AggregationIngest
+            && matches!(reply, Msg::Ack { ok: false, .. })
+        {
+            if let Some(id) = ctx.principal {
+                self.engine.record_offense(id, ctx.now_ms, ctx.method);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(now_ms: u64, principal: Option<u64>) -> RequestCtx {
+        RequestCtx {
+            now_ms,
+            service: ServiceKind::Task,
+            method: "fetch_round",
+            principal,
+        }
+    }
+
+    fn heartbeat(id: u64) -> Msg {
+        Msg::Heartbeat { client_id: id }
+    }
+
+    fn strict() -> PolicyConfig {
+        PolicyConfig {
+            enabled: true,
+            bucket_capacity: 2.0,
+            refill_per_sec: 1.0,
+            tenant_quota: 3,
+            quota_window_ms: 1_000,
+            min_reputation: 0.5,
+            reputation_penalty: 0.3,
+            reputation_recovery_per_sec: 0.1,
+        }
+    }
+
+    #[test]
+    fn disabled_engine_admits_everything() {
+        let e = PolicyEngine::new(PolicyConfig::default());
+        for _ in 0..10_000 {
+            e.admit(&heartbeat(7), &ctx(0, Some(7))).unwrap();
+        }
+        assert_eq!(e.rejections(), 0);
+    }
+
+    #[test]
+    fn token_bucket_drains_and_refills() {
+        let e = PolicyEngine::new(strict());
+        e.admit(&heartbeat(1), &ctx(0, Some(1))).unwrap();
+        e.admit(&heartbeat(1), &ctx(0, Some(1))).unwrap();
+        let err = e.admit(&heartbeat(1), &ctx(0, Some(1))).unwrap_err();
+        assert!(err.to_string().contains("rate limit"), "{err}");
+        // Another client has its own bucket.
+        e.admit(&heartbeat(2), &ctx(0, Some(2))).unwrap();
+        // One second refills one token.
+        e.admit(&heartbeat(1), &ctx(1_000, Some(1))).unwrap();
+        assert_eq!(e.rejections(), 1);
+    }
+
+    #[test]
+    fn reputation_floor_refuses_then_recovers() {
+        let e = PolicyEngine::new(strict());
+        e.record_offense(5, 0, "test");
+        e.record_offense(5, 0, "test");
+        assert!(e.reputation_of(5).unwrap() < 0.5);
+        let err = e.admit(&heartbeat(5), &ctx(0, Some(5))).unwrap_err();
+        assert!(err.to_string().contains("reputation"), "{err}");
+        // 0.1/s recovery: ~2 s back over the 0.5 floor.
+        e.admit(&heartbeat(5), &ctx(2_100, Some(5))).unwrap();
+    }
+
+    #[test]
+    fn eviction_feedback_lowers_reputation() {
+        let e = PolicyEngine::new(strict());
+        e.record_evictions(&[8, 9], 0);
+        assert!((e.reputation_of(8).unwrap() - 0.7).abs() < 1e-9);
+        assert!((e.reputation_of(9).unwrap() - 0.7).abs() < 1e-9);
+        assert_eq!(e.reputation_of(10), None);
+    }
+
+    #[test]
+    fn tenant_quota_windows_roll() {
+        let e = PolicyEngine::new(strict());
+        let poll = |id: u64, app: &str| Msg::PollTask {
+            client_id: id,
+            app_name: app.into(),
+            workflow_name: "w".into(),
+        };
+        // Distinct clients so individual buckets stay warm: only the
+        // shared tenant window fills.
+        for id in 0..3 {
+            e.admit(&poll(id, "mail"), &ctx(0, None)).unwrap();
+        }
+        let err = e.admit(&poll(3, "mail"), &ctx(0, None)).unwrap_err();
+        assert!(err.to_string().contains("quota"), "{err}");
+        // Other tenants are unaffected; the window rolls over.
+        e.admit(&poll(4, "keyboard"), &ctx(0, None)).unwrap();
+        e.admit(&poll(5, "mail"), &ctx(1_000, None)).unwrap();
+    }
+
+    #[test]
+    fn offenses_recorded_while_disabled_then_enforced() {
+        let e = PolicyEngine::new(PolicyConfig::default());
+        e.record_offense(3, 0, "observe");
+        e.record_offense(3, 0, "observe");
+        e.record_offense(3, 0, "observe");
+        e.admit(&heartbeat(3), &ctx(0, Some(3))).unwrap();
+        e.set_config(strict()).unwrap();
+        assert!(e.admit(&heartbeat(3), &ctx(0, Some(3))).is_err());
+    }
+}

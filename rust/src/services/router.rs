@@ -7,9 +7,13 @@
 //!
 //! 1. [`AuthInterceptor`] — rejects requests that claim an unregistered
 //!    client principal before any service sees them.
-//! 2. [`MetricsInterceptor`] — per-RPC call/error/latency counters into
+//! 2. [`super::policy::PolicyInterceptor`] — admission policy: token
+//!    buckets, tenant quotas, and reputation floors refuse abusive
+//!    traffic before it is metered or served (default-off; see
+//!    [`crate::config::PolicyConfig`]).
+//! 3. [`MetricsInterceptor`] — per-RPC call/error/latency counters into
 //!    [`crate::metrics::RpcMetrics`].
-//! 3. [`BackpressureInterceptor`] — bounds in-flight requests per
+//! 4. [`BackpressureInterceptor`] — bounds in-flight requests per
 //!    service so one hot surface (e.g. aggregation ingest at scale)
 //!    cannot starve the others.
 //!
@@ -567,8 +571,14 @@ pub struct Router {
 }
 
 impl Router {
-    /// The production chain: auth → metrics → backpressure.
-    pub fn standard(metrics: Arc<RpcMetrics>, inflight_limit: usize) -> Router {
+    /// The production chain: auth → policy → metrics → backpressure.
+    /// Policy runs after auth (it keys on the verified principal) and
+    /// before metrics, so refused traffic never counts as served.
+    pub fn standard(
+        metrics: Arc<RpcMetrics>,
+        inflight_limit: usize,
+        policy: Arc<super::policy::PolicyEngine>,
+    ) -> Router {
         Router {
             services: [
                 Box::new(RegistrationService),
@@ -578,6 +588,7 @@ impl Router {
             ],
             interceptors: vec![
                 Box::new(AuthInterceptor),
+                Box::new(super::policy::PolicyInterceptor::new(policy)),
                 Box::new(MetricsInterceptor::new(metrics)),
                 Box::new(BackpressureInterceptor::new(inflight_limit)),
             ],

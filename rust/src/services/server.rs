@@ -3,7 +3,7 @@
 //!
 //! All request handling lives in the typed router
 //! ([`crate::services::router`]): four services dispatched through the
-//! auth → metrics → backpressure interceptor chain. `handle()` is a
+//! auth → policy → metrics → backpressure interceptor chain. `handle()` is a
 //! thin compatibility shim over [`Router::dispatch`] kept for the
 //! zero-copy in-process simulator path; the wire path (`serve()` reads
 //! frames off a [`crate::transport::Listener`], auto-detecting binary
@@ -14,7 +14,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::{SessionConfig, StorageConfig, TaskConfig};
+use crate::config::{PolicyConfig, SessionConfig, StorageConfig, TaskConfig};
 use crate::error::Result;
 use crate::metrics::RpcMetrics;
 use crate::model::ModelSnapshot;
@@ -22,6 +22,7 @@ use crate::orchestrator::{EventStream, TaskBuilder, TaskHandle};
 use crate::proto::{decode_frame, encode_frame, Msg};
 use crate::services::auth::AuthService;
 use crate::services::management::{Evaluator, ManagementService, NoEval};
+use crate::services::policy::PolicyEngine;
 use crate::services::router::Router;
 use crate::services::selection::SelectionService;
 use crate::services::sessions::{LiveDirectory, SessionRegistry};
@@ -55,6 +56,9 @@ pub struct FloridaServer {
     pub management: ManagementService,
     /// Per-RPC counters fed by the router's `MetricsInterceptor`.
     pub rpc_metrics: Arc<RpcMetrics>,
+    /// Admission policy: rate limits, tenant quotas, reputation.
+    /// Default-disabled; flip on with `policy.set_config(..)`.
+    pub policy: Arc<PolicyEngine>,
     router: Router,
     clock: Clock,
     stopping: AtomicBool,
@@ -68,13 +72,19 @@ impl FloridaServer {
         clock: Clock,
     ) -> FloridaServer {
         let rpc_metrics = Arc::new(RpcMetrics::default());
+        let policy = Arc::new(PolicyEngine::new(PolicyConfig::default()));
         FloridaServer {
-            router: Router::standard(Arc::clone(&rpc_metrics), DEFAULT_INFLIGHT_LIMIT),
+            router: Router::standard(
+                Arc::clone(&rpc_metrics),
+                DEFAULT_INFLIGHT_LIMIT,
+                Arc::clone(&policy),
+            ),
             auth,
             selection,
             sessions: SessionRegistry::new(SessionConfig::default().lease_ms),
             management,
             rpc_metrics,
+            policy,
             clock,
             stopping: AtomicBool::new(false),
         }
@@ -182,6 +192,7 @@ impl FloridaServer {
         if !evicted.is_empty() {
             log::debug!("session sweep evicted {} client(s)", evicted.len());
             self.management.evict_clients(&evicted, now_ms);
+            self.policy.record_evictions(&evicted, now_ms);
         }
         self.management.tick(&self.directory(), now_ms);
     }

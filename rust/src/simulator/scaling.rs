@@ -591,6 +591,318 @@ pub fn run_tree_scale(n: usize, rounds: u64, leaves: u32, seed: u64) -> Result<T
     })
 }
 
+/// One cell of the adversarial sweep: one strategy at one attacker
+/// fraction, scored by distance-to-optimum after the final round.
+#[derive(Clone, Debug)]
+pub struct ByzantinePoint {
+    pub strategy: String,
+    pub f: f64,
+    pub n_byzantine: usize,
+    /// Mean squared distance of the final global model from the known
+    /// optimum (the scenario's ground truth), so "accuracy vs f" is a
+    /// deterministic number rather than a stochastic eval.
+    pub final_loss: f64,
+}
+
+/// Outcome of the adversarial-fleet scenario: the same seeded fleet
+/// swept over attacker fractions with and without robust aggregation,
+/// plus the hardened-admission sub-phase proving the policy engine
+/// refuses a misbehaving client before any service sees it.
+#[derive(Clone, Debug)]
+pub struct ByzantineReport {
+    pub n_clients: usize,
+    pub rounds: u64,
+    pub points: Vec<ByzantinePoint>,
+    /// Requests the admission policy refused in the hardened sub-phase.
+    pub policy_rejected: u64,
+    /// The NaN-spamming attacker's reputation after its uploads were
+    /// zero-scored (starts at 1.0, sinks below the admission floor).
+    pub attacker_reputation: f64,
+    pub wall_ms: u64,
+}
+
+impl ByzantineReport {
+    pub fn loss_of(&self, strategy: &str, f: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.strategy == strategy && (p.f - f).abs() < 1e-9)
+            .map(|p| p.final_loss)
+    }
+
+    /// The acceptance gate: at every swept fraction ≤ `f_max` the robust
+    /// strategies hold final loss within 10% of their own clean (f = 0)
+    /// baseline, while plain fedavg measurably degrades at `f_max`.
+    pub fn gate(&self, f_max: f64) -> Result<()> {
+        let base = |strategy: &str| {
+            self.loss_of(strategy, 0.0)
+                .ok_or_else(|| Error::Task(format!("missing f=0 baseline for {strategy}")))
+        };
+        for strategy in ["trimmed_mean", "median"] {
+            let clean = base(strategy)?;
+            for p in self.points.iter().filter(|p| {
+                p.strategy == strategy && p.f > 0.0 && p.f <= f_max + 1e-9
+            }) {
+                if p.final_loss > clean * 1.10 + 1e-6 {
+                    return Err(Error::Task(format!(
+                        "{strategy} degraded at f={}: loss {:.3e} vs clean {:.3e}",
+                        p.f, p.final_loss, clean
+                    )));
+                }
+            }
+        }
+        if f_max > 0.0 {
+            let clean = base("fedavg")?;
+            let hit = self.loss_of("fedavg", f_max).ok_or_else(|| {
+                Error::Task(format!("missing fedavg point at f={f_max}"))
+            })?;
+            if hit <= 10.0 * (clean + 1e-9) {
+                return Err(Error::Task(format!(
+                    "fedavg unexpectedly robust at f={f_max}: loss {hit:.3e} vs clean {clean:.3e}"
+                )));
+            }
+        }
+        if self.policy_rejected == 0 {
+            return Err(Error::Task(
+                "admission policy refused nothing in the hardened sub-phase".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Drive one strategy × fraction cell: `n` clients optimize toward an
+/// all-ones target; `round(f·n)` of them are Byzantine, cycling through
+/// magnitude-bomb (honest × 1e4), sign-flip (−honest), and label-flip
+/// (descend toward −target) attacks. Driven synchronously through the
+/// management API on a manual clock, so every cell is deterministic.
+fn run_byzantine_cell(
+    strategy: &str,
+    f: f64,
+    n: usize,
+    rounds: u64,
+    seed: u64,
+) -> Result<ByzantinePoint> {
+    const DIM: usize = 8;
+    let n_byz = (f * n as f64).round() as usize;
+    let server = FloridaServer::for_testing(false, seed);
+    let mut cfg = crate::config::TaskConfig::default();
+    cfg.task_name = format!("byzantine-{strategy}-{n_byz}");
+    cfg.aggregator = strategy.into();
+    cfg.trim_fraction = 0.25;
+    cfg.clients_per_round = n;
+    cfg.total_rounds = rounds;
+    cfg.round_timeout_ms = 120_000;
+    let task = TaskBuilder::from_config(cfg)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; DIM]))?
+        .id();
+    let opt = vec![1.0f32; DIM];
+    for _ in 0..rounds {
+        let now = server.now_ms();
+        for c in 1..=n as u64 {
+            server.management.join(c, task, [0u8; 32], now)?;
+        }
+        for c in 1..=n as u64 {
+            let _ = server.management.fetch_round(c, task, &server.selection, now)?;
+        }
+        let (round, version, params) = server
+            .management
+            .with_task(task, |t| Ok((t.round, t.global.version, t.global.params.clone())))?;
+        for c in 1..=n as u64 {
+            // Honest clients take half a step toward the optimum.
+            let honest: Vec<f32> = opt
+                .iter()
+                .zip(&params)
+                .map(|(o, p)| (o - p) * 0.5)
+                .collect();
+            let idx = c as usize - 1;
+            let delta: Vec<f32> = if idx < n_byz {
+                match idx % 3 {
+                    // Magnitude bomb: right direction, absurd scale.
+                    0 => honest.iter().map(|d| d * 1e4).collect(),
+                    // Sign flip: undo the honest fleet's work.
+                    1 => honest.iter().map(|d| -d).collect(),
+                    // Label flip: descend toward the opposite target.
+                    _ => opt.iter().zip(&params).map(|(o, p)| (-o - p) * 0.5).collect(),
+                }
+            } else {
+                honest
+            };
+            let (ok, why) = server
+                .management
+                .accept_plain(c, task, round, version, delta, 1.0, 0.1, now + 1)?;
+            if !ok {
+                return Err(Error::Task(format!(
+                    "{strategy} f={f}: client {c} upload refused: {why}"
+                )));
+            }
+        }
+    }
+    let params = server
+        .management
+        .with_task(task, |t| Ok(t.global.params.clone()))?;
+    let loss = params
+        .iter()
+        .zip(&opt)
+        .map(|(p, o)| ((p - o) as f64).powi(2))
+        .sum::<f64>()
+        / DIM as f64;
+    Ok(ByzantinePoint {
+        strategy: strategy.into(),
+        f,
+        n_byzantine: n_byz,
+        // A diverged fedavg run can push f32 params to infinity; report
+        // it as a huge finite loss so gate comparisons stay ordered.
+        final_loss: if loss.is_finite() { loss } else { f64::MAX },
+    })
+}
+
+/// Hardened-admission sub-phase: the same NaN-spamming adversary, but
+/// the platform enforces [`crate::config::PolicyConfig`]. Each rejected
+/// upload (`Ack { ok: false }` from the zero-scoring robust fold) feeds
+/// the reputation ledger; once the attacker sinks below the floor, the
+/// router refuses it before any service runs — while the honest cohort
+/// member keeps uploading normally. Returns (policy rejections,
+/// attacker reputation).
+fn run_policy_demo(seed: u64) -> Result<(u64, f64)> {
+    use crate::config::PolicyConfig;
+    use crate::crypto::attest::IntegrityTier;
+    use crate::proto::Msg;
+    const DIM: usize = 4;
+    let server = FloridaServer::for_testing(false, seed);
+    server.policy.set_config(PolicyConfig {
+        enabled: true,
+        bucket_capacity: 64.0,
+        refill_per_sec: 1.0,
+        tenant_quota: 0,
+        quota_window_ms: 1_000,
+        min_reputation: 0.5,
+        reputation_penalty: 0.3,
+        reputation_recovery_per_sec: 0.01,
+    })?;
+    let task = TaskBuilder::new("byzantine-policy")
+        .clients_per_round(2)
+        .rounds(1)
+        .aggregator("trimmed_mean")
+        .round_timeout_ms(120_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; DIM]))?
+        .id();
+    let register = |dev: &str, nonce: u64| -> Result<u64> {
+        let verdict =
+            server
+                .auth
+                .authority()
+                .issue(dev, IntegrityTier::Device, nonce, u64::MAX / 2);
+        match server.handle(Msg::Register {
+            device_id: dev.into(),
+            verdict,
+            caps: Default::default(),
+        }) {
+            Msg::RegisterAck {
+                accepted: true,
+                client_id,
+                ..
+            } => Ok(client_id),
+            other => Err(Error::Task(format!("register {dev}: {other:?}"))),
+        }
+    };
+    let honest = register("policy-honest", 1)?;
+    let attacker = register("policy-attacker", 2)?;
+    for c in [honest, attacker] {
+        match server.handle(Msg::JoinRound {
+            client_id: c,
+            task_id: task,
+            dh_pubkey: [0; 32],
+        }) {
+            Msg::JoinAck { accepted: true, .. } => {}
+            other => return Err(Error::Task(format!("join {c}: {other:?}"))),
+        }
+        let _ = server.handle(Msg::FetchRound {
+            client_id: c,
+            task_id: task,
+        });
+    }
+    let upload = |c: u64, delta: Vec<f32>| -> Msg {
+        server.handle(Msg::UploadPlain {
+            client_id: c,
+            task_id: task,
+            round: 0,
+            base_version: 0,
+            delta,
+            weight: 1.0,
+            loss: 0.1,
+        })
+    };
+    // The attacker spams non-finite deltas. The robust fold zero-scores
+    // each (Ack { ok: false } → one reputation offense); after enough
+    // offenses the router refuses the request outright (ErrorReply
+    // naming the reputation floor) — the engine never sees it.
+    let mut engine_rejections = 0u64;
+    let mut policy_refusals = 0u64;
+    for _ in 0..6 {
+        match upload(attacker, vec![f32::NAN; DIM]) {
+            Msg::Ack { ok: false, .. } => engine_rejections += 1,
+            Msg::ErrorReply { message } if message.contains("reputation") => {
+                policy_refusals += 1
+            }
+            other => return Err(Error::Task(format!("attacker upload: {other:?}"))),
+        }
+    }
+    if engine_rejections == 0 || policy_refusals == 0 {
+        return Err(Error::Task(format!(
+            "policy demo saw {engine_rejections} engine rejections, \
+             {policy_refusals} policy refusals — expected both"
+        )));
+    }
+    // The honest cohort member is unaffected.
+    match upload(honest, vec![0.1; DIM]) {
+        Msg::Ack { ok: true, .. } => {}
+        other => return Err(Error::Task(format!("honest upload refused: {other:?}"))),
+    }
+    let reputation = server.policy.reputation_of(attacker).unwrap_or(1.0);
+    Ok((server.policy.rejections(), reputation))
+}
+
+/// Run the adversarial-fleet sweep: attacker fractions {0, 0.1, 0.2,
+/// 0.3} ∪ {f_max} across fedavg (undefended), trimmed-mean, and median,
+/// then the hardened-admission sub-phase. `f_max` is the fraction the
+/// CLI gate is asserted at; the honest majority requirement bounds it
+/// below 0.5.
+pub fn run_byzantine(n: usize, rounds: u64, f_max: f64, seed: u64) -> Result<ByzantineReport> {
+    if n < 6 {
+        return Err(Error::Config("byzantine sweep needs >= 6 clients".into()));
+    }
+    if rounds == 0 {
+        return Err(Error::Config("byzantine sweep needs >= 1 round".into()));
+    }
+    if !(0.0..0.5).contains(&f_max) {
+        return Err(Error::Config(format!(
+            "byzantine fraction {f_max} outside [0, 0.5) — robustness needs an honest majority"
+        )));
+    }
+    // florida-lint: allow(wall-clock-in-core): wall_ms run reporting, not round logic
+    let t0 = std::time::Instant::now();
+    let mut fractions = vec![0.0, 0.1, 0.2, 0.3];
+    if !fractions.iter().any(|&g| (g - f_max).abs() < 1e-9) {
+        fractions.push(f_max);
+        fractions.sort_by(f64::total_cmp);
+    }
+    let mut points = Vec::new();
+    for strategy in ["fedavg", "trimmed_mean", "median"] {
+        for &f in &fractions {
+            points.push(run_byzantine_cell(strategy, f, n, rounds, seed)?);
+        }
+    }
+    let (policy_rejected, attacker_reputation) = run_policy_demo(seed ^ 0xAD)?;
+    Ok(ByzantineReport {
+        n_clients: n,
+        rounds,
+        points,
+        policy_rejected,
+        attacker_reputation,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -660,6 +972,31 @@ mod tests {
         // 10 clients over 4 leaves: slices of 3/3/2/2.
         let r = run_tree_scale(10, 1, 4, 3).unwrap();
         assert!(r.bit_identical);
+    }
+
+    #[test]
+    fn byzantine_sweep_gates_robust_vs_fedavg() {
+        let r = run_byzantine(10, 3, 0.2, 21).unwrap();
+        r.gate(0.2).unwrap();
+        // Undefended fedavg diverges by orders of magnitude under the
+        // magnitude bomb; the robust strategies track their clean run.
+        let clean = r.loss_of("fedavg", 0.0).unwrap();
+        assert!(r.loss_of("fedavg", 0.2).unwrap() > 10.0 * clean);
+        let tm_clean = r.loss_of("trimmed_mean", 0.0).unwrap();
+        assert!(r.loss_of("trimmed_mean", 0.2).unwrap() <= tm_clean * 1.10 + 1e-6);
+        let md_clean = r.loss_of("median", 0.0).unwrap();
+        assert!(r.loss_of("median", 0.2).unwrap() <= md_clean * 1.10 + 1e-6);
+        // The hardened sub-phase shed traffic pre-engine and sank the
+        // attacker below the admission floor.
+        assert!(r.policy_rejected > 0);
+        assert!(r.attacker_reputation < 0.5);
+    }
+
+    #[test]
+    fn byzantine_validates_inputs() {
+        assert!(run_byzantine(4, 3, 0.2, 0).is_err(), "too few clients");
+        assert!(run_byzantine(10, 0, 0.2, 0).is_err(), "zero rounds");
+        assert!(run_byzantine(10, 3, 0.5, 0).is_err(), "no honest majority");
     }
 
     #[test]

@@ -808,3 +808,173 @@ fn prop_v1_frames_still_decode_and_negotiate_down_cleanly() {
         }
     });
 }
+
+#[test]
+fn prop_robust_center_equals_fedavg_on_clean_cohorts() {
+    use florida::aggregation::{by_name, for_task, RobustParams};
+    // The f = 0 invariant: with no Byzantine contributors the robust
+    // centers collapse onto the FedAvg mean. Two clean constructions —
+    // identical deltas (any weights) pin both strategies exactly, and
+    // trim_fraction 0 with clipping disabled makes the trimmed mean a
+    // plain weighted mean on arbitrary cohorts.
+    property("robust-clean-equals-fedavg", 96, |_, rng| {
+        let dim = rng.range(1, 24);
+        let n = rng.range(1, 10);
+        // Identical-delta cohort: every robust center must return the
+        // common delta, which is also the FedAvg mean.
+        let delta: Vec<f32> = (0..dim).map(|_| (rng.next_f32() - 0.5) * 4.0).collect();
+        let same: Vec<ClientUpdate> = (0..n)
+            .map(|i| ClientUpdate {
+                client_id: i as u64 + 1,
+                delta: delta.clone(),
+                weight: 0.1 + rng.next_f64() * 9.0,
+                loss: rng.next_f64(),
+                staleness: 0,
+            })
+            .collect();
+        let reference = FedAvg.aggregate(&same).unwrap();
+        for name in ["trimmed_mean", "median"] {
+            let got = by_name(name, 0.0).unwrap().aggregate(&same).unwrap();
+            for (j, (g, r)) in got.iter().zip(&reference).enumerate() {
+                assert!(
+                    (g - r).abs() <= 1e-5 * (1.0 + r.abs()),
+                    "{name}[{j}]: {g} vs {r}"
+                );
+            }
+        }
+        // Arbitrary cohort with trimming and clipping disabled: the
+        // trimmed mean degenerates to the FedAvg weighted mean.
+        let mixed: Vec<ClientUpdate> = (0..n)
+            .map(|i| ClientUpdate {
+                client_id: i as u64 + 1,
+                delta: (0..dim).map(|_| (rng.next_f32() - 0.5) * 6.0).collect(),
+                weight: 0.1 + rng.next_f64() * 9.0,
+                loss: rng.next_f64(),
+                staleness: 0,
+            })
+            .collect();
+        let want = FedAvg.aggregate(&mixed).unwrap();
+        let plain = for_task(
+            "trimmed_mean",
+            0.0,
+            RobustParams {
+                trim_fraction: 0.0,
+                clip_norm: f32::MAX,
+            },
+        )
+        .unwrap()
+        .aggregate(&mixed)
+        .unwrap();
+        for (j, (g, r)) in plain.iter().zip(&want).enumerate() {
+            assert!(
+                (g - r).abs() <= 1e-4 * (1.0 + r.abs()),
+                "trim0[{j}]: {g} vs {r}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_robust_folds_order_independent() {
+    use florida::aggregation::{for_task, RobustParams};
+    // The robust reduction must be a function of the multiset of
+    // accepted updates, never of arrival order — the engine folds
+    // uploads as they land, and upload order is scheduler noise.
+    property("robust-order-independence", 96, |_, rng| {
+        let dim = rng.range(1, 16);
+        let n = rng.range(2, 12);
+        let ups: Vec<ClientUpdate> = (0..n)
+            .map(|i| {
+                // A third of the cohort ships large outliers so the
+                // trim and the adaptive clip paths are both exercised.
+                let scale = if rng.below(3) == 0 { 1e3 } else { 1.0 };
+                ClientUpdate {
+                    client_id: i as u64 + 1,
+                    delta: (0..dim)
+                        .map(|_| (rng.next_f32() - 0.5) * 2.0 * scale)
+                        .collect(),
+                    weight: 0.1 + rng.next_f64() * 4.0,
+                    loss: rng.next_f64(),
+                    staleness: 0,
+                }
+            })
+            .collect();
+        let params = RobustParams {
+            trim_fraction: rng.next_f32() * 0.45,
+            clip_norm: 0.0, // adaptive median-norm bound
+        };
+        for name in ["trimmed_mean", "median"] {
+            let agg = for_task(name, 0.0, params).unwrap();
+            let mut order: Vec<usize> = (0..n).collect();
+            let mut base: Option<Vec<f32>> = None;
+            for _ in 0..3 {
+                rng.shuffle(&mut order);
+                let mut fold = agg.begin(dim).unwrap();
+                for &i in &order {
+                    fold.accept(&ups[i].delta, &ups[i].stats()).unwrap();
+                }
+                let got = fold.finish().unwrap();
+                match &base {
+                    None => base = Some(got),
+                    // Bit-identical, not merely close: the fold sorts
+                    // (value, weight) under a total order before it
+                    // trims or takes the median.
+                    Some(b) => assert_eq!(&got, b, "{name} depends on arrival order"),
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_robust_tree_path_refuses_leaf_partials() {
+    use florida::aggregation::{by_name, is_robust, PartialFold};
+    // Tree-fold-matches-flat, extended to the robust strategies: a
+    // trimmed mean/median over a union is not a function of per-leaf
+    // sums, so instead of matching the flat reference the tree path
+    // must refuse — `absorb` errors on any partial, and `export` yields
+    // an empty partial that no linear fold will absorb. A mis-wired
+    // aggtree can only fail loudly, never silently bypass the trim.
+    property("robust-tree-refusal", 64, |_, rng| {
+        let dim = rng.range(1, 12);
+        for name in ["trimmed_mean", "median"] {
+            assert!(is_robust(name), "{name} must be flagged robust");
+            let agg = by_name(name, 0.0).unwrap();
+            let mut fold = agg.begin(dim).unwrap();
+            let k = rng.range(1, 6);
+            for i in 0..k {
+                let u = ClientUpdate {
+                    client_id: i as u64 + 1,
+                    delta: (0..dim).map(|_| (rng.next_f32() - 0.5) * 2.0).collect(),
+                    weight: 0.5 + rng.next_f64(),
+                    loss: rng.next_f64(),
+                    staleness: 0,
+                };
+                fold.accept(&u.delta, &u.stats()).unwrap();
+            }
+            // absorb refuses even a well-formed linear partial...
+            let err = fold
+                .absorb(&PartialFold {
+                    sum: (0..dim).map(|_| rng.next_f64()).collect(),
+                    total_weight: 1.0 + rng.next_f64(),
+                    count: 1 + rng.below(5) as usize,
+                    min_loss: rng.next_f64(),
+                })
+                .unwrap_err();
+            assert!(err.to_string().contains("root only"), "{name}: {err}");
+            assert_eq!(fold.count(), k, "{name}: refused absorb mutated fold");
+            // ...and export is inert: empty, zero-count, rejected by
+            // the linear folds on the master side.
+            let part = fold.export();
+            assert_eq!(part.count, 0);
+            assert!(part.sum.is_empty());
+            let mut linear = FedAvg.begin(dim).unwrap();
+            assert!(linear.absorb(&part).is_err(), "{name}: inert partial absorbed");
+            // The refused operations left the reduction intact.
+            assert_eq!(fold.finish().unwrap().len(), dim);
+        }
+        for name in ["fedavg", "fedprox", "fedbuff", "dga"] {
+            assert!(!is_robust(name), "{name} wrongly flagged robust");
+        }
+    });
+}

@@ -346,6 +346,173 @@ fn corrupted_checkpoint_fails_recovery_cleanly() {
 }
 
 #[test]
+fn robust_folds_zero_score_hostile_deltas_never_panic() {
+    use florida::aggregation::{for_task, RobustParams, UpdateStats};
+    const DIM: usize = 8;
+    let stats = |w: f64| UpdateStats {
+        client_id: 1,
+        weight: w,
+        loss: 0.1,
+        staleness: 0,
+    };
+    for name in ["trimmed_mean", "median"] {
+        let agg = for_task(name, 0.0, RobustParams::default()).unwrap();
+        let mut fold = agg.begin(DIM).unwrap();
+        fold.accept(&vec![0.5; DIM], &stats(1.0)).unwrap();
+        let hostile: Vec<(Vec<f32>, f64)> = vec![
+            (vec![f32::NAN; DIM], 1.0),
+            (vec![f32::INFINITY; DIM], 1.0),
+            (vec![f32::NEG_INFINITY; DIM], 1.0),
+            (vec![1e30; DIM], 1.0),          // norm over the hard limit
+            (vec![0.5; DIM - 1], 1.0),       // wrong dim (short)
+            (vec![0.5; DIM + 9], 1.0),       // wrong dim (long)
+            (Vec::new(), 1.0),               // empty
+            (vec![0.5; DIM], f64::NAN),      // hostile weight
+            (vec![0.5; DIM], 0.0),
+            (vec![0.5; DIM], -3.0),
+        ];
+        for (delta, w) in hostile {
+            let err = fold.accept(&delta, &stats(w));
+            assert!(err.is_err(), "{name}: accepted dim={} w={w}", delta.len());
+            assert_eq!(fold.count(), 1, "{name}: hostile input mutated the fold");
+        }
+        // The surviving honest update still aggregates cleanly.
+        let got = fold.finish().unwrap();
+        assert_eq!(got.len(), DIM);
+        assert!(got.iter().all(|v| (v - 0.5).abs() < 1e-6), "{name}: {got:?}");
+    }
+}
+
+#[test]
+fn robust_folds_survive_random_hostile_mixtures() {
+    use florida::aggregation::{for_task, RobustParams, UpdateStats};
+    const DIM: usize = 6;
+    let mut rng = Rng::new(23);
+    for trial in 0..200 {
+        let name = if trial % 2 == 0 { "trimmed_mean" } else { "median" };
+        let agg = for_task(name, 0.0, RobustParams::default()).unwrap();
+        let mut fold = agg.begin(DIM).unwrap();
+        let mut honest = 0usize;
+        for _ in 0..rng.range(1, 20) {
+            let delta: Vec<f32> = match rng.range(0, 5) {
+                0 => vec![f32::NAN; DIM],
+                1 => vec![f32::INFINITY; DIM],
+                2 => vec![1e30; DIM],
+                3 => vec![1.0; rng.range(0, 2 * DIM)],
+                _ => (0..DIM).map(|_| rng.next_f32() * 2.0 - 1.0).collect(),
+            };
+            let ok = fold
+                .accept(
+                    &delta,
+                    &UpdateStats {
+                        client_id: honest as u64,
+                        weight: 1.0,
+                        loss: 0.1,
+                        staleness: 0,
+                    },
+                )
+                .is_ok();
+            if ok {
+                honest += 1;
+            }
+        }
+        assert_eq!(fold.count(), honest, "{name}: count drifted from accepts");
+        if honest > 0 {
+            let got = fold.finish().unwrap();
+            assert!(
+                got.iter().all(|v| v.is_finite()),
+                "{name} trial {trial}: non-finite aggregate {got:?}"
+            );
+        } else {
+            assert!(fold.finish().is_err(), "{name}: empty fold must refuse");
+        }
+    }
+}
+
+#[test]
+fn robust_task_rejects_hostile_uploads_and_leaf_path_over_the_wire() {
+    use florida::aggtree::{LeafAggregator, LeafConfig};
+    use florida::client::FloridaClient;
+
+    let s = Arc::new(FloridaServer::for_testing(false, 31));
+    let mut cfg = TaskConfig::default();
+    cfg.aggregator = "median".into();
+    cfg.clients_per_round = 2;
+    cfg.total_rounds = 1;
+    let task = s
+        .deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 8]))
+        .unwrap();
+    let v = s.auth.authority().issue(
+        "rb-dev",
+        florida::crypto::attest::IntegrityTier::Device,
+        21,
+        u64::MAX / 2,
+    );
+    let cid = match s.handle(Msg::Register {
+        device_id: "rb-dev".into(),
+        verdict: v,
+        caps: Default::default(),
+    }) {
+        Msg::RegisterAck { client_id, .. } => client_id,
+        other => panic!("{other:?}"),
+    };
+    match s.handle(Msg::JoinRound {
+        client_id: cid,
+        task_id: task,
+        dh_pubkey: [0; 32],
+    }) {
+        Msg::JoinAck { accepted: true, .. } => {}
+        other => panic!("{other:?}"),
+    }
+    let _ = s.handle(Msg::FetchRound {
+        client_id: cid,
+        task_id: task,
+    });
+    // Hostile uploads are zero-scored (negative ack), never a panic, and
+    // each leaves the client free to retry.
+    for delta in [vec![f32::NAN; 8], vec![f32::INFINITY; 8], vec![1e30; 8], vec![1.0; 3]] {
+        match s.handle(Msg::UploadPlain {
+            client_id: cid,
+            task_id: task,
+            round: 0,
+            base_version: 0,
+            delta,
+            weight: 1.0,
+            loss: 0.1,
+        }) {
+            Msg::Ack { ok, reason } => assert!(!ok, "hostile delta accepted: {reason}"),
+            other => panic!("{other:?}"),
+        }
+    }
+    // The same client's sane retry is accepted.
+    match s.handle(Msg::UploadPlain {
+        client_id: cid,
+        task_id: task,
+        round: 0,
+        base_version: 0,
+        delta: vec![0.5; 8],
+        weight: 1.0,
+        loss: 0.1,
+    }) {
+        Msg::Ack { ok: true, .. } => {}
+        other => panic!("{other:?}"),
+    }
+    // A leaf aggregator asking for a slice of a robust round is refused
+    // at claim time: robust strategies reduce at the root only.
+    let stub = FloridaClient::direct(&s);
+    let leaf = LeafAggregator::new(LeafConfig {
+        leaf_id: 900,
+        leaf_index: 0,
+        leaf_count: 2,
+        aggregator: "median".into(),
+        prox_mu: 0.0,
+    });
+    let a = leaf.claim(&stub, task).unwrap();
+    assert!(!a.accepted);
+    assert!(a.reason.contains("root only"), "{}", a.reason);
+}
+
+#[test]
 fn replayed_frames_idempotent_or_rejected() {
     use florida::client::FloridaClient;
     let s = server();

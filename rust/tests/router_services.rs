@@ -3,12 +3,14 @@
 //! Covers the routing surface end to end: unknown/unhandled message
 //! variants answered with `ErrorReply` (never a panic), unauthenticated
 //! requests shed by the `AuthInterceptor` before any service runs,
-//! per-RPC metrics counters, and protocol errors surfacing as
-//! `Err(Error::Server)` at the stub layer.
+//! over-limit/low-reputation traffic shed by the `PolicyInterceptor`
+//! before the round engine sees it, per-RPC metrics counters, and
+//! protocol errors surfacing as `Err(Error::Server)` at the stub layer.
 
 use std::sync::Arc;
 
 use florida::client::FloridaClient;
+use florida::config::PolicyConfig;
 use florida::crypto::attest::{IntegrityTier, Verdict};
 use florida::model::ModelSnapshot;
 use florida::orchestrator::TaskBuilder;
@@ -224,6 +226,174 @@ fn typed_stub_full_round() {
     assert_eq!(s.rpc_metrics.get("register").unwrap().calls, 2);
     assert_eq!(s.rpc_metrics.get("join_round").unwrap().calls, 2);
     assert_eq!(s.rpc_metrics.get("upload_plain").unwrap().calls, 2);
+}
+
+/// An enabled policy profile with knobs tightened far enough that a
+/// handful of requests trips each limit.
+fn strict_policy() -> PolicyConfig {
+    PolicyConfig {
+        enabled: true,
+        bucket_capacity: 64.0,
+        refill_per_sec: 1.0,
+        tenant_quota: 0,
+        quota_window_ms: 1_000,
+        min_reputation: 0.5,
+        reputation_penalty: 0.3,
+        reputation_recovery_per_sec: 0.01,
+    }
+}
+
+#[test]
+fn policy_rate_limit_sheds_before_any_service() {
+    let s = server(8);
+    s.policy
+        .set_config(PolicyConfig {
+            bucket_capacity: 2.0,
+            ..strict_policy()
+        })
+        .unwrap();
+    let client = FloridaClient::direct(&s);
+    let ack = client
+        .register("ratelim-dev", verdict(&s, "ratelim-dev", 1), Default::default())
+        .unwrap();
+    assert!(ack.accepted);
+
+    // Burst capacity 2: two heartbeats pass, the third is shed.
+    client.heartbeat(ack.client_id).unwrap();
+    client.heartbeat(ack.client_id).unwrap();
+    match client.heartbeat(ack.client_id) {
+        Err(Error::Server(m)) => assert!(m.contains("rate limit"), "{m}"),
+        other => panic!("expected rate-limit refusal, got {other:?}"),
+    }
+    // Shed by policy, ahead of the metrics interceptor — the refused
+    // call was never counted, proving no service-side work happened.
+    assert_eq!(s.rpc_metrics.get("heartbeat").unwrap().calls, 2);
+    assert_eq!(s.policy.rejections(), 1);
+
+    // One second refills one token (refill_per_sec 1.0).
+    s.advance_ms(1_000);
+    client.heartbeat(ack.client_id).unwrap();
+    assert_eq!(s.rpc_metrics.get("heartbeat").unwrap().calls, 3);
+}
+
+#[test]
+fn policy_reputation_sinks_on_rejected_ingest_then_refuses_pre_engine() {
+    let s = server(9);
+    // A robust aggregator, so NaN uploads bounce at the fold instead of
+    // silently poisoning a linear running sum.
+    let task_id = TaskBuilder::new("rep-task")
+        .app("mail")
+        .workflow("spam")
+        .aggregator("trimmed_mean")
+        .clients_per_round(2)
+        .rounds(1)
+        .deploy(&s.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
+    s.policy.set_config(strict_policy()).unwrap();
+    let client = FloridaClient::direct(&s);
+
+    let mut ids = Vec::new();
+    for (i, dev) in ["rep-honest", "rep-attacker"].iter().enumerate() {
+        let ack = client
+            .register(dev, verdict(&s, dev, i as u64 + 1), Default::default())
+            .unwrap();
+        assert!(ack.accepted, "{}", ack.reason);
+        ids.push(ack.client_id);
+    }
+    let (honest, attacker) = (ids[0], ids[1]);
+    for &id in &ids {
+        assert!(client.join_round(id, task_id, [0; 32]).unwrap().accepted);
+        match client.fetch_round(id, task_id).unwrap() {
+            RoundRole::Train(_) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // Two NaN uploads reach the engine, bounce as Ack{ok:false}, and
+    // cost the sender 0.3 reputation each (1.0 → 0.4 < the 0.5 floor).
+    let hostile = |round| rpc::UploadPlain {
+        client_id: attacker,
+        task_id,
+        round,
+        base_version: 0,
+        delta: vec![f32::NAN; 4],
+        weight: 1.0,
+        loss: 0.1,
+    };
+    for _ in 0..2 {
+        match client.upload_plain(hostile(0)) {
+            Err(Error::Server(m)) => assert!(m.contains("non-finite"), "{m}"),
+            other => panic!("expected engine rejection, got {other:?}"),
+        }
+    }
+    let uploads_seen = s.rpc_metrics.get("upload_plain").unwrap().calls;
+    assert_eq!(uploads_seen, 2, "both probes must have reached the engine");
+    let rep = s.policy.reputation_of(attacker).unwrap();
+    assert!(rep < 0.5, "reputation {rep} should be under the floor");
+
+    // The third attempt is refused by policy before the engine runs:
+    // the per-method counter does not move.
+    match client.upload_plain(hostile(0)) {
+        Err(Error::Server(m)) => assert!(m.contains("reputation"), "{m}"),
+        other => panic!("expected policy refusal, got {other:?}"),
+    }
+    assert_eq!(s.rpc_metrics.get("upload_plain").unwrap().calls, uploads_seen);
+    assert!(s.policy.rejections() >= 1);
+
+    // The honest participant is untouched by the attacker's standing.
+    client
+        .upload_plain(rpc::UploadPlain {
+            client_id: honest,
+            task_id,
+            round: 0,
+            base_version: 0,
+            delta: vec![0.5; 4],
+            weight: 1.0,
+            loss: 0.1,
+        })
+        .unwrap();
+}
+
+#[test]
+fn policy_tenant_quota_bounds_poll_storms() {
+    let s = server(10);
+    deploy(&s, 2, 1);
+    s.policy
+        .set_config(PolicyConfig {
+            tenant_quota: 3,
+            ..strict_policy()
+        })
+        .unwrap();
+    let client = FloridaClient::direct(&s);
+    let mut ids = Vec::new();
+    for i in 0..5u64 {
+        let dev = format!("quota-dev-{i}");
+        let ack = client
+            .register(&dev, verdict(&s, &dev, i + 1), Default::default())
+            .unwrap();
+        assert!(ack.accepted);
+        ids.push(ack.client_id);
+    }
+
+    // Tenant "mail" allows 3 polls per window; the 4th and 5th client
+    // are shed regardless of their own (full) token buckets.
+    for &id in &ids[..3] {
+        assert!(client.poll_task(id, "mail", "spam").unwrap().is_some());
+    }
+    for &id in &ids[3..] {
+        match client.poll_task(id, "mail", "spam") {
+            Err(Error::Server(m)) => assert!(m.contains("quota"), "{m}"),
+            other => panic!("expected quota refusal, got {other:?}"),
+        }
+    }
+    assert_eq!(s.rpc_metrics.get("poll_task").unwrap().calls, 3);
+    // Another tenant's window is independent.
+    assert!(client.poll_task(ids[3], "keyboard", "detect").unwrap().is_none());
+
+    // The fixed window rolls over and "mail" admits again.
+    s.advance_ms(1_000);
+    assert!(client.poll_task(ids[3], "mail", "spam").unwrap().is_some());
 }
 
 #[test]

@@ -58,6 +58,14 @@ if [[ "$fast" == "0" ]]; then
   echo "==> tree scenario smoke (scale --tree depth=2 --leaves 4)"
   cargo run --release --quiet -- scale --tree depth=2 --leaves 4 --clients 12 --rounds 2
 
+  # Adversarial-fleet smoke: 20% Byzantine clients (label-flip,
+  # sign-flip, magnitude-bomb) against fedavg vs the robust strategies.
+  # The run's own gate fails unless trimmed-mean/median hold final loss
+  # within 10% of the clean baseline while fedavg degrades >10x, and
+  # unless the admission policy refused the attacker pre-engine.
+  echo "==> byzantine scenario smoke (scale --byzantine 0.2)"
+  cargo run --release --quiet -- scale --byzantine 0.2 --clients 10 --rounds 3
+
   # Perf trajectory: snapshot the hot-path micro-bench into
   # BENCH_hotpath.json (quick measure windows; compare across commits).
   echo "==> bench snapshot (hotpath_micro -> BENCH_hotpath.json)"
