@@ -414,6 +414,24 @@ fn main() {
         }));
     }
 
+    bench::section("telemetry_record (registry write on the poll/upload path)");
+    // The per-request observability tax: one counter bump plus one
+    // histogram record, both single atomic RMWs — no lock, no allocation.
+    // This is what every RPC pays once instrumentation is on, so it must
+    // stay in the tens-of-nanoseconds range.
+    {
+        use florida::obs::Telemetry;
+
+        let telemetry = Telemetry::default();
+        let mut sample = 0u64;
+        snap.report(b.run("telemetry_record", || {
+            sample = sample.wrapping_add(977);
+            telemetry.rounds_committed.inc();
+            telemetry.agg_fold_ns.record(sample);
+        }));
+        assert!(!telemetry.agg_fold_ns.is_empty(), "records must land");
+    }
+
     bench::section("hierarchical aggregation (leaf fold + root partial merge)");
     // The tree path's two hot costs: a leaf folding its member slice
     // into one partial (leaf_fold_forward), and the master absorbing a

@@ -56,11 +56,21 @@ pub fn default_rules() -> Vec<Box<dyn Rule>> {
 }
 
 /// Server-side modules: a panic here takes down a connection thread or
-/// the orchestrator, not just one device.
+/// the orchestrator, not just one device. `metrics/` and `obs/` are in
+/// scope too — the telemetry export path runs on request threads, so a
+/// poisoned instrument must degrade, never panic the server.
 fn server_side(path: &str) -> bool {
-    ["/services/", "/orchestrator/", "/transport/", "/storage/", "/aggtree/"]
-        .iter()
-        .any(|d| path.contains(d))
+    [
+        "/services/",
+        "/orchestrator/",
+        "/transport/",
+        "/storage/",
+        "/aggtree/",
+        "/metrics/",
+        "/obs/",
+    ]
+    .iter()
+    .any(|d| path.contains(d))
 }
 
 /// Index of the brace matching `code[open]` (which must be `{`).
@@ -821,6 +831,9 @@ mod tests {
     fn panicking_lock_scopes_to_server_modules_and_skips_tests() {
         let src = "fn f(m: &std::sync::Mutex<u32>) { let a = m.lock().unwrap(); }\n";
         assert!(lint_one(Box::new(PanickingLock), "rust/src/client/x.rs", src).is_empty());
+        // The telemetry surfaces run on request threads: in scope.
+        assert_eq!(lint_one(Box::new(PanickingLock), "rust/src/metrics/x.rs", src).len(), 1);
+        assert_eq!(lint_one(Box::new(PanickingLock), "rust/src/obs/x.rs", src).len(), 1);
         let test_src = "#[cfg(test)]\nmod tests {\n  fn f(m: &std::sync::Mutex<u32>) \
                         { let a = m.lock().unwrap(); }\n}\n";
         assert!(lint_one(Box::new(PanickingLock), "rust/src/services/x.rs", test_src).is_empty());

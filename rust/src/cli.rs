@@ -20,6 +20,7 @@ use crate::config::{FsyncPolicy, Manifest, StorageConfig, TaskConfig};
 use crate::dp::{DpConfig, DpMode, RdpAccountant};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
+use crate::obs::export::{FORMAT_JSON, FORMAT_PROMETHEUS};
 use crate::orchestrator::{TaskBuilder, TaskEvent};
 use crate::proto::{TaskState, WireCodec};
 use crate::services::management::NoEval;
@@ -111,9 +112,12 @@ COMMANDS:
   scale      Run the §5.2 dummy-task scaling point
              [--clients N] [--rounds N] [--seed N]
              [--churn-restart [--kill-after N] [--state-dir DIR]]
-             [--device-mix]  mixed-tier population under the Tiered
-             policy: stragglers drop mid-round, leases expire, cohort
-             slots are backfilled; reports per-tier participation
+             [--device-mix [--telemetry-file FILE]]  mixed-tier
+             population under the Tiered policy: stragglers drop
+             mid-round, leases expire, cohort slots are backfilled;
+             reports per-tier participation plus the per-round phase
+             breakdown from the telemetry registry; --telemetry-file
+             snapshots the full JSON export to disk
              [--tree depth=2 --leaves N]  hierarchical aggregation:
              leaf aggregators fold their cohort slices and forward one
              partial each; verifies bit-identity against the flat path
@@ -125,11 +129,16 @@ COMMANDS:
              --addr HOST:PORT [--task cfg.json] [--artifacts DIR]
              [--dim N] [--no-attest] [--conns N] [--lease-ms N]
              [--state-dir DIR [--fsync always|commit|never]]
+             [--telemetry-file FILE]
              With --state-dir, tasks journal + checkpoint there and are
              recovered at the next boot; 'q' + Enter checkpoints
              everything and exits gracefully (stdin EOF is ignored, so
              detached servers keep serving). A hard kill is also safe:
              the write-ahead journal covers the tail.
+             Console: 'telemetry' prints the Prometheus exposition,
+             'telemetry json' the JSON export; --telemetry-file writes
+             the JSON snapshot at graceful exit. The same data is
+             served remotely via the get_telemetry RPC.
   status     Query a served task
              --addr HOST:PORT --task-id N [--json]
   dp-plan    Privacy accounting for a task design
@@ -341,7 +350,8 @@ fn cmd_scale(args: &Args) -> Result<()> {
     if args.switch("device-mix") {
         // Heterogeneity scenario: mixed-tier population, capability-aware
         // (Tiered) selection, mid-round lease evictions + backfill.
-        let r = crate::simulator::scaling::run_device_mix(n.min(4096), rounds, seed)?;
+        let (r, telemetry) =
+            crate::simulator::scaling::run_device_mix_report(n.min(4096), rounds, seed)?;
         println!(
             "device-mix: {} clients (high {} / mid {} / low {}), {} rounds",
             r.n_clients,
@@ -362,6 +372,11 @@ fn cmd_scale(args: &Args) -> Result<()> {
             "  rounds to target: {} (wall {} ms)",
             r.rounds_completed, r.wall_ms
         );
+        print!("{}", telemetry.phase_table());
+        if let Some(path) = args.flag("telemetry-file") {
+            std::fs::write(path, telemetry.to_json())?;
+            println!("  telemetry snapshot written to {path}");
+        }
         return Ok(());
     }
     if args.switch("churn-restart") {
@@ -472,12 +487,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("deployed task {} from {cfg_path}", handle.id());
         }
     }
-    // Graceful shutdown: 'q' + Enter checkpoints every task at its
-    // committed-round boundary and exits. Detached servers (stdin
-    // closed) just keep serving — hard kills are covered by the
-    // write-ahead journal.
+    // Console loop: 'telemetry' / 'telemetry json' dump the registry;
+    // 'q' + Enter checkpoints every task at its committed-round boundary
+    // and exits (snapshotting telemetry first if --telemetry-file was
+    // given). Detached servers (stdin closed) just keep serving — hard
+    // kills are covered by the write-ahead journal.
     {
         let server = Arc::clone(&server);
+        let telemetry_file = args.flag("telemetry-file").map(str::to_string);
         std::thread::spawn(move || {
             let stdin = std::io::stdin();
             let mut line = String::new();
@@ -487,7 +504,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     // Detached: never treat EOF as a shutdown request.
                     Ok(0) | Err(_) => return,
                     Ok(_) if matches!(line.trim(), "q" | "quit" | "exit") => break,
+                    Ok(_) if line.trim() == "telemetry" => {
+                        print!("{}", server.telemetry_render(FORMAT_PROMETHEUS));
+                    }
+                    Ok(_) if line.trim() == "telemetry json" => {
+                        println!("{}", server.telemetry_render(FORMAT_JSON));
+                    }
                     Ok(_) => {}
+                }
+            }
+            if let Some(path) = &telemetry_file {
+                match std::fs::write(path, server.telemetry_render(FORMAT_JSON)) {
+                    Ok(()) => println!("telemetry snapshot written to {path}"),
+                    Err(e) => println!("telemetry snapshot failed: {e}"),
                 }
             }
             let n = server.checkpoint_all();
@@ -721,6 +750,29 @@ mod tests {
     fn scale_device_mix_runs() {
         let a = Args::parse(&argv("scale --device-mix --clients 12 --rounds 1")).unwrap();
         cmd_scale(&a).unwrap();
+    }
+
+    #[test]
+    fn scale_device_mix_snapshots_telemetry_to_file() {
+        let tmp = crate::util::TempDir::new("cli-telemetry").unwrap();
+        let path = tmp.path().join("telemetry.json");
+        let cmd = format!(
+            "scale --device-mix --clients 12 --rounds 1 --telemetry-file {}",
+            path.display()
+        );
+        cmd_scale(&Args::parse(&argv(&cmd)).unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let hists = parsed.get("histograms").expect("histograms key");
+        for key in [
+            "round_phase_joining_ms",
+            "round_phase_training_ms",
+            "round_phase_unmasking_ms",
+            "round_phase_commit_ms",
+        ] {
+            assert!(hists.get(key).is_some(), "missing histogram {key}");
+        }
+        assert!(parsed.get("rpc").is_some(), "missing per-RPC section");
     }
 
     #[test]

@@ -9,13 +9,21 @@
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
-use crate::proto::{decode_frame, encode_frame, Msg, WireCodec};
+use crate::proto::{decode_frame, encode_frame_traced, Msg, WireCodec};
 use crate::services::FloridaServer;
 use crate::transport::{Connection, Dialer};
 
 /// Request/response channel to the platform.
 pub trait ServerApi: Send {
-    fn call(&self, msg: Msg) -> Result<Msg>;
+    fn call(&self, msg: Msg) -> Result<Msg> {
+        self.call_traced(msg, None)
+    }
+
+    /// `call` with an optional trace id attached to the request frame
+    /// (the v1-compatible wire trailer). Implementations that cannot
+    /// carry a trace (test doubles) may ignore it — the default `call`
+    /// passes `None`, so untraced traffic is byte-identical to v1.
+    fn call_traced(&self, msg: Msg, trace_id: Option<u64>) -> Result<Msg>;
 }
 
 /// Zero-serialization path used by the large-scale simulator.
@@ -24,8 +32,8 @@ pub struct DirectApi {
 }
 
 impl ServerApi for DirectApi {
-    fn call(&self, msg: Msg) -> Result<Msg> {
-        Ok(self.server.handle(msg))
+    fn call_traced(&self, msg: Msg, trace_id: Option<u64>) -> Result<Msg> {
+        Ok(self.server.handle_with_trace(msg, trace_id))
     }
 }
 
@@ -46,8 +54,8 @@ impl RemoteApi {
 }
 
 impl ServerApi for RemoteApi {
-    fn call(&self, msg: Msg) -> Result<Msg> {
-        let frame = encode_frame(&msg, self.codec)?;
+    fn call_traced(&self, msg: Msg, trace_id: Option<u64>) -> Result<Msg> {
+        let frame = encode_frame_traced(&msg, self.codec, trace_id)?;
         // A thread that panicked mid-call poisons the connection mutex.
         // That is a transport fault for *this* caller, not a reason to
         // propagate the panic into every SDK user sharing the connection.
@@ -76,6 +84,7 @@ pub fn direct(server: &Arc<FloridaServer>) -> Box<dyn ServerApi> {
 mod tests {
     use super::*;
     use crate::error::Error;
+    use crate::proto::encode_frame;
 
     struct EchoConn;
 

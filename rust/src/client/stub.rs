@@ -5,6 +5,7 @@
 //! Protocol errors are never silently dropped — an `ErrorReply` or a
 //! negative `Ack` surfaces as [`Error::Server`] from every method.
 
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Arc;
 
 use crate::crypto::attest::Verdict;
@@ -20,12 +21,25 @@ use super::api::{DirectApi, RemoteApi, ServerApi};
 /// Typed stub layer over a transport-shaped [`ServerApi`].
 pub struct FloridaClient {
     api: Box<dyn ServerApi>,
+    /// Trace id attached to every outgoing request frame; 0 = tracing
+    /// off (the default), which keeps requests byte-identical to v1.
+    trace: AtomicU64,
 }
 
 impl FloridaClient {
     /// Wrap an existing transport (direct, remote, or a test double).
     pub fn new(api: Box<dyn ServerApi>) -> FloridaClient {
-        FloridaClient { api }
+        FloridaClient {
+            api,
+            trace: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach `trace_id` to every subsequent request (0 turns tracing
+    /// back off). Traced requests carry the id as the optional wire
+    /// trailer; the server records per-RPC child spans under it.
+    pub fn set_trace(&self, trace_id: u64) {
+        self.trace.store(trace_id, Relaxed);
     }
 
     /// Zero-serialization stub for an in-process server.
@@ -44,7 +58,15 @@ impl FloridaClient {
 
     /// Generic typed call: any [`Rpc`] request to its typed reply.
     pub fn call<R: Rpc>(&self, req: R) -> Result<R::Reply> {
-        R::Reply::from_msg(self.api.call(req.into_msg())?)
+        let trace = self.trace.load(Relaxed);
+        let reply = if trace == 0 {
+            // Zero-cost when disabled: the untraced path is the plain
+            // `call`, with no trailer encode and no `Some` branch.
+            self.api.call(req.into_msg())?
+        } else {
+            self.api.call_traced(req.into_msg(), Some(trace))?
+        };
+        R::Reply::from_msg(reply)
     }
 
     // ---- one stub method per RPC -----------------------------------------
@@ -136,6 +158,12 @@ impl FloridaClient {
 
     pub fn task_status(&self, task_id: u64) -> Result<rpc::TaskStatus> {
         self.call(rpc::GetTaskStatus { task_id })
+    }
+
+    /// Fetch the server's telemetry export: `format` 0 = JSON, 1 =
+    /// Prometheus text exposition (see `crate::obs::export`).
+    pub fn get_telemetry(&self, format: u32) -> Result<rpc::TelemetryReport> {
+        self.call(rpc::GetTelemetry { format })
     }
 
     pub fn heartbeat(&self, client_id: u64) -> Result<()> {

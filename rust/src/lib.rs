@@ -45,6 +45,7 @@ pub mod dp;
 pub mod error;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod orchestrator;
 pub mod proto;
 pub mod quant;

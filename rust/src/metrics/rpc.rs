@@ -1,12 +1,44 @@
 //! Per-RPC server metrics, fed by the router's `MetricsInterceptor`
 //! (§3.3.1 "Metrics" view, service-level drill-down): call counts,
-//! error counts, and latency per wire method.
+//! error counts, and full latency distributions per wire method.
+//!
+//! Lock-free by construction: the method set is the closed wire surface
+//! (`proto::rpc`), so the registry is a fixed array of atomic cells —
+//! `record` is a name lookup plus relaxed atomic adds into a
+//! [`Histogram`], never a mutex. The poll/upload fast path takes no new
+//! lock here, and a poisoned-mutex panic in the interceptor chain is
+//! impossible (the bug class the old `Mutex<HashMap>` implementation
+//! carried; the `panicking-lock` lint now covers `metrics/` too).
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::obs::export::RpcReport;
+use crate::obs::Histogram;
 use crate::util::json::Json;
+
+/// Every wire method the router can dispatch, sorted, plus the
+/// `"unknown"` spillover slot for names outside the closed set (kept
+/// last so the sorted order of real methods is the array order).
+const METHODS: [&str; 17] = [
+    "fetch_round",
+    "forward_partial",
+    "get_task_status",
+    "get_telemetry",
+    "heartbeat",
+    "join_round",
+    "leaf_assign",
+    "poll_task",
+    "register",
+    "secagg_shares",
+    "session_close",
+    "session_heartbeat",
+    "session_open",
+    "unmask_response",
+    "upload_plain",
+    "upload_masked",
+    "unknown",
+];
 
 /// Aggregate statistics for one RPC method.
 #[derive(Clone, Debug, Default)]
@@ -28,60 +60,139 @@ impl RpcStat {
     }
 }
 
+/// One method's atomic cells. All orderings relaxed: cells are
+/// independent monotone counters; exports tolerate in-flight skew.
+#[derive(Default)]
+struct MethodCell {
+    calls: AtomicU64,
+    errors: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+    latency: Histogram,
+}
+
 /// Thread-safe per-method RPC counters. One instance per server,
 /// shared with the router's interceptor chain.
-#[derive(Debug, Default)]
+#[derive(Default)]
 pub struct RpcMetrics {
-    inner: Mutex<HashMap<&'static str, RpcStat>>,
+    cells: [MethodCell; METHODS.len()],
+}
+
+impl std::fmt::Debug for RpcMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RpcMetrics")
+            .field("total_calls", &self.total_calls())
+            .finish_non_exhaustive()
+    }
 }
 
 impl RpcMetrics {
+    /// Slot index for `method`; unlisted names share the `"unknown"`
+    /// spillover (a 17-entry linear scan beats any hash here).
+    fn idx(method: &str) -> usize {
+        METHODS
+            .iter()
+            .position(|m| *m == method)
+            .unwrap_or(METHODS.len() - 1)
+    }
+
     /// Record one completed dispatch for `method`.
     pub fn record(&self, method: &'static str, elapsed: Duration, error: bool) {
-        let ns = elapsed.as_nanos();
-        let mut g = self.inner.lock().unwrap();
-        let s = g.entry(method).or_default();
-        s.calls += 1;
+        let ns = u64::try_from(elapsed.as_nanos()).unwrap_or(u64::MAX);
+        let cell = &self.cells[Self::idx(method)];
+        cell.calls.fetch_add(1, Ordering::Relaxed);
         if error {
-            s.errors += 1;
+            cell.errors.fetch_add(1, Ordering::Relaxed);
         }
-        s.total_ns += ns;
-        s.max_ns = s.max_ns.max(ns);
+        cell.total_ns.fetch_add(ns, Ordering::Relaxed);
+        cell.max_ns.fetch_max(ns, Ordering::Relaxed);
+        cell.latency.record(ns);
+    }
+
+    fn stat_of(cell: &MethodCell) -> RpcStat {
+        RpcStat {
+            calls: cell.calls.load(Ordering::Relaxed),
+            errors: cell.errors.load(Ordering::Relaxed),
+            total_ns: cell.total_ns.load(Ordering::Relaxed) as u128,
+            max_ns: cell.max_ns.load(Ordering::Relaxed) as u128,
+        }
     }
 
     /// Snapshot of one method's counters (`None` if never called).
     pub fn get(&self, method: &str) -> Option<RpcStat> {
-        self.inner.lock().unwrap().get(method).cloned()
+        let cell = &self.cells[Self::idx(method)];
+        let stat = Self::stat_of(cell);
+        if stat.calls == 0 {
+            None
+        } else {
+            Some(stat)
+        }
+    }
+
+    /// Latency distribution of one method (empty if never called).
+    pub fn latency_of(&self, method: &str) -> crate::obs::HistogramSnapshot {
+        self.cells[Self::idx(method)].latency.snapshot()
     }
 
     /// Total calls across all methods.
     pub fn total_calls(&self) -> u64 {
-        self.inner.lock().unwrap().values().map(|s| s.calls).sum()
+        self.cells
+            .iter()
+            .map(|c| c.calls.load(Ordering::Relaxed))
+            .sum()
     }
 
-    /// Sorted (method, stat) snapshot for dashboards/exports.
+    /// Sorted (method, stat) snapshot for dashboards/exports — only
+    /// methods that have been called.
     pub fn snapshot(&self) -> Vec<(&'static str, RpcStat)> {
-        let mut v: Vec<(&'static str, RpcStat)> = self
-            .inner
-            .lock()
-            .unwrap()
+        let mut v: Vec<(&'static str, RpcStat)> = METHODS
             .iter()
-            .map(|(k, s)| (*k, s.clone()))
+            .zip(&self.cells)
+            .map(|(m, c)| (*m, Self::stat_of(c)))
+            .filter(|(_, s)| s.calls > 0)
             .collect();
         v.sort_by_key(|(k, _)| *k);
         v
     }
 
+    /// Per-method latency digests for the telemetry export surface.
+    pub fn report(&self) -> Vec<RpcReport> {
+        let mut v: Vec<RpcReport> = METHODS
+            .iter()
+            .zip(&self.cells)
+            .filter(|(_, c)| c.calls.load(Ordering::Relaxed) > 0)
+            .map(|(m, c)| {
+                let stat = Self::stat_of(c);
+                let lat = c.latency.snapshot();
+                RpcReport {
+                    method: m,
+                    calls: stat.calls,
+                    errors: stat.errors,
+                    mean_ns: stat.mean_ns(),
+                    p50_ns: lat.p50(),
+                    p95_ns: lat.p95(),
+                    p99_ns: lat.p99(),
+                    max_ns: stat.max_ns as u64,
+                }
+            })
+            .collect();
+        v.sort_by_key(|r| r.method);
+        v
+    }
+
     pub fn to_json(&self) -> Json {
         let mut obj = Json::obj();
-        for (method, s) in self.snapshot() {
+        for r in self.report() {
             obj = obj.set(
-                method,
+                r.method,
                 Json::obj()
-                    .set("calls", s.calls)
-                    .set("errors", s.errors)
-                    .set("mean_us", s.mean_ns() / 1e3)
-                    .set("max_us", s.max_ns as f64 / 1e3),
+                    .set("calls", r.calls)
+                    .set("errors", r.errors)
+                    .set("mean_us", r.mean_ns / 1e3)
+                    .set("p50_us", r.p50_ns as f64 / 1e3)
+                    .set("p95_us", r.p95_ns as f64 / 1e3)
+                    .set("p99_us", r.p99_ns as f64 / 1e3)
+                    .set("max_us", r.max_ns as f64 / 1e3),
             );
         }
         obj
@@ -90,16 +201,18 @@ impl RpcMetrics {
     /// Aligned text table (CLI service view).
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "method            calls   errors   mean(us)    max(us)\n",
+            "method            calls   errors   mean(us)    p50(us)    p99(us)    max(us)\n",
         );
-        for (method, s) in self.snapshot() {
+        for r in self.report() {
             out.push_str(&format!(
-                "{:<16} {:>6}  {:>7}  {:>9.1}  {:>9.1}\n",
-                method,
-                s.calls,
-                s.errors,
-                s.mean_ns() / 1e3,
-                s.max_ns as f64 / 1e3,
+                "{:<16} {:>6}  {:>7}  {:>9.1}  {:>9.1}  {:>9.1}  {:>9.1}\n",
+                r.method,
+                r.calls,
+                r.errors,
+                r.mean_ns / 1e3,
+                r.p50_ns as f64 / 1e3,
+                r.p99_ns as f64 / 1e3,
+                r.max_ns as f64 / 1e3,
             ));
         }
         out
@@ -141,5 +254,58 @@ mod tests {
             back.get("register").unwrap().req_usize("calls").unwrap(),
             1
         );
+    }
+
+    #[test]
+    fn unlisted_methods_share_the_unknown_slot() {
+        let m = RpcMetrics::default();
+        m.record("not-a-method", Duration::from_micros(2), false);
+        // The closed wire surface has no such method; the sample lands
+        // in the spillover so total accounting never loses a call.
+        assert!(m.get("register").is_none());
+        assert_eq!(m.get("unknown").unwrap().calls, 1);
+        assert_eq!(m.total_calls(), 1);
+    }
+
+    #[test]
+    fn report_has_quantiles_from_the_latency_histogram() {
+        let m = RpcMetrics::default();
+        for us in [10u64, 10, 10, 10, 10, 10, 10, 10, 10, 800] {
+            m.record("fetch_round", Duration::from_micros(us), false);
+        }
+        let r = m.report();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].method, "fetch_round");
+        assert_eq!(r[0].calls, 10);
+        // p50 sits in the 10µs band, p99 in the 800µs band.
+        assert!(r[0].p50_ns < 100_000, "p50 {} ns", r[0].p50_ns);
+        assert!(r[0].p99_ns >= 524_288, "p99 {} ns", r[0].p99_ns);
+        assert_eq!(r[0].max_ns, 800_000);
+        let lat = m.latency_of("fetch_round");
+        assert_eq!(lat.count, 10);
+        assert!(m.latency_of("register").is_empty());
+        let j = m.to_json().to_string();
+        assert!(j.contains("p99_us"));
+    }
+
+    #[test]
+    fn concurrent_recording_never_drops_calls() {
+        use std::sync::Arc;
+        let m = Arc::new(RpcMetrics::default());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..5_000 {
+                        m.record("upload_plain", Duration::from_nanos(50), false);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get("upload_plain").unwrap().calls, 20_000);
+        assert_eq!(m.latency_of("upload_plain").count, 20_000);
     }
 }

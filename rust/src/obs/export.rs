@@ -1,0 +1,328 @@
+//! Telemetry export surface: one [`Report`] snapshot rendered as
+//! Prometheus text-exposition format, JSON (the repo's own
+//! `util::json`, no serde), or an aligned phase-breakdown table for the
+//! `scale` scenarios. Assembled pull-side by
+//! `FloridaServer::telemetry_report` — recording never serializes.
+
+use crate::obs::histogram::HistogramSnapshot;
+use crate::obs::trace::RoundTrace;
+use crate::util::json::Json;
+
+/// `GetTelemetry` wire format selector: JSON body.
+pub const FORMAT_JSON: u32 = 0;
+/// `GetTelemetry` wire format selector: Prometheus text exposition.
+pub const FORMAT_PROMETHEUS: u32 = 1;
+
+/// Per-method RPC latency digest (from the lock-free `RpcMetrics`
+/// histograms).
+#[derive(Clone, Debug)]
+pub struct RpcReport {
+    pub method: &'static str,
+    pub calls: u64,
+    pub errors: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+/// Point-in-time copy of every instrument, ready to render.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub hists: Vec<(&'static str, HistogramSnapshot)>,
+    pub rpc: Vec<RpcReport>,
+    /// Slowest buffered rounds, longest first, with phase breakdown.
+    pub rounds: Vec<RoundTrace>,
+}
+
+impl Report {
+    /// Prometheus text exposition. Histograms render cumulative
+    /// `_bucket{le=…}` lines (non-empty buckets + `+Inf`), `_sum`,
+    /// `_count`, then explicit `{quantile=…}` and `_max` convenience
+    /// lines so p50/p95/p99 need no server-side PromQL.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for &(name, v) in &self.counters {
+            out.push_str(&format!(
+                "# TYPE florida_{name} counter\nflorida_{name} {v}\n"
+            ));
+        }
+        for &(name, v) in &self.gauges {
+            out.push_str(&format!(
+                "# TYPE florida_{name} gauge\nflorida_{name} {v}\n"
+            ));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!("# TYPE florida_{name} histogram\n"));
+            let mut cumulative = 0u64;
+            for (i, &n) in h.buckets.iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                cumulative += n;
+                out.push_str(&format!(
+                    "florida_{name}_bucket{{le=\"{}\"}} {cumulative}\n",
+                    crate::obs::Histogram::bucket_upper(i)
+                ));
+            }
+            out.push_str(&format!(
+                "florida_{name}_bucket{{le=\"+Inf\"}} {}\n",
+                h.count
+            ));
+            out.push_str(&format!("florida_{name}_sum {}\n", h.sum));
+            out.push_str(&format!("florida_{name}_count {}\n", h.count));
+            for (q, v) in [(0.5, h.p50()), (0.95, h.p95()), (0.99, h.p99())] {
+                out.push_str(&format!("florida_{name}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!("florida_{name}_max {}\n", h.max));
+        }
+        if !self.rpc.is_empty() {
+            out.push_str("# TYPE florida_rpc_latency_ns summary\n");
+            for r in &self.rpc {
+                let m = r.method;
+                for (q, v) in [(0.5, r.p50_ns), (0.95, r.p95_ns), (0.99, r.p99_ns)] {
+                    out.push_str(&format!(
+                        "florida_rpc_latency_ns{{method=\"{m}\",quantile=\"{q}\"}} {v}\n"
+                    ));
+                }
+                out.push_str(&format!(
+                    "florida_rpc_latency_ns_sum{{method=\"{m}\"}} {}\n",
+                    (r.mean_ns * r.calls as f64) as u64
+                ));
+                out.push_str(&format!(
+                    "florida_rpc_latency_ns_count{{method=\"{m}\"}} {}\n",
+                    r.calls
+                ));
+                out.push_str(&format!(
+                    "florida_rpc_latency_ns_max{{method=\"{m}\"}} {}\n",
+                    r.max_ns
+                ));
+                out.push_str(&format!(
+                    "florida_rpc_errors_total{{method=\"{m}\"}} {}\n",
+                    r.errors
+                ));
+            }
+        }
+        out
+    }
+
+    /// JSON rendering. Values ride as numbers (all far below 2^53 in
+    /// practice) except `trace_id`, a full 64-bit hash that gets the
+    /// string encoding — the same rule the wire codec follows for ids.
+    pub fn to_json_value(&self) -> Json {
+        let mut counters = Json::obj();
+        for &(name, v) in &self.counters {
+            counters = counters.set(name, v);
+        }
+        let mut gauges = Json::obj();
+        for &(name, v) in &self.gauges {
+            gauges = gauges.set(name, v);
+        }
+        let mut hists = Json::obj();
+        for (name, h) in &self.hists {
+            hists = hists.set(
+                name,
+                Json::obj()
+                    .set("count", h.count)
+                    .set("sum", h.sum)
+                    .set("mean", h.mean())
+                    .set("p50", h.p50())
+                    .set("p95", h.p95())
+                    .set("p99", h.p99())
+                    .set("max", h.max),
+            );
+        }
+        let rpc: Vec<Json> = self
+            .rpc
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("method", r.method)
+                    .set("calls", r.calls)
+                    .set("errors", r.errors)
+                    .set("mean_ns", r.mean_ns)
+                    .set("p50_ns", r.p50_ns)
+                    .set("p95_ns", r.p95_ns)
+                    .set("p99_ns", r.p99_ns)
+                    .set("max_ns", r.max_ns)
+            })
+            .collect();
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|t| {
+                Json::obj()
+                    .set("task_id", t.task_id)
+                    .set("round", t.round)
+                    .set("trace_id", format!("{}", t.trace_id))
+                    .set("started_ms", t.started_ms)
+                    .set("ended_ms", t.ended_ms)
+                    .set("joining_ms", t.joining_ms)
+                    .set("training_ms", t.training_ms)
+                    .set("unmasking_ms", t.unmasking_ms)
+                    .set("commit_ms", t.commit_ms)
+                    .set("participants", t.participants as u64)
+                    .set("committed", t.committed)
+            })
+            .collect();
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+            .set("rpc", rpc)
+            .set("rounds", rounds)
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_json_value().pretty()
+    }
+
+    /// Aligned per-round phase-breakdown table for the `scale` scenario
+    /// consoles ("slowest N rounds" order).
+    pub fn phase_table(&self) -> String {
+        let mut out = String::from(
+            "task  round  join(ms)  train(ms)  unmask(ms)  commit(ms)  total(ms)  clients  state\n",
+        );
+        for t in &self.rounds {
+            out.push_str(&format!(
+                "{:>4}  {:>5}  {:>8}  {:>9}  {:>10}  {:>10}  {:>9}  {:>7}  {}\n",
+                t.task_id,
+                t.round,
+                t.joining_ms,
+                t.training_ms,
+                t.unmasking_ms,
+                t.commit_ms,
+                t.total_ms(),
+                t.participants,
+                if t.committed { "committed" } else { "failed" },
+            ));
+        }
+        out
+    }
+
+    /// Render in the `GetTelemetry` wire format: [`FORMAT_PROMETHEUS`]
+    /// or (default, any other value) [`FORMAT_JSON`].
+    pub fn render(&self, format: u32) -> String {
+        if format == FORMAT_PROMETHEUS {
+            self.to_prometheus()
+        } else {
+            self.to_json()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::trace_id_for;
+    use crate::obs::Histogram;
+
+    fn sample_report() -> Report {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 4000] {
+            h.record(v);
+        }
+        Report {
+            counters: vec![("rounds_committed", 2), ("evictions", 1)],
+            gauges: vec![("sessions_live", 9)],
+            hists: vec![("round_phase_training_ms", h.snapshot())],
+            rpc: vec![RpcReport {
+                method: "upload_plain",
+                calls: 4,
+                errors: 1,
+                mean_ns: 1500.0,
+                p50_ns: 1023,
+                p95_ns: 4095,
+                p99_ns: 4095,
+                max_ns: 3900,
+            }],
+            rounds: vec![RoundTrace {
+                task_id: 1,
+                round: 0,
+                trace_id: trace_id_for(1, 0),
+                started_ms: 100,
+                ended_ms: 400,
+                joining_ms: 50,
+                training_ms: 200,
+                unmasking_ms: 0,
+                commit_ms: 0,
+                participants: 6,
+                committed: true,
+            }],
+        }
+    }
+
+    #[test]
+    fn prometheus_rendering_has_types_buckets_and_quantiles() {
+        let text = sample_report().to_prometheus();
+        assert!(text.contains("# TYPE florida_rounds_committed counter"));
+        assert!(text.contains("florida_rounds_committed 2"));
+        assert!(text.contains("# TYPE florida_sessions_live gauge"));
+        assert!(text.contains("# TYPE florida_round_phase_training_ms histogram"));
+        assert!(text.contains("florida_round_phase_training_ms_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("florida_round_phase_training_ms_count 4"));
+        assert!(text.contains("florida_round_phase_training_ms{quantile=\"0.5\"}"));
+        assert!(text.contains("florida_round_phase_training_ms{quantile=\"0.99\"}"));
+        assert!(text
+            .contains("florida_rpc_latency_ns{method=\"upload_plain\",quantile=\"0.95\"} 4095"));
+        assert!(text.contains("florida_rpc_errors_total{method=\"upload_plain\"} 1"));
+        // Cumulative bucket counts are monotone.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| {
+            l.starts_with("florida_round_phase_training_ms_bucket")
+        }) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket lines must be cumulative: {line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn json_rendering_parses_back() {
+        let r = sample_report();
+        let parsed = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(
+            parsed
+                .get("counters")
+                .unwrap()
+                .get("rounds_committed")
+                .unwrap()
+                .as_u64(),
+            Some(2)
+        );
+        let hist = parsed
+            .get("histograms")
+            .unwrap()
+            .get("round_phase_training_ms")
+            .unwrap();
+        assert_eq!(hist.get("count").unwrap().as_u64(), Some(4));
+        assert!(hist.get("p95").unwrap().as_u64().unwrap() >= 30);
+        let rounds = parsed.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 1);
+        // trace_id rides as a string (full 64-bit value, f64-unsafe).
+        assert!(rounds[0].get("trace_id").unwrap().as_str().is_some());
+        assert_eq!(rounds[0].get("participants").unwrap().as_u64(), Some(6));
+        let rpc = parsed.get("rpc").unwrap().as_arr().unwrap();
+        assert_eq!(rpc[0].get("method").unwrap().as_str(), Some("upload_plain"));
+        assert_eq!(rpc[0].get("p99_ns").unwrap().as_u64(), Some(4095));
+    }
+
+    #[test]
+    fn phase_table_lists_rounds() {
+        let table = sample_report().phase_table();
+        assert!(table.contains("join(ms)"));
+        assert!(table.contains("committed"));
+        assert!(table.lines().count() >= 2);
+    }
+
+    #[test]
+    fn render_selects_format() {
+        let r = sample_report();
+        assert!(r.render(FORMAT_PROMETHEUS).starts_with("# TYPE"));
+        assert!(r.render(FORMAT_JSON).trim_start().starts_with('{'));
+        assert!(r.render(42).trim_start().starts_with('{'), "unknown → JSON");
+    }
+}

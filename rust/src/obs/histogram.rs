@@ -1,0 +1,296 @@
+//! Lock-free log2-bucketed histogram — the latency/size primitive behind
+//! the [`crate::obs::Telemetry`] registry.
+//!
+//! 65 power-of-two buckets cover the full u64 range: bucket 0 holds the
+//! value 0, bucket `i` (i ≥ 1) holds `[2^(i-1), 2^i)`. That is coarse
+//! (each bucket spans a 2× band) but makes `record` a handful of relaxed
+//! atomic adds — no lock, no allocation — which is what the poll/upload
+//! fast path requires, and p50/p95/p99/max stay derivable from the fixed
+//! buckets. Histograms `merge` associatively, so per-shard registries
+//! (ROADMAP: sharded data plane) can fold into one export later.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: one zero bucket + one per possible leading-bit position.
+pub const BUCKETS: usize = 65;
+
+/// Lock-free histogram of u64 samples (durations in ns/ms, counts, …).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Index of the bucket holding `v`: 0 for 0, else `64 - clz(v)`
+    /// (monotone in `v`; bucket `i ≥ 1` covers `[2^(i-1), 2^i)`).
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive lower bound of bucket `i`.
+    #[inline]
+    pub fn bucket_lower(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i`.
+    #[inline]
+    pub fn bucket_upper(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one sample. Relaxed atomics only — safe on the hot path.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Fold another histogram into this one (bucket-wise add, max of
+    /// maxes) — `merge(h1, h2)` ≡ the histogram of the concatenated
+    /// sample streams.
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Consistent-enough point-in-time copy for export. Concurrent
+    /// recording may skew individual cells by in-flight samples; totals
+    /// are conserved (every `record` lands exactly once).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of a [`Histogram`] for quantile math and export.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate for `q` in [0, 1]: the upper bound of the bucket
+    /// where the cumulative count crosses `ceil(q · count)`, capped at
+    /// the observed max — always within the true quantile's bucket.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cumulative = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cumulative += n;
+            if cumulative >= target {
+                return Histogram::bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_bounds_are_monotone_and_cover() {
+        // Property: bucket_index is monotone, every value lands inside
+        // its bucket's [lower, upper] band, and bands tile the u64 line.
+        let mut prev = 0usize;
+        for i in 0..BUCKETS {
+            assert!(Histogram::bucket_lower(i) <= Histogram::bucket_upper(i));
+            if i > 0 {
+                assert_eq!(
+                    Histogram::bucket_lower(i),
+                    Histogram::bucket_upper(i - 1).wrapping_add(1),
+                    "bands must tile with no gap at bucket {i}"
+                );
+            }
+        }
+        let mut rng = Rng::new(0xB0C4);
+        let mut samples: Vec<u64> = (0..4096).map(|_| rng.next_u64()).collect();
+        samples.extend([0, 1, 2, 3, u64::MAX, u64::MAX - 1, 1 << 32]);
+        samples.sort_unstable();
+        for &v in &samples {
+            let i = Histogram::bucket_index(v);
+            assert!(i >= prev, "bucket_index must be monotone in v");
+            assert!(Histogram::bucket_lower(i) <= v && v <= Histogram::bucket_upper(i));
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn prop_quantile_within_true_quantile_bucket() {
+        let mut rng = Rng::new(0x51AB);
+        for trial in 0..20 {
+            let n = 100 + (trial * 137) % 2000;
+            let h = Histogram::new();
+            let mut samples: Vec<u64> = (0..n)
+                .map(|_| rng.next_u64() >> (rng.below(60) as u32))
+                .collect();
+            for &v in &samples {
+                h.record(v);
+            }
+            samples.sort_unstable();
+            let snap = h.snapshot();
+            for &q in &[0.0, 0.01, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let target = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let truth = samples[target - 1];
+                let est = snap.quantile(q);
+                let bucket = Histogram::bucket_index(truth);
+                assert!(
+                    Histogram::bucket_lower(bucket) <= est
+                        && est <= Histogram::bucket_upper(bucket),
+                    "q={q}: estimate {est} outside true-quantile bucket \
+                     [{}, {}] (truth {truth})",
+                    Histogram::bucket_lower(bucket),
+                    Histogram::bucket_upper(bucket)
+                );
+            }
+            assert_eq!(snap.max, *samples.last().unwrap());
+            assert_eq!(snap.count, n as u64);
+        }
+    }
+
+    #[test]
+    fn prop_merge_equals_concatenated_samples() {
+        let mut rng = Rng::new(0x3E26);
+        for _ in 0..10 {
+            let (h1, h2, h_all) = (Histogram::new(), Histogram::new(), Histogram::new());
+            let xs: Vec<u64> = (0..500).map(|_| rng.next_u64() >> 20).collect();
+            let ys: Vec<u64> = (0..300).map(|_| rng.next_u64() >> 44).collect();
+            for &x in &xs {
+                h1.record(x);
+                h_all.record(x);
+            }
+            for &y in &ys {
+                h2.record(y);
+                h_all.record(y);
+            }
+            h1.merge(&h2);
+            assert_eq!(h1.snapshot(), h_all.snapshot());
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_conserves_totals() {
+        use std::sync::Arc;
+        const THREADS: u64 = 4;
+        const PER_THREAD: u64 = 10_000;
+        let h = Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        h.record(t * PER_THREAD + i);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, THREADS * PER_THREAD);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), THREADS * PER_THREAD);
+        let expect_sum: u64 = (0..THREADS * PER_THREAD).sum();
+        assert_eq!(snap.sum, expect_sum);
+        assert_eq!(snap.max, THREADS * PER_THREAD - 1);
+    }
+
+    #[test]
+    fn empty_and_single_sample_edges() {
+        let h = Histogram::new();
+        let snap = h.snapshot();
+        assert!(snap.is_empty());
+        assert_eq!(snap.quantile(0.5), 0);
+        assert_eq!(snap.mean(), 0.0);
+        h.record(1500);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 1);
+        assert_eq!(snap.max, 1500);
+        // A single sample is every quantile; the estimate is capped at
+        // the observed max, so it is exact here.
+        assert_eq!(snap.p50(), 1500);
+        assert_eq!(snap.p99(), 1500);
+        assert_eq!(snap.mean(), 1500.0);
+    }
+}

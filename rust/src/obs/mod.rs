@@ -1,0 +1,221 @@
+//! Observability subsystem (§3.3.1 "Metrics"/"Task" management views):
+//! a process-wide telemetry registry of typed counters, gauges and
+//! log2-bucketed histograms, a round-phase trace layer, and the
+//! Prometheus/JSON export surface behind the `GetTelemetry` admin RPC.
+//!
+//! Design rules, in order:
+//! 1. **No new lock on the hot path.** Every instrument a poll/upload
+//!    dispatch touches is a relaxed `AtomicU64` cell ([`Counter`],
+//!    [`Gauge`], [`histogram::Histogram`]). The only mutexes live in the
+//!    bounded trace rings, pushed at round boundaries or for explicitly
+//!    traced RPCs.
+//! 2. **No wall clock in core.** Durations come from the server's
+//!    `Clock` seam (`now_ms`/`now_ns`), so telemetry is deterministic
+//!    under the manual clock; the two deliberate exceptions (journal
+//!    append / checkpoint write disk latency) carry inline lint allows.
+//! 3. **Export is pull-only.** Recording never formats, allocates or
+//!    serializes; rendering happens in [`export`] when an operator asks.
+
+pub mod export;
+pub mod histogram;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use trace::{trace_id_for, Ring, RoundTrace, RpcSpan, TraceRing};
+
+/// Monotone event counter (relaxed atomic).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if n > 0 {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins level gauge (relaxed atomic).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-wide instrument registry: one per [`crate::services::FloridaServer`],
+/// shared (`Arc`) with the round engines, persistence layer and router.
+///
+/// docs/architecture.md carries the full instrument inventory table;
+/// keep the two in sync when adding an instrument.
+#[derive(Default)]
+pub struct Telemetry {
+    // -- round engine --------------------------------------------------
+    pub rounds_committed: Counter,
+    pub rounds_failed: Counter,
+    /// Mid-round lease evictions (cohort members removed).
+    pub evictions: Counter,
+    /// Cohort slots refilled from the join pool after an eviction.
+    pub backfills: Counter,
+    pub round_phase_joining_ms: Histogram,
+    pub round_phase_training_ms: Histogram,
+    pub round_phase_unmasking_ms: Histogram,
+    pub round_phase_commit_ms: Histogram,
+    /// Cohort size at formation.
+    pub cohort_fill: Histogram,
+    // -- aggregation ---------------------------------------------------
+    /// Ingest-dispatch latency (upload accepted → fold returned).
+    pub agg_fold_ns: Histogram,
+    /// Uploads zero-scored by a Byzantine-robust fold.
+    pub robust_zero_scored: Counter,
+    // -- sessions ------------------------------------------------------
+    pub sessions_opened: Counter,
+    pub sessions_renewed: Counter,
+    /// Expired leases removed by the tick sweep.
+    pub sessions_swept: Counter,
+    pub sessions_live: Gauge,
+    // -- storage -------------------------------------------------------
+    pub journal_append_ns: Histogram,
+    pub checkpoint_write_ns: Histogram,
+    pub fsyncs: Counter,
+    // -- tracing -------------------------------------------------------
+    /// Root spans of completed rounds (bounded; newest win).
+    pub rounds: TraceRing,
+    /// Child spans of traced RPCs (bounded; newest win).
+    pub rpc_spans: Ring<RpcSpan>,
+    /// Gates *client-side* trace-id attachment helpers; server-side span
+    /// recording keys off the frame's trace id, so untraced traffic
+    /// costs one `Option` check.
+    tracing: AtomicBool,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracing.load(Ordering::Relaxed)
+    }
+
+    pub fn set_tracing(&self, on: bool) {
+        self.tracing.store(on, Ordering::Relaxed);
+    }
+
+    /// Counter inventory for export, name → value.
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("rounds_committed", self.rounds_committed.get()),
+            ("rounds_failed", self.rounds_failed.get()),
+            ("evictions", self.evictions.get()),
+            ("backfills", self.backfills.get()),
+            ("robust_zero_scored", self.robust_zero_scored.get()),
+            ("sessions_opened", self.sessions_opened.get()),
+            ("sessions_renewed", self.sessions_renewed.get()),
+            ("sessions_swept", self.sessions_swept.get()),
+            ("fsyncs", self.fsyncs.get()),
+        ]
+    }
+
+    /// Gauge inventory for export, name → value.
+    pub fn gauges(&self) -> Vec<(&'static str, u64)> {
+        vec![("sessions_live", self.sessions_live.get())]
+    }
+
+    /// Histogram inventory for export, name → snapshot.
+    pub fn histograms(&self) -> Vec<(&'static str, HistogramSnapshot)> {
+        vec![
+            ("round_phase_joining_ms", self.round_phase_joining_ms.snapshot()),
+            ("round_phase_training_ms", self.round_phase_training_ms.snapshot()),
+            (
+                "round_phase_unmasking_ms",
+                self.round_phase_unmasking_ms.snapshot(),
+            ),
+            ("round_phase_commit_ms", self.round_phase_commit_ms.snapshot()),
+            ("cohort_fill", self.cohort_fill.snapshot()),
+            ("agg_fold_ns", self.agg_fold_ns.snapshot()),
+            ("journal_append_ns", self.journal_append_ns.snapshot()),
+            ("checkpoint_write_ns", self.checkpoint_write_ns.snapshot()),
+        ]
+    }
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("rounds_committed", &self.rounds_committed.get())
+            .field("rounds_failed", &self.rounds_failed.get())
+            .field("tracing", &self.tracing_enabled())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let t = Telemetry::new();
+        t.rounds_committed.inc();
+        t.evictions.add(3);
+        t.evictions.add(0);
+        t.sessions_live.set(12);
+        t.sessions_live.set(7);
+        assert_eq!(t.rounds_committed.get(), 1);
+        assert_eq!(t.evictions.get(), 3);
+        assert_eq!(t.sessions_live.get(), 7);
+        let names: Vec<&str> = t.counters().iter().map(|(n, _)| *n).collect();
+        assert!(names.contains(&"rounds_committed"));
+        assert!(names.contains(&"fsyncs"));
+        assert_eq!(t.gauges()[0], ("sessions_live", 7));
+    }
+
+    #[test]
+    fn histogram_inventory_covers_round_phases() {
+        let t = Telemetry::new();
+        t.round_phase_training_ms.record(42);
+        let hists = t.histograms();
+        for phase in [
+            "round_phase_joining_ms",
+            "round_phase_training_ms",
+            "round_phase_unmasking_ms",
+            "round_phase_commit_ms",
+        ] {
+            assert!(hists.iter().any(|(n, _)| *n == phase), "missing {phase}");
+        }
+        let train = &hists
+            .iter()
+            .find(|(n, _)| *n == "round_phase_training_ms")
+            .unwrap()
+            .1;
+        assert_eq!(train.count, 1);
+    }
+
+    #[test]
+    fn tracing_gate_defaults_off() {
+        let t = Telemetry::new();
+        assert!(!t.tracing_enabled());
+        t.set_tracing(true);
+        assert!(t.tracing_enabled());
+    }
+}

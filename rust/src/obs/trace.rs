@@ -1,0 +1,188 @@
+//! Round-phase tracing: a lightweight span layer clocked off the
+//! server's manual-clock seam (`FloridaServer::now_ms`/`now_ns` — no
+//! wall clock in core; the `wall-clock-in-core` lint enforces it).
+//!
+//! Each committed round yields one [`RoundTrace`] root span with its
+//! phase breakdown (Joining → Training → Unmasking → Commit); per-RPC
+//! child spans are recorded by the router when a request frame carries a
+//! `trace_id` (the optional wire trailer — absent field = no trace, so
+//! v1 clients cost nothing). Completed spans feed bounded in-memory
+//! rings queryable as "slowest N rounds with phase breakdown".
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Deterministic trace id for `(task_id, round)` — splitmix64-style
+/// finalizer over both coordinates. Client and server compute the same
+/// id independently, so an upload correlates server-side without any
+/// id-assignment round trip. Never returns 0 (0 is "no trace").
+pub fn trace_id_for(task_id: u64, round: u64) -> u64 {
+    let mut z = task_id
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(round)
+        .wrapping_add(0x466C_6F72_6964_6121); // "Florida!" salt
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)).max(1)
+}
+
+/// Root span of one committed (or failed) round: the phase breakdown an
+/// operator needs to answer "where did this round's time go?".
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundTrace {
+    pub task_id: u64,
+    pub round: u64,
+    pub trace_id: u64,
+    /// Joining-phase start (server clock, ms).
+    pub started_ms: u64,
+    /// Commit/fail time (server clock, ms).
+    pub ended_ms: u64,
+    pub joining_ms: u64,
+    pub training_ms: u64,
+    pub unmasking_ms: u64,
+    pub commit_ms: u64,
+    pub participants: u32,
+    pub committed: bool,
+}
+
+impl RoundTrace {
+    /// Total root-span duration. Phase durations sum to at most this
+    /// (the export integration test pins the invariant).
+    pub fn total_ms(&self) -> u64 {
+        self.ended_ms.saturating_sub(self.started_ms)
+    }
+}
+
+/// Per-RPC child span, recorded only for requests that carried a
+/// `trace_id` on the wire — zero cost when tracing is off.
+#[derive(Clone, Debug)]
+pub struct RpcSpan {
+    pub trace_id: u64,
+    pub method: &'static str,
+    pub at_ms: u64,
+    pub elapsed_ns: u64,
+    pub error: bool,
+}
+
+/// Bounded ring of completed spans. Pushes happen at round boundaries /
+/// traced RPCs (not the untraced fast path); the mutex is poison-
+/// tolerant — a panicking writer degrades to dropped spans, never a
+/// panicking reader.
+pub struct Ring<T> {
+    inner: Mutex<VecDeque<T>>,
+    cap: usize,
+}
+
+impl<T: Clone> Ring<T> {
+    pub fn new(cap: usize) -> Ring<T> {
+        Ring {
+            inner: Mutex::new(VecDeque::with_capacity(cap.min(64))),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn push(&self, item: T) {
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if g.len() == self.cap {
+            g.pop_front();
+        }
+        g.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Newest-first copy of the buffered spans.
+    pub fn items(&self) -> Vec<T> {
+        let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        g.iter().rev().cloned().collect()
+    }
+}
+
+impl<T: Clone> Default for Ring<T> {
+    /// Default capacity for the `Telemetry` registry rings: 256 spans is
+    /// plenty for the "slowest N rounds" console queries while bounding
+    /// memory regardless of uptime.
+    fn default() -> Ring<T> {
+        Ring::new(256)
+    }
+}
+
+/// Ring of round root spans with the "slowest N" query.
+pub type TraceRing = Ring<RoundTrace>;
+
+impl TraceRing {
+    /// The `n` slowest buffered rounds, longest total duration first
+    /// (ties broken newest-first) — the ISSUE's "slowest N rounds with
+    /// phase breakdown" query.
+    pub fn slowest(&self, n: usize) -> Vec<RoundTrace> {
+        let mut v = self.items();
+        v.sort_by(|a, b| b.total_ms().cmp(&a.total_ms()));
+        v.truncate(n);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(round: u64, total: u64) -> RoundTrace {
+        RoundTrace {
+            task_id: 1,
+            round,
+            trace_id: trace_id_for(1, round),
+            started_ms: 1000 * round,
+            ended_ms: 1000 * round + total,
+            joining_ms: total / 4,
+            training_ms: total / 2,
+            unmasking_ms: 0,
+            commit_ms: 0,
+            participants: 8,
+            committed: true,
+        }
+    }
+
+    #[test]
+    fn trace_ids_are_stable_nonzero_and_distinct() {
+        assert_eq!(trace_id_for(1, 0), trace_id_for(1, 0));
+        assert_ne!(trace_id_for(1, 0), trace_id_for(1, 1));
+        assert_ne!(trace_id_for(1, 0), trace_id_for(2, 0));
+        for t in 0..64 {
+            for r in 0..64 {
+                assert_ne!(trace_id_for(t, r), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_bounds_and_orders() {
+        let ring: TraceRing = Ring::new(4);
+        assert!(ring.is_empty());
+        for round in 0..10 {
+            ring.push(trace(round, 100 + round * 10));
+        }
+        assert_eq!(ring.len(), 4, "ring must stay bounded");
+        let items = ring.items();
+        assert_eq!(items[0].round, 9, "newest first");
+        // Only the last 4 pushes survive; slowest = highest total.
+        let slow = ring.slowest(2);
+        assert_eq!(slow[0].round, 9);
+        assert_eq!(slow[1].round, 8);
+        assert_eq!(slow[0].total_ms(), 190);
+    }
+
+    #[test]
+    fn phase_sums_bounded_by_total() {
+        let t = trace(3, 120);
+        assert!(t.joining_ms + t.training_ms + t.unmasking_ms + t.commit_ms <= t.total_ms());
+    }
+}

@@ -24,6 +24,7 @@
 //! policy flushes (goal counts) with staleness-aware weighting (Papaya).
 
 use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::aggregation::{self, AggregatorFold, PartialFold, UpdateStats};
 use crate::config::{FlMode, TaskConfig};
@@ -31,6 +32,7 @@ use crate::dp::{DpMode, RdpAccountant};
 use crate::error::{Error, Result};
 use crate::metrics::{RoundRecord, TaskMetrics};
 use crate::model::{ModelSnapshot, SnapshotStore};
+use crate::obs::{trace_id_for, RoundTrace, Telemetry};
 use crate::proto::msg::{PeerShare, RecoveredShare};
 use crate::proto::rpc::LeafAssignment;
 use crate::proto::{RoundInstruction, RoundRole, TaskDescriptor, TaskState, TrainParams};
@@ -163,6 +165,17 @@ pub struct RoundEngine {
     cohort: BTreeSet<u64>,
     round_started_ms: u64,
 
+    /// Shared instrument registry (None until the management service
+    /// injects it — in-memory unit tests pay nothing).
+    telemetry: Option<Arc<Telemetry>>,
+    /// Root-span start for the current round's trace: when the joining
+    /// phase began waiting (== `round_started_ms` when no one waited).
+    trace_started_ms: u64,
+    /// Joining-phase duration captured at cohort formation.
+    trace_joining_ms: u64,
+    /// When the unmask detour began (None on the direct commit path).
+    trace_unmasking_since_ms: Option<u64>,
+
     // Async state: the in-flight buffer epoch's streaming fold (None
     // between flushes) plus the joined set.
     ingest: Option<StreamingIngest>,
@@ -224,6 +237,10 @@ impl RoundEngine {
             joining_since_ms: None,
             cohort: BTreeSet::new(),
             round_started_ms: 0,
+            telemetry: None,
+            trace_started_ms: 0,
+            trace_joining_ms: 0,
+            trace_unmasking_since_ms: None,
             ingest: None,
             async_joined: BTreeSet::new(),
             last_flush_ms: 0,
@@ -265,13 +282,26 @@ impl RoundEngine {
     /// checkpoint + journal birth record, then installs the hooks.
     pub fn persist_to(&mut self, mut persistence: Box<dyn Persistence>) -> Result<()> {
         persistence.task_created(&self.checkpoint_view())?;
+        if let Some(t) = &self.telemetry {
+            persistence.set_telemetry(Arc::clone(t));
+        }
         self.persistence = persistence;
         Ok(())
     }
 
     /// Re-attach persistence after recovery (no initial checkpoint).
-    pub fn resume_persistence(&mut self, persistence: Box<dyn Persistence>) {
+    pub fn resume_persistence(&mut self, mut persistence: Box<dyn Persistence>) {
+        if let Some(t) = &self.telemetry {
+            persistence.set_telemetry(Arc::clone(t));
+        }
         self.persistence = persistence;
+    }
+
+    /// Inject the shared instrument registry, fanning it into the
+    /// attached persistence layer (journal/checkpoint latency).
+    pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
+        self.persistence.set_telemetry(Arc::clone(&telemetry));
+        self.telemetry = Some(telemetry);
     }
 
     /// The engine's current committed-round boundary image.
@@ -623,6 +653,14 @@ impl RoundEngine {
                         },
                     );
                 if let Err(e) = accepted {
+                    // Robust folds refuse (zero-score) malformed or
+                    // oversized deltas at ingest — count them so an
+                    // attack burst is visible on the export surface.
+                    if aggregation::is_robust(&self.config.aggregator) {
+                        if let Some(t) = &self.telemetry {
+                            t.robust_zero_scored.inc();
+                        }
+                    }
                     return Ok((false, e.to_string()));
                 }
                 uploaded.insert(client_id);
@@ -983,6 +1021,10 @@ impl RoundEngine {
         if removed.is_empty() && drafted.is_empty() {
             return;
         }
+        if let Some(t) = &self.telemetry {
+            t.evictions.add(removed.len() as u64);
+            t.backfills.add(drafted.len() as u64);
+        }
         let round = self.round;
         log::info!(
             "task {}: round {round} evicted {} expired client(s), backfilled {}",
@@ -1149,6 +1191,16 @@ impl RoundEngine {
         };
         let cohort_size = cohort_set.len();
         self.cohort = cohort_set;
+        // Close the joining span: the root span starts when the first
+        // joiner began waiting (== now when nobody waited), so phase
+        // durations sum exactly to the round's total by construction.
+        self.trace_started_ms = self.joining_since_ms.unwrap_or(now_ms);
+        self.trace_joining_ms = now_ms.saturating_sub(self.trace_started_ms);
+        self.trace_unmasking_since_ms = None;
+        if let Some(t) = &self.telemetry {
+            t.round_phase_joining_ms.record(self.trace_joining_ms);
+            t.cohort_fill.record(cohort_size as u64);
+        }
         self.joining_since_ms = None;
         self.round_started_ms = now_ms;
         let deadline_ms = self
@@ -1208,7 +1260,7 @@ impl RoundEngine {
                         self.round
                     );
                     let _ = uploaded;
-                    self.enter_unmasking(sa, deadline_ms + self.config.round_timeout_ms);
+                    self.enter_unmasking(sa, deadline_ms + self.config.round_timeout_ms, now_ms);
                     return Ok(());
                 }
                 let interims = sa.finalize()?;
@@ -1255,7 +1307,8 @@ impl RoundEngine {
     }
 
     /// Training → Unmasking (secagg dropouts need share recovery).
-    fn enter_unmasking(&mut self, secagg: SecAggRound, deadline_ms: u64) {
+    fn enter_unmasking(&mut self, secagg: SecAggRound, deadline_ms: u64, now_ms: u64) {
+        self.trace_unmasking_since_ms = Some(now_ms);
         self.phase = Phase::Unmasking { secagg, deadline_ms };
     }
 
@@ -1267,6 +1320,37 @@ impl RoundEngine {
         now_ms: u64,
     ) {
         let committed_round = self.round;
+        // Close the training (and optional unmasking) spans and publish
+        // the round's root span. Commit work is synchronous at `now_ms`,
+        // so its span is zero-width under the manual clock by design.
+        let training_end_ms = self.trace_unmasking_since_ms.unwrap_or(now_ms);
+        let training_ms = training_end_ms.saturating_sub(self.round_started_ms);
+        let unmasking_ms = self
+            .trace_unmasking_since_ms
+            .map(|t0| now_ms.saturating_sub(t0))
+            .unwrap_or(0);
+        if let Some(t) = &self.telemetry {
+            t.round_phase_training_ms.record(training_ms);
+            if self.trace_unmasking_since_ms.is_some() {
+                t.round_phase_unmasking_ms.record(unmasking_ms);
+            }
+            t.round_phase_commit_ms.record(0);
+            t.rounds_committed.inc();
+            t.rounds.push(RoundTrace {
+                task_id: self.id,
+                round: committed_round,
+                trace_id: trace_id_for(self.id, committed_round),
+                started_ms: self.trace_started_ms,
+                ended_ms: now_ms,
+                joining_ms: self.trace_joining_ms,
+                training_ms,
+                unmasking_ms,
+                commit_ms: 0,
+                participants: participants as u32,
+                committed: true,
+            });
+        }
+        self.trace_unmasking_since_ms = None;
         if let Some(acc) = &mut self.accountant {
             let q = (participants as f64 / self.config.dp_population as f64).min(1.0);
             let _ = acc.step(q, self.config.dp.noise_multiplier);
@@ -1318,6 +1402,10 @@ impl RoundEngine {
     /// stay queued, stragglers may rejoin.
     fn fail_round(&mut self) {
         self.metrics.failed_rounds += 1;
+        if let Some(t) = &self.telemetry {
+            t.rounds_failed.inc();
+        }
+        self.trace_unmasking_since_ms = None;
         self.cohort.clear();
         self.phase = Phase::Joining;
         self.emit(TaskEvent::RoundFailed {
@@ -1338,6 +1426,11 @@ impl RoundEngine {
         let participants =
             self.master.commit_fold(&mut self.global, ingest.fold, &mut self.rng)?;
         self.round_started_ms = self.last_flush_ms;
+        // Async flushes have no joining barrier: the root span covers
+        // the buffer epoch, all of it accounted to training.
+        self.trace_started_ms = self.last_flush_ms;
+        self.trace_joining_ms = 0;
+        self.trace_unmasking_since_ms = None;
         self.last_flush_ms = now_ms;
         self.record_round(eval, participants, loss, now_ms);
         Ok(())

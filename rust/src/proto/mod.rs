@@ -10,7 +10,9 @@ use crate::crypto::attest::{IntegrityTier, Verdict};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 
-pub use msg::{decode_frame, encode_frame, Msg, WireCodec};
+pub use msg::{
+    decode_frame, decode_frame_traced, encode_frame, encode_frame_traced, Msg, WireCodec,
+};
 
 // ---------------------------------------------------------------------------
 // Session protocol v2: capability negotiation + liveness leases

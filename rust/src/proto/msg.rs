@@ -104,6 +104,12 @@ pub enum Msg {
     Heartbeat {
         client_id: u64,
     },
+    /// Operator pull of the server telemetry snapshot, rendered in the
+    /// requested `obs::export::FORMAT_*` encoding (admin surface, like
+    /// `GetTaskStatus`).
+    GetTelemetry {
+        format: u32,
+    },
 
     // ---- session protocol v2 (client → server) ---------------------------
     /// Open a negotiated session: attest + register + submit the device's
@@ -190,6 +196,14 @@ pub enum Msg {
     ErrorReply {
         message: String,
     },
+    /// Answer to `GetTelemetry`: the rendered snapshot. `body` is opaque
+    /// text in the echoed `format` (Prometheus exposition or JSON) — the
+    /// wire does not re-model every instrument, so adding one never
+    /// changes the protocol.
+    TelemetryReport {
+        format: u32,
+        body: String,
+    },
 
     // ---- session protocol v2 (server → client) ---------------------------
     /// Session handshake outcome: token + lease + the negotiated protocol
@@ -258,6 +272,13 @@ const T_LEASE_ACK: u8 = 0x18;
 const T_LEAF_ASSIGNMENT: u8 = 0x19;
 const T_LEAF_ACK: u8 = 0x1a;
 const T_FORWARD_PARTIAL: u8 = 0x20;
+const T_GET_TELEMETRY: u8 = 0x21;
+const T_TELEMETRY_REPORT: u8 = 0x22;
+
+/// Marker byte of the optional binary trace trailer: a v2 frame may end
+/// with `[TRACE_TRAILER][trace_id: 8-byte LE]` after the message body.
+/// Absent trailer = no trace, so v1 frames are valid v2 frames.
+const TRACE_TRAILER: u8 = 0x01;
 
 // RoundRole sub-tags.
 const R_WAIT: u8 = 0;
@@ -283,6 +304,7 @@ impl Msg {
             Msg::UnmaskResponse { shares, .. } => shares.iter().map(|s| s.y.len() + 16).sum(),
             Msg::ForwardPartial { sum, members, .. } => sum.len() * 8 + members.len() * 9,
             Msg::LeafAssignment { members, .. } => members.len() * 9,
+            Msg::TelemetryReport { body, .. } => body.len(),
             _ => 0,
         };
         payload + 64
@@ -300,6 +322,7 @@ impl Msg {
             Msg::UnmaskResponse { .. } => T_UNMASK_RESPONSE,
             Msg::GetTaskStatus { .. } => T_GET_TASK_STATUS,
             Msg::Heartbeat { .. } => T_HEARTBEAT,
+            Msg::GetTelemetry { .. } => T_GET_TELEMETRY,
             Msg::SessionOpen { .. } => T_SESSION_OPEN,
             Msg::SessionHeartbeat { .. } => T_SESSION_HEARTBEAT,
             Msg::SessionClose { .. } => T_SESSION_CLOSE,
@@ -312,6 +335,7 @@ impl Msg {
             Msg::Ack { .. } => T_ACK,
             Msg::TaskStatus { .. } => T_TASK_STATUS,
             Msg::ErrorReply { .. } => T_ERROR,
+            Msg::TelemetryReport { .. } => T_TELEMETRY_REPORT,
             Msg::SessionGrant { .. } => T_SESSION_GRANT,
             Msg::LeaseAck { .. } => T_LEASE_ACK,
             Msg::LeafAssignment { .. } => T_LEAF_ASSIGNMENT,
@@ -420,6 +444,7 @@ impl Wire for Msg {
             }
             Msg::GetTaskStatus { task_id } => w.put_u64(*task_id),
             Msg::Heartbeat { client_id } => w.put_u64(*client_id),
+            Msg::GetTelemetry { format } => w.put_u32(*format),
             Msg::SessionOpen {
                 device_id,
                 verdict,
@@ -537,6 +562,10 @@ impl Wire for Msg {
                 w.put_f64(*epsilon);
             }
             Msg::ErrorReply { message } => w.put_str(message),
+            Msg::TelemetryReport { format, body } => {
+                w.put_u32(*format);
+                w.put_str(body);
+            }
             Msg::SessionGrant {
                 accepted,
                 client_id,
@@ -678,6 +707,9 @@ impl Wire for Msg {
             T_HEARTBEAT => Msg::Heartbeat {
                 client_id: r.get_u64()?,
             },
+            T_GET_TELEMETRY => Msg::GetTelemetry {
+                format: r.get_u32()?,
+            },
             T_SESSION_OPEN => Msg::SessionOpen {
                 device_id: r.get_str()?,
                 verdict: Verdict::decode(r)?,
@@ -755,6 +787,10 @@ impl Wire for Msg {
             },
             T_ERROR => Msg::ErrorReply {
                 message: r.get_str()?,
+            },
+            T_TELEMETRY_REPORT => Msg::TelemetryReport {
+                format: r.get_u32()?,
+                body: r.get_str()?,
             },
             T_SESSION_GRANT => Msg::SessionGrant {
                 accepted: r.get_bool()?,
@@ -977,6 +1013,13 @@ impl Msg {
             Msg::GetTaskStatus { task_id } => Json::obj()
                 .set("type", "get_task_status")
                 .set("task_id", task_id.to_string()),
+            Msg::GetTelemetry { format } => Json::obj()
+                .set("type", "get_telemetry")
+                .set("format", *format as u64),
+            Msg::TelemetryReport { format, body } => Json::obj()
+                .set("type", "telemetry_report")
+                .set("format", *format as u64)
+                .set("body", body.as_str()),
             Msg::UploadPlain {
                 client_id,
                 task_id,
@@ -1112,6 +1155,13 @@ impl Msg {
             "get_task_status" => Msg::GetTaskStatus {
                 task_id: req_u64_field(j, "task_id")?,
             },
+            "get_telemetry" => Msg::GetTelemetry {
+                format: j.opt_usize("format", 0) as u32,
+            },
+            "telemetry_report" => Msg::TelemetryReport {
+                format: j.opt_usize("format", 0) as u32,
+                body: j.opt_str("body", ""),
+            },
             "upload_plain" => {
                 let bytes = base64::decode(j.req_str("delta_b64").map_err(Error::Codec)?)
                     .map_err(Error::Codec)?;
@@ -1169,26 +1219,82 @@ impl Msg {
 
 /// Encode a message into a frame for the given codec.
 pub fn encode_frame(msg: &Msg, codec: WireCodec) -> Result<Vec<u8>> {
+    encode_frame_traced(msg, codec, None)
+}
+
+/// Encode a message, optionally attaching a trace context. Binary frames
+/// carry it as the `[TRACE_TRAILER][id LE]` suffix; JSON frames as a
+/// top-level `"trace_id"` string field (ignored by v1 decoders, which
+/// skip unknown keys). `Some(0)` means no trace — 0 is the reserved
+/// "untraced" id.
+pub fn encode_frame_traced(msg: &Msg, codec: WireCodec, trace_id: Option<u64>) -> Result<Vec<u8>> {
+    let trace = trace_id.filter(|id| *id != 0);
     match codec {
         WireCodec::Binary => {
-            let mut w = Writer::with_capacity(msg.size_hint());
+            let mut w = Writer::with_capacity(msg.size_hint() + 9);
             msg.encode(&mut w);
+            if let Some(id) = trace {
+                w.put_u8(TRACE_TRAILER);
+                w.put_u64(id);
+            }
             Ok(w.into_bytes())
         }
-        WireCodec::Json => Ok(msg.to_json()?.to_string().into_bytes()),
+        WireCodec::Json => {
+            let mut j = msg.to_json()?;
+            if let Some(id) = trace {
+                // Full-range u64 id: rides as a string like every other
+                // u64 in the JSON codec.
+                j = j.set("trace_id", id.to_string());
+            }
+            Ok(j.to_string().into_bytes())
+        }
     }
 }
 
-/// Decode a frame, auto-detecting the codec from the first byte.
+/// Decode a frame, auto-detecting the codec from the first byte. Any
+/// trace context is dropped — the router path uses
+/// [`decode_frame_traced`].
 pub fn decode_frame(frame: &[u8]) -> Result<(Msg, WireCodec)> {
+    decode_frame_traced(frame).map(|(msg, codec, _)| (msg, codec))
+}
+
+/// Decode a frame and its optional trace context. An absent trailer /
+/// `"trace_id"` field means no trace, so every v1 frame decodes with
+/// `None`; trailing bytes that are not exactly one trace trailer are
+/// still a codec error (no silent truncation).
+pub fn decode_frame_traced(frame: &[u8]) -> Result<(Msg, WireCodec, Option<u64>)> {
     match frame.first() {
         Some(b'{') => {
             let text = std::str::from_utf8(frame)
                 .map_err(|e| Error::Codec(format!("bad utf8 json frame: {e}")))?;
             let j = json_parse(text).map_err(Error::Codec)?;
-            Ok((Msg::from_json(&j)?, WireCodec::Json))
+            let trace = j.get("trace_id").and_then(parse_u64_value).filter(|id| *id != 0);
+            Ok((Msg::from_json(&j)?, WireCodec::Json, trace))
         }
-        Some(_) => Ok((Msg::from_bytes(frame)?, WireCodec::Binary)),
+        Some(_) => {
+            let mut r = Reader::new(frame);
+            let msg = Msg::decode(&mut r)?;
+            let trace = match r.remaining() {
+                0 => None,
+                9 => {
+                    if r.get_u8()? != TRACE_TRAILER {
+                        return Err(Error::Codec("bad frame trailer marker".into()));
+                    }
+                    let id = r.get_u64()?;
+                    if id == 0 {
+                        None
+                    } else {
+                        Some(id)
+                    }
+                }
+                n => {
+                    return Err(Error::Codec(format!(
+                        "{n} trailing bytes after message"
+                    )))
+                }
+            };
+            Ok((msg, WireCodec::Binary, trace))
+        }
         None => Err(Error::Codec("empty frame".into())),
     }
 }
@@ -1323,6 +1429,11 @@ mod tests {
             },
             Msg::GetTaskStatus { task_id: 2 },
             Msg::Heartbeat { client_id: 1 },
+            Msg::GetTelemetry { format: 1 },
+            Msg::TelemetryReport {
+                format: 1,
+                body: "# TYPE florida_rounds_committed counter\n".into(),
+            },
             Msg::RegisterAck {
                 accepted: true,
                 client_id: 42,
@@ -1459,6 +1570,11 @@ mod tests {
             },
             Msg::Heartbeat { client_id: 3 },
             Msg::GetTaskStatus { task_id: BIG },
+            Msg::GetTelemetry { format: 0 },
+            Msg::TelemetryReport {
+                format: 0,
+                body: "{\"counters\":{}}".into(),
+            },
             Msg::UploadPlain {
                 client_id: BIG,
                 task_id: BIG + 1,
@@ -1673,6 +1789,104 @@ mod tests {
             assert!(!auth.verify(v2));
         } else {
             panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn trace_trailer_roundtrips_both_codecs() {
+        // v2 compat (satellite of the tracing layer): any traceable
+        // message round-trips with and without a trace id, both codecs.
+        let msgs = [
+            Msg::Heartbeat { client_id: 4 },
+            Msg::UploadPlain {
+                client_id: 1,
+                task_id: 2,
+                round: 3,
+                base_version: 4,
+                delta: vec![0.5],
+                weight: 1.0,
+                loss: 0.1,
+            },
+        ];
+        for msg in &msgs {
+            for codec in [WireCodec::Binary, WireCodec::Json] {
+                for trace in [None, Some(0xDEAD_BEEF_DEAD_BEEFu64)] {
+                    let frame = encode_frame_traced(msg, codec, trace).unwrap();
+                    let (back, got, tid) = decode_frame_traced(&frame).unwrap();
+                    assert_eq!(got, codec);
+                    assert_eq!(&back, msg);
+                    assert_eq!(tid, trace, "{msg:?} via {codec:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_id_zero_means_untraced() {
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let traced = encode_frame_traced(&Msg::Heartbeat { client_id: 1 }, codec, Some(0))
+                .unwrap();
+            let plain = encode_frame(&Msg::Heartbeat { client_id: 1 }, codec).unwrap();
+            assert_eq!(traced, plain, "0 must encode as no trailer ({codec:?})");
+        }
+    }
+
+    #[test]
+    fn v1_decoder_accepts_traced_frames_and_drops_the_trace() {
+        // A v1 server (plain decode_frame) must interop with a tracing
+        // client: the trailer parses cleanly and is simply discarded.
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let frame =
+                encode_frame_traced(&Msg::Heartbeat { client_id: 9 }, codec, Some(77)).unwrap();
+            let (msg, got) = decode_frame(&frame).unwrap();
+            assert_eq!(got, codec);
+            assert_eq!(msg, Msg::Heartbeat { client_id: 9 });
+        }
+        // And a v1 client's untraced frame decodes with trace = None.
+        let frame = encode_frame(&Msg::Heartbeat { client_id: 9 }, WireCodec::Binary).unwrap();
+        let (_, _, tid) = decode_frame_traced(&frame).unwrap();
+        assert_eq!(tid, None);
+    }
+
+    #[test]
+    fn json_from_json_ignores_trace_id_like_any_unknown_key() {
+        let j = Json::obj()
+            .set("type", "heartbeat")
+            .set("client_id", "5")
+            .set("trace_id", "123456789");
+        assert_eq!(Msg::from_json(&j).unwrap(), Msg::Heartbeat { client_id: 5 });
+    }
+
+    #[test]
+    fn corrupt_trace_trailers_are_rejected() {
+        let plain = encode_frame(&Msg::Heartbeat { client_id: 1 }, WireCodec::Binary).unwrap();
+        // Wrong trailer length (not 0, not 9).
+        let mut short = plain.clone();
+        short.push(TRACE_TRAILER);
+        assert!(decode_frame_traced(&short).is_err());
+        // Right length, wrong marker byte.
+        let mut bad_marker = plain;
+        bad_marker.push(0x7F);
+        bad_marker.extend_from_slice(&77u64.to_le_bytes());
+        assert!(decode_frame_traced(&bad_marker).is_err());
+    }
+
+    #[test]
+    fn telemetry_rpc_roundtrips_both_codecs() {
+        let msgs = [
+            Msg::GetTelemetry { format: 1 },
+            Msg::TelemetryReport {
+                format: 0,
+                body: "{\"histograms\":{\"round_phase_training_ms\":{}}}".into(),
+            },
+        ];
+        for msg in &msgs {
+            for codec in [WireCodec::Binary, WireCodec::Json] {
+                let frame = encode_frame(msg, codec).unwrap();
+                let (back, got) = decode_frame(&frame).unwrap();
+                assert_eq!(got, codec);
+                assert_eq!(&back, msg, "via {codec:?}");
+            }
         }
     }
 

@@ -180,6 +180,13 @@ request!(
 );
 
 request!(
+    /// Admin pull of the server telemetry snapshot, rendered in the
+    /// requested `obs::export::FORMAT_*` encoding.
+    GetTelemetry { format: u32 } => TelemetryReport,
+    "get_telemetry"
+);
+
+request!(
     /// Liveness ping keeping the device's registry entry fresh. v1
     /// compatibility surface: on a v2 server it also renews (or opens)
     /// the client's implicit session lease.
@@ -575,6 +582,30 @@ impl Reply for TaskStatus {
     }
 }
 
+/// Rendered telemetry snapshot (admin surface). `body` is opaque text in
+/// the echoed `obs::export::FORMAT_*` encoding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryReport {
+    pub format: u32,
+    pub body: String,
+}
+
+impl Reply for TelemetryReport {
+    fn into_msg(self) -> Msg {
+        Msg::TelemetryReport {
+            format: self.format,
+            body: self.body,
+        }
+    }
+
+    fn from_msg(m: Msg) -> Result<Self> {
+        match m {
+            Msg::TelemetryReport { format, body } => Ok(TelemetryReport { format, body }),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Wire-message introspection used by the router
 // ---------------------------------------------------------------------------
@@ -592,6 +623,7 @@ pub fn method_of(m: &Msg) -> Option<&'static str> {
         Msg::UploadMasked { .. } => UploadMasked::METHOD,
         Msg::UnmaskResponse { .. } => UnmaskResponse::METHOD,
         Msg::GetTaskStatus { .. } => GetTaskStatus::METHOD,
+        Msg::GetTelemetry { .. } => GetTelemetry::METHOD,
         Msg::Heartbeat { .. } => Heartbeat::METHOD,
         Msg::SessionOpen { .. } => SessionOpen::METHOD,
         Msg::SessionHeartbeat { .. } => SessionHeartbeat::METHOD,
@@ -771,6 +803,27 @@ mod tests {
         })
         .unwrap();
         assert!(!a.accepted);
+    }
+
+    #[test]
+    fn telemetry_rpc_is_typed_and_admin_scoped() {
+        let req = GetTelemetry { format: 1 };
+        let msg = req.clone().into_msg();
+        assert_eq!(method_of(&msg), Some("get_telemetry"));
+        // Admin surface, like GetTaskStatus: no device principal.
+        assert_eq!(client_id_of(&msg), None);
+        assert_eq!(GetTelemetry::from_msg(msg), Some(req));
+
+        let reply = TelemetryReport {
+            format: 1,
+            body: "florida_rounds_committed 2\n".into(),
+        };
+        let back = TelemetryReport::from_msg(reply.clone().into_msg()).unwrap();
+        assert_eq!(back, reply);
+        assert!(TelemetryReport::from_msg(Msg::ErrorReply {
+            message: "x".into()
+        })
+        .is_err());
     }
 
     #[test]

@@ -10,13 +10,14 @@
 //! the simulator no longer poll `task_status`.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 use crate::aggregation::PartialFold;
 use crate::config::{StorageConfig, TaskConfig};
 use crate::error::{Error, Result};
 use crate::metrics::TaskMetrics;
 use crate::model::ModelSnapshot;
+use crate::obs::Telemetry;
 use crate::orchestrator::{
     ClientDirectory, CohortPolicy, EventBus, EventStream, PacingPolicy, RoundEngine,
 };
@@ -37,6 +38,9 @@ pub struct ManagementService {
     /// Durability: when set, every task journals + checkpoints under
     /// `storage.state_dir` and is recovered from there at boot.
     storage: Option<StorageConfig>,
+    /// Process-wide instrument registry, injected once at assembly and
+    /// fanned out to every engine (existing and future).
+    telemetry: OnceLock<Arc<Telemetry>>,
 }
 
 struct Inner {
@@ -71,6 +75,22 @@ impl ManagementService {
             evaluator,
             events: EventBus::new(),
             storage: None,
+            telemetry: OnceLock::new(),
+        }
+    }
+
+    /// Inject the shared telemetry registry. Engines recovered before
+    /// this call (the `with_storage` boot sweep) are wired up here;
+    /// engines created after pick it up in `insert_engine`. Later calls
+    /// are no-ops — the first registry wins.
+    pub fn set_telemetry(&self, telemetry: Arc<Telemetry>) {
+        if self.telemetry.set(Arc::clone(&telemetry)).is_err() {
+            return;
+        }
+        if let Ok(mut g) = self.locked() {
+            for engine in g.engines.values_mut() {
+                engine.set_telemetry(Arc::clone(&telemetry));
+            }
         }
     }
 
@@ -98,6 +118,7 @@ impl ManagementService {
             evaluator,
             events: EventBus::new(),
             storage: Some(storage.clone()),
+            telemetry: OnceLock::new(),
         };
         {
             let mut g = svc.locked()?;
@@ -188,6 +209,9 @@ impl ManagementService {
                     std::fs::remove_file(crate::storage::journal_path(&storage.state_dir, id));
                 return Err(e);
             }
+        }
+        if let Some(t) = self.telemetry.get() {
+            engine.set_telemetry(Arc::clone(t));
         }
         g.next_task_id += 1;
         g.engines.insert(id, engine);

@@ -25,6 +25,7 @@
 //! a deployment can observe reputations before turning enforcement on.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
@@ -82,6 +83,11 @@ struct Inner {
 /// chain as a [`PolicyInterceptor`].
 pub struct PolicyEngine {
     inner: Mutex<Inner>,
+    // Shed counters live outside the Mutex so the telemetry export
+    // path never contends with (or blocks behind) admission decisions.
+    shed_reputation: AtomicU64,
+    shed_rate: AtomicU64,
+    shed_quota: AtomicU64,
 }
 
 impl PolicyEngine {
@@ -93,6 +99,9 @@ impl PolicyEngine {
                 tenants: HashMap::new(),
                 rejected: 0,
             }),
+            shed_reputation: AtomicU64::new(0),
+            shed_rate: AtomicU64::new(0),
+            shed_quota: AtomicU64::new(0),
         }
     }
 
@@ -147,11 +156,13 @@ impl PolicyEngine {
                     .or_insert_with(|| ClientState::new(&cfg, now_ms));
                 st.advance(&cfg, now_ms);
                 if st.reputation < cfg.min_reputation {
+                    self.shed_reputation.fetch_add(1, Relaxed);
                     Some(format!(
                         "policy: client {id} reputation {:.2} below floor {:.2}",
                         st.reputation, cfg.min_reputation
                     ))
                 } else if st.tokens < 1.0 {
+                    self.shed_rate.fetch_add(1, Relaxed);
                     Some(format!("policy: client {id} over rate limit"))
                 } else {
                     st.tokens -= 1.0;
@@ -179,6 +190,7 @@ impl PolicyEngine {
                     w.count > cfg.tenant_quota
                 };
                 if over {
+                    self.shed_quota.fetch_add(1, Relaxed);
                     g.rejected += 1;
                     return Err(Error::Server(format!(
                         "policy: tenant {app_name:?} over quota ({} per {} ms)",
@@ -206,6 +218,17 @@ impl PolicyEngine {
             "policy: client {client_id} penalized for {what} (reputation {:.2})",
             st.reputation
         );
+    }
+
+    /// Sheds broken down by refusal reason, for the telemetry export
+    /// surface. Lock-free: safe to call from the snapshot path even
+    /// while admission decisions are in flight.
+    pub fn shed_counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("policy_shed_reputation", self.shed_reputation.load(Relaxed)),
+            ("policy_shed_rate", self.shed_rate.load(Relaxed)),
+            ("policy_shed_quota", self.shed_quota.load(Relaxed)),
+        ]
     }
 
     /// Session-sweep feedback: evicted clients lose reputation, so a
@@ -266,6 +289,7 @@ mod tests {
             service: ServiceKind::Task,
             method: "fetch_round",
             principal,
+            trace_id: None,
         }
     }
 
@@ -348,6 +372,33 @@ mod tests {
         // Other tenants are unaffected; the window rolls over.
         e.admit(&poll(4, "keyboard"), &ctx(0, None)).unwrap();
         e.admit(&poll(5, "mail"), &ctx(1_000, None)).unwrap();
+    }
+
+    #[test]
+    fn shed_counters_break_down_by_reason() {
+        let e = PolicyEngine::new(strict());
+        // Rate: drain client 1's two-token bucket, then one more.
+        e.admit(&heartbeat(1), &ctx(0, Some(1))).unwrap();
+        e.admit(&heartbeat(1), &ctx(0, Some(1))).unwrap();
+        assert!(e.admit(&heartbeat(1), &ctx(0, Some(1))).is_err());
+        // Reputation: sink client 5 below the floor, then knock.
+        e.record_offense(5, 0, "test");
+        e.record_offense(5, 0, "test");
+        assert!(e.admit(&heartbeat(5), &ctx(0, Some(5))).is_err());
+        // Quota: four distinct clients polling one tenant.
+        let poll = |id: u64| Msg::PollTask {
+            client_id: id,
+            app_name: "mail".into(),
+            workflow_name: "w".into(),
+        };
+        for id in 10..13 {
+            e.admit(&poll(id), &ctx(0, None)).unwrap();
+        }
+        assert!(e.admit(&poll(13), &ctx(0, None)).is_err());
+        let shed: HashMap<&str, u64> = e.shed_counters().into_iter().collect();
+        assert_eq!(shed["policy_shed_rate"], 1);
+        assert_eq!(shed["policy_shed_reputation"], 1);
+        assert_eq!(shed["policy_shed_quota"], 1);
     }
 
     #[test]

@@ -23,10 +23,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::metrics::RpcMetrics;
+use crate::obs::RpcSpan;
 use crate::proto::{rpc, Msg};
 use crate::services::FloridaServer;
 
@@ -70,7 +71,7 @@ pub fn route(msg: &Msg) -> Option<ServiceKind> {
         | Msg::UploadMasked { .. }
         | Msg::UnmaskResponse { .. }
         | Msg::ForwardPartial { .. } => ServiceKind::AggregationIngest,
-        Msg::GetTaskStatus { .. } => ServiceKind::Admin,
+        Msg::GetTaskStatus { .. } | Msg::GetTelemetry { .. } => ServiceKind::Admin,
         _ => return None,
     })
 }
@@ -82,6 +83,9 @@ pub struct RequestCtx {
     pub method: &'static str,
     /// Authenticated client principal, set by [`AuthInterceptor`].
     pub principal: Option<u64>,
+    /// Trace context the request frame carried (`None` = untraced; the
+    /// router records a per-RPC child span only when set).
+    pub trace_id: Option<u64>,
 }
 
 /// One back-end service behind the interceptor chain.
@@ -276,6 +280,7 @@ impl Service for RegistrationService {
                     let id = srv.selection.register(&device_id, caps, ctx.now_ms);
                     let proto = crate::proto::negotiate_proto(proto_max);
                     let (token, lease_ms) = srv.sessions.open(id, profile, proto, ctx.now_ms);
+                    srv.telemetry.sessions_opened.inc();
                     Msg::SessionGrant {
                         accepted: true,
                         client_id: id,
@@ -305,6 +310,7 @@ impl Service for RegistrationService {
                         // liveness — a zombie's stale-token heartbeat
                         // must not refresh last_seen either.
                         srv.selection.touch(client_id, ctx.now_ms);
+                        srv.telemetry.sessions_renewed.inc();
                         Msg::LeaseAck {
                             renewed: true,
                             lease_ms,
@@ -447,7 +453,11 @@ impl Service for AggregationIngest {
     }
 
     fn call(&self, srv: &FloridaServer, ctx: &RequestCtx, msg: Msg) -> Msg {
-        match msg {
+        // Fold latency rides the clock seam: deterministic under the
+        // manual clock, real ingest latency under the real one. The
+        // histogram cell is a relaxed atomic — no lock on this path.
+        let t0_ns = srv.now_ns();
+        let reply = match msg {
             Msg::SecAggShares {
                 client_id,
                 task_id,
@@ -522,13 +532,18 @@ impl Service for AggregationIngest {
                 },
             },
             other => unhandled(self.kind(), &other),
-        }
+        };
+        srv.telemetry
+            .agg_fold_ns
+            .record(srv.now_ns().saturating_sub(t0_ns));
+        reply
     }
 }
 
-/// Operator-facing surface: task status (§3.3 dashboard/CLI backing),
-/// served through the orchestrator's admin `TaskHandle` — phase and
-/// round internals never leave `orchestrator/`.
+/// Operator-facing surface: task status and telemetry export (§3.3
+/// dashboard/CLI backing), served through the orchestrator's admin
+/// `TaskHandle` and the server's telemetry registry — phase and round
+/// internals never leave `orchestrator/`.
 pub struct AdminService;
 
 impl Service for AdminService {
@@ -553,6 +568,10 @@ impl Service for AdminService {
                 Err(e) => Msg::ErrorReply {
                     message: e.to_string(),
                 },
+            },
+            Msg::GetTelemetry { format } => Msg::TelemetryReport {
+                format,
+                body: srv.telemetry_render(format),
             },
             other => unhandled(self.kind(), &other),
         }
@@ -598,6 +617,13 @@ impl Router {
     /// Dispatch one request through the full chain. Never panics on bad
     /// input; unroutable messages get an `ErrorReply`.
     pub fn dispatch(&self, srv: &FloridaServer, msg: Msg) -> Msg {
+        self.dispatch_traced(srv, msg, None)
+    }
+
+    /// [`dispatch`](Self::dispatch) with the frame's optional trace
+    /// context: a traced request additionally records an [`RpcSpan`]
+    /// child span; untraced requests pay one `Option` check.
+    pub fn dispatch_traced(&self, srv: &FloridaServer, msg: Msg, trace_id: Option<u64>) -> Msg {
         let service = match route(&msg) {
             Some(s) => s,
             None => {
@@ -611,9 +637,11 @@ impl Router {
             service,
             method: rpc::method_of(&msg).unwrap_or("unknown"),
             principal: None,
+            trace_id,
         };
-        // florida-lint: allow(wall-clock-in-core): per-RPC latency metric is wall time
-        let t0 = Instant::now();
+        // Latency off the server's clock seam (not the wall clock), so
+        // per-RPC timing is deterministic under the manual clock.
+        let t0_ns = srv.now_ns();
         let mut admitted = 0;
         let mut rejection = None;
         for ic in &self.interceptors {
@@ -634,9 +662,18 @@ impl Router {
                 self.services[service as usize].call(srv, &ctx, msg)
             }
         };
-        let elapsed = t0.elapsed();
+        let elapsed = Duration::from_nanos(srv.now_ns().saturating_sub(t0_ns));
         for ic in self.interceptors[..admitted].iter().rev() {
             ic.after(srv, &ctx, &reply, elapsed);
+        }
+        if let Some(id) = ctx.trace_id {
+            srv.telemetry.rpc_spans.push(RpcSpan {
+                trace_id: id,
+                method: ctx.method,
+                at_ms: ctx.now_ms,
+                elapsed_ns: elapsed.as_nanos() as u64,
+                error: is_error_reply(&reply),
+            });
         }
         reply
     }
@@ -652,6 +689,7 @@ mod tests {
             service,
             method: "test",
             principal: None,
+            trace_id: None,
         }
     }
 
@@ -804,6 +842,32 @@ mod tests {
                 }
             )
             .is_ok());
+    }
+
+    #[test]
+    fn telemetry_routes_to_admin_and_traced_dispatch_records_a_span() {
+        let srv = FloridaServer::for_testing(false, 3);
+        assert_eq!(
+            route(&Msg::GetTelemetry { format: 0 }),
+            Some(ServiceKind::Admin)
+        );
+        // Untraced dispatch records no span — tracing is zero-cost off.
+        srv.handle(Msg::GetTelemetry { format: 0 });
+        assert!(srv.telemetry.rpc_spans.is_empty());
+        // Traced dispatch records one child span per request.
+        srv.advance_ms(5);
+        match srv.handle_with_trace(Msg::GetTelemetry { format: 1 }, Some(42)) {
+            Msg::TelemetryReport { format: 1, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        let spans = srv.telemetry.rpc_spans.items();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].trace_id, 42);
+        assert_eq!(spans[0].method, "get_telemetry");
+        assert_eq!(spans[0].at_ms, 5);
+        assert!(!spans[0].error);
+        // The metrics interceptor clocked both calls off the clock seam.
+        assert_eq!(srv.rpc_metrics.get("get_telemetry").unwrap().calls, 2);
     }
 
     #[test]

@@ -18,8 +18,9 @@ use crate::config::{PolicyConfig, SessionConfig, StorageConfig, TaskConfig};
 use crate::error::Result;
 use crate::metrics::RpcMetrics;
 use crate::model::ModelSnapshot;
+use crate::obs::{export::Report, Telemetry};
 use crate::orchestrator::{EventStream, TaskBuilder, TaskHandle};
-use crate::proto::{decode_frame, encode_frame, Msg};
+use crate::proto::{decode_frame_traced, encode_frame, encode_frame_traced, Msg};
 use crate::services::auth::AuthService;
 use crate::services::management::{Evaluator, ManagementService, NoEval};
 use crate::services::policy::PolicyEngine;
@@ -45,6 +46,16 @@ impl Clock {
             Clock::Manual(ms) => ms.load(Ordering::SeqCst),
         }
     }
+
+    /// Nanosecond-resolution reading off the same seam, for latency
+    /// instruments. Under the manual clock it is the ms value scaled, so
+    /// timing stays deterministic in tests.
+    fn now_ns(&self) -> u64 {
+        match self {
+            Clock::Real(t0) => t0.elapsed().as_nanos() as u64,
+            Clock::Manual(ms) => ms.load(Ordering::SeqCst).saturating_mul(1_000_000),
+        }
+    }
 }
 
 /// The assembled platform.
@@ -59,6 +70,9 @@ pub struct FloridaServer {
     /// Admission policy: rate limits, tenant quotas, reputation.
     /// Default-disabled; flip on with `policy.set_config(..)`.
     pub policy: Arc<PolicyEngine>,
+    /// The observability registry: counters, gauges, histograms and
+    /// trace rings, shared with the round engines and persistence layer.
+    pub telemetry: Arc<Telemetry>,
     router: Router,
     clock: Clock,
     stopping: AtomicBool,
@@ -73,6 +87,10 @@ impl FloridaServer {
     ) -> FloridaServer {
         let rpc_metrics = Arc::new(RpcMetrics::default());
         let policy = Arc::new(PolicyEngine::new(PolicyConfig::default()));
+        let telemetry = Arc::new(Telemetry::new());
+        // Thread the registry into the engine layer: already-recovered
+        // tasks (with_storage boot) and every future insert_engine get it.
+        management.set_telemetry(Arc::clone(&telemetry));
         FloridaServer {
             router: Router::standard(
                 Arc::clone(&rpc_metrics),
@@ -85,6 +103,7 @@ impl FloridaServer {
             management,
             rpc_metrics,
             policy,
+            telemetry,
             clock,
             stopping: AtomicBool::new(false),
         }
@@ -174,6 +193,12 @@ impl FloridaServer {
         self.clock.now_ms()
     }
 
+    /// Nanosecond reading off the clock seam (latency instruments; see
+    /// [`Clock::now_ns`]).
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
     /// Advance a manual clock (tests); no-op on a real clock.
     pub fn advance_ms(&self, delta: u64) {
         if let Clock::Manual(ms) = &self.clock {
@@ -191,9 +216,13 @@ impl FloridaServer {
         let evicted = self.sessions.sweep(now_ms);
         if !evicted.is_empty() {
             log::debug!("session sweep evicted {} client(s)", evicted.len());
+            self.telemetry.sessions_swept.add(evicted.len() as u64);
             self.management.evict_clients(&evicted, now_ms);
             self.policy.record_evictions(&evicted, now_ms);
         }
+        self.telemetry
+            .sessions_live
+            .set(self.sessions.live_count() as u64);
         self.management.tick(&self.directory(), now_ms);
     }
 
@@ -223,6 +252,33 @@ impl FloridaServer {
         self.router.dispatch(self, msg)
     }
 
+    /// Like [`handle`](Self::handle), carrying the frame's optional
+    /// trace context so the router can record a per-RPC child span.
+    pub fn handle_with_trace(&self, msg: Msg, trace_id: Option<u64>) -> Msg {
+        self.router.dispatch_traced(self, msg, trace_id)
+    }
+
+    /// Assemble a point-in-time [`Report`] from every instrument: the
+    /// telemetry registry, the policy engine's shed counters, the
+    /// per-RPC latency histograms, and the slowest buffered round traces.
+    pub fn telemetry_report(&self) -> Report {
+        let mut counters = self.telemetry.counters();
+        counters.extend(self.policy.shed_counters());
+        Report {
+            counters,
+            gauges: self.telemetry.gauges(),
+            hists: self.telemetry.histograms(),
+            rpc: self.rpc_metrics.report(),
+            rounds: self.telemetry.rounds.slowest(32),
+        }
+    }
+
+    /// Render the snapshot in a `GetTelemetry` wire format
+    /// (`obs::export::FORMAT_*`).
+    pub fn telemetry_render(&self, format: u32) -> String {
+        self.telemetry_report().render(format)
+    }
+
     /// Serve connections from a listener until `stop()` — one pooled
     /// handler per connection, frames answered in the codec they arrived.
     pub fn serve(self: &Arc<Self>, listener: Box<dyn Listener>, pool: &ThreadPool) {
@@ -237,16 +293,21 @@ impl FloridaServer {
                     Ok(f) => f,
                     Err(_) => break, // client hung up
                 };
-                let (reply, codec) = match decode_frame(&frame) {
-                    Ok((msg, codec)) => (server.handle(msg), codec),
+                let (reply, codec, trace) = match decode_frame_traced(&frame) {
+                    Ok((msg, codec, trace)) => {
+                        (server.handle_with_trace(msg, trace), codec, trace)
+                    }
                     Err(e) => (
                         Msg::ErrorReply {
                             message: e.to_string(),
                         },
                         crate::proto::WireCodec::Binary,
+                        None,
                     ),
                 };
-                let out = match encode_frame(&reply, codec) {
+                // Echo the trace context on the reply so the client can
+                // correlate; untraced traffic encodes exactly as before.
+                let out = match encode_frame_traced(&reply, codec, trace) {
                     Ok(o) => o,
                     Err(_) => encode_frame(&reply, crate::proto::WireCodec::Binary)
                         .expect("binary encode cannot fail"),
@@ -411,6 +472,88 @@ mod tests {
             Msg::ErrorReply { .. } => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn get_telemetry_exports_committed_round_phases() {
+        let s = FloridaServer::for_testing(true, 21);
+        let mut cfg = TaskConfig::default();
+        cfg.clients_per_round = 2;
+        cfg.total_rounds = 1;
+        s.deploy_task(cfg, ModelSnapshot::new(0, vec![0.0; 4]))
+            .unwrap();
+        let a = register(&s, "obs-a", 1);
+        let b = register(&s, "obs-b", 2);
+        let task_id = match s.handle(Msg::PollTask {
+            client_id: a,
+            app_name: TaskConfig::default().app_name,
+            workflow_name: TaskConfig::default().workflow_name,
+        }) {
+            Msg::TaskOffer { task: Some(t) } => t.task_id,
+            other => panic!("{other:?}"),
+        };
+        for c in [a, b] {
+            s.handle(Msg::JoinRound {
+                client_id: c,
+                task_id,
+                dh_pubkey: [0; 32],
+            });
+        }
+        s.advance_ms(40); // joining phase spends manual-clock time
+        for c in [a, b] {
+            s.handle(Msg::FetchRound {
+                client_id: c,
+                task_id,
+            });
+        }
+        s.advance_ms(60); // training phase
+        for c in [a, b] {
+            match s.handle(Msg::UploadPlain {
+                client_id: c,
+                task_id,
+                round: 0,
+                base_version: 0,
+                delta: vec![0.5; 4],
+                weight: 1.0,
+                loss: 0.3,
+            }) {
+                Msg::Ack { ok: true, .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(s.telemetry.rounds_committed.get(), 1);
+
+        // Prometheus exposition over the wire surface.
+        let body = match s.handle(Msg::GetTelemetry { format: 1 }) {
+            Msg::TelemetryReport { format: 1, body } => body,
+            other => panic!("{other:?}"),
+        };
+        assert!(body.contains("florida_rounds_committed 1"), "{body}");
+        assert!(body.contains("florida_round_phase_training_ms"), "{body}");
+        assert!(body.contains("florida_rpc_latency_ns{method=\"upload_plain\""), "{body}");
+
+        // JSON rendering parses back and carries the round trace with a
+        // phase breakdown bounded by the round's total duration.
+        let body = match s.handle(Msg::GetTelemetry { format: 0 }) {
+            Msg::TelemetryReport { format: 0, body } => body,
+            other => panic!("{other:?}"),
+        };
+        let j = crate::util::json::parse(&body).unwrap();
+        let rounds = j.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 1);
+        let r = &rounds[0];
+        let phase_sum = ["joining_ms", "training_ms", "unmasking_ms", "commit_ms"]
+            .iter()
+            .map(|k| r.get(k).unwrap().as_u64().unwrap())
+            .sum::<u64>();
+        let total = r.get("ended_ms").unwrap().as_u64().unwrap()
+            - r.get("started_ms").unwrap().as_u64().unwrap();
+        assert!(phase_sum <= total, "phases {phase_sum} > total {total}");
+        // The 60ms advanced between fetch and upload is training time
+        // (plus any pre-formation wait credited to joining).
+        let training = r.get("training_ms").unwrap().as_u64().unwrap();
+        assert!(training >= 60, "training_ms {training} < 60");
+        assert!(r.opt_bool("committed", false));
     }
 
     #[test]

@@ -145,11 +145,11 @@ pub struct DelayedApi {
 }
 
 impl ServerApi for DelayedApi {
-    fn call(&self, msg: Msg) -> Result<Msg> {
+    fn call_traced(&self, msg: Msg, trace_id: Option<u64>) -> Result<Msg> {
         if self.delay_ms > 0 {
             thread::sleep(Duration::from_millis(self.delay_ms));
         }
-        let r = self.inner.call(msg);
+        let r = self.inner.call_traced(msg, trace_id);
         if self.delay_ms > 0 {
             thread::sleep(Duration::from_millis(self.delay_ms));
         }

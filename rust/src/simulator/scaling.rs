@@ -13,6 +13,7 @@ use crate::client::{ConstantTrainer, FloridaClient};
 use crate::config::{CohortSpec, FsyncPolicy, StorageConfig, TreeSpec};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
+use crate::obs::export::Report;
 use crate::orchestrator::TaskBuilder;
 use crate::proto::{
     ComputeTier, DeviceCaps, DeviceProfile, LoadHints, RoundRole, TaskState, PROTO_V2,
@@ -258,6 +259,17 @@ pub struct DeviceMixReport {
 /// so low-tier devices participate exactly through the repair path.
 /// Driven on the server's manual clock for deterministic lease math.
 pub fn run_device_mix(n: usize, rounds: u64, seed: u64) -> Result<DeviceMixReport> {
+    run_device_mix_report(n, rounds, seed).map(|(report, _)| report)
+}
+
+/// [`run_device_mix`] plus the server's full telemetry export — the
+/// round-phase breakdown and per-RPC latency quantiles the `scale`
+/// scenario prints and `--telemetry-file` snapshots.
+pub fn run_device_mix_report(
+    n: usize,
+    rounds: u64,
+    seed: u64,
+) -> Result<(DeviceMixReport, Report)> {
     if n < 6 {
         return Err(Error::Config("device mix needs >= 6 clients".into()));
     }
@@ -421,16 +433,19 @@ pub fn run_device_mix(n: usize, rounds: u64, seed: u64) -> Result<DeviceMixRepor
             _ => {}
         }
     }
-    Ok(DeviceMixReport {
-        n_clients: n,
-        population_by_tier,
-        uploads_by_tier,
-        evicted,
-        backfilled,
-        rounds_completed: metrics.rounds.len() as u64,
-        failed_rounds: metrics.failed_rounds,
-        wall_ms: t0.elapsed().as_millis() as u64,
-    })
+    Ok((
+        DeviceMixReport {
+            n_clients: n,
+            population_by_tier,
+            uploads_by_tier,
+            evicted,
+            backfilled,
+            rounds_completed: metrics.rounds.len() as u64,
+            failed_rounds: metrics.failed_rounds,
+            wall_ms: t0.elapsed().as_millis() as u64,
+        },
+        server.telemetry_report(),
+    ))
 }
 
 /// Outcome of the hierarchical-aggregation scenario: the same seeded
@@ -945,6 +960,44 @@ mod tests {
         // Every committed round was fully reported after repair.
         let total: u64 = r.uploads_by_tier.iter().sum();
         assert_eq!(total, 2 * (12 / 2) as u64, "k uploads per committed round");
+    }
+
+    #[test]
+    fn device_mix_report_carries_the_telemetry_export() {
+        let (r, telemetry) = run_device_mix_report(12, 2, 5).unwrap();
+        assert_eq!(r.rounds_completed, 2);
+        let committed = telemetry
+            .counters
+            .iter()
+            .find(|(n, _)| *n == "rounds_committed")
+            .unwrap()
+            .1;
+        assert_eq!(committed, 2);
+        // Eviction counters agree with the event-stream tally.
+        let evictions = telemetry
+            .counters
+            .iter()
+            .find(|(n, _)| *n == "evictions")
+            .unwrap()
+            .1;
+        assert_eq!(evictions, r.evicted);
+        // Phase histograms populated; traces obey the sum invariant.
+        let training = &telemetry
+            .hists
+            .iter()
+            .find(|(n, _)| *n == "round_phase_training_ms")
+            .unwrap()
+            .1;
+        assert_eq!(training.count, 2);
+        assert_eq!(telemetry.rounds.len(), 2);
+        for t in &telemetry.rounds {
+            assert!(
+                t.joining_ms + t.training_ms + t.unmasking_ms + t.commit_ms <= t.total_ms(),
+                "phase sums must not exceed the round total"
+            );
+        }
+        // Per-RPC quantiles ride along for the export surface.
+        assert!(telemetry.rpc.iter().any(|m| m.method == "upload_plain"));
     }
 
     #[test]

@@ -34,11 +34,13 @@ pub mod checkpoint;
 pub mod journal;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-use crate::config::{StorageConfig, TaskConfig};
+use crate::config::{FsyncPolicy, StorageConfig, TaskConfig};
 use crate::error::Result;
 use crate::metrics::TaskMetrics;
 use crate::model::SnapshotStore;
+use crate::obs::Telemetry;
 use crate::proto::TaskState;
 
 pub use checkpoint::Checkpoint;
@@ -75,6 +77,10 @@ pub trait Persistence: Send {
     /// Checkpoint the committed boundary without a commit record
     /// (graceful shutdown, admin-forced checkpoint).
     fn checkpoint(&mut self, view: &CheckpointView) -> Result<()>;
+    /// Inject the shared instrument registry (journal/checkpoint
+    /// latency, fsync count). Default: ignore — `NoopPersistence` and
+    /// test doubles stay instrumentation-free.
+    fn set_telemetry(&mut self, _telemetry: Arc<Telemetry>) {}
 }
 
 /// Default persistence: everything is a no-op (in-memory deployments).
@@ -126,7 +132,15 @@ pub struct FilePersistence {
     task_id: u64,
     ckpt: PathBuf,
     journal: WalJournal,
-    fsync: crate::config::FsyncPolicy,
+    fsync: FsyncPolicy,
+    /// Shared instrument registry (None until injected — recovery-path
+    /// persistence created before assembly runs uninstrumented).
+    telemetry: Option<Arc<Telemetry>>,
+}
+
+/// Elapsed nanos from a wall-clock mark, saturating at `u64::MAX`.
+fn elapsed_ns(t0: &std::time::Instant) -> u64 {
+    u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX)
 }
 
 impl FilePersistence {
@@ -137,6 +151,7 @@ impl FilePersistence {
             ckpt: ckpt_path(&storage.state_dir, task_id),
             journal: WalJournal::create(&journal_path(&storage.state_dir, task_id), storage.fsync)?,
             fsync: storage.fsync,
+            telemetry: None,
         })
     }
 
@@ -150,7 +165,40 @@ impl FilePersistence {
                 storage.fsync,
             )?,
             fsync: storage.fsync,
+            telemetry: None,
         })
+    }
+
+    /// Journal append with latency + fsync-barrier accounting. Disk
+    /// latency is inherently wall time — the sanctioned exception to
+    /// the no-wall-clock rule, scoped to the line below.
+    fn timed_append(&mut self, rec: &JournalRecord) -> Result<()> {
+        // florida-lint: allow(wall-clock-in-core): disk latency is wall time
+        let t0 = std::time::Instant::now();
+        let r = self.journal.append(rec);
+        if let Some(t) = &self.telemetry {
+            t.journal_append_ns.record(elapsed_ns(&t0));
+            if self.fsync == FsyncPolicy::Always {
+                t.fsyncs.inc();
+            }
+        }
+        r
+    }
+
+    /// Checkpoint write with latency + fsync-barrier accounting (same
+    /// wall-time exception as `timed_append`).
+    fn timed_ckpt_write(&mut self, view: &CheckpointView) -> Result<()> {
+        // florida-lint: allow(wall-clock-in-core): disk latency is wall time
+        let t0 = std::time::Instant::now();
+        let r = checkpoint::write(&self.ckpt, view, self.fsync);
+        if let Some(t) = &self.telemetry {
+            t.checkpoint_write_ns.record(elapsed_ns(&t0));
+            if self.fsync != FsyncPolicy::Never {
+                // Two durability barriers: checkpoint file + parent dir.
+                t.fsyncs.add(2);
+            }
+        }
+        r
     }
 }
 
@@ -158,15 +206,15 @@ impl Persistence for FilePersistence {
     fn task_created(&mut self, view: &CheckpointView) -> Result<()> {
         // Checkpoint first: a task is recoverable iff its checkpoint
         // landed; the journal record is the birth marker after it.
-        checkpoint::write(&self.ckpt, view, self.fsync)?;
-        self.journal.append(&JournalRecord::TaskCreated {
+        self.timed_ckpt_write(view)?;
+        self.timed_append(&JournalRecord::TaskCreated {
             task_id: self.task_id,
             config_json: view.config.to_json().to_string(),
         })
     }
 
     fn state_changed(&mut self, state: TaskState) -> Result<()> {
-        self.journal.append(&JournalRecord::StateChanged {
+        self.timed_append(&JournalRecord::StateChanged {
             task_id: self.task_id,
             state,
         })?;
@@ -174,7 +222,7 @@ impl Persistence for FilePersistence {
             // Explicit terminal marker: a journal tail ending in
             // TaskCompleted is unambiguous even if the final commit's
             // checkpoint never lands.
-            self.journal.append(&JournalRecord::TaskCompleted {
+            self.timed_append(&JournalRecord::TaskCompleted {
                 task_id: self.task_id,
             })?;
         }
@@ -182,7 +230,7 @@ impl Persistence for FilePersistence {
     }
 
     fn round_started(&mut self, round: u64, cohort: usize) -> Result<()> {
-        self.journal.append(&JournalRecord::RoundStarted {
+        self.timed_append(&JournalRecord::RoundStarted {
             task_id: self.task_id,
             round,
             cohort: cohort as u64,
@@ -196,7 +244,7 @@ impl Persistence for FilePersistence {
         weight: f64,
         loss: f64,
     ) -> Result<()> {
-        self.journal.append(&JournalRecord::UploadAccepted {
+        self.timed_append(&JournalRecord::UploadAccepted {
             task_id: self.task_id,
             client_id,
             round,
@@ -206,7 +254,7 @@ impl Persistence for FilePersistence {
     }
 
     fn round_failed(&mut self, round: u64) -> Result<()> {
-        self.journal.append(&JournalRecord::RoundFailed {
+        self.timed_append(&JournalRecord::RoundFailed {
             task_id: self.task_id,
             round,
         })
@@ -216,24 +264,35 @@ impl Persistence for FilePersistence {
         // Commit record first: if the checkpoint write below crashes
         // mid-way, recovery sees a commit the checkpoint doesn't cover
         // and retries that round instead of silently losing it.
-        self.journal.append(&JournalRecord::RoundCommitted {
+        self.timed_append(&JournalRecord::RoundCommitted {
             task_id: self.task_id,
             round,
             version: view.store.version,
         })?;
-        self.checkpoint(view)
+        Persistence::checkpoint(self, view)
     }
 
     fn checkpoint(&mut self, view: &CheckpointView) -> Result<()> {
-        checkpoint::write(&self.ckpt, view, self.fsync)?;
+        self.timed_ckpt_write(view)?;
         // Marker before truncation: if the truncate below never lands
         // (crash), replay sees the marker and discards the stale tail
         // instead of double-counting records the checkpoint absorbed.
-        self.journal.append(&JournalRecord::Checkpointed {
+        self.timed_append(&JournalRecord::Checkpointed {
             task_id: self.task_id,
             version: view.store.version,
         })?;
-        self.journal.truncate()
+        self.journal.truncate()?;
+        if self.fsync != FsyncPolicy::Never {
+            if let Some(t) = &self.telemetry {
+                // The truncate's own durability barrier.
+                t.fsyncs.inc();
+            }
+        }
+        Ok(())
+    }
+
+    fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
+        self.telemetry = Some(telemetry);
     }
 }
 
@@ -612,6 +671,31 @@ mod tests {
         assert_eq!(tasks[0].state, TaskState::Completed);
         assert_eq!(tasks[0].round, 1);
         assert!(tasks[0].interrupted_round.is_none());
+    }
+
+    #[test]
+    fn file_persistence_reports_latency_and_fsync_barriers() {
+        let tmp = TempDir::new("storage-obs").unwrap();
+        let cfg = StorageConfig::new(tmp.path()).fsync(FsyncPolicy::Always);
+        let task_cfg = TaskConfig::default();
+        let metrics = TaskMetrics::default();
+        let store = SnapshotStore::new(ModelSnapshot::new(0, vec![0.0; 2]));
+
+        let t = Arc::new(Telemetry::new());
+        let mut p = FilePersistence::create(&cfg, 9).unwrap();
+        p.set_telemetry(Arc::clone(&t));
+        p.task_created(&view(9, &task_cfg, &store, &metrics, TaskState::Created, 0))
+            .unwrap();
+        p.round_started(0, 1).unwrap();
+        p.round_committed(0, &view(9, &task_cfg, &store, &metrics, TaskState::Running, 1))
+            .unwrap();
+
+        // 4 appends (created, started, committed, ckpt marker), 2
+        // checkpoint writes (birth + commit).
+        assert_eq!(t.journal_append_ns.snapshot().count, 4);
+        assert_eq!(t.checkpoint_write_ns.snapshot().count, 2);
+        // Always: 4 append barriers + 2×2 checkpoint + 1 truncate.
+        assert_eq!(t.fsyncs.get(), 9);
     }
 
     #[test]

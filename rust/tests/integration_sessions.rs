@@ -79,7 +79,9 @@ struct V1ServerShim {
 }
 
 impl ServerApi for V1ServerShim {
-    fn call(&self, msg: Msg) -> Result<Msg> {
+    // A v1 deployment predates the trace trailer: drop it on the floor
+    // exactly like the old decoder would.
+    fn call_traced(&self, msg: Msg, _trace_id: Option<u64>) -> Result<Msg> {
         match msg {
             Msg::SessionOpen { .. } | Msg::SessionHeartbeat { .. } | Msg::SessionClose { .. } => {
                 Ok(Msg::ErrorReply {

@@ -1,0 +1,202 @@
+//! Integration: the observability export surface, end to end.
+//!
+//! Pins the PR's acceptance surface:
+//! * driving rounds through the public client stub produces — via the
+//!   `GetTelemetry` admin RPC — a per-round phase breakdown whose phase
+//!   durations sum to at most the round duration, plus per-RPC
+//!   p50/p95/p99 latency, in BOTH wire formats (Prometheus text
+//!   exposition and JSON);
+//! * trace context rides real wire frames (served transport, not the
+//!   direct stub) and records per-RPC child spans server-side, while an
+//!   untraced client — the v1-shaped frame — leaves the span ring
+//!   untouched (tracing is zero-cost when off).
+
+use std::sync::Arc;
+
+use florida::client::FloridaClient;
+use florida::crypto::attest::IntegrityTier;
+use florida::model::ModelSnapshot;
+use florida::obs::export::{FORMAT_JSON, FORMAT_PROMETHEUS};
+use florida::orchestrator::TaskBuilder;
+use florida::proto::{RoundRole, WireCodec};
+use florida::services::FloridaServer;
+use florida::transport::inproc::{InprocDialer, InprocListener};
+use florida::util::ThreadPool;
+
+/// Drive `rounds` committed rounds (2 clients each) on a manual-clock
+/// server, advancing the clock between phases so every phase histogram
+/// sees non-trivial durations.
+fn drive_rounds(rounds: u64) -> (Arc<FloridaServer>, FloridaClient, u64) {
+    let server = Arc::new(FloridaServer::for_testing(true, 71));
+    let task = TaskBuilder::new("obs-task")
+        .clients_per_round(2)
+        .rounds(rounds)
+        .round_timeout_ms(600_000)
+        .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
+    let stub = FloridaClient::direct(&server);
+    let mut clients = Vec::new();
+    for i in 0..2u64 {
+        let dev = format!("obs-dev-{i}");
+        let verdict =
+            server
+                .auth
+                .authority()
+                .issue(&dev, IntegrityTier::Device, i + 1, u64::MAX / 2);
+        let reply = stub.register(&dev, verdict, Default::default()).unwrap();
+        clients.push(reply.client_id);
+    }
+    for round in 0..rounds {
+        // Staggered joins: the cohort forms on the second join, so the
+        // Joining phase spans the 3 ms between them.
+        assert!(stub.join_round(clients[0], task, [0u8; 32]).unwrap().accepted);
+        server.advance_ms(3);
+        assert!(stub.join_round(clients[1], task, [0u8; 32]).unwrap().accepted);
+        for &c in &clients {
+            match stub.fetch_round(c, task).unwrap() {
+                RoundRole::Train(_) => {}
+                other => panic!("round {round}: expected Train, got {other:?}"),
+            }
+        }
+        server.advance_ms(7); // the Training phase
+        for &c in &clients {
+            stub.upload_plain(florida::proto::rpc::UploadPlain {
+                client_id: c,
+                task_id: task,
+                round,
+                base_version: round,
+                delta: vec![0.5; 4],
+                weight: 1.0,
+                loss: 0.1,
+            })
+            .unwrap();
+        }
+        server.advance_ms(1); // idle gap between rounds
+    }
+    (server, stub, task)
+}
+
+#[test]
+fn json_export_carries_phase_breakdown_and_rpc_quantiles() {
+    let (server, stub, _task) = drive_rounds(2);
+    assert_eq!(server.telemetry.rounds_committed.get(), 2);
+
+    let reply = stub.get_telemetry(FORMAT_JSON).unwrap();
+    assert_eq!(reply.format, FORMAT_JSON);
+    let parsed = florida::util::json::parse(&reply.body).unwrap();
+
+    // Every round-phase histogram saw each committed round once —
+    // except unmasking, which only the secagg dropout detour records.
+    let hists = parsed.get("histograms").expect("histograms key");
+    for key in [
+        "round_phase_joining_ms",
+        "round_phase_training_ms",
+        "round_phase_commit_ms",
+    ] {
+        let h = hists.get(key).unwrap_or_else(|| panic!("missing {key}"));
+        assert_eq!(h.get("count").unwrap().as_u64(), Some(2), "{key} count");
+    }
+    let unmask = hists.get("round_phase_unmasking_ms").expect("unmask hist");
+    assert_eq!(unmask.get("count").unwrap().as_u64(), Some(0));
+    // Deterministic off the manual clock: join 3 ms, train 7 ms.
+    let joining = hists.get("round_phase_joining_ms").unwrap();
+    assert!(joining.get("p50").unwrap().as_u64().unwrap() >= 3);
+    let training = hists.get("round_phase_training_ms").unwrap();
+    assert!(training.get("p50").unwrap().as_u64().unwrap() >= 7);
+
+    // The acceptance pin: per round, phase durations sum to at most the
+    // round's wall duration.
+    let rounds = parsed.get("rounds").unwrap().as_arr().unwrap();
+    assert_eq!(rounds.len(), 2);
+    for t in rounds {
+        let g = |k: &str| t.get(k).unwrap().as_u64().unwrap();
+        let phase_sum = g("joining_ms") + g("training_ms") + g("unmasking_ms") + g("commit_ms");
+        let total = g("ended_ms") - g("started_ms");
+        assert!(
+            phase_sum <= total,
+            "phase sum {phase_sum} exceeds round duration {total}"
+        );
+        assert!(phase_sum > 0, "phases must be clocked, not zeroed");
+        assert_ne!(t.get("trace_id").unwrap().as_str(), Some("0"));
+    }
+
+    // Per-RPC latency digest with ordered quantiles.
+    let rpc = parsed.get("rpc").unwrap().as_arr().unwrap();
+    let upload = rpc
+        .iter()
+        .find(|r| r.get("method").and_then(|m| m.as_str()) == Some("upload_plain"))
+        .expect("upload_plain rpc entry");
+    assert_eq!(upload.get("calls").unwrap().as_u64(), Some(4));
+    let p50 = upload.get("p50_ns").unwrap().as_u64().unwrap();
+    let p95 = upload.get("p95_ns").unwrap().as_u64().unwrap();
+    let p99 = upload.get("p99_ns").unwrap().as_u64().unwrap();
+    assert!(p50 <= p95 && p95 <= p99, "quantiles must be ordered");
+}
+
+#[test]
+fn prometheus_export_carries_the_same_surface() {
+    let (_server, stub, _task) = drive_rounds(1);
+    let reply = stub.get_telemetry(FORMAT_PROMETHEUS).unwrap();
+    assert_eq!(reply.format, FORMAT_PROMETHEUS);
+    let body = reply.body;
+    assert!(body.contains("# TYPE florida_rounds_committed counter"));
+    assert!(body.contains("florida_rounds_committed 1"));
+    for key in [
+        "round_phase_joining_ms",
+        "round_phase_training_ms",
+        "round_phase_unmasking_ms",
+        "round_phase_commit_ms",
+    ] {
+        assert!(
+            body.contains(&format!("# TYPE florida_{key} histogram")),
+            "missing histogram {key}"
+        );
+    }
+    for key in ["round_phase_joining_ms", "round_phase_training_ms"] {
+        assert!(body.contains(&format!("florida_{key}_count 1")));
+    }
+    for q in ["0.5", "0.95", "0.99"] {
+        assert!(
+            body.contains(&format!(
+                "florida_rpc_latency_ns{{method=\"upload_plain\",quantile=\"{q}\"}}"
+            )),
+            "missing upload_plain quantile {q}"
+        );
+    }
+    assert!(body.contains("florida_rpc_latency_ns_count{method=\"upload_plain\"} 2"));
+}
+
+#[test]
+fn trace_context_rides_the_wire_and_untraced_clients_stay_free() {
+    let server = Arc::new(FloridaServer::for_testing(false, 72));
+    let listener = InprocListener::bind("obs-trace-test").unwrap();
+    let _srv = {
+        let srv = Arc::clone(&server);
+        std::thread::spawn(move || {
+            let pool = ThreadPool::new(4);
+            srv.serve(Box::new(listener), &pool);
+            pool.wait_idle();
+        })
+    };
+
+    // An untraced (v1-shaped) client: no trailer on the wire, no span
+    // recorded — tracing is zero-cost when off.
+    let plain =
+        FloridaClient::connect(&InprocDialer, "obs-trace-test", WireCodec::Binary).unwrap();
+    plain.get_telemetry(FORMAT_JSON).unwrap();
+    assert!(server.telemetry.rpc_spans.is_empty());
+
+    // A traced client: the trace id rides the frame trailer and the
+    // router records one child span per request, server-side.
+    let traced =
+        FloridaClient::connect(&InprocDialer, "obs-trace-test", WireCodec::Binary).unwrap();
+    traced.set_trace(0xBEEF);
+    traced.get_telemetry(FORMAT_JSON).unwrap();
+    traced.task_status(404).unwrap_err(); // errors are spanned too
+    let spans = server.telemetry.rpc_spans.items();
+    assert_eq!(spans.len(), 2);
+    assert!(spans.iter().all(|s| s.trace_id == 0xBEEF));
+    assert!(spans.iter().any(|s| s.method == "get_telemetry" && !s.error));
+    assert!(spans.iter().any(|s| s.method == "get_task_status" && s.error));
+}

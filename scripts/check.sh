@@ -66,6 +66,20 @@ if [[ "$fast" == "0" ]]; then
   echo "==> byzantine scenario smoke (scale --byzantine 0.2)"
   cargo run --release --quiet -- scale --byzantine 0.2 --clients 10 --rounds 3
 
+  # Telemetry export smoke: the device-mix scenario must snapshot a
+  # parseable JSON export carrying the core round-phase histograms and
+  # the per-RPC latency digest (the observability acceptance surface).
+  echo "==> telemetry snapshot smoke (scale --device-mix --telemetry-file)"
+  cargo run --release --quiet -- scale --device-mix --clients 12 --rounds 2 \
+    --telemetry-file TELEMETRY_smoke.json >/dev/null
+  for key in round_phase_joining_ms round_phase_training_ms \
+             round_phase_commit_ms rpc rounds; do
+    grep -q "\"$key\"" TELEMETRY_smoke.json \
+      || { echo "telemetry snapshot missing $key"; exit 1; }
+  done
+  rm -f TELEMETRY_smoke.json
+  echo "    telemetry snapshot OK"
+
   # Perf trajectory: snapshot the hot-path micro-bench into
   # BENCH_hotpath.json (quick measure windows; compare across commits).
   echo "==> bench snapshot (hotpath_micro -> BENCH_hotpath.json)"
