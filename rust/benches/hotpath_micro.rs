@@ -408,6 +408,7 @@ fn main() {
             service: ServiceKind::Task,
             method: "heartbeat",
             principal: Some(42),
+            trace_id: None,
         };
         snap.report(b.run("policy_admit", || {
             policy.admit(&msg, &ctx).expect("admit");
@@ -500,6 +501,95 @@ fn main() {
             }
             std::hint::black_box(leaf.forward_request(5).expect("forward"));
         }));
+    }
+
+    bench::section("sharded data plane (per-shard poll / upload / commit merge)");
+    // The shard layer's three hot costs at 1 / 4 / 8 shards, single-
+    // threaded: a poll (admission gate + lease touch, one shard mutex),
+    // an upload batch (open lanes + fold the cohort shard-locally), and
+    // the full management-path commit (cohort formation + lane folds +
+    // partial merge at the root). Single-threaded numbers isolate the
+    // partition overhead — the concurrency win is measured by
+    // `scale --shards N`, not here.
+    {
+        use florida::config::PolicyConfig;
+        use florida::orchestrator::TaskBuilder;
+        use florida::services::management::NoEval;
+        use florida::shard::{ShardIngestPlane, ShardedPolicy, ShardedSessions};
+
+        let sdim = 1024usize;
+        let k = 32u64;
+        let members: Vec<u64> = (1..=k).collect();
+        let sdelta = vec![0.01f32; sdim];
+        let sbytes = (sdim * 4) as u64;
+        for shards in [1usize, 4, 8] {
+            let registry = ShardedSessions::with_shards(60_000, shards);
+            let policy = ShardedPolicy::with_shards(
+                PolicyConfig {
+                    enabled: true,
+                    bucket_capacity: 1e18,
+                    refill_per_sec: 1e9,
+                    ..PolicyConfig::default()
+                },
+                shards,
+            );
+            for &c in &members {
+                registry.touch_v1(c, 0);
+            }
+            let mut next = 0u64;
+            snap.report(b.run(&format!("sharded_poll ({shards} shard)"), || {
+                next = next % k + 1;
+                policy.admit_principal(next, 0).expect("admit");
+                registry.touch_v1(next, 0);
+            }));
+
+            let plane = ShardIngestPlane::new(1, "fedavg", 0.0, shards);
+            snap.report(b.run_bytes(
+                &format!("sharded_upload ({shards} shard, {k} folds)"),
+                k * sbytes,
+                || {
+                    plane.begin_local(0, 0, &members, sdim).expect("begin");
+                    for &c in &members {
+                        let (ok, why) = plane.accept(c, 0, &sdelta, 1.0, 0.1).expect("accept");
+                        assert!(ok, "{why}");
+                    }
+                },
+            ));
+
+            let srv = FloridaServer::sharded(false, Arc::new(NoEval), 13, true, shards);
+            let task = TaskBuilder::new(&format!("bench-shard-{shards}"))
+                .clients_per_round(k as usize)
+                .rounds(u64::MAX / 2) // never completes inside the bench
+                .round_timeout_ms(u64::MAX / 4)
+                .deploy(&srv.management, ModelSnapshot::new(0, vec![0.0; sdim]))
+                .expect("deploy")
+                .id();
+            let cplane = ShardIngestPlane::new(task, "fedavg", 0.0, shards);
+            snap.report(b.run_bytes(
+                &format!("partial_merge_commit ({shards} shard, {k} clients)"),
+                k * sbytes,
+                || {
+                    let now = srv.now_ms();
+                    for &c in &members {
+                        srv.management.join(c, task, [0u8; 32], now).expect("join");
+                    }
+                    for &c in &members {
+                        let _ = srv
+                            .management
+                            .fetch_round(c, task, &srv.selection, now)
+                            .expect("fetch");
+                    }
+                    let round = srv.management.with_task(task, |t| Ok(t.round)).expect("round");
+                    cplane.begin_round(&srv.management, sdim).expect("begin_round");
+                    for &c in &members {
+                        let (ok, why) = cplane.accept(c, round, &sdelta, 1.0, 0.1).expect("accept");
+                        assert!(ok, "{why}");
+                    }
+                    let folded = cplane.commit(&srv.management, now + 1).expect("commit");
+                    assert_eq!(folded, k, "commit must credit the full cohort");
+                },
+            ));
+        }
     }
 
     bench::section("crypto primitives");

@@ -67,6 +67,10 @@ struct LeafRound {
     round: u64,
     base_version: u64,
     members: Vec<u64>,
+    /// Same ids as `members`, set-shaped: membership checks on the
+    /// upload path must not scan the slice (shard-ingest lanes carry
+    /// fleet-scale slices, where a linear probe per upload is O(n²)).
+    member_set: BTreeSet<u64>,
     reported: BTreeSet<u64>,
     fold: Box<dyn AggregatorFold>,
     loss_sum: f64,
@@ -139,6 +143,7 @@ impl LeafAggregator {
             round: a.round,
             base_version: a.base_version,
             members: a.members.clone(),
+            member_set: a.members.iter().copied().collect(),
             reported: BTreeSet::new(),
             fold,
             loss_sum: 0.0,
@@ -164,7 +169,7 @@ impl LeafAggregator {
         if round != r.round {
             return Ok((false, format!("stale round {round} (now {})", r.round)));
         }
-        if !r.members.contains(&client_id) {
+        if !r.member_set.contains(&client_id) {
             return Ok((false, format!("client {client_id} not in this leaf's slice")));
         }
         if r.reported.contains(&client_id) {

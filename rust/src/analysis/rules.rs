@@ -1,4 +1,4 @@
-//! The six project-grounded lint rules.
+//! The seven project-grounded lint rules.
 //!
 //! Each rule encodes a bug class this repo has actually shipped and
 //! fixed by hand (see `docs/architecture.md` § "Static analysis &
@@ -22,6 +22,10 @@
 //! * [`LockAcrossSend`] — a `MutexGuard` held across a transport
 //!   `send`/`send_owned` serializes the data plane; the lock-discipline
 //!   precondition for sharding it.
+//! * [`GlobalLockOnHotPath`] — a Mutex acquired inside a
+//!   poll/upload/heartbeat handler re-serializes what the shard plane
+//!   partitioned; the hot path must route through `ShardRouter` and
+//!   take only its home shard's lock.
 
 use super::{Finding, SourceFile};
 use crate::analysis::tokenizer::{TokKind, Token};
@@ -52,6 +56,7 @@ pub fn default_rules() -> Vec<Box<dyn Rule>> {
         Box::new(MsgCoverage),
         Box::new(UncheckedWireLength),
         Box::new(LockAcrossSend),
+        Box::new(GlobalLockOnHotPath),
     ]
 }
 
@@ -68,6 +73,7 @@ fn server_side(path: &str) -> bool {
         "/aggtree/",
         "/metrics/",
         "/obs/",
+        "/shard/",
     ]
     .iter()
     .any(|d| path.contains(d))
@@ -779,6 +785,87 @@ impl Rule for LockAcrossSend {
     }
 }
 
+// ---------------------------------------------------------------------------
+// 7. global-lock-on-hot-path
+// ---------------------------------------------------------------------------
+
+/// Lock acquisition inside a poll/upload/heartbeat handler.
+pub struct GlobalLockOnHotPath;
+
+/// Function-name substrings that mark a hot-path handler.
+const HOT_FN_MARKERS: [&str; 3] = ["poll", "upload", "heartbeat"];
+
+impl Rule for GlobalLockOnHotPath {
+    fn name(&self) -> &'static str {
+        "global-lock-on-hot-path"
+    }
+
+    fn description(&self) -> &'static str {
+        "a Mutex acquired inside a poll/upload/heartbeat handler \
+         re-serializes the sharded data plane; route the request through \
+         ShardRouter so it takes only its home shard's lock"
+    }
+
+    fn applies_to(&self, path: &str) -> bool {
+        path.contains("/services/") || path.contains("/shard/")
+    }
+
+    fn check(&self, files: &[SourceFile], out: &mut Vec<Finding>) {
+        for f in files.iter().filter(|f| self.applies_to(&f.path)) {
+            let c = &f.code;
+            let mut i = 0usize;
+            while i + 1 < c.len() {
+                let is_hot_fn = c[i].ident("fn")
+                    && c[i + 1].kind == TokKind::Ident
+                    && HOT_FN_MARKERS
+                        .iter()
+                        .any(|m| c[i + 1].text.to_ascii_lowercase().contains(m));
+                if !is_hot_fn || f.in_test(c[i + 1].line) {
+                    i += 1;
+                    continue;
+                }
+                // Handler body: the signature's first `{` (a `;` means a
+                // trait declaration — nothing to scan).
+                let mut j = i + 2;
+                while j < c.len() && !c[j].punct("{") && !c[j].punct(";") {
+                    j += 1;
+                }
+                let Some(close) = c
+                    .get(j)
+                    .filter(|t| t.punct("{"))
+                    .and_then(|_| close_of(c, j))
+                else {
+                    i = j.max(i + 1);
+                    continue;
+                };
+                for k in j..close {
+                    let locks = c[k].kind == TokKind::Ident
+                        && LOCK_CALLS.contains(&c[k].text.as_str())
+                        && c.get(k + 1).map(|t| t.punct("(")).unwrap_or(false)
+                        // `.lock(` / `.locked(` — a method call, not a fn
+                        // named `lock` being declared.
+                        && k.checked_sub(1).map(|p| c[p].punct(".")).unwrap_or(false);
+                    if locks && !f.in_test(c[k].line) {
+                        out.push(Finding {
+                            rule: self.name(),
+                            file: f.path.clone(),
+                            line: c[k].line,
+                            message: format!(
+                                "hot-path handler `{}` acquires a lock via .{}() — every \
+                                 poll/upload/heartbeat serializes here; shard the state \
+                                 behind ShardRouter (client/task home shard) instead",
+                                c[i + 1].text,
+                                c[k].text
+                            ),
+                        });
+                    }
+                }
+                i = close;
+            }
+        }
+    }
+}
+
 /// Parse the bound name of `let [mut] name =` / `let Ok(name) =` /
 /// `let Some(mut name) =`; returns (name, index-after-pattern).
 fn let_binding_name(c: &[Token], let_idx: usize) -> Option<(String, usize)> {
@@ -1069,6 +1156,50 @@ mod tests {
         assert_eq!(got.len(), 1, "{got:?}");
     }
 
+    // -- global-lock-on-hot-path -------------------------------------------
+
+    #[test]
+    fn hot_path_lock_flags_handlers_by_name() {
+        let src = "impl S {\n\
+                   fn handle_poll(&self) { let g = self.inner.lock().unwrap(); }\n\
+                   fn upload_plain(&self) -> u32 { *self.state.locked() }\n\
+                   fn on_heartbeat(&self) { let _ = self.reg.try_lock(); }\n\
+                   fn commit(&self) { let g = self.inner.lock().unwrap(); }\n\
+                   }\n";
+        let got = lint_one(Box::new(GlobalLockOnHotPath), "rust/src/services/x.rs", src);
+        assert_eq!(got.len(), 3, "{got:?}");
+        assert!(got[0].message.contains("handle_poll"));
+        assert!(got[1].message.contains("upload_plain"));
+        assert!(got[2].message.contains("on_heartbeat"));
+    }
+
+    #[test]
+    fn hot_path_lock_scopes_to_services_and_shard() {
+        let src = "fn poll_task(&self) { let g = self.inner.lock().unwrap(); }\n";
+        assert_eq!(lint_one(Box::new(GlobalLockOnHotPath), "rust/src/shard/x.rs", src).len(), 1);
+        // The orchestrator is below the dispatch surface — out of scope.
+        assert!(
+            lint_one(Box::new(GlobalLockOnHotPath), "rust/src/orchestrator/x.rs", src).is_empty()
+        );
+        let test_src = "#[cfg(test)]\nmod tests {\n\
+                        fn poll_task(m: &std::sync::Mutex<u32>) { let g = m.lock().unwrap(); }\n\
+                        }\n";
+        assert!(
+            lint_one(Box::new(GlobalLockOnHotPath), "rust/src/services/x.rs", test_src).is_empty()
+        );
+    }
+
+    #[test]
+    fn hot_path_lock_ignores_lock_free_handlers_and_allows() {
+        // Relaxed-atomic instruments and shard-routed calls don't lock.
+        let src = "fn note_upload(&self) { self.stats.uploads.inc(); }\n\
+                   fn poll_gate(&self) {\n\
+                   // florida-lint: allow(global-lock-on-hot-path): single-shard fallback\n\
+                   let g = self.inner.lock().unwrap();\n}\n";
+        let got = lint_one(Box::new(GlobalLockOnHotPath), "rust/src/services/x.rs", src);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
     #[test]
     fn default_rules_names_are_unique_and_stable() {
         let rules = default_rules();
@@ -1082,6 +1213,7 @@ mod tests {
                 "msg-coverage",
                 "unchecked-wire-length",
                 "lock-across-send",
+                "global-lock-on-hot-path",
             ]
         );
         for r in &rules {

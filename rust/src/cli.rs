@@ -125,9 +125,16 @@ COMMANDS:
              attack (magnitude-bomb / sign-flip / label-flip); sweeps
              loss-vs-f for fedavg vs trimmed-mean/median and proves the
              admission policy engine sheds a misbehaving client
+             [--shards N [--sessions M]]  sharded data plane: M
+             simulated sessions (default 2^20) hammer poll/upload at
+             1 vs N shards with the same thread count, then the
+             N-shard partial-merge commit is proved bit-identical to
+             the flat fold; gates on >= 0.7x-linear throughput scaling
   serve      Serve the platform over TCP
              --addr HOST:PORT [--task cfg.json] [--artifacts DIR]
              [--dim N] [--no-attest] [--conns N] [--lease-ms N]
+             [--shards N]  partition sessions/policy/ingest instruments
+             across N data-plane shards (default 1, bit-identical)
              [--state-dir DIR [--fsync always|commit|never]]
              [--telemetry-file FILE]
              With --state-dir, tasks journal + checkpoint there and are
@@ -265,6 +272,36 @@ fn cmd_scale(args: &Args) -> Result<()> {
     let n = args.usize_or("clients", 256)?;
     let rounds = args.usize_or("rounds", 3)? as u64;
     let seed = args.usize_or("seed", 7)? as u64;
+    if args.flag("shards").is_some() {
+        // Sharded data plane: hammer the hot-path primitives over a
+        // ~1M-session simulated fleet at 1 vs N shards, then prove the
+        // sharded partial-merge commit matches the flat fold exactly.
+        let shards = args.usize_or("shards", 4)?;
+        let sessions = args.usize_or("sessions", 1 << 20)?;
+        let r = crate::simulator::scaling::run_shard_scale(shards, sessions, seed)?;
+        println!(
+            "shard-scale: {} sessions over {} shard(s), {} worker thread(s) ({} core(s))",
+            r.sessions, r.shards, r.threads, r.cores
+        );
+        println!(
+            "  poll:   {:>12.0} ops/s flat -> {:>12.0} ops/s sharded ({:.2}x)",
+            r.poll_ops_per_sec_flat, r.poll_ops_per_sec_sharded, r.poll_speedup
+        );
+        println!(
+            "  upload: {:>12.0} ops/s flat -> {:>12.0} ops/s sharded ({:.2}x)",
+            r.upload_ops_per_sec_flat, r.upload_ops_per_sec_sharded, r.upload_speedup
+        );
+        println!(
+            "  commit exactness: {} rounds, bit-identical {} (max |diff| {}) (wall {} ms)",
+            r.rounds_completed, r.bit_identical, r.max_abs_diff, r.wall_ms
+        );
+        r.gate()?;
+        println!(
+            "  gate passed: flat fold matched bitwise; scaling >= 0.7x ideal where the host \
+             can express it"
+        );
+        return Ok(());
+    }
     if let Some(spec) = args.flag("tree") {
         // Hierarchical aggregation: the same seeded fleet through a
         // leaf/master tree vs the flat path, verified bit-identical.
@@ -421,16 +458,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| Error::Config("serve requires --addr".into()))?;
     let seed = args.usize_or("seed", 99)? as u64;
     let attest = !args.switch("no-attest");
+    // Data-plane shard count: sessions, policy buckets and hot-path
+    // instruments partition by stable client-id hash; 1 = today's flat
+    // server (bit-identical, pinned by the shard_determinism suite).
+    let shards = args.usize_or("shards", 1)?;
     let server = match args.flag("state-dir") {
         Some(dir) => {
             let storage = StorageConfig::new(dir)
                 .fsync(FsyncPolicy::parse(&args.flag_or("fsync", "commit"))?);
-            let s = Arc::new(FloridaServer::with_storage(
+            let s = Arc::new(FloridaServer::with_storage_sharded(
                 attest,
                 Arc::new(NoEval),
                 seed,
                 true,
                 storage,
+                shards,
             )?);
             for t in s.management.list_tasks() {
                 println!(
@@ -444,11 +486,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             s
         }
-        None => Arc::new(FloridaServer::with_evaluator(
+        None => Arc::new(FloridaServer::sharded(
             attest,
             Arc::new(NoEval),
             seed,
             true,
+            shards,
         )),
     };
     // Session liveness lease (protocol v2); default from SessionConfig.
@@ -784,6 +827,19 @@ mod tests {
         let a = Args::parse(&argv("scale --tree depth=1 --clients 12 --rounds 1")).unwrap();
         assert!(cmd_scale(&a).is_err());
         let a = Args::parse(&argv("scale --tree depth=3 --leaves 2")).unwrap();
+        assert!(cmd_scale(&a).is_err());
+    }
+
+    #[test]
+    fn scale_shards_runs_and_validates() {
+        // One shard: gate reduces to commit exactness (speedup is only
+        // enforced when the partition can express it), so this is a
+        // stable CI smoke; the check.sh smoke runs the 4-shard fleet.
+        let a = Args::parse(&argv("scale --shards 1 --sessions 2048")).unwrap();
+        cmd_scale(&a).unwrap();
+        let a = Args::parse(&argv("scale --shards 0 --sessions 2048")).unwrap();
+        assert!(cmd_scale(&a).is_err());
+        let a = Args::parse(&argv("scale --shards 2 --sessions 1")).unwrap();
         assert!(cmd_scale(&a).is_err());
     }
 

@@ -52,6 +52,7 @@ pub mod quant;
 pub mod runtime;
 pub mod secagg;
 pub mod services;
+pub mod shard;
 pub mod simulator;
 pub mod storage;
 pub mod transport;

@@ -36,6 +36,9 @@ pub struct Report {
     pub rpc: Vec<RpcReport>,
     /// Slowest buffered rounds, longest first, with phase breakdown.
     pub rounds: Vec<RoundTrace>,
+    /// Per-shard hot-path counters, `(shard index, name → value)`; one
+    /// row even for an unsharded server (shard 0).
+    pub shards: Vec<(usize, Vec<(&'static str, u64)>)>,
 }
 
 impl Report {
@@ -78,6 +81,19 @@ impl Report {
                 out.push_str(&format!("florida_{name}{{quantile=\"{q}\"}} {v}\n"));
             }
             out.push_str(&format!("florida_{name}_max {}\n", h.max));
+        }
+        // Per-shard rows carry the shard index as a label so a single
+        // scrape shows whether the partition is spreading load. Emitted
+        // name-major: a family's samples must be contiguous under its
+        // TYPE line, and every shard reports the same counter set.
+        if let Some((_, first)) = self.shards.first() {
+            for (i, &(name, _)) in first.iter().enumerate() {
+                out.push_str(&format!("# TYPE florida_{name} counter\n"));
+                for (shard, counters) in &self.shards {
+                    let v = counters.get(i).map(|&(_, v)| v).unwrap_or(0);
+                    out.push_str(&format!("florida_{name}{{shard=\"{shard}\"}} {v}\n"));
+                }
+            }
         }
         if !self.rpc.is_empty() {
             out.push_str("# TYPE florida_rpc_latency_ns summary\n");
@@ -168,12 +184,24 @@ impl Report {
                     .set("committed", t.committed)
             })
             .collect();
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|(shard, counters)| {
+                let mut row = Json::obj().set("shard", *shard as u64);
+                for &(name, v) in counters {
+                    row = row.set(name, v);
+                }
+                row
+            })
+            .collect();
         Json::obj()
             .set("counters", counters)
             .set("gauges", gauges)
             .set("histograms", hists)
             .set("rpc", rpc)
             .set("rounds", rounds)
+            .set("shards", shards)
     }
 
     pub fn to_json(&self) -> String {
@@ -252,6 +280,10 @@ mod tests {
                 participants: 6,
                 committed: true,
             }],
+            shards: vec![
+                (0, vec![("shard_polls", 3), ("shard_uploads", 2)]),
+                (1, vec![("shard_polls", 4), ("shard_uploads", 1)]),
+            ],
         }
     }
 
@@ -269,6 +301,11 @@ mod tests {
         assert!(text
             .contains("florida_rpc_latency_ns{method=\"upload_plain\",quantile=\"0.95\"} 4095"));
         assert!(text.contains("florida_rpc_errors_total{method=\"upload_plain\"} 1"));
+        // Per-shard counters: one TYPE line, contiguous labelled samples.
+        assert_eq!(text.matches("# TYPE florida_shard_polls counter").count(), 1);
+        assert!(text.contains("florida_shard_polls{shard=\"0\"} 3"));
+        assert!(text.contains("florida_shard_polls{shard=\"1\"} 4"));
+        assert!(text.contains("florida_shard_uploads{shard=\"1\"} 1"));
         // Cumulative bucket counts are monotone.
         let mut last = 0u64;
         for line in text.lines().filter(|l| {
@@ -308,6 +345,10 @@ mod tests {
         let rpc = parsed.get("rpc").unwrap().as_arr().unwrap();
         assert_eq!(rpc[0].get("method").unwrap().as_str(), Some("upload_plain"));
         assert_eq!(rpc[0].get("p99_ns").unwrap().as_u64(), Some(4095));
+        let shards = parsed.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[1].get("shard").unwrap().as_u64(), Some(1));
+        assert_eq!(shards[1].get("shard_polls").unwrap().as_u64(), Some(4));
     }
 
     #[test]

@@ -87,6 +87,9 @@ pub struct Telemetry {
     pub agg_fold_ns: Histogram,
     /// Uploads zero-scored by a Byzantine-robust fold.
     pub robust_zero_scored: Counter,
+    /// Partial accumulators absorbed at the root (leaf forwards and
+    /// shard-lane commits).
+    pub partials_absorbed: Counter,
     // -- sessions ------------------------------------------------------
     pub sessions_opened: Counter,
     pub sessions_renewed: Counter,
@@ -129,6 +132,7 @@ impl Telemetry {
             ("evictions", self.evictions.get()),
             ("backfills", self.backfills.get()),
             ("robust_zero_scored", self.robust_zero_scored.get()),
+            ("partials_absorbed", self.partials_absorbed.get()),
             ("sessions_opened", self.sessions_opened.get()),
             ("sessions_renewed", self.sessions_renewed.get()),
             ("sessions_swept", self.sessions_swept.get()),
@@ -156,6 +160,66 @@ impl Telemetry {
             ("journal_append_ns", self.journal_append_ns.snapshot()),
             ("checkpoint_write_ns", self.checkpoint_write_ns.snapshot()),
         ]
+    }
+}
+
+/// Per-shard hot-path instruments: one row of relaxed counters per
+/// worker shard, so the scale report (and the `florida_shard_*`
+/// export) can show whether the partition is actually spreading load.
+#[derive(Default)]
+pub struct ShardStats {
+    pub polls: Counter,
+    pub uploads: Counter,
+    pub heartbeats: Counter,
+    /// Lease evictions swept off this shard's session slice.
+    pub evictions: Counter,
+    /// Eviction batches this shard posted to the tick mailbox.
+    pub mailbox_batches: Counter,
+}
+
+impl ShardStats {
+    /// Counter inventory for export, name → value.
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("shard_polls", self.polls.get()),
+            ("shard_uploads", self.uploads.get()),
+            ("shard_heartbeats", self.heartbeats.get()),
+            ("shard_evictions", self.evictions.get()),
+            ("shard_mailbox_batches", self.mailbox_batches.get()),
+        ]
+    }
+}
+
+/// The per-shard instrument rows for one server (`shards` entries).
+#[derive(Default)]
+pub struct ShardSet {
+    stats: Vec<ShardStats>,
+}
+
+impl ShardSet {
+    pub fn new(shards: usize) -> ShardSet {
+        ShardSet {
+            stats: (0..shards.max(1)).map(|_| ShardStats::default()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stats.is_empty()
+    }
+
+    /// One shard's row. Panics on out-of-range — callers index with the
+    /// same `ShardRouter` that sized the set.
+    pub fn shard(&self, i: usize) -> &ShardStats {
+        &self.stats[i]
+    }
+
+    /// Snapshot for the export surface: `(shard, counters)` per shard.
+    pub fn report(&self) -> Vec<(usize, Vec<(&'static str, u64)>)> {
+        self.stats.iter().enumerate().map(|(i, s)| (i, s.counters())).collect()
     }
 }
 
@@ -209,6 +273,24 @@ mod tests {
             .unwrap()
             .1;
         assert_eq!(train.count, 1);
+    }
+
+    #[test]
+    fn shard_set_reports_per_shard_rows() {
+        let s = ShardSet::new(3);
+        assert_eq!(s.len(), 3);
+        s.shard(0).polls.inc();
+        s.shard(2).uploads.add(5);
+        s.shard(2).mailbox_batches.inc();
+        let report = s.report();
+        assert_eq!(report.len(), 3);
+        assert_eq!(report[0].0, 0);
+        assert!(report[0].1.contains(&("shard_polls", 1)));
+        assert!(report[1].1.contains(&("shard_polls", 0)));
+        assert!(report[2].1.contains(&("shard_uploads", 5)));
+        assert!(report[2].1.contains(&("shard_mailbox_batches", 1)));
+        // Degenerate size clamps to one shard, never zero rows.
+        assert_eq!(ShardSet::new(0).len(), 1);
     }
 
     #[test]

@@ -846,6 +846,9 @@ impl RoundEngine {
             _ => return Ok((false, 0, "no round in progress".into())),
         };
         self.metrics.total_uploads += members.len() as u64;
+        if let Some(t) = &self.telemetry {
+            t.partials_absorbed.inc();
+        }
         // Journal per member so recovery's upload accounting matches the
         // flat path; per-member weight/loss ride as the partial's means
         // (the journal is bookkeeping — folds are not replayed from it).

@@ -30,9 +30,24 @@ use crate::storage::{FilePersistence, Persistence as _};
 // with the engine, but callers import it from here.
 pub use crate::orchestrator::{Evaluator, NoEval};
 
+/// Internal partition width for the engine registry. Fixed (not the
+/// server's `--shards`): this is residency bookkeeping, invisible to
+/// behavior — every cross-task iteration collects handles from all
+/// maps and sorts by task id, so ordering matches the old flat map.
+const ENGINE_SHARDS: usize = 8;
+
 /// The Management Service: task CRUD + delegation to per-task engines.
 pub struct ManagementService {
-    inner: Mutex<Inner>,
+    /// Engine registry, partitioned by task-id hash so task CRUD and
+    /// cross-task sweeps on one shard never contend with RPC delegation
+    /// to tasks homed elsewhere. Each engine sits behind its own mutex:
+    /// the maps only route (brief single-step locks), and a long fold
+    /// or commit on one task blocks nothing but that task.
+    shards: Vec<Mutex<HashMap<u64, Arc<Mutex<RoundEngine>>>>>,
+    /// Task-id allocator. Held across engine construction in
+    /// `insert_engine` so a failed create never consumes an id.
+    ids: Mutex<u64>,
+    seed: u64,
     evaluator: Arc<dyn Evaluator>,
     events: EventBus,
     /// Durability: when set, every task journals + checkpoints under
@@ -43,35 +58,68 @@ pub struct ManagementService {
     telemetry: OnceLock<Arc<Telemetry>>,
 }
 
-struct Inner {
-    next_task_id: u64,
-    engines: HashMap<u64, RoundEngine>,
-    seed: u64,
-}
-
 fn task_seed(seed: u64, task_id: u64) -> u64 {
     seed ^ task_id.wrapping_mul(0x9E3779B97F4A7C15)
 }
 
+fn empty_shards() -> Vec<Mutex<HashMap<u64, Arc<Mutex<RoundEngine>>>>> {
+    (0..ENGINE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect()
+}
+
 impl ManagementService {
-    /// Lock the engine registry. Engines mutate in multi-step phases, so
-    /// a guard abandoned by a panicking thread may hold a half-advanced
-    /// engine — don't silently recover it. Result paths surface `Err`,
-    /// infallible observers degrade to an empty view, and either way one
-    /// crashed request thread stops panicking every later RPC.
-    fn locked(&self) -> Result<MutexGuard<'_, Inner>> {
-        self.inner
+    /// Lock one shard of the registry map, recovering from poisoning:
+    /// every mutation behind a map lock is a single-step insert/lookup/
+    /// remove, so an abandoned guard still holds a structurally intact
+    /// map — the engines themselves live behind their own locks.
+    fn shard_map(
+        &self,
+        task_id: u64,
+    ) -> MutexGuard<'_, HashMap<u64, Arc<Mutex<RoundEngine>>>> {
+        self.shards[crate::shard::shard_of(task_id, ENGINE_SHARDS)]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The task's engine handle — a brief map-lock lookup. The caller
+    /// locks the engine *after* this returns, so no map lock is ever
+    /// held while engine code runs.
+    fn engine_of(&self, task_id: u64) -> Result<Arc<Mutex<RoundEngine>>> {
+        self.shard_map(task_id)
+            .get(&task_id)
+            .cloned()
+            .ok_or_else(|| Error::Task(format!("unknown task {task_id}")))
+    }
+
+    /// Lock one engine. Engines mutate in multi-step phases, so a guard
+    /// abandoned by a panicking thread may hold a half-advanced engine —
+    /// don't silently recover it. Result paths surface `Err`, infallible
+    /// sweeps skip the task, and either way one crashed request thread
+    /// stops panicking every later RPC.
+    fn lock_engine(engine: &Mutex<RoundEngine>) -> Result<MutexGuard<'_, RoundEngine>> {
+        engine
             .lock()
             .map_err(|_| Error::Task("management registry poisoned".into()))
     }
 
+    /// Snapshot every engine handle, sorted by task id — the batch step
+    /// of every cross-task sweep. Each map lock is taken and dropped in
+    /// turn; none is held when the caller starts locking engines, so
+    /// sweeps can never hold registry state across engine work.
+    fn engines_sorted(&self) -> Vec<(u64, Arc<Mutex<RoundEngine>>)> {
+        let mut v: Vec<(u64, Arc<Mutex<RoundEngine>>)> = Vec::new();
+        for shard in &self.shards {
+            let g = shard.lock().unwrap_or_else(|p| p.into_inner());
+            v.extend(g.iter().map(|(&id, e)| (id, Arc::clone(e))));
+        }
+        v.sort_by_key(|(id, _)| *id);
+        v
+    }
+
     pub fn new(evaluator: Arc<dyn Evaluator>, seed: u64) -> ManagementService {
         ManagementService {
-            inner: Mutex::new(Inner {
-                next_task_id: 1,
-                engines: HashMap::new(),
-                seed,
-            }),
+            shards: empty_shards(),
+            ids: Mutex::new(1),
+            seed,
             evaluator,
             events: EventBus::new(),
             storage: None,
@@ -87,9 +135,10 @@ impl ManagementService {
         if self.telemetry.set(Arc::clone(&telemetry)).is_err() {
             return;
         }
-        if let Ok(mut g) = self.locked() {
-            for engine in g.engines.values_mut() {
-                engine.set_telemetry(Arc::clone(&telemetry));
+        for (id, engine) in self.engines_sorted() {
+            match Self::lock_engine(&engine) {
+                Ok(mut t) => t.set_telemetry(Arc::clone(&telemetry)),
+                Err(e) => log::warn!("task {id}: telemetry injection skipped: {e}"),
             }
         }
     }
@@ -110,49 +159,48 @@ impl ManagementService {
         std::fs::create_dir_all(&storage.state_dir)?;
         let recovered = crate::storage::recover(&storage.state_dir)?;
         let svc = ManagementService {
-            inner: Mutex::new(Inner {
-                next_task_id: 1,
-                engines: HashMap::new(),
-                seed,
-            }),
+            shards: empty_shards(),
+            ids: Mutex::new(1),
+            seed,
             evaluator,
             events: EventBus::new(),
             storage: Some(storage.clone()),
             telemetry: OnceLock::new(),
         };
-        {
-            let mut g = svc.locked()?;
-            for rt in recovered {
-                let id = rt.task_id;
-                let mut engine = RoundEngine::restore(
-                    id,
-                    rt.config,
-                    rt.store,
-                    task_seed(seed, id),
-                    svc.events.clone(),
-                    rt.state,
-                    rt.round,
-                    rt.metrics,
-                )?;
-                let mut persistence = FilePersistence::attach(&storage, id)?;
-                if let Some(round) = rt.interrupted_round {
-                    log::warn!(
-                        "task {id}: round {round} was in flight at shutdown — failing and \
-                         retrying it (streaming folds are not replayable mid-round)"
-                    );
-                    engine.metrics.failed_rounds += 1;
-                    let _ = persistence.round_failed(round);
-                }
-                engine.resume_persistence(Box::new(persistence));
-                log::info!(
-                    "task {id}: recovered at round {} (model version {}, state {})",
-                    engine.round,
-                    engine.global.version,
-                    engine.state.name()
+        for rt in recovered {
+            let id = rt.task_id;
+            let mut engine = RoundEngine::restore(
+                id,
+                rt.config,
+                rt.store,
+                task_seed(seed, id),
+                svc.events.clone(),
+                rt.state,
+                rt.round,
+                rt.metrics,
+            )?;
+            let mut persistence = FilePersistence::attach(&storage, id)?;
+            if let Some(round) = rt.interrupted_round {
+                log::warn!(
+                    "task {id}: round {round} was in flight at shutdown — failing and \
+                     retrying it (streaming folds are not replayable mid-round)"
                 );
-                g.next_task_id = g.next_task_id.max(id + 1);
-                g.engines.insert(id, engine);
+                engine.metrics.failed_rounds += 1;
+                let _ = persistence.round_failed(round);
             }
+            engine.resume_persistence(Box::new(persistence));
+            log::info!(
+                "task {id}: recovered at round {} (model version {}, state {})",
+                engine.round,
+                engine.global.version,
+                engine.state.name()
+            );
+            {
+                // Counter lock is a single-step max — poison-recoverable.
+                let mut next = svc.ids.lock().unwrap_or_else(|p| p.into_inner());
+                *next = (*next).max(id + 1);
+            }
+            svc.shard_map(id).insert(id, Arc::new(Mutex::new(engine)));
         }
         Ok(svc)
     }
@@ -193,9 +241,12 @@ impl ManagementService {
         &self,
         build: impl FnOnce(u64, u64, EventBus) -> Result<RoundEngine>,
     ) -> Result<u64> {
-        let mut g = self.locked()?;
-        let id = g.next_task_id;
-        let mut engine = build(id, task_seed(g.seed, id), self.events.clone())?;
+        // Held across the build so a failed create does not consume an
+        // id — recovery pins that ids resume contiguously. Single-step
+        // counter bump, so poison recovery is safe.
+        let mut next = self.ids.lock().unwrap_or_else(|p| p.into_inner());
+        let id = *next;
+        let mut engine = build(id, task_seed(self.seed, id), self.events.clone())?;
         if let Some(storage) = &self.storage {
             // Durable-or-failed: the task exists only if its initial
             // checkpoint + journal landed. On failure, sweep any partial
@@ -213,8 +264,8 @@ impl ManagementService {
         if let Some(t) = self.telemetry.get() {
             engine.set_telemetry(Arc::clone(t));
         }
-        g.next_task_id += 1;
-        g.engines.insert(id, engine);
+        *next += 1;
+        self.shard_map(id).insert(id, Arc::new(Mutex::new(engine)));
         Ok(id)
     }
 
@@ -227,18 +278,15 @@ impl ManagementService {
     /// checkpoints succeeded; failures are logged, not fatal — the WAL
     /// already covers anything a failed checkpoint would have captured.
     pub fn checkpoint_all(&self) -> usize {
-        let mut g = match self.locked() {
-            Ok(g) => g,
-            Err(e) => {
-                log::error!("checkpoint_all skipped: {e}");
-                return 0;
-            }
-        };
         let mut ok = 0;
-        for t in g.engines.values_mut() {
+        for (id, engine) in self.engines_sorted() {
+            let Ok(mut t) = Self::lock_engine(&engine) else {
+                log::warn!("task {id}: shutdown checkpoint skipped (engine poisoned)");
+                continue;
+            };
             match t.checkpoint() {
                 Ok(()) => ok += 1,
-                Err(e) => log::warn!("task {}: shutdown checkpoint failed: {e}", t.id),
+                Err(e) => log::warn!("task {id}: shutdown checkpoint failed: {e}"),
             }
         }
         ok
@@ -260,42 +308,40 @@ impl ManagementService {
         })
     }
 
-    /// First advertisable task matching (app, workflow).
+    /// First advertisable task matching (app, workflow), scanning in
+    /// task-id order so the answer matches the old flat registry.
     pub fn advertise(&self, app: &str, workflow: &str) -> Option<TaskDescriptor> {
-        let g = self.locked().ok()?;
-        let mut tasks: Vec<&RoundEngine> = g.engines.values().collect();
-        tasks.sort_by_key(|t| t.id);
-        tasks
-            .iter()
-            .find(|t| {
-                t.state == TaskState::Running
-                    && t.config.app_name == app
-                    && t.config.workflow_name == workflow
-            })
-            .map(|t| t.descriptor())
+        for (_, engine) in self.engines_sorted() {
+            let Ok(t) = Self::lock_engine(&engine) else {
+                continue;
+            };
+            if t.state == TaskState::Running
+                && t.config.app_name == app
+                && t.config.workflow_name == workflow
+            {
+                return Some(t.descriptor());
+            }
+        }
+        None
     }
 
     pub fn list_tasks(&self) -> Vec<TaskDescriptor> {
-        let Ok(g) = self.locked() else {
-            return Vec::new();
-        };
-        let mut v: Vec<TaskDescriptor> = g.engines.values().map(RoundEngine::descriptor).collect();
-        v.sort_by_key(|d| d.task_id);
-        v
+        self.engines_sorted()
+            .iter()
+            .filter_map(|(_, e)| Self::lock_engine(e).ok().map(|t| t.descriptor()))
+            .collect()
     }
 
-    /// Run `f` against one task's engine under the registry lock.
+    /// Run `f` against one task's engine, under that engine's lock only
+    /// — concurrent requests to different tasks never serialize here.
     pub fn with_task<R>(
         &self,
         task_id: u64,
         f: impl FnOnce(&mut RoundEngine) -> Result<R>,
     ) -> Result<R> {
-        let mut g = self.locked()?;
-        let t = g
-            .engines
-            .get_mut(&task_id)
-            .ok_or_else(|| Error::Task(format!("unknown task {task_id}")))?;
-        f(t)
+        let engine = self.engine_of(task_id)?;
+        let mut t = Self::lock_engine(&engine)?;
+        f(&mut t)
     }
 
     // -----------------------------------------------------------------
@@ -440,13 +486,17 @@ impl ManagementService {
     }
 
     /// Deadline sweep across every engine: call periodically (and on
-    /// events). `dir` feeds caps-aware cohort policies.
+    /// events). `dir` feeds caps-aware cohort policies. Handles are
+    /// batched first (`engines_sorted` drops every map lock), then each
+    /// engine is advanced under its own lock alone — a slow deadline
+    /// commit on one task stalls neither the registry nor its peers.
     pub fn tick(&self, dir: &dyn ClientDirectory, now_ms: u64) {
         let eval = Arc::clone(&self.evaluator);
-        let Ok(mut g) = self.locked() else {
-            return;
-        };
-        for t in g.engines.values_mut() {
+        for (id, engine) in self.engines_sorted() {
+            let Ok(mut t) = Self::lock_engine(&engine) else {
+                log::warn!("task {id}: tick skipped (engine poisoned)");
+                continue;
+            };
             t.tick(&*eval, dir, now_ms);
         }
     }
@@ -454,16 +504,19 @@ impl ManagementService {
     /// Fan a session-lease eviction out to every engine: the evicted
     /// clients leave waiting pools, and open plaintext cohorts are
     /// repaired (slots backfilled from the join pool) instead of
-    /// waiting out the round deadline.
+    /// waiting out the round deadline. Same batch-then-notify shape as
+    /// `tick` — callers already dropped their registry locks (the
+    /// server's eviction mailbox), and no lock is held across engines.
     pub fn evict_clients(&self, evicted: &[u64], now_ms: u64) {
         if evicted.is_empty() {
             return;
         }
         let eval = Arc::clone(&self.evaluator);
-        let Ok(mut g) = self.locked() else {
-            return;
-        };
-        for t in g.engines.values_mut() {
+        for (id, engine) in self.engines_sorted() {
+            let Ok(mut t) = Self::lock_engine(&engine) else {
+                log::warn!("task {id}: eviction fan-out skipped (engine poisoned)");
+                continue;
+            };
             t.evict_clients(evicted, &*eval, now_ms);
         }
     }

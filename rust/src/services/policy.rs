@@ -137,67 +137,91 @@ impl PolicyEngine {
     }
 
     /// The admission decision for one routed request. `Err` becomes the
-    /// `ErrorReply` shed before any service runs.
+    /// `ErrorReply` shed before any service runs. Composes the two
+    /// shard-routable halves — the client gate, then the tenant quota —
+    /// exactly as [`crate::shard::ShardedPolicy`] does across engines,
+    /// so N=1 and the single-engine path share one code shape.
     pub fn admit(&self, msg: &Msg, ctx: &RequestCtx) -> Result<()> {
+        // Reputation gate + token bucket, for requests that act as a
+        // client principal (auth ran first, so `ctx.principal` is the
+        // verified identity; pre-registration traffic has none).
+        if let Some(id) = ctx.principal.or_else(|| rpc::client_id_of(msg)) {
+            self.admit_principal(id, ctx.now_ms)?;
+        }
+        // Per-tenant quota on task discovery.
+        if matches!(msg, Msg::PollTask { .. }) {
+            self.admit_tenant(msg, ctx.now_ms)?;
+        }
+        Ok(())
+    }
+
+    /// Client half of admission: the reputation floor and the token
+    /// bucket, keyed by principal — the part a sharded deployment
+    /// routes to the client's home shard.
+    pub fn admit_principal(&self, id: u64, now_ms: u64) -> Result<()> {
         let mut g = self.locked()?;
         if !g.cfg.enabled {
             return Ok(());
         }
         let cfg = g.cfg;
-        let now_ms = ctx.now_ms;
-        // Reputation gate + token bucket, for requests that act as a
-        // client principal (auth ran first, so `ctx.principal` is the
-        // verified identity; pre-registration traffic has none).
-        if let Some(id) = ctx.principal.or_else(|| rpc::client_id_of(msg)) {
-            let refusal = {
-                let st = g
-                    .clients
-                    .entry(id)
-                    .or_insert_with(|| ClientState::new(&cfg, now_ms));
-                st.advance(&cfg, now_ms);
-                if st.reputation < cfg.min_reputation {
-                    self.shed_reputation.fetch_add(1, Relaxed);
-                    Some(format!(
-                        "policy: client {id} reputation {:.2} below floor {:.2}",
-                        st.reputation, cfg.min_reputation
-                    ))
-                } else if st.tokens < 1.0 {
-                    self.shed_rate.fetch_add(1, Relaxed);
-                    Some(format!("policy: client {id} over rate limit"))
-                } else {
-                    st.tokens -= 1.0;
-                    None
-                }
-            };
-            if let Some(reason) = refusal {
-                g.rejected += 1;
-                return Err(Error::Server(reason));
+        let refusal = {
+            let st = g
+                .clients
+                .entry(id)
+                .or_insert_with(|| ClientState::new(&cfg, now_ms));
+            st.advance(&cfg, now_ms);
+            if st.reputation < cfg.min_reputation {
+                self.shed_reputation.fetch_add(1, Relaxed);
+                Some(format!(
+                    "policy: client {id} reputation {:.2} below floor {:.2}",
+                    st.reputation, cfg.min_reputation
+                ))
+            } else if st.tokens < 1.0 {
+                self.shed_rate.fetch_add(1, Relaxed);
+                Some(format!("policy: client {id} over rate limit"))
+            } else {
+                st.tokens -= 1.0;
+                None
             }
+        };
+        if let Some(reason) = refusal {
+            g.rejected += 1;
+            return Err(Error::Server(reason));
         }
-        // Per-tenant quota on task discovery.
-        if cfg.tenant_quota > 0 {
-            if let Msg::PollTask { app_name, .. } = msg {
-                let over = {
-                    let w = g.tenants.entry(app_name.clone()).or_insert(TenantWindow {
-                        start_ms: now_ms,
-                        count: 0,
-                    });
-                    if now_ms.saturating_sub(w.start_ms) >= cfg.quota_window_ms {
-                        w.start_ms = now_ms;
-                        w.count = 0;
-                    }
-                    w.count += 1;
-                    w.count > cfg.tenant_quota
-                };
-                if over {
-                    self.shed_quota.fetch_add(1, Relaxed);
-                    g.rejected += 1;
-                    return Err(Error::Server(format!(
-                        "policy: tenant {app_name:?} over quota ({} per {} ms)",
-                        cfg.tenant_quota, cfg.quota_window_ms
-                    )));
-                }
+        Ok(())
+    }
+
+    /// Tenant half of admission: `PollTask` discovery counted per app
+    /// name in fixed windows — routed by app-name hash when sharded.
+    /// Non-discovery messages pass without taking the lock.
+    pub fn admit_tenant(&self, msg: &Msg, now_ms: u64) -> Result<()> {
+        let Msg::PollTask { app_name, .. } = msg else {
+            return Ok(());
+        };
+        let mut g = self.locked()?;
+        if !g.cfg.enabled || g.cfg.tenant_quota == 0 {
+            return Ok(());
+        }
+        let cfg = g.cfg;
+        let over = {
+            let w = g.tenants.entry(app_name.clone()).or_insert(TenantWindow {
+                start_ms: now_ms,
+                count: 0,
+            });
+            if now_ms.saturating_sub(w.start_ms) >= cfg.quota_window_ms {
+                w.start_ms = now_ms;
+                w.count = 0;
             }
+            w.count += 1;
+            w.count > cfg.tenant_quota
+        };
+        if over {
+            self.shed_quota.fetch_add(1, Relaxed);
+            g.rejected += 1;
+            return Err(Error::Server(format!(
+                "policy: tenant {app_name:?} over quota ({} per {} ms)",
+                cfg.tenant_quota, cfg.quota_window_ms
+            )));
         }
         Ok(())
     }
@@ -244,13 +268,15 @@ impl PolicyEngine {
 /// The router-chain face of the policy engine. Sits after
 /// [`super::router::AuthInterceptor`] (it needs the verified principal)
 /// and ahead of metrics/backpressure, so refused traffic never counts
-/// as served and never occupies an in-flight slot.
+/// as served and never occupies an in-flight slot. Holds the sharded
+/// wrapper so admission routes to the principal's home shard — with
+/// one shard this is exactly the old single-engine chain.
 pub struct PolicyInterceptor {
-    engine: Arc<PolicyEngine>,
+    engine: Arc<crate::shard::ShardedPolicy>,
 }
 
 impl PolicyInterceptor {
-    pub fn new(engine: Arc<PolicyEngine>) -> PolicyInterceptor {
+    pub fn new(engine: Arc<crate::shard::ShardedPolicy>) -> PolicyInterceptor {
         PolicyInterceptor { engine }
     }
 }

@@ -596,7 +596,7 @@ impl Router {
     pub fn standard(
         metrics: Arc<RpcMetrics>,
         inflight_limit: usize,
-        policy: Arc<super::policy::PolicyEngine>,
+        policy: Arc<crate::shard::ShardedPolicy>,
     ) -> Router {
         Router {
             services: [
@@ -639,6 +639,10 @@ impl Router {
             principal: None,
             trace_id,
         };
+        // Per-shard hot-path accounting (relaxed atomics, no locks):
+        // polls/uploads/heartbeats land on the sender's home shard so
+        // the scale report can show the partition doing its job.
+        srv.note_hot_rpc(&msg);
         // Latency off the server's clock seam (not the wall clock), so
         // per-RPC timing is deterministic under the manual clock.
         let t0_ns = srv.now_ns();

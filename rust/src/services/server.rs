@@ -18,15 +18,15 @@ use crate::config::{PolicyConfig, SessionConfig, StorageConfig, TaskConfig};
 use crate::error::Result;
 use crate::metrics::RpcMetrics;
 use crate::model::ModelSnapshot;
-use crate::obs::{export::Report, Telemetry};
+use crate::obs::{export::Report, ShardSet, Telemetry};
 use crate::orchestrator::{EventStream, TaskBuilder, TaskHandle};
-use crate::proto::{decode_frame_traced, encode_frame, encode_frame_traced, Msg};
+use crate::proto::{decode_frame_traced, encode_frame, encode_frame_traced, rpc, Msg};
 use crate::services::auth::AuthService;
 use crate::services::management::{Evaluator, ManagementService, NoEval};
-use crate::services::policy::PolicyEngine;
 use crate::services::router::Router;
 use crate::services::selection::SelectionService;
-use crate::services::sessions::{LiveDirectory, SessionRegistry};
+use crate::services::sessions::LiveDirectory;
+use crate::shard::{Mailbox, ShardRouter, ShardedPolicy, ShardedSessions};
 use crate::transport::Listener;
 use crate::util::ThreadPool;
 
@@ -62,17 +62,26 @@ impl Clock {
 pub struct FloridaServer {
     pub auth: AuthService,
     pub selection: SelectionService,
-    /// Protocol-v2 liveness: sessions, leases, and device profiles.
-    pub sessions: SessionRegistry,
+    /// Protocol-v2 liveness: sessions, leases, and device profiles,
+    /// partitioned by client-id hash (one slice per worker shard).
+    pub sessions: ShardedSessions,
     pub management: ManagementService,
     /// Per-RPC counters fed by the router's `MetricsInterceptor`.
     pub rpc_metrics: Arc<RpcMetrics>,
-    /// Admission policy: rate limits, tenant quotas, reputation.
+    /// Admission policy: rate limits, tenant quotas, reputation —
+    /// sharded alongside the sessions.
     /// Default-disabled; flip on with `policy.set_config(..)`.
-    pub policy: Arc<PolicyEngine>,
+    pub policy: Arc<ShardedPolicy>,
     /// The observability registry: counters, gauges, histograms and
     /// trace rings, shared with the round engines and persistence layer.
     pub telemetry: Arc<Telemetry>,
+    /// Per-shard hot-path counters (polls/uploads/heartbeats/evictions).
+    pub shard_stats: Arc<ShardSet>,
+    /// The key → shard map shared by every sharded registry above.
+    shard_router: ShardRouter,
+    /// Eviction fan-out seam: per-shard sweeps post their batches here;
+    /// `tick` drains one merged batch after every registry lock dropped.
+    eviction_mail: Mailbox<u64>,
     router: Router,
     clock: Clock,
     stopping: AtomicBool,
@@ -84,9 +93,12 @@ impl FloridaServer {
         selection: SelectionService,
         management: ManagementService,
         clock: Clock,
+        shards: usize,
     ) -> FloridaServer {
+        let shard_router = ShardRouter::new(shards);
+        let shards = shard_router.shards();
         let rpc_metrics = Arc::new(RpcMetrics::default());
-        let policy = Arc::new(PolicyEngine::new(PolicyConfig::default()));
+        let policy = Arc::new(ShardedPolicy::with_shards(PolicyConfig::default(), shards));
         let telemetry = Arc::new(Telemetry::new());
         // Thread the registry into the engine layer: already-recovered
         // tasks (with_storage boot) and every future insert_engine get it.
@@ -99,13 +111,37 @@ impl FloridaServer {
             ),
             auth,
             selection,
-            sessions: SessionRegistry::new(SessionConfig::default().lease_ms),
+            sessions: ShardedSessions::with_shards(SessionConfig::default().lease_ms, shards),
             management,
             rpc_metrics,
             policy,
             telemetry,
+            shard_stats: Arc::new(ShardSet::new(shards)),
+            shard_router,
+            eviction_mail: Mailbox::new(),
             clock,
             stopping: AtomicBool::new(false),
+        }
+    }
+
+    /// Worker shards this server was assembled with.
+    pub fn shard_count(&self) -> usize {
+        self.shard_router.shards()
+    }
+
+    /// Per-shard hot-RPC accounting, called by the router on every
+    /// dispatch. Relaxed counters only — nothing here takes a lock, so
+    /// the poll/upload/heartbeat path stays shard-local.
+    pub fn note_hot_rpc(&self, msg: &Msg) {
+        let Some(id) = rpc::client_id_of(msg) else {
+            return;
+        };
+        let stats = self.shard_stats.shard(self.shard_router.client_shard(id));
+        match msg {
+            Msg::PollTask { .. } | Msg::FetchRound { .. } => stats.polls.inc(),
+            Msg::UploadPlain { .. } | Msg::UploadMasked { .. } => stats.uploads.inc(),
+            Msg::Heartbeat { .. } | Msg::SessionHeartbeat { .. } => stats.heartbeats.inc(),
+            _ => {}
         }
     }
 
@@ -126,6 +162,7 @@ impl FloridaServer {
             ManagementService::new(evaluator, seed),
             // florida-lint: allow(wall-clock-in-core): Clock::Real construction is the seam boundary
             Clock::Real(Instant::now()),
+            1,
         )
     }
 
@@ -136,6 +173,7 @@ impl FloridaServer {
             SelectionService::new(seed.wrapping_add(1)),
             ManagementService::new(Arc::new(NoEval), seed),
             Clock::Manual(AtomicU64::new(0)),
+            1,
         )
     }
 
@@ -145,6 +183,21 @@ impl FloridaServer {
         evaluator: Arc<dyn Evaluator>,
         seed: u64,
         real_clock: bool,
+    ) -> FloridaServer {
+        Self::sharded(attestation_required, evaluator, seed, real_clock, 1)
+    }
+
+    /// Sharded data-plane constructor: per-client state (sessions,
+    /// policy buckets) is partitioned across `shards` worker shards.
+    /// With `shards == 1` this is exactly [`Self::with_evaluator`] —
+    /// same lock layout, same token sequence, same committed weights
+    /// (pinned by the `shard_determinism` suite).
+    pub fn sharded(
+        attestation_required: bool,
+        evaluator: Arc<dyn Evaluator>,
+        seed: u64,
+        real_clock: bool,
+        shards: usize,
     ) -> FloridaServer {
         Self::assemble(
             AuthService::new(b"florida-test-authority", attestation_required),
@@ -156,6 +209,7 @@ impl FloridaServer {
             } else {
                 Clock::Manual(AtomicU64::new(0))
             },
+            shards,
         )
     }
 
@@ -170,6 +224,18 @@ impl FloridaServer {
         real_clock: bool,
         storage: StorageConfig,
     ) -> Result<FloridaServer> {
+        Self::with_storage_sharded(attestation_required, evaluator, seed, real_clock, storage, 1)
+    }
+
+    /// [`Self::with_storage`] with a sharded data plane (`serve --shards N`).
+    pub fn with_storage_sharded(
+        attestation_required: bool,
+        evaluator: Arc<dyn Evaluator>,
+        seed: u64,
+        real_clock: bool,
+        storage: StorageConfig,
+        shards: usize,
+    ) -> Result<FloridaServer> {
         Ok(Self::assemble(
             AuthService::new(b"florida-test-authority", attestation_required),
             SelectionService::new(seed.wrapping_add(1)),
@@ -180,6 +246,7 @@ impl FloridaServer {
             } else {
                 Clock::Manual(AtomicU64::new(0))
             },
+            shards,
         ))
     }
 
@@ -207,14 +274,25 @@ impl FloridaServer {
         self.tick();
     }
 
-    /// Liveness + deadline sweep: expired session leases are evicted
-    /// first (open cohorts repaired, slots backfilled mid-round), then
-    /// every task engine runs its deadline sweep against the
-    /// session-aware capability directory.
+    /// Liveness + deadline sweep: each session shard is swept in turn
+    /// and its evicted ids posted to the eviction mailbox — every
+    /// registry lock is taken and dropped *before* any engine hears
+    /// about an eviction (the batch-then-notify fix: the old tick
+    /// fanned out to engines while the registry lock was held). The
+    /// drained batch is sorted, so downstream handling matches the
+    /// unsharded sweep byte-for-byte; then every task engine runs its
+    /// deadline sweep against the session-aware capability directory.
     pub fn tick(&self) {
         let now_ms = self.now_ms();
-        let evicted = self.sessions.sweep(now_ms);
+        for (shard, batch) in self.sessions.sweep_shards(now_ms) {
+            let stats = self.shard_stats.shard(shard);
+            stats.evictions.add(batch.len() as u64);
+            stats.mailbox_batches.inc();
+            self.eviction_mail.post_batch(batch);
+        }
+        let mut evicted = self.eviction_mail.drain();
         if !evicted.is_empty() {
+            evicted.sort_unstable();
             log::debug!("session sweep evicted {} client(s)", evicted.len());
             self.telemetry.sessions_swept.add(evicted.len() as u64);
             self.management.evict_clients(&evicted, now_ms);
@@ -270,6 +348,7 @@ impl FloridaServer {
             hists: self.telemetry.histograms(),
             rpc: self.rpc_metrics.report(),
             rounds: self.telemetry.rounds.slowest(32),
+            shards: self.shard_stats.report(),
         }
     }
 

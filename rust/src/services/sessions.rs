@@ -205,10 +205,12 @@ impl SessionRegistry {
 }
 
 /// The capability view handed to cohort policies: device caps from the
-/// selection registry, heterogeneity profile from the live session.
+/// selection registry, heterogeneity profile from the live session
+/// (routed to the client's home shard — with one shard this is the old
+/// flat registry).
 pub struct LiveDirectory<'a> {
     pub selection: &'a SelectionService,
-    pub sessions: &'a SessionRegistry,
+    pub sessions: &'a crate::shard::ShardedSessions,
 }
 
 impl ClientDirectory for LiveDirectory<'_> {
@@ -312,7 +314,7 @@ mod tests {
     #[test]
     fn live_directory_combines_caps_and_profile() {
         let sel = SelectionService::new(1);
-        let reg = SessionRegistry::new(1000);
+        let reg = crate::shard::ShardedSessions::new(1000);
         let id = sel.register("dir-dev", DeviceCaps::default(), 0);
         reg.open(id, profile(ComputeTier::High), PROTO_V2, 0);
         let dir = LiveDirectory {

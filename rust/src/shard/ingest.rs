@@ -1,0 +1,350 @@
+//! Shard-local upload ingest: streaming partial accumulators that fold
+//! on the uploader's home shard and merge at commit time.
+//!
+//! The unsharded upload path funnels every device delta through the
+//! round engine's single fold — one mutex, one O(dim) accumulate, per
+//! upload, all serialized. This plane reuses the aggregation tree's
+//! leaf machinery as *in-process lanes*: each shard owns a
+//! [`LeafAggregator`] whose slice is the subset of the cohort that
+//! hashes to it, uploads fold behind that lane's mutex only, and at
+//! commit each lane exports one `ForwardPartial` that the engine
+//! absorbs through the associative `export`/`absorb` seam.
+//!
+//! N=1 bit-identity: with one lane every upload folds into a single
+//! accumulator in arrival order — the identical op sequence the flat
+//! engine fold would run — and the root's absorb of that single partial
+//! is bitwise addition onto a zeroed fold. So one-shard commits match
+//! the unsharded server bit-for-bit (pinned by `shard_determinism`).
+//!
+//! Composition limits are inherited from the tree, not re-decided
+//! here: robust strategies (trimmed_mean | median), async (fedbuff)
+//! tasks and secure aggregation refuse the partial seam at
+//! `begin_round`/`accept_partial`, so those tasks simply never get a
+//! sharded ingest plane — their uploads keep going to the root.
+
+use std::sync::Mutex;
+
+use crate::aggtree::{LeafAggregator, LeafConfig};
+use crate::error::{Error, Result};
+use crate::proto::rpc;
+use crate::services::management::ManagementService;
+
+use super::ShardRouter;
+
+/// Leaf ids for in-process shard lanes live far above any configured
+/// external leaf fleet, so journal attribution stays unambiguous.
+const LANE_LEAF_ID_BASE: u64 = 1 << 48;
+
+/// Per-task sharded ingest: one fold lane per shard, keyed by the
+/// uploader's client-id hash. Lanes lock independently; nothing global
+/// sits on the upload path.
+pub struct ShardIngestPlane {
+    task_id: u64,
+    router: ShardRouter,
+    aggregator: String,
+    prox_mu: f32,
+    lanes: Vec<Mutex<Option<LeafAggregator>>>,
+}
+
+impl ShardIngestPlane {
+    pub fn new(task_id: u64, aggregator: &str, prox_mu: f32, shards: usize) -> ShardIngestPlane {
+        let router = ShardRouter::new(shards);
+        ShardIngestPlane {
+            task_id,
+            router,
+            aggregator: aggregator.to_string(),
+            prox_mu,
+            lanes: (0..router.shards()).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    pub fn task_id(&self) -> u64 {
+        self.task_id
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Lock one lane, recovering from poisoning: every mutation behind
+    /// this lock is a leaf-aggregator call that leaves the leaf valid
+    /// even on error return, so an abandoned guard holds usable state.
+    fn lane(&self, shard: usize) -> std::sync::MutexGuard<'_, Option<LeafAggregator>> {
+        self.lanes[shard].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Open lanes for the engine's current round: fetch the full cohort
+    /// through the leaf-assignment seam (index 0 of 1 — the whole
+    /// cohort), then partition it across lanes by client-id hash. Tasks
+    /// that refuse leaf assignments (robust, async, secagg, not
+    /// Running) surface that refusal as `Err` here.
+    pub fn begin_round(&self, mgmt: &ManagementService, dim: usize) -> Result<usize> {
+        let a = mgmt.leaf_assignment(self.task_id, 0, 1)?;
+        if !a.accepted {
+            return Err(Error::Task(format!(
+                "task {} refuses sharded ingest: {}",
+                self.task_id, a.reason
+            )));
+        }
+        self.begin_local(a.round, a.base_version, &a.members, dim)
+    }
+
+    /// Open lanes for a known round/cohort without a management seam —
+    /// the standalone form the scale simulator drives. Returns the
+    /// number of non-empty lanes opened.
+    pub fn begin_local(
+        &self,
+        round: u64,
+        base_version: u64,
+        members: &[u64],
+        dim: usize,
+    ) -> Result<usize> {
+        let shards = self.lanes.len();
+        let mut slices: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        for &id in members {
+            slices[self.router.client_shard(id)].push(id);
+        }
+        let mut opened = 0;
+        for (shard, slice) in slices.into_iter().enumerate() {
+            let mut lane = self.lane(shard);
+            if slice.is_empty() {
+                // No member hashes here this round: the lane must not
+                // keep a stale round that would accept late uploads.
+                *lane = None;
+                continue;
+            }
+            let mut leaf = LeafAggregator::new(LeafConfig {
+                leaf_id: LANE_LEAF_ID_BASE + shard as u64,
+                leaf_index: shard as u32,
+                leaf_count: shards as u32,
+                aggregator: self.aggregator.clone(),
+                prox_mu: self.prox_mu,
+            });
+            leaf.begin_round(
+                &rpc::LeafAssignment {
+                    accepted: true,
+                    round,
+                    base_version,
+                    members: slice,
+                    reason: String::new(),
+                },
+                dim,
+            )?;
+            *lane = Some(leaf);
+            opened += 1;
+        }
+        Ok(opened)
+    }
+
+    /// Fold one upload on the uploader's home shard. Exactly one lane
+    /// mutex is taken; refusals are structured `(false, reason)` like
+    /// the root ingest so devices can retry or fall back.
+    pub fn accept(
+        &self,
+        client_id: u64,
+        round: u64,
+        delta: &[f32],
+        weight: f64,
+        loss: f64,
+    ) -> Result<(bool, String)> {
+        let mut lane = self.lane(self.router.client_shard(client_id));
+        match lane.as_mut() {
+            Some(leaf) => leaf.accept(client_id, round, delta, weight, loss),
+            None => Ok((false, "no round open on this shard".into())),
+        }
+    }
+
+    /// Merge at commit: drain every lane in shard order, forward each
+    /// non-empty partial through the engine's `accept_partial` seam,
+    /// and return how many member updates the engine absorbed. Lanes
+    /// are taken one at a time; no lane lock is held across the engine
+    /// call (the engine has its own lock — holding both would be the
+    /// `lock-across-send` shape).
+    pub fn commit(&self, mgmt: &ManagementService, now_ms: u64) -> Result<u64> {
+        let mut folded = 0u64;
+        for shard in 0..self.lanes.len() {
+            let leaf = self.lane(shard).take();
+            let Some(mut leaf) = leaf else { continue };
+            if !leaf.members().is_empty() && leaf.pending() == leaf.members().len() {
+                continue; // nothing folded on this lane — nothing to forward
+            }
+            let req = leaf.forward_request(self.task_id)?;
+            let (ok, _, reason) = mgmt.accept_partial(
+                req.leaf_id,
+                req.task_id,
+                req.round,
+                req.base_version,
+                &req.members,
+                req.sum,
+                req.total_weight,
+                req.count,
+                req.loss_sum,
+                req.min_loss,
+                now_ms,
+            )?;
+            if !ok {
+                return Err(Error::Server(format!(
+                    "shard {shard} partial refused: {reason}"
+                )));
+            }
+            folded += req.count;
+        }
+        Ok(folded)
+    }
+
+    /// Export every lane's partial without a management seam — the
+    /// standalone form for simulators/tests that merge into their own
+    /// root fold. Drains the lanes (commit semantics).
+    pub fn export_partials(&self) -> Result<Vec<rpc::ForwardPartial>> {
+        let mut parts = Vec::new();
+        for shard in 0..self.lanes.len() {
+            let leaf = self.lane(shard).take();
+            let Some(mut leaf) = leaf else { continue };
+            if !leaf.members().is_empty() && leaf.pending() == leaf.members().len() {
+                continue;
+            }
+            parts.push(leaf.forward_request(self.task_id)?);
+        }
+        Ok(parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::{self, PartialFold, UpdateStats};
+
+    fn dyadic(i: u64, d: usize) -> Vec<f32> {
+        // Multiples of 2^-10: exactly representable, so f64 sums are
+        // order-independent and cross-shard comparisons can be bitwise.
+        (0..d)
+            .map(|j| ((i * 7 + j as u64 * 3) % 2048) as f32 / 1024.0 - 1.0)
+            .collect()
+    }
+
+    #[test]
+    fn single_lane_matches_flat_fold_bitwise() {
+        let dim = 4;
+        let members: Vec<u64> = (1..=16).collect();
+        let plane = ShardIngestPlane::new(9, "fedavg", 0.0, 1);
+        assert_eq!(plane.begin_local(0, 0, &members, dim).unwrap(), 1);
+
+        let agg = aggregation::by_name("fedavg", 0.0).unwrap();
+        let mut flat = agg.begin(dim).unwrap();
+        for &id in &members {
+            let delta = dyadic(id, dim);
+            let (ok, why) = plane.accept(id, 0, &delta, 1.0, 0.25).unwrap();
+            assert!(ok, "{why}");
+            flat.accept(
+                &delta,
+                &UpdateStats {
+                    client_id: id,
+                    weight: 1.0,
+                    loss: 0.25,
+                    staleness: 0,
+                },
+            )
+            .unwrap();
+        }
+        let parts = plane.export_partials().unwrap();
+        assert_eq!(parts.len(), 1);
+        let mut root = agg.begin(dim).unwrap();
+        root.absorb(&PartialFold {
+            sum: parts[0].sum.clone(),
+            total_weight: parts[0].total_weight,
+            count: parts[0].count as usize,
+            min_loss: parts[0].min_loss,
+        })
+        .unwrap();
+        let got = root.finish().unwrap();
+        let want = flat.finish().unwrap();
+        assert_eq!(got, want, "one lane must be the flat fold, bit for bit");
+    }
+
+    #[test]
+    fn lanes_partition_members_and_refuse_strangers() {
+        let plane = ShardIngestPlane::new(9, "fedavg", 0.0, 4);
+        let members: Vec<u64> = (1..=32).collect();
+        plane.begin_local(3, 0, &members, 2).unwrap();
+        for &id in &members {
+            let (ok, why) = plane.accept(id, 3, &[0.5, -0.5], 1.0, 0.1).unwrap();
+            assert!(ok, "member {id}: {why}");
+        }
+        // Not in the cohort: its home lane refuses it.
+        let (ok, why) = plane.accept(999, 3, &[0.5, -0.5], 1.0, 0.1).unwrap();
+        assert!(!ok, "{why}");
+        // Stale round.
+        let (ok, why) = plane.accept(1, 2, &[0.5, -0.5], 1.0, 0.1).unwrap();
+        assert!(!ok && why.contains("stale"), "{why}");
+        // Duplicate.
+        let (ok, why) = plane.accept(1, 3, &[0.5, -0.5], 1.0, 0.1).unwrap();
+        assert!(!ok && why.contains("duplicate"), "{why}");
+        let parts = plane.export_partials().unwrap();
+        let covered: u64 = parts.iter().map(|p| p.count).sum();
+        assert_eq!(covered, 32, "every member folded on exactly one lane");
+    }
+
+    #[test]
+    fn sharded_partials_match_flat_fold_on_dyadic_inputs() {
+        let dim = 3;
+        let members: Vec<u64> = (1..=40).collect();
+        let agg = aggregation::by_name("fedavg", 0.0).unwrap();
+        let mut flat = agg.begin(dim).unwrap();
+        for &id in &members {
+            flat.accept(
+                &dyadic(id, dim),
+                &UpdateStats {
+                    client_id: id,
+                    weight: 1.0,
+                    loss: 0.5,
+                    staleness: 0,
+                },
+            )
+            .unwrap();
+        }
+        let want = flat.finish().unwrap();
+
+        for shards in [2usize, 4, 8] {
+            let plane = ShardIngestPlane::new(9, "fedavg", 0.0, shards);
+            plane.begin_local(0, 0, &members, dim).unwrap();
+            for &id in &members {
+                let (ok, why) = plane.accept(id, 0, &dyadic(id, dim), 1.0, 0.5).unwrap();
+                assert!(ok, "{why}");
+            }
+            let mut root = agg.begin(dim).unwrap();
+            for p in plane.export_partials().unwrap() {
+                root.absorb(&PartialFold {
+                    sum: p.sum.clone(),
+                    total_weight: p.total_weight,
+                    count: p.count as usize,
+                    min_loss: p.min_loss,
+                })
+                .unwrap();
+            }
+            let got = root.finish().unwrap();
+            assert_eq!(got, want, "{shards} shards: dyadic deltas must merge exactly");
+        }
+    }
+
+    #[test]
+    fn robust_strategy_refuses_the_plane() {
+        let plane = ShardIngestPlane::new(9, "trimmed_mean", 0.0, 2);
+        let err = plane.begin_local(0, 0, &[1, 2, 3], 2).unwrap_err();
+        assert!(err.to_string().contains("root only"), "{err}");
+    }
+
+    #[test]
+    fn reopening_clears_lanes_that_lost_their_members() {
+        let plane = ShardIngestPlane::new(9, "fedavg", 0.0, 4);
+        plane.begin_local(0, 0, &(1..=32).collect::<Vec<_>>(), 1).unwrap();
+        // Next round's cohort is one client: every other lane must drop
+        // its stale round instead of accepting round-0 stragglers.
+        plane.begin_local(1, 1, &[5], 1).unwrap();
+        let (ok, why) = plane.accept(6, 0, &[1.0], 1.0, 0.1).unwrap();
+        assert!(!ok, "{why}");
+        let (ok, why) = plane.accept(5, 1, &[1.0], 1.0, 0.1).unwrap();
+        assert!(ok, "{why}");
+        let parts = plane.export_partials().unwrap();
+        assert_eq!(parts.iter().map(|p| p.count).sum::<u64>(), 1);
+    }
+}

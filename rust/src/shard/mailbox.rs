@@ -1,0 +1,104 @@
+//! Batch mailbox: the eviction fan-out seam between per-shard sweeps
+//! and the engine layer.
+//!
+//! The pre-shard `tick()` fanned lease evictions out to every round
+//! engine *while the session registry lock was held* — the exact
+//! `lock-across-send` shape florida-lint exists for, and a global
+//! convoy once sweeps went per-shard. The mailbox inverts it: each
+//! shard's sweep posts its evicted ids here (brief queue lock, nothing
+//! else held), and the caller drains one merged batch *after* every
+//! registry lock is dropped, then notifies engines.
+
+use std::sync::Mutex;
+
+/// A many-producer batch queue. Locks are held only around the queue
+/// push/swap itself — never across downstream calls.
+pub struct Mailbox<T> {
+    queue: Mutex<Vec<T>>,
+}
+
+impl<T> Default for Mailbox<T> {
+    fn default() -> Self {
+        Mailbox::new()
+    }
+}
+
+impl<T> Mailbox<T> {
+    pub fn new() -> Mailbox<T> {
+        Mailbox {
+            queue: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Lock the queue, recovering from poisoning: both mutations here
+    /// are single-step vector ops, so a guard abandoned by a panicking
+    /// poster still holds a structurally intact queue — dropping every
+    /// later eviction batch on the floor would be strictly worse.
+    fn locked(&self) -> std::sync::MutexGuard<'_, Vec<T>> {
+        self.queue.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Post one item.
+    pub fn post(&self, item: T) {
+        self.locked().push(item);
+    }
+
+    /// Post a whole batch (one lock acquisition, preserving order).
+    pub fn post_batch(&self, batch: impl IntoIterator<Item = T>) {
+        self.locked().extend(batch);
+    }
+
+    /// Take everything posted so far, in posting order.
+    pub fn drain(&self) -> Vec<T> {
+        std::mem::take(&mut *self.locked())
+    }
+
+    pub fn len(&self) -> usize {
+        self.locked().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.locked().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn post_and_drain_preserve_order() {
+        let m = Mailbox::new();
+        assert!(m.is_empty());
+        m.post(1u64);
+        m.post_batch([2, 3]);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.drain(), vec![1, 2, 3]);
+        assert!(m.is_empty());
+        assert!(m.drain().is_empty(), "drain is destructive");
+    }
+
+    #[test]
+    fn concurrent_posts_all_arrive() {
+        let m = Arc::new(Mailbox::new());
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..100u64 {
+                        m.post(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = m.drain();
+        got.sort_unstable();
+        assert_eq!(got.len(), 400);
+        got.dedup();
+        assert_eq!(got.len(), 400, "no item lost or duplicated");
+    }
+}

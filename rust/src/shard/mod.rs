@@ -1,0 +1,169 @@
+//! Sharded data plane: one server, a million concurrent sessions.
+//!
+//! Every poll/upload/heartbeat used to funnel through three coarse
+//! per-registry locks on the [`crate::services::FloridaServer`] — the
+//! session registry, the policy engine, and the management engine map —
+//! so the orchestrator saturated one core long before the NIC. This
+//! module partitions that per-client mutable state across N worker
+//! shards keyed by a stable hash:
+//!
+//! | state                           | shard key            | home                      |
+//! |---------------------------------|----------------------|---------------------------|
+//! | session leases + profiles       | client id            | [`ShardedSessions`]       |
+//! | policy buckets + reputation     | client id            | [`ShardedPolicy`]         |
+//! | tenant quota windows            | app name             | [`ShardedPolicy`]         |
+//! | streaming upload partials       | client id             | [`ShardIngestPlane`]      |
+//! | round engines (task residency)  | task id              | `ManagementService`       |
+//!
+//! Invariants:
+//!
+//! * **No global lock on the hot path.** A poll, upload or heartbeat
+//!   touches exactly one shard's mutex (plus relaxed atomics for
+//!   instruments). The florida-lint `global-lock-on-hot-path` rule
+//!   pins this shape.
+//! * **N=1 is bit-identical to the unsharded server.** With one shard
+//!   every registry degenerates to exactly the pre-shard layout and
+//!   every fold sees updates in the same order, so committed weights
+//!   match bit-for-bit (pinned by `shard_determinism` tests).
+//! * **Commit-time merge.** Uploads fold shard-locally into streaming
+//!   [`crate::aggregation::PartialFold`] accumulators; the partials
+//!   merge on the engine's home shard via the associative
+//!   `export`/`absorb` seam from the aggregation tree. Robust
+//!   strategies (trimmed_mean | median) and async tasks refuse the
+//!   seam and ingest directly at the root, exactly as leaf aggregators
+//!   do.
+//! * **Evictions fan out through a mailbox.** Each shard's lease sweep
+//!   posts its evicted ids to a [`Mailbox`] batch; engines are
+//!   notified only after every shard lock is dropped — never while
+//!   registry state is held (the `lock-across-send` shape).
+
+pub mod ingest;
+pub mod mailbox;
+pub mod policy;
+pub mod sessions;
+
+pub use ingest::ShardIngestPlane;
+pub use mailbox::Mailbox;
+pub use policy::ShardedPolicy;
+pub use sessions::ShardedSessions;
+
+/// Upper bound on worker shards: past this, per-shard sweep overhead
+/// dominates and the fan-out stops paying for itself.
+pub const MAX_SHARDS: usize = 256;
+
+/// Stable shard assignment: splitmix64 finalizer over the key, reduced
+/// mod `shards`. Deterministic across processes and runs (no per-boot
+/// seed), so a client's home shard never moves while N is fixed.
+pub fn shard_of(key: u64, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut x = key.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^= x >> 31;
+    (x % shards as u64) as usize
+}
+
+/// FNV-1a over the bytes, for string-keyed state (tenant quota
+/// windows). Stable across runs for the same reason as [`shard_of`].
+pub fn hash_str(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// The shard-routing seam: owns the shard count and the key → shard
+/// maps. Every sharded registry embeds one, so the partition rule
+/// cannot drift between sessions, policy and ingest.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardRouter {
+    shards: usize,
+}
+
+impl ShardRouter {
+    /// Clamps to `1..=MAX_SHARDS` — zero shards is not a topology.
+    pub fn new(shards: usize) -> ShardRouter {
+        ShardRouter {
+            shards: shards.clamp(1, MAX_SHARDS),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Home shard for per-client state (sessions, buckets, uploads).
+    pub fn client_shard(&self, client_id: u64) -> usize {
+        shard_of(client_id, self.shards)
+    }
+
+    /// Home shard for a round engine (task residency).
+    pub fn task_shard(&self, task_id: u64) -> usize {
+        shard_of(task_id, self.shards)
+    }
+
+    /// Home shard for a tenant's quota window.
+    pub fn tenant_shard(&self, app_name: &str) -> usize {
+        shard_of(hash_str(app_name), self.shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_maps_everything_to_zero() {
+        for key in [0u64, 1, 42, u64::MAX] {
+            assert_eq!(shard_of(key, 1), 0);
+            assert_eq!(shard_of(key, 0), 0, "degenerate count clamps to one shard");
+        }
+    }
+
+    #[test]
+    fn assignment_is_stable_and_in_range() {
+        for shards in [2usize, 4, 8, 256] {
+            for key in 0..1000u64 {
+                let s = shard_of(key, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(key, shards), "same key, same shard");
+            }
+        }
+    }
+
+    #[test]
+    fn distribution_is_roughly_uniform() {
+        let shards = 8;
+        let n = 64_000u64;
+        let mut counts = vec![0usize; shards];
+        for key in 0..n {
+            counts[shard_of(key, shards)] += 1;
+        }
+        let expect = n as usize / shards;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                c > expect / 2 && c < expect * 2,
+                "shard {i} holds {c} of {n} keys (expected ~{expect})"
+            );
+        }
+    }
+
+    #[test]
+    fn router_clamps_and_routes_consistently() {
+        let r = ShardRouter::new(0);
+        assert_eq!(r.shards(), 1);
+        let r = ShardRouter::new(100_000);
+        assert_eq!(r.shards(), MAX_SHARDS);
+        let r = ShardRouter::new(4);
+        assert_eq!(r.client_shard(77), shard_of(77, 4));
+        assert_eq!(r.task_shard(3), shard_of(3, 4));
+        assert_eq!(r.tenant_shard("mail"), shard_of(hash_str("mail"), 4));
+        // String hashing is content-addressed, not pointer-addressed.
+        assert_eq!(r.tenant_shard("mail"), r.tenant_shard(&String::from("mail")));
+        assert_ne!(hash_str("mail"), hash_str("keyboard"));
+    }
+}

@@ -1,0 +1,235 @@
+//! Client-id-sharded admission policy: N independent [`PolicyEngine`]s
+//! behind the [`ShardRouter`] seam.
+//!
+//! A routed request takes at most two shard locks, each briefly and in
+//! a fixed order: the *client* half (reputation floor + token bucket)
+//! on the principal's home shard, then — for `PollTask` discovery
+//! only — the *tenant* half (quota window) on the app name's home
+//! shard. Uploads and heartbeats therefore contend only with clients
+//! that hash to the same shard, never with the whole fleet. With one
+//! shard both halves land on the same engine in the same order as the
+//! pre-shard `PolicyEngine::admit`, so N=1 behavior is unchanged.
+
+use crate::config::PolicyConfig;
+use crate::error::Result;
+use crate::proto::{rpc, Msg};
+use crate::services::policy::PolicyEngine;
+use crate::services::router::RequestCtx;
+
+use super::ShardRouter;
+
+/// N policy engines keyed by stable hash: client state by client id,
+/// tenant quota windows by app name. The method surface mirrors
+/// [`PolicyEngine`] so server call sites are shard-count agnostic.
+pub struct ShardedPolicy {
+    router: ShardRouter,
+    engines: Vec<PolicyEngine>,
+}
+
+impl ShardedPolicy {
+    /// Single-shard constructor: today's engine, verbatim.
+    pub fn new(cfg: PolicyConfig) -> ShardedPolicy {
+        ShardedPolicy::with_shards(cfg, 1)
+    }
+
+    pub fn with_shards(cfg: PolicyConfig, shards: usize) -> ShardedPolicy {
+        let router = ShardRouter::new(shards);
+        ShardedPolicy {
+            router,
+            engines: (0..router.shards()).map(|_| PolicyEngine::new(cfg)).collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    fn client_engine(&self, client_id: u64) -> &PolicyEngine {
+        &self.engines[self.router.client_shard(client_id)]
+    }
+
+    /// The admission decision for one routed request: client gate on
+    /// the principal's home shard, then tenant quota on the app name's
+    /// home shard. Same halves, same order as the single engine.
+    pub fn admit(&self, msg: &Msg, ctx: &RequestCtx) -> Result<()> {
+        if let Some(id) = ctx.principal.or_else(|| rpc::client_id_of(msg)) {
+            self.client_engine(id).admit_principal(id, ctx.now_ms)?;
+        }
+        if let Msg::PollTask { app_name, .. } = msg {
+            self.engines[self.router.tenant_shard(app_name)].admit_tenant(msg, ctx.now_ms)?;
+        }
+        Ok(())
+    }
+
+    /// The client half alone — the poll-gate primitive the scale
+    /// scenarios hammer (one shard lock, no message needed).
+    pub fn admit_principal(&self, client_id: u64, now_ms: u64) -> Result<()> {
+        self.client_engine(client_id).admit_principal(client_id, now_ms)
+    }
+
+    /// Swap the active configuration on every shard (validated once).
+    pub fn set_config(&self, cfg: PolicyConfig) -> Result<()> {
+        cfg.validate()?;
+        for e in &self.engines {
+            e.set_config(cfg)?;
+        }
+        Ok(())
+    }
+
+    /// The active configuration (shards never diverge: `set_config`
+    /// fans out to all of them).
+    pub fn config(&self) -> PolicyConfig {
+        self.engines[0].config()
+    }
+
+    /// Requests refused by policy since boot, summed across shards.
+    pub fn rejections(&self) -> u64 {
+        self.engines.iter().map(PolicyEngine::rejections).sum()
+    }
+
+    /// A client's current reputation, from its home shard.
+    pub fn reputation_of(&self, client_id: u64) -> Option<f64> {
+        self.client_engine(client_id).reputation_of(client_id)
+    }
+
+    /// Charge one offense against a client on its home shard.
+    pub fn record_offense(&self, client_id: u64, now_ms: u64, what: &str) {
+        self.client_engine(client_id).record_offense(client_id, now_ms, what);
+    }
+
+    /// Session-sweep feedback: each evicted client is penalized on its
+    /// home shard (the batch arrives after every registry lock dropped,
+    /// via the tick mailbox).
+    pub fn record_evictions(&self, evicted: &[u64], now_ms: u64) {
+        for &id in evicted {
+            self.client_engine(id).record_offense(id, now_ms, "lease eviction");
+        }
+    }
+
+    /// Sheds broken down by refusal reason, summed across shards.
+    /// Lock-free (the per-engine counters are relaxed atomics).
+    pub fn shed_counters(&self) -> Vec<(&'static str, u64)> {
+        let mut merged: Vec<(&'static str, u64)> = Vec::new();
+        for e in &self.engines {
+            for (i, (name, v)) in e.shed_counters().into_iter().enumerate() {
+                match merged.get_mut(i) {
+                    Some(slot) => slot.1 += v,
+                    None => merged.push((name, v)),
+                }
+            }
+        }
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::services::router::ServiceKind;
+
+    fn ctx(now_ms: u64, principal: Option<u64>) -> RequestCtx {
+        RequestCtx {
+            now_ms,
+            service: ServiceKind::Task,
+            method: "fetch_round",
+            principal,
+            trace_id: None,
+        }
+    }
+
+    fn strict() -> PolicyConfig {
+        PolicyConfig {
+            enabled: true,
+            bucket_capacity: 2.0,
+            refill_per_sec: 1.0,
+            tenant_quota: 3,
+            quota_window_ms: 1_000,
+            min_reputation: 0.5,
+            reputation_penalty: 0.3,
+            reputation_recovery_per_sec: 0.1,
+        }
+    }
+
+    fn heartbeat(id: u64) -> Msg {
+        Msg::Heartbeat { client_id: id }
+    }
+
+    fn poll(id: u64, app: &str) -> Msg {
+        Msg::PollTask {
+            client_id: id,
+            app_name: app.into(),
+            workflow_name: "w".into(),
+        }
+    }
+
+    #[test]
+    fn buckets_are_per_client_regardless_of_shard_count() {
+        for shards in [1usize, 4] {
+            let p = ShardedPolicy::with_shards(strict(), shards);
+            p.admit(&heartbeat(1), &ctx(0, Some(1))).unwrap();
+            p.admit(&heartbeat(1), &ctx(0, Some(1))).unwrap();
+            let err = p.admit(&heartbeat(1), &ctx(0, Some(1))).unwrap_err();
+            assert!(err.to_string().contains("rate limit"), "{err}");
+            // A different client (any shard) has its own bucket.
+            p.admit(&heartbeat(2), &ctx(0, Some(2))).unwrap();
+            assert_eq!(p.rejections(), 1, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn tenant_quota_is_global_per_app_across_client_shards() {
+        let p = ShardedPolicy::with_shards(strict(), 8);
+        // Distinct clients land on different shards, but the tenant
+        // window lives on the app name's home shard: the fourth poll
+        // overflows no matter who sends it.
+        for id in 0..3 {
+            p.admit(&poll(id, "mail"), &ctx(0, None)).unwrap();
+        }
+        let err = p.admit(&poll(3, "mail"), &ctx(0, None)).unwrap_err();
+        assert!(err.to_string().contains("quota"), "{err}");
+        p.admit(&poll(4, "keyboard"), &ctx(0, None)).unwrap();
+    }
+
+    #[test]
+    fn evictions_and_offenses_route_to_the_home_shard() {
+        let p = ShardedPolicy::with_shards(strict(), 4);
+        p.record_evictions(&[8, 9], 0);
+        assert!((p.reputation_of(8).unwrap() - 0.7).abs() < 1e-9);
+        assert!((p.reputation_of(9).unwrap() - 0.7).abs() < 1e-9);
+        assert_eq!(p.reputation_of(10), None);
+        p.record_offense(8, 0, "test");
+        let err = p.admit(&heartbeat(8), &ctx(0, Some(8))).unwrap_err();
+        assert!(err.to_string().contains("reputation"), "{err}");
+    }
+
+    #[test]
+    fn shed_counters_sum_across_shards() {
+        let p = ShardedPolicy::with_shards(strict(), 4);
+        // Drain two different clients' buckets (likely different shards).
+        for id in [1u64, 2] {
+            p.admit(&heartbeat(id), &ctx(0, Some(id))).unwrap();
+            p.admit(&heartbeat(id), &ctx(0, Some(id))).unwrap();
+            assert!(p.admit(&heartbeat(id), &ctx(0, Some(id))).is_err());
+        }
+        let shed: std::collections::HashMap<&str, u64> =
+            p.shed_counters().into_iter().collect();
+        assert_eq!(shed["policy_shed_rate"], 2);
+        assert_eq!(shed["policy_shed_reputation"], 0);
+        assert_eq!(p.rejections(), 2);
+    }
+
+    #[test]
+    fn config_fans_out_and_reads_back() {
+        let p = ShardedPolicy::with_shards(PolicyConfig::default(), 4);
+        assert!(!p.config().enabled);
+        p.admit(&heartbeat(3), &ctx(0, Some(3))).unwrap();
+        p.set_config(strict()).unwrap();
+        assert!(p.config().enabled);
+        // Every shard enforces the new config.
+        for id in 0..8u64 {
+            p.admit_principal(id, 0).unwrap();
+            p.admit_principal(id, 0).unwrap();
+            assert!(p.admit_principal(id, 0).is_err(), "client {id}");
+        }
+    }
+}

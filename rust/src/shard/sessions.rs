@@ -1,0 +1,225 @@
+//! Client-id-sharded session registry: N independent
+//! [`SessionRegistry`] slices behind the [`ShardRouter`] seam.
+//!
+//! A poll/heartbeat touches exactly one slice's mutex — the slice its
+//! client id hashes to — so lease renewals stop convoying on one
+//! registry lock at fleet scale. With one shard this *is* the old
+//! registry (same single lock, same token sequence, same sweep
+//! output), which is what pins the N=1 bit-identity invariant.
+
+use crate::error::Result;
+use crate::proto::{DeviceProfile, LoadHints};
+use crate::services::sessions::{Session, SessionRegistry};
+
+use super::ShardRouter;
+
+/// N session-registry slices keyed by stable client-id hash. The
+/// method surface mirrors [`SessionRegistry`] so server and router
+/// call sites are agnostic to the shard count.
+pub struct ShardedSessions {
+    router: ShardRouter,
+    slices: Vec<SessionRegistry>,
+}
+
+impl ShardedSessions {
+    /// Single-shard constructor: today's server, verbatim.
+    pub fn new(lease_ms: u64) -> ShardedSessions {
+        ShardedSessions::with_shards(lease_ms, 1)
+    }
+
+    pub fn with_shards(lease_ms: u64, shards: usize) -> ShardedSessions {
+        let router = ShardRouter::new(shards);
+        ShardedSessions {
+            router,
+            slices: (0..router.shards())
+                .map(|_| SessionRegistry::new(lease_ms))
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.slices.len()
+    }
+
+    fn slice_of(&self, client_id: u64) -> &SessionRegistry {
+        &self.slices[self.router.client_shard(client_id)]
+    }
+
+    /// Lease every slice grants (slices never diverge: `set_lease_ms`
+    /// fans out to all of them).
+    pub fn lease_ms(&self) -> u64 {
+        self.slices[0].lease_ms()
+    }
+
+    pub fn set_lease_ms(&self, lease_ms: u64) {
+        for s in &self.slices {
+            s.set_lease_ms(lease_ms);
+        }
+    }
+
+    /// Open (or replace) the client's session on its home shard.
+    /// Returns `(token, lease_ms)`.
+    pub fn open(
+        &self,
+        client_id: u64,
+        profile: DeviceProfile,
+        proto: u32,
+        now_ms: u64,
+    ) -> (u64, u64) {
+        self.slice_of(client_id).open(client_id, profile, proto, now_ms)
+    }
+
+    /// Renew the lease; the token must match the live session.
+    pub fn renew(&self, client_id: u64, token: u64, hints: LoadHints, now_ms: u64) -> Result<u64> {
+        self.slice_of(client_id).renew(client_id, token, hints, now_ms)
+    }
+
+    /// v1 compatibility: renew/open the client's *implicit* session.
+    pub fn touch_v1(&self, client_id: u64, now_ms: u64) {
+        self.slice_of(client_id).touch_v1(client_id, now_ms)
+    }
+
+    /// Release a session early; `false` on a stale token.
+    pub fn close(&self, client_id: u64, token: u64) -> bool {
+        self.slice_of(client_id).close(client_id, token)
+    }
+
+    /// Evict every expired lease across all shards; returns the merged
+    /// evicted ids, globally sorted — byte-identical to the unsharded
+    /// sweep over the same fleet. Each slice's lock is taken and
+    /// dropped in turn; nothing is held across slices.
+    pub fn sweep(&self, now_ms: u64) -> Vec<u64> {
+        let mut evicted = Vec::new();
+        for (_, batch) in self.sweep_shards(now_ms) {
+            evicted.extend(batch);
+        }
+        evicted.sort_unstable();
+        evicted
+    }
+
+    /// Per-shard sweep batches `(shard, evicted ids)` for callers that
+    /// fan out through a [`super::Mailbox`] (the server tick). Empty
+    /// shards are omitted; ids within a batch are sorted.
+    pub fn sweep_shards(&self, now_ms: u64) -> Vec<(usize, Vec<u64>)> {
+        self.slices
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                let batch = s.sweep(now_ms);
+                (!batch.is_empty()).then_some((i, batch))
+            })
+            .collect()
+    }
+
+    pub fn get(&self, client_id: u64) -> Option<Session> {
+        self.slice_of(client_id).get(client_id)
+    }
+
+    pub fn profile_of(&self, client_id: u64) -> Option<DeviceProfile> {
+        self.slice_of(client_id).profile_of(client_id)
+    }
+
+    /// Live sessions across every shard (O(shards) lock acquisitions —
+    /// an observability read, not a hot-path one).
+    pub fn live_count(&self) -> usize {
+        self.slices.iter().map(SessionRegistry::live_count).sum()
+    }
+
+    /// Live sessions on one shard (per-shard gauge export).
+    pub fn live_count_of(&self, shard: usize) -> usize {
+        self.slices[shard].live_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::PROTO_V2;
+    use crate::shard::shard_of;
+
+    #[test]
+    fn routes_clients_to_their_home_shard_only() {
+        let reg = ShardedSessions::with_shards(1000, 4);
+        for id in 0..64u64 {
+            reg.open(id, DeviceProfile::default(), PROTO_V2, 0);
+        }
+        assert_eq!(reg.live_count(), 64);
+        let per_shard: usize = (0..4).map(|s| reg.live_count_of(s)).sum();
+        assert_eq!(per_shard, 64);
+        for id in 0..64u64 {
+            let home = shard_of(id, 4);
+            assert_eq!(reg.live_count_of(home), {
+                (0..64u64).filter(|&c| shard_of(c, 4) == home).count()
+            });
+            assert!(reg.get(id).is_some());
+        }
+    }
+
+    #[test]
+    fn sweep_merges_sorted_across_shards() {
+        let reg = ShardedSessions::with_shards(100, 4);
+        for id in [9u64, 2, 5, 31, 17] {
+            reg.open(id, DeviceProfile::default(), PROTO_V2, 0);
+        }
+        assert_eq!(reg.sweep(100), vec![2, 5, 9, 17, 31]);
+        assert_eq!(reg.live_count(), 0);
+    }
+
+    #[test]
+    fn sweep_shards_batches_per_home_shard() {
+        let reg = ShardedSessions::with_shards(100, 4);
+        for id in 0..32u64 {
+            reg.open(id, DeviceProfile::default(), PROTO_V2, 0);
+        }
+        let batches = reg.sweep_shards(100);
+        let mut all: Vec<u64> = Vec::new();
+        for (shard, batch) in &batches {
+            for id in batch {
+                assert_eq!(shard_of(*id, 4), *shard, "id {id} in a foreign batch");
+                all.push(*id);
+            }
+            let mut sorted = batch.clone();
+            sorted.sort_unstable();
+            assert_eq!(&sorted, batch, "per-shard batches are sorted");
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..32u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_shard_matches_flat_registry_token_for_token() {
+        let flat = SessionRegistry::new(500);
+        let sharded = ShardedSessions::new(500);
+        for id in [3u64, 11, 42] {
+            let (t_flat, l_flat) = flat.open(id, DeviceProfile::default(), PROTO_V2, 0);
+            let (t_shard, l_shard) = sharded.open(id, DeviceProfile::default(), PROTO_V2, 0);
+            assert_eq!(t_flat, t_shard, "token sequence must match at N=1");
+            assert_eq!(l_flat, l_shard);
+        }
+        assert_eq!(flat.sweep(500), sharded.sweep(500));
+    }
+
+    #[test]
+    fn lease_config_fans_out_to_every_shard() {
+        let reg = ShardedSessions::with_shards(1000, 8);
+        reg.set_lease_ms(250);
+        assert_eq!(reg.lease_ms(), 250);
+        for id in 0..16u64 {
+            let (_, lease) = reg.open(id, DeviceProfile::default(), PROTO_V2, 0);
+            assert_eq!(lease, 250, "client {id} granted a stale lease");
+        }
+        assert_eq!(reg.sweep(249).len(), 0);
+        assert_eq!(reg.sweep(250).len(), 16);
+    }
+
+    #[test]
+    fn renew_and_close_respect_tokens_across_shards() {
+        let reg = ShardedSessions::with_shards(1000, 4);
+        let (token, _) = reg.open(7, DeviceProfile::default(), PROTO_V2, 0);
+        assert!(reg.renew(7, token, LoadHints::default(), 10).is_ok());
+        assert!(reg.renew(7, token + 1, LoadHints::default(), 10).is_err());
+        assert!(!reg.close(7, token + 1));
+        assert!(reg.close(7, token));
+        assert_eq!(reg.live_count(), 0);
+    }
+}

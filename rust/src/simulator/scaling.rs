@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use crate::aggtree::{LeafAggregator, LeafConfig};
 use crate::client::{ConstantTrainer, FloridaClient};
-use crate::config::{CohortSpec, FsyncPolicy, StorageConfig, TreeSpec};
+use crate::config::{CohortSpec, FsyncPolicy, PolicyConfig, StorageConfig, TreeSpec};
 use crate::error::{Error, Result};
 use crate::model::ModelSnapshot;
 use crate::obs::export::Report;
@@ -20,6 +20,7 @@ use crate::proto::{
 };
 use crate::services::management::NoEval;
 use crate::services::FloridaServer;
+use crate::shard::{ShardIngestPlane, ShardedPolicy, ShardedSessions};
 use crate::simulator::{run_fleet, FleetConfig, Heterogeneity};
 
 /// One scaling measurement.
@@ -606,6 +607,302 @@ pub fn run_tree_scale(n: usize, rounds: u64, leaves: u32, seed: u64) -> Result<T
     })
 }
 
+/// Outcome of the sharded data-plane scenario: a simulated fleet
+/// (default ~1M sessions) hammering the three hot-path primitives —
+/// policy admission, lease renewal, upload ingest — once against a
+/// single-shard plane and once against `shards` shards with the same
+/// thread count, plus a round-exactness phase proving the sharded
+/// partial-merge path commits the same weights as the flat fold.
+#[derive(Clone, Debug)]
+pub struct ShardScaleReport {
+    pub shards: usize,
+    /// Simulated sessions per throughput configuration.
+    pub sessions: usize,
+    /// Worker threads driving each configuration (same for both).
+    pub threads: usize,
+    /// Cores the host actually exposes (`available_parallelism`).
+    pub cores: usize,
+    pub poll_ops: u64,
+    pub upload_ops: u64,
+    /// Hot-path throughput, ops/sec, single shard vs `shards` shards.
+    pub poll_ops_per_sec_flat: f64,
+    pub poll_ops_per_sec_sharded: f64,
+    pub upload_ops_per_sec_flat: f64,
+    pub upload_ops_per_sec_sharded: f64,
+    pub poll_speedup: f64,
+    pub upload_speedup: f64,
+    /// Exactness phase: rounds committed on each path.
+    pub rounds_completed: u64,
+    /// Flat fold == shards=1 plane (bitwise) == shards=N plane (the
+    /// scenario feeds dyadic deltas, so every fold order is exact).
+    pub bit_identical: bool,
+    pub max_abs_diff: f32,
+    pub wall_ms: u64,
+}
+
+impl ShardScaleReport {
+    /// The acceptance gate the `scale --shards N` smoke enforces:
+    /// commit-exactness always; near-linear (>= 0.7x ideal) hot-path
+    /// scaling whenever both the partition and the host can express it.
+    pub fn gate(&self) -> Result<()> {
+        if !self.bit_identical {
+            return Err(Error::Task(format!(
+                "sharded commit diverged from the flat fold (max |diff| {})",
+                self.max_abs_diff
+            )));
+        }
+        if self.shards > 1 && self.cores > 1 {
+            let want = 0.7 * self.shards.min(self.cores) as f64;
+            if self.poll_speedup < want || self.upload_speedup < want {
+                return Err(Error::Task(format!(
+                    "sub-linear shard scaling: poll {:.2}x / upload {:.2}x, want >= {want:.2}x",
+                    self.poll_speedup, self.upload_speedup
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Dyadic delta for (client, round, coordinate): a multiple of 2^-10 in
+/// [-1, 1), so every fold order — flat, per-lane, lane-then-root — sums
+/// exactly in f64 and cross-shard comparisons can demand bitwise
+/// equality instead of an epsilon.
+fn dyadic_delta(client: u64, round: u64, j: usize) -> f32 {
+    ((client * 7 + round * 13 + j as u64 * 3) % 2048) as f32 / 1024.0 - 1.0
+}
+
+/// Drive the three hot-path primitives over `sessions` simulated
+/// clients with `threads` workers against an N-shard plane; returns
+/// (poll ops/sec, upload ops/sec). Polls and uploads are timed as
+/// separate phases so the two throughput numbers don't blur.
+fn shard_hotpath_run(
+    shards: usize,
+    sessions: usize,
+    threads: usize,
+    polls_per_client: usize,
+    dim: usize,
+) -> Result<(f64, f64)> {
+    let registry = ShardedSessions::with_shards(60_000, shards);
+    let policy = ShardedPolicy::with_shards(PolicyConfig::enabled(), shards);
+    let plane = ShardIngestPlane::new(1, "fedavg", 0.0, shards);
+    let members: Vec<u64> = (1..=sessions as u64).collect();
+    plane.begin_local(0, 0, &members, dim)?;
+
+    let chunk = sessions.div_ceil(threads).max(1);
+    let ranges: Vec<&[u64]> = members.chunks(chunk).collect();
+    let refused = std::sync::atomic::AtomicU64::new(0);
+
+    // Fleet arrival (untimed setup): v1 implicit sessions, no tokens.
+    std::thread::scope(|s| {
+        let registry = &registry;
+        for &ids in &ranges {
+            s.spawn(move || {
+                for &id in ids {
+                    registry.touch_v1(id, 0);
+                }
+            });
+        }
+    });
+
+    // Poll phase: admission gate + lease renewal per op.
+    // florida-lint: allow(wall-clock-in-core): throughput measurement, not round logic
+    let t = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let (registry, policy, refused) = (&registry, &policy, &refused);
+        for &ids in &ranges {
+            s.spawn(move || {
+                for &id in ids {
+                    for _ in 0..polls_per_client {
+                        if policy.admit_principal(id, 0).is_err() {
+                            refused.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        registry.touch_v1(id, 0);
+                    }
+                }
+            });
+        }
+    });
+    let poll_secs = t.elapsed().as_secs_f64().max(1e-9);
+
+    // Upload phase: one shard-local fold per client.
+    let delta = vec![1.0f32; dim];
+    // florida-lint: allow(wall-clock-in-core): throughput measurement, not round logic
+    let t = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let (plane, delta, refused) = (&plane, &delta, &refused);
+        for &ids in &ranges {
+            s.spawn(move || {
+                for &id in ids {
+                    match plane.accept(id, 0, delta, 1.0, 0.1) {
+                        Ok((true, _)) => {}
+                        _ => {
+                            refused.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let upload_secs = t.elapsed().as_secs_f64().max(1e-9);
+
+    let refused = refused.load(std::sync::atomic::Ordering::Relaxed);
+    if refused > 0 {
+        return Err(Error::Task(format!(
+            "hot-path run refused {refused} op(s); the scenario config admits everything"
+        )));
+    }
+    Ok((
+        (sessions * polls_per_client) as f64 / poll_secs,
+        sessions as f64 / upload_secs,
+    ))
+}
+
+/// Run the sharded data-plane scenario: throughput at 1 vs `shards`
+/// shards over `sessions` simulated clients, then the exactness phase —
+/// the same seeded cohort committed through the flat fold, a 1-shard
+/// plane (bitwise-pinned) and an N-shard plane (dyadic-exact).
+pub fn run_shard_scale(shards: usize, sessions: usize, seed: u64) -> Result<ShardScaleReport> {
+    if shards == 0 || shards > crate::shard::MAX_SHARDS {
+        return Err(Error::Config(format!(
+            "shard scale needs 1..={} shards, got {shards}",
+            crate::shard::MAX_SHARDS
+        )));
+    }
+    if sessions < shards {
+        return Err(Error::Config(format!(
+            "shard scale needs >= 1 session per shard ({sessions} sessions, {shards} shards)"
+        )));
+    }
+    const DIM: usize = 5;
+    const POLLS_PER_CLIENT: usize = 2;
+    // florida-lint: allow(wall-clock-in-core): wall_ms run reporting, not round logic
+    let t0 = std::time::Instant::now();
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let threads = shards.min(cores).max(1);
+
+    // -- Phase 1: hot-path throughput, same thread count both runs ----
+    let (poll_flat, upload_flat) =
+        shard_hotpath_run(1, sessions, threads, POLLS_PER_CLIENT, DIM)?;
+    let (poll_sharded, upload_sharded) =
+        shard_hotpath_run(shards, sessions, threads, POLLS_PER_CLIENT, DIM)?;
+
+    // -- Phase 2: commit exactness on real servers --------------------
+    let n = (shards * 6).max(24);
+    let rounds = 2u64;
+    let make_server = |tag: &str, server_shards: usize| -> Result<(Arc<FloridaServer>, u64)> {
+        let server = Arc::new(FloridaServer::sharded(
+            false,
+            Arc::new(NoEval),
+            seed,
+            true,
+            server_shards,
+        ));
+        let task = TaskBuilder::new(tag)
+            .clients_per_round(n)
+            .rounds(rounds)
+            .round_timeout_ms(120_000)
+            .deploy(&server.management, ModelSnapshot::new(0, vec![0.0; DIM]))?
+            .id();
+        Ok((server, task))
+    };
+    let form_cohort = |server: &FloridaServer, task: u64| -> Result<(u64, u64)> {
+        let now = server.now_ms();
+        for c in 1..=n as u64 {
+            server.management.join(c, task, [0u8; 32], now)?;
+        }
+        for c in 1..=n as u64 {
+            let _ = server.management.fetch_round(c, task, &server.selection, now)?;
+        }
+        server
+            .management
+            .with_task(task, |t| Ok((t.round, t.global.version)))
+    };
+
+    // Flat reference: every client folds straight at the root.
+    let (flat_srv, flat_task) = make_server("shard-scale-flat", 1)?;
+    for _ in 0..rounds {
+        let (round, version) = form_cohort(&flat_srv, flat_task)?;
+        for c in 1..=n as u64 {
+            let delta: Vec<f32> = (0..DIM).map(|j| dyadic_delta(c, round, j)).collect();
+            let (ok, why) = flat_srv.management.accept_plain(
+                c,
+                flat_task,
+                round,
+                version,
+                delta,
+                1.0,
+                0.1,
+                flat_srv.now_ms() + 1,
+            )?;
+            if !ok {
+                return Err(Error::Task(why));
+            }
+        }
+    }
+
+    // Sharded planes: fold per shard lane, merge partials at commit.
+    let mut params_by_shards = Vec::new();
+    let mut rounds_completed = 0;
+    for server_shards in [1usize, shards] {
+        let (srv, task) = make_server(&format!("shard-scale-{server_shards}"), server_shards)?;
+        let plane = ShardIngestPlane::new(task, "fedavg", 0.0, server_shards);
+        for _ in 0..rounds {
+            let (round, _) = form_cohort(&srv, task)?;
+            plane.begin_round(&srv.management, DIM)?;
+            for c in 1..=n as u64 {
+                let delta: Vec<f32> = (0..DIM).map(|j| dyadic_delta(c, round, j)).collect();
+                let (ok, why) = plane.accept(c, round, &delta, 1.0, 0.1)?;
+                if !ok {
+                    return Err(Error::Task(format!("client {c}: {why}")));
+                }
+            }
+            let folded = plane.commit(&srv.management, srv.now_ms() + 1)?;
+            if folded != n as u64 {
+                return Err(Error::Task(format!(
+                    "{server_shards}-shard commit credited {folded} of {n} members"
+                )));
+            }
+        }
+        let (desc, metrics, _) = srv.management.task_status(task)?;
+        if desc.state != TaskState::Completed {
+            return Err(Error::Task(format!(
+                "{server_shards}-shard path ended in state {}",
+                desc.state.name()
+            )));
+        }
+        rounds_completed = metrics.rounds.len() as u64;
+        params_by_shards.push(srv.management.with_task(task, |t| Ok(t.global.params.clone()))?);
+    }
+    let p_flat = flat_srv
+        .management
+        .with_task(flat_task, |t| Ok(t.global.params.clone()))?;
+    let max_abs_diff = params_by_shards
+        .iter()
+        .flat_map(|p| p_flat.iter().zip(p).map(|(a, b)| (a - b).abs()))
+        .fold(0.0f32, f32::max);
+    let bit_identical = params_by_shards.iter().all(|p| *p == p_flat);
+
+    Ok(ShardScaleReport {
+        shards,
+        sessions,
+        threads,
+        cores,
+        poll_ops: (sessions * POLLS_PER_CLIENT) as u64,
+        upload_ops: sessions as u64,
+        poll_ops_per_sec_flat: poll_flat,
+        poll_ops_per_sec_sharded: poll_sharded,
+        upload_ops_per_sec_flat: upload_flat,
+        upload_ops_per_sec_sharded: upload_sharded,
+        poll_speedup: poll_sharded / poll_flat.max(1e-9),
+        upload_speedup: upload_sharded / upload_flat.max(1e-9),
+        rounds_completed,
+        bit_identical,
+        max_abs_diff,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    })
+}
+
 /// One cell of the adversarial sweep: one strategy at one attacker
 /// fraction, scored by distance-to-optimum after the final round.
 #[derive(Clone, Debug)]
@@ -1025,6 +1322,33 @@ mod tests {
         // 10 clients over 4 leaves: slices of 3/3/2/2.
         let r = run_tree_scale(10, 1, 4, 3).unwrap();
         assert!(r.bit_identical);
+    }
+
+    #[test]
+    fn shard_scale_commits_identical_weights() {
+        // Small fleet for CI; the CLI default drives >= 2^20 sessions.
+        let r = run_shard_scale(4, 4096, 7).unwrap();
+        assert!(
+            r.bit_identical,
+            "sharded partial-merge must match the flat fold (max diff {})",
+            r.max_abs_diff
+        );
+        assert_eq!(r.max_abs_diff, 0.0);
+        assert_eq!(r.rounds_completed, 2);
+        assert_eq!(r.poll_ops, 2 * 4096);
+        assert_eq!(r.upload_ops, 4096);
+        assert!(r.threads >= 1 && r.threads <= 4);
+        // Speedup is host-dependent; the gate() is only enforced by the
+        // `scale --shards N` smoke, where the fleet is large enough to
+        // dominate thread startup. Exactness must hold regardless.
+        assert!(r.poll_ops_per_sec_flat > 0.0 && r.upload_ops_per_sec_sharded > 0.0);
+    }
+
+    #[test]
+    fn shard_scale_validates_inputs() {
+        assert!(run_shard_scale(0, 100, 1).is_err());
+        assert!(run_shard_scale(2, 1, 1).is_err());
+        assert!(run_shard_scale(512, 100_000, 1).is_err());
     }
 
     #[test]

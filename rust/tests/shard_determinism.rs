@@ -1,0 +1,256 @@
+//! Integration: the sharded data plane's equivalence contract.
+//!
+//! Pins the two invariants the shard layer must never lose:
+//! * **Shard-count transparency** — the same seeded fleet committed
+//!   through 1, 2, 4 and 8 shards produces bit-identical global weights
+//!   and identical round telemetry. Deltas are dyadic (multiples of
+//!   2^-10, magnitude < 1) so every fold order sums exactly in f64 and
+//!   the comparison can demand bitwise equality, not an epsilon.
+//! * **Cross-shard eviction fan-out** — a lease expiring on one shard
+//!   is swept by that shard, batched through the tick mailbox, and the
+//!   engine's repair (evict + backfill) behaves exactly as on the
+//!   unsharded server, with the eviction counted on the dark client's
+//!   home shard.
+
+use std::sync::Arc;
+
+use florida::client::FloridaClient;
+use florida::crypto::attest::{IntegrityTier, Verdict};
+use florida::model::ModelSnapshot;
+use florida::orchestrator::{TaskBuilder, TaskEvent};
+use florida::proto::{DeviceCaps, DeviceProfile, LoadHints, RoundRole, TaskState, PROTO_V2};
+use florida::services::management::NoEval;
+use florida::services::FloridaServer;
+use florida::shard::{shard_of, ShardIngestPlane};
+use florida::Error;
+
+const DIM: usize = 6;
+const FLEET: u64 = 24;
+const ROUNDS: u64 = 3;
+const SEED: u64 = 42;
+
+/// Mirror of the simulator's dyadic generator: a multiple of 2^-10 in
+/// [-1, 1) per (client, round, coordinate), so lane-then-root folds sum
+/// exactly and bitwise comparison across shard counts is legitimate.
+fn dyadic_delta(client: u64, round: u64, j: usize) -> f32 {
+    ((client * 7 + round * 13 + j as u64 * 3) % 2048) as f32 / 1024.0 - 1.0
+}
+
+/// Drive one seeded fleet to completion through an N-shard server +
+/// ingest plane; returns the final global params and the round counters
+/// the telemetry registry saw.
+fn committed_weights(shards: usize) -> (Vec<f32>, u64, u64) {
+    let srv = Arc::new(FloridaServer::sharded(
+        false,
+        Arc::new(NoEval),
+        SEED,
+        false, // manual clock: fully deterministic run
+        shards,
+    ));
+    let task = TaskBuilder::new(&format!("determinism-{shards}"))
+        .clients_per_round(FLEET as usize)
+        .rounds(ROUNDS)
+        .round_timeout_ms(120_000)
+        .deploy(&srv.management, ModelSnapshot::new(0, vec![0.0; DIM]))
+        .unwrap()
+        .id();
+    let plane = ShardIngestPlane::new(task, "fedavg", 0.0, shards);
+    for _ in 0..ROUNDS {
+        let now = srv.now_ms();
+        for c in 1..=FLEET {
+            srv.management.join(c, task, [0u8; 32], now).unwrap();
+        }
+        for c in 1..=FLEET {
+            srv.management
+                .fetch_round(c, task, &srv.selection, now)
+                .unwrap();
+        }
+        let round = srv.management.with_task(task, |t| Ok(t.round)).unwrap();
+        plane.begin_round(&srv.management, DIM).unwrap();
+        for c in 1..=FLEET {
+            let delta: Vec<f32> = (0..DIM).map(|j| dyadic_delta(c, round, j)).collect();
+            let (ok, why) = plane.accept(c, round, &delta, 1.0, 0.1).unwrap();
+            assert!(ok, "client {c} refused at {shards} shard(s): {why}");
+        }
+        let credited = plane.commit(&srv.management, now + 1).unwrap();
+        assert_eq!(credited, FLEET, "commit at {shards} shard(s)");
+    }
+    let (desc, _, _) = srv.management.task_status(task).unwrap();
+    assert_eq!(desc.state, TaskState::Completed, "{shards} shard(s)");
+    let params = srv
+        .management
+        .with_task(task, |t| Ok(t.global.params.clone()))
+        .unwrap();
+    (
+        params,
+        srv.telemetry.rounds_committed.get(),
+        srv.telemetry.rounds_failed.get(),
+    )
+}
+
+/// The property the CLI's `--shards N` flag rests on: shard count is
+/// invisible in the committed model and in the round telemetry.
+#[test]
+fn same_fleet_commits_bit_identical_weights_across_shard_counts() {
+    let (baseline, committed_1, failed_1) = committed_weights(1);
+    assert_eq!(committed_1, ROUNDS);
+    assert_eq!(failed_1, 0);
+    assert_eq!(baseline.len(), DIM);
+    // The folds genuinely moved the model — a trivially-zero baseline
+    // would make the bitwise comparison below vacuous.
+    assert!(baseline.iter().any(|p| *p != 0.0));
+    for shards in [2usize, 4, 8] {
+        let (params, committed, failed) = committed_weights(shards);
+        assert_eq!(
+            params.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+            baseline.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+            "{shards}-shard weights diverged from the 1-shard baseline"
+        );
+        assert_eq!((committed, failed), (committed_1, failed_1), "{shards} shard(s)");
+    }
+}
+
+fn verdict(s: &FloridaServer, dev: &str, nonce: u64) -> Verdict {
+    s.auth
+        .authority()
+        .issue(dev, IntegrityTier::Device, nonce, u64::MAX / 2)
+}
+
+/// A lease expiring on one shard must be swept by *that* shard, fanned
+/// out through the tick mailbox, and repaired by the engine exactly as
+/// on the unsharded server: late upload refused, pool joiner drafted,
+/// and the eviction counted on the dark client's home shard.
+#[test]
+fn cross_shard_eviction_is_swept_batched_and_backfilled() {
+    const SHARDS: usize = 4;
+    let s = Arc::new(FloridaServer::sharded(
+        true,
+        Arc::new(NoEval),
+        7,
+        false, // manual clock drives the lease expiry deterministically
+        SHARDS,
+    ));
+    assert_eq!(s.shard_count(), SHARDS);
+    s.sessions.set_lease_ms(1000);
+    let task = TaskBuilder::new("cross-shard-evict")
+        .clients_per_round(2)
+        .rounds(1)
+        .round_timeout_ms(60_000)
+        .deploy(&s.management, ModelSnapshot::new(0, vec![0.0; 4]))
+        .unwrap()
+        .id();
+    let stub = FloridaClient::direct(&s);
+    let events = s.subscribe();
+
+    let open = |dev: &str, nonce: u64| -> (u64, u64) {
+        let grant = stub
+            .open_session(
+                dev,
+                verdict(&s, dev, nonce),
+                DeviceCaps::default(),
+                DeviceProfile::default(),
+                PROTO_V2,
+            )
+            .unwrap();
+        assert!(grant.accepted, "{}", grant.reason);
+        (grant.client_id, grant.token)
+    };
+    let (a, a_tok) = open("dev-a", 1);
+    let (b, _b_tok) = open("dev-b", 2);
+    let (c, c_tok) = open("dev-c", 3);
+    // a and b join first and the cohort forms at exactly pool == k, so
+    // membership is deterministic; c joins after formation and queues
+    // in the pool as the backfill candidate.
+    for id in [a, b] {
+        assert!(stub.join_round(id, task, [0u8; 32]).unwrap().accepted);
+    }
+    for id in [a, b] {
+        assert!(matches!(stub.fetch_round(id, task).unwrap(), RoundRole::Train(_)));
+    }
+    assert!(stub.join_round(c, task, [0u8; 32]).unwrap().accepted);
+    assert!(matches!(stub.fetch_round(c, task).unwrap(), RoundRole::Wait));
+
+    // Mid-round, `b` goes dark; the survivors renew across the lease
+    // boundary, then the sweep runs on b's home shard only.
+    s.advance_ms(800);
+    for (id, tok) in [(a, a_tok), (c, c_tok)] {
+        let ack = stub.session_heartbeat(id, tok, LoadHints::default()).unwrap();
+        assert!(ack.renewed, "{}", ack.reason);
+    }
+    s.advance_ms(400);
+    assert!(s.sessions.get(b).is_none(), "b's lease must be swept");
+    assert_eq!(s.sessions.live_count(), 2);
+    assert!(s.telemetry.sessions_swept.get() >= 1);
+
+    // The eviction was counted on b's home shard and batched through
+    // the mailbox by that same shard — not globally smeared.
+    let home = shard_of(b, SHARDS);
+    let rows = s.shard_stats.report();
+    assert_eq!(rows.len(), SHARDS);
+    let counter = |shard: usize, name: &str| -> u64 {
+        rows[shard]
+            .1
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, v)| v)
+            .unwrap_or_else(|| panic!("no {name} counter on shard {shard}"))
+    };
+    assert!(counter(home, "shard_evictions") >= 1, "eviction not on home shard {home}");
+    assert!(counter(home, "shard_mailbox_batches") >= 1);
+    let total_evictions: u64 = (0..SHARDS).map(|i| counter(i, "shard_evictions")).sum();
+    assert_eq!(total_evictions, 1, "exactly one eviction fleet-wide");
+    // The wire path's per-shard routing saw the heartbeats and polls.
+    let total_heartbeats: u64 = (0..SHARDS).map(|i| counter(i, "shard_heartbeats")).sum();
+    assert_eq!(total_heartbeats, 2);
+    let total_polls: u64 = (0..SHARDS).map(|i| counter(i, "shard_polls")).sum();
+    assert!(total_polls >= 3, "three fetch_round calls so far, saw {total_polls}");
+
+    // Engine repair: the draftee takes the slot, the dark client's late
+    // upload is refused, survivor + draftee commit the round.
+    assert!(matches!(stub.fetch_round(c, task).unwrap(), RoundRole::Train(_)));
+    assert!(matches!(
+        stub.fetch_round(b, task).unwrap(),
+        RoundRole::NotSelected
+    ));
+    match stub.upload_plain(florida::proto::rpc::UploadPlain {
+        client_id: b,
+        task_id: task,
+        round: 0,
+        base_version: 0,
+        delta: vec![0.5; 4],
+        weight: 1.0,
+        loss: 0.1,
+    }) {
+        Err(Error::Server(reason)) => assert!(reason.contains("not in cohort"), "{reason}"),
+        other => panic!("expected refusal, got {other:?}"),
+    }
+    for id in [a, c] {
+        stub.upload_plain(florida::proto::rpc::UploadPlain {
+            client_id: id,
+            task_id: task,
+            round: 0,
+            base_version: 0,
+            delta: vec![0.5; 4],
+            weight: 1.0,
+            loss: 0.1,
+        })
+        .unwrap();
+    }
+    let st = stub.task_status(task).unwrap();
+    assert_eq!(st.task.state, TaskState::Completed);
+    assert_eq!(st.participants, 2);
+
+    let kinds: Vec<(String, u64)> = events
+        .drain()
+        .into_iter()
+        .filter_map(|ev| match ev {
+            TaskEvent::ClientEvicted { client_id, .. } => Some(("evicted".to_string(), client_id)),
+            TaskEvent::CohortBackfilled { client_id, .. } => {
+                Some(("backfilled".to_string(), client_id))
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(kinds.contains(&("evicted".to_string(), b)), "{kinds:?}");
+    assert!(kinds.contains(&("backfilled".to_string(), c)), "{kinds:?}");
+}

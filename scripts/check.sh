@@ -6,12 +6,12 @@
 #   scripts/check.sh --fast    # skip the (slow) test suite
 #
 # Lint step: `florida lint --baseline` runs the repo's own static
-# analysis (rust/src/analysis/) — six rules distilled from past bugs
+# analysis (rust/src/analysis/) — seven rules distilled from past bugs
 # (panicking-lock, u64-as-json-number, wall-clock-in-core,
-# msg-coverage, unchecked-wire-length, lock-across-send). Findings not
-# grandfathered in lint.baseline fail the build; the baseline may only
-# shrink. Suppress a deliberate site inline with
-# `// florida-lint: allow(<rule>): reason`.
+# msg-coverage, unchecked-wire-length, lock-across-send,
+# global-lock-on-hot-path). Findings not grandfathered in lint.baseline
+# fail the build; the baseline may only shrink. Suppress a deliberate
+# site inline with `// florida-lint: allow(<rule>): reason`.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -65,6 +65,14 @@ if [[ "$fast" == "0" ]]; then
   # unless the admission policy refused the attacker pre-engine.
   echo "==> byzantine scenario smoke (scale --byzantine 0.2)"
   cargo run --release --quiet -- scale --byzantine 0.2 --clients 10 --rounds 3
+
+  # Sharded data-plane smoke: a 2^20-session simulated fleet hammers
+  # poll/upload at 1 vs 4 shards (same thread count), then the 4-shard
+  # partial-merge commit is checked bit-identical to the flat fold. The
+  # run's own gate fails on divergence or sub-0.7x-linear scaling
+  # (scaling is only enforced where the host has the cores for it).
+  echo "==> shard scenario smoke (scale --shards 4)"
+  cargo run --release --quiet -- scale --shards 4
 
   # Telemetry export smoke: the device-mix scenario must snapshot a
   # parseable JSON export carrying the core round-phase histograms and
